@@ -1,0 +1,226 @@
+"""AOT build: train the lookahead predictor, export weights + HLO text.
+
+Run once via ``make artifacts``; python never runs on the request path.
+
+Interchange is HLO **text**, not ``.serialize()``: the rust crate's
+xla_extension 0.5.1 rejects jax>=0.5 protos with 64-bit instruction ids;
+the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Outputs (under ``artifacts/``):
+  weights.bin / weights_manifest.json — f32 params in flatten_params order
+  decode_step_b{4,8,16}.hlo.txt       — one executable per batch variant
+  prefill_b4_s32.hlo.txt              — chunked prefill
+  moe_block_t64.hlo.txt               — standalone MoE block (perf bench)
+  predictor_metrics.json              — Fig. 10 fidelity (build-time)
+  metadata.json                       — config + artifact I/O descriptors
+"""
+
+import argparse
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as data_mod
+from . import model as model_mod
+from . import predictor as predictor_mod
+from .configs import SMALL_REAL, ModelConfig
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_weights(flat, out_dir: str):
+    """weights.bin: concatenated little-endian f32; manifest maps names."""
+    manifest = []
+    offset = 0
+    blobs = []
+    for name, arr in flat:
+        a = np.asarray(arr, dtype=np.float32)
+        manifest.append(
+            {
+                "name": name,
+                "shape": list(a.shape),
+                "dtype": "f32",
+                "offset_bytes": offset,
+                "size_bytes": a.nbytes,
+            }
+        )
+        blobs.append(a.tobytes())
+        offset += a.nbytes
+    with open(os.path.join(out_dir, "weights.bin"), "wb") as f:
+        for b in blobs:
+            f.write(b)
+    with open(os.path.join(out_dir, "weights_manifest.json"), "w") as f:
+        json.dump({"params": manifest, "total_bytes": offset}, f, indent=1)
+    return manifest
+
+
+def _param_specs(flat):
+    return [jax.ShapeDtypeStruct(a.shape, a.dtype) for _, a in flat]
+
+
+def lower_artifacts(params, cfg: ModelConfig, out_dir: str):
+    """Lower all step functions to HLO text; returns artifact descriptors."""
+    flat = model_mod.flatten_params(params)
+    names = [n for n, _ in flat]
+    pspecs = _param_specs(flat)
+    artifacts = []
+
+    def emit(fname, fn, input_specs, outputs_doc):
+        def wrapper(*args):
+            p = model_mod.unflatten_params(list(zip(names, args[: len(names)])))
+            return fn(p, *args[len(names):])
+
+        # keep_unused: rust feeds ALL weight tensors uniformly; without
+        # this jax would drop parameters unused by a given entry point
+        # (e.g. layer-0 predictor weights) and the buffer counts diverge.
+        lowered = jax.jit(wrapper, keep_unused=True).lower(*pspecs, *input_specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        artifacts.append(
+            {
+                "file": fname,
+                "n_params": len(names),
+                "inputs": [
+                    {"shape": list(s.shape), "dtype": str(s.dtype)}
+                    for s in input_specs
+                ],
+                "outputs": outputs_doc,
+            }
+        )
+        print(f"  wrote {fname} ({len(text)} chars)")
+
+    i32, f32 = jnp.int32, jnp.float32
+    L, K, V, H = cfg.n_layers, cfg.top_k, cfg.vocab, cfg.d_model
+
+    for b in (4, 8, 16):
+        kv = jax.ShapeDtypeStruct(model_mod.kv_shape(cfg, b), f32)
+        emit(
+            f"decode_step_b{b}.hlo.txt",
+            lambda p, t, pos, kvv, _cfg=cfg: model_mod.decode_step(p, _cfg, t, pos, kvv),
+            [
+                jax.ShapeDtypeStruct((b,), i32),
+                jax.ShapeDtypeStruct((b,), i32),
+                kv,
+            ],
+            [
+                {"name": "logits", "shape": [b, V]},
+                {"name": "kv", "shape": list(model_mod.kv_shape(cfg, b))},
+                {"name": "actual_idx", "shape": [L, b, K]},
+                {"name": "actual_gate", "shape": [L, b, K]},
+                {"name": "pred_idx", "shape": [L, b, K]},
+                {"name": "prior_idx", "shape": [L, b, K]},
+            ],
+        )
+
+    pb, ps = cfg.prefill_batch, cfg.prefill_chunk
+    kv = jax.ShapeDtypeStruct(model_mod.kv_shape(cfg, pb), f32)
+    emit(
+        f"prefill_b{pb}_s{ps}.hlo.txt",
+        lambda p, t, sp, kvv, _cfg=cfg: model_mod.prefill_chunk(p, _cfg, t, sp, kvv),
+        [
+            jax.ShapeDtypeStruct((pb, ps), i32),
+            jax.ShapeDtypeStruct((pb,), i32),
+            kv,
+        ],
+        [
+            {"name": "logits_last", "shape": [pb, V]},
+            {"name": "kv", "shape": list(model_mod.kv_shape(cfg, pb))},
+            {"name": "actual_idx", "shape": [L, pb, ps, K]},
+            {"name": "actual_gate", "shape": [L, pb, ps, K]},
+            {"name": "pred_idx", "shape": [L, pb, ps, K]},
+            {"name": "prior_idx", "shape": [L, pb, ps, K]},
+        ],
+    )
+
+    emit(
+        "moe_block_t64.hlo.txt",
+        lambda p, x, _cfg=cfg: model_mod.moe_block_only(p, _cfg, x),
+        [jax.ShapeDtypeStruct((64, H), f32)],
+        [
+            {"name": "y", "shape": [64, H]},
+            {"name": "topk_idx", "shape": [64, K]},
+            {"name": "gates", "shape": [64, K]},
+        ],
+    )
+    return artifacts
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--distill-steps", type=int, default=300)
+    ap.add_argument("--distill-batches", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    cfg = SMALL_REAL
+    print(f"config: {cfg}")
+    params = model_mod.init_params(cfg, seed=args.seed)
+
+    print("distilling lookahead predictor...")
+    params, losses = predictor_mod.distill(
+        params, cfg, steps=args.distill_steps, batches=args.distill_batches
+    )
+    print(f"  CE loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+
+    print("measuring predictor fidelity (Fig. 10)...")
+    metrics = predictor_mod.fidelity_metrics(params, cfg)
+    with open(os.path.join(args.out_dir, "predictor_metrics.json"), "w") as f:
+        json.dump(metrics, f, indent=1)
+    for l, m in metrics.items():
+        print(
+            f"  layer {l}: trained topk={m['trained']['top_k_accuracy']:.3f} "
+            f"untrained topk={m['untrained']['top_k_accuracy']:.3f} "
+            f"halfk={m['trained']['top_half_k_hit_rate']:.3f} "
+            f"2xk={m['trained']['twox_top_k_recall']:.3f}"
+        )
+
+    print("exporting domain token distributions...")
+    dists = data_mod.domain_token_dists(cfg)
+    with open(os.path.join(args.out_dir, "domain_dists.json"), "w") as f:
+        json.dump(
+            {
+                "domains": data_mod.DOMAIN_NAMES[: cfg.n_domains],
+                "dists": [[float(x) for x in row] for row in dists],
+            },
+            f,
+        )
+
+    print("exporting weights...")
+    flat = model_mod.flatten_params(params)
+    export_weights(flat, args.out_dir)
+
+    print("lowering HLO artifacts...")
+    artifacts = lower_artifacts(params, cfg, args.out_dir)
+
+    meta = {
+        "model": cfg.to_dict(),
+        "artifacts": artifacts,
+        "distill": {
+            "steps": args.distill_steps,
+            "loss_first": losses[0],
+            "loss_last": losses[-1],
+        },
+        "param_order_note": model_mod.PARAM_ORDER_NOTE,
+    }
+    with open(os.path.join(args.out_dir, "metadata.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Model configuration for the build-time (L2) JAX MoE transformer.
+
+The rust coordinator simulates paper-scale models (GPT-OSS-120B,
+Qwen3-235B) analytically; this package builds the *real* small MoE model
+whose router drives the end-to-end serving example. Weights are exported
+to ``artifacts/weights.bin`` and the step functions to HLO text.
+"""
+
+from dataclasses import dataclass, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Dimensions of the small real MoE transformer."""
+
+    vocab: int = 512
+    d_model: int = 128
+    n_layers: int = 6
+    n_heads: int = 4
+    d_ff: int = 256          # per-expert FFN hidden dim
+    n_experts: int = 16
+    top_k: int = 2
+    max_seq: int = 160       # KV cache capacity per sequence
+    decode_batch: int = 8    # tokens per decode step (one per sequence)
+    prefill_batch: int = 4   # sequences per prefill chunk
+    prefill_chunk: int = 32  # tokens per sequence per prefill chunk
+    capacity_decode: int = 8     # expert capacity (tokens) in a decode step
+    capacity_prefill: int = 24   # expert capacity in a prefill chunk
+    n_domains: int = 4       # synthetic semantic domains (Chinese/Code/...)
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d["head_dim"] = self.head_dim
+        return d
+
+
+SMALL_REAL = ModelConfig()
+
+# A tiny config for fast unit tests.
+TINY = ModelConfig(
+    vocab=64,
+    d_model=32,
+    n_layers=3,
+    n_heads=2,
+    d_ff=48,
+    n_experts=8,
+    top_k=2,
+    max_seq=48,
+    decode_batch=4,
+    prefill_batch=2,
+    prefill_chunk=16,
+    capacity_decode=4,
+    capacity_prefill=12,
+)

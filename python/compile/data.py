@@ -1,0 +1,54 @@
+"""Synthetic multi-domain token streams (build-time only).
+
+Stands in for the paper's *Chinese* / *Code* / *Repeat* corpora (DESIGN.md
+substitutions): each domain is a distinct Zipf-permuted categorical over
+the vocabulary, so token embeddings — and hence hidden states and routing
+— cluster by domain, reproducing the semantic-locality skew the paper
+measures. The *repeat* domain duplicates a handful of prompts to simulate
+extreme skew.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DOMAIN_NAMES = ["chinese", "code", "general", "repeat"]
+
+
+def domain_token_dists(cfg, seed: int = 1234) -> np.ndarray:
+    """[n_domains, vocab] categorical distributions, Zipf mass with a
+    per-domain random permutation (so domains favour disjoint token sets)."""
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, cfg.vocab + 1, dtype=np.float64)
+    zipf = 1.0 / ranks**1.1
+    dists = []
+    for _ in range(cfg.n_domains):
+        perm = rng.permutation(cfg.vocab)
+        d = zipf[np.argsort(perm)]
+        dists.append(d / d.sum())
+    return np.stack(dists)
+
+
+def sample_tokens(cfg, domain: int, batch: int, seq: int, seed: int) -> np.ndarray:
+    """[batch, seq] int32 tokens drawn from the domain's distribution.
+
+    The *repeat* domain (last index) reuses a tiny pool of fixed prompts.
+    """
+    rng = np.random.default_rng(seed)
+    dists = domain_token_dists(cfg)
+    if domain == cfg.n_domains - 1:  # repeat: duplicate 2 fixed prompts
+        pool_rng = np.random.default_rng(99)
+        pool = pool_rng.choice(cfg.vocab, size=(2, seq), p=dists[domain])
+        picks = rng.integers(0, pool.shape[0], size=batch)
+        return pool[picks].astype(np.int32)
+    return rng.choice(cfg.vocab, size=(batch, seq), p=dists[domain]).astype(
+        np.int32
+    )
+
+
+def mixed_stream(cfg, batches: int, batch: int, seq: int, seed: int):
+    """Yield (domain, tokens) batches cycling through all domains —
+    the 'diverse concurrent requests' mixture used for distillation."""
+    for i in range(batches):
+        domain = i % cfg.n_domains
+        yield domain, sample_tokens(cfg, domain, batch, seq, seed + i)

@@ -1,0 +1,104 @@
+"""Layer-1 Pallas kernel: grouped expert FFN (the MoE compute hot-spot).
+
+The paper's hot loop is a Grouped GEMM over experts (Triton on H800).
+TPU adaptation (DESIGN.md §Hardware-Adaptation): instead of one
+threadblock per (expert, tile) with shared-memory staging, we express the
+HBM->VMEM schedule with a Pallas grid over ``(expert, token-tile)`` and
+``BlockSpec``s that stage one expert's weight panel plus one token tile in
+VMEM, feeding the MXU with (token_tile x d_ff) matmuls. Tokens are
+pre-gathered per expert (capacity layout ``[E, C, H]``) so each grid step
+is a dense GEMM — the same arithmetic-intensity insight as the paper's
+kernel.
+
+``interpret=True`` always: the CPU PJRT plugin cannot run Mosaic
+custom-calls; real-TPU perf is estimated analytically (EXPERIMENTS.md
+§Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ffn_kernel(x_ref, w1_ref, w2_ref, o_ref, *, acc_dtype):
+    """One grid step: FFN for one (expert, token-tile) pair.
+
+    x_ref:  [1, bc, H]  token tile of expert e (VMEM)
+    w1_ref: [1, H, F]   expert e up-projection (VMEM)
+    w2_ref: [1, F, H]   expert e down-projection (VMEM)
+    o_ref:  [1, bc, H]  output tile
+    """
+    x = x_ref[0].astype(acc_dtype)
+    w1 = w1_ref[0].astype(acc_dtype)
+    w2 = w2_ref[0].astype(acc_dtype)
+    # MXU-friendly: two dense matmuls with f32 accumulation.
+    h = jnp.dot(x, w1, preferred_element_type=acc_dtype)
+    h = jax.nn.silu(h)
+    y = jnp.dot(h, w2, preferred_element_type=acc_dtype)
+    o_ref[0] = y.astype(o_ref.dtype)
+
+
+def grouped_ffn(x, w1, w2, *, block_c: int | None = None):
+    """Grouped expert FFN: ``y[e] = silu(x[e] @ w1[e]) @ w2[e]``.
+
+    Args:
+      x:  [E, C, H] tokens gathered per expert (zero-padded to capacity C).
+      w1: [E, H, F] per-expert up-projection.
+      w2: [E, F, H] per-expert down-projection.
+      block_c: token-tile size (defaults to min(C, 128); TPU tiling wants
+        multiples of 8/128, interpret mode accepts anything that divides C).
+
+    Returns:
+      [E, C, H] with the same dtype as ``x``.
+    """
+    e, c, h = x.shape
+    e2, h2, f = w1.shape
+    e3, f2, h3 = w2.shape
+    assert (e, h) == (e2, h2) and (e, f, h) == (e3, f2, h3), (
+        f"shape mismatch: x={x.shape} w1={w1.shape} w2={w2.shape}"
+    )
+    if block_c is None:
+        block_c = min(c, 128)
+    if c % block_c != 0:
+        # Pad the token axis to a tile multiple; padding rows are zero and
+        # are discarded by the caller's combine step.
+        pad = block_c - c % block_c
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        out = grouped_ffn(x, w1, w2, block_c=block_c)
+        return out[:, :c, :]
+
+    acc_dtype = jnp.float32
+    grid = (e, c // block_c)
+    return pl.pallas_call(
+        functools.partial(_ffn_kernel, acc_dtype=acc_dtype),
+        grid=grid,
+        in_specs=[
+            # token tile: advance along both grid axes
+            pl.BlockSpec((1, block_c, h), lambda i, j: (i, j, 0)),
+            # weight panels: one expert per grid-i, reused across j tiles
+            pl.BlockSpec((1, h, f), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, f, h), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, h), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, c, h), x.dtype),
+        interpret=True,
+    )(x, w1, w2)
+
+
+def vmem_footprint_bytes(c_block: int, h: int, f: int, dtype_bytes: int = 2) -> int:
+    """Estimated VMEM bytes for one grid step (used by the §Perf analysis).
+
+    One token tile in + out, one expert's two weight panels, and the f32
+    accumulator for the hidden activation.
+    """
+    tile_io = 2 * c_block * h * dtype_bytes
+    weights = (h * f + f * h) * dtype_bytes
+    acc = c_block * f * 4
+    return tile_io + weights + acc
+
+
+def mxu_flops(e: int, c: int, h: int, f: int) -> int:
+    """Total MAC-FLOPs of the grouped FFN (2 GEMMs per expert)."""
+    return 2 * e * (c * h * f + c * f * h)

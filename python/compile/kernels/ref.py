@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for the Pallas kernels (the CORE correctness signal).
+
+Every kernel in this package has a reference implementation here written
+with plain ``jnp`` ops only — no Pallas — so pytest can assert
+``kernel(x) == ref(x)`` across shape/dtype sweeps (hypothesis).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def grouped_ffn_ref(x, w1, w2):
+    """Reference for :func:`kernels.grouped_gemm.grouped_ffn`.
+
+    x: [E, C, H], w1: [E, H, F], w2: [E, F, H] -> [E, C, H]
+    """
+    acc = jnp.float32
+    h = jnp.einsum("ech,ehf->ecf", x.astype(acc), w1.astype(acc))
+    h = jax.nn.silu(h)
+    y = jnp.einsum("ecf,efh->ech", h, w2.astype(acc))
+    return y.astype(x.dtype)
+
+
+def moe_layer_ref(x, router_w, router_b, w1, w2, top_k, capacity):
+    """Reference for a full capacity-constrained top-k MoE layer.
+
+    Mirrors the dispatch/combine semantics of ``model.moe_layer`` (Switch-
+    style: per-expert capacity C, overflowing tokens are dropped — their
+    FFN contribution is zero and the residual path carries them).
+
+    x: [T, H] -> (y [T, H], topk_idx [T, K], topk_gate [T, K])
+    """
+    t, hdim = x.shape
+    e = router_w.shape[1]
+    logits = x.astype(jnp.float32) @ router_w.astype(jnp.float32) + router_b
+    topk_val, topk_idx = jax.lax.top_k(logits, top_k)
+    gates = jax.nn.softmax(topk_val, axis=-1)
+
+    # Position of each (token, slot) within its expert's capacity buffer:
+    # count, in flattened (slot-major) order, how many earlier assignments
+    # hit the same expert.
+    flat_idx = topk_idx.T.reshape(-1)  # slot-major: all k=0 first
+    onehot = jax.nn.one_hot(flat_idx, e, dtype=jnp.int32)  # [T*K, E]
+    pos_in_expert = jnp.cumsum(onehot, axis=0) - onehot
+    pos_flat = jnp.sum(pos_in_expert * onehot, axis=1)  # [T*K]
+    keep = pos_flat < capacity
+
+    # Dispatch: gather kept tokens into [E, C, H].
+    grouped = jnp.zeros((e, capacity, hdim), dtype=x.dtype)
+    tok_of_slot = jnp.tile(jnp.arange(t), top_k)
+    grouped = grouped.at[flat_idx, jnp.where(keep, pos_flat, 0)].add(
+        jnp.where(keep[:, None], x[tok_of_slot], 0)
+    )
+
+    y_grouped = grouped_ffn_ref(grouped, w1, w2)
+
+    # Combine: weighted scatter back to tokens.
+    gates_flat = gates.T.reshape(-1)
+    contrib = y_grouped[flat_idx, jnp.where(keep, pos_flat, 0)]
+    contrib = jnp.where(keep[:, None], contrib, 0) * gates_flat[:, None].astype(
+        x.dtype
+    )
+    y = jnp.zeros_like(x).at[tok_of_slot].add(contrib)
+    return y, topk_idx, gates
+
+
+def attention_ref(q, k, v, mask):
+    """Reference attention: q [B,Hn,Q,D], k/v [B,Hn,S,D], mask [B,1,Q,S]."""
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    scores = jnp.einsum(
+        "bnqd,bnkd->bnqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    )
+    scores = scores * scale + jnp.where(mask, 0.0, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bnqk,bnkd->bnqd", probs, v.astype(jnp.float32)).astype(
+        q.dtype
+    )

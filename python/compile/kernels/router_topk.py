@@ -1,0 +1,96 @@
+"""Layer-1 Pallas kernel: fused router + top-k gating.
+
+The second hot-spot of an MoE layer after the grouped GEMM: computing
+router logits (a skinny GEMM) and selecting the top-k experts per token.
+On GPU the paper's stack fuses this into the dispatch path; the TPU
+adaptation computes logits on the MXU and performs k iterative
+argmax/mask rounds in VMEM (k is tiny: 2–8), avoiding a full sort and —
+critically for the old-runtime interchange — avoiding the `topk` HLO
+instruction that xla_extension 0.5.1 cannot parse.
+
+``interpret=True`` as always (see grouped_gemm.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _router_kernel(x_ref, w_ref, b_ref, val_ref, idx_ref, gate_ref, *, k):
+    """One grid step: routing for one token tile.
+
+    x_ref: [bt, H]; w_ref: [H, E]; b_ref: [E]
+    val_ref/idx_ref/gate_ref: [bt, k]
+    """
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    logits = jnp.dot(x, w, preferred_element_type=jnp.float32) + b_ref[...]
+    e = logits.shape[-1]
+    work = logits
+    vals = []
+    idxs = []
+    for _ in range(k):
+        idx = jnp.argmax(work, axis=-1)
+        val = jnp.take_along_axis(work, idx[:, None], axis=-1)[:, 0]
+        vals.append(val)
+        idxs.append(idx.astype(jnp.int32))
+        mask = jax.nn.one_hot(idx, e, dtype=jnp.bool_)
+        work = jnp.where(mask, -jnp.inf, work)
+    topv = jnp.stack(vals, axis=-1)
+    topi = jnp.stack(idxs, axis=-1)
+    # softmax over the selected k logits = gate weights
+    m = jnp.max(topv, axis=-1, keepdims=True)
+    ex = jnp.exp(topv - m)
+    gates = ex / jnp.sum(ex, axis=-1, keepdims=True)
+    val_ref[...] = topv
+    idx_ref[...] = topi
+    gate_ref[...] = gates.astype(gate_ref.dtype)
+
+
+def router_topk(x, w, b, k, *, block_t: int | None = None):
+    """Fused router + top-k + gate softmax.
+
+    Args:
+      x: [T, H] token hidden states.
+      w: [H, E] router weights; b: [E] bias.
+      k: experts per token.
+      block_t: token tile (defaults to min(T, 128)).
+
+    Returns:
+      (topk_vals [T,k] f32, topk_idx [T,k] i32, gates [T,k] f32)
+    """
+    t, h = x.shape
+    h2, e = w.shape
+    assert h == h2 and b.shape == (e,), f"shapes: x={x.shape} w={w.shape} b={b.shape}"
+    assert 1 <= k <= e
+    if block_t is None:
+        block_t = min(t, 128)
+    if t % block_t != 0:
+        pad = block_t - t % block_t
+        xp = jnp.pad(x, ((0, pad), (0, 0)))
+        v, i, g = router_topk(xp, w, b, k, block_t=block_t)
+        return v[:t], i[:t], g[:t]
+
+    grid = (t // block_t,)
+    return pl.pallas_call(
+        functools.partial(_router_kernel, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, h), lambda i: (i, 0)),
+            pl.BlockSpec((h, e), lambda i: (0, 0)),
+            pl.BlockSpec((e,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_t, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_t, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_t, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, k), jnp.float32),
+            jax.ShapeDtypeStruct((t, k), jnp.int32),
+            jax.ShapeDtypeStruct((t, k), jnp.float32),
+        ],
+        interpret=True,
+    )(x, w, b)

@@ -1,0 +1,361 @@
+"""Layer-2: the real small MoE transformer (build-time JAX).
+
+Defines weight init, the chunked-prefill and decode step functions that
+are AOT-lowered to HLO text (``aot.py``) and executed from the rust
+coordinator via PJRT. The MoE FFN hot-spot calls the Layer-1 Pallas
+kernel (:mod:`compile.kernels.grouped_gemm`).
+
+Step functions additionally emit, per MoE layer:
+  * the ground-truth top-k routing (indices + gate weights) — the rust
+    coordinator derives expert load / IR metrics from these, and the
+    PROBE balancer uses them as the "actual" dispatch;
+  * the *lookahead prediction* for layer ``l`` computed from the hidden
+    state at layer ``l-1`` (paper §4.2: frozen target router prior + a
+    trainable residual MLP), in both distilled and untrained variants so
+    Fig. 10 can be measured from rust over live traffic.
+
+Python never runs at request time: these functions exist only to be
+lowered once by ``aot.py``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels.grouped_gemm import grouped_ffn
+from .kernels.router_topk import router_topk
+
+# ---------------------------------------------------------------------------
+# Weights
+# ---------------------------------------------------------------------------
+
+# Flattening order of the weight pytree; rust replays this order when
+# feeding buffers (see artifacts/weights_manifest.json).
+PARAM_ORDER_NOTE = (
+    "params are flattened in the order produced by flatten_params(); "
+    "rust must pass them as leading executable arguments in that order"
+)
+
+
+def init_params(cfg: ModelConfig, seed: int = 0, router_scale: float = 4.0):
+    """Random-init weights.
+
+    ``router_scale`` inflates router logit variance so top-k routing is
+    semantically concentrated (mimicking the specialization-driven skew
+    the paper measures on GPT-OSS/Qwen3); see DESIGN.md substitutions.
+    """
+    key = jax.random.PRNGKey(seed)
+    ks = iter(jax.random.split(key, 16 + 16 * cfg.n_layers))
+
+    def dense(k, shape, scale=None):
+        fan_in = shape[0] if len(shape) == 2 else shape[1]
+        s = scale if scale is not None else 1.0 / jnp.sqrt(fan_in)
+        return (jax.random.normal(k, shape, dtype=jnp.float32) * s).astype(
+            jnp.float32
+        )
+
+    params = {
+        "embed": dense(next(ks), (cfg.vocab, cfg.d_model), 1.0),
+        "pos_embed": dense(next(ks), (cfg.max_seq, cfg.d_model), 0.02),
+        "ln_f": jnp.ones((cfg.d_model,), jnp.float32),
+        "unembed": dense(next(ks), (cfg.d_model, cfg.vocab)),
+    }
+    h, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    for layer in range(cfg.n_layers):
+        p = {
+            "ln1": jnp.ones((h,), jnp.float32),
+            "wq": dense(next(ks), (h, h)),
+            "wk": dense(next(ks), (h, h)),
+            "wv": dense(next(ks), (h, h)),
+            "wo": dense(next(ks), (h, h)),
+            "ln2": jnp.ones((h,), jnp.float32),
+            "router_w": dense(next(ks), (h, e), router_scale / jnp.sqrt(h)),
+            "router_b": jnp.zeros((e,), jnp.float32),
+            "w1": dense(next(ks), (e, h, f)),
+            "w2": dense(next(ks), (e, f, h)),
+            # Lookahead predictor residual MLP (predicts THIS layer's
+            # routing from the previous layer's hidden state). Layer 0 has
+            # no predictor. The OUTPUT projection is zero-initialized so
+            # the predictor starts exactly at the frozen prior (paper
+            # §4.2); the first layer must be random or the whole residual
+            # sits at a zero-gradient saddle.
+            "pred_w1": dense(next(ks), (h, cfg.d_model // 2)),
+            "pred_b1": jnp.zeros((cfg.d_model // 2,), jnp.float32),
+            "pred_w2": jnp.zeros((cfg.d_model // 2, e), jnp.float32),
+        }
+        params[f"layer_{layer}"] = p
+    return params
+
+
+def flatten_params(params):
+    """Deterministic (name, array) flattening used for weights.bin/manifest."""
+    out = []
+    for name in ["embed", "pos_embed", "ln_f", "unembed"]:
+        out.append((name, params[name]))
+    layer_keys = [
+        "ln1", "wq", "wk", "wv", "wo", "ln2",
+        "router_w", "router_b", "w1", "w2",
+        "pred_w1", "pred_b1", "pred_w2",
+    ]
+    n_layers = sum(1 for k in params if k.startswith("layer_"))
+    for layer in range(n_layers):
+        for k in layer_keys:
+            out.append((f"layer_{layer}.{k}", params[f"layer_{layer}"][k]))
+    return out
+
+
+def unflatten_params(flat):
+    """Inverse of :func:`flatten_params`."""
+    params = {}
+    for name, arr in flat:
+        if "." in name:
+            lname, k = name.split(".")
+            params.setdefault(lname, {})[k] = arr
+        else:
+            params[name] = arr
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def topk_manual(logits, k):
+    """Top-k via iterative argmax (ties -> lowest index, matching
+    jax.lax.top_k). Used instead of lax.top_k because jax>=0.5 lowers
+    top_k to the `topk(..., largest=true)` HLO instruction, which the
+    xla_extension 0.5.1 text parser rejects; argmax + masking lowers to
+    classic reduce/select ops that round-trip cleanly.
+    """
+    vals, idxs = [], []
+    work = logits
+    for _ in range(k):
+        idx = jnp.argmax(work, axis=-1)
+        val = jnp.take_along_axis(work, idx[..., None], axis=-1)[..., 0]
+        vals.append(val)
+        idxs.append(idx.astype(jnp.int32))
+        mask = jax.nn.one_hot(idx, logits.shape[-1], dtype=jnp.bool_)
+        work = jnp.where(mask, -jnp.inf, work)
+    return jnp.stack(vals, axis=-1), jnp.stack(idxs, axis=-1)
+
+
+def rms_norm(x, gamma, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps) * gamma).astype(
+        x.dtype
+    )
+
+
+def router_logits(x, lp):
+    """Ground-truth router: [T, H] -> [T, E] (f32)."""
+    return x.astype(jnp.float32) @ lp["router_w"] + lp["router_b"]
+
+
+def predictor_logits(h_prev, lp):
+    """Gate-initialized lookahead predictor (paper eq. 7).
+
+    Frozen prior: this layer's own router applied to the *previous*
+    layer's hidden state; plus a trainable residual MLP (SiLU).
+    """
+    prior = router_logits(h_prev, lp)
+    hidden = jax.nn.silu(h_prev.astype(jnp.float32) @ lp["pred_w1"] + lp["pred_b1"])
+    return prior + hidden @ lp["pred_w2"]
+
+
+def predictor_prior_logits(h_prev, lp):
+    """Untrained variant: frozen prior only (Fig. 10 baseline)."""
+    return router_logits(h_prev, lp)
+
+
+def moe_dispatch(x, topk_idx, gates, capacity, n_experts):
+    """Capacity-constrained dispatch: gather tokens into [E, C, H].
+
+    Returns (grouped, flat_idx, pos_flat, keep, tok_of_slot) so combine
+    can scatter results back.
+    """
+    t = x.shape[0]
+    k = topk_idx.shape[1]
+    flat_idx = topk_idx.T.reshape(-1)  # slot-major
+    onehot = jax.nn.one_hot(flat_idx, n_experts, dtype=jnp.int32)
+    pos_in_expert = jnp.cumsum(onehot, axis=0) - onehot
+    pos_flat = jnp.sum(pos_in_expert * onehot, axis=1)
+    keep = pos_flat < capacity
+    tok_of_slot = jnp.tile(jnp.arange(t), k)
+    grouped = jnp.zeros((n_experts, capacity, x.shape[1]), dtype=x.dtype)
+    grouped = grouped.at[flat_idx, jnp.where(keep, pos_flat, 0)].add(
+        jnp.where(keep[:, None], x[tok_of_slot], 0)
+    )
+    return grouped, flat_idx, pos_flat, keep, tok_of_slot
+
+
+def moe_combine(y_grouped, x_like, flat_idx, pos_flat, keep, tok_of_slot, gates):
+    gates_flat = gates.T.reshape(-1)
+    contrib = y_grouped[flat_idx, jnp.where(keep, pos_flat, 0)]
+    contrib = jnp.where(keep[:, None], contrib, 0) * gates_flat[:, None].astype(
+        x_like.dtype
+    )
+    return jnp.zeros_like(x_like).at[tok_of_slot].add(contrib)
+
+
+def moe_layer(x, lp, cfg: ModelConfig, capacity: int):
+    """Top-k MoE FFN over tokens [T, H] using the Pallas grouped kernel.
+
+    Returns (y, topk_idx, topk_gates).
+    """
+    # L1 fused router kernel: logits GEMM + iterative top-k + gate softmax
+    _, topk_idx, gates = router_topk(
+        x, lp["router_w"], lp["router_b"], cfg.top_k
+    )
+    grouped, flat_idx, pos_flat, keep, tok_of_slot = moe_dispatch(
+        x, topk_idx, gates, capacity, cfg.n_experts
+    )
+    y_grouped = grouped_ffn(grouped, lp["w1"], lp["w2"])
+    y = moe_combine(y_grouped, x, flat_idx, pos_flat, keep, tok_of_slot, gates)
+    return y, topk_idx, gates
+
+
+def attention(q, k, v, mask, cfg: ModelConfig):
+    """Multi-head attention. q [B,Q,H]; k/v [B,S,H]; mask [B,1,Q,S]."""
+    b, qlen, _ = q.shape
+    s = k.shape[1]
+    hd = cfg.head_dim
+
+    def split(x):
+        return x.reshape(b, -1, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+
+    qh, kh, vh = split(q), split(k), split(v)
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    scores = (
+        jnp.einsum("bnqd,bnkd->bnqk", qh.astype(jnp.float32), kh.astype(jnp.float32))
+        * scale
+    )
+    scores = scores + jnp.where(mask, 0.0, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bnqk,bnkd->bnqd", probs, vh.astype(jnp.float32))
+    return out.transpose(0, 2, 1, 3).reshape(b, qlen, cfg.d_model).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Step functions (AOT entry points)
+# ---------------------------------------------------------------------------
+
+
+def _transformer_chunk(params, cfg, tokens, start_pos, kv, capacity):
+    """Shared body for prefill (S>1) and decode (S=1).
+
+    tokens: [B, S] int32; start_pos: [B] int32 (current cache length);
+    kv: [L, 2, B, S_max, H] f32.
+
+    Returns (logits [B,S,V], kv', actual_idx [L,B,S,K], actual_gate,
+    pred_idx [L,B,S,K], pred_prior_idx [L,B,S,K]).
+    Predictions for layer 0 are filled with -1 (no lookahead source).
+    """
+    b, s = tokens.shape
+    h = params["embed"][tokens]  # [B,S,H]
+    pos = start_pos[:, None] + jnp.arange(s)[None, :]  # [B,S]
+    h = h + params["pos_embed"][jnp.clip(pos, 0, cfg.max_seq - 1)]
+
+    key_pos = jnp.arange(cfg.max_seq)[None, None, None, :]  # [1,1,1,S_max]
+    # query at absolute position p attends to cache positions <= p
+    attn_mask = key_pos <= pos[:, None, :, None]  # [B,1,S,S_max]
+
+    actual_idx, actual_gate, pred_idx, prior_idx = [], [], [], []
+    moe_inputs = []
+    h_prev_moe = None  # hidden state at the previous layer's MoE input
+    new_kv = kv
+    for layer in range(cfg.n_layers):
+        lp = params[f"layer_{layer}"]
+        hn = rms_norm(h, lp["ln1"])
+        q = hn @ lp["wq"]
+        k_new = hn @ lp["wk"]
+        v_new = hn @ lp["wv"]
+        # write this chunk's K/V into the cache at [start_pos, start_pos+S)
+        k_cache = new_kv[layer, 0]
+        v_cache = new_kv[layer, 1]
+        batch_ix = jnp.arange(b)[:, None].repeat(s, 1)
+        k_cache = k_cache.at[batch_ix, pos].set(k_new)
+        v_cache = v_cache.at[batch_ix, pos].set(v_new)
+        new_kv = new_kv.at[layer, 0].set(k_cache).at[layer, 1].set(v_cache)
+        attn_out = attention(q, k_cache, v_cache, attn_mask, cfg)
+        h = h + attn_out @ lp["wo"]
+
+        hn2 = rms_norm(h, lp["ln2"])  # MoE input for this layer
+        flat = hn2.reshape(b * s, cfg.d_model)
+
+        # Lookahead prediction for THIS layer from the PREVIOUS layer's
+        # MoE input (available one layer ahead at runtime).
+        if h_prev_moe is None:
+            pred_idx.append(jnp.full((b, s, cfg.top_k), -1, jnp.int32))
+            prior_idx.append(jnp.full((b, s, cfg.top_k), -1, jnp.int32))
+        else:
+            pl_logits = predictor_logits(h_prev_moe, lp)
+            _, p_idx = topk_manual(pl_logits, cfg.top_k)
+            pred_idx.append(p_idx.reshape(b, s, cfg.top_k))
+            pr_logits = predictor_prior_logits(h_prev_moe, lp)
+            _, pr_idx = topk_manual(pr_logits, cfg.top_k)
+            prior_idx.append(pr_idx.reshape(b, s, cfg.top_k))
+        h_prev_moe = flat
+        moe_inputs.append(flat)
+
+        y, t_idx, t_gate = moe_layer(flat, lp, cfg, capacity)
+        h = h + y.reshape(b, s, cfg.d_model)
+        actual_idx.append(t_idx.reshape(b, s, cfg.top_k))
+        actual_gate.append(t_gate.reshape(b, s, cfg.top_k))
+
+    hf = rms_norm(h, params["ln_f"])
+    logits = hf @ params["unembed"]
+    return (
+        logits,
+        new_kv,
+        jnp.stack(actual_idx),
+        jnp.stack(actual_gate),
+        jnp.stack(pred_idx),
+        jnp.stack(prior_idx),
+        jnp.stack(moe_inputs),  # [L, B*S, H] — distillation only, dropped by AOT wrappers
+    )
+
+
+def decode_step(params, cfg: ModelConfig, tokens, pos, kv):
+    """One decode step: tokens [B] int32, pos [B] int32, kv cache.
+
+    Returns (logits [B,V], kv', actual_idx [L,B,K], actual_gate [L,B,K],
+    pred_idx [L,B,K], prior_idx [L,B,K]).
+    """
+    logits, kv2, ai, ag, pi, ri, _ = _transformer_chunk(
+        params, cfg, tokens[:, None], pos, kv, cfg.capacity_decode
+    )
+    squeeze = lambda x: x[:, :, 0]
+    return (
+        logits[:, 0],
+        kv2,
+        squeeze(ai),
+        squeeze(ag),
+        squeeze(pi),
+        squeeze(ri),
+    )
+
+
+def prefill_chunk(params, cfg: ModelConfig, tokens, start_pos, kv):
+    """One chunked-prefill step: tokens [B, S_chunk], start_pos [B].
+
+    Returns (logits_last [B,V], kv', actual_idx [L,B,S,K],
+    actual_gate [L,B,S,K], pred_idx [L,B,S,K], prior_idx [L,B,S,K]).
+    """
+    logits, kv2, ai, ag, pi, ri, _ = _transformer_chunk(
+        params, cfg, tokens, start_pos, kv, cfg.capacity_prefill
+    )
+    return logits[:, -1], kv2, ai, ag, pi, ri
+
+
+def moe_block_only(params, cfg: ModelConfig, x):
+    """Standalone MoE block (layer 0) for rust-side kernel microbenches.
+
+    x: [T, H] -> (y [T, H], topk_idx, gates)
+    """
+    lp = params["layer_0"]
+    return moe_layer(x, lp, cfg, cfg.capacity_prefill)
+
+
+def kv_shape(cfg: ModelConfig, batch: int):
+    return (cfg.n_layers, 2, batch, cfg.max_seq, cfg.d_model)

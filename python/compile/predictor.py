@@ -1,0 +1,226 @@
+"""Scale-driven online distillation of the lookahead predictor (paper §4.2).
+
+At build time we replay a mixed multi-domain token stream through the
+model, collect (previous-layer hidden state, target router logits) pairs
+per MoE layer, and train each layer's residual MLP with Adam on the
+cross-entropy between the predictor distribution and the ground-truth
+router distribution. The frozen prior (the target layer's own router) is
+never updated — only the zero-initialized residual.
+
+Also computes the Fig. 10 fidelity metrics (Top-K accuracy, Top-Half-K
+hit rate, 2x Top-K recall) for both the untrained prior and the distilled
+predictor, exported to ``artifacts/predictor_metrics.json``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from . import model as model_mod
+from .configs import ModelConfig
+
+
+def collect_pairs(params, cfg: ModelConfig, tokens):
+    """Run a forward chunk and return per-layer distillation pairs.
+
+    tokens: [B, S] -> (h_prev [L-1, T, H], target_logits [L-1, T, E])
+    where row l corresponds to predicting layer l+1 from layer l's MoE
+    input (layer 0 has no predictor).
+    """
+    b, s = tokens.shape
+    kv = jnp.zeros(model_mod.kv_shape(cfg, b), jnp.float32)
+    start = jnp.zeros((b,), jnp.int32)
+    out = model_mod._transformer_chunk(
+        params, cfg, tokens, start, kv, cfg.capacity_prefill
+    )
+    moe_inputs = out[6]  # [L, T, H]
+    h_prev = moe_inputs[:-1]
+    targets = []
+    for layer in range(1, cfg.n_layers):
+        lp = params[f"layer_{layer}"]
+        targets.append(model_mod.router_logits(moe_inputs[layer], lp))
+    return h_prev, jnp.stack(targets)
+
+
+def collect_decode_pairs(params, cfg: ModelConfig, prompt_tokens, gen_steps: int):
+    """Greedy-generate `gen_steps` tokens and collect per-step decode-state
+    distillation pairs — the live-traffic states the predictor must serve
+    (paper §4.2: online distillation on the inference stream).
+
+    prompt_tokens: [B, P] -> (h_prev [L-1, B*gen_steps, H], targets [...]).
+    """
+    b, p_len = prompt_tokens.shape
+    kv = jnp.zeros(model_mod.kv_shape(cfg, b), jnp.float32)
+    start = jnp.zeros((b,), jnp.int32)
+    out = model_mod._transformer_chunk(
+        params, cfg, prompt_tokens, start, kv, cfg.capacity_prefill
+    )
+    logits, kv = out[0], out[1]
+    next_tok = jnp.argmax(logits[:, p_len - 1], axis=-1).astype(jnp.int32)
+    hs, ts = [], []
+    for step in range(gen_steps):
+        pos = jnp.full((b,), p_len + step, jnp.int32)
+        out = model_mod._transformer_chunk(
+            params, cfg, next_tok[:, None], pos, kv, cfg.capacity_decode
+        )
+        logits, kv, moe_inputs = out[0], out[1], out[6]
+        hs.append(moe_inputs[:-1])
+        ts.append(
+            jnp.stack(
+                [
+                    model_mod.router_logits(moe_inputs[l], params[f"layer_{l}"])
+                    for l in range(1, cfg.n_layers)
+                ]
+            )
+        )
+        next_tok = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+    return jnp.concatenate(hs, axis=1), jnp.concatenate(ts, axis=1)
+
+
+def _pred_params(params, cfg):
+    return [
+        {
+            "pred_w1": params[f"layer_{l}"]["pred_w1"],
+            "pred_b1": params[f"layer_{l}"]["pred_b1"],
+            "pred_w2": params[f"layer_{l}"]["pred_w2"],
+        }
+        for l in range(1, cfg.n_layers)
+    ]
+
+
+def _merge_pred(params, cfg, pred_list):
+    out = dict(params)
+    for i, l in enumerate(range(1, cfg.n_layers)):
+        lp = dict(out[f"layer_{l}"])
+        lp.update(pred_list[i])
+        out[f"layer_{l}"] = lp
+    return out
+
+
+def _ce_loss(pred_list, params, cfg, h_prev, targets):
+    """Mean CE between predictor softmax and router softmax, all layers."""
+    loss = 0.0
+    for i, l in enumerate(range(1, cfg.n_layers)):
+        lp = dict(params[f"layer_{l}"])
+        lp.update(pred_list[i])
+        logits = model_mod.predictor_logits(h_prev[i], lp)
+        target_p = jax.nn.softmax(targets[i], axis=-1)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        loss = loss - jnp.mean(jnp.sum(target_p * logp, axis=-1))
+    return loss / (cfg.n_layers - 1)
+
+
+def distill(params, cfg: ModelConfig, *, steps: int = 300, batches: int = 8,
+            lr: float = 3e-3, seed: int = 7):
+    """Train the residual MLPs; returns updated params and the loss curve."""
+    # Collect a pool of pairs from a mixed-domain stream: prefill states
+    # plus greedy-decode states (the live-traffic distribution).
+    hs, ts = [], []
+    for domain, tokens in data_mod.mixed_stream(
+        cfg, batches, cfg.prefill_batch, cfg.prefill_chunk, seed
+    ):
+        h_prev, targets = collect_pairs(params, cfg, jnp.asarray(tokens))
+        hs.append(h_prev)
+        ts.append(targets)
+        prompt = jnp.asarray(tokens[:, : max(4, cfg.prefill_chunk // 2)])
+        h_d, t_d = collect_decode_pairs(params, cfg, prompt, gen_steps=12)
+        hs.append(h_d)
+        ts.append(t_d)
+    h_pool = jnp.concatenate(hs, axis=1)  # [L-1, N, H]
+    t_pool = jnp.concatenate(ts, axis=1)  # [L-1, N, E]
+
+    pred = _pred_params(params, cfg)
+    flat, tree = jax.tree_util.tree_flatten(pred)
+    m = [jnp.zeros_like(x) for x in flat]
+    v = [jnp.zeros_like(x) for x in flat]
+    b1, b2, eps = 0.9, 0.999, 1e-8
+
+    loss_grad = jax.jit(
+        jax.value_and_grad(
+            functools.partial(_ce_loss, params=params, cfg=cfg)
+        ),
+        static_argnames=(),
+    )
+
+    n = h_pool.shape[1]
+    rng = np.random.default_rng(seed)
+    losses = []
+    for step in range(steps):
+        idx = jnp.asarray(rng.integers(0, n, size=min(256, n)))
+        hb = h_pool[:, idx]
+        tb = t_pool[:, idx]
+        loss, grads = loss_grad(tree.unflatten(flat), h_prev=hb, targets=tb)
+        gflat, _ = jax.tree_util.tree_flatten(grads)
+        t = step + 1
+        for j in range(len(flat)):
+            m[j] = b1 * m[j] + (1 - b1) * gflat[j]
+            v[j] = b2 * v[j] + (1 - b2) * gflat[j] ** 2
+            mhat = m[j] / (1 - b1**t)
+            vhat = v[j] / (1 - b2**t)
+            flat[j] = flat[j] - lr * mhat / (jnp.sqrt(vhat) + eps)
+        losses.append(float(loss))
+
+    new_pred = tree.unflatten(flat)
+    return _merge_pred(params, cfg, new_pred), losses
+
+
+def fidelity_metrics(params, cfg: ModelConfig, *, batches: int = 4,
+                     seed: int = 1717) -> dict:
+    """Fig. 10 metrics per layer on a held-out mixed stream.
+
+    Returns {layer: {trained: {...}, untrained: {...}}} with
+    top_k_accuracy, top_half_k_hit_rate, twox_top_k_recall.
+    """
+    k = cfg.top_k
+    half = max(1, k // 2)
+    acc = {
+        l: {m: [0, 0] for m in ("topk", "half", "twox", "topk_prior",
+                                "half_prior", "twox_prior")}
+        for l in range(1, cfg.n_layers)
+    }
+    for domain, tokens in data_mod.mixed_stream(
+        cfg, batches, cfg.prefill_batch, cfg.prefill_chunk, seed
+    ):
+        h_prev, targets = collect_pairs(params, cfg, jnp.asarray(tokens))
+        for i, l in enumerate(range(1, cfg.n_layers)):
+            lp = params[f"layer_{l}"]
+            actual = np.asarray(jax.lax.top_k(targets[i], k)[1])  # [T,k]
+            actual_half = np.asarray(jax.lax.top_k(targets[i], half)[1])
+            for variant, fn in (
+                ("", model_mod.predictor_logits),
+                ("_prior", model_mod.predictor_prior_logits),
+            ):
+                logits = fn(h_prev[i], lp)
+                pred_k = np.asarray(jax.lax.top_k(logits, k)[1])
+                pred_2k = np.asarray(jax.lax.top_k(logits, min(2 * k, cfg.n_experts))[1])
+                for t in range(actual.shape[0]):
+                    a, p, p2 = set(actual[t]), set(pred_k[t]), set(pred_2k[t])
+                    ah = set(actual_half[t])
+                    acc[l]["topk" + variant][0] += len(a & p)
+                    acc[l]["topk" + variant][1] += k
+                    acc[l]["half" + variant][0] += len(ah & p)
+                    acc[l]["half" + variant][1] += half
+                    acc[l]["twox" + variant][0] += len(a & p2)
+                    acc[l]["twox" + variant][1] += k
+
+    def ratio(c):
+        return c[0] / max(1, c[1])
+
+    return {
+        str(l): {
+            "trained": {
+                "top_k_accuracy": ratio(acc[l]["topk"]),
+                "top_half_k_hit_rate": ratio(acc[l]["half"]),
+                "twox_top_k_recall": ratio(acc[l]["twox"]),
+            },
+            "untrained": {
+                "top_k_accuracy": ratio(acc[l]["topk_prior"]),
+                "top_half_k_hit_rate": ratio(acc[l]["half_prior"]),
+                "twox_top_k_recall": ratio(acc[l]["twox_prior"]),
+            },
+        }
+        for l in range(1, cfg.n_layers)
+    }

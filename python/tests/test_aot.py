@@ -1,0 +1,106 @@
+"""AOT path tests: HLO text lowering, weights export, manifest integrity.
+
+Uses the TINY config so the suite stays fast; the real artifact build
+(`make artifacts`) uses SMALL_REAL.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.aot import _param_specs, export_weights, to_hlo_text
+from compile.configs import TINY
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(TINY, seed=0)
+
+
+def test_hlo_text_lowering_decode(params):
+    cfg = TINY
+    flat = M.flatten_params(params)
+    names = [n for n, _ in flat]
+
+    def wrapper(*args):
+        p = M.unflatten_params(list(zip(names, args[: len(names)])))
+        return M.decode_step(p, cfg, *args[len(names):])
+
+    b = cfg.decode_batch
+    specs = [
+        jax.ShapeDtypeStruct((b,), jnp.int32),
+        jax.ShapeDtypeStruct((b,), jnp.int32),
+        jax.ShapeDtypeStruct(M.kv_shape(cfg, b), jnp.float32),
+    ]
+    lowered = jax.jit(wrapper).lower(*_param_specs(flat), *specs)
+    text = to_hlo_text(lowered)
+    assert "HloModule" in text
+    # The interchange contract: text form, with an entry computation that
+    # takes |params| + 3 parameters.
+    assert text.count("parameter(") >= len(names) + 3
+
+
+def test_hlo_text_is_parseable_ascii(params):
+    cfg = TINY
+    flat = M.flatten_params(params)
+    names = [n for n, _ in flat]
+
+    def wrapper(*args):
+        p = M.unflatten_params(list(zip(names, args[: len(names)])))
+        return M.moe_block_only(p, cfg, args[len(names)])
+
+    specs = [jax.ShapeDtypeStruct((16, cfg.d_model), jnp.float32)]
+    text = to_hlo_text(jax.jit(wrapper).lower(*_param_specs(flat), *specs))
+    text.encode("ascii")  # must not contain binary garbage
+
+
+def test_export_weights_roundtrip(tmp_path, params):
+    flat = M.flatten_params(params)
+    manifest = export_weights(flat, str(tmp_path))
+    blob = open(os.path.join(tmp_path, "weights.bin"), "rb").read()
+    meta = json.load(open(os.path.join(tmp_path, "weights_manifest.json")))
+    assert meta["total_bytes"] == len(blob)
+    assert [m["name"] for m in manifest] == [n for n, _ in flat]
+    # spot-check every tensor round-trips bit-exactly
+    for entry, (_, arr) in zip(manifest, flat):
+        a = np.frombuffer(
+            blob[entry["offset_bytes"]: entry["offset_bytes"] + entry["size_bytes"]],
+            dtype=np.float32,
+        ).reshape(entry["shape"])
+        np.testing.assert_array_equal(a, np.asarray(arr))
+
+
+def test_manifest_offsets_contiguous(tmp_path, params):
+    flat = M.flatten_params(params)
+    manifest = export_weights(flat, str(tmp_path))
+    off = 0
+    for m in manifest:
+        assert m["offset_bytes"] == off
+        off += m["size_bytes"]
+
+
+def test_real_artifacts_if_built():
+    """When `make artifacts` has run, validate the metadata contract the
+    rust runtime relies on."""
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    meta_path = os.path.join(art, "metadata.json")
+    if not os.path.exists(meta_path):
+        pytest.skip("artifacts not built")
+    meta = json.load(open(meta_path))
+    assert meta["model"]["n_layers"] >= 1
+    files = {a["file"] for a in meta["artifacts"]}
+    assert "decode_step_b8.hlo.txt" in files
+    for a in meta["artifacts"]:
+        assert os.path.exists(os.path.join(art, a["file"]))
+        assert a["n_params"] > 0
+    manifest = json.load(open(os.path.join(art, "weights_manifest.json")))
+    blob_sz = os.path.getsize(os.path.join(art, "weights.bin"))
+    assert manifest["total_bytes"] == blob_sz
+    pm = json.load(open(os.path.join(art, "predictor_metrics.json")))
+    for v in pm.values():
+        assert v["trained"]["top_k_accuracy"] >= v["untrained"]["top_k_accuracy"] - 0.05

@@ -1,0 +1,196 @@
+"""L2 model tests: shapes, KV-cache semantics, MoE-vs-ref, determinism."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.configs import TINY
+from compile.kernels.ref import moe_layer_ref
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(TINY, seed=0)
+
+
+def _decode(params, toks, pos, kv):
+    return M.decode_step(params, TINY, toks, pos, kv)
+
+
+def test_decode_shapes(params):
+    cfg = TINY
+    b = cfg.decode_batch
+    kv = jnp.zeros(M.kv_shape(cfg, b), jnp.float32)
+    toks = jnp.zeros((b,), jnp.int32)
+    pos = jnp.zeros((b,), jnp.int32)
+    logits, kv2, ai, ag, pi, ri = _decode(params, toks, pos, kv)
+    assert logits.shape == (b, cfg.vocab)
+    assert kv2.shape == kv.shape
+    assert ai.shape == (cfg.n_layers, b, cfg.top_k)
+    assert ag.shape == (cfg.n_layers, b, cfg.top_k)
+    assert pi.shape == (cfg.n_layers, b, cfg.top_k)
+    assert ri.shape == (cfg.n_layers, b, cfg.top_k)
+
+
+def test_prefill_shapes(params):
+    cfg = TINY
+    b, s = cfg.prefill_batch, cfg.prefill_chunk
+    kv = jnp.zeros(M.kv_shape(cfg, b), jnp.float32)
+    toks = jnp.zeros((b, s), jnp.int32)
+    sp = jnp.zeros((b,), jnp.int32)
+    logits, kv2, ai, ag, pi, ri = M.prefill_chunk(params, cfg, toks, sp, kv)
+    assert logits.shape == (b, cfg.vocab)
+    assert ai.shape == (cfg.n_layers, b, s, cfg.top_k)
+
+
+def test_routing_indices_valid(params):
+    cfg = TINY
+    b = cfg.decode_batch
+    rng = np.random.default_rng(0)
+    kv = jnp.zeros(M.kv_shape(cfg, b), jnp.float32)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, b), jnp.int32)
+    pos = jnp.zeros((b,), jnp.int32)
+    _, _, ai, ag, pi, _ = _decode(params, toks, pos, kv)
+    ai = np.asarray(ai)
+    assert ai.min() >= 0 and ai.max() < cfg.n_experts
+    # top-k indices are distinct per token
+    for l in range(cfg.n_layers):
+        for t in range(b):
+            assert len(set(ai[l, t])) == cfg.top_k
+    # gates are a distribution over the k slots
+    np.testing.assert_allclose(np.asarray(ag).sum(-1), 1.0, atol=1e-5)
+    # layer-0 prediction is the -1 sentinel; later layers are valid experts
+    pi = np.asarray(pi)
+    assert (pi[0] == -1).all()
+    assert (pi[1:] >= 0).all() and (pi[1:] < cfg.n_experts).all()
+
+
+def test_gate_values_sorted_descending(params):
+    cfg = TINY
+    b = cfg.decode_batch
+    kv = jnp.zeros(M.kv_shape(cfg, b), jnp.float32)
+    toks = jnp.asarray(np.arange(b) % cfg.vocab, jnp.int32)
+    pos = jnp.zeros((b,), jnp.int32)
+    _, _, _, ag, _, _ = _decode(params, toks, pos, kv)
+    ag = np.asarray(ag)
+    assert (np.diff(ag, axis=-1) <= 1e-6).all()
+
+
+def test_decode_deterministic(params):
+    cfg = TINY
+    b = cfg.decode_batch
+    kv = jnp.zeros(M.kv_shape(cfg, b), jnp.float32)
+    toks = jnp.asarray(np.arange(b) % cfg.vocab, jnp.int32)
+    pos = jnp.zeros((b,), jnp.int32)
+    l1 = np.asarray(_decode(params, toks, pos, kv)[0])
+    l2 = np.asarray(_decode(params, toks, pos, kv)[0])
+    np.testing.assert_array_equal(l1, l2)
+
+
+def test_kv_cache_written_at_positions(params):
+    """Decoding at position p must write K/V rows only at p."""
+    cfg = TINY
+    b = cfg.decode_batch
+    kv = jnp.zeros(M.kv_shape(cfg, b), jnp.float32)
+    toks = jnp.asarray(np.arange(b) % cfg.vocab, jnp.int32)
+    pos = jnp.asarray([3] * b, jnp.int32)
+    _, kv2, *_ = _decode(params, toks, pos, kv)
+    kv2 = np.asarray(kv2)
+    assert np.abs(kv2[:, :, :, 3, :]).max() > 0
+    mask = np.ones(cfg.max_seq, bool)
+    mask[3] = False
+    assert np.abs(kv2[:, :, :, mask, :]).max() == 0
+
+
+def test_prefill_then_decode_consistent(params):
+    """Prefill of [t0..t3] then decode t4 must equal prefilling all five
+    positions' cache (same attention view)."""
+    cfg = TINY
+    b = cfg.prefill_batch
+    rng = np.random.default_rng(1)
+    seq = rng.integers(0, cfg.vocab, (b, 5)).astype(np.int32)
+
+    kv = jnp.zeros(M.kv_shape(cfg, b), jnp.float32)
+    sp = jnp.zeros((b,), jnp.int32)
+    chunk = np.zeros((b, cfg.prefill_chunk), np.int32)
+    chunk[:, :4] = seq[:, :4]
+    # prefill only writes the first 4 positions meaningfully; positions
+    # beyond are garbage in this test, so build the cache with a length-4
+    # chunk via a second config-free path: use decode steps.
+    kv_d = jnp.zeros(M.kv_shape(cfg, b), jnp.float32)
+    logits = None
+    for i in range(5):
+        toks = jnp.asarray(seq[:, i], jnp.int32)
+        pos = jnp.full((b,), i, jnp.int32)
+        logits, kv_d, *_ = M.decode_step(params, cfg, toks, pos, kv_d)
+
+    # full-sequence forward: prefill chunk padded; compare at position 4.
+    # Positions 5.. of the chunk attend only causally so position 4's
+    # logits are unaffected by the padding tokens after it.
+    chunk_full = np.zeros((b, cfg.prefill_chunk), np.int32)
+    chunk_full[:, :5] = seq
+    _, _, ai_pf, _, _, _ = M.prefill_chunk(
+        params, cfg, jnp.asarray(chunk_full), sp, kv
+    )
+    # cross-check routing decisions at position 4 match between paths
+    _, _, ai_dec, _, _, _ = M.decode_step(
+        params,
+        cfg,
+        jnp.asarray(seq[:, 4], jnp.int32),
+        jnp.full((b,), 4, jnp.int32),
+        kv_d_minus_last(params, seq, b),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(ai_pf)[:, :, 4, :], np.asarray(ai_dec)
+    )
+
+
+def kv_d_minus_last(params, seq, b):
+    cfg = TINY
+    kv_d = jnp.zeros(M.kv_shape(cfg, b), jnp.float32)
+    for i in range(4):
+        toks = jnp.asarray(seq[:, i], jnp.int32)
+        pos = jnp.full((b,), i, jnp.int32)
+        _, kv_d, *_ = M.decode_step(params, cfg, toks, pos, kv_d)
+    return kv_d
+
+
+def test_moe_layer_matches_ref(params):
+    cfg = TINY
+    lp = params["layer_1"]
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(20, cfg.d_model)).astype(np.float32))
+    y1, i1, g1 = M.moe_layer(x, lp, cfg, cfg.capacity_prefill)
+    y2, i2, g2 = moe_layer_ref(
+        x, lp["router_w"], lp["router_b"], lp["w1"], lp["w2"],
+        cfg.top_k, cfg.capacity_prefill,
+    )
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-6)
+
+
+def test_capacity_drops_overflow(params):
+    """With capacity 1 and identical tokens, all-but-one assignment per
+    expert is dropped: MoE output of dropped tokens is exactly zero."""
+    cfg = TINY
+    lp = params["layer_0"]
+    rng = np.random.default_rng(3)
+    row = rng.normal(size=(1, cfg.d_model)).astype(np.float32)
+    x = jnp.asarray(np.repeat(row, 6, axis=0))
+    y, idx, g = M.moe_layer(x, lp, cfg, capacity=1)
+    y = np.asarray(y)
+    # token 0 got both its experts' capacity; tokens 1..5 were dropped
+    assert np.abs(y[0]).max() > 0
+    np.testing.assert_allclose(y[1:], 0.0, atol=1e-6)
+
+
+def test_flatten_unflatten_roundtrip(params):
+    flat = M.flatten_params(params)
+    back = M.unflatten_params(flat)
+    flat2 = M.flatten_params(back)
+    assert [n for n, _ in flat] == [n for n, _ in flat2]
+    for (n1, a1), (n2, a2) in zip(flat, flat2):
+        np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))

@@ -1,0 +1,118 @@
+"""Predictor distillation tests: zero-init prior equivalence, training
+signal, fidelity metric sanity."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data as D
+from compile import model as M
+from compile import predictor as P
+from compile.configs import TINY
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(TINY, seed=0)
+
+
+def test_zero_init_equals_prior(params):
+    """With pred_w2 zero-initialized, trained and untrained predictors are
+    identical (paper: 'match the cloned router initially')."""
+    cfg = TINY
+    lp = params["layer_1"]
+    rng = np.random.default_rng(0)
+    h = jnp.asarray(rng.normal(size=(10, cfg.d_model)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(M.predictor_logits(h, lp)),
+        np.asarray(M.predictor_prior_logits(h, lp)),
+        atol=1e-6,
+    )
+
+
+def test_collect_pairs_shapes(params):
+    cfg = TINY
+    toks = jnp.asarray(
+        D.sample_tokens(cfg, 0, cfg.prefill_batch, cfg.prefill_chunk, 1)
+    )
+    h_prev, targets = P.collect_pairs(params, cfg, toks)
+    t = cfg.prefill_batch * cfg.prefill_chunk
+    assert h_prev.shape == (cfg.n_layers - 1, t, cfg.d_model)
+    assert targets.shape == (cfg.n_layers - 1, t, cfg.n_experts)
+
+
+def test_distill_reduces_loss(params):
+    cfg = TINY
+    _, losses = P.distill(params, cfg, steps=80, batches=2, seed=11)
+    head = np.mean(losses[:10])
+    tail = np.mean(losses[-10:])
+    assert tail < head, f"CE did not decrease: {head:.4f} -> {tail:.4f}"
+
+
+def test_distill_only_touches_pred_params(params):
+    cfg = TINY
+    out, _ = P.distill(params, cfg, steps=20, batches=2, seed=13)
+    for name in ["embed", "pos_embed", "unembed", "ln_f"]:
+        np.testing.assert_array_equal(np.asarray(params[name]), np.asarray(out[name]))
+    for l in range(cfg.n_layers):
+        for k in ["router_w", "router_b", "w1", "w2", "wq"]:
+            np.testing.assert_array_equal(
+                np.asarray(params[f"layer_{l}"][k]),
+                np.asarray(out[f"layer_{l}"][k]),
+            )
+    # ...and does change at least one residual weight of a layer >= 1
+    changed = any(
+        not np.array_equal(
+            np.asarray(params[f"layer_{l}"]["pred_w2"]),
+            np.asarray(out[f"layer_{l}"]["pred_w2"]),
+        )
+        for l in range(1, cfg.n_layers)
+    )
+    assert changed
+
+
+def test_fidelity_metrics_structure_and_bounds(params):
+    cfg = TINY
+    m = P.fidelity_metrics(params, cfg, batches=1)
+    assert set(m.keys()) == {str(l) for l in range(1, cfg.n_layers)}
+    for v in m.values():
+        for variant in ("trained", "untrained"):
+            for metric, val in v[variant].items():
+                assert 0.0 <= val <= 1.0, (variant, metric, val)
+        # recall within a 2x window can never be below plain top-k accuracy
+        assert (
+            v["trained"]["twox_top_k_recall"]
+            >= v["trained"]["top_k_accuracy"] - 1e-9
+        )
+
+
+def test_trained_beats_untrained_on_average(params):
+    """Distillation must improve mean top-k accuracy (paper Fig. 10)."""
+    cfg = TINY
+    trained, _ = P.distill(params, cfg, steps=150, batches=3, seed=5)
+    m = P.fidelity_metrics(trained, cfg, batches=2)
+    t = np.mean([v["trained"]["top_k_accuracy"] for v in m.values()])
+    u = np.mean([v["untrained"]["top_k_accuracy"] for v in m.values()])
+    assert t > u, f"trained {t:.3f} <= untrained {u:.3f}"
+
+
+def test_domain_token_dists_are_distributions():
+    cfg = TINY
+    d = D.domain_token_dists(cfg)
+    assert d.shape == (cfg.n_domains, cfg.vocab)
+    np.testing.assert_allclose(d.sum(1), 1.0, atol=1e-9)
+    assert (d >= 0).all()
+
+
+def test_domains_favor_different_tokens():
+    cfg = TINY
+    d = D.domain_token_dists(cfg)
+    tops = [int(np.argmax(d[i])) for i in range(cfg.n_domains)]
+    assert len(set(tops)) > 1
+
+
+def test_repeat_domain_duplicates_prompts():
+    cfg = TINY
+    toks = D.sample_tokens(cfg, cfg.n_domains - 1, 8, 16, seed=2)
+    uniq = {tuple(row) for row in toks}
+    assert len(uniq) <= 2

@@ -1,0 +1,80 @@
+"""Router top-k Pallas kernel vs oracle (jax.lax.top_k + softmax)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.router_topk import router_topk
+
+
+def _oracle(x, w, b, k):
+    logits = x.astype(jnp.float32) @ w.astype(jnp.float32) + b
+    v, i = jax.lax.top_k(logits, k)
+    g = jax.nn.softmax(v, axis=-1)
+    return v, i, g
+
+
+def _case(t, h, e, k, seed=0, block_t=None):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(t, h)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(h, e)).astype(np.float32) * 0.3)
+    b = jnp.asarray(rng.normal(size=(e,)).astype(np.float32) * 0.1)
+    got = router_topk(x, w, b, k, block_t=block_t)
+    want = _oracle(x, w, b, k)
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]), atol=1e-4, rtol=1e-4)
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+    np.testing.assert_allclose(np.asarray(got[2]), np.asarray(want[2]), atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    t=st.integers(1, 40),
+    h=st.sampled_from([8, 16, 32]),
+    e=st.sampled_from([4, 16, 32]),
+    k=st.integers(1, 4),
+)
+def test_matches_oracle(t, h, e, k):
+    _case(t, h, e, min(k, e))
+
+
+@settings(max_examples=10, deadline=None)
+@given(t=st.integers(2, 50), block_t=st.integers(1, 50))
+def test_tiling_invariant(t, block_t):
+    _case(t, 16, 16, 2, seed=3, block_t=block_t)
+
+
+def test_gates_sum_to_one():
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(24, 16)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(16, 8)).astype(np.float32))
+    b = jnp.zeros((8,), jnp.float32)
+    _, _, g = router_topk(x, w, b, 3)
+    np.testing.assert_allclose(np.asarray(g).sum(-1), 1.0, atol=1e-6)
+
+
+def test_indices_distinct_per_token():
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(32, 16)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(16, 16)).astype(np.float32))
+    b = jnp.zeros((16,), jnp.float32)
+    _, i, _ = router_topk(x, w, b, 4)
+    i = np.asarray(i)
+    for row in i:
+        assert len(set(row)) == 4
+
+
+def test_matches_model_moe_routing():
+    """The kernel must agree with the L2 model's router path exactly."""
+    from compile import model as M
+    from compile.configs import TINY
+
+    params = M.init_params(TINY, seed=0)
+    lp = params["layer_0"]
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.normal(size=(20, TINY.d_model)).astype(np.float32))
+    logits = M.router_logits(x, lp)
+    v_m, i_m = M.topk_manual(logits, TINY.top_k)
+    v_k, i_k, _ = router_topk(x, lp["router_w"], lp["router_b"], TINY.top_k)
+    np.testing.assert_array_equal(np.asarray(i_m), np.asarray(i_k))
+    np.testing.assert_allclose(np.asarray(v_m), np.asarray(v_k), atol=1e-4)

@@ -1,0 +1,8 @@
+//! Fig. 10 bench: predictor fidelity (real distilled + statistical).
+use probe::experiments::fig10_fidelity;
+
+fn main() {
+    let b = fig10_fidelity::run(&fig10_fidelity::Fig10Params::default());
+    b.print();
+    b.save().expect("save bench_results");
+}

@@ -1,0 +1,8 @@
+//! Fig. 11 bench: dual-track timeline breakdown of one decode step.
+use probe::experiments::fig11_timeline;
+
+fn main() {
+    let b = fig11_timeline::run(&fig11_timeline::Fig11Params::default());
+    b.print();
+    b.save().expect("save bench_results");
+}

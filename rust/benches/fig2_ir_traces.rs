@@ -1,0 +1,9 @@
+//! Fig. 2 bench: expert-activation IR traces (prefill bursts, decode
+//! volatility) for GPT-OSS-120B vs Qwen3-235B at ep=8.
+use probe::experiments::fig2_ir;
+
+fn main() {
+    let b = fig2_ir::run(&fig2_ir::Fig2Params::default());
+    b.print();
+    b.save().expect("save bench_results");
+}

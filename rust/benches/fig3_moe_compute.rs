@@ -1,0 +1,8 @@
+//! Fig. 3 bench: MoE compute latency — EP max/avg/min vs DP vs EP+extra.
+use probe::experiments::fig3_compute;
+
+fn main() {
+    let b = fig3_compute::run(&fig3_compute::Fig3Params::default());
+    b.print();
+    b.save().expect("save bench_results");
+}

@@ -1,0 +1,9 @@
+//! Fig. 5 bench: All-to-All effective bandwidth + max per-rank traffic,
+//! balanced top-k vs real skewed workloads.
+use probe::experiments::fig5_alltoall;
+
+fn main() {
+    let b = fig5_alltoall::run(&fig5_alltoall::Fig5Params::default());
+    b.print();
+    b.save().expect("save bench_results");
+}

@@ -1,0 +1,8 @@
+//! Fig. 7 bench: prefill latency scaling, PROBE vs SGLang static EP.
+use probe::experiments::fig7_prefill;
+
+fn main() {
+    let b = fig7_prefill::run(&fig7_prefill::Fig7Params::default());
+    b.print();
+    b.save().expect("save bench_results");
+}

@@ -1,0 +1,9 @@
+//! Fig. 8 bench: decode throughput-latency Pareto frontier over batch
+//! sweep and datasets (Chinese/Code/Repeat), three systems.
+use probe::experiments::fig8_pareto;
+
+fn main() {
+    let b = fig8_pareto::run(&fig8_pareto::Fig8Params::default());
+    b.print();
+    b.save().expect("save bench_results");
+}

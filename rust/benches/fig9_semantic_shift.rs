@@ -1,0 +1,8 @@
+//! Fig. 9 bench: throughput under the Code->Chinese shift at step ~200.
+use probe::experiments::fig9_shift;
+
+fn main() {
+    let b = fig9_shift::run(&fig9_shift::Fig9Params::default());
+    b.print();
+    b.save().expect("save bench_results");
+}

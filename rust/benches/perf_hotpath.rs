@@ -1,0 +1,111 @@
+//! Hot-path microbenchmarks for the §Perf pass: planner wall-clock vs the
+//! dispatch window it must hide inside, routing generation, dispatch-plan
+//! materialization, traffic accounting, and a full simulated step.
+
+use probe::config::ProbeConfig;
+use probe::model::MoeModel;
+use probe::perfmodel::{comm_volumes, Assignment, DispatchPlan};
+use probe::placement::Placement;
+use probe::planner;
+use probe::routing::RoutingModel;
+use probe::topology::HardwareProfile;
+use probe::util::bench::{fmt_time, time_it, BenchSet};
+
+fn main() {
+    let model = MoeModel::gpt_oss_120b();
+    let hw = HardwareProfile::hopper_141();
+    let ep = 8;
+    let tokens = 6144; // b=768/rank
+    let mut rm = RoutingModel::calibrated(1, model.n_experts, model.top_k, 4, 3);
+    let routing = rm.route_step(&vec![0u16; tokens]).layers.remove(0);
+    let counts: Vec<Vec<f64>> = routing
+        .expert_counts_by_source(ep)
+        .into_iter()
+        .map(|v| v.into_iter().map(f64::from).collect())
+        .collect();
+    let base = Placement::sharded(ep, model.n_experts, 3);
+    let cfg = ProbeConfig::default();
+    let windows = vec![1e-3; ep];
+
+    let mut b = BenchSet::new(
+        "perf_hotpath",
+        &["op", "mean", "p50", "p99", "per_step_budget"],
+    );
+
+    let s = time_it(3, 30, || {
+        std::hint::black_box(planner::plan(&counts, &base, &model, &hw, &windows, &cfg));
+    });
+    // the paper's solver must fit in the All-to-All dispatch window
+    // (~100-300us at this batch); record against that budget
+    b.row(&[
+        "planner(Alg.1, k_max=16)".into(),
+        fmt_time(s.mean),
+        fmt_time(s.p50),
+        fmt_time(s.p99),
+        "~dispatch (100-300us)".into(),
+    ]);
+
+    let mut rm2 = RoutingModel::calibrated(1, model.n_experts, model.top_k, 4, 5);
+    let s = time_it(3, 20, || {
+        std::hint::black_box(rm2.route_step(&vec![0u16; tokens]));
+    });
+    b.row(&[
+        format!("route_step({tokens} tok)"),
+        fmt_time(s.mean),
+        fmt_time(s.p50),
+        fmt_time(s.p99),
+        "sim-only".into(),
+    ]);
+
+    let a = Assignment::locality_first(&routing, &base);
+    let s = time_it(3, 30, || {
+        std::hint::black_box(DispatchPlan::from_assignment(&routing, &a));
+    });
+    b.row(&[
+        "dispatch_plan".into(),
+        fmt_time(s.mean),
+        fmt_time(s.p50),
+        fmt_time(s.p99),
+        "sim-only".into(),
+    ]);
+
+    let plan = DispatchPlan::from_assignment(&routing, &a);
+    let s = time_it(3, 50, || {
+        std::hint::black_box(comm_volumes(&routing, &plan, ep, model.token_bytes()));
+    });
+    b.row(&[
+        "comm_volumes".into(),
+        fmt_time(s.mean),
+        fmt_time(s.p50),
+        fmt_time(s.p99),
+        "sim-only".into(),
+    ]);
+
+    // full simulated PROBE step (6 layers)
+    {
+        use probe::balancers::{decide_step, Probe};
+        use probe::simulator::ClusterSim;
+        let mut cfg_full = probe::config::Config::default();
+        cfg_full.model.n_layers = 6;
+        let mut bal = Probe::new(&cfg_full, ProbeConfig::default(), 7);
+        let sim = ClusterSim::new(cfg_full.model.clone(), cfg_full.cluster.clone());
+        let mut rm3 = RoutingModel::calibrated(6, 128, 4, 4, 9);
+        let s = time_it(2, 10, || {
+            let routing = rm3.route_step(&vec![0u16; tokens]);
+            let ds = decide_step(&mut bal, 0, &routing);
+            std::hint::black_box(sim.run_step(&routing, &ds));
+        });
+        b.row(&[
+            "probe_step(6 layers)".into(),
+            fmt_time(s.mean),
+            fmt_time(s.p50),
+            fmt_time(s.p99),
+            "sim-only".into(),
+        ]);
+    }
+
+    b.note("planner budget: must fit the simulated dispatch window so the");
+    b.note("aux track hides it (paper: single-SM solver inside All-to-All)");
+    b.print();
+    b.save().expect("save bench_results");
+}

@@ -1,0 +1,295 @@
+//! DeepSeek-EPLB baseline: statistics-driven one-shot rebalancing.
+//!
+//! Accumulates per-expert activation history; once `warmup_steps` of
+//! statistics exist it derives a replicated placement (greedy balanced
+//! packing of historical loads) and keeps it until the next rebalance
+//! event (`rebalance_interval`, default: one-shot). The expert transfers
+//! are *reactive*: their cost is charged on the critical path, amortized
+//! over `transfer_steps` (paper §6.1: bounded to 2 decode steps).
+//!
+//! The failure mode the paper highlights (Fig. 9): after a semantic
+//! shift, the placement derived from stale history mismatches the new
+//! hotspots until enough new statistics accumulate.
+
+use crate::config::{Config, EplbConfig};
+use crate::model::MoeModel;
+use crate::perfmodel::transfer_time;
+use crate::placement::Placement;
+use crate::planner::rebalance_existing;
+use crate::routing::LayerRouting;
+use crate::simulator::LayerDecision;
+use crate::topology::HardwareProfile;
+
+use super::Balancer;
+
+#[derive(Debug, Clone)]
+pub struct Eplb {
+    model: MoeModel,
+    hw: HardwareProfile,
+    ep: usize,
+    cfg: EplbConfig,
+    /// Cumulative expert activation counts `[layer][expert]`.
+    history: Vec<Vec<f64>>,
+    steps_seen: usize,
+    last_rebalance: Option<usize>,
+    /// Current placement per layer (None until first rebalance).
+    placements: Vec<Option<Placement>>,
+    /// Remaining steps over which the last transfer is amortized, and the
+    /// per-step exposed cost.
+    transfer_debt: usize,
+    transfer_cost_per_step: f64,
+    step_idx: usize,
+    n_layers_hint: usize,
+}
+
+impl Eplb {
+    pub fn new(config: &Config, cfg: EplbConfig) -> Eplb {
+        Eplb {
+            model: config.model.clone(),
+            hw: config.cluster.profile.clone(),
+            ep: config.cluster.ep,
+            cfg,
+            history: Vec::new(),
+            steps_seen: 0,
+            last_rebalance: None,
+            placements: Vec::new(),
+            transfer_debt: 0,
+            transfer_cost_per_step: 0.0,
+            step_idx: 0,
+            n_layers_hint: 0,
+        }
+    }
+
+    fn ensure_layers(&mut self, n: usize) {
+        while self.history.len() < n {
+            self.history.push(vec![0.0; self.model.n_experts]);
+            self.placements.push(None);
+        }
+        self.n_layers_hint = self.n_layers_hint.max(n);
+    }
+
+    fn should_rebalance(&self) -> bool {
+        if self.steps_seen < self.cfg.warmup_steps {
+            return false;
+        }
+        match self.last_rebalance {
+            None => true,
+            Some(last) => {
+                self.cfg.rebalance_interval != usize::MAX
+                    && self.step_idx >= last + self.cfg.rebalance_interval
+            }
+        }
+    }
+
+    /// Greedy balanced packing: repeatedly replicate the expert with the
+    /// highest historical load-per-copy onto the least-loaded rank with a
+    /// free slot.
+    fn derive_placement(&self, layer: usize) -> Placement {
+        let mut p = Placement::sharded(self.ep, self.model.n_experts, self.cfg.redundant_slots);
+        let hist = &self.history[layer];
+        let mut copies = vec![1.0f64; self.model.n_experts];
+        // estimated per-rank load under current replication (even split)
+        let rank_load = |p: &Placement, copies: &[f64]| -> Vec<f64> {
+            let mut loads = vec![0.0; self.ep];
+            for e in 0..self.model.n_experts {
+                let share = hist[e] / copies[e];
+                for r in p.ranks_hosting(e) {
+                    loads[r] += share;
+                }
+            }
+            loads
+        };
+        let total_slots = self.ep * self.cfg.redundant_slots;
+        for _ in 0..total_slots {
+            let loads = rank_load(&p, &copies);
+            // hottest expert by per-copy load
+            let Some((e_star, _)) = (0..self.model.n_experts)
+                .map(|e| (e, hist[e] / copies[e]))
+                .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            else {
+                break;
+            };
+            // coldest rank with a slot not already hosting e_star
+            let mut ranks: Vec<usize> = (0..self.ep).collect();
+            ranks.sort_by(|&a, &b| loads[a].partial_cmp(&loads[b]).unwrap());
+            let Some(&dst) = ranks
+                .iter()
+                .find(|&&r| p.slots_free(r) > 0 && !p.hosts(e_star, r))
+            else {
+                break;
+            };
+            if p.add_replica(e_star, dst).is_err() {
+                break;
+            }
+            copies[e_star] += 1.0;
+        }
+        p
+    }
+}
+
+impl Balancer for Eplb {
+    fn name(&self) -> &'static str {
+        "eplb"
+    }
+
+    fn begin_step(&mut self, step_idx: usize) {
+        self.step_idx = step_idx;
+        if self.should_rebalance() && self.n_layers_hint > 0 {
+            let mut max_fetch = 0usize;
+            for layer in 0..self.n_layers_hint {
+                let newp = self.derive_placement(layer);
+                // transfer volume = replicas fetched vs previous placement
+                let old = self.placements[layer]
+                    .clone()
+                    .unwrap_or_else(|| {
+                        Placement::sharded(self.ep, self.model.n_experts, self.cfg.redundant_slots)
+                    });
+                let delta = crate::placement::PlacementDelta::between(&old, &newp);
+                let worst = (0..self.ep).map(|r| delta.transfer_slots(r)).max().unwrap_or(0);
+                max_fetch = max_fetch.max(worst);
+                self.placements[layer] = Some(newp);
+            }
+            // reactive transfer: exposed, amortized over transfer_steps
+            let total = transfer_time(max_fetch, &self.model, &self.hw)
+                * self.n_layers_hint as f64;
+            self.transfer_debt = self.cfg.transfer_steps;
+            self.transfer_cost_per_step = total / self.cfg.transfer_steps.max(1) as f64;
+            self.last_rebalance = Some(step_idx);
+        }
+        if self.transfer_debt > 0 && self.last_rebalance != Some(step_idx) {
+            // debt is consumed by decide() below via exposed_transfer
+        }
+        self.steps_seen += 1;
+    }
+
+    fn decide(&mut self, layer: usize, actual: &LayerRouting) -> LayerDecision {
+        self.ensure_layers(layer + 1);
+        let placement = self.placements[layer]
+            .clone()
+            .unwrap_or_else(|| Placement::sharded(self.ep, self.model.n_experts, 0));
+        let counts: Vec<Vec<f64>> = actual
+            .expert_counts_by_source(self.ep)
+            .into_iter()
+            .map(|v| v.into_iter().map(|c| c as f64).collect())
+            .collect();
+        let assignment = if placement.total_replicas() > 0 {
+            rebalance_existing(&counts, &placement, &self.model, &self.hw, 32)
+        } else {
+            crate::perfmodel::Assignment::locality_first_from_counts(&counts, &placement)
+        };
+        // charge the amortized reactive transfer on the first layer only
+        let exposed = if layer == 0 && self.transfer_debt > 0 {
+            self.transfer_debt -= 1;
+            self.transfer_cost_per_step
+        } else {
+            0.0
+        };
+        LayerDecision {
+            placement,
+            assignment,
+            prefetch_slots: vec![0; self.ep],
+            predict_time: 0.0,
+            plan_time: 0.0,
+            exposed_transfer: exposed,
+            pre_dispatch_fraction: 0.0,
+        }
+    }
+
+    fn observe(&mut self, layer: usize, actual: &LayerRouting) {
+        self.ensure_layers(layer + 1);
+        // exponential decay keeps some recency without full reactivity
+        for (h, &c) in self.history[layer]
+            .iter_mut()
+            .zip(actual.expert_counts().iter())
+        {
+            *h = 0.99 * *h + c as f64;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::routing::RoutingModel;
+
+    fn mk(warmup: usize) -> (Eplb, RoutingModel) {
+        let config = Config::default();
+        let mut cfg = EplbConfig::default();
+        cfg.warmup_steps = warmup;
+        let b = Eplb::new(&config, cfg);
+        let rm = RoutingModel::calibrated(
+            2,
+            config.model.n_experts,
+            config.model.top_k,
+            3,
+            9,
+        );
+        (b, rm)
+    }
+
+    #[test]
+    fn no_replicas_before_warmup() {
+        let (mut b, mut rm) = mk(10);
+        for step in 0..5 {
+            let routing = rm.route_step(&vec![0u16; 512]);
+            let ds = super::super::decide_step(&mut b, step, &routing);
+            assert!(ds.iter().all(|d| d.placement.total_replicas() == 0));
+        }
+    }
+
+    #[test]
+    fn rebalances_after_warmup_and_charges_transfer() {
+        let (mut b, mut rm) = mk(3);
+        let mut saw_replicas = false;
+        let mut saw_exposed = false;
+        for step in 0..8 {
+            let routing = rm.route_step(&vec![0u16; 2048]);
+            let ds = super::super::decide_step(&mut b, step, &routing);
+            if ds[0].placement.total_replicas() > 0 {
+                saw_replicas = true;
+            }
+            if ds[0].exposed_transfer > 0.0 {
+                saw_exposed = true;
+            }
+        }
+        assert!(saw_replicas, "EPLB never rebalanced");
+        assert!(saw_exposed, "EPLB transfer was never charged");
+    }
+
+    #[test]
+    fn one_shot_by_default() {
+        let (mut b, mut rm) = mk(2);
+        let mut rebalance_steps = Vec::new();
+        for step in 0..10 {
+            let routing = rm.route_step(&vec![0u16; 1024]);
+            let before = b.last_rebalance;
+            let _ = super::super::decide_step(&mut b, step, &routing);
+            if b.last_rebalance != before {
+                rebalance_steps.push(step);
+            }
+        }
+        assert_eq!(rebalance_steps.len(), 1, "{rebalance_steps:?}");
+    }
+
+    #[test]
+    fn derived_placement_replicates_hot_experts() {
+        let (mut b, mut rm) = mk(1);
+        // feed heavily skewed history
+        for step in 0..4 {
+            let routing = rm.route_step(&vec![0u16; 4096]);
+            let _ = super::super::decide_step(&mut b, step, &routing);
+        }
+        let hist = b.history[0].clone();
+        let p = b.derive_placement(0);
+        assert!(p.total_replicas() > 0);
+        // the globally hottest expert must have at least one replica
+        let hottest = (0..hist.len())
+            .max_by(|&a, &bb| hist[a].partial_cmp(&hist[bb]).unwrap())
+            .unwrap();
+        assert!(
+            p.ranks_hosting(hottest).len() > 1,
+            "hottest expert not replicated"
+        );
+        p.validate().unwrap();
+    }
+}

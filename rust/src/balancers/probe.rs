@@ -1,0 +1,265 @@
+//! PROBE: Continuous Lookahead Pipelining (paper §4).
+//!
+//! Per layer: (1) the lookahead predictor forecasts the layer's expert
+//! activation one layer ahead; (2) the hardware-aware planner (Algorithm
+//! 1) chooses dynamic replicas + token assignment bounded by the hiding
+//! window; (3) prefetches transmit via split-phase scheduling. All
+//! control costs land on the aux track; replicas are cyclically reused
+//! (cleared and re-planned every layer of every step).
+//!
+//! Dispatch follows the *ground-truth* router at execution time: the
+//! prediction only decided which experts to replicate. The final token
+//! assignment is re-derived from actual routing over the planned
+//! placement (water-filling over existing replicas, no new transfers).
+
+use crate::config::{Config, ProbeConfig};
+use crate::model::MoeModel;
+use crate::placement::Placement;
+use crate::planner;
+use crate::predictor::StatisticalPredictor;
+use crate::routing::LayerRouting;
+use crate::scheduler;
+use crate::simulator::LayerDecision;
+use crate::topology::HardwareProfile;
+
+#[derive(Debug, Clone)]
+pub struct Probe {
+    model: MoeModel,
+    hw: HardwareProfile,
+    ep: usize,
+    pub cfg: ProbeConfig,
+    predictor: StatisticalPredictor,
+    /// EMA of per-rank MoE compute time — the hiding-window estimate.
+    window_ema: Vec<f64>,
+    /// EMA of attention time (window tail).
+    attn_ema: f64,
+    /// Planner iterations of the last decision (observability).
+    pub last_iterations: usize,
+    tokens_per_rank_hint: usize,
+}
+
+impl Probe {
+    pub fn new(config: &Config, cfg: ProbeConfig, seed: u64) -> Probe {
+        let predictor = StatisticalPredictor::new(cfg.predictor_accuracy, seed ^ 0x9E37);
+        Probe {
+            model: config.model.clone(),
+            hw: config.cluster.profile.clone(),
+            ep: config.cluster.ep,
+            cfg,
+            predictor,
+            window_ema: vec![0.0; config.cluster.ep],
+            attn_ema: 0.0,
+            last_iterations: 0,
+            tokens_per_rank_hint: config.batch_per_rank,
+        }
+    }
+
+    /// Hiding window per rank: overlappable compute of the concurrent
+    /// pipeline = this layer's MoE compute + the next attention (§3.4).
+    fn windows(&self) -> Vec<f64> {
+        self.window_ema
+            .iter()
+            .map(|&w| (w + self.attn_ema).max(0.0))
+            .collect()
+    }
+
+    fn bootstrap_windows(&mut self, actual: &LayerRouting) {
+        // First decision of a run: estimate from the average load under
+        // static sharding (conservative — skew only widens the max).
+        if self.window_ema.iter().all(|&w| w == 0.0) {
+            let counts = actual.expert_counts();
+            let placement = Placement::sharded(self.ep, self.model.n_experts, 0);
+            let mut per_rank = vec![0.0; self.ep];
+            for (e, &c) in counts.iter().enumerate() {
+                per_rank[placement.home_rank(e)] +=
+                    crate::perfmodel::expert_compute_time(c as f64, &self.model, &self.hw);
+            }
+            let avg = per_rank.iter().sum::<f64>() / self.ep as f64;
+            self.window_ema = vec![avg; self.ep];
+            self.tokens_per_rank_hint = actual.n_tokens.div_ceil(self.ep);
+            self.attn_ema = scheduler::attention_time(
+                self.tokens_per_rank_hint,
+                64,
+                &self.model,
+                &self.hw,
+            );
+        }
+    }
+}
+
+impl Balancer for Probe {
+    fn name(&self) -> &'static str {
+        "probe"
+    }
+
+    fn begin_step(&mut self, _step_idx: usize) {}
+
+    fn decide(&mut self, _layer: usize, actual: &LayerRouting) -> LayerDecision {
+        self.bootstrap_windows(actual);
+
+        // (1) Predict: lookahead view of this layer's routing.
+        let (_predicted, pred_counts) = self.predictor.predict_counts(actual, self.ep);
+
+        // (2) Plan: Algorithm 1 under the hiding-window budget.
+        let base = Placement::sharded(self.ep, self.model.n_experts, self.cfg.max_redundant);
+        let windows = self.windows();
+        let out = planner::plan(
+            &pred_counts,
+            &base,
+            &self.model,
+            &self.hw,
+            &windows,
+            &self.cfg,
+        );
+        self.last_iterations = out.iterations;
+
+        // (3) Execute: ground-truth dispatch over the planned placement.
+        // The planned flow split is rescaled to the actual router counts
+        // (prediction error only shifts volumes), then briefly polished.
+        let actual_counts: Vec<Vec<f64>> = actual
+            .expert_counts_by_source(self.ep)
+            .into_iter()
+            .map(|v| v.into_iter().map(|c| c as f64).collect())
+            .collect();
+        let assignment = if out.placement.total_replicas() > 0 {
+            let rescaled = out
+                .assignment
+                .rescale_to_counts(&actual_counts, &out.placement);
+            planner::polish_assignment(rescaled, &out.placement, &self.model, &self.hw, 8)
+        } else {
+            crate::perfmodel::Assignment::locality_first_from_counts(&actual_counts, &out.placement)
+        };
+
+        // window EMA update from realized compute
+        let loads = assignment.rank_expert_loads();
+        let comp = crate::perfmodel::rank_compute_times(&loads, &self.model, &self.hw);
+        for (w, &c) in self.window_ema.iter_mut().zip(comp.iter()) {
+            *w = 0.8 * *w + 0.2 * c;
+        }
+
+        let tokens_per_rank = actual.n_tokens.div_ceil(self.ep);
+        let prefetch_slots: Vec<usize> = (0..self.ep).map(|r| out.fetch_slots(r)).collect();
+        // §6.4 pre-dispatch: destinations of predicted-confident tokens
+        // are known before routing completes; their payloads stream ahead
+        // of the collective. Confidence = predictor top-k accuracy (the
+        // top-half-k hit rate approaches 1, so accuracy is conservative).
+        let pre_dispatch_fraction = if self.cfg.pre_dispatch {
+            self.cfg.predictor_accuracy.clamp(0.0, 1.0)
+        } else {
+            0.0
+        };
+        LayerDecision {
+            placement: out.placement,
+            assignment,
+            prefetch_slots,
+            predict_time: scheduler::predict_time(tokens_per_rank, &self.model, &self.hw),
+            plan_time: scheduler::plan_time(out.iterations, &self.hw),
+            exposed_transfer: 0.0,
+            pre_dispatch_fraction,
+        }
+    }
+}
+
+use super::Balancer;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::balancers::decide_step;
+    use crate::routing::RoutingModel;
+    use crate::simulator::ClusterSim;
+    use crate::util::stats::mean;
+
+    fn setup(acc: f64) -> (Probe, RoutingModel, ClusterSim) {
+        let config = Config::default();
+        let mut cfg = ProbeConfig::default();
+        cfg.predictor_accuracy = acc;
+        let b = Probe::new(&config, cfg, 5);
+        let rm = RoutingModel::calibrated(
+            4,
+            config.model.n_experts,
+            config.model.top_k,
+            3,
+            21,
+        );
+        let sim = ClusterSim::new(config.model.clone(), config.cluster.clone());
+        (b, rm, sim)
+    }
+
+    #[test]
+    fn probe_reduces_ir_vs_static() {
+        let (mut b, mut rm, sim) = setup(0.9);
+        let config = Config::default();
+        let mut stat = crate::balancers::StaticEp::new(&config);
+        let mut ir_probe = Vec::new();
+        let mut ir_static = Vec::new();
+        for step in 0..6 {
+            let routing = rm.route_step(&vec![0u16; 6144]);
+            let dp = decide_step(&mut b, step, &routing);
+            let ds = decide_step(&mut stat, step, &routing);
+            ir_probe.push(sim.run_step(&routing, &dp).mean_ir());
+            ir_static.push(sim.run_step(&routing, &ds).mean_ir());
+        }
+        assert!(
+            mean(&ir_probe) < mean(&ir_static) - 0.1,
+            "IR probe {} vs static {}",
+            mean(&ir_probe),
+            mean(&ir_static)
+        );
+    }
+
+    #[test]
+    fn control_costs_on_aux_track_only() {
+        let (mut b, mut rm, _) = setup(0.9);
+        let routing = rm.route_step(&vec![0u16; 4096]);
+        let ds = decide_step(&mut b, 0, &routing);
+        for d in &ds {
+            assert!(d.predict_time > 0.0 && d.predict_time < 1e-4);
+            assert!(d.plan_time > 0.0 && d.plan_time < 1e-4);
+            assert_eq!(d.exposed_transfer, 0.0);
+        }
+    }
+
+    #[test]
+    fn replica_budget_respected() {
+        let (mut b, mut rm, _) = setup(0.9);
+        for step in 0..3 {
+            let routing = rm.route_step(&vec![0u16; 6144]);
+            for d in decide_step(&mut b, step, &routing) {
+                for r in 0..8 {
+                    assert!(d.placement.slots_used(r) <= b.cfg.max_redundant);
+                }
+                d.placement.validate().unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn assignment_valid_for_actual_routing() {
+        let (mut b, mut rm, _) = setup(0.7);
+        let routing = rm.route_step(&vec![0u16; 2048]);
+        let ds = decide_step(&mut b, 0, &routing);
+        for (lr, d) in routing.layers.iter().zip(&ds) {
+            d.assignment
+                .validate(&lr.expert_counts(), &d.placement)
+                .unwrap();
+        }
+    }
+
+    #[test]
+    fn better_predictor_no_worse_latency() {
+        let (mut hi, mut rm1, sim) = setup(0.95);
+        let (mut lo, _, _) = setup(0.4);
+        let mut t_hi = 0.0;
+        let mut t_lo = 0.0;
+        for step in 0..6 {
+            let routing = rm1.route_step(&vec![0u16; 6144]);
+            t_hi += sim.run_step(&routing, &decide_step(&mut hi, step, &routing)).latency;
+            t_lo += sim.run_step(&routing, &decide_step(&mut lo, step, &routing)).latency;
+        }
+        assert!(
+            t_hi <= t_lo * 1.02,
+            "high-accuracy {t_hi} worse than low-accuracy {t_lo}"
+        );
+    }
+}

@@ -1,0 +1,65 @@
+//! SGLang baseline: static sharded expert placement, no replication, no
+//! control plane. Dispatch follows the ground-truth router; stragglers
+//! are whatever the workload skew produces.
+
+use crate::config::Config;
+use crate::model::MoeModel;
+use crate::placement::Placement;
+use crate::routing::LayerRouting;
+use crate::simulator::LayerDecision;
+
+use super::Balancer;
+
+#[derive(Debug, Clone)]
+pub struct StaticEp {
+    model: MoeModel,
+    ep: usize,
+}
+
+impl StaticEp {
+    pub fn new(cfg: &Config) -> StaticEp {
+        StaticEp {
+            model: cfg.model.clone(),
+            ep: cfg.cluster.ep,
+        }
+    }
+}
+
+impl Balancer for StaticEp {
+    fn name(&self) -> &'static str {
+        "static-ep"
+    }
+
+    fn begin_step(&mut self, _step_idx: usize) {}
+
+    fn decide(&mut self, _layer: usize, actual: &LayerRouting) -> LayerDecision {
+        let placement = Placement::sharded(self.ep, self.model.n_experts, 0);
+        LayerDecision::passthrough(actual, placement)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decisions_have_no_replicas_or_aux() {
+        let cfg = Config::default();
+        let mut b = StaticEp::new(&cfg);
+        let mut rm = crate::routing::RoutingModel::calibrated(
+            1,
+            cfg.model.n_experts,
+            cfg.model.top_k,
+            3,
+            1,
+        );
+        let lr = rm.route_step(&vec![0u16; 256]).layers.remove(0);
+        b.begin_step(0);
+        let d = b.decide(0, &lr);
+        assert_eq!(d.placement.total_replicas(), 0);
+        assert_eq!(d.predict_time, 0.0);
+        assert_eq!(d.plan_time, 0.0);
+        assert!(d.prefetch_slots.iter().all(|&s| s == 0));
+        d.assignment.validate(&lr.expert_counts(), &d.placement).unwrap();
+    }
+}

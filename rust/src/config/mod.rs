@@ -1,0 +1,292 @@
+//! Configuration system: typed experiment/serving configs with presets,
+//! loadable from a TOML-subset file (`probe --config run.toml`).
+//!
+//! Supported TOML subset: `[section]` headers, `key = value` with string,
+//! integer, float, bool, and flat arrays. Comments with `#`.
+
+pub mod toml;
+
+use crate::model::MoeModel;
+use crate::topology::{Cluster, HardwareProfile};
+use crate::workload::Dataset;
+use toml::TomlDoc;
+
+/// Which balancing system runs the MoE layers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BalancerKind {
+    /// SGLang-style static sharded EP (no replication).
+    StaticEp,
+    /// DeepSeek-EPLB: historical-statistics one-shot rebalancing.
+    Eplb,
+    /// PROBE: continuous lookahead pipelining.
+    Probe,
+}
+
+impl BalancerKind {
+    pub fn by_name(s: &str) -> Option<BalancerKind> {
+        match s {
+            "static" | "sglang" => Some(BalancerKind::StaticEp),
+            "eplb" => Some(BalancerKind::Eplb),
+            "probe" => Some(BalancerKind::Probe),
+            _ => None,
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            BalancerKind::StaticEp => "static",
+            BalancerKind::Eplb => "eplb",
+            BalancerKind::Probe => "probe",
+        }
+    }
+}
+
+/// PROBE-specific knobs (paper §4–§5 defaults).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProbeConfig {
+    /// Max redundant experts per rank per layer (paper: 3).
+    pub max_redundant: usize,
+    /// Planner iteration cap k_max (paper: 16).
+    pub k_max: usize,
+    /// Predictor top-k accuracy used by the statistical predictor
+    /// (paper Fig. 10: ≈0.90 distilled, ≈0.75 untrained).
+    pub predictor_accuracy: f64,
+    /// Enforce the hiding-window constraint (ablation switch).
+    pub enforce_window: bool,
+    /// Split-phase transmission around Combine (ablation switch).
+    pub split_phase: bool,
+    /// Use water-filling token reassignment (false = naive half-split).
+    pub water_filling: bool,
+    /// §6.4 extension: pre-dispatch hidden states to high-confidence
+    /// predicted experts, overlapping All-to-All with routing (off by
+    /// default — it is the paper's future-work direction).
+    pub pre_dispatch: bool,
+}
+
+impl Default for ProbeConfig {
+    fn default() -> ProbeConfig {
+        ProbeConfig {
+            max_redundant: 3,
+            k_max: 16,
+            predictor_accuracy: 0.90,
+            enforce_window: true,
+            split_phase: true,
+            water_filling: true,
+            pre_dispatch: false,
+        }
+    }
+}
+
+/// EPLB baseline knobs (paper §6.1: 2 redundant slots, rebalance bounded
+/// to 2 decode steps; warm-up needs ~110 steps of statistics).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EplbConfig {
+    pub redundant_slots: usize,
+    /// Steps of history needed before the first rebalance.
+    pub warmup_steps: usize,
+    /// Steps between rebalances (one-shot = usize::MAX after first).
+    pub rebalance_interval: usize,
+    /// Transfer is amortized over this many steps (paper: 2).
+    pub transfer_steps: usize,
+}
+
+impl Default for EplbConfig {
+    fn default() -> EplbConfig {
+        EplbConfig {
+            redundant_slots: 2,
+            warmup_steps: 110,
+            rebalance_interval: usize::MAX,
+            transfer_steps: 2,
+        }
+    }
+}
+
+/// Full experiment / serving configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub model: MoeModel,
+    pub cluster: Cluster,
+    pub balancer: BalancerKind,
+    pub probe: ProbeConfig,
+    pub eplb: EplbConfig,
+    pub dataset: Dataset,
+    /// Decode tokens per rank per step.
+    pub batch_per_rank: usize,
+    /// Chunked-prefill tokens per rank.
+    pub prefill_chunk_per_rank: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Config {
+        Config {
+            model: MoeModel::gpt_oss_120b(),
+            cluster: Cluster::paper_testbed(),
+            balancer: BalancerKind::Probe,
+            probe: ProbeConfig::default(),
+            eplb: EplbConfig::default(),
+            dataset: Dataset::Mixed,
+            batch_per_rank: 768,
+            prefill_chunk_per_rank: 8192,
+            seed: 0,
+        }
+    }
+}
+
+impl Config {
+    /// Paper defaults for GPT-OSS decoding (Fig. 8/9/11).
+    pub fn paper_decode() -> Config {
+        Config::default()
+    }
+
+    /// Load from a TOML-subset file; unknown keys are rejected so typos
+    /// fail loudly.
+    pub fn from_toml_str(text: &str) -> Result<Config, String> {
+        let doc = TomlDoc::parse(text)?;
+        let mut cfg = Config::default();
+        for (section, key, value) in doc.entries() {
+            let path = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            match path.as_str() {
+                "model.name" => {
+                    cfg.model = MoeModel::by_name(value.as_str().ok_or("model.name: string")?)
+                        .ok_or_else(|| format!("unknown model {value:?}"))?;
+                }
+                "cluster.ep" => {
+                    cfg.cluster.ep = value.as_int().ok_or("cluster.ep: int")? as usize
+                }
+                "cluster.profile" => {
+                    cfg.cluster.profile =
+                        HardwareProfile::by_name(value.as_str().ok_or("cluster.profile: string")?)
+                            .ok_or_else(|| format!("unknown profile {value:?}"))?;
+                }
+                "balancer.kind" => {
+                    cfg.balancer =
+                        BalancerKind::by_name(value.as_str().ok_or("balancer.kind: string")?)
+                            .ok_or_else(|| format!("unknown balancer {value:?}"))?;
+                }
+                "probe.max_redundant" => {
+                    cfg.probe.max_redundant =
+                        value.as_int().ok_or("probe.max_redundant: int")? as usize
+                }
+                "probe.k_max" => {
+                    cfg.probe.k_max = value.as_int().ok_or("probe.k_max: int")? as usize
+                }
+                "probe.predictor_accuracy" => {
+                    cfg.probe.predictor_accuracy =
+                        value.as_float().ok_or("probe.predictor_accuracy: float")?
+                }
+                "probe.enforce_window" => {
+                    cfg.probe.enforce_window = value.as_bool().ok_or("bool")?
+                }
+                "probe.split_phase" => cfg.probe.split_phase = value.as_bool().ok_or("bool")?,
+                "probe.water_filling" => {
+                    cfg.probe.water_filling = value.as_bool().ok_or("bool")?
+                }
+                "probe.pre_dispatch" => {
+                    cfg.probe.pre_dispatch = value.as_bool().ok_or("bool")?
+                }
+                "eplb.redundant_slots" => {
+                    cfg.eplb.redundant_slots = value.as_int().ok_or("int")? as usize
+                }
+                "eplb.warmup_steps" => {
+                    cfg.eplb.warmup_steps = value.as_int().ok_or("int")? as usize
+                }
+                "eplb.rebalance_interval" => {
+                    cfg.eplb.rebalance_interval = value.as_int().ok_or("int")? as usize
+                }
+                "eplb.transfer_steps" => {
+                    cfg.eplb.transfer_steps = value.as_int().ok_or("int")? as usize
+                }
+                "workload.dataset" => {
+                    cfg.dataset = Dataset::by_name(value.as_str().ok_or("string")?)
+                        .ok_or_else(|| format!("unknown dataset {value:?}"))?;
+                }
+                "workload.batch_per_rank" => {
+                    cfg.batch_per_rank = value.as_int().ok_or("int")? as usize
+                }
+                "workload.prefill_chunk_per_rank" => {
+                    cfg.prefill_chunk_per_rank = value.as_int().ok_or("int")? as usize
+                }
+                "seed" => cfg.seed = value.as_int().ok_or("int")? as u64,
+                other => return Err(format!("unknown config key: {other}")),
+            }
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_toml_file(path: &str) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Config::from_toml_str(&text)
+    }
+
+    /// Global decode batch (tokens per step across ranks).
+    pub fn global_batch(&self) -> usize {
+        self.batch_per_rank * self.cluster.ep
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_paper_testbed() {
+        let c = Config::default();
+        assert_eq!(c.cluster.ep, 8);
+        assert_eq!(c.model.name, "gpt-oss-120b");
+        assert_eq!(c.probe.max_redundant, 3);
+        assert_eq!(c.probe.k_max, 16);
+        assert_eq!(c.global_batch(), 768 * 8);
+    }
+
+    #[test]
+    fn parse_full_config() {
+        let text = r#"
+seed = 42
+[model]
+name = "qwen3-235b"
+[cluster]
+ep = 4
+profile = "hopper-lowbw"
+[balancer]
+kind = "eplb"
+[probe]
+max_redundant = 2
+predictor_accuracy = 0.8
+split_phase = false
+[eplb]
+redundant_slots = 1
+[workload]
+dataset = "repeat"
+batch_per_rank = 512
+"#;
+        let c = Config::from_toml_str(text).unwrap();
+        assert_eq!(c.seed, 42);
+        assert_eq!(c.model.name, "qwen3-235b");
+        assert_eq!(c.cluster.ep, 4);
+        assert_eq!(c.cluster.profile.name, "hopper-lowbw");
+        assert_eq!(c.balancer, BalancerKind::Eplb);
+        assert_eq!(c.probe.max_redundant, 2);
+        assert!(!c.probe.split_phase);
+        assert_eq!(c.eplb.redundant_slots, 1);
+        assert_eq!(c.dataset, Dataset::Repeat);
+        assert_eq!(c.batch_per_rank, 512);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(Config::from_toml_str("[model]\nnam = \"x\"\n").is_err());
+        assert!(Config::from_toml_str("[model]\nname = \"not-a-model\"\n").is_err());
+    }
+
+    #[test]
+    fn balancer_names() {
+        assert_eq!(BalancerKind::by_name("sglang"), Some(BalancerKind::StaticEp));
+        for k in [BalancerKind::StaticEp, BalancerKind::Eplb, BalancerKind::Probe] {
+            assert_eq!(BalancerKind::by_name(k.name()), Some(k));
+        }
+    }
+}

@@ -1,0 +1,213 @@
+//! TOML-subset parser for config files (no `toml` crate offline).
+//!
+//! Supports: `[section]` headers, `key = value` pairs, `#` comments,
+//! string / integer / float / boolean / flat array values.
+
+/// A parsed scalar (or flat array) value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(x) => Some(*x),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(x) => Some(*x),
+            TomlValue::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Flat document: ordered (section, key, value) triples.
+#[derive(Debug, Clone, Default)]
+pub struct TomlDoc {
+    entries: Vec<(String, String, TomlValue)>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc, String> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated section", lineno + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let value = parse_value(value.trim())
+                .map_err(|e| format!("line {}: {}", lineno + 1, e))?;
+            doc.entries
+                .push((section.clone(), key.trim().to_string(), value));
+        }
+        Ok(doc)
+    }
+
+    pub fn entries(&self) -> impl Iterator<Item = (&str, &str, &TomlValue)> {
+        self.entries
+            .iter()
+            .map(|(s, k, v)| (s.as_str(), k.as_str(), v))
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.entries
+            .iter()
+            .find(|(s, k, _)| s == section && k == key)
+            .map(|(_, _, v)| v)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(Vec::new()));
+        }
+        let items: Result<Vec<_>, _> =
+            split_top_level(inner).iter().map(|p| parse_value(p.trim())).collect();
+        return Ok(TomlValue::Array(items?));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value: {s:?}"))
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    // split on commas not inside quotes (flat arrays only)
+    let mut out = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = TomlDoc::parse(
+            r#"
+top = 1
+[a]
+s = "hi"       # comment
+i = -3
+f = 2.5
+b = true
+arr = [1, 2, 3]
+[b]
+s = "x # not comment"
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "top"), Some(&TomlValue::Int(1)));
+        assert_eq!(doc.get("a", "s").unwrap().as_str(), Some("hi"));
+        assert_eq!(doc.get("a", "i").unwrap().as_int(), Some(-3));
+        assert_eq!(doc.get("a", "f").unwrap().as_float(), Some(2.5));
+        assert_eq!(doc.get("a", "b").unwrap().as_bool(), Some(true));
+        assert_eq!(
+            doc.get("a", "arr"),
+            Some(&TomlValue::Array(vec![
+                TomlValue::Int(1),
+                TomlValue::Int(2),
+                TomlValue::Int(3)
+            ]))
+        );
+        assert_eq!(doc.get("b", "s").unwrap().as_str(), Some("x # not comment"));
+    }
+
+    #[test]
+    fn int_coerces_to_float() {
+        assert_eq!(parse_value("3").unwrap().as_float(), Some(3.0));
+    }
+
+    #[test]
+    fn errors_are_line_tagged() {
+        let err = TomlDoc::parse("ok = 1\nbad line\n").unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+        assert!(TomlDoc::parse("[unterminated\n").is_err());
+        assert!(TomlDoc::parse("k = \"open\n").is_err());
+    }
+
+    #[test]
+    fn escaped_quotes_in_strings() {
+        let v = parse_value(r#""a\"b""#).unwrap();
+        assert_eq!(v.as_str(), Some("a\"b"));
+    }
+}

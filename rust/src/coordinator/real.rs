@@ -1,0 +1,402 @@
+//! Real-model serving: continuous batching over the PJRT engine.
+//!
+//! Serves the small MoE transformer built by `python/compile` — real
+//! prefill chunks, real decode steps, greedy sampling, KV-cache slot
+//! management — and feeds the *real* router traces into the PROBE
+//! metrics/balancer stack (IR tracking, predictor fidelity, planner
+//! decisions over the virtual EP cluster). This is the mandated
+//! end-to-end driver's engine (`examples/e2e_serving.rs`).
+
+use std::collections::VecDeque;
+
+use anyhow::Result;
+
+use crate::metrics::{IrTracker, RequestMetrics, ServingMetrics};
+use crate::predictor::{fidelity, PredFidelity};
+use crate::routing::LayerRouting;
+use crate::runtime::{predictions_from_decode, priors_from_decode, routing_from_decode, Engine};
+use crate::util::Rng;
+use crate::workload::Request;
+
+/// A decode slot holding one active sequence.
+#[derive(Debug, Clone)]
+struct Slot {
+    req_id: u64,
+    midx: usize,
+    pos: usize,
+    decoded: usize,
+    budget: usize,
+    last_token: i32,
+}
+
+/// Per-layer accumulated predictor fidelity (Fig. 10 measured from rust).
+#[derive(Debug, Clone, Default)]
+pub struct FidelityAccum {
+    pub trained: Vec<PredFidelity>,
+    pub prior: Vec<PredFidelity>,
+    pub samples: usize,
+}
+
+/// Continuous-batching server over the real model.
+pub struct RealCoordinator {
+    pub engine: Engine,
+    batch: usize,
+    kv: Vec<f32>,
+    slots: Vec<Option<Slot>>,
+    queue: VecDeque<(Request, Vec<i32>)>,
+    pub metrics: ServingMetrics,
+    pub ir: IrTracker,
+    pub fidelity: FidelityAccum,
+    /// Virtual EP size used for IR accounting of the real router traces.
+    pub virtual_ep: usize,
+    start: std::time::Instant,
+    rng: Rng,
+}
+
+impl RealCoordinator {
+    pub fn new(engine: Engine, virtual_ep: usize, seed: u64) -> RealCoordinator {
+        let batch = engine.pick_batch(8);
+        let kv = vec![0.0; engine.cfg().kv_len(batch)];
+        let n_layers = engine.cfg().n_layers;
+        RealCoordinator {
+            engine,
+            batch,
+            kv,
+            slots: (0..batch).map(|_| None).collect(),
+            queue: VecDeque::new(),
+            metrics: ServingMetrics::default(),
+            ir: IrTracker::new(),
+            fidelity: FidelityAccum {
+                trained: vec![PredFidelity::default(); n_layers],
+                prior: vec![PredFidelity::default(); n_layers],
+                samples: 0,
+            },
+            virtual_ep,
+            start: std::time::Instant::now(),
+            rng: Rng::new(seed),
+        }
+    }
+
+    fn now(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Submit a request with its prompt tokens.
+    pub fn submit(&mut self, req: Request, prompt: Vec<i32>) {
+        self.metrics.requests.push(RequestMetrics {
+            id: req.id,
+            arrival: self.now(),
+            ..Default::default()
+        });
+        self.queue.push_back((req, prompt));
+    }
+
+    /// Sample prompt tokens for a request. Uses the exact per-domain
+    /// distributions the build's distillation corpus used
+    /// (`artifacts/domain_dists.json`) so live routing matches the
+    /// predictor's training distribution; falls back to a domain-
+    /// permuted Zipf when absent.
+    pub fn synth_prompt(&mut self, domain: u16, len: usize) -> Vec<i32> {
+        if let Some(dist) = self.engine.domain_dist(domain) {
+            let dist = dist.to_vec();
+            return (0..len)
+                .map(|_| self.rng.next_weighted(&dist) as i32)
+                .collect();
+        }
+        let vocab = self.engine.cfg().vocab;
+        let mut w = Rng::zipf_weights(vocab, 1.1);
+        // per-domain deterministic permutation
+        let mut perm_rng = Rng::new(0xD0_u64 + domain as u64);
+        perm_rng.shuffle(&mut w);
+        (0..len)
+            .map(|_| self.rng.next_weighted(&w) as i32)
+            .collect()
+    }
+
+    fn free_slots(&self) -> Vec<usize> {
+        (0..self.batch).filter(|&i| self.slots[i].is_none()).collect()
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.batch - self.free_slots().len()
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Admit queued requests into free slots via real chunked prefill.
+    /// The prefill artifact runs `[Bp, S]`; each prefilled sequence's KV
+    /// rows are migrated into the decode cache slot.
+    pub fn admit(&mut self) -> Result<usize> {
+        let cfg = self.engine.cfg().clone();
+        let mut admitted = 0;
+        loop {
+            let free = self.free_slots();
+            if free.is_empty() || self.queue.is_empty() {
+                break;
+            }
+            let take = free.len().min(cfg.prefill_batch).min(self.queue.len());
+            let group: Vec<(Request, Vec<i32>)> =
+                (0..take).map(|_| self.queue.pop_front().unwrap()).collect();
+            // chunked prefill over the longest prompt in the group
+            let longest = group.iter().map(|(_, p)| p.len()).max().unwrap_or(0);
+            let mut pkv = vec![0.0f32; cfg.kv_len(cfg.prefill_batch)];
+            let mut start = 0usize;
+            let mut last_logits: Vec<f32> = Vec::new();
+            while start < longest {
+                let s = cfg.prefill_chunk;
+                let mut tokens = vec![0i32; cfg.prefill_batch * s];
+                for (bi, (_, prompt)) in group.iter().enumerate() {
+                    for j in 0..s {
+                        let p = start + j;
+                        tokens[bi * s + j] = if p < prompt.len() { prompt[p] } else { 0 };
+                    }
+                }
+                let start_pos = vec![start as i32; cfg.prefill_batch];
+                let out = self.engine.prefill_chunk(&tokens, &start_pos, &mut pkv)?;
+                last_logits = out.logits_last.clone();
+                // IR accounting from the real prefill routing
+                self.track_prefill_ir(&out.actual_idx, cfg.n_layers, cfg.prefill_batch, s, cfg.top_k, cfg.n_experts);
+                start += s;
+            }
+            // migrate each prefilled sequence into a decode slot
+            let t_first = self.now();
+            for (bi, (req, prompt)) in group.into_iter().enumerate() {
+                let slot = self.free_slots()[0];
+                self.migrate_kv(&pkv, bi, slot, prompt.len());
+                let midx = self
+                    .metrics
+                    .requests
+                    .iter()
+                    .position(|m| m.id == req.id)
+                    .expect("submitted");
+                self.metrics.requests[midx].first_token = Some(t_first);
+                let first_tok = if last_logits.is_empty() {
+                    0
+                } else {
+                    argmax(&last_logits[bi * cfg.vocab..(bi + 1) * cfg.vocab]) as i32
+                };
+                self.slots[slot] = Some(Slot {
+                    req_id: req.id,
+                    midx,
+                    pos: prompt.len(),
+                    decoded: 1,
+                    budget: req.max_new_tokens.max(1).min(cfg.max_seq - prompt.len() - 1),
+                    last_token: first_tok,
+                });
+                admitted += 1;
+            }
+        }
+        Ok(admitted)
+    }
+
+    fn track_prefill_ir(
+        &mut self,
+        actual_idx: &[i32],
+        n_layers: usize,
+        b: usize,
+        s: usize,
+        k: usize,
+        n_experts: usize,
+    ) {
+        let per_rank_experts = n_experts.div_ceil(self.virtual_ep);
+        for l in 0..n_layers {
+            let mut loads = vec![0.0f64; self.virtual_ep];
+            let base = l * b * s * k;
+            for &e in &actual_idx[base..base + b * s * k] {
+                if e >= 0 {
+                    loads[(e as usize / per_rank_experts).min(self.virtual_ep - 1)] += 1.0;
+                }
+            }
+            self.ir.push_loads(&loads);
+        }
+    }
+
+    /// Copy sequence `src` of the prefill KV into decode slot `dst`.
+    fn migrate_kv(&mut self, pkv: &[f32], src: usize, dst: usize, used_len: usize) {
+        let cfg = self.engine.cfg();
+        let (l_n, s_max, h) = (cfg.n_layers, cfg.max_seq, cfg.d_model);
+        let pb = cfg.prefill_batch;
+        let db = self.batch;
+        let rows = used_len.min(s_max) * h;
+        for l in 0..l_n {
+            for kvh in 0..2 {
+                let src_off = (((l * 2 + kvh) * pb) + src) * s_max * h;
+                let dst_off = (((l * 2 + kvh) * db) + dst) * s_max * h;
+                self.kv[dst_off..dst_off + rows].copy_from_slice(&pkv[src_off..src_off + rows]);
+                // zero the tail (stale rows from a previous occupant)
+                self.kv[dst_off + rows..dst_off + s_max * h].fill(0.0);
+            }
+        }
+    }
+
+    /// One real decode step over all active slots. Returns (#active,
+    /// step wall-clock) or None when idle.
+    pub fn decode_step(&mut self) -> Result<Option<(usize, f64)>> {
+        let cfg = self.engine.cfg().clone();
+        let active: Vec<usize> = (0..self.batch).filter(|&i| self.slots[i].is_some()).collect();
+        if active.is_empty() {
+            return Ok(None);
+        }
+        let mut tokens = vec![0i32; self.batch];
+        let mut pos = vec![0i32; self.batch];
+        for i in 0..self.batch {
+            if let Some(slot) = &self.slots[i] {
+                tokens[i] = slot.last_token;
+                pos[i] = slot.pos as i32;
+            }
+        }
+        let out = self
+            .engine
+            .decode_step(self.batch, &tokens, &pos, &mut self.kv)?;
+
+        // --- metrics from the REAL router ---
+        let routing = routing_from_decode(&out, &cfg);
+        let per_rank_experts = cfg.n_experts.div_ceil(self.virtual_ep);
+        for lr in &routing {
+            let counts = lr.expert_counts();
+            let loads: Vec<f64> = (0..self.virtual_ep)
+                .map(|r| {
+                    counts[r * per_rank_experts..(r + 1) * per_rank_experts]
+                        .iter()
+                        .sum::<u32>() as f64
+                })
+                .collect();
+            self.ir.push_loads(&loads);
+        }
+        let preds = predictions_from_decode(&out, &cfg);
+        let priors = priors_from_decode(&out, &cfg);
+        for (l, (p, pr)) in preds.iter().zip(priors.iter()).enumerate() {
+            if let (Some(p), Some(pr)) = (p, pr) {
+                accum(&mut self.fidelity.trained[l], &fidelity(&routing[l], p));
+                accum(&mut self.fidelity.prior[l], &fidelity(&routing[l], pr));
+            }
+        }
+        self.fidelity.samples += 1;
+
+        // --- sampling + slot bookkeeping ---
+        let now = self.now();
+        let mut n_active = 0;
+        for i in 0..self.batch {
+            let Some(slot) = &mut self.slots[i] else { continue };
+            n_active += 1;
+            let logits = &out.logits[i * cfg.vocab..(i + 1) * cfg.vocab];
+            slot.last_token = argmax(logits) as i32;
+            slot.pos += 1;
+            slot.decoded += 1;
+            let done = slot.decoded >= slot.budget || slot.pos + 1 >= cfg.max_seq;
+            if done {
+                let midx = slot.midx;
+                let decoded = slot.decoded;
+                self.metrics.requests[midx].finished = Some(now);
+                self.metrics.requests[midx].tokens_out = decoded;
+                self.slots[i] = None;
+            }
+        }
+        self.metrics.step_tokens.push((now, n_active));
+        Ok(Some((n_active, out.exec_time)))
+    }
+
+    /// Serve until all submitted requests finish (admitting continuously).
+    pub fn run_to_completion(&mut self, max_steps: usize) -> Result<usize> {
+        let mut steps = 0;
+        while steps < max_steps {
+            self.admit()?;
+            match self.decode_step()? {
+                Some(_) => steps += 1,
+                None => {
+                    if self.queue.is_empty() {
+                        break;
+                    }
+                }
+            }
+        }
+        Ok(steps)
+    }
+
+    /// Mean per-layer predictor fidelity accumulated so far.
+    pub fn fidelity_report(&self) -> Vec<(usize, f64, f64)> {
+        (1..self.engine.cfg().n_layers)
+            .map(|l| {
+                let t = &self.fidelity.trained[l];
+                let p = &self.fidelity.prior[l];
+                (l, t.top_k_accuracy, p.top_k_accuracy)
+            })
+            .collect()
+    }
+}
+
+fn accum(into: &mut PredFidelity, f: &PredFidelity) {
+    // running mean weighted by token counts
+    let n0 = into.n_tokens as f64;
+    let n1 = f.n_tokens as f64;
+    if n0 + n1 == 0.0 {
+        return;
+    }
+    into.top_k_accuracy = (into.top_k_accuracy * n0 + f.top_k_accuracy * n1) / (n0 + n1);
+    into.top_half_k_hit_rate =
+        (into.top_half_k_hit_rate * n0 + f.top_half_k_hit_rate * n1) / (n0 + n1);
+    into.n_tokens += f.n_tokens;
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Routing layers joined across decode steps (used by Fig. 2 small-real
+/// traces and tests).
+pub fn ir_of_layers(layers: &[LayerRouting], ep: usize) -> Vec<f64> {
+    layers
+        .iter()
+        .map(|lr| {
+            let per = lr.n_experts.div_ceil(ep);
+            let counts = lr.expert_counts();
+            let loads: Vec<f64> = (0..ep)
+                .map(|r| counts[r * per..((r + 1) * per).min(counts.len())].iter().sum::<u32>() as f64)
+                .collect();
+            crate::util::stats::imbalance_ratio(&loads)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basics() {
+        assert_eq!(argmax(&[0.1, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[-1.0]), 0);
+    }
+
+    #[test]
+    fn accum_weighted_mean() {
+        let mut a = PredFidelity::default();
+        accum(
+            &mut a,
+            &PredFidelity {
+                top_k_accuracy: 1.0,
+                top_half_k_hit_rate: 1.0,
+                n_tokens: 10,
+            },
+        );
+        accum(
+            &mut a,
+            &PredFidelity {
+                top_k_accuracy: 0.0,
+                top_half_k_hit_rate: 0.5,
+                n_tokens: 10,
+            },
+        );
+        assert!((a.top_k_accuracy - 0.5).abs() < 1e-12);
+        assert!((a.top_half_k_hit_rate - 0.75).abs() < 1e-12);
+        assert_eq!(a.n_tokens, 20);
+    }
+}

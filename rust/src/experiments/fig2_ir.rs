@@ -1,0 +1,152 @@
+//! Fig. 2: expert activation imbalance across prefill and decoding.
+//!
+//! (a,b) prefill: single-dataset bursts at ≈32K tokens — IR spikes above
+//! 2.6 when a new dataset is injected. (c,d) decoding: mixed continuous
+//! batching at ≈8K tokens — IR fluctuates in the 1.43–2.28 band and
+//! shifts with semantic transitions. GPT-OSS (top-4) vs Qwen3 (top-8)
+//! shows sparsity modulating severity.
+
+use crate::routing::RoutingModel;
+use crate::util::bench::BenchSet;
+use crate::util::stats::{imbalance_ratio, Summary};
+use crate::util::Rng;
+use crate::workload::Dataset;
+
+pub struct Fig2Params {
+    pub prefill_tokens: usize,
+    pub decode_tokens: usize,
+    pub steps: usize,
+    pub ep: usize,
+    pub seed: u64,
+}
+
+impl Default for Fig2Params {
+    fn default() -> Self {
+        Fig2Params {
+            prefill_tokens: 32 * 1024,
+            decode_tokens: 8 * 1024,
+            steps: 60,
+            ep: 8,
+            seed: 42,
+        }
+    }
+}
+
+fn ir_series(
+    model_name: &str,
+    n_experts: usize,
+    top_k: usize,
+    tokens: usize,
+    steps: usize,
+    ep: usize,
+    prefill: bool,
+    seed: u64,
+) -> Vec<f64> {
+    let n_domains = 4;
+    let mut rm = RoutingModel::calibrated(1, n_experts, top_k, n_domains, seed);
+    let mut rng = Rng::new(seed ^ 0xF16_2);
+    let per_rank = n_experts / ep;
+    let mut series = Vec::with_capacity(steps);
+    let mut dataset = Dataset::Chinese;
+    let _ = model_name;
+    for step in 0..steps {
+        // prefill: whole batch from ONE dataset; a new dataset is
+        // injected every ~12 steps (prompt-burst semantics).
+        // decode: mixed continuous batch with gradual drift.
+        let domains: Vec<u16> = if prefill {
+            if step % 12 == 0 {
+                // inject a new concentrated dataset (the paper's bursts
+                // come from prompt-set injections, not mixed background)
+                dataset = *[Dataset::Chinese, Dataset::Code, Dataset::Repeat]
+                    .iter()
+                    .nth(rng.next_usize(3))
+                    .unwrap();
+            }
+            let w = dataset.domain_weights(n_domains);
+            (0..tokens).map(|_| rng.next_weighted(&w) as u16).collect()
+        } else {
+            (0..tokens).map(|_| rng.next_usize(n_domains) as u16).collect()
+        };
+        let routing = rm.route_step(&domains);
+        let counts = routing.layers[0].expert_counts();
+        let loads: Vec<f64> = (0..ep)
+            .map(|r| counts[r * per_rank..(r + 1) * per_rank].iter().sum::<u32>() as f64)
+            .collect();
+        series.push(imbalance_ratio(&loads));
+        rm.step_drift();
+    }
+    series
+}
+
+pub fn run(p: &Fig2Params) -> BenchSet {
+    let mut b = BenchSet::new(
+        "fig2_ir_traces",
+        &[
+            "model", "phase", "tokens", "IR_mean", "IR_p50", "IR_max",
+            "spikes>2.6", "band",
+        ],
+    );
+    for (name, experts, k) in [("gpt-oss-120b", 128, 4), ("qwen3-235b", 128, 8)] {
+        for (phase, tokens, prefill) in [
+            ("prefill", p.prefill_tokens, true),
+            ("decode", p.decode_tokens, false),
+        ] {
+            let series = ir_series(name, experts, k, tokens, p.steps, p.ep, prefill, p.seed);
+            let s = Summary::of(&series);
+            let spikes = series.iter().filter(|&&x| x > 2.6).count();
+            b.row(&[
+                name.into(),
+                phase.into(),
+                tokens.to_string(),
+                format!("{:.2}", s.mean),
+                format!("{:.2}", s.p50),
+                format!("{:.2}", s.max),
+                spikes.to_string(),
+                format!("{:.2}-{:.2}", s.min, s.max),
+            ]);
+        }
+    }
+    b.note("paper: prefill spikes >2.6 at ~32K tokens; decode IR 1.43-2.28 at ~8K");
+    b.note("paper: sparser GPT-OSS (top-4) skews harder than Qwen3 (top-8)");
+    b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_matches_paper_bands() {
+        let p = Fig2Params {
+            steps: 40,
+            ..Default::default()
+        };
+        let b = run(&p);
+        assert_eq!(b.rows.len(), 4);
+        // prefill rows must spike above 2.6 at least once
+        let gpt_prefill = &b.rows[0];
+        assert!(gpt_prefill[6].parse::<usize>().unwrap() >= 1, "{gpt_prefill:?}");
+        // decode mean IR within a generous paper band
+        let gpt_decode = &b.rows[1];
+        let mean: f64 = gpt_decode[3].parse().unwrap();
+        assert!(mean > 1.15 && mean < 2.6, "decode mean IR {mean}");
+    }
+
+    #[test]
+    fn sparser_model_skews_harder() {
+        // statistical effect: average decode IR over several seeds
+        let mean_ir = |k: usize, seed: u64| -> f64 {
+            let series = ir_series("m", 128, k, 8192, 30, 8, false, seed);
+            crate::util::stats::mean(&series)
+        };
+        let seeds = [41u64, 42, 43, 44, 45];
+        let gpt: f64 =
+            seeds.iter().map(|&s| mean_ir(4, s)).sum::<f64>() / seeds.len() as f64;
+        let qwen: f64 =
+            seeds.iter().map(|&s| mean_ir(8, s)).sum::<f64>() / seeds.len() as f64;
+        assert!(
+            gpt > qwen - 0.02,
+            "top-4 ({gpt:.3}) should skew at least as hard as top-8 ({qwen:.3})"
+        );
+    }
+}

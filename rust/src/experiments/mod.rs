@@ -1,0 +1,58 @@
+//! Experiment harnesses: one module per paper table/figure.
+//!
+//! Each `run_*` regenerates the corresponding figure's rows (same series,
+//! simulator-scale numbers) as a [`BenchSet`], shared by the `cargo
+//! bench` targets and the `probe bench` CLI. See DESIGN.md for the
+//! per-experiment index and EXPERIMENTS.md for recorded results.
+//!
+//! Simulation-scale note: paper-scale models have 36–93 MoE layers; the
+//! layers are statistically exchangeable in the routing model, so
+//! experiments simulate `SIM_LAYERS` representative layers and scale
+//! per-step latency by `n_layers / SIM_LAYERS` (recorded in every table's
+//! notes).
+
+pub mod ablations;
+pub mod fig10_fidelity;
+pub mod fig11_timeline;
+pub mod fig2_ir;
+pub mod fig3_compute;
+pub mod fig5_alltoall;
+pub mod fig7_prefill;
+pub mod fig8_pareto;
+pub mod fig9_shift;
+
+/// Representative MoE layers simulated per step (see module docs).
+pub const SIM_LAYERS: usize = 6;
+
+use crate::balancers::{Balancer, Eplb, Probe, StaticEp};
+use crate::config::{BalancerKind, Config, EplbConfig, ProbeConfig};
+
+/// Instantiate a balancer by kind with the experiment's config.
+pub fn make_balancer(kind: BalancerKind, cfg: &Config, seed: u64) -> Box<dyn Balancer> {
+    match kind {
+        BalancerKind::StaticEp => Box::new(StaticEp::new(cfg)),
+        BalancerKind::Eplb => Box::new(Eplb::new(cfg, cfg.eplb.clone())),
+        BalancerKind::Probe => Box::new(Probe::new(cfg, cfg.probe.clone(), seed)),
+    }
+}
+
+/// Scale a simulated per-step latency from `SIM_LAYERS` to the model's
+/// real depth.
+pub fn layer_scale(cfg: &Config) -> f64 {
+    cfg.model.n_layers as f64 / SIM_LAYERS as f64
+}
+
+/// Build an experiment config with the simulated layer count.
+pub fn sim_config(model_name: &str) -> Config {
+    let mut cfg = Config::default();
+    cfg.model = crate::model::MoeModel::by_name(model_name).expect("model preset");
+    cfg
+}
+
+/// Default EPLB/probe knobs shared by experiments (paper §6.1).
+pub fn experiment_probe_cfg() -> ProbeConfig {
+    ProbeConfig::default()
+}
+pub fn experiment_eplb_cfg() -> EplbConfig {
+    EplbConfig::default()
+}

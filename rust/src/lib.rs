@@ -1,0 +1,32 @@
+//! PROBE: co-balancing computation and communication in MoE inference via
+//! real-time predictive prefetching.
+//!
+//! Reproduction of the CS.DC 2026 paper. Three-layer architecture:
+//! - Layer 3 (this crate): rust serving coordinator — continuous batching,
+//!   expert-parallel cluster simulation, lookahead prediction, balance
+//!   planning (Algorithm 1), phase-locked co-scheduling.
+//! - Layer 2: JAX MoE model (build-time python, `python/compile/model.py`),
+//!   AOT-lowered to HLO text artifacts loaded by [`runtime`].
+//! - Layer 1: Pallas grouped-GEMM expert kernel
+//!   (`python/compile/kernels/`), lowered into the same HLO.
+//!
+//! See DESIGN.md for the system inventory and the per-experiment index.
+
+pub mod balancers;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod metrics;
+pub mod model;
+pub mod perfmodel;
+pub mod placement;
+pub mod planner;
+pub mod predictor;
+pub mod routing;
+pub mod runtime;
+pub mod scheduler;
+pub mod server;
+pub mod simulator;
+pub mod topology;
+pub mod util;
+pub mod workload;

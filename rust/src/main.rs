@@ -1,0 +1,259 @@
+//! `probe` — leader entrypoint and CLI.
+//!
+//! Subcommands:
+//!   serve     — serve the real small model via PJRT (needs `make artifacts`)
+//!   simulate  — run a paper-scale decode simulation and print metrics
+//!   prefill   — prefill latency measurement (Fig. 7 single point)
+//!   bench     — regenerate a paper figure: `probe bench fig8 [--steps N]`
+//!   ablate    — PROBE design-choice ablations (DESIGN.md list)
+//!   info      — print presets and artifact status
+
+use probe::config::{BalancerKind, Config};
+use probe::coordinator::real::RealCoordinator;
+use probe::coordinator::Coordinator;
+use probe::experiments as exp;
+use probe::runtime::Engine;
+use probe::util::cli::Args;
+use probe::workload::{Dataset, RequestGenerator, WorkloadSpec};
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let code = match cmd {
+        "serve" => cmd_serve(&args),
+        "simulate" => cmd_simulate(&args),
+        "prefill" => cmd_prefill(&args),
+        "bench" => cmd_bench(&args),
+        "ablate" => cmd_ablate(&args),
+        "info" => cmd_info(&args),
+        _ => {
+            print_help();
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "probe — MoE inference with real-time predictive prefetching\n\
+         \n\
+         USAGE: probe <command> [options]\n\
+         \n\
+         COMMANDS:\n\
+           serve     --requests N --max-steps N --artifacts DIR\n\
+           simulate  --balancer static|eplb|probe --dataset D --steps N\n\
+                     --batch-per-rank N --model M [--config FILE]\n\
+           prefill   --balancer B --tokens N --model M\n\
+           bench     fig2|fig3|fig5|fig7|fig8|fig9|fig10|fig11|all [--steps N]\n\
+           ablate    [--steps N]\n\
+           info\n"
+    );
+}
+
+fn load_config(args: &Args) -> Config {
+    let mut cfg = match args.get("config") {
+        Some(path) => Config::from_toml_file(path).unwrap_or_else(|e| {
+            eprintln!("config error: {e}");
+            std::process::exit(2);
+        }),
+        None => Config::default(),
+    };
+    if let Some(m) = args.get("model") {
+        cfg.model = probe::model::MoeModel::by_name(m).unwrap_or_else(|| {
+            eprintln!("unknown model {m}");
+            std::process::exit(2);
+        });
+    }
+    if let Some(b) = args.get("balancer") {
+        cfg.balancer = BalancerKind::by_name(b).unwrap_or_else(|| {
+            eprintln!("unknown balancer {b}");
+            std::process::exit(2);
+        });
+    }
+    if let Some(d) = args.get("dataset") {
+        cfg.dataset = Dataset::by_name(d).unwrap_or_else(|| {
+            eprintln!("unknown dataset {d}");
+            std::process::exit(2);
+        });
+    }
+    cfg.batch_per_rank = args.get_usize("batch-per-rank", cfg.batch_per_rank);
+    cfg.seed = args.get_u64("seed", cfg.seed);
+    cfg
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let dir = args.get_or("artifacts", "artifacts");
+    let n_requests = args.get_usize("requests", 16);
+    let max_steps = args.get_usize("max-steps", 2000);
+    let engine = match Engine::load(dir) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("failed to load artifacts: {e:#}");
+            return 1;
+        }
+    };
+    println!(
+        "loaded small-real model: {} params, decode batches {:?}",
+        engine.n_params(),
+        engine.decode_batches()
+    );
+    let mut coord = RealCoordinator::new(engine, 8, args.get_u64("seed", 0));
+    let mut rng = probe::util::Rng::new(7);
+    for i in 0..n_requests {
+        let domain = (i % 4) as u16;
+        let plen = 8 + rng.next_usize(24);
+        let prompt = coord.synth_prompt(domain, plen);
+        let req = probe::workload::Request {
+            id: i as u64,
+            domain,
+            dataset: Dataset::Mixed,
+            prompt_len: plen,
+            max_new_tokens: 16 + rng.next_usize(32),
+            arrival: 0.0,
+        };
+        coord.submit(req, prompt);
+    }
+    let steps = match coord.run_to_completion(max_steps) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("serving failed: {e:#}");
+            return 1;
+        }
+    };
+    let ttft = coord.metrics.ttft_summary();
+    let tpot = coord.metrics.tpot_summary();
+    println!(
+        "served {} requests in {} steps | throughput {:.1} tok/s | \
+         TTFT p50 {:.1}ms p99 {:.1}ms | TPOT p50 {:.2}ms | mean IR(ep=8) {:.2}",
+        coord
+            .metrics
+            .requests
+            .iter()
+            .filter(|m| m.finished.is_some())
+            .count(),
+        steps,
+        coord.metrics.throughput(),
+        ttft.p50 * 1e3,
+        ttft.p99 * 1e3,
+        tpot.p50 * 1e3,
+        coord.ir.mean(),
+    );
+    for (l, trained, prior) in coord.fidelity_report() {
+        println!("  predictor layer {l}: trained {trained:.3} vs prior {prior:.3}");
+    }
+    0
+}
+
+fn cmd_simulate(args: &Args) -> i32 {
+    let cfg = load_config(args);
+    let steps = args.get_usize("steps", 100);
+    let bal = exp::make_balancer(cfg.balancer, &cfg, cfg.seed);
+    println!(
+        "simulate: model={} ep={} balancer={} dataset={} batch/rank={} steps={steps}",
+        cfg.model.name,
+        cfg.cluster.ep,
+        cfg.balancer.name(),
+        cfg.dataset.name(),
+        cfg.batch_per_rank
+    );
+    let dataset = cfg.dataset;
+    let mut c = Coordinator::new(cfg.clone(), bal, cfg.seed);
+    let mut spec = WorkloadSpec::new(dataset, 4);
+    spec.mean_prompt_len = 16;
+    spec.mean_new_tokens = steps * 2;
+    let mut g = RequestGenerator::new(spec, cfg.seed ^ 1);
+    for r in g.take(cfg.global_batch() + 32) {
+        c.submit(r);
+    }
+    let outs = c.run_decode_steps(steps);
+    let lat: Vec<f64> = outs.iter().map(|o| o.latency).collect();
+    let irs: Vec<f64> = outs.iter().map(|o| o.mean_ir()).collect();
+    println!(
+        "steps {} | mean step latency {:.2}ms | mean IR {:.2} | max IR {:.2} | throughput {:.0} tok/s",
+        outs.len(),
+        probe::util::stats::mean(&lat) * 1e3,
+        probe::util::stats::mean(&irs),
+        probe::util::stats::max(&irs),
+        c.metrics.throughput(),
+    );
+    0
+}
+
+fn cmd_prefill(args: &Args) -> i32 {
+    let cfg = load_config(args);
+    let tokens = args.get_usize("tokens", 65536);
+    let bal = exp::make_balancer(cfg.balancer, &cfg, cfg.seed);
+    let mut c = Coordinator::new(cfg.clone(), bal, cfg.seed);
+    let t = c.measure_prefill(tokens, 0);
+    println!(
+        "prefill {} tokens on {} with {}: {:.1} ms",
+        tokens,
+        cfg.model.name,
+        cfg.balancer.name(),
+        t * 1e3
+    );
+    0
+}
+
+fn cmd_bench(args: &Args) -> i32 {
+    let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let run_one = |name: &str| {
+        let b = match name {
+            "fig2" => exp::fig2_ir::run(&Default::default()),
+            "fig3" => exp::fig3_compute::run(&Default::default()),
+            "fig5" => exp::fig5_alltoall::run(&Default::default()),
+            "fig7" => exp::fig7_prefill::run(&Default::default()),
+            "fig8" => {
+                let mut p = exp::fig8_pareto::Fig8Params::default();
+                p.steps = args.get_usize("steps", p.steps);
+                exp::fig8_pareto::run(&p)
+            }
+            "fig9" => {
+                let mut p = exp::fig9_shift::Fig9Params::default();
+                p.steps = args.get_usize("steps", p.steps);
+                exp::fig9_shift::run(&p)
+            }
+            "fig10" => exp::fig10_fidelity::run(&Default::default()),
+            "fig11" => exp::fig11_timeline::run(&Default::default()),
+            other => {
+                eprintln!("unknown figure {other}");
+                return false;
+            }
+        };
+        b.print();
+        let _ = b.save();
+        true
+    };
+    if which == "all" {
+        for f in ["fig2", "fig3", "fig5", "fig7", "fig8", "fig9", "fig10", "fig11"] {
+            run_one(f);
+        }
+        0
+    } else if run_one(which) {
+        0
+    } else {
+        2
+    }
+}
+
+fn cmd_ablate(args: &Args) -> i32 {
+    let steps = args.get_usize("steps", 40);
+    let b = exp::ablations::run(steps);
+    b.print();
+    let _ = b.save();
+    0
+}
+
+fn cmd_info(args: &Args) -> i32 {
+    println!("models:   gpt-oss-120b, qwen3-235b, small-real");
+    println!("profiles: hopper-141, hopper-lowbw, compute-heavy, cpu-host");
+    println!("datasets: chinese, code, repeat, mixed");
+    println!("balancers: static (sglang), eplb, probe");
+    let dir = args.get_or("artifacts", "artifacts");
+    match std::fs::metadata(format!("{dir}/metadata.json")) {
+        Ok(_) => println!("artifacts: present in {dir}/"),
+        Err(_) => println!("artifacts: NOT built (run `make artifacts`)"),
+    }
+    0
+}

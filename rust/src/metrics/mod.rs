@@ -1,0 +1,310 @@
+//! Metrics: imbalance tracking, step timelines, latency breakdowns, and
+//! serving-level SLO statistics (TTFT / TPOT / throughput).
+
+use crate::util::stats::{imbalance_ratio, Online, Summary};
+
+/// Execution phases of one MoE layer step (paper Fig. 6 / Fig. 11).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    // main (deterministic) track
+    Attention,
+    Dispatch,
+    MoeCompute,
+    Combine,
+    /// Idle time at the synchronization barrier (straggler wait).
+    SyncWait,
+    // auxiliary (control-plane) track
+    Predict,
+    Plan,
+    Prefetch,
+    Update,
+}
+
+impl Phase {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Attention => "attention",
+            Phase::Dispatch => "dispatch",
+            Phase::MoeCompute => "moe_compute",
+            Phase::Combine => "combine",
+            Phase::SyncWait => "sync_wait",
+            Phase::Predict => "predict",
+            Phase::Plan => "plan",
+            Phase::Prefetch => "prefetch",
+            Phase::Update => "update",
+        }
+    }
+
+    pub const MAIN: [Phase; 5] = [
+        Phase::Attention,
+        Phase::Dispatch,
+        Phase::MoeCompute,
+        Phase::Combine,
+        Phase::SyncWait,
+    ];
+    pub const AUX: [Phase; 4] = [Phase::Predict, Phase::Plan, Phase::Prefetch, Phase::Update];
+}
+
+/// A half-open time span tagged with a phase.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhaseSpan {
+    pub phase: Phase,
+    pub start: f64,
+    pub end: f64,
+}
+
+impl PhaseSpan {
+    pub fn dur(&self) -> f64 {
+        (self.end - self.start).max(0.0)
+    }
+}
+
+/// Timeline of one layer's execution on every rank plus the aux track.
+#[derive(Debug, Clone, Default)]
+pub struct LayerTimeline {
+    /// Per-rank main-track spans.
+    pub ranks: Vec<Vec<PhaseSpan>>,
+    /// Auxiliary-track spans (control plane; leader view).
+    pub aux: Vec<PhaseSpan>,
+    /// Transfer overhead NOT hidden by the window (0 when fully masked).
+    pub exposed_overhead: f64,
+}
+
+impl LayerTimeline {
+    /// Wall-clock span of the main track (layer latency).
+    pub fn makespan(&self) -> f64 {
+        let end = self
+            .ranks
+            .iter()
+            .flat_map(|r| r.iter())
+            .map(|s| s.end)
+            .fold(0.0, f64::max);
+        let start = self
+            .ranks
+            .iter()
+            .flat_map(|r| r.iter())
+            .map(|s| s.start)
+            .fold(f64::INFINITY, f64::min);
+        if start.is_finite() {
+            end - start + self.exposed_overhead
+        } else {
+            self.exposed_overhead
+        }
+    }
+
+    /// Total duration of a phase summed over one rank.
+    pub fn phase_dur(&self, rank: usize, phase: Phase) -> f64 {
+        self.ranks[rank]
+            .iter()
+            .filter(|s| s.phase == phase)
+            .map(|s| s.dur())
+            .sum()
+    }
+
+    /// Mean duration of a phase across ranks.
+    pub fn mean_phase_dur(&self, phase: Phase) -> f64 {
+        if self.ranks.is_empty() {
+            return 0.0;
+        }
+        self.ranks
+            .iter()
+            .enumerate()
+            .map(|(r, _)| self.phase_dur(r, phase))
+            .sum::<f64>()
+            / self.ranks.len() as f64
+    }
+
+    /// Max/avg skew of a phase across ranks (paper Fig. 11: 2.27→1.18).
+    pub fn phase_skew(&self, phase: Phase) -> f64 {
+        let durs: Vec<f64> = (0..self.ranks.len())
+            .map(|r| self.phase_dur(r, phase))
+            .collect();
+        imbalance_ratio(&durs)
+    }
+}
+
+/// Aggregates IR and phase stats across steps/layers.
+#[derive(Debug, Clone, Default)]
+pub struct IrTracker {
+    pub per_step: Vec<f64>,
+    online: Online,
+}
+
+impl IrTracker {
+    pub fn new() -> IrTracker {
+        IrTracker {
+            per_step: Vec::new(),
+            online: Online::new(),
+        }
+    }
+
+    pub fn push_loads(&mut self, loads: &[f64]) {
+        let ir = imbalance_ratio(loads);
+        self.per_step.push(ir);
+        self.online.push(ir);
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.online.mean()
+    }
+
+    pub fn max(&self) -> f64 {
+        self.online.max()
+    }
+
+    pub fn summary(&self) -> Summary {
+        Summary::of(&self.per_step)
+    }
+}
+
+/// Per-request serving metrics.
+#[derive(Debug, Clone, Default)]
+pub struct RequestMetrics {
+    pub id: u64,
+    pub arrival: f64,
+    pub first_token: Option<f64>,
+    pub finished: Option<f64>,
+    pub tokens_out: usize,
+}
+
+impl RequestMetrics {
+    pub fn ttft(&self) -> Option<f64> {
+        self.first_token.map(|t| t - self.arrival)
+    }
+    /// Time per output token after the first.
+    pub fn tpot(&self) -> Option<f64> {
+        match (self.first_token, self.finished) {
+            (Some(f), Some(done)) if self.tokens_out > 1 => {
+                Some((done - f) / (self.tokens_out - 1) as f64)
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Serving-level aggregation.
+#[derive(Debug, Clone, Default)]
+pub struct ServingMetrics {
+    pub requests: Vec<RequestMetrics>,
+    /// (sim_time, tokens decoded this step) samples for throughput curves.
+    pub step_tokens: Vec<(f64, usize)>,
+}
+
+impl ServingMetrics {
+    pub fn ttft_summary(&self) -> Summary {
+        Summary::of(
+            &self
+                .requests
+                .iter()
+                .filter_map(|r| r.ttft())
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    pub fn tpot_summary(&self) -> Summary {
+        Summary::of(
+            &self
+                .requests
+                .iter()
+                .filter_map(|r| r.tpot())
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    /// Aggregate decode throughput (tokens/s) over the recorded steps.
+    pub fn throughput(&self) -> f64 {
+        if self.step_tokens.len() < 2 {
+            return 0.0;
+        }
+        let t0 = self.step_tokens.first().unwrap().0;
+        let t1 = self.step_tokens.last().unwrap().0;
+        let tokens: usize = self.step_tokens.iter().skip(1).map(|&(_, n)| n).sum();
+        if t1 > t0 {
+            tokens as f64 / (t1 - t0)
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(p: Phase, a: f64, b: f64) -> PhaseSpan {
+        PhaseSpan {
+            phase: p,
+            start: a,
+            end: b,
+        }
+    }
+
+    #[test]
+    fn makespan_spans_ranks() {
+        let tl = LayerTimeline {
+            ranks: vec![
+                vec![span(Phase::Dispatch, 0.0, 1.0), span(Phase::MoeCompute, 1.0, 3.0)],
+                vec![span(Phase::Dispatch, 0.0, 1.5), span(Phase::MoeCompute, 1.5, 4.0)],
+            ],
+            aux: vec![],
+            exposed_overhead: 0.0,
+        };
+        assert!((tl.makespan() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exposed_overhead_extends_makespan() {
+        let tl = LayerTimeline {
+            ranks: vec![vec![span(Phase::MoeCompute, 0.0, 2.0)]],
+            aux: vec![],
+            exposed_overhead: 0.5,
+        };
+        assert!((tl.makespan() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn phase_skew_detects_straggler() {
+        let tl = LayerTimeline {
+            ranks: vec![
+                vec![span(Phase::MoeCompute, 0.0, 4.0)],
+                vec![span(Phase::MoeCompute, 0.0, 1.0)],
+                vec![span(Phase::MoeCompute, 0.0, 1.0)],
+            ],
+            aux: vec![],
+            exposed_overhead: 0.0,
+        };
+        assert!((tl.phase_skew(Phase::MoeCompute) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ir_tracker_accumulates() {
+        let mut t = IrTracker::new();
+        t.push_loads(&[2.0, 2.0]);
+        t.push_loads(&[4.0, 0.0]);
+        assert_eq!(t.per_step, vec![1.0, 2.0]);
+        assert!((t.mean() - 1.5).abs() < 1e-12);
+        assert_eq!(t.max(), 2.0);
+    }
+
+    #[test]
+    fn ttft_tpot() {
+        let r = RequestMetrics {
+            id: 0,
+            arrival: 1.0,
+            first_token: Some(1.5),
+            finished: Some(2.5),
+            tokens_out: 11,
+        };
+        assert!((r.ttft().unwrap() - 0.5).abs() < 1e-12);
+        assert!((r.tpot().unwrap() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn throughput_from_steps() {
+        let m = ServingMetrics {
+            requests: vec![],
+            step_tokens: vec![(0.0, 0), (1.0, 100), (2.0, 100)],
+        };
+        assert!((m.throughput() - 100.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,159 @@
+//! MoE model descriptors for the paper-scale models the simulator serves.
+//!
+//! These describe *shape and cost*, not weights: per-expert parameter
+//! bytes `W`, per-token FLOPs `F̄`, hidden size `H` (paper Table 1). The
+//! real small model executed via PJRT is described by
+//! `artifacts/metadata.json` instead (see [`crate::runtime`]).
+
+/// Static description of an MoE model (per paper §3.1 notation).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MoeModel {
+    pub name: String,
+    /// Number of MoE layers (dense layers are irrelevant to EP balance).
+    pub n_layers: usize,
+    /// Experts per MoE layer.
+    pub n_experts: usize,
+    /// Experts activated per token (top-k).
+    pub top_k: usize,
+    /// Token hidden dimension H (dispatch/combine payload per token).
+    pub hidden: usize,
+    /// Per-expert FFN intermediate dimension.
+    pub d_ff: usize,
+    /// Bytes per element (2 = bf16).
+    pub dtype_bytes: f64,
+    /// FFN matrices per expert (3 = SwiGLU gate/up/down, 2 = classic MLP).
+    pub ffn_mats: usize,
+}
+
+impl MoeModel {
+    /// GPT-OSS-120B (paper §6.1): 128 experts, top-4, 36 layers, bf16.
+    pub fn gpt_oss_120b() -> MoeModel {
+        MoeModel {
+            name: "gpt-oss-120b".into(),
+            n_layers: 36,
+            n_experts: 128,
+            top_k: 4,
+            hidden: 2880,
+            d_ff: 2880,
+            dtype_bytes: 2.0,
+            ffn_mats: 3,
+        }
+    }
+
+    /// Qwen3-MoE-235B (paper §6.1): 128 experts, top-8, ~93 layers, bf16.
+    pub fn qwen3_235b() -> MoeModel {
+        MoeModel {
+            name: "qwen3-235b".into(),
+            n_layers: 93,
+            n_experts: 128,
+            top_k: 8,
+            hidden: 4096,
+            d_ff: 1536,
+            dtype_bytes: 2.0,
+            ffn_mats: 3,
+        }
+    }
+
+    /// The small real model built by `python/compile` (CPU-runnable).
+    pub fn small_real() -> MoeModel {
+        MoeModel {
+            name: "small-real".into(),
+            n_layers: 6,
+            n_experts: 16,
+            top_k: 2,
+            hidden: 128,
+            d_ff: 256,
+            dtype_bytes: 4.0, // f32 artifacts
+            ffn_mats: 2,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<MoeModel> {
+        match name {
+            "gpt-oss-120b" => Some(Self::gpt_oss_120b()),
+            "qwen3-235b" => Some(Self::qwen3_235b()),
+            "small-real" => Some(Self::small_real()),
+            _ => None,
+        }
+    }
+
+    /// Parameter bytes per expert, W (paper Table 1).
+    pub fn expert_param_bytes(&self) -> f64 {
+        self.ffn_mats as f64 * self.hidden as f64 * self.d_ff as f64 * self.dtype_bytes
+    }
+
+    /// Per-token FLOPs per expert, F̄ (2 FLOPs per MAC).
+    pub fn per_token_flops(&self) -> f64 {
+        2.0 * self.ffn_mats as f64 * self.hidden as f64 * self.d_ff as f64
+    }
+
+    /// Dispatch/combine payload bytes per token (hidden vector).
+    pub fn token_bytes(&self) -> f64 {
+        self.hidden as f64 * self.dtype_bytes
+    }
+
+    /// Experts per rank under a pure sharded placement.
+    pub fn experts_per_rank(&self, ep: usize) -> usize {
+        assert!(
+            self.n_experts % ep == 0,
+            "n_experts {} not divisible by ep {}",
+            self.n_experts,
+            ep
+        );
+        self.n_experts / ep
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_exist() {
+        for name in ["gpt-oss-120b", "qwen3-235b", "small-real"] {
+            let m = MoeModel::by_name(name).unwrap();
+            assert_eq!(m.name, name);
+        }
+        assert!(MoeModel::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn gpt_oss_shapes_match_paper() {
+        let m = MoeModel::gpt_oss_120b();
+        assert_eq!((m.n_experts, m.top_k, m.n_layers), (128, 4, 36));
+    }
+
+    #[test]
+    fn qwen_sparser_than_gpt_oss() {
+        // paper: GPT-OSS top-4/128 is *sparser* than Qwen top-8/128
+        let g = MoeModel::gpt_oss_120b();
+        let q = MoeModel::qwen3_235b();
+        assert!(g.top_k < q.top_k);
+    }
+
+    #[test]
+    fn expert_bytes_formula() {
+        let m = MoeModel::gpt_oss_120b();
+        // 3 * 2880 * 2880 * 2 bytes ≈ 47.5 MiB/expert
+        let w = m.expert_param_bytes();
+        assert!((w - 3.0 * 2880.0 * 2880.0 * 2.0).abs() < 1.0);
+        assert!(w > 40e6 && w < 60e6);
+    }
+
+    #[test]
+    fn per_token_flops_positive() {
+        let m = MoeModel::qwen3_235b();
+        assert!((m.per_token_flops() - 2.0 * 3.0 * 4096.0 * 1536.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn experts_per_rank_divides() {
+        assert_eq!(MoeModel::gpt_oss_120b().experts_per_rank(8), 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible")]
+    fn experts_per_rank_rejects_ragged() {
+        MoeModel::gpt_oss_120b().experts_per_rank(7);
+    }
+}

@@ -1,0 +1,405 @@
+//! Token assignment A: which rank executes each token-expert pair.
+//!
+//! The planner (Algorithm 1) reasons about flows at `(expert, source
+//! rank, target rank)` granularity; [`DispatchPlan`] materializes a flow
+//! into concrete per-slot targets for traffic accounting and execution.
+
+use crate::placement::Placement;
+use crate::routing::{token_rank, LayerRouting};
+
+/// Rank-granular token flow: `flow[e][rs][rt]` = tokens of expert `e`
+/// originating on rank `rs` assigned to the copy on rank `rt`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Assignment {
+    pub ep: usize,
+    pub n_experts: usize,
+    flow: Vec<f64>, // [(e*ep + rs)*ep + rt]
+}
+
+impl Assignment {
+    pub fn zeros(n_experts: usize, ep: usize) -> Assignment {
+        Assignment {
+            ep,
+            n_experts,
+            flow: vec![0.0; n_experts * ep * ep],
+        }
+    }
+
+    /// Locality-first initialization (Algorithm 1 line 2): every token of
+    /// expert `e` goes to `e`'s home rank.
+    pub fn locality_first(routing: &LayerRouting, placement: &Placement) -> Assignment {
+        let ep = placement.ep;
+        let mut a = Assignment::zeros(routing.n_experts, ep);
+        let by_src = routing.expert_counts_by_source(ep);
+        for e in 0..routing.n_experts {
+            let home = placement.home_rank(e);
+            for rs in 0..ep {
+                a.add(e, rs, home, by_src[e][rs] as f64);
+            }
+        }
+        a
+    }
+
+    /// Initialize from *predicted* per-(expert, source) counts instead of
+    /// ground-truth routing (what the planner actually sees at runtime).
+    pub fn locality_first_from_counts(
+        counts_by_source: &[Vec<f64>],
+        placement: &Placement,
+    ) -> Assignment {
+        let ep = placement.ep;
+        let n_experts = counts_by_source.len();
+        let mut a = Assignment::zeros(n_experts, ep);
+        for e in 0..n_experts {
+            let home = placement.home_rank(e);
+            for rs in 0..ep {
+                a.add(e, rs, home, counts_by_source[e][rs]);
+            }
+        }
+        a
+    }
+
+    #[inline]
+    fn idx(&self, e: usize, rs: usize, rt: usize) -> usize {
+        (e * self.ep + rs) * self.ep + rt
+    }
+
+    #[inline]
+    pub fn get(&self, e: usize, rs: usize, rt: usize) -> f64 {
+        self.flow[self.idx(e, rs, rt)]
+    }
+
+    #[inline]
+    pub fn add(&mut self, e: usize, rs: usize, rt: usize, x: f64) {
+        let i = self.idx(e, rs, rt);
+        self.flow[i] += x;
+    }
+
+    /// Move up to `x` tokens of (e, rs) from target `from` to target `to`;
+    /// returns the amount actually moved.
+    pub fn shift(&mut self, e: usize, rs: usize, from: usize, to: usize, x: f64) -> f64 {
+        let avail = self.get(e, rs, from);
+        let moved = avail.min(x).max(0.0);
+        if moved > 0.0 {
+            self.add(e, rs, from, -moved);
+            self.add(e, rs, to, moved);
+        }
+        moved
+    }
+
+    /// Tokens of expert `e` executed on rank `rt` (n_{e,r}).
+    pub fn tokens_on(&self, e: usize, rt: usize) -> f64 {
+        (0..self.ep).map(|rs| self.get(e, rs, rt)).sum()
+    }
+
+    /// Remote tokens of expert `e` currently assigned to `rt` that did NOT
+    /// originate on `rt` (the pool water-filling may redirect).
+    pub fn remote_tokens_on(&self, e: usize, rt: usize) -> f64 {
+        (0..self.ep)
+            .filter(|&rs| rs != rt)
+            .map(|rs| self.get(e, rs, rt))
+            .sum()
+    }
+
+    /// Per-rank per-expert loads: `loads[rank][expert]` for eq. 2.
+    pub fn rank_expert_loads(&self) -> Vec<Vec<f64>> {
+        let mut loads = vec![vec![0.0; self.n_experts]; self.ep];
+        for e in 0..self.n_experts {
+            for rs in 0..self.ep {
+                for rt in 0..self.ep {
+                    let x = self.get(e, rs, rt);
+                    if x > 0.0 {
+                        loads[rt][e] += x;
+                    }
+                }
+            }
+        }
+        loads
+    }
+
+    /// Total tokens of expert `e` (conservation check: Σ_r n_{e,r} = n_e).
+    pub fn expert_total(&self, e: usize) -> f64 {
+        (0..self.ep).map(|rt| self.tokens_on(e, rt)).sum()
+    }
+
+    /// Rescale each (expert, source) flow row so it sums to the *actual*
+    /// router counts while preserving the planned split proportions —
+    /// how PROBE reconciles a plan made from predictions with the
+    /// ground-truth dispatch (placement is already fixed; only volumes
+    /// shift by the prediction error).
+    pub fn rescale_to_counts(
+        &self,
+        actual_counts_by_source: &[Vec<f64>],
+        placement: &Placement,
+    ) -> Assignment {
+        let mut out = Assignment::zeros(self.n_experts, self.ep);
+        for e in 0..self.n_experts {
+            let home = placement.home_rank(e);
+            for rs in 0..self.ep {
+                let actual = actual_counts_by_source[e][rs];
+                if actual <= 0.0 {
+                    continue;
+                }
+                let planned: f64 = (0..self.ep).map(|rt| self.get(e, rs, rt)).sum();
+                if planned <= 0.0 {
+                    // the plan never saw tokens here: locality-first
+                    out.add(e, rs, home, actual);
+                } else {
+                    for rt in 0..self.ep {
+                        let share = self.get(e, rs, rt) / planned;
+                        if share > 0.0 {
+                            out.add(e, rs, rt, actual * share);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Validate conservation against ground-truth counts and placement
+    /// validity (n_{e,r} > 0 ⇒ P_{r,e} = 1, eq. 8 first constraint).
+    pub fn validate(
+        &self,
+        expert_counts: &[u32],
+        placement: &Placement,
+    ) -> Result<(), String> {
+        for e in 0..self.n_experts {
+            let total = self.expert_total(e);
+            if (total - expert_counts[e] as f64).abs() > 1e-6 {
+                return Err(format!(
+                    "conservation violated for expert {e}: {total} != {}",
+                    expert_counts[e]
+                ));
+            }
+            for rt in 0..self.ep {
+                if self.tokens_on(e, rt) > 1e-9 && !placement.hosts(e, rt) {
+                    return Err(format!(
+                        "tokens of expert {e} assigned to non-hosting rank {rt}"
+                    ));
+                }
+            }
+        }
+        if self.flow.iter().any(|&x| x < -1e-9) {
+            return Err("negative flow".into());
+        }
+        Ok(())
+    }
+}
+
+/// Concrete per-slot dispatch targets for one layer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DispatchPlan {
+    /// `targets[t*k + j]` = rank executing token t's j-th expert.
+    pub targets: Vec<u16>,
+}
+
+impl DispatchPlan {
+    /// Materialize a rank-granular assignment into per-slot targets.
+    /// Within each (expert, source-rank) group, tokens are handed out to
+    /// target ranks in order, consuming each target's (rounded) quota.
+    pub fn from_assignment(routing: &LayerRouting, a: &Assignment) -> DispatchPlan {
+        let ep = a.ep;
+        let k = routing.top_k;
+        // per (e, rs): integer quota per rt via largest-remainder rounding
+        let mut quotas: Vec<Vec<u32>> = Vec::with_capacity(routing.n_experts * ep);
+        let by_src = routing.expert_counts_by_source(ep);
+        for e in 0..routing.n_experts {
+            for rs in 0..ep {
+                let total = by_src[e][rs];
+                let raw: Vec<f64> = (0..ep).map(|rt| a.get(e, rs, rt)).collect();
+                quotas.push(round_quota(&raw, total));
+            }
+        }
+        // amortized-O(1) per slot: each group keeps a (current target,
+        // remaining quota) cursor that only advances forward (§Perf).
+        let mut cur_rt: Vec<u16> = vec![0; routing.n_experts * ep];
+        let mut cur_left: Vec<u32> = vec![0; routing.n_experts * ep];
+        for gi in 0..quotas.len() {
+            let q = &quotas[gi];
+            let first = q.iter().position(|&c| c > 0).unwrap_or(0);
+            cur_rt[gi] = first as u16;
+            cur_left[gi] = q.get(first).copied().unwrap_or(0);
+        }
+        let mut targets = vec![0u16; routing.n_tokens * k];
+        for t in 0..routing.n_tokens {
+            let rs = token_rank(t, routing.n_tokens, ep);
+            for j in 0..k {
+                let e = routing.experts[t * k + j] as usize;
+                let gi = e * ep + rs;
+                while cur_left[gi] == 0 && (cur_rt[gi] as usize) < ep - 1 {
+                    cur_rt[gi] += 1;
+                    cur_left[gi] = quotas[gi][cur_rt[gi] as usize];
+                }
+                targets[t * k + j] = cur_rt[gi];
+                cur_left[gi] = cur_left[gi].saturating_sub(1);
+            }
+        }
+        DispatchPlan { targets }
+    }
+}
+
+/// Round non-negative weights to integers summing to `total`
+/// (largest-remainder method).
+fn round_quota(raw: &[f64], total: u32) -> Vec<u32> {
+    // fast path (§Perf): the vast majority of (expert, source) groups
+    // send all tokens to a single target (unreplicated experts)
+    let mut nonzero = 0usize;
+    let mut last = 0usize;
+    for (i, &x) in raw.iter().enumerate() {
+        if x > 0.0 {
+            nonzero += 1;
+            last = i;
+        }
+    }
+    if nonzero == 1 {
+        let mut out = vec![0u32; raw.len()];
+        out[last] = total;
+        return out;
+    }
+    let sum: f64 = raw.iter().sum();
+    if sum <= 0.0 || total == 0 {
+        // degenerate: dump everything on the argmax (home) slot
+        let mut out = vec![0u32; raw.len()];
+        if total > 0 {
+            let arg = raw
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            out[arg] = total;
+        }
+        return out;
+    }
+    let scaled: Vec<f64> = raw.iter().map(|&x| x * total as f64 / sum).collect();
+    let mut out: Vec<u32> = scaled.iter().map(|&x| x.floor() as u32).collect();
+    let mut assigned: u32 = out.iter().sum();
+    let mut rema: Vec<(usize, f64)> = scaled
+        .iter()
+        .enumerate()
+        .map(|(i, &x)| (i, x - x.floor()))
+        .collect();
+    rema.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    let mut i = 0;
+    while assigned < total {
+        out[rema[i % rema.len()].0] += 1;
+        assigned += 1;
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn routing(n_tokens: usize, k: usize, e: usize, seed: u64) -> LayerRouting {
+        let mut rng = Rng::new(seed);
+        let mut experts = Vec::with_capacity(n_tokens * k);
+        for _ in 0..n_tokens {
+            let mut chosen: Vec<u16> = Vec::new();
+            while chosen.len() < k {
+                let x = rng.next_usize(e) as u16;
+                if !chosen.contains(&x) {
+                    chosen.push(x);
+                }
+            }
+            experts.extend(chosen);
+        }
+        LayerRouting::new(n_tokens, k, e, experts)
+    }
+
+    #[test]
+    fn locality_first_all_home() {
+        let r = routing(64, 4, 32, 1);
+        let p = Placement::sharded(8, 32, 3);
+        let a = Assignment::locality_first(&r, &p);
+        a.validate(&r.expert_counts(), &p).unwrap();
+        for e in 0..32 {
+            let home = p.home_rank(e);
+            for rt in 0..8 {
+                if rt != home {
+                    assert_eq!(a.tokens_on(e, rt), 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shift_conserves() {
+        let r = routing(64, 4, 32, 2);
+        let mut p = Placement::sharded(8, 32, 3);
+        p.add_replica(0, 7).unwrap();
+        let mut a = Assignment::locality_first(&r, &p);
+        let before = a.expert_total(0);
+        let moved = a.shift(0, 1, p.home_rank(0), 7, 3.0);
+        assert!(moved >= 0.0);
+        assert!((a.expert_total(0) - before).abs() < 1e-9);
+        a.validate(&r.expert_counts(), &p).unwrap();
+    }
+
+    #[test]
+    fn shift_clamps_to_available() {
+        let r = routing(16, 2, 8, 3);
+        let mut p = Placement::sharded(4, 8, 3);
+        p.add_replica(0, 3).unwrap();
+        let mut a = Assignment::locality_first(&r, &p);
+        let avail = a.get(0, 1, p.home_rank(0));
+        let moved = a.shift(0, 1, p.home_rank(0), 3, 1e9);
+        assert_eq!(moved, avail);
+    }
+
+    #[test]
+    fn dispatch_plan_respects_assignment() {
+        let r = routing(128, 4, 32, 4);
+        let mut p = Placement::sharded(8, 32, 3);
+        p.add_replica(0, 5).unwrap();
+        let mut a = Assignment::locality_first(&r, &p);
+        // move half of rank-2-originating tokens of expert 0 to rank 5
+        let have = a.get(0, 2, 0);
+        a.shift(0, 2, 0, 5, have / 2.0);
+        let plan = DispatchPlan::from_assignment(&r, &a);
+        // count realized targets
+        let mut realized = vec![vec![0.0; 8]; 32];
+        for t in 0..r.n_tokens {
+            for j in 0..r.top_k {
+                let e = r.experts[t * r.top_k + j] as usize;
+                realized[e][plan.targets[t * r.top_k + j] as usize] += 1.0;
+            }
+        }
+        for e in 0..32 {
+            for rt in 0..8 {
+                assert!(
+                    (realized[e][rt] - a.tokens_on(e, rt)).abs() <= 1.0 + 1e-9,
+                    "expert {e} rank {rt}: realized {} vs assigned {}",
+                    realized[e][rt],
+                    a.tokens_on(e, rt)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn round_quota_sums() {
+        let q = round_quota(&[1.5, 2.5, 0.0, 3.0], 7);
+        assert_eq!(q.iter().sum::<u32>(), 7);
+        let q = round_quota(&[0.0, 0.0], 5);
+        assert_eq!(q.iter().sum::<u32>(), 5);
+        let q = round_quota(&[1.0], 0);
+        assert_eq!(q.iter().sum::<u32>(), 0);
+    }
+
+    #[test]
+    fn rank_expert_loads_match_tokens_on() {
+        let r = routing(96, 2, 16, 5);
+        let p = Placement::sharded(4, 16, 3);
+        let a = Assignment::locality_first(&r, &p);
+        let loads = a.rank_expert_loads();
+        for e in 0..16 {
+            for rt in 0..4 {
+                assert_eq!(loads[rt][e], a.tokens_on(e, rt));
+            }
+        }
+    }
+}

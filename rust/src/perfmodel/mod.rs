@@ -1,0 +1,284 @@
+//! Analytical performance model (paper §3).
+//!
+//! Implements: GEMM efficiency η_g (§3.2), rank compute latency with
+//! straggler effect (eq. 2–3), token-level All-to-All traffic with
+//! ingress/egress deduplication and the "double penalty" (eq. 4–5), and
+//! expert-transfer cost vs the hiding window (eq. 6).
+//!
+//! The simulator executes exactly this model against concrete per-token
+//! routing, so relative effects (who straggles, what hides behind what)
+//! are preserved without GPUs — see DESIGN.md §Hardware-Adaptation.
+
+pub mod assignment;
+
+pub use assignment::{Assignment, DispatchPlan};
+
+use crate::model::MoeModel;
+use crate::routing::{token_rank, LayerRouting};
+use crate::topology::HardwareProfile;
+
+/// Grouped-GEMM efficiency η_g(n): arithmetic-intensity saturation times
+/// tile-padding waste (§3.2 "fragmentation").
+pub fn gemm_efficiency(n_tokens: f64, hw: &HardwareProfile) -> f64 {
+    if n_tokens <= 0.0 {
+        return 1.0; // no work, no waste
+    }
+    let sat = n_tokens / (n_tokens + hw.gemm_half_tokens);
+    let tile = hw.gemm_tile as f64;
+    let padded = (n_tokens / tile).ceil() * tile;
+    let pad_eff = n_tokens / padded;
+    hw.gemm_max_eff * sat * pad_eff
+}
+
+/// Compute time for one expert processing `n` tokens on one rank (eq. 2),
+/// with a memory-bound floor: the expert's weights must stream from HBM
+/// once regardless of token count (the DP "fragmentation" penalty).
+pub fn expert_compute_time(n_tokens: f64, model: &MoeModel, hw: &HardwareProfile) -> f64 {
+    if n_tokens <= 0.0 {
+        return 0.0;
+    }
+    let flops_t = n_tokens * model.per_token_flops() / (gemm_efficiency(n_tokens, hw) * hw.peak_flops);
+    let mem_t = model.expert_param_bytes() / hw.hbm_bw;
+    flops_t.max(mem_t) + hw.kernel_launch
+}
+
+/// Per-rank MoE compute latency given `n_{e,r}` token loads
+/// (`loads[rank][expert]`), eq. 2 summed over hosted experts.
+pub fn rank_compute_times(
+    loads: &[Vec<f64>],
+    model: &MoeModel,
+    hw: &HardwareProfile,
+) -> Vec<f64> {
+    loads
+        .iter()
+        .map(|per_expert| {
+            per_expert
+                .iter()
+                .map(|&n| expert_compute_time(n, model, hw))
+                .sum()
+        })
+        .collect()
+}
+
+/// Ingress/egress All-to-All volumes per rank (bytes), eq. 4, computed at
+/// token granularity so deduplication (λ_in/λ_out) is exact: a token
+/// whose k experts land on the same target rank is sent once.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CommVolumes {
+    pub v_in: Vec<f64>,
+    pub v_out: Vec<f64>,
+}
+
+impl CommVolumes {
+    /// Critical volume per rank: max(V_in, V_out) (§3.3).
+    pub fn critical(&self) -> Vec<f64> {
+        self.v_in
+            .iter()
+            .zip(&self.v_out)
+            .map(|(&i, &o)| i.max(o))
+            .collect()
+    }
+
+    pub fn max_critical(&self) -> f64 {
+        self.critical().iter().cloned().fold(0.0, f64::max)
+    }
+}
+
+/// Compute dispatch traffic for one layer given concrete per-slot target
+/// ranks (`plan.targets[t*k+j]` = rank executing token t's j-th expert).
+pub fn comm_volumes(
+    routing: &LayerRouting,
+    plan: &DispatchPlan,
+    ep: usize,
+    token_bytes: f64,
+) -> CommVolumes {
+    let mut v_in = vec![0.0; ep];
+    let mut v_out = vec![0.0; ep];
+    let k = routing.top_k;
+    let mut dests = [false; 64]; // ep <= 64
+    assert!(ep <= 64);
+    for t in 0..routing.n_tokens {
+        let rs = token_rank(t, routing.n_tokens, ep);
+        dests[..ep].iter_mut().for_each(|d| *d = false);
+        for j in 0..k {
+            dests[plan.targets[t * k + j] as usize] = true;
+        }
+        for (rt, &hit) in dests[..ep].iter().enumerate() {
+            if hit && rt != rs {
+                v_out[rs] += token_bytes;
+                v_in[rt] += token_bytes;
+            }
+        }
+    }
+    CommVolumes { v_in, v_out }
+}
+
+/// One-direction All-to-All latency from per-rank volumes (§3.3: bound by
+/// the bottleneck rank).
+pub fn alltoall_time(vol: &CommVolumes, hw: &HardwareProfile) -> f64 {
+    hw.collective_base_latency + vol.max_critical() / hw.effective_alltoall_bw()
+}
+
+/// Effective achieved bandwidth (paper Fig. 5 top): mean per-rank traffic
+/// divided by the collective's completion time.
+pub fn effective_bandwidth(vol: &CommVolumes, hw: &HardwareProfile) -> f64 {
+    let t = alltoall_time(vol, hw);
+    if t <= 0.0 {
+        return 0.0;
+    }
+    let mean: f64 = vol.critical().iter().sum::<f64>() / vol.v_in.len() as f64;
+    mean / t
+}
+
+/// Expert-transfer latency for prefetching `slots` experts (eq. 6).
+pub fn transfer_time(slots: usize, model: &MoeModel, hw: &HardwareProfile) -> f64 {
+    if slots == 0 {
+        return 0.0;
+    }
+    slots as f64 * model.expert_param_bytes() / hw.net_bw
+}
+
+/// End-to-end MoE layer latency (eq. 5): compute straggler plus the
+/// dispatch+combine double penalty.
+pub fn t_moe(
+    loads: &[Vec<f64>],
+    vol: &CommVolumes,
+    model: &MoeModel,
+    hw: &HardwareProfile,
+) -> f64 {
+    let comp = rank_compute_times(loads, model, hw)
+        .into_iter()
+        .fold(0.0, f64::max);
+    comp + 2.0 * alltoall_time(vol, hw)
+}
+
+/// Exposed (non-hidden) transfer overhead given a hiding window (§3.4).
+pub fn exposed_overhead(t_trans: f64, t_window: f64) -> f64 {
+    (t_trans - t_window).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::Placement;
+
+    fn hw() -> HardwareProfile {
+        HardwareProfile::hopper_141()
+    }
+    fn model() -> MoeModel {
+        MoeModel::gpt_oss_120b()
+    }
+
+    #[test]
+    fn gemm_eff_monotone_in_tokens() {
+        let h = hw();
+        let mut prev = 0.0;
+        for n in [64, 128, 256, 1024, 8192] {
+            let e = gemm_efficiency(n as f64, &h);
+            assert!(e > prev, "eff not increasing at {n}");
+            prev = e;
+        }
+        assert!(prev <= h.gemm_max_eff + 1e-12);
+    }
+
+    #[test]
+    fn gemm_eff_padding_penalty() {
+        let h = hw();
+        // 65 tokens pad to 128 → worse than 64 tokens in pad terms
+        let full_tile = gemm_efficiency(64.0, &h);
+        let ragged = gemm_efficiency(65.0, &h);
+        assert!(ragged < full_tile);
+    }
+
+    #[test]
+    fn expert_time_zero_for_no_tokens() {
+        assert_eq!(expert_compute_time(0.0, &model(), &hw()), 0.0);
+    }
+
+    #[test]
+    fn expert_time_memory_floor_for_cold_experts() {
+        let m = model();
+        let h = hw();
+        // 1 token: memory-bound (weight streaming dominates)
+        let t1 = expert_compute_time(1.0, &m, &h);
+        let floor = m.expert_param_bytes() / h.hbm_bw;
+        assert!(t1 >= floor);
+        // large n: compute-bound, above the floor
+        let t_big = expert_compute_time(100_000.0, &m, &h);
+        assert!(t_big > t1);
+    }
+
+    #[test]
+    fn straggler_dominates_t_moe() {
+        let m = model();
+        let h = hw();
+        // rank 0 overloaded
+        let mut loads = vec![vec![0.0; m.n_experts]; 8];
+        loads[0][0] = 8000.0;
+        for r in 1..8 {
+            loads[r][r] = 1000.0;
+        }
+        let times = rank_compute_times(&loads, &m, &h);
+        assert!(times[0] > times[1] * 2.0);
+    }
+
+    #[test]
+    fn comm_dedup_single_rank_targets() {
+        // all of a token's experts on one target rank → one payload
+        let routing = LayerRouting::new(8, 4, 32, vec![0u16; 32]);
+        let placement = Placement::sharded(8, 32, 3);
+        let a = Assignment::locality_first(&routing, &placement);
+        let plan = DispatchPlan::from_assignment(&routing, &a);
+        let m = model();
+        let vol = comm_volumes(&routing, &plan, 8, m.token_bytes());
+        // expert 0 lives on rank 0; tokens 0 (on rank 0) local, tokens 1..7 remote
+        assert_eq!(vol.v_in[0], 7.0 * m.token_bytes());
+        assert!((vol.v_out.iter().sum::<f64>() - 7.0 * m.token_bytes()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn comm_no_self_traffic() {
+        // every token routed to an expert on its own rank → zero traffic
+        let n = 8;
+        let experts: Vec<u16> = (0..n).map(|t| (t * 4) as u16).collect(); // expert t*4 is on rank t
+        let routing = LayerRouting::new(n, 1, 32, experts);
+        let placement = Placement::sharded(8, 32, 3);
+        let a = Assignment::locality_first(&routing, &placement);
+        let plan = DispatchPlan::from_assignment(&routing, &a);
+        let vol = comm_volumes(&routing, &plan, 8, 2.0);
+        assert!(vol.v_in.iter().all(|&v| v == 0.0));
+        assert!(vol.v_out.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn alltoall_skew_reduces_effective_bw() {
+        let h = hw();
+        let balanced = CommVolumes {
+            v_in: vec![1e6; 8],
+            v_out: vec![1e6; 8],
+        };
+        let mut skewed_in = vec![0.4e6; 8];
+        skewed_in[0] = 5.2e6; // same total
+        let skewed = CommVolumes {
+            v_in: skewed_in,
+            v_out: vec![1e6; 8],
+        };
+        assert!(effective_bandwidth(&skewed, &h) < effective_bandwidth(&balanced, &h));
+        assert!(alltoall_time(&skewed, &h) > alltoall_time(&balanced, &h));
+    }
+
+    #[test]
+    fn transfer_time_eq6() {
+        let m = model();
+        let h = hw();
+        assert_eq!(transfer_time(0, &m, &h), 0.0);
+        let t3 = transfer_time(3, &m, &h);
+        assert!((t3 - 3.0 * m.expert_param_bytes() / h.net_bw).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exposed_overhead_clamped() {
+        assert_eq!(exposed_overhead(5.0, 10.0), 0.0);
+        assert_eq!(exposed_overhead(12.0, 10.0), 2.0);
+    }
+}

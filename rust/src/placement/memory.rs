@@ -1,0 +1,194 @@
+//! Per-rank HBM accounting: why static per-layer replication (EPLB) OOMs
+//! under prefill memory pressure while PROBE's cyclically-reused replica
+//! buffer does not (paper §6.2 / Fig. 7 exclusion note).
+//!
+//! EPLB reserves `slots × n_layers` expert placeholders per rank (every
+//! layer keeps its replicas resident). PROBE double-buffers a single
+//! region of `2 × max_redundant` slots reused across layers (§5: 3
+//! replicas → 6 slots per device), leaving the capacity to the KV cache.
+
+use crate::model::MoeModel;
+use crate::topology::HardwareProfile;
+
+/// Bytes breakdown for one rank.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemoryBreakdown {
+    pub weights: f64,
+    pub replica_buffers: f64,
+    pub activations: f64,
+    pub kv_reserved: f64,
+    pub capacity: f64,
+}
+
+impl MemoryBreakdown {
+    pub fn total(&self) -> f64 {
+        self.weights + self.replica_buffers + self.activations + self.kv_reserved
+    }
+    pub fn fits(&self) -> bool {
+        self.total() <= self.capacity
+    }
+    /// HBM left for KV cache beyond the reservation.
+    pub fn headroom(&self) -> f64 {
+        self.capacity - self.total()
+    }
+}
+
+/// Replication policy memory shapes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ReplicaPolicy {
+    /// No replication (static sharded EP).
+    None,
+    /// Static per-layer placeholders: `slots` resident replicas per rank
+    /// on EVERY layer (EPLB).
+    StaticPerLayer { slots: usize },
+    /// One double-buffered region reused across layers (PROBE):
+    /// `2 × max_redundant` expert slots total.
+    CyclicBuffer { max_redundant: usize },
+}
+
+impl ReplicaPolicy {
+    pub fn bytes(&self, model: &MoeModel) -> f64 {
+        let w = model.expert_param_bytes();
+        match self {
+            ReplicaPolicy::None => 0.0,
+            ReplicaPolicy::StaticPerLayer { slots } => {
+                *slots as f64 * model.n_layers as f64 * w
+            }
+            ReplicaPolicy::CyclicBuffer { max_redundant } => 2.0 * *max_redundant as f64 * w,
+        }
+    }
+}
+
+/// Attention KV bytes per token per rank (GQA group of 8, both K and V,
+/// all layers; heads sharded with DP attention so the whole token's KV
+/// lives on its rank).
+pub fn kv_bytes_per_token(model: &MoeModel) -> f64 {
+    let gqa = 8.0;
+    2.0 * (model.hidden as f64 / gqa) * model.dtype_bytes * model.n_layers as f64
+}
+
+/// Transient activation bytes for `tokens_in_flight` (prefill chunk):
+/// residual stream + MoE dispatch buffers ≈ 6 live tensors of [T, H].
+pub fn activation_bytes(model: &MoeModel, tokens_in_flight: usize) -> f64 {
+    6.0 * tokens_in_flight as f64 * model.hidden as f64 * model.dtype_bytes
+}
+
+/// Build the per-rank breakdown for a serving configuration.
+pub fn rank_memory(
+    model: &MoeModel,
+    hw: &HardwareProfile,
+    ep: usize,
+    policy: ReplicaPolicy,
+    prefill_tokens_per_rank: usize,
+    kv_tokens_per_rank: usize,
+) -> MemoryBreakdown {
+    // MoE expert weights per rank + non-expert (attention etc.) share,
+    // approximated as 15% of the expert mass.
+    let experts = model.n_experts as f64 / ep as f64
+        * model.n_layers as f64
+        * model.expert_param_bytes();
+    let weights = experts * 1.15;
+    MemoryBreakdown {
+        weights,
+        replica_buffers: policy.bytes(model),
+        activations: activation_bytes(model, prefill_tokens_per_rank),
+        kv_reserved: kv_tokens_per_rank as f64 * kv_bytes_per_token(model),
+        capacity: hw.hbm_capacity,
+    }
+}
+
+/// Max KV tokens a rank can hold under a policy (the capacity the
+/// replica policy *costs*).
+pub fn max_kv_tokens(
+    model: &MoeModel,
+    hw: &HardwareProfile,
+    ep: usize,
+    policy: ReplicaPolicy,
+    prefill_tokens_per_rank: usize,
+) -> f64 {
+    let b = rank_memory(model, hw, ep, policy, prefill_tokens_per_rank, 0);
+    (b.headroom() / kv_bytes_per_token(model)).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (MoeModel, HardwareProfile) {
+        (MoeModel::gpt_oss_120b(), HardwareProfile::hopper_141())
+    }
+
+    #[test]
+    fn weights_fit_without_replication() {
+        let (m, hw) = setup();
+        let b = rank_memory(&m, &hw, 8, ReplicaPolicy::None, 8192, 0);
+        assert!(b.fits(), "base weights must fit: {b:?}");
+        // GPT-OSS-120B: ~27GB expert weights per rank at ep=8
+        assert!(b.weights > 20e9 && b.weights < 40e9, "{}", b.weights);
+    }
+
+    #[test]
+    fn eplb_static_placeholders_cost_layers_times_slots() {
+        let (m, _) = setup();
+        let eplb = ReplicaPolicy::StaticPerLayer { slots: 2 }.bytes(&m);
+        let probe = ReplicaPolicy::CyclicBuffer { max_redundant: 3 }.bytes(&m);
+        // 2 slots x 36 layers vs 6 slots total
+        assert!((eplb / probe - (2.0 * 36.0) / 6.0).abs() < 1e-9);
+        assert!(eplb > 3e9, "EPLB reservation should be GBs: {eplb}");
+        assert!(probe < 0.4e9, "PROBE buffer should be ~285MB x2: {probe}");
+    }
+
+    #[test]
+    fn eplb_sacrifices_kv_capacity() {
+        let (m, hw) = setup();
+        let kv_none = max_kv_tokens(&m, &hw, 8, ReplicaPolicy::None, 0);
+        let kv_eplb = max_kv_tokens(&m, &hw, 8, ReplicaPolicy::StaticPerLayer { slots: 2 }, 0);
+        let kv_probe =
+            max_kv_tokens(&m, &hw, 8, ReplicaPolicy::CyclicBuffer { max_redundant: 3 }, 0);
+        assert!(kv_eplb < kv_probe);
+        assert!(kv_probe > 0.98 * kv_none, "PROBE nearly preserves KV capacity");
+        // EPLB loses a material fraction of KV room
+        assert!(
+            (kv_none - kv_eplb) / kv_none > 0.02,
+            "EPLB KV loss too small: {} vs {}",
+            kv_eplb,
+            kv_none
+        );
+    }
+
+    #[test]
+    fn prefill_pressure_can_oom_eplb_but_not_probe() {
+        // the Fig. 7 exclusion: large-batch prefill (activations + in-
+        // flight KV) plus EPLB's static placeholders exceeds capacity.
+        let (m, hw) = setup();
+        let prefill_tokens = 16384; // 16K tokens per rank in flight
+        // KV pool sized to 98% of what PROBE's cyclic buffer leaves free:
+        // fits under PROBE, exceeds capacity under EPLB's static
+        // per-layer placeholders (the ~3.1 GB/rank difference).
+        let kv_tokens = (0.98
+            * max_kv_tokens(
+                &m, &hw, 8,
+                ReplicaPolicy::CyclicBuffer { max_redundant: 3 },
+                prefill_tokens,
+            )) as usize;
+        let eplb = rank_memory(
+            &m, &hw, 8,
+            ReplicaPolicy::StaticPerLayer { slots: 2 },
+            prefill_tokens, kv_tokens,
+        );
+        let probe = rank_memory(
+            &m, &hw, 8,
+            ReplicaPolicy::CyclicBuffer { max_redundant: 3 },
+            prefill_tokens, kv_tokens,
+        );
+        assert!(!eplb.fits(), "EPLB should OOM here: {:?}", eplb.total());
+        assert!(probe.fits(), "PROBE must fit: {:?}", probe.total());
+    }
+
+    #[test]
+    fn kv_bytes_scale_with_layers() {
+        let (m, _) = setup();
+        let q = MoeModel::qwen3_235b();
+        assert!(kv_bytes_per_token(&q) > kv_bytes_per_token(&m));
+    }
+}

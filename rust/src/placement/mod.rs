@@ -1,0 +1,288 @@
+//! Expert placement: static sharding plus dynamic replica sets Δ_r,
+//! and per-rank HBM accounting ([`memory`]).
+//!
+//! Paper notation (§3.1): `E_r` is the set of experts *physically hosted*
+//! on rank r (the static shard), `Δ_r` the redundant experts replicated
+//! onto r. PROBE replicates at most `max_redundant` experts per rank per
+//! layer into a double-buffered slot region (§5: 3 replicas → 6 slots).
+
+pub mod memory;
+
+/// Placement of one MoE layer's experts across an EP group.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Placement {
+    pub ep: usize,
+    pub n_experts: usize,
+    /// Expert -> home rank (static shard; contiguous blocks).
+    home: Vec<u16>,
+    /// Expert -> sorted extra ranks currently hosting a replica.
+    replicas: Vec<Vec<u16>>,
+    /// Per-rank count of replica slots in use.
+    slots_used: Vec<usize>,
+    /// Replica slot budget per rank (paper: ≤3).
+    pub max_redundant: usize,
+}
+
+impl Placement {
+    /// Standard sharded placement: expert e lives on rank e / (E/ep).
+    pub fn sharded(ep: usize, n_experts: usize, max_redundant: usize) -> Placement {
+        assert!(ep > 0 && n_experts % ep == 0, "E must divide by ep");
+        let per = n_experts / ep;
+        Placement {
+            ep,
+            n_experts,
+            home: (0..n_experts).map(|e| (e / per) as u16).collect(),
+            replicas: vec![Vec::new(); n_experts],
+            slots_used: vec![0; ep],
+            max_redundant,
+        }
+    }
+
+    pub fn home_rank(&self, expert: usize) -> usize {
+        self.home[expert] as usize
+    }
+
+    /// All ranks hosting expert `e` (home first, then replicas).
+    pub fn ranks_hosting(&self, expert: usize) -> Vec<usize> {
+        let mut out = vec![self.home[expert] as usize];
+        out.extend(self.replicas[expert].iter().map(|&r| r as usize));
+        out
+    }
+
+    pub fn hosts(&self, expert: usize, rank: usize) -> bool {
+        self.home[expert] as usize == rank
+            || self.replicas[expert].contains(&(rank as u16))
+    }
+
+    /// Experts natively sharded to `rank`.
+    pub fn native_experts(&self, rank: usize) -> Vec<usize> {
+        (0..self.n_experts)
+            .filter(|&e| self.home[e] as usize == rank)
+            .collect()
+    }
+
+    /// Redundant experts currently replicated on `rank` (Δ_r).
+    pub fn replica_experts(&self, rank: usize) -> Vec<usize> {
+        (0..self.n_experts)
+            .filter(|&e| self.replicas[e].contains(&(rank as u16)))
+            .collect()
+    }
+
+    pub fn slots_used(&self, rank: usize) -> usize {
+        self.slots_used[rank]
+    }
+
+    pub fn slots_free(&self, rank: usize) -> usize {
+        self.max_redundant.saturating_sub(self.slots_used[rank])
+    }
+
+    /// Try to add a replica of `expert` on `rank`. Fails when the rank
+    /// already hosts the expert or has no free slot.
+    pub fn add_replica(&mut self, expert: usize, rank: usize) -> Result<(), PlacementError> {
+        if self.hosts(expert, rank) {
+            return Err(PlacementError::AlreadyHosted { expert, rank });
+        }
+        if self.slots_free(rank) == 0 {
+            return Err(PlacementError::NoSlot { rank });
+        }
+        self.replicas[expert].push(rank as u16);
+        self.replicas[expert].sort_unstable();
+        self.slots_used[rank] += 1;
+        Ok(())
+    }
+
+    /// Remove a replica (not the home copy).
+    pub fn remove_replica(&mut self, expert: usize, rank: usize) -> Result<(), PlacementError> {
+        let pos = self.replicas[expert]
+            .iter()
+            .position(|&r| r as usize == rank)
+            .ok_or(PlacementError::NotReplica { expert, rank })?;
+        self.replicas[expert].remove(pos);
+        self.slots_used[rank] -= 1;
+        Ok(())
+    }
+
+    /// Drop all replicas (cyclic slot reuse between layers/steps).
+    pub fn clear_replicas(&mut self) {
+        for r in &mut self.replicas {
+            r.clear();
+        }
+        self.slots_used.iter_mut().for_each(|s| *s = 0);
+    }
+
+    /// Total replicas currently placed.
+    pub fn total_replicas(&self) -> usize {
+        self.slots_used.iter().sum()
+    }
+
+    /// Extra HBM bytes consumed by replicas on the heaviest rank, given
+    /// per-expert weight bytes. Doubled for the double-buffered region.
+    pub fn replica_hbm_bytes(&self, expert_bytes: f64, double_buffered: bool) -> f64 {
+        let worst = self.slots_used.iter().copied().max().unwrap_or(0) as f64;
+        let mult = if double_buffered { 2.0 } else { 1.0 };
+        worst * expert_bytes * mult
+    }
+
+    /// Structural invariants (used by property tests).
+    pub fn validate(&self) -> Result<(), PlacementError> {
+        let mut used = vec![0usize; self.ep];
+        for e in 0..self.n_experts {
+            let mut seen = vec![self.home[e]];
+            for &r in &self.replicas[e] {
+                if seen.contains(&r) {
+                    return Err(PlacementError::AlreadyHosted {
+                        expert: e,
+                        rank: r as usize,
+                    });
+                }
+                seen.push(r);
+                used[r as usize] += 1;
+            }
+        }
+        if used != self.slots_used {
+            return Err(PlacementError::SlotAccounting);
+        }
+        for (r, &u) in used.iter().enumerate() {
+            if u > self.max_redundant {
+                return Err(PlacementError::NoSlot { rank: r });
+            }
+        }
+        Ok(())
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+pub enum PlacementError {
+    #[error("expert {expert} already hosted on rank {rank}")]
+    AlreadyHosted { expert: usize, rank: usize },
+    #[error("no replica slot free on rank {rank}")]
+    NoSlot { rank: usize },
+    #[error("expert {expert} has no replica on rank {rank}")]
+    NotReplica { expert: usize, rank: usize },
+    #[error("slot accounting mismatch")]
+    SlotAccounting,
+}
+
+/// Difference between two placements: per-rank prefetch/evict sets
+/// (paper Δ_r^in / Δ_r^out), used to cost expert transfers (eq. 6).
+#[derive(Debug, Clone, Default)]
+pub struct PlacementDelta {
+    /// (rank, experts to fetch into its replica region)
+    pub fetch: Vec<Vec<usize>>,
+    /// (rank, experts evicted)
+    pub evict: Vec<Vec<usize>>,
+}
+
+impl PlacementDelta {
+    pub fn between(old: &Placement, new: &Placement) -> PlacementDelta {
+        assert_eq!(old.ep, new.ep);
+        let mut fetch = vec![Vec::new(); new.ep];
+        let mut evict = vec![Vec::new(); new.ep];
+        for r in 0..new.ep {
+            let o = old.replica_experts(r);
+            let n = new.replica_experts(r);
+            for &e in &n {
+                if !o.contains(&e) {
+                    fetch[r].push(e);
+                }
+            }
+            for &e in &o {
+                if !n.contains(&e) {
+                    evict[r].push(e);
+                }
+            }
+        }
+        PlacementDelta { fetch, evict }
+    }
+
+    /// max(|Δ_in|, |Δ_out|) for rank r (paper eq. 6 numerator count).
+    pub fn transfer_slots(&self, rank: usize) -> usize {
+        self.fetch[rank].len().max(self.evict[rank].len())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.fetch.iter().all(|f| f.is_empty()) && self.evict.iter().all(|e| e.is_empty())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sharded_contiguous() {
+        let p = Placement::sharded(4, 16, 3);
+        assert_eq!(p.home_rank(0), 0);
+        assert_eq!(p.home_rank(3), 0);
+        assert_eq!(p.home_rank(4), 1);
+        assert_eq!(p.home_rank(15), 3);
+        assert_eq!(p.native_experts(2), vec![8, 9, 10, 11]);
+    }
+
+    #[test]
+    fn add_remove_replica() {
+        let mut p = Placement::sharded(4, 16, 2);
+        p.add_replica(0, 3).unwrap();
+        assert!(p.hosts(0, 3));
+        assert_eq!(p.ranks_hosting(0), vec![0, 3]);
+        assert_eq!(p.slots_used(3), 1);
+        p.remove_replica(0, 3).unwrap();
+        assert!(!p.hosts(0, 3));
+        assert_eq!(p.slots_used(3), 0);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn slot_budget_enforced() {
+        let mut p = Placement::sharded(4, 16, 1);
+        p.add_replica(0, 1).unwrap();
+        // expert 8 homes on rank 2; rank 1's single slot is taken
+        assert_eq!(
+            p.add_replica(8, 1).unwrap_err(),
+            PlacementError::NoSlot { rank: 1 }
+        );
+    }
+
+    #[test]
+    fn no_duplicate_hosting() {
+        let mut p = Placement::sharded(4, 16, 2);
+        assert!(p.add_replica(0, 0).is_err()); // home rank
+        p.add_replica(0, 1).unwrap();
+        assert!(p.add_replica(0, 1).is_err()); // already replicated
+    }
+
+    #[test]
+    fn clear_resets_slots() {
+        let mut p = Placement::sharded(2, 4, 3);
+        p.add_replica(0, 1).unwrap();
+        p.add_replica(2, 0).unwrap();
+        p.clear_replicas();
+        assert_eq!(p.total_replicas(), 0);
+        assert_eq!(p.replica_experts(0), Vec::<usize>::new());
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn delta_between_placements() {
+        let old = Placement::sharded(2, 4, 3);
+        let mut new = old.clone();
+        new.add_replica(0, 1).unwrap();
+        new.add_replica(3, 0).unwrap();
+        let d = PlacementDelta::between(&old, &new);
+        assert_eq!(d.fetch[1], vec![0]);
+        assert_eq!(d.fetch[0], vec![3]);
+        assert!(d.evict.iter().all(|e| e.is_empty()));
+        assert_eq!(d.transfer_slots(1), 1);
+        assert!(!d.is_empty());
+        assert!(PlacementDelta::between(&old, &old).is_empty());
+    }
+
+    #[test]
+    fn replica_hbm_accounting() {
+        let mut p = Placement::sharded(2, 4, 3);
+        p.add_replica(0, 1).unwrap();
+        p.add_replica(1, 1).unwrap();
+        assert_eq!(p.replica_hbm_bytes(10.0, false), 20.0);
+        assert_eq!(p.replica_hbm_bytes(10.0, true), 40.0);
+    }
+}

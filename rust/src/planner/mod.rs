@@ -1,0 +1,544 @@
+//! Hardware-Aware Balance Planning (paper §4.3, Algorithm 1).
+//!
+//! Greedy rebalancing: repeatedly pair the bottleneck rank `r_src` with
+//! the least-loaded rank `r_dst`, replicate `r_src`'s hottest movable
+//! expert onto `r_dst` (gated by the dual-side transfer budget so the
+//! prefetch hides inside the per-rank window), and redistribute that
+//! expert's *remote* tokens with locality-first water-filling. Stops at
+//! convergence (gain ≤ ε) or the iteration cap `k_max`.
+
+use crate::config::ProbeConfig;
+use crate::model::MoeModel;
+use crate::perfmodel::{expert_compute_time, transfer_time, Assignment};
+use crate::placement::Placement;
+use crate::topology::HardwareProfile;
+
+/// Result of one planning invocation (one layer, one step).
+#[derive(Debug, Clone)]
+pub struct PlanOutcome {
+    pub placement: Placement,
+    pub assignment: Assignment,
+    /// Experts fetched per rank this plan (|Δ_r^in|).
+    pub fetches: Vec<Vec<usize>>,
+    /// Loop iterations consumed (≤ k_max).
+    pub iterations: usize,
+    /// Planner's internal latency estimate before/after (seconds).
+    pub est_before: f64,
+    pub est_after: f64,
+}
+
+impl PlanOutcome {
+    pub fn fetch_slots(&self, rank: usize) -> usize {
+        self.fetches[rank].len()
+    }
+    pub fn max_fetch_slots(&self) -> usize {
+        self.fetches.iter().map(|f| f.len()).max().unwrap_or(0)
+    }
+}
+
+/// Planner internal per-rank latency estimate: compute time plus a
+/// (non-deduplicated, conservative) traffic term — the eq. 8 objective.
+pub fn rank_latencies(
+    a: &Assignment,
+    model: &MoeModel,
+    hw: &HardwareProfile,
+) -> Vec<f64> {
+    let ep = a.ep;
+    let mut comp = vec![0.0; ep];
+    let mut v_in = vec![0.0; ep];
+    let mut v_out = vec![0.0; ep];
+    let tb = model.token_bytes();
+    for e in 0..a.n_experts {
+        for rt in 0..ep {
+            let n = a.tokens_on(e, rt);
+            if n > 0.0 {
+                comp[rt] += expert_compute_time(n, model, hw);
+                v_in[rt] += a.remote_tokens_on(e, rt) * tb;
+            }
+        }
+        for rs in 0..ep {
+            for rt in 0..ep {
+                if rs != rt {
+                    let x = a.get(e, rs, rt);
+                    if x > 0.0 {
+                        v_out[rs] += x * tb;
+                    }
+                }
+            }
+        }
+    }
+    let bw = hw.effective_alltoall_bw();
+    (0..ep)
+        .map(|r| comp[r] + (v_in[r].max(v_out[r])) / bw)
+        .collect()
+}
+
+/// Marginal seconds per additional token of expert `e` at load `n`.
+fn marginal_time(n: f64, model: &MoeModel, hw: &HardwareProfile) -> f64 {
+    let eff = crate::perfmodel::gemm_efficiency(n.max(1.0), hw);
+    model.per_token_flops() / (eff * hw.peak_flops)
+}
+
+/// Algorithm 1. `counts_by_source[e][rs]` are the *predicted* per-expert
+/// per-source token counts for the upcoming layer; `windows[r]` is the
+/// per-rank hiding window (seconds of overlappable compute).
+pub fn plan(
+    counts_by_source: &[Vec<f64>],
+    base: &Placement,
+    model: &MoeModel,
+    hw: &HardwareProfile,
+    windows: &[f64],
+    cfg: &ProbeConfig,
+) -> PlanOutcome {
+    let ep = base.ep;
+    assert_eq!(windows.len(), ep);
+    let mut placement = base.clone();
+    placement.clear_replicas();
+
+    let mut a = Assignment::locality_first_from_counts(counts_by_source, &placement);
+    let mut lat = rank_latencies(&a, model, hw);
+    let est_before = lat.iter().cloned().fold(0.0, f64::max);
+
+    let mut fetches: Vec<Vec<usize>> = vec![Vec::new(); ep];
+    let mut invalid: Vec<(usize, usize)> = Vec::new();
+    let mut iterations = 0usize;
+    let eps = est_before * 1e-3;
+
+    loop {
+        if iterations >= cfg.k_max {
+            break;
+        }
+        iterations += 1;
+
+        // select bottleneck/helper pair, skipping invalidated pairs
+        let Some((r_src, r_dst)) = select_pair(&lat, &placement, &invalid) else {
+            break;
+        };
+
+        // hottest expert on r_src with a movable remote pool
+        let Some(e_star) = select_heavy_expert(&a, &placement, r_src, r_dst) else {
+            invalid.push((r_src, r_dst));
+            continue;
+        };
+
+        // dual-side budget check (eq. 6 vs hiding window): the fetch on
+        // r_dst and the slot overwrite (evict) both bound the same slot
+        // count; cyclic slot reuse makes |Δ_out| = |Δ_in| per rank.
+        if cfg.enforce_window {
+            let slots_after = fetches[r_dst].len() + 1;
+            if transfer_time(slots_after, model, hw) > windows[r_dst] {
+                invalid.push((r_src, r_dst));
+                continue;
+            }
+        }
+        if placement.slots_free(r_dst) == 0 {
+            invalid.push((r_src, r_dst));
+            continue;
+        }
+
+        // tentative replica + water-filling rebalance
+        let mut a2 = a.clone();
+        let moved = water_fill(
+            &mut a2, &lat, e_star, r_src, r_dst, model, hw, cfg.water_filling,
+        );
+        if moved <= 0.0 {
+            invalid.push((r_src, r_dst));
+            continue;
+        }
+        let lat2 = rank_latencies(&a2, model, hw);
+        let gain = lat.iter().cloned().fold(0.0, f64::max)
+            - lat2.iter().cloned().fold(0.0, f64::max);
+        if gain <= eps {
+            break; // converged (Algorithm 1 line 12)
+        }
+        placement
+            .add_replica(e_star, r_dst)
+            .expect("slot availability pre-checked");
+        fetches[r_dst].push(e_star);
+        a = a2;
+        lat = lat2;
+    }
+
+    let est_after = lat.iter().cloned().fold(0.0, f64::max);
+    PlanOutcome {
+        placement,
+        assignment: a,
+        fetches,
+        iterations,
+        est_before,
+        est_after,
+    }
+}
+
+/// Pick (argmax, argmin) latency ranks avoiding invalidated pairs; the
+/// destination must have a free replica slot.
+fn select_pair(
+    lat: &[f64],
+    placement: &Placement,
+    invalid: &[(usize, usize)],
+) -> Option<(usize, usize)> {
+    let ep = lat.len();
+    let mut src_order: Vec<usize> = (0..ep).collect();
+    src_order.sort_by(|&x, &y| lat[y].partial_cmp(&lat[x]).unwrap());
+    let mut dst_order: Vec<usize> = (0..ep).collect();
+    dst_order.sort_by(|&x, &y| lat[x].partial_cmp(&lat[y]).unwrap());
+    for &s in &src_order {
+        for &d in &dst_order {
+            if d == s || lat[d] >= lat[s] {
+                continue;
+            }
+            if placement.slots_free(d) == 0 {
+                continue;
+            }
+            if !invalid.contains(&(s, d)) {
+                return Some((s, d));
+            }
+        }
+    }
+    None
+}
+
+/// Hottest expert executed on `r_src` that is not yet hosted on `r_dst`
+/// and has remote tokens available to shed.
+fn select_heavy_expert(
+    a: &Assignment,
+    placement: &Placement,
+    r_src: usize,
+    r_dst: usize,
+) -> Option<usize> {
+    let mut best: Option<(usize, f64)> = None;
+    for e in 0..a.n_experts {
+        if !placement.hosts(e, r_src) || placement.hosts(e, r_dst) {
+            continue;
+        }
+        let load = a.tokens_on(e, r_src);
+        let movable = a.remote_tokens_on(e, r_src);
+        if movable <= 0.0 {
+            continue;
+        }
+        if best.map_or(true, |(_, l)| load > l) {
+            best = Some((e, load));
+        }
+    }
+    best.map(|(e, _)| e)
+}
+
+/// Locality-aware water-filling (paper §4.3): tokens generated on `r_src`
+/// stay pinned; remote tokens are redirected to `r_dst` until `r_src`
+/// reaches the cluster average (or the pool empties). The naive ablation
+/// variant moves half the pool unconditionally.
+#[allow(clippy::too_many_arguments)]
+fn water_fill(
+    a: &mut Assignment,
+    lat: &[f64],
+    e_star: usize,
+    r_src: usize,
+    r_dst: usize,
+    model: &MoeModel,
+    hw: &HardwareProfile,
+    water_filling: bool,
+) -> f64 {
+    let ep = a.ep;
+    let pool: f64 = a.remote_tokens_on(e_star, r_src);
+    if pool <= 0.0 {
+        return 0.0;
+    }
+    let target_tokens = if water_filling {
+        let avg = lat.iter().sum::<f64>() / ep as f64;
+        let excess = (lat[r_src] - avg).max(0.0);
+        let marginal = marginal_time(a.tokens_on(e_star, r_src), model, hw);
+        if marginal <= 0.0 {
+            return 0.0;
+        }
+        (excess / marginal).min(pool)
+    } else {
+        pool / 2.0
+    };
+    if target_tokens <= 0.0 {
+        return 0.0;
+    }
+    // proportional drain across remote sources
+    let mut remaining = target_tokens;
+    for rs in 0..ep {
+        if rs == r_src {
+            continue; // locality-first: pinned
+        }
+        let have = a.get(e_star, rs, r_src);
+        if have <= 0.0 {
+            continue;
+        }
+        let share = (have / pool * target_tokens).min(remaining);
+        let moved = a.shift(e_star, rs, r_src, r_dst, share);
+        remaining -= moved;
+        if remaining <= 1e-9 {
+            break;
+        }
+    }
+    target_tokens - remaining
+}
+
+/// Re-derive the token assignment for the *actual* routing once the
+/// placement is fixed (the router knows the true top-k at dispatch time;
+/// only placement had to be decided ahead). Greedy water-filling across
+/// the existing replicas; no budget checks (no new transfers happen).
+pub fn rebalance_existing(
+    counts_by_source: &[Vec<f64>],
+    placement: &Placement,
+    model: &MoeModel,
+    hw: &HardwareProfile,
+    iters: usize,
+) -> Assignment {
+    let a = Assignment::locality_first_from_counts(counts_by_source, placement);
+    polish_assignment(a, placement, model, hw, iters)
+}
+
+/// Iteratively improve an assignment over a FIXED placement: move remote
+/// tokens of experts hosted on the bottleneck rank toward their less-
+/// loaded replicas (pairwise equalization). Candidates that fail to
+/// improve are skipped, not fatal.
+pub fn polish_assignment(
+    mut a: Assignment,
+    placement: &Placement,
+    model: &MoeModel,
+    hw: &HardwareProfile,
+    iters: usize,
+) -> Assignment {
+    let mut lat = rank_latencies(&a, model, hw);
+    let mut dead: Vec<(usize, usize)> = Vec::new(); // (expert, dst) that failed
+    for _ in 0..iters {
+        let r_src = argmax(&lat);
+        // candidate moves off the bottleneck, best (most movable) first
+        let mut cands: Vec<(usize, usize, f64)> = Vec::new();
+        for e in 0..a.n_experts {
+            if !placement.hosts(e, r_src) {
+                continue;
+            }
+            let movable = a.remote_tokens_on(e, r_src);
+            if movable <= 0.0 {
+                continue;
+            }
+            for rt in placement.ranks_hosting(e) {
+                if rt == r_src || lat[rt] >= lat[r_src] || dead.contains(&(e, rt)) {
+                    continue;
+                }
+                cands.push((e, rt, movable.min(a.tokens_on(e, r_src))));
+            }
+        }
+        if cands.is_empty() {
+            break;
+        }
+        cands.sort_by(|x, y| y.2.partial_cmp(&x.2).unwrap());
+        let mut progressed = false;
+        for &(e_star, r_dst, _) in cands.iter().take(4) {
+            let mut a2 = a.clone();
+            // pairwise equalization: close half the latency gap
+            let marginal = marginal_time(a2.tokens_on(e_star, r_src), model, hw);
+            if marginal <= 0.0 {
+                continue;
+            }
+            let want = ((lat[r_src] - lat[r_dst]) * 0.5 / marginal).max(0.0);
+            let pool = a2.remote_tokens_on(e_star, r_src);
+            let target = want.min(pool);
+            if target <= 0.0 {
+                dead.push((e_star, r_dst));
+                continue;
+            }
+            let mut remaining = target;
+            for rs in 0..a2.ep {
+                if rs == r_src {
+                    continue;
+                }
+                let have = a2.get(e_star, rs, r_src);
+                if have <= 0.0 {
+                    continue;
+                }
+                let moved = a2.shift(e_star, rs, r_src, r_dst, (have / pool * target).min(remaining));
+                remaining -= moved;
+                if remaining <= 1e-9 {
+                    break;
+                }
+            }
+            let lat2 = rank_latencies(&a2, model, hw);
+            if lat2[argmax(&lat2)] < lat[r_src] - 1e-12 {
+                a = a2;
+                lat = lat2;
+                progressed = true;
+                break;
+            }
+            dead.push((e_star, r_dst));
+        }
+        if !progressed {
+            break;
+        }
+    }
+    a
+}
+
+fn argmax(xs: &[f64]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::routing::RoutingModel;
+    use crate::util::stats::imbalance_ratio;
+
+    fn setup(n_tokens: usize, seed: u64) -> (Vec<Vec<f64>>, Placement, MoeModel, HardwareProfile) {
+        let model = MoeModel::gpt_oss_120b();
+        let mut rm = RoutingModel::calibrated(1, model.n_experts, model.top_k, 3, seed);
+        let routing = rm.route_step(&vec![0u16; n_tokens]).layers.remove(0);
+        let counts: Vec<Vec<f64>> = routing
+            .expert_counts_by_source(8)
+            .into_iter()
+            .map(|v| v.into_iter().map(|c| c as f64).collect())
+            .collect();
+        let placement = Placement::sharded(8, model.n_experts, 3);
+        (counts, placement, model, HardwareProfile::hopper_141())
+    }
+
+    fn wide_windows() -> Vec<f64> {
+        vec![1.0; 8] // effectively unconstrained
+    }
+
+    #[test]
+    fn plan_reduces_bottleneck() {
+        let (counts, base, model, hw) = setup(6144, 3);
+        let cfg = ProbeConfig::default();
+        let out = plan(&counts, &base, &model, &hw, &wide_windows(), &cfg);
+        assert!(
+            out.est_after < out.est_before * 0.95,
+            "no improvement: {} -> {}",
+            out.est_before,
+            out.est_after
+        );
+        assert!(out.iterations <= cfg.k_max);
+        out.placement.validate().unwrap();
+    }
+
+    #[test]
+    fn plan_conserves_tokens() {
+        let (counts, base, model, hw) = setup(2048, 5);
+        let cfg = ProbeConfig::default();
+        let out = plan(&counts, &base, &model, &hw, &wide_windows(), &cfg);
+        for e in 0..model.n_experts {
+            let want: f64 = counts[e].iter().sum();
+            let got = out.assignment.expert_total(e);
+            assert!((want - got).abs() < 1e-6, "expert {e}: {want} vs {got}");
+        }
+    }
+
+    #[test]
+    fn plan_respects_slot_budget() {
+        let (counts, base, model, hw) = setup(4096, 7);
+        let mut cfg = ProbeConfig::default();
+        cfg.max_redundant = 1;
+        let mut base1 = Placement::sharded(base.ep, base.n_experts, 1);
+        base1.clear_replicas();
+        let out = plan(&counts, &base1, &model, &hw, &wide_windows(), &cfg);
+        for r in 0..8 {
+            assert!(out.placement.slots_used(r) <= 1);
+        }
+    }
+
+    #[test]
+    fn tight_window_blocks_replication() {
+        let (counts, base, model, hw) = setup(4096, 9);
+        let cfg = ProbeConfig::default();
+        // window shorter than one expert transfer → no replicas possible
+        let w = transfer_time(1, &model, &hw) * 0.5;
+        let out = plan(&counts, &base, &model, &hw, &vec![w; 8], &cfg);
+        assert_eq!(out.placement.total_replicas(), 0);
+        assert_eq!(out.est_after, out.est_before);
+    }
+
+    #[test]
+    fn window_disabled_ablation_replicates_anyway() {
+        let (counts, base, model, hw) = setup(4096, 9);
+        let mut cfg = ProbeConfig::default();
+        cfg.enforce_window = false;
+        let w = transfer_time(1, &model, &hw) * 0.5;
+        let out = plan(&counts, &base, &model, &hw, &vec![w; 8], &cfg);
+        assert!(out.placement.total_replicas() > 0);
+    }
+
+    #[test]
+    fn locality_pinned_tokens_never_move() {
+        let (counts, base, model, hw) = setup(3072, 11);
+        let cfg = ProbeConfig::default();
+        let out = plan(&counts, &base, &model, &hw, &wide_windows(), &cfg);
+        // tokens originating on an expert's home rank stay there
+        for e in 0..model.n_experts {
+            let home = base.home_rank(e);
+            let pinned = counts[e][home];
+            assert!(
+                (out.assignment.get(e, home, home) - pinned).abs() < 1e-9,
+                "expert {e}: pinned tokens moved"
+            );
+        }
+    }
+
+    #[test]
+    fn planned_ir_improves() {
+        let (counts, base, model, hw) = setup(6144, 13);
+        let cfg = ProbeConfig::default();
+        let out = plan(&counts, &base, &model, &hw, &wide_windows(), &cfg);
+        let loads_of = |a: &Assignment| -> Vec<f64> {
+            (0..8)
+                .map(|r| (0..model.n_experts).map(|e| a.tokens_on(e, r)).sum())
+                .collect()
+        };
+        let before = Assignment::locality_first_from_counts(&counts, &base);
+        let ir_b = imbalance_ratio(&loads_of(&before));
+        let ir_a = imbalance_ratio(&loads_of(&out.assignment));
+        assert!(ir_a < ir_b, "IR {ir_b} -> {ir_a}");
+    }
+
+    #[test]
+    fn iteration_budget_respected() {
+        let (counts, base, model, hw) = setup(8192, 15);
+        let mut cfg = ProbeConfig::default();
+        cfg.k_max = 2;
+        let out = plan(&counts, &base, &model, &hw, &wide_windows(), &cfg);
+        assert!(out.iterations <= 2);
+        assert!(out.placement.total_replicas() <= 2);
+    }
+
+    #[test]
+    fn rebalance_existing_respects_placement() {
+        let (counts, base, model, hw) = setup(4096, 17);
+        let cfg = ProbeConfig::default();
+        let planned = plan(&counts, &base, &model, &hw, &wide_windows(), &cfg);
+        // re-derive with slightly different (actual) counts
+        let mut actual = counts.clone();
+        actual[0][0] += 8.0;
+        actual[1][0] = (actual[1][0] - 8.0).max(0.0);
+        let a = rebalance_existing(&actual, &planned.placement, &model, &hw, 32);
+        let counts_u32: Vec<u32> = actual
+            .iter()
+            .map(|v| v.iter().sum::<f64>() as u32)
+            .collect();
+        a.validate(&counts_u32, &planned.placement).unwrap();
+    }
+
+    #[test]
+    fn water_filling_beats_naive_split() {
+        let (counts, base, model, hw) = setup(6144, 19);
+        let mut cfg = ProbeConfig::default();
+        let wf = plan(&counts, &base, &model, &hw, &wide_windows(), &cfg);
+        cfg.water_filling = false;
+        let naive = plan(&counts, &base, &model, &hw, &wide_windows(), &cfg);
+        assert!(
+            wf.est_after <= naive.est_after * 1.05,
+            "water-filling {} vs naive {}",
+            wf.est_after,
+            naive.est_after
+        );
+    }
+}

@@ -1,0 +1,218 @@
+//! Lookahead predictors (paper §4.2) and fidelity metrics.
+//!
+//! Two implementations:
+//! * [`StatisticalPredictor`] — an accuracy-parameterized error process
+//!   used for paper-scale simulations, calibrated to Fig. 10 (≈0.90
+//!   distilled, ≈0.75 untrained prior). Per token-slot, the prediction
+//!   equals the ground truth with probability `accuracy`, otherwise a
+//!   popularity-biased wrong expert (errors cluster on plausible experts,
+//!   as a distilled router's do).
+//! * `runtime::PjrtPredictor` — the real distilled MLP exported by
+//!   `python/compile/aot.py`, whose predictions arrive fused in the
+//!   decode-step artifact outputs (see [`crate::runtime`]).
+
+use crate::routing::LayerRouting;
+use crate::util::Rng;
+
+/// Per-layer prediction fidelity (paper Fig. 10 metrics).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PredFidelity {
+    /// |pred_topk ∩ actual_topk| / k.
+    pub top_k_accuracy: f64,
+    /// Fraction of the actual top-⌈k/2⌉ covered by the predicted top-k.
+    pub top_half_k_hit_rate: f64,
+    pub n_tokens: usize,
+}
+
+/// Compare a predicted routing against ground truth.
+pub fn fidelity(actual: &LayerRouting, predicted: &LayerRouting) -> PredFidelity {
+    assert_eq!(actual.n_tokens, predicted.n_tokens);
+    assert_eq!(actual.top_k, predicted.top_k);
+    let k = actual.top_k;
+    let half = k.div_ceil(2);
+    let mut hit_k = 0usize;
+    let mut hit_half = 0usize;
+    for t in 0..actual.n_tokens {
+        let a = actual.token_experts(t);
+        let p = predicted.token_experts(t);
+        // actual top-k is unordered here; "top-half-k" uses the first
+        // half of the actual list, which routing models emit in
+        // decreasing-affinity order.
+        hit_k += a.iter().filter(|e| p.contains(e)).count();
+        hit_half += a[..half].iter().filter(|e| p.contains(e)).count();
+    }
+    PredFidelity {
+        top_k_accuracy: hit_k as f64 / (actual.n_tokens * k) as f64,
+        top_half_k_hit_rate: hit_half as f64 / (actual.n_tokens * half) as f64,
+        n_tokens: actual.n_tokens,
+    }
+}
+
+/// Accuracy-parameterized predictor for simulator-scale models.
+#[derive(Debug, Clone)]
+pub struct StatisticalPredictor {
+    /// Probability a token-slot prediction matches the ground truth.
+    pub accuracy: f64,
+    rng: Rng,
+}
+
+impl StatisticalPredictor {
+    pub fn new(accuracy: f64, seed: u64) -> StatisticalPredictor {
+        assert!((0.0..=1.0).contains(&accuracy));
+        StatisticalPredictor {
+            accuracy,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Paper Fig. 10 presets.
+    pub fn distilled(seed: u64) -> StatisticalPredictor {
+        StatisticalPredictor::new(0.90, seed)
+    }
+    pub fn untrained(seed: u64) -> StatisticalPredictor {
+        StatisticalPredictor::new(0.75, seed)
+    }
+
+    /// Produce the lookahead prediction for one layer: per-token expert
+    /// sets that agree with `actual` at the configured rate. Wrong slots
+    /// are drawn from the layer's global popularity (mis-predictions are
+    /// plausible hotspots, not uniform noise).
+    pub fn predict(&mut self, actual: &LayerRouting) -> LayerRouting {
+        let counts = actual.expert_counts();
+        // popularity CDF for O(log E) wrong-slot draws (§Perf)
+        let mut cdf: Vec<f64> = Vec::with_capacity(counts.len());
+        let mut acc = 0.0;
+        for &c in &counts {
+            acc += c as f64 + 0.5;
+            cdf.push(acc);
+        }
+        let total = acc;
+        let k = actual.top_k;
+        let mut experts = Vec::with_capacity(actual.experts.len());
+        for t in 0..actual.n_tokens {
+            let truth = actual.token_experts(t);
+            let start = experts.len();
+            for j in 0..k {
+                if self.rng.next_f64() < self.accuracy {
+                    experts.push(truth[j]);
+                } else {
+                    // plausible wrong expert, distinct within the token
+                    loop {
+                        let x = self.rng.next_f64() * total;
+                        let e = cdf.partition_point(|&c| c < x).min(cdf.len() - 1) as u16;
+                        if !experts[start..].contains(&e) {
+                            experts.push(e);
+                            break;
+                        }
+                    }
+                }
+            }
+            // de-dup collisions introduced when a correct slot repeats an
+            // earlier wrong pick
+            let slice = &mut experts[start..];
+            for j in 1..k {
+                if slice[..j].contains(&slice[j]) {
+                    let mut e = slice[j];
+                    loop {
+                        e = (e + 1) % actual.n_experts as u16;
+                        if !slice[..j].contains(&e) {
+                            break;
+                        }
+                    }
+                    slice[j] = e;
+                }
+            }
+        }
+        LayerRouting::new(actual.n_tokens, k, actual.n_experts, experts)
+    }
+
+    /// Predicted per-(expert, source-rank) counts — the planner's input.
+    pub fn predict_counts(&mut self, actual: &LayerRouting, ep: usize) -> (LayerRouting, Vec<Vec<f64>>) {
+        let predicted = self.predict(actual);
+        let counts = predicted
+            .expert_counts_by_source(ep)
+            .into_iter()
+            .map(|v| v.into_iter().map(|c| c as f64).collect())
+            .collect();
+        (predicted, counts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::routing::RoutingModel;
+
+    fn actual(n: usize) -> LayerRouting {
+        let mut m = RoutingModel::calibrated(1, 64, 4, 2, 3);
+        m.route_step(&vec![0u16; n]).layers.remove(0)
+    }
+
+    #[test]
+    fn perfect_predictor_is_exact() {
+        let a = actual(256);
+        let mut p = StatisticalPredictor::new(1.0, 1);
+        let pred = p.predict(&a);
+        assert_eq!(pred, a);
+        let f = fidelity(&a, &pred);
+        assert_eq!(f.top_k_accuracy, 1.0);
+        assert_eq!(f.top_half_k_hit_rate, 1.0);
+    }
+
+    #[test]
+    fn accuracy_calibrated() {
+        let a = actual(4096);
+        for target in [0.6, 0.75, 0.9] {
+            let mut p = StatisticalPredictor::new(target, 7);
+            let f = fidelity(&a, &p.predict(&a));
+            // set-overlap accuracy is >= slot accuracy (wrong slot may
+            // still hit another true expert), so allow a +0.1 band
+            assert!(
+                f.top_k_accuracy >= target - 0.03 && f.top_k_accuracy <= target + 0.12,
+                "target {target}: got {}",
+                f.top_k_accuracy
+            );
+        }
+    }
+
+    #[test]
+    fn zero_accuracy_still_valid_topk() {
+        let a = actual(128);
+        let mut p = StatisticalPredictor::new(0.0, 11);
+        let pred = p.predict(&a);
+        for t in 0..pred.n_tokens {
+            let es = pred.token_experts(t);
+            let mut s = es.to_vec();
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), es.len(), "duplicate experts in prediction");
+        }
+    }
+
+    #[test]
+    fn predicted_counts_conserve() {
+        let a = actual(512);
+        let mut p = StatisticalPredictor::distilled(5);
+        let (_, counts) = p.predict_counts(&a, 8);
+        let total: f64 = counts.iter().flat_map(|v| v.iter()).sum();
+        assert!((total - (512 * 4) as f64).abs() < 1e-9);
+    }
+
+    #[test]
+    fn higher_accuracy_better_fidelity() {
+        let a = actual(2048);
+        let f_lo = fidelity(&a, &StatisticalPredictor::new(0.5, 3).predict(&a));
+        let f_hi = fidelity(&a, &StatisticalPredictor::new(0.95, 3).predict(&a));
+        assert!(f_hi.top_k_accuracy > f_lo.top_k_accuracy + 0.2);
+    }
+
+    #[test]
+    fn fidelity_detects_mismatch() {
+        let a = actual(64);
+        // shift every expert by one → low agreement
+        let shifted: Vec<u16> = a.experts.iter().map(|&e| (e + 1) % 64).collect();
+        let b = LayerRouting::new(a.n_tokens, a.top_k, a.n_experts, shifted);
+        let f = fidelity(&a, &b);
+        assert!(f.top_k_accuracy < 0.35);
+    }
+}

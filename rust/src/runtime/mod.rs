@@ -1,0 +1,490 @@
+//! PJRT runtime: load the AOT artifacts built by `python/compile/aot.py`
+//! and execute the real small MoE model from the rust hot path.
+//!
+//! Pattern (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute_b`. Weights
+//! are uploaded to device buffers once at load time; the per-step inputs
+//! (tokens, positions, KV cache) are the only recurring host↔device
+//! copies. Python never runs here.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::Json;
+
+/// Shape/config of the small real model (from `artifacts/metadata.json`).
+#[derive(Debug, Clone)]
+pub struct SmallModelCfg {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub max_seq: usize,
+    pub prefill_batch: usize,
+    pub prefill_chunk: usize,
+    pub decode_batches: Vec<usize>,
+}
+
+impl SmallModelCfg {
+    pub fn kv_len(&self, batch: usize) -> usize {
+        self.n_layers * 2 * batch * self.max_seq * self.d_model
+    }
+    pub fn kv_dims(&self, batch: usize) -> Vec<usize> {
+        vec![self.n_layers, 2, batch, self.max_seq, self.d_model]
+    }
+}
+
+/// One weight tensor's manifest entry.
+#[derive(Debug, Clone)]
+struct WeightEntry {
+    name: String,
+    shape: Vec<usize>,
+    offset: usize,
+    size: usize,
+}
+
+/// Outputs of one decode step (all layers).
+#[derive(Debug, Clone)]
+pub struct DecodeOut {
+    pub batch: usize,
+    /// `[B, vocab]` next-token logits.
+    pub logits: Vec<f32>,
+    /// `[L, B, K]` ground-truth routed experts.
+    pub actual_idx: Vec<i32>,
+    /// `[L, B, K]` gate weights.
+    pub actual_gate: Vec<f32>,
+    /// `[L, B, K]` distilled lookahead predictions (-1 on layer 0).
+    pub pred_idx: Vec<i32>,
+    /// `[L, B, K]` untrained-prior predictions (-1 on layer 0).
+    pub prior_idx: Vec<i32>,
+    /// Wall-clock of the PJRT execution (incl. host copies).
+    pub exec_time: f64,
+}
+
+/// Outputs of one prefill chunk.
+#[derive(Debug, Clone)]
+pub struct PrefillOut {
+    pub batch: usize,
+    pub chunk: usize,
+    /// `[B, vocab]` logits at the last chunk position.
+    pub logits_last: Vec<f32>,
+    /// `[L, B, S, K]`.
+    pub actual_idx: Vec<i32>,
+    pub actual_gate: Vec<f32>,
+    pub pred_idx: Vec<i32>,
+    pub prior_idx: Vec<i32>,
+    pub exec_time: f64,
+}
+
+/// The PJRT engine: one compiled executable per model variant.
+pub struct Engine {
+    client: xla::PjRtClient,
+    cfg: SmallModelCfg,
+    weights: Vec<xla::PjRtBuffer>,
+    decode: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    prefill: xla::PjRtLoadedExecutable,
+    moe_block: xla::PjRtLoadedExecutable,
+    n_params: usize,
+    /// Per-domain token distributions exported by the build (so serving
+    /// traffic matches the distillation corpus); empty when absent.
+    domain_dists: Vec<Vec<f64>>,
+}
+
+impl Engine {
+    /// Load artifacts from `dir` (default `artifacts/`).
+    pub fn load(dir: &str) -> Result<Engine> {
+        let dir = Path::new(dir);
+        let meta_text = std::fs::read_to_string(dir.join("metadata.json")).with_context(|| {
+            format!(
+                "read {}/metadata.json (run `make artifacts`)",
+                dir.display()
+            )
+        })?;
+        let meta = Json::parse(&meta_text).map_err(|e| anyhow!("metadata.json: {e}"))?;
+        let m = meta.get("model");
+        let cfg = SmallModelCfg {
+            vocab: m.get("vocab").as_usize().context("vocab")?,
+            d_model: m.get("d_model").as_usize().context("d_model")?,
+            n_layers: m.get("n_layers").as_usize().context("n_layers")?,
+            n_experts: m.get("n_experts").as_usize().context("n_experts")?,
+            top_k: m.get("top_k").as_usize().context("top_k")?,
+            max_seq: m.get("max_seq").as_usize().context("max_seq")?,
+            prefill_batch: m.get("prefill_batch").as_usize().context("prefill_batch")?,
+            prefill_chunk: m.get("prefill_chunk").as_usize().context("prefill_chunk")?,
+            decode_batches: vec![4, 8, 16],
+        };
+
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let entries = read_manifest(&dir.join("weights_manifest.json"))?;
+        let blob = std::fs::read(dir.join("weights.bin")).context("read weights.bin")?;
+        let mut weights = Vec::with_capacity(entries.len());
+        for e in &entries {
+            let bytes = &blob[e.offset..e.offset + e.size];
+            let floats: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            let dims = if e.shape.is_empty() {
+                vec![1]
+            } else {
+                e.shape.clone()
+            };
+            let buf = client
+                .buffer_from_host_buffer::<f32>(&floats, &dims, None)
+                .map_err(|err| anyhow!("upload weight {}: {err:?}", e.name))?;
+            weights.push(buf);
+        }
+
+        let compile = |file: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = dir.join(file);
+            let proto =
+                xla::HloModuleProto::from_text_file(path.to_str().context("path utf8")?)
+                    .map_err(|e| anyhow!("parse {file}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {file}: {e:?}"))
+        };
+
+        let mut decode = BTreeMap::new();
+        for &b in &cfg.decode_batches {
+            decode.insert(b, compile(&format!("decode_step_b{b}.hlo.txt"))?);
+        }
+        let prefill = compile(&format!(
+            "prefill_b{}_s{}.hlo.txt",
+            cfg.prefill_batch, cfg.prefill_chunk
+        ))?;
+        let moe_block = compile("moe_block_t64.hlo.txt")?;
+
+        // optional: domain token distributions for workload synthesis
+        let domain_dists = std::fs::read_to_string(dir.join("domain_dists.json"))
+            .ok()
+            .and_then(|t| Json::parse(&t).ok())
+            .and_then(|j| {
+                j.get("dists").as_arr().map(|rows| {
+                    rows.iter()
+                        .map(|r| {
+                            r.as_arr()
+                                .unwrap_or(&[])
+                                .iter()
+                                .filter_map(|x| x.as_f64())
+                                .collect::<Vec<f64>>()
+                        })
+                        .collect::<Vec<_>>()
+                })
+            })
+            .unwrap_or_default();
+
+        Ok(Engine {
+            client,
+            n_params: entries.len(),
+            cfg,
+            weights,
+            decode,
+            prefill,
+            moe_block,
+            domain_dists,
+        })
+    }
+
+    /// Token distribution of a domain (when exported by the build).
+    pub fn domain_dist(&self, domain: u16) -> Option<&[f64]> {
+        self.domain_dists
+            .get(domain as usize)
+            .filter(|d| d.len() == self.cfg.vocab)
+            .map(|d| d.as_slice())
+    }
+
+    pub fn cfg(&self) -> &SmallModelCfg {
+        &self.cfg
+    }
+
+    /// Supported decode batch sizes (compiled variants).
+    pub fn decode_batches(&self) -> Vec<usize> {
+        self.decode.keys().copied().collect()
+    }
+
+    /// Smallest compiled batch ≥ `n` (pad up), or the largest available.
+    pub fn pick_batch(&self, n: usize) -> usize {
+        self.decode
+            .keys()
+            .copied()
+            .find(|&b| b >= n)
+            .unwrap_or_else(|| *self.decode.keys().last().unwrap())
+    }
+
+    /// Run one decode step. `kv` is the cache for the chosen batch and is
+    /// updated in place.
+    pub fn decode_step(
+        &self,
+        batch: usize,
+        tokens: &[i32],
+        pos: &[i32],
+        kv: &mut [f32],
+    ) -> Result<DecodeOut> {
+        let exe = self
+            .decode
+            .get(&batch)
+            .ok_or_else(|| anyhow!("no decode variant for batch {batch}"))?;
+        if tokens.len() != batch || pos.len() != batch {
+            bail!("tokens/pos must have len {batch}");
+        }
+        if kv.len() != self.cfg.kv_len(batch) {
+            bail!("kv len {} != {}", kv.len(), self.cfg.kv_len(batch));
+        }
+        let t0 = std::time::Instant::now();
+        let tok_b = self
+            .client
+            .buffer_from_host_buffer::<i32>(tokens, &[batch], None)
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let pos_b = self
+            .client
+            .buffer_from_host_buffer::<i32>(pos, &[batch], None)
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let kv_b = self
+            .client
+            .buffer_from_host_buffer::<f32>(kv, &self.cfg.kv_dims(batch), None)
+            .map_err(|e| anyhow!("{e:?}"))?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = self.weights.iter().collect();
+        args.push(&tok_b);
+        args.push(&pos_b);
+        args.push(&kv_b);
+        let result = exe.execute_b(&args).map_err(|e| anyhow!("execute: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let parts = tuple.to_tuple().map_err(|e| anyhow!("{e:?}"))?;
+        if parts.len() != 6 {
+            bail!("decode artifact returned {} outputs, want 6", parts.len());
+        }
+        let logits = parts[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let new_kv = parts[1].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        kv.copy_from_slice(&new_kv);
+        Ok(DecodeOut {
+            batch,
+            logits,
+            actual_idx: parts[2].to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?,
+            actual_gate: parts[3].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+            pred_idx: parts[4].to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?,
+            prior_idx: parts[5].to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?,
+            exec_time: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Run one prefill chunk (batch/chunk fixed by the artifact).
+    pub fn prefill_chunk(
+        &self,
+        tokens: &[i32],
+        start_pos: &[i32],
+        kv: &mut [f32],
+    ) -> Result<PrefillOut> {
+        let b = self.cfg.prefill_batch;
+        let s = self.cfg.prefill_chunk;
+        if tokens.len() != b * s {
+            bail!("tokens must be [{b},{s}]");
+        }
+        if kv.len() != self.cfg.kv_len(b) {
+            bail!("kv len mismatch");
+        }
+        let t0 = std::time::Instant::now();
+        let tok_b = self
+            .client
+            .buffer_from_host_buffer::<i32>(tokens, &[b, s], None)
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let pos_b = self
+            .client
+            .buffer_from_host_buffer::<i32>(start_pos, &[b], None)
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let kv_b = self
+            .client
+            .buffer_from_host_buffer::<f32>(kv, &self.cfg.kv_dims(b), None)
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.weights.iter().collect();
+        args.push(&tok_b);
+        args.push(&pos_b);
+        args.push(&kv_b);
+        let result = self
+            .prefill
+            .execute_b(&args)
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        let parts = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{e:?}"))?
+            .to_tuple()
+            .map_err(|e| anyhow!("{e:?}"))?;
+        if parts.len() != 6 {
+            bail!("prefill artifact returned {} outputs, want 6", parts.len());
+        }
+        let new_kv = parts[1].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        kv.copy_from_slice(&new_kv);
+        Ok(PrefillOut {
+            batch: b,
+            chunk: s,
+            logits_last: parts[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+            actual_idx: parts[2].to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?,
+            actual_gate: parts[3].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+            pred_idx: parts[4].to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?,
+            prior_idx: parts[5].to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?,
+            exec_time: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Run the standalone MoE block (perf microbench): x is `[64, H]`.
+    pub fn moe_block(&self, x: &[f32]) -> Result<(Vec<f32>, f64)> {
+        let h = self.cfg.d_model;
+        if x.len() != 64 * h {
+            bail!("x must be [64,{h}]");
+        }
+        let t0 = std::time::Instant::now();
+        let x_b = self
+            .client
+            .buffer_from_host_buffer::<f32>(x, &[64, h], None)
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.weights.iter().collect();
+        args.push(&x_b);
+        let result = self
+            .moe_block
+            .execute_b(&args)
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        let parts = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{e:?}"))?
+            .to_tuple()
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let y = parts[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        Ok((y, t0.elapsed().as_secs_f64()))
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.n_params
+    }
+}
+
+fn read_manifest(path: &Path) -> Result<Vec<WeightEntry>> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("read {}", path.display()))?;
+    let j = Json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+    let params = j.get("params").as_arr().context("manifest params array")?;
+    let mut out = Vec::with_capacity(params.len());
+    for p in params {
+        out.push(WeightEntry {
+            name: p.get("name").as_str().context("name")?.to_string(),
+            shape: p
+                .get("shape")
+                .as_arr()
+                .context("shape")?
+                .iter()
+                .map(|x| x.as_usize().unwrap_or(0))
+                .collect(),
+            offset: p.get("offset_bytes").as_usize().context("offset")?,
+            size: p.get("size_bytes").as_usize().context("size")?,
+        });
+    }
+    Ok(out)
+}
+
+/// Ground-truth routing extracted from a decode step.
+pub fn routing_from_decode(
+    out: &DecodeOut,
+    cfg: &SmallModelCfg,
+) -> Vec<crate::routing::LayerRouting> {
+    split_routing_opt(&out.actual_idx, cfg, out.batch, 1)
+        .into_iter()
+        .map(|o| o.expect("ground-truth routing has no sentinel layers"))
+        .collect()
+}
+
+/// Lookahead predictions from a decode step (None on layer 0: the -1
+/// sentinel — no lookahead source exists for the first layer).
+pub fn predictions_from_decode(
+    out: &DecodeOut,
+    cfg: &SmallModelCfg,
+) -> Vec<Option<crate::routing::LayerRouting>> {
+    split_routing_opt(&out.pred_idx, cfg, out.batch, 1)
+}
+
+/// Untrained-prior predictions (Fig. 10 baseline).
+pub fn priors_from_decode(
+    out: &DecodeOut,
+    cfg: &SmallModelCfg,
+) -> Vec<Option<crate::routing::LayerRouting>> {
+    split_routing_opt(&out.prior_idx, cfg, out.batch, 1)
+}
+
+fn split_routing_opt(
+    idx: &[i32],
+    cfg: &SmallModelCfg,
+    batch: usize,
+    seq: usize,
+) -> Vec<Option<crate::routing::LayerRouting>> {
+    let k = cfg.top_k;
+    let per_layer = batch * seq * k;
+    assert_eq!(idx.len(), cfg.n_layers * per_layer);
+    (0..cfg.n_layers)
+        .map(|l| {
+            let slice = &idx[l * per_layer..(l + 1) * per_layer];
+            if slice.iter().any(|&e| e < 0) {
+                return None;
+            }
+            Some(crate::routing::LayerRouting::new(
+                batch * seq,
+                k,
+                cfg.n_experts,
+                slice.iter().map(|&e| e as u16).collect(),
+            ))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    // Engine tests live in rust/tests/runtime_e2e.rs (they need built
+    // artifacts); here we test the manifest/routing helpers only.
+    use super::*;
+
+    fn cfg() -> SmallModelCfg {
+        SmallModelCfg {
+            vocab: 512,
+            d_model: 128,
+            n_layers: 2,
+            n_experts: 16,
+            top_k: 2,
+            max_seq: 160,
+            prefill_batch: 4,
+            prefill_chunk: 32,
+            decode_batches: vec![4, 8, 16],
+        }
+    }
+
+    #[test]
+    fn split_routing_shapes() {
+        let c = cfg();
+        let idx: Vec<i32> = (0..(2 * 3 * 2)).map(|i| (i % 16) as i32).collect();
+        let layers = split_routing_opt(&idx, &c, 3, 1);
+        assert_eq!(layers.len(), 2);
+        let l0 = layers[0].as_ref().unwrap();
+        assert_eq!(l0.n_tokens, 3);
+        assert_eq!(l0.top_k, 2);
+    }
+
+    #[test]
+    fn sentinel_layers_become_none() {
+        let c = cfg();
+        let mut idx: Vec<i32> = vec![1; 2 * 3 * 2];
+        idx[0] = -1;
+        let layers = split_routing_opt(&idx, &c, 3, 1);
+        assert!(layers[0].is_none());
+        assert!(layers[1].is_some());
+    }
+
+    #[test]
+    fn kv_len_formula() {
+        let c = cfg();
+        assert_eq!(c.kv_len(4), 2 * 2 * 4 * 160 * 128);
+        assert_eq!(c.kv_dims(8), vec![2, 2, 8, 160, 128]);
+    }
+}

@@ -1,0 +1,330 @@
+//! Phase-Locked Co-Scheduling (paper §4.4): assemble the per-layer
+//! dual-track timeline and account the split-phase prefetch transmission.
+//!
+//! Main track:  Attention → All-to-All Dispatch → MoE compute → (sync
+//! wait) → All-to-All Combine.  Aux track: Predict ∥ Dispatch, Plan ∥
+//! Dispatch + MoE, Prefetch ∥ MoE compute — suspended during Combine —
+//! resuming into the next layer's Attention. Overhead not hidden inside
+//! that window is `exposed` and extends the critical path; with
+//! split-phase disabled (ablation) leftover prefetch bytes contend with
+//! Combine and inflate it instead.
+
+use crate::metrics::{LayerTimeline, Phase, PhaseSpan};
+use crate::model::MoeModel;
+use crate::perfmodel::{self, CommVolumes};
+use crate::topology::HardwareProfile;
+
+/// Per-layer scheduling inputs produced by a balancer + the perf model.
+#[derive(Debug, Clone)]
+pub struct LayerSchedule {
+    /// Per-rank MoE compute seconds (eq. 2 summed over hosted experts).
+    pub compute: Vec<f64>,
+    /// Dispatch traffic volumes (token-level dedup applied).
+    pub dispatch: CommVolumes,
+    /// Attention seconds for this layer (balanced across DP ranks).
+    pub attn_time: f64,
+    /// Attention seconds of the *next* layer (tail of the hiding window).
+    pub next_attn_time: f64,
+    /// Expert prefetch slots per rank planned for the next layer.
+    pub prefetch_slots: Vec<usize>,
+    /// Aux-track control costs (0 for baselines).
+    pub predict_time: f64,
+    pub plan_time: f64,
+    /// Reactive (non-hidden) transfer charged directly on the critical
+    /// path (EPLB-style rebalancing).
+    pub exposed_transfer: f64,
+    /// Split-phase transmission on (PROBE) or off (ablation).
+    pub split_phase: bool,
+    /// Fraction of dispatch payload pre-sent to high-confidence predicted
+    /// experts during the previous window (paper §6.4 future work:
+    /// overlap All-to-All with routing). 0.0 = off.
+    pub pre_dispatch_fraction: f64,
+}
+
+/// Build the dual-track timeline for one MoE layer.
+pub fn schedule_layer(
+    s: &LayerSchedule,
+    model: &MoeModel,
+    hw: &HardwareProfile,
+) -> LayerTimeline {
+    let ep = s.compute.len();
+    let bw = hw.effective_alltoall_bw();
+    // Predictive pre-dispatch (§6.4): the confident fraction of payloads
+    // was already streamed during the previous window; only the residual
+    // (mispredicted / low-confidence) volume is on the critical path.
+    let residual = (1.0 - s.pre_dispatch_fraction).clamp(0.0, 1.0);
+    let dispatch_vol = perfmodel::CommVolumes {
+        v_in: s.dispatch.v_in.iter().map(|v| v * residual).collect(),
+        v_out: s.dispatch.v_out.iter().map(|v| v * residual).collect(),
+    };
+    let dispatch_dur = perfmodel::alltoall_time(&dispatch_vol, hw);
+    let crit = dispatch_vol.critical();
+
+    // Combine mirrors dispatch volumes with directions swapped.
+    let combine_vol = CommVolumes {
+        v_in: s.dispatch.v_out.clone(),
+        v_out: s.dispatch.v_in.clone(),
+    };
+    let mut combine_dur = perfmodel::alltoall_time(&combine_vol, hw);
+
+    // ---- prefetch accounting (split-phase transmission) ----
+    let max_slots = s.prefetch_slots.iter().copied().max().unwrap_or(0);
+    let t_trans = perfmodel::transfer_time(max_slots, model, hw);
+    let compute_max = s.compute.iter().cloned().fold(0.0, f64::max);
+    // phase 1 window: the planner finishes during dispatch+compute; the
+    // transfer may start once the plan lands, overlapping MoE compute.
+    let plan_done = s.predict_time + s.plan_time;
+    let phase1_window = (dispatch_dur + compute_max - plan_done).max(0.0);
+    let phase1_sent = t_trans.min(phase1_window);
+    let leftover = t_trans - phase1_sent;
+    let mut exposed = 0.0;
+    if leftover > 0.0 {
+        if s.split_phase {
+            // suspend during combine; resume into next attention
+            let phase2 = leftover.min(s.next_attn_time);
+            exposed = leftover - phase2;
+        } else {
+            // contend with combine for fabric bandwidth: serialized share
+            combine_dur += leftover;
+        }
+    }
+    exposed += s.exposed_transfer;
+
+    // ---- main-track spans ----
+    let attn_end = s.attn_time;
+    let dispatch_end = attn_end + dispatch_dur;
+    let comp_end_max = dispatch_end + compute_max;
+    let mut ranks = Vec::with_capacity(ep);
+    for r in 0..ep {
+        let mut spans = Vec::with_capacity(6);
+        spans.push(PhaseSpan {
+            phase: Phase::Attention,
+            start: 0.0,
+            end: attn_end,
+        });
+        // own traffic first, then wait for the collective to complete
+        let own_disp = hw.collective_base_latency + crit[r] / bw;
+        spans.push(PhaseSpan {
+            phase: Phase::Dispatch,
+            start: attn_end,
+            end: attn_end + own_disp,
+        });
+        if own_disp < dispatch_dur {
+            spans.push(PhaseSpan {
+                phase: Phase::SyncWait,
+                start: attn_end + own_disp,
+                end: dispatch_end,
+            });
+        }
+        let comp_end = dispatch_end + s.compute[r];
+        spans.push(PhaseSpan {
+            phase: Phase::MoeCompute,
+            start: dispatch_end,
+            end: comp_end,
+        });
+        if comp_end < comp_end_max {
+            // straggler wait: this is what inflates Combine in Fig. 11
+            spans.push(PhaseSpan {
+                phase: Phase::SyncWait,
+                start: comp_end,
+                end: comp_end_max,
+            });
+        }
+        spans.push(PhaseSpan {
+            phase: Phase::Combine,
+            start: comp_end_max,
+            end: comp_end_max + combine_dur,
+        });
+        ranks.push(spans);
+    }
+
+    // ---- aux-track spans (leader view) ----
+    let mut aux = Vec::new();
+    if s.predict_time > 0.0 {
+        aux.push(PhaseSpan {
+            phase: Phase::Predict,
+            start: attn_end,
+            end: attn_end + s.predict_time,
+        });
+    }
+    if s.plan_time > 0.0 {
+        aux.push(PhaseSpan {
+            phase: Phase::Plan,
+            start: attn_end + s.predict_time,
+            end: attn_end + plan_done,
+        });
+    }
+    if t_trans > 0.0 {
+        let p1_start = attn_end + plan_done;
+        aux.push(PhaseSpan {
+            phase: Phase::Prefetch,
+            start: p1_start,
+            end: p1_start + phase1_sent,
+        });
+        if leftover > 0.0 && s.split_phase {
+            // resumed segment rendered after combine
+            let resume = comp_end_max + combine_dur;
+            aux.push(PhaseSpan {
+                phase: Phase::Prefetch,
+                start: resume,
+                end: resume + leftover,
+            });
+        }
+        aux.push(PhaseSpan {
+            phase: Phase::Update,
+            start: comp_end_max + combine_dur,
+            end: comp_end_max + combine_dur + hw.kernel_launch,
+        });
+    }
+
+    LayerTimeline {
+        ranks,
+        aux,
+        exposed_overhead: exposed,
+    }
+}
+
+/// Attention time estimate for one layer at `tokens_per_rank` tokens:
+/// projection FLOPs plus KV-cache streaming. `mean_ctx` is the
+/// *effective* KV rows read per query token after GQA sharing and
+/// flash-attention tile reuse (≈ context/8 for GQA-8 decode; far less
+/// for prefill where query tiles share KV). The paper notes chunked
+/// prefill + short prompts keep attention off the critical path; MoE
+/// stragglers dominate.
+pub fn attention_time(
+    tokens_per_rank: usize,
+    mean_ctx: usize,
+    model: &MoeModel,
+    hw: &HardwareProfile,
+) -> f64 {
+    let h = model.hidden as f64;
+    let proj_flops = 8.0 * h * h * tokens_per_rank as f64;
+    let score_flops = 4.0 * mean_ctx as f64 * h * tokens_per_rank as f64;
+    let flops_t = (proj_flops + score_flops) / (hw.gemm_max_eff * hw.peak_flops);
+    let kv_bytes = tokens_per_rank as f64 * mean_ctx as f64 * 2.0 * h * model.dtype_bytes;
+    let mem_t = kv_bytes / hw.hbm_bw;
+    flops_t.max(mem_t) + hw.kernel_launch
+}
+
+/// Predictor cost: batched MLP inference plus the lightweight All-Gather
+/// of per-rank estimates (§5).
+pub fn predict_time(tokens_per_rank: usize, model: &MoeModel, hw: &HardwareProfile) -> f64 {
+    let h = model.hidden as f64;
+    // router prior + small residual MLP ≈ 2*H*(E + H/2) MACs per token
+    let flops = tokens_per_rank as f64 * 2.0 * h * (model.n_experts as f64 + h / 2.0);
+    flops / (hw.gemm_max_eff * hw.peak_flops) + hw.collective_base_latency
+}
+
+/// Modeled single-SM solver cost (§5: serial iterative updates, k_max
+/// capped). The rust planner's wall-clock is benchmarked separately and
+/// must also fit the window (EXPERIMENTS.md §Perf).
+pub fn plan_time(iterations: usize, hw: &HardwareProfile) -> f64 {
+    hw.kernel_launch + iterations as f64 * 1.5e-6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_sched(compute: Vec<f64>, slots: Vec<usize>, split: bool) -> LayerSchedule {
+        let ep = compute.len();
+        LayerSchedule {
+            compute,
+            dispatch: CommVolumes {
+                v_in: vec![1e6; ep],
+                v_out: vec![1e6; ep],
+            },
+            attn_time: 100e-6,
+            next_attn_time: 100e-6,
+            prefetch_slots: slots,
+            predict_time: 5e-6,
+            plan_time: 20e-6,
+            exposed_transfer: 0.0,
+            split_phase: split,
+            pre_dispatch_fraction: 0.0,
+        }
+    }
+
+    #[test]
+    fn pre_dispatch_shrinks_dispatch_phase() {
+        let mut s = mk_sched(vec![1e-3; 8], vec![0; 8], true);
+        let base = schedule_layer(&s, &model(), &hw());
+        s.pre_dispatch_fraction = 0.9;
+        let pre = schedule_layer(&s, &model(), &hw());
+        assert!(
+            pre.mean_phase_dur(Phase::Dispatch) < base.mean_phase_dur(Phase::Dispatch),
+            "pre-dispatch did not shrink dispatch"
+        );
+    }
+
+    fn hw() -> HardwareProfile {
+        HardwareProfile::hopper_141()
+    }
+    fn model() -> MoeModel {
+        MoeModel::gpt_oss_120b()
+    }
+
+    #[test]
+    fn straggler_creates_sync_wait() {
+        let tl = schedule_layer(&mk_sched(vec![1e-3, 0.2e-3], vec![0, 0], true), &model(), &hw());
+        assert!(tl.phase_dur(1, Phase::SyncWait) > 0.5e-3);
+        assert!(tl.phase_dur(0, Phase::SyncWait) < tl.phase_dur(1, Phase::SyncWait));
+    }
+
+    #[test]
+    fn small_prefetch_fully_hidden() {
+        // 1 expert ≈ 47.5MB / 450GB/s ≈ 105µs < compute window (1ms)
+        let tl = schedule_layer(&mk_sched(vec![1e-3; 8], vec![1; 8], true), &model(), &hw());
+        assert_eq!(tl.exposed_overhead, 0.0);
+        assert!(tl.aux.iter().any(|s| s.phase == Phase::Prefetch));
+    }
+
+    #[test]
+    fn oversized_prefetch_exposes_overhead() {
+        // tiny compute window, many slots → can't hide everything
+        let mut s = mk_sched(vec![10e-6; 8], vec![3; 8], true);
+        s.attn_time = 10e-6;
+        s.next_attn_time = 10e-6;
+        let tl = schedule_layer(&s, &model(), &hw());
+        assert!(tl.exposed_overhead > 0.0);
+    }
+
+    #[test]
+    fn no_split_phase_inflates_combine() {
+        let mut s = mk_sched(vec![50e-6; 8], vec![3; 8], true);
+        s.attn_time = 10e-6;
+        s.next_attn_time = 10e-6;
+        let with_split = schedule_layer(&s, &model(), &hw());
+        s.split_phase = false;
+        let without = schedule_layer(&s, &model(), &hw());
+        let combine_with = with_split.mean_phase_dur(Phase::Combine);
+        let combine_without = without.mean_phase_dur(Phase::Combine);
+        assert!(
+            combine_without > combine_with * 1.2,
+            "combine {combine_with} vs {combine_without}"
+        );
+    }
+
+    #[test]
+    fn aux_track_hidden_when_window_ample() {
+        let tl = schedule_layer(&mk_sched(vec![2e-3; 8], vec![2; 8], true), &model(), &hw());
+        // makespan must equal the main-track phases only
+        let main: f64 = tl.ranks[0].iter().map(|s| s.dur()).sum();
+        assert!((tl.makespan() - main).abs() < 1e-9);
+    }
+
+    #[test]
+    fn attention_time_scales_with_tokens() {
+        let m = model();
+        let h = hw();
+        assert!(attention_time(2048, 512, &m, &h) > attention_time(256, 512, &m, &h));
+    }
+
+    #[test]
+    fn control_costs_are_micro() {
+        let m = model();
+        let h = hw();
+        assert!(predict_time(768, &m, &h) < 50e-6);
+        assert!(plan_time(16, &h) < 50e-6);
+    }
+}

@@ -1,0 +1,172 @@
+//! Threaded serving front-end: a request/response queue pair feeding the
+//! real-model coordinator (no tokio offline; std mpsc + worker thread).
+//!
+//! The leader thread owns the PJRT engine and runs the continuous-
+//! batching loop; clients submit [`ServeRequest`]s through a channel and
+//! receive [`ServeResponse`]s when their request retires.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::coordinator::real::RealCoordinator;
+use crate::workload::{Dataset, Request};
+
+/// A client-visible generation request.
+#[derive(Debug, Clone)]
+pub struct ServeRequest {
+    pub id: u64,
+    pub domain: u16,
+    pub prompt_len: usize,
+    pub max_new_tokens: usize,
+}
+
+/// Completion notification.
+#[derive(Debug, Clone)]
+pub struct ServeResponse {
+    pub id: u64,
+    pub ttft: f64,
+    pub tpot: Option<f64>,
+    pub tokens_out: usize,
+}
+
+enum Msg {
+    Submit(ServeRequest),
+    Drain,
+}
+
+/// Handle to the serving thread.
+pub struct ServerHandle {
+    tx: Sender<Msg>,
+    rx: Receiver<ServeResponse>,
+    worker: Option<JoinHandle<ServeStats>>,
+}
+
+/// Aggregate statistics returned at shutdown.
+#[derive(Debug, Clone, Default)]
+pub struct ServeStats {
+    pub steps: usize,
+    pub completed: usize,
+    pub throughput: f64,
+    pub ttft_p50: f64,
+    pub tpot_p50: f64,
+    pub mean_ir: f64,
+}
+
+/// Spawn the serving loop. The PJRT engine is not `Send`, so the
+/// coordinator is constructed *inside* the leader thread from a factory.
+pub fn spawn<F>(factory: F, max_steps: usize) -> ServerHandle
+where
+    F: FnOnce() -> Result<RealCoordinator> + Send + 'static,
+{
+    let (tx, rx_in) = channel::<Msg>();
+    let (tx_out, rx) = channel::<ServeResponse>();
+    let worker = std::thread::Builder::new()
+        .name("probe-leader".into())
+        .spawn(move || {
+            let mut coord = factory().expect("coordinator construction failed");
+            serve_loop(&mut coord, rx_in, tx_out, max_steps)
+        })
+        .expect("spawn leader");
+    ServerHandle {
+        tx,
+        rx,
+        worker: Some(worker),
+    }
+}
+
+fn serve_loop(
+    coord: &mut RealCoordinator,
+    rx: Receiver<Msg>,
+    tx: Sender<ServeResponse>,
+    max_steps: usize,
+) -> ServeStats {
+    let mut draining = false;
+    let mut reported = 0usize;
+    let mut steps = 0usize;
+    loop {
+        // ingest all pending client messages without blocking the batch
+        loop {
+            match rx.try_recv() {
+                Ok(Msg::Submit(sr)) => {
+                    let prompt = coord.synth_prompt(sr.domain, sr.prompt_len);
+                    let req = Request {
+                        id: sr.id,
+                        domain: sr.domain,
+                        dataset: Dataset::Mixed,
+                        prompt_len: sr.prompt_len,
+                        max_new_tokens: sr.max_new_tokens,
+                        arrival: 0.0,
+                    };
+                    coord.submit(req, prompt);
+                }
+                Ok(Msg::Drain) => draining = true,
+                Err(_) => break,
+            }
+        }
+        let _ = coord.admit();
+        let progressed = matches!(coord.decode_step(), Ok(Some(_)));
+        if progressed {
+            steps += 1;
+        }
+        // notify completions
+        while reported < coord.metrics.requests.len() {
+            let m = &coord.metrics.requests[reported];
+            if m.finished.is_some() {
+                let _ = tx.send(ServeResponse {
+                    id: m.id,
+                    ttft: m.ttft().unwrap_or(0.0),
+                    tpot: m.tpot(),
+                    tokens_out: m.tokens_out,
+                });
+                reported += 1;
+            } else {
+                break;
+            }
+        }
+        let idle = coord.active_count() == 0 && coord.pending() == 0;
+        if (draining && idle) || steps >= max_steps {
+            break;
+        }
+        if idle {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+    }
+    let ttft = coord.metrics.ttft_summary();
+    let tpot = coord.metrics.tpot_summary();
+    ServeStats {
+        steps,
+        completed: coord
+            .metrics
+            .requests
+            .iter()
+            .filter(|m| m.finished.is_some())
+            .count(),
+        throughput: coord.metrics.throughput(),
+        ttft_p50: ttft.p50,
+        tpot_p50: tpot.p50,
+        mean_ir: coord.ir.mean(),
+    }
+}
+
+impl ServerHandle {
+    pub fn submit(&self, req: ServeRequest) {
+        let _ = self.tx.send(Msg::Submit(req));
+    }
+
+    /// Wait for one completion.
+    pub fn recv(&self) -> Result<ServeResponse> {
+        Ok(self.rx.recv()?)
+    }
+
+    /// Signal drain and join the leader, returning aggregate stats.
+    pub fn shutdown(mut self) -> ServeStats {
+        let _ = self.tx.send(Msg::Drain);
+        self.worker
+            .take()
+            .expect("not yet joined")
+            .join()
+            .expect("leader panicked")
+    }
+}

@@ -1,0 +1,270 @@
+//! Discrete-event EP cluster simulator: executes the §3 performance model
+//! against concrete per-token routing, one MoE layer at a time, and
+//! aggregates step latency, IR, and dual-track timelines.
+//!
+//! The simulator is the substitution for the paper's 8×Hopper testbed
+//! (DESIGN.md): balancers plug in as [`LayerDecision`] producers and the
+//! simulator measures exactly what the paper measures — layer makespans,
+//! compute skew, combine inflation, exposed transfer overhead.
+
+use crate::metrics::{LayerTimeline, Phase};
+use crate::model::MoeModel;
+use crate::perfmodel::{self, Assignment, DispatchPlan};
+use crate::placement::Placement;
+use crate::routing::{LayerRouting, StepRouting};
+use crate::scheduler::{self, LayerSchedule};
+use crate::topology::Cluster;
+use crate::util::stats::imbalance_ratio;
+
+/// Balancer output for one layer of one step.
+#[derive(Debug, Clone)]
+pub struct LayerDecision {
+    pub placement: Placement,
+    /// Token assignment for the ACTUAL routing (dispatch follows the
+    /// ground-truth router; only placement was decided ahead of time).
+    pub assignment: Assignment,
+    /// Expert prefetch slots per rank (|Δ_r^in| planned this layer).
+    pub prefetch_slots: Vec<usize>,
+    pub predict_time: f64,
+    pub plan_time: f64,
+    /// Reactive transfer charged on the critical path (EPLB).
+    pub exposed_transfer: f64,
+    /// §6.4 extension: confident dispatch fraction pre-sent ahead of the
+    /// collective (0.0 = disabled).
+    pub pre_dispatch_fraction: f64,
+}
+
+impl LayerDecision {
+    /// A no-op decision: static placement, locality-first dispatch.
+    pub fn passthrough(routing: &LayerRouting, placement: Placement) -> LayerDecision {
+        let assignment = Assignment::locality_first(routing, &placement);
+        let ep = placement.ep;
+        LayerDecision {
+            placement,
+            assignment,
+            prefetch_slots: vec![0; ep],
+            predict_time: 0.0,
+            plan_time: 0.0,
+            exposed_transfer: 0.0,
+            pre_dispatch_fraction: 0.0,
+        }
+    }
+}
+
+/// Result of simulating one step (all MoE layers once).
+#[derive(Debug, Clone)]
+pub struct StepOutcome {
+    /// End-to-end step latency (sum of layer makespans + exposure).
+    pub latency: f64,
+    pub timelines: Vec<LayerTimeline>,
+    /// Token-load IR per layer (paper eq. 1 at rank granularity).
+    pub ir_per_layer: Vec<f64>,
+    /// Compute-latency skew (max/avg) per layer (Fig. 11 metric).
+    pub comp_skew_per_layer: Vec<f64>,
+    /// Total tokens processed this step.
+    pub tokens: usize,
+}
+
+impl StepOutcome {
+    pub fn mean_ir(&self) -> f64 {
+        crate::util::stats::mean(&self.ir_per_layer)
+    }
+    pub fn mean_comp_skew(&self) -> f64 {
+        crate::util::stats::mean(&self.comp_skew_per_layer)
+    }
+}
+
+/// Cluster simulator for one model on one cluster.
+#[derive(Debug, Clone)]
+pub struct ClusterSim {
+    pub model: MoeModel,
+    pub cluster: Cluster,
+    pub split_phase: bool,
+    /// Effective KV rows read per query token (post-GQA/tiling); see
+    /// [`crate::scheduler::attention_time`].
+    pub mean_ctx: usize,
+}
+
+impl ClusterSim {
+    pub fn new(model: MoeModel, cluster: Cluster) -> ClusterSim {
+        ClusterSim {
+            model,
+            cluster,
+            split_phase: true,
+            mean_ctx: 64,
+        }
+    }
+
+    /// Simulate one step. `decisions[l]` drives layer `l`; the prefetch
+    /// planned by layer `l+1`'s decision transmits inside layer `l`'s
+    /// window (continuous lookahead pipelining).
+    pub fn run_step(&self, routing: &StepRouting, decisions: &[LayerDecision]) -> StepOutcome {
+        let n_layers = routing.layers.len();
+        assert_eq!(decisions.len(), n_layers);
+        let ep = self.cluster.ep;
+        let hw = &self.cluster.profile;
+        let tokens = routing.layers.first().map(|l| l.n_tokens).unwrap_or(0);
+        let tokens_per_rank = tokens.div_ceil(ep.max(1));
+        let attn = scheduler::attention_time(tokens_per_rank, self.mean_ctx, &self.model, hw);
+
+        let mut timelines = Vec::with_capacity(n_layers);
+        let mut ir_per_layer = Vec::with_capacity(n_layers);
+        let mut comp_skew = Vec::with_capacity(n_layers);
+        let mut latency = 0.0;
+
+        for l in 0..n_layers {
+            let lr = &routing.layers[l];
+            let d = &decisions[l];
+            // prefetch transmitted in this layer's window belongs to the
+            // NEXT layer's plan (wraps to 0 for the last layer: the next
+            // step's first layer).
+            let next = &decisions[(l + 1) % n_layers];
+
+            let loads = d.assignment.rank_expert_loads();
+            let compute = perfmodel::rank_compute_times(&loads, &self.model, hw);
+            let plan = DispatchPlan::from_assignment(lr, &d.assignment);
+            let dispatch = perfmodel::comm_volumes(lr, &plan, ep, self.model.token_bytes());
+
+            let sched = LayerSchedule {
+                compute: compute.clone(),
+                dispatch,
+                attn_time: attn,
+                next_attn_time: attn,
+                prefetch_slots: next.prefetch_slots.clone(),
+                predict_time: next.predict_time,
+                plan_time: next.plan_time,
+                exposed_transfer: d.exposed_transfer,
+                split_phase: self.split_phase,
+                pre_dispatch_fraction: d.pre_dispatch_fraction,
+            };
+            let tl = scheduler::schedule_layer(&sched, &self.model, hw);
+
+            let rank_tokens: Vec<f64> = (0..ep)
+                .map(|r| loads[r].iter().sum::<f64>())
+                .collect();
+            ir_per_layer.push(imbalance_ratio(&rank_tokens));
+            comp_skew.push(imbalance_ratio(&compute));
+            latency += tl.makespan();
+            timelines.push(tl);
+        }
+
+        StepOutcome {
+            latency,
+            timelines,
+            ir_per_layer,
+            comp_skew_per_layer: comp_skew,
+            tokens,
+        }
+    }
+
+    /// Aggregate main-track phase means across a step's layers (Fig. 11).
+    pub fn phase_breakdown(outcome: &StepOutcome, skip_first_layer: bool) -> Vec<(Phase, f64)> {
+        let start = usize::from(skip_first_layer);
+        let phases = [
+            Phase::Attention,
+            Phase::Dispatch,
+            Phase::MoeCompute,
+            Phase::SyncWait,
+            Phase::Combine,
+        ];
+        phases
+            .iter()
+            .map(|&p| {
+                let mean = outcome.timelines[start..]
+                    .iter()
+                    .map(|tl| tl.mean_phase_dur(p))
+                    .sum::<f64>()
+                    / outcome.timelines[start..].len().max(1) as f64;
+                (p, mean)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::routing::RoutingModel;
+    use crate::topology::Cluster;
+
+    fn sim() -> ClusterSim {
+        ClusterSim::new(MoeModel::gpt_oss_120b(), Cluster::paper_testbed())
+    }
+
+    fn routing(sim: &ClusterSim, n_layers: usize, tokens: usize, seed: u64) -> StepRouting {
+        let mut rm = RoutingModel::calibrated(
+            n_layers,
+            sim.model.n_experts,
+            sim.model.top_k,
+            3,
+            seed,
+        );
+        rm.route_step(&vec![0u16; tokens])
+    }
+
+    fn passthrough_decisions(sim: &ClusterSim, step: &StepRouting) -> Vec<LayerDecision> {
+        step.layers
+            .iter()
+            .map(|lr| {
+                LayerDecision::passthrough(
+                    lr,
+                    Placement::sharded(sim.cluster.ep, sim.model.n_experts, 3),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn step_outcome_shape() {
+        let s = sim();
+        let step = routing(&s, 4, 2048, 1);
+        let out = s.run_step(&step, &passthrough_decisions(&s, &step));
+        assert_eq!(out.timelines.len(), 4);
+        assert_eq!(out.ir_per_layer.len(), 4);
+        assert!(out.latency > 0.0);
+        assert_eq!(out.tokens, 2048);
+    }
+
+    #[test]
+    fn skewed_routing_has_elevated_ir() {
+        let s = sim();
+        let step = routing(&s, 8, 6144, 3);
+        let out = s.run_step(&step, &passthrough_decisions(&s, &step));
+        assert!(out.mean_ir() > 1.2, "mean IR {}", out.mean_ir());
+        assert!(out.mean_comp_skew() > 1.1);
+    }
+
+    #[test]
+    fn more_tokens_longer_step() {
+        let s = sim();
+        let small = routing(&s, 4, 1024, 5);
+        let big = routing(&s, 4, 8192, 5);
+        let out_s = s.run_step(&small, &passthrough_decisions(&s, &small));
+        let out_b = s.run_step(&big, &passthrough_decisions(&s, &big));
+        assert!(out_b.latency > out_s.latency);
+    }
+
+    #[test]
+    fn phase_breakdown_sums_near_makespan() {
+        let s = sim();
+        let step = routing(&s, 4, 4096, 7);
+        let out = s.run_step(&step, &passthrough_decisions(&s, &step));
+        let phases = ClusterSim::phase_breakdown(&out, false);
+        let total: f64 = phases.iter().map(|(_, d)| d).sum();
+        let mean_makespan = out.latency / 4.0;
+        // mean-of-ranks phase sums ≈ makespan (sync waits make them equal)
+        assert!(
+            (total - mean_makespan).abs() / mean_makespan < 0.05,
+            "{total} vs {mean_makespan}"
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        let s = sim();
+        let step = routing(&s, 4, 2048, 11);
+        let a = s.run_step(&step, &passthrough_decisions(&s, &step));
+        let b = s.run_step(&step, &passthrough_decisions(&s, &step));
+        assert_eq!(a.latency, b.latency);
+    }
+}

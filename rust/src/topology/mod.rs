@@ -1,0 +1,164 @@
+//! Cluster/hardware profiles (the paper's 8×Hopper-141GB testbed and
+//! variants used for hardware-aware ablations).
+//!
+//! The discrete-event simulator consumes these constants through
+//! [`crate::perfmodel`]; no real GPUs are touched (DESIGN.md
+//! substitutions).
+
+/// Per-rank hardware characteristics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HardwareProfile {
+    pub name: String,
+    /// Peak dense BF16 FLOP/s per rank.
+    pub peak_flops: f64,
+    /// HBM bandwidth per rank (bytes/s) — memory-bound floor for cold
+    /// experts (weight streaming).
+    pub hbm_bw: f64,
+    /// Per-rank unidirectional interconnect bandwidth (bytes/s) available
+    /// to All-to-All / P2P (NVSwitch fabric).
+    pub net_bw: f64,
+    /// Fraction of `net_bw` an All-to-All actually achieves on balanced
+    /// traffic (protocol + NVSwitch efficiency; paper Fig. 5 baseline).
+    pub alltoall_efficiency: f64,
+    /// Fixed latency per collective (launch + rendezvous), seconds.
+    pub collective_base_latency: f64,
+    /// Fixed per-kernel launch overhead, seconds.
+    pub kernel_launch: f64,
+    /// HBM capacity per rank (bytes) — placement feasibility checks.
+    pub hbm_capacity: f64,
+    /// GEMM efficiency knee: tokens/expert at which grouped GEMM reaches
+    /// half its asymptotic efficiency (arithmetic-intensity model).
+    pub gemm_half_tokens: f64,
+    /// Asymptotic grouped-GEMM efficiency (fraction of peak).
+    pub gemm_max_eff: f64,
+    /// GEMM tile rows: token counts are padded to this multiple.
+    pub gemm_tile: usize,
+}
+
+impl HardwareProfile {
+    /// The paper's testbed: 8×NVIDIA Hopper-141GB, 900 GB/s NVSwitch.
+    pub fn hopper_141() -> HardwareProfile {
+        HardwareProfile {
+            name: "hopper-141".into(),
+            peak_flops: 989e12,          // H200 dense BF16
+            hbm_bw: 4.8e12,              // HBM3e
+            net_bw: 450e9,               // 900 GB/s bidir => 450 GB/s per dir
+            alltoall_efficiency: 0.75,
+            collective_base_latency: 12e-6,
+            kernel_launch: 3e-6,
+            hbm_capacity: 141e9,
+            gemm_half_tokens: 96.0,
+            gemm_max_eff: 0.80,
+            gemm_tile: 64,
+        }
+    }
+
+    /// A bandwidth-constrained variant (e.g. H800-like NVLink cap) used
+    /// by the hardware-aware planning ablation: smaller hiding window per
+    /// byte transferred.
+    pub fn hopper_lowbw() -> HardwareProfile {
+        HardwareProfile {
+            name: "hopper-lowbw".into(),
+            net_bw: 200e9,
+            ..Self::hopper_141()
+        }
+    }
+
+    /// A compute-rich / bandwidth-poor profile: fast kernels shrink the
+    /// overlap window (paper §2.3 "Enforcing Zero-Overhead Balancing").
+    pub fn compute_heavy() -> HardwareProfile {
+        HardwareProfile {
+            name: "compute-heavy".into(),
+            peak_flops: 2.0e15,
+            net_bw: 150e9,
+            ..Self::hopper_141()
+        }
+    }
+
+    /// CPU-scale profile used when driving the *real* small model through
+    /// PJRT in the end-to-end example; numbers match a commodity host so
+    /// simulated windows are sane relative to wall-clock execution.
+    pub fn cpu_host() -> HardwareProfile {
+        HardwareProfile {
+            name: "cpu-host".into(),
+            peak_flops: 200e9,
+            hbm_bw: 40e9,
+            net_bw: 10e9,
+            alltoall_efficiency: 0.8,
+            collective_base_latency: 20e-6,
+            kernel_launch: 2e-6,
+            hbm_capacity: 32e9,
+            gemm_half_tokens: 32.0,
+            gemm_max_eff: 0.7,
+            gemm_tile: 16,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<HardwareProfile> {
+        match name {
+            "hopper-141" => Some(Self::hopper_141()),
+            "hopper-lowbw" => Some(Self::hopper_lowbw()),
+            "compute-heavy" => Some(Self::compute_heavy()),
+            "cpu-host" => Some(Self::cpu_host()),
+            _ => None,
+        }
+    }
+
+    /// Effective All-to-All bandwidth on perfectly balanced traffic.
+    pub fn effective_alltoall_bw(&self) -> f64 {
+        self.net_bw * self.alltoall_efficiency
+    }
+}
+
+/// An EP cluster: `ep` identical ranks on one fabric.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub ep: usize,
+    pub profile: HardwareProfile,
+}
+
+impl Cluster {
+    pub fn new(ep: usize, profile: HardwareProfile) -> Cluster {
+        assert!(ep >= 1);
+        Cluster { ep, profile }
+    }
+
+    /// The paper's default evaluation cluster.
+    pub fn paper_testbed() -> Cluster {
+        Cluster::new(8, HardwareProfile::hopper_141())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve() {
+        for n in ["hopper-141", "hopper-lowbw", "compute-heavy", "cpu-host"] {
+            assert_eq!(HardwareProfile::by_name(n).unwrap().name, n);
+        }
+        assert!(HardwareProfile::by_name("tpu").is_none());
+    }
+
+    #[test]
+    fn paper_testbed_is_ep8_hopper() {
+        let c = Cluster::paper_testbed();
+        assert_eq!(c.ep, 8);
+        assert_eq!(c.profile.name, "hopper-141");
+    }
+
+    #[test]
+    fn lowbw_only_changes_net() {
+        let a = HardwareProfile::hopper_141();
+        let b = HardwareProfile::hopper_lowbw();
+        assert!(b.net_bw < a.net_bw);
+        assert_eq!(a.peak_flops, b.peak_flops);
+    }
+
+    #[test]
+    fn effective_bw_below_raw() {
+        let p = HardwareProfile::hopper_141();
+        assert!(p.effective_alltoall_bw() < p.net_bw);
+    }
+}

@@ -1,0 +1,164 @@
+//! Bench harness for `cargo bench` targets (criterion unavailable offline).
+//!
+//! Each `rust/benches/figN_*.rs` is a `harness = false` binary that uses
+//! [`BenchSet`] to time code and print the figure/table rows the paper
+//! reports, plus machine-readable JSON dropped under `bench_results/`.
+
+use std::time::Instant;
+
+use super::stats::Summary;
+
+/// Time one closure: warmups, then `iters` measured runs.
+pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Summary::of(&samples)
+}
+
+/// A named collection of measurement rows printed as an aligned table and
+/// saved as JSON.
+pub struct BenchSet {
+    pub name: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    pub notes: Vec<String>,
+}
+
+impl BenchSet {
+    pub fn new(name: &str, columns: &[&str]) -> BenchSet {
+        BenchSet {
+            name: name.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) {
+        self.notes.push(s.into());
+    }
+
+    /// Print the table; returns the rendered string.
+    pub fn print(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} ==\n", self.name));
+        let hdr: Vec<String> = self
+            .columns
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+            .collect();
+        out.push_str(&hdr.join("  "));
+        out.push('\n');
+        out.push_str(&"-".repeat(hdr.join("  ").len()));
+        out.push('\n');
+        for row in &self.rows {
+            let cells: Vec<String> = row
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect();
+            out.push_str(&cells.join("  "));
+            out.push('\n');
+        }
+        for n in &self.notes {
+            out.push_str(&format!("note: {n}\n"));
+        }
+        print!("{out}");
+        out
+    }
+
+    /// Save table as JSON under `bench_results/<name>.json`.
+    pub fn save(&self) -> std::io::Result<()> {
+        use super::json::Json;
+        std::fs::create_dir_all("bench_results")?;
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|r| Json::Arr(r.iter().map(|c| Json::Str(c.clone())).collect()))
+            .collect();
+        let j = Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            (
+                "columns",
+                Json::Arr(self.columns.iter().map(|c| Json::Str(c.clone())).collect()),
+            ),
+            ("rows", Json::Arr(rows)),
+            (
+                "notes",
+                Json::Arr(self.notes.iter().map(|n| Json::Str(n.clone())).collect()),
+            ),
+        ]);
+        std::fs::write(format!("bench_results/{}.json", self.name), j.to_string())
+    }
+}
+
+/// Format seconds as an adaptive human unit.
+pub fn fmt_time(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{:.2}s", secs)
+    } else if secs >= 1e-3 {
+        format!("{:.2}ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.2}us", secs * 1e6)
+    } else {
+        format!("{:.0}ns", secs * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_returns_samples() {
+        let s = time_it(1, 5, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert_eq!(s.n, 5);
+        assert!(s.min >= 0.0);
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut b = BenchSet::new("test_table", &["a", "b"]);
+        b.row(&["1".into(), "2".into()]);
+        b.note("hello");
+        let s = b.print();
+        assert!(s.contains("test_table"));
+        assert!(s.contains("hello"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn row_arity_checked() {
+        let mut b = BenchSet::new("t", &["a", "b"]);
+        b.row(&["1".into()]);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert_eq!(fmt_time(2.0), "2.00s");
+        assert_eq!(fmt_time(0.002), "2.00ms");
+        assert_eq!(fmt_time(2e-6), "2.00us");
+        assert_eq!(fmt_time(2e-9), "2ns");
+    }
+}

@@ -1,0 +1,14 @@
+//! Self-contained utility substrates (no external deps available offline):
+//! PRNG, JSON, statistics, CLI parsing, thread pool, property testing,
+//! bench harness.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,143 @@
+//! Hand-rolled property-testing harness (no `proptest` offline).
+//!
+//! Usage:
+//! ```ignore
+//! check(200, 42, |g| {
+//!     let xs = g.vec(1..50, |g| g.f64_in(0.0, 10.0));
+//!     let ir = imbalance_ratio(&xs);
+//!     prop_assert!(ir >= 1.0 - 1e-9, "IR below 1: {ir}");
+//!     Ok(())
+//! });
+//! ```
+//! On failure the seed and case index are reported so the exact case can
+//! be replayed deterministically.
+
+use super::rng::Rng;
+
+/// Case generator handed to each property iteration.
+pub struct Gen {
+    pub rng: Rng,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, range: std::ops::Range<usize>) -> usize {
+        range.start + self.rng.next_usize(range.end - range.start)
+    }
+    pub fn u64_in(&mut self, range: std::ops::Range<u64>) -> u64 {
+        range.start + self.rng.next_below(range.end - range.start)
+    }
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.next_usize(xs.len())]
+    }
+    pub fn vec<T>(
+        &mut self,
+        len: std::ops::Range<usize>,
+        mut f: impl FnMut(&mut Gen) -> T,
+    ) -> Vec<T> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| f(self)).collect()
+    }
+    /// Unnormalized positive weights with occasional extreme skew — a
+    /// useful default distribution for load vectors.
+    pub fn skewed_loads(&mut self, n: usize) -> Vec<f64> {
+        let s = self.f64_in(0.0, 2.5);
+        let mut w = Rng::zipf_weights(n, s);
+        self.rng.shuffle(&mut w);
+        let scale = self.f64_in(1.0, 1000.0);
+        w.iter().map(|x| x * scale).collect()
+    }
+}
+
+/// Property failure with context.
+#[derive(Debug)]
+pub struct PropError {
+    pub msg: String,
+}
+
+/// Assert inside a property; returns `Err` so the harness can report the
+/// case seed.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err($crate::util::proptest::PropError {
+                msg: format!($($fmt)*),
+            });
+        }
+    };
+}
+
+/// Run `cases` random cases of the property with deterministic seeding.
+/// Panics with seed + case index on the first failure.
+pub fn check<F>(cases: usize, seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), PropError>,
+{
+    for case in 0..cases {
+        let mut g = Gen {
+            rng: Rng::new(seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15)),
+        };
+        if let Err(e) = prop(&mut g) {
+            panic!(
+                "property failed (seed={seed}, case={case}): {}",
+                e.msg
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true_property() {
+        check(100, 1, |g| {
+            let x = g.f64_in(0.0, 1.0);
+            prop_assert!((0.0..1.0).contains(&x), "x out of range: {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn fails_false_property() {
+        check(100, 2, |g| {
+            let x = g.usize_in(0..10);
+            prop_assert!(x < 5, "x = {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_cases() {
+        let mut first: Vec<u64> = Vec::new();
+        check(10, 3, |g| {
+            first.push(g.rng.next_u64());
+            Ok(())
+        });
+        let mut second: Vec<u64> = Vec::new();
+        check(10, 3, |g| {
+            second.push(g.rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn skewed_loads_positive() {
+        check(50, 4, |g| {
+            let n = g.usize_in(1..64);
+            let loads = g.skewed_loads(n);
+            prop_assert!(loads.len() == n, "len");
+            prop_assert!(loads.iter().all(|&x| x > 0.0), "nonpositive load");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,247 @@
+//! Workload generation: datasets as semantic domains, request arrival,
+//! and scripted events (dataset injection, semantic shift).
+//!
+//! Stands in for the paper's *Chinese* / *Code* / *Repeat* corpora: each
+//! request belongs to a domain; the routing model maps domains to expert
+//! affinities. The *Repeat* dataset is modeled as a single ultra-narrow
+//! domain (duplicated prompts → maximal semantic concentration).
+
+use crate::util::Rng;
+
+/// Named dataset presets matching the paper's evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dataset {
+    Chinese,
+    Code,
+    Repeat,
+    /// Even blend over all domains (background traffic).
+    Mixed,
+}
+
+impl Dataset {
+    pub fn by_name(s: &str) -> Option<Dataset> {
+        match s {
+            "chinese" => Some(Dataset::Chinese),
+            "code" => Some(Dataset::Code),
+            "repeat" => Some(Dataset::Repeat),
+            "mixed" => Some(Dataset::Mixed),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dataset::Chinese => "chinese",
+            Dataset::Code => "code",
+            Dataset::Repeat => "repeat",
+            Dataset::Mixed => "mixed",
+        }
+    }
+
+    /// Domain-mixture weights over the routing model's domains.
+    /// Chinese/Code are moderately concentrated on distinct domains;
+    /// Repeat collapses onto a single domain (extreme skew).
+    pub fn domain_weights(&self, n_domains: usize) -> Vec<f64> {
+        assert!(n_domains >= 3);
+        let mut w = vec![0.05; n_domains];
+        match self {
+            Dataset::Chinese => {
+                w[0] = 1.0;
+                w[1] = 0.15;
+            }
+            Dataset::Code => {
+                w[1] = 1.0;
+                w[2] = 0.15;
+            }
+            Dataset::Repeat => {
+                w = vec![0.0; n_domains];
+                w[n_domains - 1] = 1.0;
+            }
+            Dataset::Mixed => {
+                w = vec![1.0; n_domains];
+            }
+        }
+        w
+    }
+}
+
+/// One inference request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    pub domain: u16,
+    pub dataset: Dataset,
+    /// Prompt length in tokens.
+    pub prompt_len: usize,
+    /// Decode budget in tokens.
+    pub max_new_tokens: usize,
+    /// Arrival time (seconds since trace start).
+    pub arrival: f64,
+}
+
+/// Arrival + length distributions for a request stream.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub dataset: Dataset,
+    /// Requests per second (Poisson). `f64::INFINITY` = closed-loop
+    /// (always enough requests queued).
+    pub arrival_rate: f64,
+    pub mean_prompt_len: usize,
+    pub mean_new_tokens: usize,
+    pub n_domains: usize,
+}
+
+impl WorkloadSpec {
+    pub fn new(dataset: Dataset, n_domains: usize) -> WorkloadSpec {
+        WorkloadSpec {
+            dataset,
+            arrival_rate: f64::INFINITY,
+            mean_prompt_len: 512,
+            mean_new_tokens: 256,
+            n_domains,
+        }
+    }
+}
+
+/// Generates a request stream; supports scripted dataset switches
+/// (the Fig. 9 Code→Chinese shift) keyed on request index.
+#[derive(Debug, Clone)]
+pub struct RequestGenerator {
+    spec: WorkloadSpec,
+    rng: Rng,
+    next_id: u64,
+    clock: f64,
+    /// (after_n_requests, new_dataset) events, sorted.
+    shifts: Vec<(u64, Dataset)>,
+}
+
+impl RequestGenerator {
+    pub fn new(spec: WorkloadSpec, seed: u64) -> RequestGenerator {
+        RequestGenerator {
+            spec,
+            rng: Rng::new(seed),
+            next_id: 0,
+            clock: 0.0,
+            shifts: Vec::new(),
+        }
+    }
+
+    /// Switch the dataset after `n` generated requests.
+    pub fn shift_after(mut self, n: u64, to: Dataset) -> Self {
+        self.shifts.push((n, to));
+        self.shifts.sort_by_key(|s| s.0);
+        self
+    }
+
+    pub fn dataset(&self) -> Dataset {
+        self.spec.dataset
+    }
+
+    /// Draw the next request.
+    pub fn next_request(&mut self) -> Request {
+        while let Some(&(n, to)) = self.shifts.first() {
+            if self.next_id >= n {
+                self.spec.dataset = to;
+                self.shifts.remove(0);
+            } else {
+                break;
+            }
+        }
+        let weights = self.spec.dataset.domain_weights(self.spec.n_domains);
+        let domain = self.rng.next_weighted(&weights) as u16;
+        if self.spec.arrival_rate.is_finite() {
+            self.clock += self.rng.next_exp(self.spec.arrival_rate);
+        }
+        // Lengths: lognormal-ish via exp(gaussian), clamped.
+        let plen = sample_len(&mut self.rng, self.spec.mean_prompt_len);
+        let dlen = sample_len(&mut self.rng, self.spec.mean_new_tokens);
+        let r = Request {
+            id: self.next_id,
+            domain,
+            dataset: self.spec.dataset,
+            prompt_len: plen,
+            max_new_tokens: dlen,
+            arrival: self.clock,
+        };
+        self.next_id += 1;
+        r
+    }
+
+    /// Generate a batch of requests (closed-loop convenience).
+    pub fn take(&mut self, n: usize) -> Vec<Request> {
+        (0..n).map(|_| self.next_request()).collect()
+    }
+}
+
+fn sample_len(rng: &mut Rng, mean: usize) -> usize {
+    let sigma = 0.6_f64;
+    let mu = (mean as f64).ln() - sigma * sigma / 2.0;
+    let x = (mu + sigma * rng.next_gaussian()).exp();
+    (x.round() as usize).clamp(4, mean * 8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset_names_roundtrip() {
+        for d in [Dataset::Chinese, Dataset::Code, Dataset::Repeat, Dataset::Mixed] {
+            assert_eq!(Dataset::by_name(d.name()), Some(d));
+        }
+        assert!(Dataset::by_name("x").is_none());
+    }
+
+    #[test]
+    fn repeat_is_single_domain() {
+        let w = Dataset::Repeat.domain_weights(4);
+        assert_eq!(w.iter().filter(|&&x| x > 0.0).count(), 1);
+    }
+
+    #[test]
+    fn generator_deterministic() {
+        let spec = WorkloadSpec::new(Dataset::Code, 4);
+        let mut a = RequestGenerator::new(spec.clone(), 3);
+        let mut b = RequestGenerator::new(spec, 3);
+        assert_eq!(a.take(20), b.take(20));
+    }
+
+    #[test]
+    fn arrival_times_monotone() {
+        let mut spec = WorkloadSpec::new(Dataset::Mixed, 4);
+        spec.arrival_rate = 100.0;
+        let mut g = RequestGenerator::new(spec, 5);
+        let reqs = g.take(50);
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+        assert!(reqs.last().unwrap().arrival > 0.0);
+    }
+
+    #[test]
+    fn shift_event_changes_dataset() {
+        let spec = WorkloadSpec::new(Dataset::Code, 4);
+        let mut g = RequestGenerator::new(spec, 7).shift_after(10, Dataset::Chinese);
+        let reqs = g.take(20);
+        assert!(reqs[..10].iter().all(|r| r.dataset == Dataset::Code));
+        assert!(reqs[10..].iter().all(|r| r.dataset == Dataset::Chinese));
+    }
+
+    #[test]
+    fn lengths_positive_and_reasonable() {
+        let spec = WorkloadSpec::new(Dataset::Mixed, 4);
+        let mut g = RequestGenerator::new(spec, 11);
+        let reqs = g.take(500);
+        let mean: f64 =
+            reqs.iter().map(|r| r.prompt_len as f64).sum::<f64>() / reqs.len() as f64;
+        assert!(mean > 200.0 && mean < 1200.0, "mean={mean}");
+        assert!(reqs.iter().all(|r| r.prompt_len >= 4));
+    }
+
+    #[test]
+    fn domains_follow_dataset() {
+        let spec = WorkloadSpec::new(Dataset::Repeat, 4);
+        let mut g = RequestGenerator::new(spec, 13);
+        assert!(g.take(30).iter().all(|r| r.domain == 3));
+    }
+}

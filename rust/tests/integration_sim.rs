@@ -1,0 +1,171 @@
+//! Cross-module integration tests over the simulated serving stack:
+//! workload → routing → balancers → simulator → coordinator → metrics.
+
+use probe::balancers::decide_step;
+use probe::config::{BalancerKind, Config, ProbeConfig};
+use probe::coordinator::Coordinator;
+use probe::experiments::make_balancer;
+use probe::routing::RoutingModel;
+use probe::simulator::ClusterSim;
+use probe::util::stats::mean;
+use probe::workload::{Dataset, RequestGenerator, WorkloadSpec};
+
+fn decode_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.model.n_layers = 4;
+    cfg.batch_per_rank = 96;
+    cfg
+}
+
+fn run_throughput(kind: BalancerKind, dataset: Dataset, steps: usize, seed: u64) -> f64 {
+    let cfg = decode_cfg();
+    let bal = make_balancer(kind, &cfg, seed);
+    let mut c = Coordinator::new(cfg.clone(), bal, seed);
+    let mut spec = WorkloadSpec::new(dataset, 4);
+    spec.mean_prompt_len = 8;
+    spec.mean_new_tokens = steps * 2;
+    let mut g = RequestGenerator::new(spec, seed ^ 7);
+    for r in g.take(cfg.global_batch() + 16) {
+        c.submit(r);
+    }
+    c.run_decode_steps(steps);
+    c.metrics.throughput()
+}
+
+#[test]
+fn probe_beats_static_on_every_dataset() {
+    for dataset in [Dataset::Chinese, Dataset::Code, Dataset::Repeat] {
+        let t_static = run_throughput(BalancerKind::StaticEp, dataset, 25, 3);
+        let t_probe = run_throughput(BalancerKind::Probe, dataset, 25, 3);
+        assert!(
+            t_probe > t_static,
+            "{}: probe {t_probe} <= static {t_static}",
+            dataset.name()
+        );
+    }
+}
+
+#[test]
+fn gains_largest_on_repeat() {
+    let gain = |d: Dataset| {
+        run_throughput(BalancerKind::Probe, d, 25, 9)
+            / run_throughput(BalancerKind::StaticEp, d, 25, 9)
+    };
+    let g_repeat = gain(Dataset::Repeat);
+    let g_code = gain(Dataset::Code);
+    assert!(
+        g_repeat >= g_code * 0.95,
+        "repeat gain {g_repeat} unexpectedly below code gain {g_code}"
+    );
+    assert!(g_repeat > 1.02);
+}
+
+#[test]
+fn exposed_overhead_zero_for_probe_with_window() {
+    let cfg = decode_cfg();
+    let mut bal = make_balancer(BalancerKind::Probe, &cfg, 11);
+    let sim = ClusterSim::new(cfg.model.clone(), cfg.cluster.clone());
+    let mut rm = RoutingModel::calibrated(4, 128, 4, 4, 11);
+    for step in 0..10 {
+        let routing = rm.route_step(&vec![0u16; cfg.global_batch()]);
+        let ds = decide_step(bal.as_mut(), step, &routing);
+        let out = sim.run_step(&routing, &ds);
+        let exposed: f64 = out.timelines.iter().map(|t| t.exposed_overhead).sum();
+        assert_eq!(exposed, 0.0, "step {step}: exposed {exposed}");
+    }
+}
+
+#[test]
+fn eplb_rebalancing_beats_never_rebalancing() {
+    // The warm-up effect: once statistics exist, EPLB's one-shot
+    // replication beats running without it on stationary traffic.
+    // (Admission prefill steps already feed the history, so we compare
+    // rebalancing-enabled vs never-rebalancing instead of early-vs-late.)
+    let run = |warmup: usize| -> f64 {
+        let mut cfg = decode_cfg();
+        cfg.eplb.warmup_steps = warmup;
+        let bal = make_balancer(BalancerKind::Eplb, &cfg, 13);
+        let mut c = Coordinator::new(cfg.clone(), bal, 13);
+        c.routing_model.drift = 0.0; // stationary: history stays valid
+        let mut spec = WorkloadSpec::new(Dataset::Chinese, 4);
+        spec.mean_prompt_len = 8;
+        spec.mean_new_tokens = 200;
+        let mut g = RequestGenerator::new(spec, 17);
+        for r in g.take(cfg.global_batch() + 16) {
+            c.submit(r);
+        }
+        let outs = c.run_decode_steps(30);
+        mean(&outs.iter().map(|o| o.latency).collect::<Vec<_>>())
+    };
+    let with_rebalance = run(5);
+    let never = run(usize::MAX);
+    assert!(
+        with_rebalance < never,
+        "EPLB rebalancing did not help: {with_rebalance} vs never {never}"
+    );
+}
+
+#[test]
+fn probe_ir_approaches_one_with_big_budget() {
+    // paper Fig. 11: IR 2.13 -> 1.09 with 3 replicas
+    let mut cfg = decode_cfg();
+    cfg.batch_per_rank = 768;
+    let mut pc = ProbeConfig::default();
+    pc.predictor_accuracy = 0.95;
+    let mut bal = probe::balancers::Probe::new(&cfg, pc, 21);
+    let sim = ClusterSim::new(cfg.model.clone(), cfg.cluster.clone());
+    let mut rm = RoutingModel::calibrated(4, 128, 4, 4, 21);
+    let mut static_bal = probe::balancers::StaticEp::new(&cfg);
+    let mut ir_probe = Vec::new();
+    let mut ir_static = Vec::new();
+    for step in 0..8 {
+        let routing = rm.route_step(&vec![0u16; cfg.global_batch()]);
+        let dp = decide_step(&mut bal, step, &routing);
+        ir_probe.push(sim.run_step(&routing, &dp).mean_ir());
+        let ds = decide_step(&mut static_bal, step, &routing);
+        ir_static.push(sim.run_step(&routing, &ds).mean_ir());
+        rm.step_drift();
+    }
+    let (ip, is) = (mean(&ir_probe), mean(&ir_static));
+    assert!(is > 1.3, "baseline IR too low ({is}) to be interesting");
+    assert!(ip < 1.35, "probe IR {ip} not close to 1");
+    assert!((is - ip) / (is - 1.0) > 0.5, "probe closed <50% of IR gap");
+}
+
+#[test]
+fn config_roundtrip_drives_coordinator() {
+    let text = r#"
+seed = 9
+[model]
+name = "gpt-oss-120b"
+[cluster]
+ep = 8
+profile = "hopper-141"
+[balancer]
+kind = "probe"
+[workload]
+dataset = "code"
+batch_per_rank = 64
+"#;
+    let mut cfg = Config::from_toml_str(text).unwrap();
+    cfg.model.n_layers = 3;
+    let bal = make_balancer(cfg.balancer, &cfg, cfg.seed);
+    let mut c = Coordinator::new(cfg.clone(), bal, cfg.seed);
+    let mut spec = WorkloadSpec::new(cfg.dataset, 4);
+    spec.mean_prompt_len = 8;
+    spec.mean_new_tokens = 16;
+    let mut g = RequestGenerator::new(spec, 1);
+    for r in g.take(cfg.global_batch()) {
+        c.submit(r);
+    }
+    let outs = c.run_decode_steps(8);
+    assert!(!outs.is_empty());
+    assert!(c.metrics.throughput() > 0.0);
+}
+
+#[test]
+fn deterministic_end_to_end() {
+    let a = run_throughput(BalancerKind::Probe, Dataset::Code, 12, 99);
+    let b = run_throughput(BalancerKind::Probe, Dataset::Code, 12, 99);
+    assert_eq!(a, b, "simulated serving must be seed-deterministic");
+}

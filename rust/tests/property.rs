@@ -1,0 +1,222 @@
+//! Property-based tests (hand-rolled harness: `util::proptest`) over the
+//! coordinator-stack invariants: routing conservation, placement
+//! validity, planner budgets, assignment materialization, scheduler
+//! timeline sanity.
+
+use probe::config::ProbeConfig;
+use probe::model::MoeModel;
+use probe::perfmodel::{comm_volumes, transfer_time, Assignment, DispatchPlan};
+use probe::placement::Placement;
+use probe::planner;
+use probe::prop_assert;
+use probe::routing::{LayerRouting, RoutingModel};
+use probe::topology::HardwareProfile;
+use probe::util::proptest::{check, Gen};
+use probe::util::stats::imbalance_ratio;
+
+/// Random EP-divisible geometry + routed layer.
+fn arb_routing(g: &mut Gen) -> (LayerRouting, usize) {
+    let ep = *g.pick(&[2usize, 4, 8]);
+    let per = g.usize_in(2..9);
+    let n_experts = ep * per;
+    let top_k = g.usize_in(1..4.min(n_experts));
+    let tokens = g.usize_in(ep..400);
+    let mut rm = RoutingModel::new(
+        1,
+        n_experts,
+        top_k,
+        2,
+        g.f64_in(0.1, 1.0),
+        0.0,
+        g.f64_in(0.05, 0.6),
+        g.rng.next_u64(),
+    );
+    let domains: Vec<u16> = (0..tokens).map(|_| g.usize_in(0..2) as u16).collect();
+    (rm.route_step(&domains).layers.remove(0), ep)
+}
+
+fn small_model(n_experts: usize, top_k: usize) -> MoeModel {
+    let mut m = MoeModel::gpt_oss_120b();
+    m.n_experts = n_experts;
+    m.top_k = top_k;
+    m
+}
+
+#[test]
+fn prop_planner_preserves_conservation_and_budgets() {
+    check(60, 0xA11CE, |g| {
+        let (routing, ep) = arb_routing(g);
+        let model = small_model(routing.n_experts, routing.top_k);
+        let hw = HardwareProfile::hopper_141();
+        let base = Placement::sharded(ep, routing.n_experts, g.usize_in(0..4));
+        let counts: Vec<Vec<f64>> = routing
+            .expert_counts_by_source(ep)
+            .into_iter()
+            .map(|v| v.into_iter().map(f64::from).collect())
+            .collect();
+        let mut cfg = ProbeConfig::default();
+        cfg.max_redundant = base.max_redundant;
+        cfg.k_max = g.usize_in(1..24);
+        let window = g.f64_in(0.0, 2.0) * transfer_time(1, &model, &hw);
+        let out = planner::plan(&counts, &base, &model, &hw, &vec![window; ep], &cfg);
+
+        // conservation (eq. 8): sum over ranks = n_e for every expert
+        for e in 0..routing.n_experts {
+            let want: f64 = counts[e].iter().sum();
+            let got = out.assignment.expert_total(e);
+            prop_assert!((want - got).abs() < 1e-6, "expert {e}: {want} != {got}");
+        }
+        // placement structurally valid + slot budget
+        prop_assert!(out.placement.validate().is_ok(), "invalid placement");
+        for r in 0..ep {
+            prop_assert!(
+                out.placement.slots_used(r) <= cfg.max_redundant,
+                "slot budget violated on rank {r}"
+            );
+            // window budget: fetched slots transfer within the window
+            if cfg.enforce_window {
+                let t = transfer_time(out.fetch_slots(r), &model, &hw);
+                prop_assert!(
+                    t <= window + 1e-12,
+                    "window violated on rank {r}: {t} > {window}"
+                );
+            }
+        }
+        // assignment only places tokens on hosting ranks
+        prop_assert!(
+            out.assignment
+                .validate(&routing.expert_counts(), &out.placement)
+                .is_ok(),
+            "assignment invalid"
+        );
+        // the planner never makes the bottleneck worse
+        prop_assert!(
+            out.est_after <= out.est_before + 1e-12,
+            "planner regressed: {} -> {}",
+            out.est_before,
+            out.est_after
+        );
+        prop_assert!(out.iterations <= cfg.k_max, "iteration cap violated");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dispatch_plan_matches_assignment() {
+    check(60, 0xB0B, |g| {
+        let (routing, ep) = arb_routing(g);
+        let mut placement = Placement::sharded(ep, routing.n_experts, 3);
+        // random replicas
+        for _ in 0..g.usize_in(0..6) {
+            let e = g.usize_in(0..routing.n_experts);
+            let r = g.usize_in(0..ep);
+            let _ = placement.add_replica(e, r);
+        }
+        let mut a = Assignment::locality_first(&routing, &placement);
+        // random valid shifts towards replicas
+        for e in 0..routing.n_experts {
+            let hosts = placement.ranks_hosting(e);
+            if hosts.len() < 2 {
+                continue;
+            }
+            let home = hosts[0];
+            let dst = hosts[1];
+            let rs = g.usize_in(0..ep);
+            let x = a.get(e, rs, home) * g.f64_in(0.0, 1.0);
+            a.shift(e, rs, home, dst, x);
+        }
+        let plan = DispatchPlan::from_assignment(&routing, &a);
+        // realized slot targets must host the expert
+        for t in 0..routing.n_tokens {
+            for j in 0..routing.top_k {
+                let e = routing.experts[t * routing.top_k + j] as usize;
+                let rt = plan.targets[t * routing.top_k + j] as usize;
+                prop_assert!(
+                    placement.hosts(e, rt),
+                    "token {t} slot {j}: expert {e} not hosted on rank {rt}"
+                );
+            }
+        }
+        // realized counts within rounding of the assignment
+        let mut realized = vec![0.0; routing.n_experts * ep];
+        for t in 0..routing.n_tokens {
+            for j in 0..routing.top_k {
+                let e = routing.experts[t * routing.top_k + j] as usize;
+                realized[e * ep + plan.targets[t * routing.top_k + j] as usize] += 1.0;
+            }
+        }
+        for e in 0..routing.n_experts {
+            for rt in 0..ep {
+                let want = a.tokens_on(e, rt);
+                let got = realized[e * ep + rt];
+                prop_assert!(
+                    (want - got).abs() <= ep as f64,
+                    "expert {e} rank {rt}: {want} vs {got}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_comm_volumes_bounded_and_consistent() {
+    check(60, 0xC0FFEE, |g| {
+        let (routing, ep) = arb_routing(g);
+        let placement = Placement::sharded(ep, routing.n_experts, 0);
+        let a = Assignment::locality_first(&routing, &placement);
+        let plan = DispatchPlan::from_assignment(&routing, &a);
+        let tb = 2.0 * 64.0;
+        let vol = comm_volumes(&routing, &plan, ep, tb);
+        // totals match: every byte sent is received
+        let sent: f64 = vol.v_out.iter().sum();
+        let recv: f64 = vol.v_in.iter().sum();
+        prop_assert!((sent - recv).abs() < 1e-6, "sent {sent} != recv {recv}");
+        // dedup bound: a token sends at most min(k, ep-1) payloads
+        let max_total = routing.n_tokens as f64 * routing.top_k.min(ep - 1) as f64 * tb;
+        prop_assert!(sent <= max_total + 1e-6, "sent {sent} > bound {max_total}");
+        prop_assert!(
+            vol.v_in.iter().chain(vol.v_out.iter()).all(|&v| v >= 0.0),
+            "negative volume"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ir_at_least_one() {
+    check(200, 0x1F, |g| {
+        let n = g.usize_in(1..64);
+        let loads = g.skewed_loads(n);
+        let ir = imbalance_ratio(&loads);
+        prop_assert!(ir >= 1.0 - 1e-9, "IR {ir} < 1");
+        prop_assert!(ir <= n as f64 + 1e-9, "IR {ir} > n");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rebalance_existing_never_breaks_validity() {
+    check(40, 0xD1CE, |g| {
+        let (routing, ep) = arb_routing(g);
+        let model = small_model(routing.n_experts, routing.top_k);
+        let hw = HardwareProfile::hopper_141();
+        let mut placement = Placement::sharded(ep, routing.n_experts, 3);
+        for _ in 0..g.usize_in(0..8) {
+            let e = g.usize_in(0..routing.n_experts);
+            let r = g.usize_in(0..ep);
+            let _ = placement.add_replica(e, r);
+        }
+        let counts: Vec<Vec<f64>> = routing
+            .expert_counts_by_source(ep)
+            .into_iter()
+            .map(|v| v.into_iter().map(f64::from).collect())
+            .collect();
+        let a = planner::rebalance_existing(&counts, &placement, &model, &hw, 16);
+        prop_assert!(
+            a.validate(&routing.expert_counts(), &placement).is_ok(),
+            "rebalanced assignment invalid"
+        );
+        Ok(())
+    });
+}

@@ -1,0 +1,175 @@
+//! Integration tests over the PJRT runtime + real coordinator. These
+//! need `make artifacts` to have run; they skip (pass trivially) when the
+//! artifacts are absent so `cargo test` works on a fresh checkout.
+
+use probe::coordinator::real::RealCoordinator;
+use probe::runtime::{predictions_from_decode, routing_from_decode, Engine};
+use probe::workload::{Dataset, Request};
+
+fn engine() -> Option<Engine> {
+    if !std::path::Path::new("artifacts/metadata.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Engine::load("artifacts").expect("artifacts present but unloadable"))
+}
+
+#[test]
+fn decode_step_runs_and_is_deterministic() {
+    let Some(engine) = engine() else { return };
+    let cfg = engine.cfg().clone();
+    let b = 8;
+    let tokens: Vec<i32> = (0..b as i32).map(|i| i % cfg.vocab as i32).collect();
+    let pos = vec![0i32; b];
+    let mut kv1 = vec![0.0f32; cfg.kv_len(b)];
+    let mut kv2 = vec![0.0f32; cfg.kv_len(b)];
+    let o1 = engine.decode_step(b, &tokens, &pos, &mut kv1).unwrap();
+    let o2 = engine.decode_step(b, &tokens, &pos, &mut kv2).unwrap();
+    assert_eq!(o1.logits, o2.logits, "decode must be deterministic");
+    assert_eq!(o1.actual_idx, o2.actual_idx);
+    assert_eq!(kv1, kv2);
+    assert_eq!(o1.logits.len(), b * cfg.vocab);
+    assert!(o1.logits.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn routing_outputs_are_valid_expert_sets() {
+    let Some(engine) = engine() else { return };
+    let cfg = engine.cfg().clone();
+    let b = 8;
+    let tokens: Vec<i32> = (0..b as i32).map(|i| (i * 13) % cfg.vocab as i32).collect();
+    let pos = vec![0i32; b];
+    let mut kv = vec![0.0f32; cfg.kv_len(b)];
+    let out = engine.decode_step(b, &tokens, &pos, &mut kv).unwrap();
+    let routing = routing_from_decode(&out, &cfg);
+    assert_eq!(routing.len(), cfg.n_layers);
+    for lr in &routing {
+        assert_eq!(lr.n_tokens, b);
+        assert_eq!(lr.top_k, cfg.top_k);
+        for t in 0..b {
+            let es = lr.token_experts(t);
+            let mut s = es.to_vec();
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), cfg.top_k, "duplicate experts for token {t}");
+        }
+    }
+    // gates sum to ~1 per token per layer
+    for chunk in out.actual_gate.chunks(cfg.top_k) {
+        let s: f32 = chunk.iter().sum();
+        assert!((s - 1.0).abs() < 1e-4, "gate sum {s}");
+    }
+}
+
+#[test]
+fn lookahead_predictions_mostly_match_router() {
+    let Some(engine) = engine() else { return };
+    let cfg = engine.cfg().clone();
+    let b = 8;
+    let mut kv = vec![0.0f32; cfg.kv_len(b)];
+    let mut pos = vec![0i32; b];
+    let mut tokens: Vec<i32> = (0..b as i32).map(|i| (i * 7) % cfg.vocab as i32).collect();
+    let mut hits = 0usize;
+    let mut total = 0usize;
+    for step in 0..6 {
+        let out = engine.decode_step(b, &tokens, &pos, &mut kv).unwrap();
+        let routing = routing_from_decode(&out, &cfg);
+        let preds = predictions_from_decode(&out, &cfg);
+        assert!(preds[0].is_none(), "layer 0 must be unpredicted");
+        for (l, p) in preds.iter().enumerate().skip(1) {
+            let p = p.as_ref().expect("layers >=1 predicted");
+            let f = probe::predictor::fidelity(&routing[l], p);
+            hits += (f.top_k_accuracy * (routing[l].n_tokens * routing[l].top_k) as f64)
+                .round() as usize;
+            total += routing[l].n_tokens * routing[l].top_k;
+        }
+        // greedy next tokens
+        for i in 0..b {
+            let logits = &out.logits[i * cfg.vocab..(i + 1) * cfg.vocab];
+            let mut best = 0;
+            for (j, &x) in logits.iter().enumerate() {
+                if x > logits[best] {
+                    best = j;
+                }
+            }
+            tokens[i] = best as i32;
+            pos[i] = step + 1;
+        }
+    }
+    let acc = hits as f64 / total as f64;
+    assert!(
+        acc > 0.5,
+        "distilled predictor accuracy {acc:.3} too low on live traffic"
+    );
+}
+
+#[test]
+fn prefill_then_decode_serves_a_request() {
+    let Some(engine) = engine() else { return };
+    let mut c = RealCoordinator::new(engine, 8, 3);
+    let prompt = c.synth_prompt(1, 12);
+    c.submit(
+        Request {
+            id: 0,
+            domain: 1,
+            dataset: Dataset::Code,
+            prompt_len: prompt.len(),
+            max_new_tokens: 8,
+            arrival: 0.0,
+        },
+        prompt,
+    );
+    let steps = c.run_to_completion(64).unwrap();
+    assert!(steps >= 7, "expected ≥7 decode steps, got {steps}");
+    let m = &c.metrics.requests[0];
+    assert!(m.finished.is_some(), "request did not finish");
+    assert!(m.ttft().unwrap() > 0.0);
+    assert_eq!(m.tokens_out, 8);
+    assert!(c.ir.mean() >= 1.0);
+}
+
+#[test]
+fn continuous_batching_mixes_requests() {
+    let Some(engine) = engine() else { return };
+    let mut c = RealCoordinator::new(engine, 8, 5);
+    for i in 0..10u64 {
+        let domain = (i % 4) as u16;
+        let prompt = c.synth_prompt(domain, 8 + (i as usize % 12));
+        c.submit(
+            Request {
+                id: i,
+                domain,
+                dataset: Dataset::Mixed,
+                prompt_len: prompt.len(),
+                max_new_tokens: 6 + (i as usize % 10),
+                arrival: 0.0,
+            },
+            prompt,
+        );
+    }
+    c.run_to_completion(400).unwrap();
+    let done = c
+        .metrics
+        .requests
+        .iter()
+        .filter(|m| m.finished.is_some())
+        .count();
+    assert_eq!(done, 10, "all requests must complete");
+    // fidelity accumulated over live traffic
+    let rep = c.fidelity_report();
+    assert!(!rep.is_empty());
+    for (l, trained, _prior) in rep {
+        assert!(trained > 0.3, "layer {l} fidelity {trained}");
+    }
+}
+
+#[test]
+fn moe_block_microbench_runs() {
+    let Some(engine) = engine() else { return };
+    let h = engine.cfg().d_model;
+    let x: Vec<f32> = (0..64 * h).map(|i| ((i % 97) as f32 - 48.0) * 0.01).collect();
+    let (y, t) = engine.moe_block(&x).unwrap();
+    assert_eq!(y.len(), 64 * h);
+    assert!(y.iter().all(|v| v.is_finite()));
+    assert!(t > 0.0);
+}

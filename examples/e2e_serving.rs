@@ -46,6 +46,7 @@ fn main() {
             domain: (i % 4) as u16,
             prompt_len: 8 + rng.next_usize(24),
             max_new_tokens: 16 + rng.next_usize(32),
+            arrival: 0.0,
         });
     }
 

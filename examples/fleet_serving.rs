@@ -1,0 +1,60 @@
+//! Multi-replica, load-aware serving: shard one skewed request stream
+//! across N simulator-backed engine replicas and compare dispatch
+//! policies — the data-parallel axis (HarMoEny / ExpertFlow style) on
+//! top of PROBE's per-instance expert balancing.
+//!
+//! Run: `cargo run --release --example fleet_serving`
+
+use probe::experiments::fleet::{run_cell, FleetParams, FleetWorkload};
+use probe::server::dispatch::DispatchKind;
+use probe::workload::Dataset;
+
+fn main() {
+    let mut p = FleetParams::default();
+    p.requests_per_replica = 32;
+    let workloads = [
+        FleetWorkload {
+            dataset: Dataset::Repeat,
+            shift_to: None,
+        },
+        FleetWorkload {
+            dataset: Dataset::Code,
+            shift_to: Some(Dataset::Chinese),
+        },
+    ];
+    println!("PROBE fleet serving: 4 sim-backed replicas, skewed traffic\n");
+    println!(
+        "{:<16} {:<16} {:>10} {:>10} {:>10} {:>8}",
+        "dataset", "policy", "agg tok/s", "ttft p50", "ttft p99", "IR"
+    );
+    for w in &workloads {
+        let mut base = 0.0;
+        for policy in DispatchKind::ALL {
+            let report = run_cell(&p, w, 4, policy);
+            let ttft = report.merged_metrics().ttft_summary();
+            let thr = report.aggregate_throughput();
+            if policy == DispatchKind::RoundRobin {
+                base = thr;
+            }
+            println!(
+                "{:<16} {:<16} {:>10.0} {:>8.1}ms {:>8.1}ms {:>8.2}{}",
+                w.label(),
+                policy.name(),
+                thr,
+                ttft.p50 * 1e3,
+                ttft.p99 * 1e3,
+                report.mean_ir(),
+                if policy != DispatchKind::RoundRobin && base > 0.0 {
+                    format!("  ({:+.1}% vs rr)", (thr / base - 1.0) * 100.0)
+                } else {
+                    String::new()
+                }
+            );
+        }
+    }
+    println!("\nreading: shortest-queue balances the lognormal work spread the");
+    println!("round-robin baseline ignores; bounded-load domain affinity keeps");
+    println!("semantic locality per replica while spilling under single-domain");
+    println!("floods. Each replica is the SAME generic serving engine the PJRT");
+    println!("path uses (engine::ServingEngine<SimExecutor>).");
+}

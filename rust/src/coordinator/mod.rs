@@ -1,323 +1,22 @@
-//! The serving coordinator: continuous batching over the EP cluster.
+//! Compatibility façade over the generic serving engine.
 //!
-//! [`Coordinator`] drives paper-scale models through the cluster
-//! simulator (Figs. 7–9, 11); [`real::RealCoordinator`] serves the small
-//! real model through PJRT (`examples/e2e_serving.rs`). Both implement
-//! the same request lifecycle: admission → chunked prefill → continuous
-//! decode with join/leave at step boundaries → retirement.
+//! The request lifecycle (admission → chunked prefill → continuous
+//! decode with join/leave → retirement) is implemented exactly once, in
+//! [`crate::engine::ServingEngine`]; this module keeps the historical
+//! `Coordinator` / `RealCoordinator` names as type aliases over the two
+//! [`crate::engine::StepExecutor`] backends.
 
-pub mod real;
+pub use crate::engine::sim::{SimExecutor, PREFILL_EFFECTIVE_CTX};
+pub use crate::engine::{ActiveEntry, ServingEngine, StepExecutor, StepReport};
 
-use std::collections::VecDeque;
+/// Continuous-batching coordinator over the simulated EP cluster
+/// (paper-scale models, Figs. 7–9, 11).
+pub type Coordinator = ServingEngine<SimExecutor>;
 
-/// Effective KV rows read per prefill query token (multi-K contexts after
-/// GQA-8 sharing and flash tile reuse) vs the decode default of 64.
-pub const PREFILL_EFFECTIVE_CTX: usize = 192;
+pub mod real {
+    //! Real-model serving through PJRT (`examples/e2e_serving.rs`).
+    pub use crate::engine::real::{ir_of_layers, FidelityAccum, RealExecutor};
 
-use crate::balancers::{decide_step, Balancer};
-use crate::config::Config;
-use crate::metrics::{IrTracker, RequestMetrics, ServingMetrics};
-use crate::routing::RoutingModel;
-use crate::simulator::{ClusterSim, StepOutcome};
-use crate::workload::Request;
-
-/// A request being decoded.
-#[derive(Debug, Clone)]
-struct ActiveReq {
-    req: Request,
-    decoded: usize,
-    midx: usize,
-}
-
-/// Continuous-batching coordinator over the simulated EP cluster.
-pub struct Coordinator {
-    pub cfg: Config,
-    pub sim: ClusterSim,
-    pub routing_model: RoutingModel,
-    balancer: Box<dyn Balancer>,
-    queue: VecDeque<Request>,
-    active: Vec<ActiveReq>,
-    pub clock: f64,
-    pub metrics: ServingMetrics,
-    pub ir: IrTracker,
-    step_idx: usize,
-}
-
-impl Coordinator {
-    pub fn new(cfg: Config, balancer: Box<dyn Balancer>, seed: u64) -> Coordinator {
-        let sim = ClusterSim::new(cfg.model.clone(), cfg.cluster.clone());
-        let routing_model = RoutingModel::calibrated(
-            cfg.model.n_layers,
-            cfg.model.n_experts,
-            cfg.model.top_k,
-            4,
-            seed,
-        );
-        Coordinator {
-            cfg,
-            sim,
-            routing_model,
-            balancer,
-            queue: VecDeque::new(),
-            active: Vec::new(),
-            clock: 0.0,
-            metrics: ServingMetrics::default(),
-            ir: IrTracker::new(),
-            step_idx: 0,
-        }
-    }
-
-    pub fn balancer_name(&self) -> &'static str {
-        self.balancer.name()
-    }
-
-    /// Enqueue a request (admitted at the next step boundary once its
-    /// arrival time has passed).
-    pub fn submit(&mut self, req: Request) {
-        self.metrics.requests.push(RequestMetrics {
-            id: req.id,
-            arrival: req.arrival,
-            ..Default::default()
-        });
-        self.queue.push_back(req);
-    }
-
-    /// Number of decode slots (tokens per step).
-    pub fn decode_capacity(&self) -> usize {
-        self.cfg.global_batch()
-    }
-
-    pub fn active_count(&self) -> usize {
-        self.active.len()
-    }
-
-    /// Admit arrived requests into free decode slots. Prefill is charged
-    /// as chunked steps through the same balancer+simulator path.
-    fn admit(&mut self) {
-        while self.active.len() < self.decode_capacity() {
-            let Some(front) = self.queue.front() else { break };
-            if front.arrival > self.clock {
-                break;
-            }
-            let req = self.queue.pop_front().unwrap();
-            let midx = self
-                .metrics
-                .requests
-                .iter()
-                .position(|m| m.id == req.id)
-                .expect("submitted");
-            // chunked prefill for this request's prompt. Prefill queries
-            // attend to multi-K contexts: use the larger effective-KV
-            // constant (GQA + flash tile reuse) during these steps.
-            let chunk = self.cfg.prefill_chunk_per_rank * self.cfg.cluster.ep;
-            let decode_ctx = self.sim.mean_ctx;
-            self.sim.mean_ctx = PREFILL_EFFECTIVE_CTX;
-            let mut remaining = req.prompt_len;
-            while remaining > 0 {
-                let this = remaining.min(chunk);
-                let outcome = self.run_routed_step(this.max(1), req.domain);
-                self.clock += outcome.latency;
-                remaining -= this;
-            }
-            self.sim.mean_ctx = decode_ctx;
-            self.metrics.requests[midx].first_token = Some(self.clock);
-            self.active.push(ActiveReq {
-                req,
-                decoded: 1, // the prefill emits the first token
-                midx,
-            });
-        }
-    }
-
-    /// Route + balance + simulate one step with `tokens` tokens, all of
-    /// domain mixture dominated by the active set (decode) or a single
-    /// request (prefill chunk).
-    fn run_routed_step(&mut self, tokens: usize, domain_hint: u16) -> StepOutcome {
-        let domains: Vec<u16> = if self.active.is_empty() {
-            vec![domain_hint; tokens]
-        } else {
-            (0..tokens)
-                .map(|i| self.active[i % self.active.len()].req.domain)
-                .collect()
-        };
-        let routing = self.routing_model.route_step(&domains);
-        let decisions = decide_step(self.balancer.as_mut(), self.step_idx, &routing);
-        let outcome = self.sim.run_step(&routing, &decisions);
-        // rank token-load IR of the first layer (tracker keeps per step)
-        if let Some(ir) = outcome.ir_per_layer.first() {
-            self.ir.per_step.push(*ir);
-        }
-        self.step_idx += 1;
-        outcome
-    }
-
-    /// One continuous-batching decode step; returns the outcome or None
-    /// when nothing is active/admittable.
-    pub fn decode_step(&mut self) -> Option<StepOutcome> {
-        self.admit();
-        if self.active.is_empty() {
-            // idle: jump the clock to the next arrival if any
-            if let Some(front) = self.queue.front() {
-                self.clock = self.clock.max(front.arrival);
-                self.admit();
-            }
-            if self.active.is_empty() {
-                return None;
-            }
-        }
-        let domains: Vec<u16> = self.active.iter().map(|a| a.req.domain).collect();
-        let routing = self.routing_model.route_step(&domains);
-        let decisions = decide_step(self.balancer.as_mut(), self.step_idx, &routing);
-        let outcome = self.sim.run_step(&routing, &decisions);
-        self.step_idx += 1;
-        self.clock += outcome.latency;
-        if let Some(ir) = outcome.ir_per_layer.first() {
-            self.ir.per_step.push(*ir);
-        }
-        self.metrics
-            .step_tokens
-            .push((self.clock, self.active.len()));
-
-        // token bookkeeping + retirement
-        let mut retired = Vec::new();
-        for (i, a) in self.active.iter_mut().enumerate() {
-            a.decoded += 1;
-            if a.decoded >= a.req.max_new_tokens {
-                retired.push(i);
-            }
-        }
-        for &i in retired.iter().rev() {
-            let a = self.active.swap_remove(i);
-            let m = &mut self.metrics.requests[a.midx];
-            m.finished = Some(self.clock);
-            m.tokens_out = a.decoded;
-        }
-        self.routing_model.step_drift();
-        Some(outcome)
-    }
-
-    /// Run `n` decode steps (stops early when the system drains).
-    pub fn run_decode_steps(&mut self, n: usize) -> Vec<StepOutcome> {
-        let mut out = Vec::with_capacity(n);
-        for _ in 0..n {
-            match self.decode_step() {
-                Some(o) => out.push(o),
-                None => break,
-            }
-        }
-        out
-    }
-
-    /// Measure prefill latency (TTFT component) for a prompt of
-    /// `total_tokens` of `dataset` processed in chunks (Fig. 7).
-    pub fn measure_prefill(&mut self, total_tokens: usize, domain: u16) -> f64 {
-        let chunk = self.cfg.prefill_chunk_per_rank * self.cfg.cluster.ep;
-        let decode_ctx = self.sim.mean_ctx;
-        self.sim.mean_ctx = PREFILL_EFFECTIVE_CTX;
-        let mut remaining = total_tokens;
-        let mut latency = 0.0;
-        while remaining > 0 {
-            let this = remaining.min(chunk);
-            let outcome = self.run_routed_step(this, domain);
-            latency += outcome.latency;
-            remaining -= this;
-        }
-        self.sim.mean_ctx = decode_ctx;
-        latency
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::balancers::{Probe, StaticEp};
-    use crate::config::ProbeConfig;
-    use crate::workload::{Dataset, RequestGenerator, WorkloadSpec};
-
-    fn small_cfg() -> Config {
-        let mut cfg = Config::default();
-        cfg.batch_per_rank = 32; // keep tests fast
-        cfg.prefill_chunk_per_rank = 256;
-        // shrink the model's layer count for speed; routing model follows
-        cfg.model.n_layers = 3;
-        cfg
-    }
-
-    fn gen(dataset: Dataset, seed: u64) -> RequestGenerator {
-        let mut spec = WorkloadSpec::new(dataset, 4);
-        spec.mean_prompt_len = 64;
-        spec.mean_new_tokens = 8;
-        RequestGenerator::new(spec, seed)
-    }
-
-    #[test]
-    fn serves_requests_to_completion() {
-        let cfg = small_cfg();
-        let bal = Box::new(StaticEp::new(&cfg));
-        let mut c = Coordinator::new(cfg, bal, 1);
-        let mut g = gen(Dataset::Code, 2);
-        for r in g.take(6) {
-            c.submit(r);
-        }
-        let outs = c.run_decode_steps(64);
-        assert!(!outs.is_empty());
-        let done = c.metrics.requests.iter().filter(|m| m.finished.is_some()).count();
-        assert!(done >= 4, "only {done} finished");
-        for m in c.metrics.requests.iter().filter(|m| m.finished.is_some()) {
-            assert!(m.ttft().unwrap() > 0.0);
-            assert!(m.tokens_out > 0);
-        }
-    }
-
-    #[test]
-    fn clock_monotone_and_throughput_positive() {
-        let cfg = small_cfg();
-        let bal = Box::new(StaticEp::new(&cfg));
-        let mut c = Coordinator::new(cfg, bal, 3);
-        let mut g = gen(Dataset::Mixed, 4);
-        for r in g.take(12) {
-            c.submit(r);
-        }
-        let mut last = 0.0;
-        for _ in 0..20 {
-            if c.decode_step().is_none() {
-                break;
-            }
-            assert!(c.clock >= last);
-            last = c.clock;
-        }
-        assert!(c.metrics.throughput() > 0.0);
-    }
-
-    #[test]
-    fn prefill_latency_scales_with_tokens() {
-        let cfg = small_cfg();
-        let bal = Box::new(StaticEp::new(&cfg));
-        let mut c = Coordinator::new(cfg.clone(), bal, 5);
-        let t_small = c.measure_prefill(2048, 0);
-        let bal2 = Box::new(StaticEp::new(&cfg));
-        let mut c2 = Coordinator::new(cfg, bal2, 5);
-        let t_big = c2.measure_prefill(16384, 0);
-        assert!(t_big > t_small * 2.0, "{t_small} vs {t_big}");
-    }
-
-    #[test]
-    fn probe_coordinator_beats_static_on_skewed_decode() {
-        let cfg = small_cfg();
-        let run = |bal: Box<dyn crate::balancers::Balancer>| -> f64 {
-            let mut c = Coordinator::new(small_cfg(), bal, 7);
-            let mut g = gen(Dataset::Repeat, 8);
-            for r in g.take(512) {
-                c.submit(r);
-            }
-            c.run_decode_steps(12);
-            c.metrics.throughput()
-        };
-        let thr_static = run(Box::new(StaticEp::new(&cfg)));
-        let thr_probe = run(Box::new(Probe::new(&cfg, ProbeConfig::default(), 9)));
-        assert!(
-            thr_probe > thr_static,
-            "probe {thr_probe} <= static {thr_static}"
-        );
-    }
+    /// Continuous-batching server over the real small model.
+    pub type RealCoordinator = crate::engine::ServingEngine<RealExecutor>;
 }

@@ -1,0 +1,457 @@
+//! The generic serving engine: ONE implementation of the request
+//! lifecycle (admission → chunked prefill → continuous decode with
+//! join/leave at step boundaries → retirement) parameterized over a
+//! [`StepExecutor`] backend.
+//!
+//! Backends plug in the "route → decide → execute one step" core:
+//! * [`sim::SimExecutor`] — the paper-scale cluster simulator driven by
+//!   the synthetic routing model and a pluggable balancer (Figs. 7–9, 11).
+//! * [`real::RealExecutor`] — the small real MoE model served through
+//!   PJRT with real router traces feeding the PROBE metrics stack.
+//!
+//! [`ServingEngine`] owns the queue, the active set, the (virtual)
+//! clock, and all serving metrics; executors own only backend state
+//! (simulator/balancer or KV cache/slots). The engine can be
+//! instantiated N times behind the multi-replica front-end in
+//! [`crate::server`].
+
+pub mod real;
+pub mod sim;
+
+use std::collections::VecDeque;
+
+use anyhow::Result;
+
+use crate::metrics::{IrTracker, RequestMetrics, ServingMetrics};
+use crate::workload::Request;
+
+/// Executor-agnostic result of one executed step (prefill or decode).
+#[derive(Debug, Clone, Default)]
+pub struct StepReport {
+    /// Time this step occupied the backend: simulated seconds for the
+    /// cluster simulator, measured wall seconds for the PJRT runtime.
+    pub latency: f64,
+    /// Tokens processed (decode: one per active request; prefill: the
+    /// admitted prompt tokens).
+    pub tokens: usize,
+    /// Imbalance-ratio samples to append to the engine's [`IrTracker`]
+    /// (the simulator reports one per step, the real runtime one per
+    /// layer).
+    pub ir_samples: Vec<f64>,
+}
+
+/// A request in a decode slot.
+#[derive(Debug, Clone)]
+pub struct ActiveEntry {
+    pub req: Request,
+    /// Tokens emitted so far (the prefill emits the first).
+    pub decoded: usize,
+    /// Total tokens to emit before retirement.
+    pub budget: usize,
+    /// Index into [`ServingMetrics::requests`], carried with the request
+    /// so completion bookkeeping never rescans the metrics vector.
+    pub(crate) midx: usize,
+}
+
+/// One serving step backend: route the active tokens, decide placement/
+/// assignment, execute, and report a [`StepReport`]. Implementations
+/// keep only backend state; the request lifecycle lives in
+/// [`ServingEngine`].
+pub trait StepExecutor {
+    /// Backend name for logs and reports.
+    fn name(&self) -> &'static str;
+
+    /// Concurrent decode slots (tokens per step for the simulator,
+    /// KV-cache slots for the real runtime).
+    fn capacity(&self) -> usize;
+
+    /// Max requests prefilled together in one admission group (the real
+    /// prefill artifact runs a fixed batch; the simulator charges
+    /// per-request chunks).
+    fn prefill_group_limit(&self) -> usize {
+        1
+    }
+
+    /// Prepare backend state for an admitted request and return its
+    /// decode budget (total tokens to emit, counting the prefill's
+    /// first token).
+    fn begin(&mut self, req: &Request) -> Result<usize>;
+
+    /// Run the chunked prefill of one admission group. `active` is the
+    /// current decode set (the simulator routes prefill chunks with the
+    /// active domain mixture, matching continuous batching).
+    fn prefill(&mut self, group: &[Request], active: &[ActiveEntry]) -> Result<StepReport>;
+
+    /// One continuous-batching decode step over the active set.
+    fn decode(&mut self, active: &[ActiveEntry]) -> Result<StepReport>;
+
+    /// Drop backend state of a retired request.
+    fn retire(&mut self, _req: &Request) {}
+}
+
+/// A queued request plus its metrics index (recorded at submit time so
+/// admission is O(1) instead of scanning all request metrics).
+#[derive(Debug, Clone)]
+struct Queued {
+    req: Request,
+    midx: usize,
+}
+
+/// Continuous-batching serving engine over any [`StepExecutor`].
+pub struct ServingEngine<E: StepExecutor> {
+    pub executor: E,
+    queue: VecDeque<Queued>,
+    active: Vec<ActiveEntry>,
+    /// Virtual serving clock: advances by step latencies and jumps
+    /// forward to the next arrival when idle.
+    pub clock: f64,
+    pub metrics: ServingMetrics,
+    pub ir: IrTracker,
+}
+
+impl<E: StepExecutor> ServingEngine<E> {
+    pub fn from_executor(executor: E) -> ServingEngine<E> {
+        ServingEngine {
+            executor,
+            queue: VecDeque::new(),
+            active: Vec::new(),
+            clock: 0.0,
+            metrics: ServingMetrics::default(),
+            ir: IrTracker::new(),
+        }
+    }
+
+    /// Enqueue a request (admitted at the next step boundary once its
+    /// arrival time has passed). The queue is kept sorted by arrival —
+    /// admission gates on the front entry, so an out-of-order
+    /// submission must not head-of-line-block earlier arrivals; ties
+    /// keep submission order.
+    pub fn submit(&mut self, req: Request) {
+        let midx = self.metrics.requests.len();
+        self.metrics.requests.push(RequestMetrics {
+            id: req.id,
+            arrival: req.arrival,
+            ..Default::default()
+        });
+        let mut pos = self.queue.len();
+        while pos > 0 && self.queue[pos - 1].req.arrival > req.arrival {
+            pos -= 1;
+        }
+        self.queue.insert(pos, Queued { req, midx });
+    }
+
+    /// Requests waiting for a decode slot.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Requests currently decoding.
+    pub fn active_count(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Concurrent decode slots.
+    pub fn decode_capacity(&self) -> usize {
+        self.executor.capacity()
+    }
+
+    /// The active set (read-only view for reporting).
+    pub fn active(&self) -> &[ActiveEntry] {
+        &self.active
+    }
+
+    /// Admit arrived requests into free decode slots, charging their
+    /// chunked prefill through the executor.
+    fn admit(&mut self) -> Result<()> {
+        loop {
+            let free = self
+                .executor
+                .capacity()
+                .saturating_sub(self.active.len());
+            if free == 0 {
+                break;
+            }
+            let limit = free.min(self.executor.prefill_group_limit().max(1));
+            let mut group: Vec<Queued> = Vec::new();
+            while group.len() < limit {
+                let arrived = self
+                    .queue
+                    .front()
+                    .is_some_and(|q| q.req.arrival <= self.clock);
+                if !arrived {
+                    break;
+                }
+                group.push(self.queue.pop_front().unwrap());
+            }
+            if group.is_empty() {
+                break;
+            }
+            let mut budgets = Vec::with_capacity(group.len());
+            let mut result = Ok(());
+            for q in &group {
+                match self.executor.begin(&q.req) {
+                    Ok(b) => budgets.push(b),
+                    Err(e) => {
+                        result = Err(e);
+                        break;
+                    }
+                }
+            }
+            let rep = match result.and_then(|()| {
+                let reqs: Vec<Request> = group.iter().map(|q| q.req.clone()).collect();
+                self.executor.prefill(&reqs, &self.active)
+            }) {
+                Ok(rep) => rep,
+                Err(e) => {
+                    // put the group back (front, original order) so a
+                    // transient backend failure loses no requests
+                    for q in group.into_iter().rev() {
+                        self.queue.push_front(q);
+                    }
+                    return Err(e);
+                }
+            };
+            self.clock += rep.latency;
+            for &ir in &rep.ir_samples {
+                self.ir.push_ir(ir);
+            }
+            for (q, budget) in group.into_iter().zip(budgets) {
+                self.metrics.requests[q.midx].first_token = Some(self.clock);
+                self.active.push(ActiveEntry {
+                    req: q.req,
+                    decoded: 1, // the prefill emits the first token
+                    budget,
+                    midx: q.midx,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// One continuous-batching step: admit, decode, retire. Returns
+    /// `Ok(None)` when the engine has fully drained.
+    pub fn step(&mut self) -> Result<Option<StepReport>> {
+        self.admit()?;
+        if self.active.is_empty() {
+            // idle: jump the clock to the next arrival if any
+            let next_arrival = self.queue.front().map(|q| q.req.arrival);
+            if let Some(t) = next_arrival {
+                self.clock = self.clock.max(t);
+                self.admit()?;
+            }
+            if self.active.is_empty() {
+                return Ok(None);
+            }
+        }
+        let rep = self.executor.decode(&self.active)?;
+        self.clock += rep.latency;
+        for &ir in &rep.ir_samples {
+            self.ir.push_ir(ir);
+        }
+        self.metrics
+            .step_tokens
+            .push((self.clock, self.active.len()));
+
+        // token bookkeeping + retirement
+        let clock = self.clock;
+        let mut i = 0;
+        while i < self.active.len() {
+            self.active[i].decoded += 1;
+            if self.active[i].decoded >= self.active[i].budget {
+                let a = self.active.swap_remove(i);
+                let m = &mut self.metrics.requests[a.midx];
+                m.finished = Some(clock);
+                m.tokens_out = a.decoded;
+                self.executor.retire(&a.req);
+            } else {
+                i += 1;
+            }
+        }
+        Ok(Some(rep))
+    }
+
+    /// Run up to `n` steps (stops early when the system drains).
+    pub fn run_steps(&mut self, n: usize) -> Result<Vec<StepReport>> {
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            match self.step()? {
+                Some(rep) => out.push(rep),
+                None => break,
+            }
+        }
+        Ok(out)
+    }
+
+    /// Serve until every submitted request finishes (or `max_steps`).
+    /// Returns the number of decode steps executed.
+    pub fn run_to_completion(&mut self, max_steps: usize) -> Result<usize> {
+        let mut steps = 0;
+        while steps < max_steps {
+            match self.step()? {
+                Some(_) => steps += 1,
+                None => break,
+            }
+        }
+        Ok(steps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Dataset;
+
+    /// Deterministic mock backend: fixed latency per step, `cap` slots.
+    struct MockExecutor {
+        cap: usize,
+        step_latency: f64,
+        prefill_latency: f64,
+        begun: Vec<u64>,
+        retired: Vec<u64>,
+    }
+
+    impl MockExecutor {
+        fn new(cap: usize) -> MockExecutor {
+            MockExecutor {
+                cap,
+                step_latency: 1.0,
+                prefill_latency: 0.5,
+                begun: Vec::new(),
+                retired: Vec::new(),
+            }
+        }
+    }
+
+    impl StepExecutor for MockExecutor {
+        fn name(&self) -> &'static str {
+            "mock"
+        }
+        fn capacity(&self) -> usize {
+            self.cap
+        }
+        fn begin(&mut self, req: &Request) -> Result<usize> {
+            self.begun.push(req.id);
+            Ok(req.max_new_tokens.max(1))
+        }
+        fn prefill(&mut self, group: &[Request], _active: &[ActiveEntry]) -> Result<StepReport> {
+            Ok(StepReport {
+                latency: self.prefill_latency,
+                tokens: group.iter().map(|r| r.prompt_len).sum(),
+                ir_samples: vec![1.0],
+            })
+        }
+        fn decode(&mut self, active: &[ActiveEntry]) -> Result<StepReport> {
+            Ok(StepReport {
+                latency: self.step_latency,
+                tokens: active.len(),
+                ir_samples: vec![1.5],
+            })
+        }
+        fn retire(&mut self, req: &Request) {
+            self.retired.push(req.id);
+        }
+    }
+
+    fn req(id: u64, arrival: f64, new_tokens: usize) -> Request {
+        Request {
+            id,
+            domain: (id % 4) as u16,
+            dataset: Dataset::Mixed,
+            prompt_len: 8,
+            max_new_tokens: new_tokens,
+            arrival,
+        }
+    }
+
+    #[test]
+    fn lifecycle_to_completion() {
+        let mut e = ServingEngine::from_executor(MockExecutor::new(4));
+        for i in 0..3u64 {
+            e.submit(req(i, 0.0, 4));
+        }
+        let steps = e.run_to_completion(100).unwrap();
+        // each request needs 3 decode steps after the prefill token
+        assert_eq!(steps, 3);
+        assert_eq!(e.active_count(), 0);
+        assert_eq!(e.pending(), 0);
+        assert_eq!(e.executor.begun, vec![0, 1, 2]);
+        let mut retired = e.executor.retired.clone();
+        retired.sort_unstable();
+        assert_eq!(retired, vec![0, 1, 2]);
+        for m in &e.metrics.requests {
+            assert!(m.finished.is_some());
+            assert_eq!(m.tokens_out, 4);
+            assert!(m.ttft().unwrap() > 0.0);
+        }
+    }
+
+    #[test]
+    fn admission_respects_capacity_and_arrival() {
+        let mut e = ServingEngine::from_executor(MockExecutor::new(2));
+        e.submit(req(0, 0.0, 10));
+        e.submit(req(1, 0.0, 10));
+        e.submit(req(2, 0.0, 10)); // capacity 2: must wait
+        e.submit(req(3, 1e9, 2)); // far-future arrival
+        e.step().unwrap();
+        assert_eq!(e.active_count(), 2);
+        assert_eq!(e.pending(), 2);
+        // request 2 joins once a slot frees; request 3 never arrives
+        // within the first requests' lifetime
+        let steps = e.run_to_completion(40).unwrap();
+        assert!(steps > 0);
+        assert!(e.metrics.requests[2].finished.is_some());
+        // the engine drains request 3 too (clock jumps to its arrival)
+        assert!(e.metrics.requests[3].finished.is_some());
+        assert!(e.metrics.requests[3].first_token.unwrap() >= 1e9);
+    }
+
+    #[test]
+    fn clock_jumps_to_next_arrival_when_idle() {
+        let mut e = ServingEngine::from_executor(MockExecutor::new(2));
+        e.submit(req(0, 5.0, 2));
+        assert_eq!(e.clock, 0.0);
+        let rep = e.step().unwrap();
+        assert!(rep.is_some());
+        assert!(e.clock >= 5.0, "clock {} did not jump", e.clock);
+        let m = &e.metrics.requests[0];
+        assert!(m.first_token.unwrap() >= 5.0);
+        assert!(m.ttft().unwrap() < 5.0, "ttft must not include pre-arrival time");
+    }
+
+    #[test]
+    fn metrics_index_carried_with_queue() {
+        // interleave submissions and steps so metrics indices and queue
+        // order diverge from request ids
+        let mut e = ServingEngine::from_executor(MockExecutor::new(1));
+        e.submit(req(7, 0.0, 2));
+        e.step().unwrap();
+        e.submit(req(3, 0.0, 2));
+        e.run_to_completion(20).unwrap();
+        assert_eq!(e.metrics.requests[0].id, 7);
+        assert_eq!(e.metrics.requests[1].id, 3);
+        assert!(e.metrics.requests.iter().all(|m| m.finished.is_some()));
+    }
+
+    #[test]
+    fn out_of_order_arrival_does_not_block_earlier_ones() {
+        let mut e = ServingEngine::from_executor(MockExecutor::new(2));
+        e.submit(req(0, 1e9, 2)); // far future, submitted first
+        e.submit(req(1, 0.0, 2)); // already arrived
+        e.step().unwrap();
+        // request 1 must be served now, not time-warped behind request 0
+        let m1 = &e.metrics.requests[1];
+        assert!(m1.first_token.unwrap() < 1.0, "{:?}", m1.first_token);
+        e.run_to_completion(20).unwrap();
+        assert!(e.metrics.requests[0].first_token.unwrap() >= 1e9);
+    }
+
+    #[test]
+    fn ir_samples_accumulate() {
+        let mut e = ServingEngine::from_executor(MockExecutor::new(2));
+        e.submit(req(0, 0.0, 3));
+        e.run_to_completion(10).unwrap();
+        // one prefill sample + one per decode step
+        assert!(e.ir.per_step.len() >= 3);
+        assert!(e.ir.mean() >= 1.0);
+    }
+}

@@ -1,0 +1,422 @@
+//! Real-model executor: continuous batching over the PJRT engine.
+//!
+//! Executes the small MoE transformer built by `python/compile` — real
+//! prefill chunks, real decode steps, greedy sampling, KV-cache slot
+//! management — and feeds the *real* router traces into the PROBE
+//! metrics/balancer stack (IR tracking at a virtual EP size, predictor
+//! fidelity). The request lifecycle itself lives in the generic
+//! [`ServingEngine`]; this module only owns backend state.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::predictor::{fidelity, PredFidelity};
+use crate::routing::LayerRouting;
+use crate::runtime::{predictions_from_decode, priors_from_decode, routing_from_decode, Engine};
+use crate::util::stats::imbalance_ratio;
+use crate::util::Rng;
+use crate::workload::Request;
+
+use super::{ActiveEntry, ServingEngine, StepExecutor, StepReport};
+
+/// A decode slot holding one active sequence's sampling state.
+#[derive(Debug, Clone)]
+struct Slot {
+    req_id: u64,
+    pos: usize,
+    last_token: i32,
+}
+
+/// Per-layer accumulated predictor fidelity (Fig. 10 measured from rust).
+#[derive(Debug, Clone, Default)]
+pub struct FidelityAccum {
+    pub trained: Vec<PredFidelity>,
+    pub prior: Vec<PredFidelity>,
+    pub samples: usize,
+}
+
+/// PJRT-backed serving executor over the real model.
+pub struct RealExecutor {
+    pub engine: Engine,
+    batch: usize,
+    kv: Vec<f32>,
+    slots: Vec<Option<Slot>>,
+    /// Prompt tokens awaiting admission, keyed by request id (provided
+    /// via `submit_with_prompt` or synthesized at `begin`).
+    prompts: HashMap<u64, Vec<i32>>,
+    pub fidelity: FidelityAccum,
+    /// Virtual EP size used for IR accounting of the real router traces.
+    pub virtual_ep: usize,
+    rng: Rng,
+}
+
+impl RealExecutor {
+    pub fn new(engine: Engine, virtual_ep: usize, seed: u64) -> RealExecutor {
+        let batch = engine.pick_batch(8);
+        let kv = vec![0.0; engine.cfg().kv_len(batch)];
+        let n_layers = engine.cfg().n_layers;
+        RealExecutor {
+            engine,
+            batch,
+            kv,
+            slots: (0..batch).map(|_| None).collect(),
+            prompts: HashMap::new(),
+            fidelity: FidelityAccum {
+                trained: vec![PredFidelity::default(); n_layers],
+                prior: vec![PredFidelity::default(); n_layers],
+                samples: 0,
+            },
+            virtual_ep,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Sample prompt tokens for a request. Uses the exact per-domain
+    /// distributions the build's distillation corpus used
+    /// (`artifacts/domain_dists.json`) so live routing matches the
+    /// predictor's training distribution; falls back to a domain-
+    /// permuted Zipf when absent.
+    pub fn synth_prompt(&mut self, domain: u16, len: usize) -> Vec<i32> {
+        if let Some(dist) = self.engine.domain_dist(domain) {
+            let dist = dist.to_vec();
+            return (0..len)
+                .map(|_| self.rng.next_weighted(&dist) as i32)
+                .collect();
+        }
+        let vocab = self.engine.cfg().vocab;
+        let mut w = Rng::zipf_weights(vocab, 1.1);
+        // per-domain deterministic permutation
+        let mut perm_rng = Rng::new(0xD0_u64 + domain as u64);
+        perm_rng.shuffle(&mut w);
+        (0..len)
+            .map(|_| self.rng.next_weighted(&w) as i32)
+            .collect()
+    }
+
+    /// Stash an explicit prompt for a not-yet-admitted request.
+    pub fn set_prompt(&mut self, req_id: u64, prompt: Vec<i32>) {
+        self.prompts.insert(req_id, prompt);
+    }
+
+    fn free_slot(&self) -> Option<usize> {
+        (0..self.batch).find(|&i| self.slots[i].is_none())
+    }
+
+    /// Per-layer IR samples of one prefill chunk's real routing.
+    fn prefill_irs(
+        &self,
+        actual_idx: &[i32],
+        n_layers: usize,
+        b: usize,
+        s: usize,
+        k: usize,
+        n_experts: usize,
+    ) -> Vec<f64> {
+        let per_rank_experts = n_experts.div_ceil(self.virtual_ep);
+        (0..n_layers)
+            .map(|l| {
+                let mut loads = vec![0.0f64; self.virtual_ep];
+                let base = l * b * s * k;
+                for &e in &actual_idx[base..base + b * s * k] {
+                    if e >= 0 {
+                        loads[(e as usize / per_rank_experts).min(self.virtual_ep - 1)] += 1.0;
+                    }
+                }
+                imbalance_ratio(&loads)
+            })
+            .collect()
+    }
+
+    /// Copy sequence `src` of the prefill KV into decode slot `dst`.
+    fn migrate_kv(&mut self, pkv: &[f32], src: usize, dst: usize, used_len: usize) {
+        let cfg = self.engine.cfg();
+        let (l_n, s_max, h) = (cfg.n_layers, cfg.max_seq, cfg.d_model);
+        let pb = cfg.prefill_batch;
+        let db = self.batch;
+        let rows = used_len.min(s_max) * h;
+        for l in 0..l_n {
+            for kvh in 0..2 {
+                let src_off = (((l * 2 + kvh) * pb) + src) * s_max * h;
+                let dst_off = (((l * 2 + kvh) * db) + dst) * s_max * h;
+                self.kv[dst_off..dst_off + rows].copy_from_slice(&pkv[src_off..src_off + rows]);
+                // zero the tail (stale rows from a previous occupant)
+                self.kv[dst_off + rows..dst_off + s_max * h].fill(0.0);
+            }
+        }
+    }
+
+    /// Mean per-layer predictor fidelity accumulated so far.
+    pub fn fidelity_report(&self) -> Vec<(usize, f64, f64)> {
+        (1..self.engine.cfg().n_layers)
+            .map(|l| {
+                let t = &self.fidelity.trained[l];
+                let p = &self.fidelity.prior[l];
+                (l, t.top_k_accuracy, p.top_k_accuracy)
+            })
+            .collect()
+    }
+}
+
+impl StepExecutor for RealExecutor {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn capacity(&self) -> usize {
+        self.batch
+    }
+
+    fn prefill_group_limit(&self) -> usize {
+        self.engine.cfg().prefill_batch
+    }
+
+    fn begin(&mut self, req: &Request) -> Result<usize> {
+        let plen = match self.prompts.get(&req.id) {
+            Some(p) => p.len(),
+            None => {
+                let p = self.synth_prompt(req.domain, req.prompt_len.max(1));
+                let len = p.len();
+                self.prompts.insert(req.id, p);
+                len
+            }
+        };
+        let cap = self.engine.cfg().max_seq.saturating_sub(plen + 1).max(1);
+        Ok(req.max_new_tokens.max(1).min(cap))
+    }
+
+    /// Real chunked prefill of an admission group. The prefill artifact
+    /// runs `[Bp, S]`; each prefilled sequence's KV rows are migrated
+    /// into its decode cache slot.
+    fn prefill(&mut self, group: &[Request], _active: &[ActiveEntry]) -> Result<StepReport> {
+        let cfg = self.engine.cfg().clone();
+        // read (don't consume) the stored prompts: on a transient PJRT
+        // error the engine re-queues the group, and the retry must use
+        // the same client-supplied tokens, not a fresh synthesis
+        let prompts: Vec<Vec<i32>> = group
+            .iter()
+            .map(|r| self.prompts.get(&r.id).cloned().unwrap_or_default())
+            .collect();
+        let longest = prompts.iter().map(|p| p.len()).max().unwrap_or(0);
+        let mut pkv = vec![0.0f32; cfg.kv_len(cfg.prefill_batch)];
+        let mut start = 0usize;
+        let mut last_logits: Vec<f32> = Vec::new();
+        let mut latency = 0.0;
+        let mut irs = Vec::new();
+        while start < longest {
+            let s = cfg.prefill_chunk;
+            let mut tokens = vec![0i32; cfg.prefill_batch * s];
+            for (bi, prompt) in prompts.iter().enumerate() {
+                for j in 0..s {
+                    let p = start + j;
+                    tokens[bi * s + j] = if p < prompt.len() { prompt[p] } else { 0 };
+                }
+            }
+            let start_pos = vec![start as i32; cfg.prefill_batch];
+            let out = self.engine.prefill_chunk(&tokens, &start_pos, &mut pkv)?;
+            latency += out.exec_time;
+            irs.extend(self.prefill_irs(
+                &out.actual_idx,
+                cfg.n_layers,
+                cfg.prefill_batch,
+                s,
+                cfg.top_k,
+                cfg.n_experts,
+            ));
+            last_logits = out.logits_last;
+            start += s;
+        }
+        // migrate each prefilled sequence into a decode slot
+        for (bi, req) in group.iter().enumerate() {
+            let slot = self
+                .free_slot()
+                .ok_or_else(|| anyhow!("no free decode slot at prefill"))?;
+            self.migrate_kv(&pkv, bi, slot, prompts[bi].len());
+            let first_tok = if last_logits.is_empty() {
+                0
+            } else {
+                argmax(&last_logits[bi * cfg.vocab..(bi + 1) * cfg.vocab]) as i32
+            };
+            self.slots[slot] = Some(Slot {
+                req_id: req.id,
+                pos: prompts[bi].len(),
+                last_token: first_tok,
+            });
+        }
+        for req in group {
+            self.prompts.remove(&req.id);
+        }
+        Ok(StepReport {
+            latency,
+            tokens: prompts.iter().map(|p| p.len()).sum(),
+            ir_samples: irs,
+        })
+    }
+
+    /// One real decode step over all held slots; the engine does the
+    /// token bookkeeping and retirement.
+    fn decode(&mut self, _active: &[ActiveEntry]) -> Result<StepReport> {
+        let cfg = self.engine.cfg().clone();
+        let n_active = self.slots.iter().filter(|s| s.is_some()).count();
+        if n_active == 0 {
+            return Err(anyhow!("decode with no active slots"));
+        }
+        let mut tokens = vec![0i32; self.batch];
+        let mut pos = vec![0i32; self.batch];
+        for i in 0..self.batch {
+            if let Some(slot) = &self.slots[i] {
+                tokens[i] = slot.last_token;
+                pos[i] = slot.pos as i32;
+            }
+        }
+        let out = self
+            .engine
+            .decode_step(self.batch, &tokens, &pos, &mut self.kv)?;
+
+        // --- metrics from the REAL router ---
+        let routing = routing_from_decode(&out, &cfg);
+        let per_rank_experts = cfg.n_experts.div_ceil(self.virtual_ep);
+        let irs: Vec<f64> = routing
+            .iter()
+            .map(|lr| {
+                let counts = lr.expert_counts();
+                let loads: Vec<f64> = (0..self.virtual_ep)
+                    .map(|r| {
+                        counts[r * per_rank_experts..(r + 1) * per_rank_experts]
+                            .iter()
+                            .sum::<u32>() as f64
+                    })
+                    .collect();
+                imbalance_ratio(&loads)
+            })
+            .collect();
+        let preds = predictions_from_decode(&out, &cfg);
+        let priors = priors_from_decode(&out, &cfg);
+        for (l, (p, pr)) in preds.iter().zip(priors.iter()).enumerate() {
+            if let (Some(p), Some(pr)) = (p, pr) {
+                accum(&mut self.fidelity.trained[l], &fidelity(&routing[l], p));
+                accum(&mut self.fidelity.prior[l], &fidelity(&routing[l], pr));
+            }
+        }
+        self.fidelity.samples += 1;
+
+        // --- greedy sampling + slot advance ---
+        for i in 0..self.batch {
+            let Some(slot) = &mut self.slots[i] else { continue };
+            let logits = &out.logits[i * cfg.vocab..(i + 1) * cfg.vocab];
+            slot.last_token = argmax(logits) as i32;
+            slot.pos += 1;
+        }
+        Ok(StepReport {
+            latency: out.exec_time,
+            tokens: n_active,
+            ir_samples: irs,
+        })
+    }
+
+    fn retire(&mut self, req: &Request) {
+        for s in self.slots.iter_mut() {
+            if s.as_ref().is_some_and(|x| x.req_id == req.id) {
+                *s = None;
+            }
+        }
+        self.prompts.remove(&req.id);
+    }
+}
+
+/// The PJRT-backed serving engine (the old `RealCoordinator` API).
+impl ServingEngine<RealExecutor> {
+    pub fn new(engine: Engine, virtual_ep: usize, seed: u64) -> ServingEngine<RealExecutor> {
+        ServingEngine::from_executor(RealExecutor::new(engine, virtual_ep, seed))
+    }
+
+    /// Sample prompt tokens matching the build's domain distributions.
+    pub fn synth_prompt(&mut self, domain: u16, len: usize) -> Vec<i32> {
+        self.executor.synth_prompt(domain, len)
+    }
+
+    /// Submit a request with explicit prompt tokens.
+    pub fn submit_with_prompt(&mut self, req: Request, prompt: Vec<i32>) {
+        self.executor.set_prompt(req.id, prompt);
+        self.submit(req);
+    }
+
+    /// Mean per-layer predictor fidelity accumulated so far.
+    pub fn fidelity_report(&self) -> Vec<(usize, f64, f64)> {
+        self.executor.fidelity_report()
+    }
+}
+
+fn accum(into: &mut PredFidelity, f: &PredFidelity) {
+    // running mean weighted by token counts
+    let n0 = into.n_tokens as f64;
+    let n1 = f.n_tokens as f64;
+    if n0 + n1 == 0.0 {
+        return;
+    }
+    into.top_k_accuracy = (into.top_k_accuracy * n0 + f.top_k_accuracy * n1) / (n0 + n1);
+    into.top_half_k_hit_rate =
+        (into.top_half_k_hit_rate * n0 + f.top_half_k_hit_rate * n1) / (n0 + n1);
+    into.n_tokens += f.n_tokens;
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Routing layers joined across decode steps (used by Fig. 2 small-real
+/// traces and tests).
+pub fn ir_of_layers(layers: &[LayerRouting], ep: usize) -> Vec<f64> {
+    layers
+        .iter()
+        .map(|lr| {
+            let per = lr.n_experts.div_ceil(ep);
+            let counts = lr.expert_counts();
+            let loads: Vec<f64> = (0..ep)
+                .map(|r| counts[r * per..((r + 1) * per).min(counts.len())].iter().sum::<u32>() as f64)
+                .collect();
+            imbalance_ratio(&loads)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basics() {
+        assert_eq!(argmax(&[0.1, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[-1.0]), 0);
+    }
+
+    #[test]
+    fn accum_weighted_mean() {
+        let mut a = PredFidelity::default();
+        accum(
+            &mut a,
+            &PredFidelity {
+                top_k_accuracy: 1.0,
+                top_half_k_hit_rate: 1.0,
+                n_tokens: 10,
+            },
+        );
+        accum(
+            &mut a,
+            &PredFidelity {
+                top_k_accuracy: 0.0,
+                top_half_k_hit_rate: 0.5,
+                n_tokens: 10,
+            },
+        );
+        assert!((a.top_k_accuracy - 0.5).abs() < 1e-12);
+        assert!((a.top_half_k_hit_rate - 0.75).abs() < 1e-12);
+        assert_eq!(a.n_tokens, 20);
+    }
+}

@@ -32,7 +32,7 @@ fn run_variant_on(
     cfg.probe = cfg_probe.clone();
     let bal = Box::new(crate::balancers::Probe::new(&cfg, cfg_probe, seed));
     let mut c = Coordinator::new(cfg.clone(), bal, seed);
-    c.sim.split_phase = split_phase;
+    c.executor.sim.split_phase = split_phase;
     let mut spec = WorkloadSpec::new(Dataset::Repeat, 4);
     spec.mean_prompt_len = 8;
     spec.mean_new_tokens = steps * 2;

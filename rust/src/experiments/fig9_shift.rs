@@ -63,9 +63,9 @@ pub fn trace(kind: BalancerKind, p: &Fig9Params) -> Vec<f64> {
     for step in 0..p.steps {
         // hard semantic shift of the underlying affinities at shift_at
         if step == p.shift_at {
-            c.routing_model.drift = 1.0;
+            c.executor.routing_model.drift = 1.0;
         } else if step == p.shift_at + 1 {
-            c.routing_model.drift = 0.04;
+            c.executor.routing_model.drift = 0.04;
         }
         match c.decode_step() {
             Some(o) => {

@@ -2,9 +2,12 @@
 //! real-time predictive prefetching.
 //!
 //! Reproduction of the CS.DC 2026 paper. Three-layer architecture:
-//! - Layer 3 (this crate): rust serving coordinator — continuous batching,
-//!   expert-parallel cluster simulation, lookahead prediction, balance
-//!   planning (Algorithm 1), phase-locked co-scheduling.
+//! - Layer 3 (this crate): rust serving stack — a generic serving
+//!   engine ([`engine`]) instantiated over the expert-parallel cluster
+//!   simulator or the PJRT runtime, continuous batching, lookahead
+//!   prediction, balance planning (Algorithm 1), phase-locked
+//!   co-scheduling, and a multi-replica load-aware front-end
+//!   ([`server`]).
 //! - Layer 2: JAX MoE model (build-time python, `python/compile/model.py`),
 //!   AOT-lowered to HLO text artifacts loaded by [`runtime`].
 //! - Layer 1: Pallas grouped-GEMM expert kernel
@@ -15,6 +18,7 @@
 pub mod balancers;
 pub mod config;
 pub mod coordinator;
+pub mod engine;
 pub mod experiments;
 pub mod metrics;
 pub mod model;

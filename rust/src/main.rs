@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   serve     — serve the real small model via PJRT (needs `make artifacts`)
 //!   simulate  — run a paper-scale decode simulation and print metrics
+//!   fleet     — multi-replica serving sweep (replicas × dispatch policy)
 //!   prefill   — prefill latency measurement (Fig. 7 single point)
 //!   bench     — regenerate a paper figure: `probe bench fig8 [--steps N]`
 //!   ablate    — PROBE design-choice ablations (DESIGN.md list)
@@ -22,6 +23,7 @@ fn main() {
     let code = match cmd {
         "serve" => cmd_serve(&args),
         "simulate" => cmd_simulate(&args),
+        "fleet" => cmd_fleet(&args),
         "prefill" => cmd_prefill(&args),
         "bench" => cmd_bench(&args),
         "ablate" => cmd_ablate(&args),
@@ -44,8 +46,11 @@ fn print_help() {
            serve     --requests N --max-steps N --artifacts DIR\n\
            simulate  --balancer static|eplb|probe --dataset D --steps N\n\
                      --batch-per-rank N --model M [--config FILE]\n\
+           fleet     --replicas N --policy rr|jsq|affinity|all --dataset D\n\
+                     --requests-per-replica N [--shift-to D2] [--seed S]\n\
            prefill   --balancer B --tokens N --model M\n\
-           bench     fig2|fig3|fig5|fig7|fig8|fig9|fig10|fig11|all [--steps N]\n\
+           bench     fig2|fig3|fig5|fig7|fig8|fig9|fig10|fig11|fleet|all\n\
+                     [--steps N]\n\
            ablate    [--steps N]\n\
            info\n"
     );
@@ -112,7 +117,7 @@ fn cmd_serve(args: &Args) -> i32 {
             max_new_tokens: 16 + rng.next_usize(32),
             arrival: 0.0,
         };
-        coord.submit(req, prompt);
+        coord.submit_with_prompt(req, prompt);
     }
     let steps = match coord.run_to_completion(max_steps) {
         Ok(s) => s,
@@ -180,6 +185,55 @@ fn cmd_simulate(args: &Args) -> i32 {
     0
 }
 
+fn cmd_fleet(args: &Args) -> i32 {
+    use probe::experiments::fleet::{FleetParams, FleetWorkload};
+    use probe::server::dispatch::DispatchKind;
+
+    let mut p = FleetParams::default();
+    let replicas = args.get_usize("replicas", 0);
+    if replicas > 0 {
+        p.replicas = vec![replicas];
+    }
+    if let Some(pol) = args.get("policy") {
+        if pol != "all" {
+            match DispatchKind::by_name(pol) {
+                Some(k) => p.policies = vec![k],
+                None => {
+                    eprintln!("unknown policy {pol} (rr|jsq|affinity|all)");
+                    return 2;
+                }
+            }
+        }
+    }
+    let shift_to = match args.get("shift-to") {
+        Some(s) => match Dataset::by_name(s) {
+            Some(to) => Some(to),
+            None => {
+                eprintln!("unknown dataset {s}");
+                return 2;
+            }
+        },
+        None => None,
+    };
+    if let Some(d) = args.get("dataset") {
+        let Some(dataset) = Dataset::by_name(d) else {
+            eprintln!("unknown dataset {d}");
+            return 2;
+        };
+        p.workloads = vec![FleetWorkload { dataset, shift_to }];
+    } else if shift_to.is_some() {
+        eprintln!("--shift-to requires --dataset (the stream it shifts from)");
+        return 2;
+    }
+    p.requests_per_replica = args.get_usize("requests-per-replica", p.requests_per_replica);
+    p.batch_per_rank = args.get_usize("batch-per-rank", p.batch_per_rank);
+    p.seed = args.get_u64("seed", p.seed);
+    let b = probe::experiments::fleet::run(&p);
+    b.print();
+    let _ = b.save();
+    0
+}
+
 fn cmd_prefill(args: &Args) -> i32 {
     let cfg = load_config(args);
     let tokens = args.get_usize("tokens", 65536);
@@ -216,6 +270,11 @@ fn cmd_bench(args: &Args) -> i32 {
             }
             "fig10" => exp::fig10_fidelity::run(&Default::default()),
             "fig11" => exp::fig11_timeline::run(&Default::default()),
+            "fleet" => {
+                let mut p = exp::fleet::FleetParams::default();
+                p.seed = args.get_u64("seed", p.seed);
+                exp::fleet::run(&p)
+            }
             other => {
                 eprintln!("unknown figure {other}");
                 return false;
@@ -226,7 +285,7 @@ fn cmd_bench(args: &Args) -> i32 {
         true
     };
     if which == "all" {
-        for f in ["fig2", "fig3", "fig5", "fig7", "fig8", "fig9", "fig10", "fig11"] {
+        for f in ["fig2", "fig3", "fig5", "fig7", "fig8", "fig9", "fig10", "fig11", "fleet"] {
             run_one(f);
         }
         0

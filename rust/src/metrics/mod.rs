@@ -139,7 +139,11 @@ impl IrTracker {
     }
 
     pub fn push_loads(&mut self, loads: &[f64]) {
-        let ir = imbalance_ratio(loads);
+        self.push_ir(imbalance_ratio(loads));
+    }
+
+    /// Record an already-computed imbalance ratio sample.
+    pub fn push_ir(&mut self, ir: f64) {
         self.per_step.push(ir);
         self.online.push(ir);
     }
@@ -209,6 +213,22 @@ impl ServingMetrics {
                 .filter_map(|r| r.tpot())
                 .collect::<Vec<_>>(),
         )
+    }
+
+    /// Merge replica-level metrics into one cross-replica view: request
+    /// records are pooled and step samples interleaved by time, so
+    /// latency percentiles and [`ServingMetrics::throughput`] reflect
+    /// the whole fleet (each replica runs its own serving clock from 0;
+    /// the union span approximates the fleet's busy window).
+    pub fn merge<'a, I: IntoIterator<Item = &'a ServingMetrics>>(parts: I) -> ServingMetrics {
+        let mut out = ServingMetrics::default();
+        for m in parts {
+            out.requests.extend(m.requests.iter().cloned());
+            out.step_tokens.extend(m.step_tokens.iter().copied());
+        }
+        out.step_tokens
+            .sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
+        out
     }
 
     /// Aggregate decode throughput (tokens/s) over the recorded steps.
@@ -297,6 +317,27 @@ mod tests {
         };
         assert!((r.ttft().unwrap() - 0.5).abs() < 1e-12);
         assert!((r.tpot().unwrap() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_pools_requests_and_sorts_steps() {
+        let a = ServingMetrics {
+            requests: vec![RequestMetrics {
+                id: 0,
+                ..Default::default()
+            }],
+            step_tokens: vec![(0.0, 1), (2.0, 3)],
+        };
+        let b = ServingMetrics {
+            requests: vec![RequestMetrics {
+                id: 1,
+                ..Default::default()
+            }],
+            step_tokens: vec![(1.0, 2)],
+        };
+        let m = ServingMetrics::merge([&a, &b]);
+        assert_eq!(m.requests.len(), 2);
+        assert_eq!(m.step_tokens, vec![(0.0, 1), (1.0, 2), (2.0, 3)]);
     }
 
     #[test]

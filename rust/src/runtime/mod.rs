@@ -14,6 +14,15 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::util::Json;
 
+// The PJRT binding is unavailable in the offline/CI crate set: the
+// default build uses an API-compatible stub whose client constructor
+// errors (Engine::load then fails with a clear message). `--features
+// pjrt` expects a real external `xla` crate instead.
+#[cfg(not(feature = "pjrt"))]
+mod pjrt_stub;
+#[cfg(not(feature = "pjrt"))]
+use pjrt_stub as xla;
+
 /// Shape/config of the small real model (from `artifacts/metadata.json`).
 #[derive(Debug, Clone)]
 pub struct SmallModelCfg {

@@ -1,0 +1,208 @@
+//! Dispatch policies for the multi-replica front-end: which engine
+//! replica serves an incoming request.
+//!
+//! * [`DispatchKind::RoundRobin`] — cyclic, load-blind (baseline).
+//! * [`DispatchKind::ShortestQueue`] — join-shortest-queue on the
+//!   outstanding-work estimate (prefill + decode tokens in flight).
+//! * [`DispatchKind::DomainAffinity`] — requests of the same semantic
+//!   domain share a home replica so expert locality concentrates
+//!   (narrower per-replica mixtures are exactly what PROBE's lookahead
+//!   exploits), with consistent-hashing-style *bounded load*: when the
+//!   home replica exceeds `SPILL_FACTOR ×` the fleet-mean outstanding
+//!   work, the request spills to the least-loaded replica.
+
+use crate::workload::Request;
+
+/// Pluggable dispatch policy selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchKind {
+    RoundRobin,
+    ShortestQueue,
+    DomainAffinity,
+}
+
+impl DispatchKind {
+    pub const ALL: [DispatchKind; 3] = [
+        DispatchKind::RoundRobin,
+        DispatchKind::ShortestQueue,
+        DispatchKind::DomainAffinity,
+    ];
+
+    pub fn by_name(s: &str) -> Option<DispatchKind> {
+        match s {
+            "rr" | "round-robin" => Some(DispatchKind::RoundRobin),
+            "jsq" | "shortest-queue" => Some(DispatchKind::ShortestQueue),
+            "affinity" | "domain-affinity" => Some(DispatchKind::DomainAffinity),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DispatchKind::RoundRobin => "round-robin",
+            DispatchKind::ShortestQueue => "shortest-queue",
+            DispatchKind::DomainAffinity => "domain-affinity",
+        }
+    }
+}
+
+/// Bounded-load factor for domain affinity (home replica may carry up
+/// to this multiple of the fleet-mean outstanding work before spilling).
+const SPILL_FACTOR: f64 = 1.25;
+
+/// Stateful dispatcher over `replicas` engines. Tracks an
+/// outstanding-work estimate per replica; callers report completions
+/// with [`Dispatcher::complete`] (live serving) or dispatch a whole
+/// timed trace up front (offline sharding), where the estimate
+/// degenerates to greedy least-work balancing — the offline analogue of
+/// join-shortest-queue.
+#[derive(Debug, Clone)]
+pub struct Dispatcher {
+    kind: DispatchKind,
+    next_rr: usize,
+    outstanding: Vec<f64>,
+}
+
+impl Dispatcher {
+    pub fn new(kind: DispatchKind, replicas: usize) -> Dispatcher {
+        assert!(replicas > 0);
+        Dispatcher {
+            kind,
+            next_rr: 0,
+            outstanding: vec![0.0; replicas],
+        }
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.outstanding.len()
+    }
+
+    pub fn kind(&self) -> DispatchKind {
+        self.kind
+    }
+
+    /// Outstanding-work estimates (tokens) per replica.
+    pub fn outstanding(&self) -> &[f64] {
+        &self.outstanding
+    }
+
+    fn least_loaded(&self) -> usize {
+        let mut best = 0;
+        for r in 1..self.outstanding.len() {
+            if self.outstanding[r] < self.outstanding[best] {
+                best = r;
+            }
+        }
+        best
+    }
+
+    /// Pick the replica for `req` and account its work.
+    pub fn dispatch(&mut self, req: &Request) -> usize {
+        let n = self.outstanding.len();
+        let w = req.work_estimate();
+        let r = match self.kind {
+            DispatchKind::RoundRobin => {
+                let r = self.next_rr % n;
+                self.next_rr += 1;
+                r
+            }
+            DispatchKind::ShortestQueue => self.least_loaded(),
+            DispatchKind::DomainAffinity => {
+                let home = req.domain as usize % n;
+                let total: f64 = self.outstanding.iter().sum();
+                // bounded load with one-request slack (the ceil() in
+                // consistent hashing with bounded loads): keep the home
+                // while its backlog stays within SPILL_FACTOR x the
+                // post-dispatch fleet mean
+                if self.outstanding[home] <= SPILL_FACTOR * (total + w) / n as f64 {
+                    home
+                } else {
+                    self.least_loaded()
+                }
+            }
+        };
+        self.outstanding[r] += w;
+        r
+    }
+
+    /// Report a completion so live queue estimates deflate.
+    pub fn complete(&mut self, replica: usize, req: &Request) {
+        let o = &mut self.outstanding[replica];
+        *o = (*o - req.work_estimate()).max(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Dataset;
+
+    fn req(id: u64, domain: u16, work: usize) -> Request {
+        Request {
+            id,
+            domain,
+            dataset: Dataset::Mixed,
+            prompt_len: work / 2,
+            max_new_tokens: work - work / 2,
+            arrival: 0.0,
+        }
+    }
+
+    #[test]
+    fn kind_names_roundtrip() {
+        for k in DispatchKind::ALL {
+            assert_eq!(DispatchKind::by_name(k.name()), Some(k));
+        }
+        assert_eq!(DispatchKind::by_name("rr"), Some(DispatchKind::RoundRobin));
+        assert_eq!(DispatchKind::by_name("jsq"), Some(DispatchKind::ShortestQueue));
+        assert!(DispatchKind::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut d = Dispatcher::new(DispatchKind::RoundRobin, 3);
+        let picks: Vec<usize> = (0..6).map(|i| d.dispatch(&req(i, 0, 10))).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn shortest_queue_balances_skewed_work() {
+        let mut d = Dispatcher::new(DispatchKind::ShortestQueue, 2);
+        assert_eq!(d.dispatch(&req(0, 0, 100)), 0);
+        // the big request loads replica 0; small ones flow to replica 1
+        assert_eq!(d.dispatch(&req(1, 0, 10)), 1);
+        assert_eq!(d.dispatch(&req(2, 0, 10)), 1);
+        assert_eq!(d.dispatch(&req(3, 0, 10)), 1);
+        assert!(d.outstanding()[0] >= d.outstanding()[1]);
+    }
+
+    #[test]
+    fn completion_deflates_queue() {
+        let mut d = Dispatcher::new(DispatchKind::ShortestQueue, 2);
+        let r0 = req(0, 0, 50);
+        assert_eq!(d.dispatch(&r0), 0);
+        d.complete(0, &r0);
+        assert_eq!(d.outstanding()[0], 0.0);
+    }
+
+    #[test]
+    fn affinity_keeps_domains_home() {
+        let mut d = Dispatcher::new(DispatchKind::DomainAffinity, 4);
+        // balanced mixed-domain traffic stays on its home replica
+        for i in 0..16u64 {
+            let domain = (i % 4) as u16;
+            assert_eq!(d.dispatch(&req(i, domain, 10)), domain as usize);
+        }
+    }
+
+    #[test]
+    fn affinity_spills_under_single_domain_flood() {
+        let mut d = Dispatcher::new(DispatchKind::DomainAffinity, 4);
+        let mut used = [false; 4];
+        for i in 0..32u64 {
+            used[d.dispatch(&req(i, 3, 10))] = true;
+        }
+        // bounded load must have pushed traffic off the single home
+        assert!(used.iter().filter(|&&u| u).count() >= 3, "{used:?}");
+    }
+}

@@ -79,6 +79,14 @@ pub struct Request {
     pub arrival: f64,
 }
 
+impl Request {
+    /// Crude per-request work estimate (prefill + decode tokens), used
+    /// by load-aware dispatch to compare replica queues.
+    pub fn work_estimate(&self) -> f64 {
+        (self.prompt_len + self.max_new_tokens) as f64
+    }
+}
+
 /// Arrival + length distributions for a request stream.
 #[derive(Debug, Clone)]
 pub struct WorkloadSpec {

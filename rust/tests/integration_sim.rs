@@ -86,7 +86,7 @@ fn eplb_rebalancing_beats_never_rebalancing() {
         cfg.eplb.warmup_steps = warmup;
         let bal = make_balancer(BalancerKind::Eplb, &cfg, 13);
         let mut c = Coordinator::new(cfg.clone(), bal, 13);
-        c.routing_model.drift = 0.0; // stationary: history stays valid
+        c.executor.routing_model.drift = 0.0; // stationary: history stays valid
         let mut spec = WorkloadSpec::new(Dataset::Chinese, 4);
         spec.mean_prompt_len = 8;
         spec.mean_new_tokens = 200;

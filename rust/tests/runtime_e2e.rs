@@ -108,7 +108,7 @@ fn prefill_then_decode_serves_a_request() {
     let Some(engine) = engine() else { return };
     let mut c = RealCoordinator::new(engine, 8, 3);
     let prompt = c.synth_prompt(1, 12);
-    c.submit(
+    c.submit_with_prompt(
         Request {
             id: 0,
             domain: 1,
@@ -135,7 +135,7 @@ fn continuous_batching_mixes_requests() {
     for i in 0..10u64 {
         let domain = (i % 4) as u16;
         let prompt = c.synth_prompt(domain, 8 + (i as usize % 12));
-        c.submit(
+        c.submit_with_prompt(
             Request {
                 id: i,
                 domain,

@@ -32,7 +32,7 @@ fn main() {
             let mut pc = ProbeConfig::default();
             pc.max_redundant = budget;
             let mut bal = Probe::new(&cfg, pc, 7);
-            let sim = ClusterSim::new(cfg.model.clone(), cfg.cluster.clone());
+            let mut sim = ClusterSim::new(cfg.model.clone(), cfg.cluster.clone());
             let mut rm = RoutingModel::calibrated(6, 128, 4, 4, 13);
             let mut lats = Vec::new();
             let mut irs = Vec::new();

@@ -15,10 +15,10 @@ fn main() {
     let mut cfg = Config::default();
     cfg.model.n_layers = 6; // representative layers (DESIGN.md)
     cfg.batch_per_rank = 768;
-    let sim = ClusterSim::new(cfg.model.clone(), cfg.cluster.clone());
 
     let mut results = Vec::new();
     for kind in [BalancerKind::StaticEp, BalancerKind::Eplb, BalancerKind::Probe] {
+        let mut sim = ClusterSim::new(cfg.model.clone(), cfg.cluster.clone());
         let mut bal = make_balancer(kind, &cfg, 42);
         // single-domain traffic = the paper's semantic-burst regime
         let mut rm = RoutingModel::calibrated(6, 128, 4, 4, 42);

@@ -88,7 +88,7 @@ fn main() {
         let mut cfg_full = probe::config::Config::default();
         cfg_full.model.n_layers = 6;
         let mut bal = Probe::new(&cfg_full, ProbeConfig::default(), 7);
-        let sim = ClusterSim::new(cfg_full.model.clone(), cfg_full.cluster.clone());
+        let mut sim = ClusterSim::new(cfg_full.model.clone(), cfg_full.cluster.clone());
         let mut rm3 = RoutingModel::calibrated(6, 128, 4, 4, 9);
         let s = time_it(2, 10, || {
             let routing = rm3.route_step(&vec![0u16; tokens]);

@@ -7,6 +7,13 @@
 //! are *reactive*: their cost is charged on the critical path, amortized
 //! over `transfer_steps` (paper §6.1: bounded to 2 decode steps).
 //!
+//! Information budget (observe-then-emit): placements derive from
+//! `observe`d history of PREVIOUS steps only — rebalancing happens in
+//! `begin_step`, before any of the current step's routing exists. The
+//! `actual` routing passed to `decide` is used solely for dispatch-time
+//! token assignment over that already-resident placement (legal: the
+//! router output is known when tokens dispatch).
+//!
 //! The failure mode the paper highlights (Fig. 9): after a semantic
 //! shift, the placement derived from stale history mismatches the new
 //! hotspots until enough new statistics accumulate.
@@ -132,7 +139,8 @@ impl Balancer for Eplb {
         "eplb"
     }
 
-    fn begin_step(&mut self, step_idx: usize) {
+    fn begin_step(&mut self, step_idx: usize, n_layers: usize) {
+        self.ensure_layers(n_layers);
         self.step_idx = step_idx;
         if self.should_rebalance() && self.n_layers_hint > 0 {
             let mut max_fetch = 0usize;
@@ -167,11 +175,7 @@ impl Balancer for Eplb {
         let placement = self.placements[layer]
             .clone()
             .unwrap_or_else(|| Placement::sharded(self.ep, self.model.n_experts, 0));
-        let counts: Vec<Vec<f64>> = actual
-            .expert_counts_by_source(self.ep)
-            .into_iter()
-            .map(|v| v.into_iter().map(|c| c as f64).collect())
-            .collect();
+        let counts = actual.expert_counts_by_source_f64(self.ep);
         let assignment = if placement.total_replicas() > 0 {
             rebalance_existing(&counts, &placement, &self.model, &self.hw, 32)
         } else {
@@ -188,6 +192,7 @@ impl Balancer for Eplb {
             placement,
             assignment,
             prefetch_slots: vec![0; self.ep],
+            prefetch_lookahead: 0,
             predict_time: 0.0,
             plan_time: 0.0,
             exposed_transfer: exposed,

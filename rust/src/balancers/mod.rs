@@ -3,8 +3,31 @@
 //! * [`StaticEp`] — SGLang-style static sharded EP (no replication).
 //! * [`Eplb`] — DeepSeek-EPLB: historical-statistics one-shot
 //!   rebalancing with reactive (exposed) transfers.
-//! * [`Probe`] — continuous lookahead pipelining: predict → plan →
-//!   prefetch per layer, all hidden behind the main stream.
+//! * [`Probe`] — continuous lookahead pipelining: predict → delta-plan →
+//!   queued prefetch, emitted `lookahead_depth` layers ahead.
+//!
+//! ## Observe-then-emit and what each policy legally sees
+//!
+//! The control plane runs as an explicit pipeline: as layer `l`
+//! executes, the driver calls [`Balancer::observe`] with `l`'s
+//! ground-truth routing (the router output exists once the layer
+//! starts), then [`Balancer::decide`] to pop the decision that executes
+//! `l` — a decision whose *placement* was fixed `lookahead_depth` layers
+//! earlier. Information budget per policy:
+//!
+//! * **static** — nothing: fixed sharding, dispatch follows the router.
+//! * **eplb** — *history only*: placements derive from the decayed
+//!   activation statistics of PREVIOUS steps (rebalance at step
+//!   boundaries); the current layer's truth is used solely for
+//!   dispatch-time token assignment over that fixed placement, exactly
+//!   as the real system re-routes over what is already in HBM.
+//! * **probe** — layers `≤ l − lookahead_depth` plus the lookahead
+//!   predictor's forecast; the layer's own truth again only rescales the
+//!   dispatch over the already-fetched placement. The accuracy-
+//!   parameterized [`crate::predictor::StatisticalPredictor`] receives
+//!   its stand-in target truth through the harness-only
+//!   [`Balancer::feed_target_truth`] channel (DESIGN.md substitutions);
+//!   the causal [`crate::predictor::TransitionPredictor`] ignores it.
 
 mod eplb;
 mod probe;
@@ -17,38 +40,63 @@ pub use static_ep::StaticEp;
 use crate::routing::LayerRouting;
 use crate::simulator::LayerDecision;
 
-/// A balancing policy: consumes each layer's ground-truth routing as the
-/// step executes and produces the placement/assignment decisions the
-/// simulator runs. Implementations must only use *past* information plus
-/// (for PROBE) the lookahead predictor's noisy view of the current layer.
+/// A balancing policy driven in observe-then-emit order (see module
+/// docs). `decide(l)` may not consult the ground-truth routing of any
+/// layer `> l - lookahead()` for *placement* decisions; the `actual`
+/// argument exists because dispatch-time token assignment over the
+/// already-resident placement legally sees the router output.
 pub trait Balancer {
     fn name(&self) -> &'static str;
 
+    /// Control-pipeline depth L: placements for layer `l` are emitted
+    /// while layer `l - L` executes. 0 for reactive/static baselines.
+    fn lookahead(&self) -> usize {
+        0
+    }
+
     /// Called once per step before any layer.
-    fn begin_step(&mut self, step_idx: usize);
+    fn begin_step(&mut self, step_idx: usize, n_layers: usize);
 
-    /// Decide layer `layer` of the current step.
+    /// Harness-only channel (simulation): ground truth of the FUTURE
+    /// layer `target_layer` of the current step, for accuracy-
+    /// parameterized predictors that model error as a perturbation of
+    /// the truth. History-based policies and causal predictors MUST
+    /// ignore it.
+    fn feed_target_truth(&mut self, _target_layer: usize, _truth: &LayerRouting) {}
+
+    /// Control-plane tick: layer `layer`'s ground truth becomes
+    /// available as the layer executes. History updates and the plan for
+    /// layer `layer + lookahead()` happen here.
+    fn observe(&mut self, layer: usize, actual: &LayerRouting);
+
+    /// Data-plane: emit the decision executing `layer` NOW. The
+    /// placement was fixed `lookahead()` layers ago (or falls back to
+    /// static sharding during the bootstrap prefix); `actual` only
+    /// drives the dispatch assignment over that placement.
     fn decide(&mut self, layer: usize, actual: &LayerRouting) -> LayerDecision;
-
-    /// Observe the realized outcome (for history-based policies).
-    fn observe(&mut self, _layer: usize, _actual: &LayerRouting) {}
 }
 
-/// Convenience: run a balancer over a whole step's routing.
+/// Drive a balancer over a whole step's routing in pipeline order:
+/// for each layer, feed the (harness-only) stand-in truth of the
+/// lookahead target, observe the executing layer, then pop its decision.
 pub fn decide_step(
     balancer: &mut dyn Balancer,
     step_idx: usize,
     routing: &crate::routing::StepRouting,
 ) -> Vec<LayerDecision> {
-    balancer.begin_step(step_idx);
-    routing
-        .layers
-        .iter()
-        .enumerate()
-        .map(|(l, lr)| {
-            let d = balancer.decide(l, lr);
-            balancer.observe(l, lr);
-            d
+    let n_layers = routing.layers.len();
+    balancer.begin_step(step_idx, n_layers);
+    let depth = balancer.lookahead();
+    (0..n_layers)
+        .map(|l| {
+            if depth > 0 && l + depth < n_layers {
+                // same-step lookahead target: exact truth available to
+                // the error-process predictor. Cross-step targets use
+                // the previous step's observation of that layer index.
+                balancer.feed_target_truth(l + depth, &routing.layers[l + depth]);
+            }
+            balancer.observe(l, &routing.layers[l]);
+            balancer.decide(l, &routing.layers[l])
         })
         .collect()
 }
@@ -62,7 +110,7 @@ mod tests {
 
     fn run_one(balancer: &mut dyn Balancer, seed: u64) -> f64 {
         let cfg = Config::default();
-        let sim = ClusterSim::new(cfg.model.clone(), cfg.cluster.clone());
+        let mut sim = ClusterSim::new(cfg.model.clone(), cfg.cluster.clone());
         let mut rm = RoutingModel::calibrated(
             6,
             cfg.model.n_experts,
@@ -91,10 +139,7 @@ mod tests {
         let tp = run_one(&mut p, 3);
         assert!(ts > 0.0 && te > 0.0 && tp > 0.0);
         // PROBE must beat static EP on skewed single-domain traffic
-        assert!(
-            tp < ts,
-            "probe {tp} not faster than static {ts}"
-        );
+        assert!(tp < ts, "probe {tp} not faster than static {ts}");
     }
 
     #[test]
@@ -103,5 +148,15 @@ mod tests {
         assert_eq!(StaticEp::new(&cfg).name(), "static-ep");
         assert_eq!(Eplb::new(&cfg, EplbConfig::default()).name(), "eplb");
         assert_eq!(Probe::new(&cfg, ProbeConfig::default(), 0).name(), "probe");
+    }
+
+    #[test]
+    fn baselines_have_no_lookahead() {
+        let cfg = Config::default();
+        assert_eq!(StaticEp::new(&cfg).lookahead(), 0);
+        assert_eq!(Eplb::new(&cfg, EplbConfig::default()).lookahead(), 0);
+        let mut pc = ProbeConfig::default();
+        pc.lookahead_depth = 3;
+        assert_eq!(Probe::new(&cfg, pc, 0).lookahead(), 3);
     }
 }

@@ -1,46 +1,99 @@
-//! PROBE: Continuous Lookahead Pipelining (paper §4).
+//! PROBE: Continuous Lookahead Pipelining (paper §4), as a true depth-L
+//! control pipeline (ISSUE 2).
 //!
-//! Per layer: (1) the lookahead predictor forecasts the layer's expert
-//! activation one layer ahead; (2) the hardware-aware planner (Algorithm
-//! 1) chooses dynamic replicas + token assignment bounded by the hiding
-//! window; (3) prefetches transmit via split-phase scheduling. All
-//! control costs land on the aux track; replicas are cyclically reused
-//! (cleared and re-planned every layer of every step).
+//! While layer `l` executes: (1) the lookahead predictor forecasts layer
+//! `l+L`'s expert activation from layer `l`'s *observed* routing; (2)
+//! the hardware-aware planner (Algorithm 1) chooses a replica **delta**
+//! against the placement already resident for that layer — still-hot
+//! replicas are reused at zero cost, only the diff is fetched — bounded
+//! by the hiding-window budget; (3) the fetch is enqueued and transmits
+//! split-phase across the L intervening windows (the simulator's
+//! [`crate::scheduler::PrefetchQueue`]). The decision for layer `l` that
+//! executes now was planned L layers ago; the first L layers of a run
+//! fall back to static sharding (the pipeline fill — PROBE's only
+//! "warm-up").
 //!
 //! Dispatch follows the *ground-truth* router at execution time: the
 //! prediction only decided which experts to replicate. The final token
 //! assignment is re-derived from actual routing over the planned
 //! placement (water-filling over existing replicas, no new transfers).
 
-use crate::config::{Config, ProbeConfig};
+use std::collections::VecDeque;
+
+use crate::config::{Config, PredictorKind, ProbeConfig};
 use crate::model::MoeModel;
+use crate::perfmodel::Assignment;
 use crate::placement::Placement;
 use crate::planner;
-use crate::predictor::StatisticalPredictor;
+use crate::predictor::{LookaheadPredictor, StatisticalPredictor, TransitionPredictor};
 use crate::routing::LayerRouting;
 use crate::scheduler;
 use crate::simulator::LayerDecision;
 use crate::topology::HardwareProfile;
 
+/// A decision emitted by the control plane, waiting for its layer.
 #[derive(Debug, Clone)]
+struct PlannedLayer {
+    /// Absolute layer index (monotone across steps) this plan targets.
+    abs_layer: u64,
+    placement: Placement,
+    /// Assignment over the PREDICTED counts (rescaled to truth at
+    /// execution).
+    assignment: Assignment,
+    /// NEW fetches per rank (the delta; retained replicas are free).
+    fetches: Vec<Vec<usize>>,
+    iterations: usize,
+    /// Hiding-window estimate the plan was budgeted against (recorded
+    /// for the depth-1 oracle equivalence property test).
+    #[allow(dead_code)]
+    windows: Vec<f64>,
+    /// Forecast the plan was derived from (test introspection).
+    #[allow(dead_code)]
+    pred_counts: Vec<Vec<f64>>,
+}
+
+#[derive(Debug)]
 pub struct Probe {
     model: MoeModel,
     hw: HardwareProfile,
     ep: usize,
     pub cfg: ProbeConfig,
-    predictor: StatisticalPredictor,
+    predictor: Box<dyn LookaheadPredictor>,
     /// EMA of per-rank MoE compute time — the hiding-window estimate.
     window_ema: Vec<f64>,
     /// EMA of attention time (window tail).
     attn_ema: f64,
-    /// Planner iterations of the last decision (observability).
+    /// Effective KV rows per query token used for the attention-window
+    /// estimate — plumbed from the config so it matches what the
+    /// simulator charges (was hardcoded to 64).
+    mean_ctx: usize,
+    /// Planner iterations of the last plan (observability).
     pub last_iterations: usize,
-    tokens_per_rank_hint: usize,
+    /// Token scale (tokens/rank) the window EMA was anchored at; a >2x
+    /// change (prefill chunk vs decode batch) triggers a re-bootstrap.
+    ema_tokens_per_rank: usize,
+    /// Layers per step (set by `begin_step`; pipeline resets on change).
+    n_layers: usize,
+    /// Absolute index of the next layer to decide.
+    abs_next: u64,
+    /// Decisions emitted by the control plane, FIFO by `abs_layer`.
+    planned: VecDeque<PlannedLayer>,
+    /// Per layer index: the placement currently resident in HBM (what
+    /// the last plan for that layer fetched) — the delta-plan base.
+    resident: Vec<Placement>,
 }
 
 impl Probe {
     pub fn new(config: &Config, cfg: ProbeConfig, seed: u64) -> Probe {
-        let predictor = StatisticalPredictor::new(cfg.predictor_accuracy, seed ^ 0x9E37);
+        let predictor: Box<dyn LookaheadPredictor> = match cfg.predictor_kind {
+            PredictorKind::Statistical => {
+                Box::new(StatisticalPredictor::new(cfg.predictor_accuracy, seed ^ 0x9E37))
+            }
+            PredictorKind::Transition => Box::new(TransitionPredictor::new(
+                config.model.n_layers,
+                config.model.n_experts,
+            )),
+        };
         Probe {
             model: config.model.clone(),
             hw: config.cluster.profile.clone(),
@@ -49,13 +102,22 @@ impl Probe {
             predictor,
             window_ema: vec![0.0; config.cluster.ep],
             attn_ema: 0.0,
+            mean_ctx: config.mean_ctx,
             last_iterations: 0,
-            tokens_per_rank_hint: config.batch_per_rank,
+            ema_tokens_per_rank: 0,
+            n_layers: 0,
+            abs_next: 0,
+            planned: VecDeque::new(),
+            resident: Vec::new(),
         }
     }
 
     /// Hiding window per rank: overlappable compute of the concurrent
-    /// pipeline = this layer's MoE compute + the next attention (§3.4).
+    /// pipeline = one layer's MoE compute + one attention (§3.4). A
+    /// depth-L plan gets L of these windows to drain, but the per-plan
+    /// fetch budget stays one window — deeper lookahead buys slack, not
+    /// extra committed bandwidth (the windows are shared by the L plans
+    /// in flight).
     fn windows(&self) -> Vec<f64> {
         self.window_ema
             .iter()
@@ -63,71 +125,151 @@ impl Probe {
             .collect()
     }
 
-    fn bootstrap_windows(&mut self, actual: &LayerRouting) {
-        // First decision of a run: estimate from the average load under
-        // static sharding (conservative — skew only widens the max).
-        if self.window_ema.iter().all(|&w| w == 0.0) {
-            let counts = actual.expert_counts();
-            let placement = Placement::sharded(self.ep, self.model.n_experts, 0);
-            let mut per_rank = vec![0.0; self.ep];
-            for (e, &c) in counts.iter().enumerate() {
-                per_rank[placement.home_rank(e)] +=
-                    crate::perfmodel::expert_compute_time(c as f64, &self.model, &self.hw);
-            }
-            let avg = per_rank.iter().sum::<f64>() / self.ep as f64;
-            self.window_ema = vec![avg; self.ep];
-            self.tokens_per_rank_hint = actual.n_tokens.div_ceil(self.ep);
-            self.attn_ema = scheduler::attention_time(
-                self.tokens_per_rank_hint,
-                64,
-                &self.model,
-                &self.hw,
-            );
+    /// (Re-)anchor the hiding-window estimate whenever the batch scale
+    /// changes materially. The estimate is an EMA in absolute seconds,
+    /// so a window learned from 8k-token prefill chunks would wildly
+    /// over-budget a 768-token decode step (and vice versa); on a >2x
+    /// token-scale change we re-bootstrap from the average load under
+    /// static sharding at the NEW scale (conservative — skew only
+    /// widens the max).
+    fn refresh_windows(&mut self, actual: &LayerRouting) {
+        let tpr = actual.n_tokens.div_ceil(self.ep).max(1);
+        let anchored = self.ema_tokens_per_rank > 0
+            && tpr <= self.ema_tokens_per_rank * 2
+            && tpr * 2 >= self.ema_tokens_per_rank;
+        if anchored {
+            return;
         }
+        let counts = actual.expert_counts();
+        let placement = Placement::sharded(self.ep, self.model.n_experts, 0);
+        let mut per_rank = vec![0.0; self.ep];
+        for (e, &c) in counts.iter().enumerate() {
+            per_rank[placement.home_rank(e)] +=
+                crate::perfmodel::expert_compute_time(c as f64, &self.model, &self.hw);
+        }
+        let avg = per_rank.iter().sum::<f64>() / self.ep as f64;
+        self.window_ema = vec![avg; self.ep];
+        self.ema_tokens_per_rank = tpr;
+        self.attn_ema =
+            scheduler::attention_time(tpr, self.mean_ctx, &self.model, &self.hw);
+    }
+
+    fn depth(&self) -> usize {
+        self.cfg.lookahead_depth.max(1)
     }
 }
 
-impl Balancer for Probe {
+impl super::Balancer for Probe {
     fn name(&self) -> &'static str {
         "probe"
     }
 
-    fn begin_step(&mut self, _step_idx: usize) {}
+    fn lookahead(&self) -> usize {
+        self.depth()
+    }
 
-    fn decide(&mut self, _layer: usize, actual: &LayerRouting) -> LayerDecision {
-        self.bootstrap_windows(actual);
+    fn begin_step(&mut self, _step_idx: usize, n_layers: usize) {
+        if self.n_layers != n_layers {
+            // layer-count change: flush the pipeline and resident state,
+            // and re-anchor the absolute-layer counter so target layers
+            // stay congruent to abs_next modulo the new layer count
+            self.n_layers = n_layers;
+            self.abs_next = 0;
+            self.planned.clear();
+            self.resident = (0..n_layers)
+                .map(|_| Placement::sharded(self.ep, self.model.n_experts, self.cfg.max_redundant))
+                .collect();
+            if self.cfg.predictor_kind == PredictorKind::Transition {
+                // the transition model's wrap (last layer → layer 0)
+                // must match the step's actual layer count
+                self.predictor = Box::new(TransitionPredictor::new(
+                    n_layers,
+                    self.model.n_experts,
+                ));
+            }
+        }
+    }
 
-        // (1) Predict: lookahead view of this layer's routing.
-        let (_predicted, pred_counts) = self.predictor.predict_counts(actual, self.ep);
+    fn feed_target_truth(&mut self, target_layer: usize, truth: &LayerRouting) {
+        self.predictor.feed_target_truth(target_layer, truth);
+    }
 
-        // (2) Plan: Algorithm 1 under the hiding-window budget.
-        let base = Placement::sharded(self.ep, self.model.n_experts, self.cfg.max_redundant);
+    /// Control plane: forecast layer `l + L` from layer `l`'s observed
+    /// routing and emit its delta plan.
+    fn observe(&mut self, layer: usize, actual: &LayerRouting) {
+        self.refresh_windows(actual);
+        self.predictor.observe(layer, actual);
+        if self.n_layers == 0 {
+            return;
+        }
+        let depth = self.depth();
+        let target_abs = self.abs_next + depth as u64;
+        let target_layer = (target_abs % self.n_layers as u64) as usize;
+        let Some(pred_counts) =
+            self.predictor
+                .forecast_counts(layer, actual, target_layer, depth, self.ep)
+        else {
+            return; // no basis yet: the target layer will bootstrap
+        };
         let windows = self.windows();
         let out = planner::plan(
             &pred_counts,
-            &base,
+            &self.resident[target_layer],
             &self.model,
             &self.hw,
             &windows,
             &self.cfg,
         );
         self.last_iterations = out.iterations;
+        self.resident[target_layer] = out.placement.clone();
+        self.planned.push_back(PlannedLayer {
+            abs_layer: target_abs,
+            placement: out.placement,
+            assignment: out.assignment,
+            fetches: out.fetches,
+            iterations: out.iterations,
+            windows,
+            pred_counts,
+        });
+    }
 
-        // (3) Execute: ground-truth dispatch over the planned placement.
-        // The planned flow split is rescaled to the actual router counts
-        // (prediction error only shifts volumes), then briefly polished.
-        let actual_counts: Vec<Vec<f64>> = actual
-            .expert_counts_by_source(self.ep)
-            .into_iter()
-            .map(|v| v.into_iter().map(|c| c as f64).collect())
-            .collect();
-        let assignment = if out.placement.total_replicas() > 0 {
-            let rescaled = out
-                .assignment
-                .rescale_to_counts(&actual_counts, &out.placement);
-            planner::polish_assignment(rescaled, &out.placement, &self.model, &self.hw, 8)
+    /// Data plane: pop the placement planned L layers ago and re-derive
+    /// the dispatch assignment from the ground-truth routing over it.
+    fn decide(&mut self, _layer: usize, actual: &LayerRouting) -> LayerDecision {
+        let abs = self.abs_next;
+        self.abs_next += 1;
+        while self.planned.front().map_or(false, |p| p.abs_layer < abs) {
+            self.planned.pop_front(); // defensive: drop stale plans
+        }
+        let plan = if self.planned.front().map_or(false, |p| p.abs_layer == abs) {
+            self.planned.pop_front()
         } else {
-            crate::perfmodel::Assignment::locality_first_from_counts(&actual_counts, &out.placement)
+            None
+        };
+
+        let actual_counts = actual.expert_counts_by_source_f64(self.ep);
+        let planned_ahead = plan.is_some();
+        let (placement, assignment) = match plan {
+            Some(p) => {
+                // Execute: ground-truth dispatch over the planned
+                // placement. The planned flow split is rescaled to the
+                // actual router counts (prediction error only shifts
+                // volumes), then briefly polished.
+                let assignment = if p.placement.total_replicas() > 0 {
+                    let rescaled = p.assignment.rescale_to_counts(&actual_counts, &p.placement);
+                    planner::polish_assignment(rescaled, &p.placement, &self.model, &self.hw, 8)
+                } else {
+                    Assignment::locality_first_from_counts(&actual_counts, &p.placement)
+                };
+                (p.placement, assignment)
+            }
+            None => {
+                // pipeline fill: static sharding, locality-first
+                let placement =
+                    Placement::sharded(self.ep, self.model.n_experts, self.cfg.max_redundant);
+                let assignment = Assignment::locality_first_from_counts(&actual_counts, &placement);
+                (placement, assignment)
+            }
         };
 
         // window EMA update from realized compute
@@ -136,36 +278,57 @@ impl Balancer for Probe {
         for (w, &c) in self.window_ema.iter_mut().zip(comp.iter()) {
             *w = 0.8 * *w + 0.2 * c;
         }
-
+        // attn_ema stays at its bootstrap estimate: per-decide updates
+        // would ingest prefill-chunk token counts (SimExecutor routes
+        // chunked prefill through the same decide path) and corrupt the
+        // decode hiding-window budget.
         let tokens_per_rank = actual.n_tokens.div_ceil(self.ep);
-        let prefetch_slots: Vec<usize> = (0..self.ep).map(|r| out.fetch_slots(r)).collect();
+
+        // Aux-track work happening DURING this layer: the plan the
+        // control plane just created for layer `abs + depth` (the back
+        // of the queue, pushed by the observe() that preceded us).
+        let depth = self.depth();
+        let (prefetch_slots, predict_time, plan_time) = match self.planned.back() {
+            Some(b) if b.abs_layer == abs + depth as u64 => (
+                (0..self.ep).map(|r| b.fetches[r].len()).collect(),
+                scheduler::predict_time(tokens_per_rank, &self.model, &self.hw),
+                scheduler::plan_time(b.iterations, &self.hw),
+            ),
+            _ => (vec![0; self.ep], 0.0, 0.0),
+        };
+
         // §6.4 pre-dispatch: destinations of predicted-confident tokens
-        // are known before routing completes; their payloads stream ahead
-        // of the collective. Confidence = predictor top-k accuracy (the
-        // top-half-k hit rate approaches 1, so accuracy is conservative).
-        let pre_dispatch_fraction = if self.cfg.pre_dispatch {
+        // are known before routing completes; their payloads stream
+        // ahead of the collective. Confidence = the statistical
+        // predictor's top-k accuracy (the top-half-k hit rate approaches
+        // 1, so accuracy is conservative). The transition predictor has
+        // no calibrated per-token confidence, so it gets no pre-dispatch
+        // credit. Only applies once the pipeline has a plan.
+        let pre_dispatch_fraction = if self.cfg.pre_dispatch
+            && planned_ahead
+            && self.cfg.predictor_kind == PredictorKind::Statistical
+        {
             self.cfg.predictor_accuracy.clamp(0.0, 1.0)
         } else {
             0.0
         };
         LayerDecision {
-            placement: out.placement,
+            placement,
             assignment,
             prefetch_slots,
-            predict_time: scheduler::predict_time(tokens_per_rank, &self.model, &self.hw),
-            plan_time: scheduler::plan_time(out.iterations, &self.hw),
+            prefetch_lookahead: depth,
+            predict_time,
+            plan_time,
             exposed_transfer: 0.0,
             pre_dispatch_fraction,
         }
     }
 }
 
-use super::Balancer;
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::balancers::decide_step;
+    use crate::balancers::{decide_step, Balancer};
     use crate::routing::RoutingModel;
     use crate::simulator::ClusterSim;
     use crate::util::stats::mean;
@@ -188,17 +351,18 @@ mod tests {
 
     #[test]
     fn probe_reduces_ir_vs_static() {
-        let (mut b, mut rm, sim) = setup(0.9);
+        let (mut b, mut rm, mut sim) = setup(0.9);
         let config = Config::default();
         let mut stat = crate::balancers::StaticEp::new(&config);
         let mut ir_probe = Vec::new();
         let mut ir_static = Vec::new();
+        let mut sim2 = ClusterSim::new(config.model.clone(), config.cluster.clone());
         for step in 0..6 {
             let routing = rm.route_step(&vec![0u16; 6144]);
             let dp = decide_step(&mut b, step, &routing);
             let ds = decide_step(&mut stat, step, &routing);
             ir_probe.push(sim.run_step(&routing, &dp).mean_ir());
-            ir_static.push(sim.run_step(&routing, &ds).mean_ir());
+            ir_static.push(sim2.run_step(&routing, &ds).mean_ir());
         }
         assert!(
             mean(&ir_probe) < mean(&ir_static) - 0.1,
@@ -248,18 +412,159 @@ mod tests {
 
     #[test]
     fn better_predictor_no_worse_latency() {
-        let (mut hi, mut rm1, sim) = setup(0.95);
-        let (mut lo, _, _) = setup(0.4);
+        let (mut hi, mut rm1, mut sim_hi) = setup(0.95);
+        let (mut lo, _, mut sim_lo) = setup(0.4);
         let mut t_hi = 0.0;
         let mut t_lo = 0.0;
         for step in 0..6 {
             let routing = rm1.route_step(&vec![0u16; 6144]);
-            t_hi += sim.run_step(&routing, &decide_step(&mut hi, step, &routing)).latency;
-            t_lo += sim.run_step(&routing, &decide_step(&mut lo, step, &routing)).latency;
+            let dh = decide_step(&mut hi, step, &routing);
+            let dl = decide_step(&mut lo, step, &routing);
+            t_hi += sim_hi.run_step(&routing, &dh).latency;
+            t_lo += sim_lo.run_step(&routing, &dl).latency;
         }
         assert!(
             t_hi <= t_lo * 1.02,
             "high-accuracy {t_hi} worse than low-accuracy {t_lo}"
+        );
+    }
+
+    #[test]
+    fn bootstrap_prefix_is_static_then_pipeline_fills() {
+        let config = Config::default();
+        let mut cfg = ProbeConfig::default();
+        cfg.lookahead_depth = 2;
+        let mut b = Probe::new(&config, cfg, 3);
+        let mut rm = RoutingModel::calibrated(4, 128, 4, 3, 9);
+        let r0 = rm.route_step(&vec![0u16; 4096]);
+        let d0 = decide_step(&mut b, 0, &r0);
+        // first L layers of the run have no plan yet
+        assert_eq!(d0[0].placement.total_replicas(), 0);
+        assert_eq!(d0[1].placement.total_replicas(), 0);
+        // from layer L on the pipeline is full
+        assert!(d0[2..].iter().any(|d| d.placement.total_replicas() > 0));
+        // and the next step is planned end-to-end (every layer popped a
+        // pipeline plan; most carry replicas on this skewed workload)
+        let r1 = rm.route_step(&vec![0u16; 4096]);
+        let d1 = decide_step(&mut b, 1, &r1);
+        let planned_layers = d1
+            .iter()
+            .filter(|d| d.placement.total_replicas() > 0)
+            .count();
+        assert!(planned_layers >= 3, "only {planned_layers}/4 layers planned");
+    }
+
+    #[test]
+    fn depth1_oracle_pipeline_matches_direct_plan() {
+        // lookahead_depth = 1 + oracle predictor + clear-mode planning
+        // reproduces the old same-layer oracle decisions: every plan
+        // equals Algorithm 1 run directly on the target layer's TRUE
+        // counts with the recorded windows, and the popped decision
+        // carries exactly that placement.
+        let config = Config::default();
+        let mut cfg = ProbeConfig::default();
+        cfg.predictor_accuracy = 1.0;
+        cfg.lookahead_depth = 1;
+        cfg.delta_plan = false;
+        let mut b = Probe::new(&config, cfg.clone(), 7);
+        let mut rm =
+            RoutingModel::calibrated(4, config.model.n_experts, config.model.top_k, 3, 13);
+        let mut expected: std::collections::HashMap<u64, Placement> =
+            std::collections::HashMap::new();
+        for step in 0..3u64 {
+            let routing = rm.route_step(&vec![0u16; 4096]);
+            let n = routing.layers.len();
+            b.begin_step(step as usize, n);
+            for l in 0..n {
+                if l + 1 < n {
+                    b.feed_target_truth(l + 1, &routing.layers[l + 1]);
+                }
+                b.observe(l, &routing.layers[l]);
+                if l + 1 < n {
+                    let planned = b.planned.back().expect("plan for l+1 exists");
+                    let truth = routing.layers[l + 1].expert_counts_by_source_f64(8);
+                    assert_eq!(
+                        planned.pred_counts, truth,
+                        "oracle forecast must equal the target layer's truth"
+                    );
+                    let base =
+                        Placement::sharded(8, config.model.n_experts, cfg.max_redundant);
+                    let direct = planner::plan(
+                        &truth,
+                        &base,
+                        &config.model,
+                        &config.cluster.profile,
+                        &planned.windows,
+                        &cfg,
+                    );
+                    assert_eq!(
+                        planned.placement, direct.placement,
+                        "pipeline plan diverged from direct Algorithm 1"
+                    );
+                    expected.insert(planned.abs_layer, planned.placement.clone());
+                }
+                let d = b.decide(l, &routing.layers[l]);
+                let abs = b.abs_next - 1;
+                if let Some(p) = expected.get(&abs) {
+                    assert_eq!(&d.placement, p, "decision != plan for abs layer {abs}");
+                }
+            }
+            rm.step_drift();
+        }
+        assert!(!expected.is_empty());
+    }
+
+    #[test]
+    fn delta_planning_fetches_below_clear_every_layer() {
+        // acceptance: on the drift workload, delta planning must fetch
+        // strictly fewer experts than clear-every-layer re-planning
+        let run = |delta: bool| -> usize {
+            let config = Config::default();
+            let mut cfg = ProbeConfig::default();
+            cfg.delta_plan = delta;
+            let mut b = Probe::new(&config, cfg, 5);
+            let mut rm = RoutingModel::calibrated(4, 128, 4, 3, 21);
+            let mut total = 0usize;
+            for step in 0..8 {
+                let routing = rm.route_step(&vec![0u16; 6144]);
+                for d in decide_step(&mut b, step, &routing) {
+                    total += d.total_prefetch_slots();
+                }
+                rm.step_drift();
+            }
+            total
+        };
+        let clear = run(false);
+        let delta = run(true);
+        assert!(clear > 0, "clear-mode never fetched");
+        assert!(delta < clear, "delta {delta} >= clear {clear}");
+    }
+
+    #[test]
+    fn transition_predictor_probe_runs_and_balances() {
+        let config = Config::default();
+        let mut cfg = ProbeConfig::default();
+        cfg.predictor_kind = PredictorKind::Transition;
+        let mut b = Probe::new(&config, cfg, 11);
+        let mut stat = crate::balancers::StaticEp::new(&config);
+        let mut rm = RoutingModel::calibrated(4, 128, 4, 3, 33);
+        let mut sim_p = ClusterSim::new(config.model.clone(), config.cluster.clone());
+        let mut sim_s = ClusterSim::new(config.model.clone(), config.cluster.clone());
+        let mut ir_probe = Vec::new();
+        let mut ir_static = Vec::new();
+        for step in 0..8 {
+            let routing = rm.route_step(&vec![0u16; 6144]);
+            let dp = decide_step(&mut b, step, &routing);
+            let ds = decide_step(&mut stat, step, &routing);
+            ir_probe.push(sim_p.run_step(&routing, &dp).mean_ir());
+            ir_static.push(sim_s.run_step(&routing, &ds).mean_ir());
+        }
+        // skip the first (untrained + pipeline-fill) step when judging
+        let ip = mean(&ir_probe[1..]);
+        let is = mean(&ir_static[1..]);
+        assert!(
+            ip < is,
+            "transition-predictor probe IR {ip} not below static {is}"
         );
     }
 }

@@ -1,6 +1,11 @@
 //! SGLang baseline: static sharded expert placement, no replication, no
 //! control plane. Dispatch follows the ground-truth router; stragglers
 //! are whatever the workload skew produces.
+//!
+//! Information budget (observe-then-emit): none. The placement is fixed
+//! at construction; `observe` is a no-op and `decide` only derives the
+//! locality-first dispatch over the static shard from the router output
+//! available at dispatch time.
 
 use crate::config::Config;
 use crate::model::MoeModel;
@@ -30,7 +35,9 @@ impl Balancer for StaticEp {
         "static-ep"
     }
 
-    fn begin_step(&mut self, _step_idx: usize) {}
+    fn begin_step(&mut self, _step_idx: usize, _n_layers: usize) {}
+
+    fn observe(&mut self, _layer: usize, _actual: &LayerRouting) {}
 
     fn decide(&mut self, _layer: usize, actual: &LayerRouting) -> LayerDecision {
         let placement = Placement::sharded(self.ep, self.model.n_experts, 0);
@@ -54,11 +61,13 @@ mod tests {
             1,
         );
         let lr = rm.route_step(&vec![0u16; 256]).layers.remove(0);
-        b.begin_step(0);
+        b.begin_step(0, 1);
+        b.observe(0, &lr);
         let d = b.decide(0, &lr);
         assert_eq!(d.placement.total_replicas(), 0);
         assert_eq!(d.predict_time, 0.0);
         assert_eq!(d.plan_time, 0.0);
+        assert_eq!(d.prefetch_lookahead, 0);
         assert!(d.prefetch_slots.iter().all(|&s| s == 0));
         d.assignment.validate(&lr.expert_counts(), &d.placement).unwrap();
     }

@@ -40,6 +40,33 @@ impl BalancerKind {
     }
 }
 
+/// Which lookahead predictor drives the PROBE control pipeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PredictorKind {
+    /// Accuracy-parameterized error process (paper-scale substitution,
+    /// calibrated to Fig. 10).
+    Statistical,
+    /// Causal per-layer expert transition/co-activation model,
+    /// gate-initialized and updated online from observed routing.
+    Transition,
+}
+
+impl PredictorKind {
+    pub fn by_name(s: &str) -> Option<PredictorKind> {
+        match s {
+            "statistical" => Some(PredictorKind::Statistical),
+            "transition" => Some(PredictorKind::Transition),
+            _ => None,
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            PredictorKind::Statistical => "statistical",
+            PredictorKind::Transition => "transition",
+        }
+    }
+}
+
 /// PROBE-specific knobs (paper §4–§5 defaults).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ProbeConfig {
@@ -50,6 +77,17 @@ pub struct ProbeConfig {
     /// Predictor top-k accuracy used by the statistical predictor
     /// (paper Fig. 10: ≈0.90 distilled, ≈0.75 untrained).
     pub predictor_accuracy: f64,
+    /// Control-pipeline depth L: the decision executing layer `l` is
+    /// planned while layer `l − L` runs, and its fetch amortizes over
+    /// the L intervening hiding windows (paper's continuous lookahead;
+    /// ISSUE 2 ablation sweep: {1, 2, 4}).
+    pub lookahead_depth: usize,
+    /// Plan replica deltas against the resident placement (reuse
+    /// still-hot replicas, fetch only the diff) instead of clearing and
+    /// re-planning every layer (ablation switch).
+    pub delta_plan: bool,
+    /// Which lookahead predictor feeds the planner.
+    pub predictor_kind: PredictorKind,
     /// Enforce the hiding-window constraint (ablation switch).
     pub enforce_window: bool,
     /// Split-phase transmission around Combine (ablation switch).
@@ -68,6 +106,9 @@ impl Default for ProbeConfig {
             max_redundant: 3,
             k_max: 16,
             predictor_accuracy: 0.90,
+            lookahead_depth: 1,
+            delta_plan: true,
+            predictor_kind: PredictorKind::Statistical,
             enforce_window: true,
             split_phase: true,
             water_filling: true,
@@ -113,6 +154,10 @@ pub struct Config {
     pub batch_per_rank: usize,
     /// Chunked-prefill tokens per rank.
     pub prefill_chunk_per_rank: usize,
+    /// Effective KV rows read per decode query token (post-GQA/tiling);
+    /// drives the simulator's attention time AND the balancer's
+    /// hiding-window estimate (they must agree — ISSUE 2 satellite).
+    pub mean_ctx: usize,
     pub seed: u64,
 }
 
@@ -127,6 +172,7 @@ impl Default for Config {
             dataset: Dataset::Mixed,
             batch_per_rank: 768,
             prefill_chunk_per_rank: 8192,
+            mean_ctx: 64,
             seed: 0,
         }
     }
@@ -178,6 +224,19 @@ impl Config {
                     cfg.probe.predictor_accuracy =
                         value.as_float().ok_or("probe.predictor_accuracy: float")?
                 }
+                "probe.lookahead_depth" => {
+                    let d = value.as_int().ok_or("probe.lookahead_depth: int")? as usize;
+                    if d == 0 {
+                        return Err("probe.lookahead_depth must be >= 1".into());
+                    }
+                    cfg.probe.lookahead_depth = d
+                }
+                "probe.delta_plan" => cfg.probe.delta_plan = value.as_bool().ok_or("bool")?,
+                "probe.predictor" => {
+                    cfg.probe.predictor_kind =
+                        PredictorKind::by_name(value.as_str().ok_or("probe.predictor: string")?)
+                            .ok_or_else(|| format!("unknown predictor {value:?}"))?;
+                }
                 "probe.enforce_window" => {
                     cfg.probe.enforce_window = value.as_bool().ok_or("bool")?
                 }
@@ -210,6 +269,7 @@ impl Config {
                 "workload.prefill_chunk_per_rank" => {
                     cfg.prefill_chunk_per_rank = value.as_int().ok_or("int")? as usize
                 }
+                "workload.mean_ctx" => cfg.mean_ctx = value.as_int().ok_or("int")? as usize,
                 "seed" => cfg.seed = value.as_int().ok_or("int")? as u64,
                 other => return Err(format!("unknown config key: {other}")),
             }
@@ -239,7 +299,31 @@ mod tests {
         assert_eq!(c.model.name, "gpt-oss-120b");
         assert_eq!(c.probe.max_redundant, 3);
         assert_eq!(c.probe.k_max, 16);
+        assert_eq!(c.probe.lookahead_depth, 1);
+        assert!(c.probe.delta_plan);
+        assert_eq!(c.probe.predictor_kind, PredictorKind::Statistical);
+        assert_eq!(c.mean_ctx, 64);
         assert_eq!(c.global_batch(), 768 * 8);
+    }
+
+    #[test]
+    fn parse_pipeline_knobs() {
+        let text = r#"
+[probe]
+lookahead_depth = 4
+delta_plan = false
+predictor = "transition"
+[workload]
+mean_ctx = 256
+"#;
+        let c = Config::from_toml_str(text).unwrap();
+        assert_eq!(c.probe.lookahead_depth, 4);
+        assert!(!c.probe.delta_plan);
+        assert_eq!(c.probe.predictor_kind, PredictorKind::Transition);
+        assert_eq!(c.mean_ctx, 256);
+        // depth 0 is rejected (the pipeline needs at least one window)
+        assert!(Config::from_toml_str("[probe]\nlookahead_depth = 0\n").is_err());
+        assert!(Config::from_toml_str("[probe]\npredictor = \"oracle9000\"\n").is_err());
     }
 
     #[test]

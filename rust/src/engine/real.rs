@@ -11,7 +11,9 @@ use std::collections::HashMap;
 
 use anyhow::{anyhow, Result};
 
-use crate::predictor::{fidelity, PredFidelity};
+use crate::predictor::{
+    count_fidelity, counts_total, fidelity, LookaheadPredictor, PredFidelity, TransitionPredictor,
+};
 use crate::routing::LayerRouting;
 use crate::runtime::{predictions_from_decode, priors_from_decode, routing_from_decode, Engine};
 use crate::util::stats::imbalance_ratio;
@@ -33,6 +35,10 @@ struct Slot {
 pub struct FidelityAccum {
     pub trained: Vec<PredFidelity>,
     pub prior: Vec<PredFidelity>,
+    /// Running mean count-level fidelity of the online (causal)
+    /// [`TransitionPredictor`] per layer, at depth 1.
+    pub transition_cf: Vec<f64>,
+    pub transition_n: Vec<usize>,
     pub samples: usize,
 }
 
@@ -46,6 +52,10 @@ pub struct RealExecutor {
     /// via `submit_with_prompt` or synthesized at `begin`).
     prompts: HashMap<u64, Vec<i32>>,
     pub fidelity: FidelityAccum,
+    /// Causal cross-layer predictor fed the real router traces online —
+    /// measures what a gate-initialized transition model would achieve
+    /// on this deployment (vs the distilled MLP's fused predictions).
+    transition: TransitionPredictor,
     /// Virtual EP size used for IR accounting of the real router traces.
     pub virtual_ep: usize,
     rng: Rng,
@@ -56,6 +66,7 @@ impl RealExecutor {
         let batch = engine.pick_batch(8);
         let kv = vec![0.0; engine.cfg().kv_len(batch)];
         let n_layers = engine.cfg().n_layers;
+        let n_experts = engine.cfg().n_experts;
         RealExecutor {
             engine,
             batch,
@@ -65,8 +76,11 @@ impl RealExecutor {
             fidelity: FidelityAccum {
                 trained: vec![PredFidelity::default(); n_layers],
                 prior: vec![PredFidelity::default(); n_layers],
+                transition_cf: vec![0.0; n_layers],
+                transition_n: vec![0; n_layers],
                 samples: 0,
             },
+            transition: TransitionPredictor::new(n_layers, n_experts),
             virtual_ep,
             rng: Rng::new(seed),
         }
@@ -154,6 +168,15 @@ impl RealExecutor {
                 let p = &self.fidelity.prior[l];
                 (l, t.top_k_accuracy, p.top_k_accuracy)
             })
+            .collect()
+    }
+
+    /// Mean per-layer count-level fidelity of the online transition
+    /// predictor (layers with at least one sample).
+    pub fn transition_fidelity_report(&self) -> Vec<(usize, f64)> {
+        (1..self.engine.cfg().n_layers)
+            .filter(|&l| self.fidelity.transition_n[l] > 0)
+            .map(|l| (l, self.fidelity.transition_cf[l]))
             .collect()
     }
 }
@@ -298,6 +321,28 @@ impl StepExecutor for RealExecutor {
                 accum(&mut self.fidelity.prior[l], &fidelity(&routing[l], pr));
             }
         }
+        // causal transition predictor: forecast layer l from the REAL
+        // routing of layer l-1 BEFORE observing this step (no peeking)
+        for l in 1..routing.len() {
+            if let Some(f) =
+                self.transition
+                    .forecast_counts(l - 1, &routing[l - 1], l, 1, self.virtual_ep)
+            {
+                let actual: Vec<f64> = routing[l]
+                    .expert_counts()
+                    .into_iter()
+                    .map(|c| c as f64)
+                    .collect();
+                let cf = count_fidelity(&actual, &counts_total(&f));
+                let n = self.fidelity.transition_n[l] as f64;
+                self.fidelity.transition_cf[l] =
+                    (self.fidelity.transition_cf[l] * n + cf) / (n + 1.0);
+                self.fidelity.transition_n[l] += 1;
+            }
+        }
+        for (l, lr) in routing.iter().enumerate() {
+            self.transition.observe(l, lr);
+        }
         self.fidelity.samples += 1;
 
         // --- greedy sampling + slot advance ---
@@ -344,6 +389,11 @@ impl ServingEngine<RealExecutor> {
     /// Mean per-layer predictor fidelity accumulated so far.
     pub fn fidelity_report(&self) -> Vec<(usize, f64, f64)> {
         self.executor.fidelity_report()
+    }
+
+    /// Mean per-layer fidelity of the online transition predictor.
+    pub fn transition_fidelity_report(&self) -> Vec<(usize, f64)> {
+        self.executor.transition_fidelity_report()
     }
 }
 

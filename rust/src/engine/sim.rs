@@ -31,7 +31,10 @@ pub struct SimExecutor {
 
 impl SimExecutor {
     pub fn new(cfg: Config, balancer: Box<dyn Balancer>, seed: u64) -> SimExecutor {
-        let sim = ClusterSim::new(cfg.model.clone(), cfg.cluster.clone());
+        let mut sim = ClusterSim::new(cfg.model.clone(), cfg.cluster.clone());
+        // decode attention context: the balancer's hiding-window estimate
+        // is derived from the same config value (ISSUE 2 satellite)
+        sim.mean_ctx = cfg.mean_ctx;
         let routing_model = RoutingModel::calibrated(
             cfg.model.n_layers,
             cfg.model.n_experts,

@@ -1,16 +1,28 @@
 //! Design-choice ablations (DESIGN.md list): prefetch budget, predictor
-//! quality, split-phase transmission, water-filling, hiding-window
-//! enforcement. Each row reports decode throughput and mean IR on the
-//! high-skew Repeat workload where the mechanisms matter most.
+//! quality, lookahead depth, delta vs clear-every-layer planning,
+//! split-phase transmission, water-filling, hiding-window enforcement.
+//! Each row reports decode throughput, mean IR, exposed transfer, and
+//! the expert-fetch volume on the high-skew Repeat workload where the
+//! mechanisms matter most (the routing model's default drift makes it
+//! the ISSUE 2 "drift workload").
 
-use crate::config::ProbeConfig;
+use crate::config::{PredictorKind, ProbeConfig};
 use crate::coordinator::Coordinator;
 use crate::util::bench::BenchSet;
 use crate::workload::{Dataset, RequestGenerator, WorkloadSpec};
 
 use super::{sim_config, SIM_LAYERS};
 
-fn run_variant(name: &str, cfg_probe: ProbeConfig, split_phase: bool, steps: usize, seed: u64) -> (String, f64, f64, f64) {
+/// (name, throughput tok/s, mean IR, exposed seconds, fetch slots)
+type VariantRow = (String, f64, f64, f64, usize);
+
+fn run_variant(
+    name: &str,
+    cfg_probe: ProbeConfig,
+    split_phase: bool,
+    steps: usize,
+    seed: u64,
+) -> VariantRow {
     run_variant_on(name, cfg_probe, split_phase, steps, seed, "hopper-141")
 }
 
@@ -24,7 +36,7 @@ fn run_variant_on(
     steps: usize,
     seed: u64,
     profile: &str,
-) -> (String, f64, f64, f64) {
+) -> VariantRow {
     let mut cfg = sim_config("gpt-oss-120b");
     cfg.cluster.profile = crate::topology::HardwareProfile::by_name(profile).unwrap();
     cfg.model.n_layers = SIM_LAYERS;
@@ -43,53 +55,72 @@ fn run_variant_on(
     let outs = c.run_decode_steps(steps);
     let lat: f64 = outs.iter().map(|o| o.latency).sum();
     let toks: usize = outs.iter().map(|_| c.decode_capacity()).sum();
-    let ir = crate::util::stats::mean(
-        &outs.iter().map(|o| o.mean_ir()).collect::<Vec<_>>(),
-    );
-    let exposed: f64 = outs
-        .iter()
-        .flat_map(|o| o.timelines.iter())
-        .map(|t| t.exposed_overhead)
-        .sum();
+    let ir = crate::util::stats::mean(&outs.iter().map(|o| o.mean_ir()).collect::<Vec<_>>());
+    let exposed: f64 = outs.iter().map(|o| o.total_exposed()).sum();
+    let fetches: usize = outs.iter().map(|o| o.prefetch_slots_total).sum();
     (
         name.to_string(),
         if lat > 0.0 { toks as f64 / lat } else { 0.0 },
         ir,
         exposed,
+        fetches,
     )
 }
 
 pub fn run(steps: usize) -> BenchSet {
     let mut b = BenchSet::new(
         "ablations",
-        &["variant", "throughput_tok_s", "mean_IR", "exposed_us"],
+        &[
+            "variant",
+            "throughput_tok_s",
+            "mean_IR",
+            "exposed_us",
+            "fetch_slots",
+        ],
     );
     let seed = 51;
-    let mut variants: Vec<(String, f64, f64, f64)> = Vec::new();
+    let mut variants: Vec<VariantRow> = Vec::new();
+
+    // the default config is the shared point of four sweeps
+    // (budget=3, predictor=distilled, lookahead=1, delta_plan=on):
+    // simulate it once, emit it under each label
+    let baseline = run_variant("baseline", ProbeConfig::default(), true, steps, seed);
+    let alias =
+        |name: &str, v: &VariantRow| -> VariantRow { (name.to_string(), v.1, v.2, v.3, v.4) };
 
     // prefetch budget sweep
-    for budget in [0usize, 1, 2, 3] {
+    for budget in [0usize, 1, 2] {
         let mut p = ProbeConfig::default();
         p.max_redundant = budget;
-        variants.push(run_variant(
-            &format!("budget={budget}"),
-            p,
-            true,
-            steps,
-            seed,
-        ));
+        variants.push(run_variant(&format!("budget={budget}"), p, true, steps, seed));
     }
+    variants.push(alias("budget=3", &baseline));
     // predictor quality sweep
-    for (name, acc) in [("oracle", 1.0), ("distilled", 0.9), ("untrained", 0.75), ("poor", 0.4)] {
+    variants.push(alias("predictor=distilled", &baseline));
+    for (name, acc) in [("oracle", 1.0), ("untrained", 0.75), ("poor", 0.4)] {
         let mut p = ProbeConfig::default();
         p.predictor_accuracy = acc;
-        variants.push(run_variant(
-            &format!("predictor={name}"),
-            p,
-            true,
-            steps,
-            seed,
-        ));
+        variants.push(run_variant(&format!("predictor={name}"), p, true, steps, seed));
+    }
+    // causal transition predictor (no harness oracle at all)
+    {
+        let mut p = ProbeConfig::default();
+        p.predictor_kind = PredictorKind::Transition;
+        variants.push(run_variant("predictor=transition", p, true, steps, seed));
+    }
+    // lookahead depth sweep (ISSUE 2 acceptance: {1, 2, 4} via config)
+    variants.push(alias("lookahead=1", &baseline));
+    for depth in [2usize, 4] {
+        let mut p = ProbeConfig::default();
+        p.lookahead_depth = depth;
+        variants.push(run_variant(&format!("lookahead={depth}"), p, true, steps, seed));
+    }
+    // delta planning vs clear-every-layer on the drift workload
+    variants.push(alias("delta_plan=on", &baseline));
+    {
+        let mut p = ProbeConfig::default();
+        p.delta_plan = false;
+        variants.push(run_variant("delta_plan=off", p, true, steps, seed));
     }
     // split-phase on/off under a tight window (compute-heavy profile)
     variants.push(run_variant_on(
@@ -125,7 +156,12 @@ pub fn run(steps: usize) -> BenchSet {
         let mut p = ProbeConfig::default();
         p.enforce_window = false;
         variants.push(run_variant_on(
-            "tight/enforce_window=off", p, true, steps, seed, "compute-heavy",
+            "tight/enforce_window=off",
+            p,
+            true,
+            steps,
+            seed,
+            "compute-heavy",
         ));
         variants.push(run_variant_on(
             "tight/enforce_window=on",
@@ -137,15 +173,18 @@ pub fn run(steps: usize) -> BenchSet {
         ));
     }
 
-    for (name, thr, ir, exposed) in variants {
+    for (name, thr, ir, exposed, fetches) in variants {
         b.row(&[
             name,
             format!("{:.0}", thr),
             format!("{:.2}", ir),
             format!("{:.1}", exposed * 1e6),
+            format!("{fetches}"),
         ]);
     }
     b.note("Repeat dataset, GPT-OSS, ep=8, b=768/rank (highest-skew regime)");
+    b.note("fetch_slots: experts transferred across all layers/steps;");
+    b.note("delta planning reuses resident replicas, clear mode refetches");
     b
 }
 
@@ -175,5 +214,30 @@ mod tests {
                 .unwrap()
         };
         assert!(thr("predictor=oracle") >= thr("predictor=poor") * 0.98);
+    }
+
+    #[test]
+    fn delta_planning_cuts_fetches_on_drift_workload() {
+        let b = run(12);
+        let fetches = |name: &str| -> usize {
+            b.rows.iter().find(|r| r[0] == name).unwrap()[4]
+                .parse()
+                .unwrap()
+        };
+        let on = fetches("delta_plan=on");
+        let off = fetches("delta_plan=off");
+        assert!(off > 0, "clear mode never fetched");
+        assert!(on < off, "delta {on} >= clear {off}");
+    }
+
+    #[test]
+    fn lookahead_sweep_rows_present() {
+        let b = run(8);
+        for depth in [1, 2, 4] {
+            assert!(
+                b.rows.iter().any(|r| r[0] == format!("lookahead={depth}")),
+                "missing lookahead={depth} row"
+            );
+        }
     }
 }

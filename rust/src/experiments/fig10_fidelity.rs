@@ -1,14 +1,20 @@
 //! Fig. 10: predictor fidelity across layers.
 //!
-//! Two sources, both reported:
+//! Three sources, all reported:
 //! 1. The *real* distilled predictor of the small model — build-time
 //!    metrics from `artifacts/predictor_metrics.json`, and (when the
 //!    artifacts are present) live measurements over PJRT decode traffic.
 //! 2. The statistical predictor's calibration sweep (the error process
 //!    the paper-scale simulations use), verifying the configured accuracy
 //!    is realized on routed traffic.
+//! 3. The causal [`TransitionPredictor`]'s count-level fidelity at
+//!    lookahead depths 1/2/4 after online training — what the control
+//!    pipeline achieves with NO harness oracle at all.
 
-use crate::predictor::{fidelity, StatisticalPredictor};
+use crate::predictor::{
+    count_fidelity, counts_total, fidelity, LookaheadPredictor, StatisticalPredictor,
+    TransitionPredictor,
+};
 use crate::routing::RoutingModel;
 use crate::util::bench::BenchSet;
 use crate::util::Json;
@@ -82,9 +88,77 @@ pub fn run(p: &Fig10Params) -> BenchSet {
             "-".into(),
         ]);
     }
+    // (3) causal transition predictor: count-level fidelity by depth.
+    // The value goes in the primary metric column; the variant label
+    // names the metric so column-wise consumers don't misread it as a
+    // top-k rate.
+    let (tp_fid, stat_fid) = transition_fidelity(p, 20);
+    for (depth, f) in tp_fid {
+        b.row(&[
+            "transition (sim)".into(),
+            "-".into(),
+            format!("count-fid depth={depth}"),
+            format!("{:.3}", f),
+            "-".into(),
+            "-".into(),
+        ]);
+    }
+    b.row(&[
+        "statistical (sim)".into(),
+        "-".into(),
+        "count-fid distilled".into(),
+        format!("{:.3}", stat_fid),
+        "-".into(),
+        "-".into(),
+    ]);
     b.note("paper: untrained prior 70-80%, distilled 87-94% top-k;");
     b.note("top-half-k and 2x-recall approach 100%");
+    b.note("count-fid rows: 1 - TV distance of forecast vs realized");
+    b.note("counts (the planner-level metric) after online training");
     b
+}
+
+/// Train a [`TransitionPredictor`] online for `warm_steps`, then report
+/// its mean count-level fidelity at depths 1/2/4 on a held-out step,
+/// alongside the distilled statistical predictor's count fidelity (the
+/// Fig. 10 band anchor at the same granularity).
+pub fn transition_fidelity(p: &Fig10Params, warm_steps: usize) -> (Vec<(usize, f64)>, f64) {
+    let n_layers = 6;
+    let mut rm = RoutingModel::calibrated(n_layers, 128, 4, 4, p.seed ^ 0x77);
+    let mut tp = TransitionPredictor::new(n_layers, 128);
+    for _ in 0..warm_steps {
+        let step = rm.route_step(&vec![0u16; p.tokens]);
+        for (l, lr) in step.layers.iter().enumerate() {
+            tp.observe(l, lr);
+        }
+    }
+    let step = rm.route_step(&vec![0u16; p.tokens]);
+    let actual_of = |l: usize| -> Vec<f64> {
+        step.layers[l]
+            .expert_counts()
+            .into_iter()
+            .map(|c| c as f64)
+            .collect()
+    };
+    let mut out = Vec::new();
+    for depth in [1usize, 2, 4] {
+        let mut acc = 0.0;
+        let mut n = 0;
+        for l in 0..n_layers - depth {
+            let f = tp
+                .forecast_counts(l, &step.layers[l], l + depth, depth, 8)
+                .expect("transition predictor always forecasts");
+            acc += count_fidelity(&actual_of(l + depth), &counts_total(&f));
+            n += 1;
+        }
+        out.push((depth, acc / n as f64));
+    }
+    // distilled statistical predictor at the same count granularity
+    let mut sp = StatisticalPredictor::distilled(p.seed);
+    let pred = sp.predict(&step.layers[0]);
+    let pred_counts: Vec<f64> = pred.expert_counts().into_iter().map(|c| c as f64).collect();
+    let stat_fid = count_fidelity(&actual_of(0), &pred_counts);
+    (out, stat_fid)
 }
 
 #[cfg(test)]
@@ -104,10 +178,31 @@ mod tests {
             .iter()
             .filter(|r| r[0].starts_with("statistical"))
             .collect();
-        assert_eq!(sim_rows.len(), 2);
+        // 2 calibration rows + 1 count-level anchor row
+        assert_eq!(sim_rows.len(), 3);
         let distilled: f64 = sim_rows[0][3].parse().unwrap();
         let untrained: f64 = sim_rows[1][3].parse().unwrap();
         assert!(distilled > untrained);
         assert!(distilled > 0.85);
+    }
+
+    #[test]
+    fn transition_fidelity_in_band_and_decays_with_depth() {
+        let p = Fig10Params {
+            artifacts_dir: "/nonexistent".into(),
+            tokens: 4096,
+            seed: 3,
+        };
+        let (by_depth, stat) = transition_fidelity(&p, 25);
+        assert_eq!(by_depth.len(), 3);
+        let d1 = by_depth[0].1;
+        let d4 = by_depth[2].1;
+        // Fig. 10 band proxy at count granularity: the trained causal
+        // predictor sits well above a flat prior and within reach of the
+        // distilled error process, without any oracle feed
+        assert!(d1 > 0.55, "depth-1 transition fidelity too low: {d1}");
+        assert!(stat > d1 - 0.45, "band sanity: stat {stat} vs d1 {d1}");
+        // deeper forecasts can only blur the transition chain
+        assert!(d4 <= d1 + 0.05, "depth 4 ({d4}) above depth 1 ({d1})");
     }
 }

@@ -48,7 +48,7 @@ pub fn measure(kind: BalancerKind, p: &Fig11Params) -> TimelineResult {
     cfg.model.n_layers = p.layers;
     cfg.batch_per_rank = p.batch_per_rank;
     let mut bal = make_balancer(kind, &cfg, p.seed);
-    let sim = ClusterSim::new(cfg.model.clone(), cfg.cluster.clone());
+    let mut sim = ClusterSim::new(cfg.model.clone(), cfg.cluster.clone());
     let mut rm = crate::routing::RoutingModel::calibrated(
         p.layers,
         cfg.model.n_experts,

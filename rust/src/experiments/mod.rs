@@ -14,6 +14,7 @@
 pub mod ablations;
 pub mod fig10_fidelity;
 pub mod fleet;
+pub mod pipeline;
 pub mod fig11_timeline;
 pub mod fig2_ir;
 pub mod fig3_compute;

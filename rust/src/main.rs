@@ -46,11 +46,12 @@ fn print_help() {
            serve     --requests N --max-steps N --artifacts DIR\n\
            simulate  --balancer static|eplb|probe --dataset D --steps N\n\
                      --batch-per-rank N --model M [--config FILE]\n\
+                     [--lookahead L] [--predictor statistical|transition]\n\
            fleet     --replicas N --policy rr|jsq|affinity|all --dataset D\n\
                      --requests-per-replica N [--shift-to D2] [--seed S]\n\
            prefill   --balancer B --tokens N --model M\n\
-           bench     fig2|fig3|fig5|fig7|fig8|fig9|fig10|fig11|fleet|all\n\
-                     [--steps N]\n\
+           bench     fig2|fig3|fig5|fig7|fig8|fig9|fig10|fig11|fleet|\n\
+                     pipeline|all [--steps N]\n\
            ablate    [--steps N]\n\
            info\n"
     );
@@ -83,6 +84,18 @@ fn load_config(args: &Args) -> Config {
         });
     }
     cfg.batch_per_rank = args.get_usize("batch-per-rank", cfg.batch_per_rank);
+    let lookahead = args.get_usize("lookahead", cfg.probe.lookahead_depth);
+    if lookahead == 0 {
+        eprintln!("--lookahead must be >= 1 (the pipeline needs at least one window)");
+        std::process::exit(2);
+    }
+    cfg.probe.lookahead_depth = lookahead;
+    if let Some(p) = args.get("predictor") {
+        cfg.probe.predictor_kind = probe::config::PredictorKind::by_name(p).unwrap_or_else(|| {
+            eprintln!("unknown predictor {p} (statistical|transition)");
+            std::process::exit(2);
+        });
+    }
     cfg.seed = args.get_u64("seed", cfg.seed);
     cfg
 }
@@ -146,6 +159,9 @@ fn cmd_serve(args: &Args) -> i32 {
     );
     for (l, trained, prior) in coord.fidelity_report() {
         println!("  predictor layer {l}: trained {trained:.3} vs prior {prior:.3}");
+    }
+    for (l, cf) in coord.transition_fidelity_report() {
+        println!("  transition predictor layer {l}: count fidelity {cf:.3}");
     }
     0
 }
@@ -270,6 +286,12 @@ fn cmd_bench(args: &Args) -> i32 {
             }
             "fig10" => exp::fig10_fidelity::run(&Default::default()),
             "fig11" => exp::fig11_timeline::run(&Default::default()),
+            "pipeline" => {
+                let mut p = exp::pipeline::PipelineParams::default();
+                p.steps = args.get_usize("steps", p.steps);
+                p.seed = args.get_u64("seed", p.seed);
+                exp::pipeline::run(&p)
+            }
             "fleet" => {
                 let mut p = exp::fleet::FleetParams::default();
                 p.seed = args.get_u64("seed", p.seed);
@@ -285,7 +307,9 @@ fn cmd_bench(args: &Args) -> i32 {
         true
     };
     if which == "all" {
-        for f in ["fig2", "fig3", "fig5", "fig7", "fig8", "fig9", "fig10", "fig11", "fleet"] {
+        for f in [
+            "fig2", "fig3", "fig5", "fig7", "fig8", "fig9", "fig10", "fig11", "fleet", "pipeline",
+        ] {
             run_one(f);
         }
         0

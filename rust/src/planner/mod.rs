@@ -6,6 +6,19 @@
 //! prefetch hides inside the per-rank window), and redistribute that
 //! expert's *remote* tokens with locality-first water-filling. Stops at
 //! convergence (gain ≤ ε) or the iteration cap `k_max`.
+//!
+//! Two refinements over the literal Algorithm 1 (ISSUE 2):
+//! * **Delta planning** (`cfg.delta_plan`): instead of clearing all
+//!   replicas and re-planning from the static base every layer, the plan
+//!   starts from the *resident* placement (what the previous plan for
+//!   this layer left in HBM), evicts only replicas whose predicted load
+//!   went cold (eviction is a free overwrite), reuses the still-hot ones
+//!   at zero transfer cost, and reports only the *new* fetches in
+//!   [`PlanOutcome::fetches`]. On drifting workloads the per-layer fetch
+//!   volume drops to the hotspot diff.
+//! * **Incremental latency state** ([`LatencyState`]): the greedy loop
+//!   updates per-rank compute/traffic terms as flows shift instead of
+//!   recomputing the full O(E·ep²) [`rank_latencies`] per iteration.
 
 use crate::config::ProbeConfig;
 use crate::model::MoeModel;
@@ -18,8 +31,10 @@ use crate::topology::HardwareProfile;
 pub struct PlanOutcome {
     pub placement: Placement,
     pub assignment: Assignment,
-    /// Experts fetched per rank this plan (|Δ_r^in|).
+    /// Experts NEWLY fetched per rank this plan (|Δ_r^in| minus reuse).
     pub fetches: Vec<Vec<usize>>,
+    /// Resident replicas reused at zero transfer cost (delta planning).
+    pub retained_replicas: usize,
     /// Loop iterations consumed (≤ k_max).
     pub iterations: usize,
     /// Planner's internal latency estimate before/after (seconds).
@@ -34,43 +49,122 @@ impl PlanOutcome {
     pub fn max_fetch_slots(&self) -> usize {
         self.fetches.iter().map(|f| f.len()).max().unwrap_or(0)
     }
+    pub fn total_fetches(&self) -> usize {
+        self.fetches.iter().map(|f| f.len()).sum()
+    }
 }
 
 /// Planner internal per-rank latency estimate: compute time plus a
 /// (non-deduplicated, conservative) traffic term — the eq. 8 objective.
-pub fn rank_latencies(
-    a: &Assignment,
-    model: &MoeModel,
-    hw: &HardwareProfile,
-) -> Vec<f64> {
-    let ep = a.ep;
-    let mut comp = vec![0.0; ep];
-    let mut v_in = vec![0.0; ep];
-    let mut v_out = vec![0.0; ep];
-    let tb = model.token_bytes();
-    for e in 0..a.n_experts {
-        for rt in 0..ep {
-            let n = a.tokens_on(e, rt);
-            if n > 0.0 {
-                comp[rt] += expert_compute_time(n, model, hw);
-                v_in[rt] += a.remote_tokens_on(e, rt) * tb;
-            }
-        }
-        for rs in 0..ep {
+pub fn rank_latencies(a: &Assignment, model: &MoeModel, hw: &HardwareProfile) -> Vec<f64> {
+    LatencyState::from_assignment(a, model, hw).latencies()
+}
+
+/// Incrementally-maintained per-rank latency terms of the eq. 8
+/// objective. A flow shift touches O(1) ranks, so the greedy loop pays
+/// O(shift) instead of the full O(E·ep²) recompute per candidate.
+#[derive(Debug, Clone)]
+pub struct LatencyState {
+    ep: usize,
+    token_bytes: f64,
+    bw: f64,
+    comp: Vec<f64>,
+    v_in: Vec<f64>,
+    v_out: Vec<f64>,
+    /// tokens_on(e, r), indexed `e * ep + r`.
+    tok: Vec<f64>,
+}
+
+impl LatencyState {
+    pub fn from_assignment(a: &Assignment, model: &MoeModel, hw: &HardwareProfile) -> LatencyState {
+        let ep = a.ep;
+        let tb = model.token_bytes();
+        let mut st = LatencyState {
+            ep,
+            token_bytes: tb,
+            bw: hw.effective_alltoall_bw(),
+            comp: vec![0.0; ep],
+            v_in: vec![0.0; ep],
+            v_out: vec![0.0; ep],
+            tok: vec![0.0; a.n_experts * ep],
+        };
+        for e in 0..a.n_experts {
             for rt in 0..ep {
-                if rs != rt {
-                    let x = a.get(e, rs, rt);
-                    if x > 0.0 {
-                        v_out[rs] += x * tb;
+                let n = a.tokens_on(e, rt);
+                if n > 0.0 {
+                    st.tok[e * ep + rt] = n;
+                    st.comp[rt] += expert_compute_time(n, model, hw);
+                    st.v_in[rt] += a.remote_tokens_on(e, rt) * tb;
+                }
+            }
+            for rs in 0..ep {
+                for rt in 0..ep {
+                    if rs != rt {
+                        let x = a.get(e, rs, rt);
+                        if x > 0.0 {
+                            st.v_out[rs] += x * tb;
+                        }
                     }
                 }
             }
         }
+        st
     }
-    let bw = hw.effective_alltoall_bw();
-    (0..ep)
-        .map(|r| comp[r] + (v_in[r].max(v_out[r])) / bw)
-        .collect()
+
+    #[inline]
+    pub fn latency(&self, r: usize) -> f64 {
+        self.comp[r] + self.v_in[r].max(self.v_out[r]) / self.bw
+    }
+
+    pub fn latencies(&self) -> Vec<f64> {
+        (0..self.ep).map(|r| self.latency(r)).collect()
+    }
+
+    pub fn max_latency(&self) -> f64 {
+        (0..self.ep).map(|r| self.latency(r)).fold(0.0, f64::max)
+    }
+
+    pub fn tokens_on(&self, e: usize, r: usize) -> f64 {
+        self.tok[e * self.ep + r]
+    }
+
+    /// Mirror `Assignment::shift(e, rs, from, to, x)` on the latency
+    /// terms. `x` must be the amount actually moved.
+    pub fn apply_shift(
+        &mut self,
+        e: usize,
+        rs: usize,
+        from: usize,
+        to: usize,
+        x: f64,
+        model: &MoeModel,
+        hw: &HardwareProfile,
+    ) {
+        if x <= 0.0 || from == to {
+            return;
+        }
+        let i_from = e * self.ep + from;
+        let i_to = e * self.ep + to;
+        self.comp[from] +=
+            expert_compute_time(self.tok[i_from] - x, model, hw) - expert_compute_time(self.tok[i_from], model, hw);
+        self.comp[to] +=
+            expert_compute_time(self.tok[i_to] + x, model, hw) - expert_compute_time(self.tok[i_to], model, hw);
+        self.tok[i_from] -= x;
+        self.tok[i_to] += x;
+        let tb = self.token_bytes;
+        if rs != from {
+            self.v_in[from] -= x * tb;
+        }
+        if rs != to {
+            self.v_in[to] += x * tb;
+        }
+        let was_remote = rs != from;
+        let is_remote = rs != to;
+        if was_remote != is_remote {
+            let sign = if is_remote { 1.0 } else { -1.0 };
+            self.v_out[rs] += sign * x * tb;
+        }
+    }
 }
 
 /// Marginal seconds per additional token of expert `e` at load `n`.
@@ -79,25 +173,55 @@ fn marginal_time(n: f64, model: &MoeModel, hw: &HardwareProfile) -> f64 {
     model.per_token_flops() / (eff * hw.peak_flops)
 }
 
-/// Algorithm 1. `counts_by_source[e][rs]` are the *predicted* per-expert
-/// per-source token counts for the upcoming layer; `windows[r]` is the
-/// per-rank hiding window (seconds of overlappable compute).
+/// Evict replicas whose predicted load fell below the per-expert mean:
+/// the slot is reclaimed for free (overwrite), and only hot experts keep
+/// their zero-cost resident copies.
+fn drop_cold_replicas(placement: &mut Placement, counts_by_source: &[Vec<f64>]) {
+    let totals: Vec<f64> = counts_by_source.iter().map(|v| v.iter().sum()).collect();
+    let n = totals.len().max(1) as f64;
+    let mean = totals.iter().sum::<f64>() / n;
+    for e in 0..placement.n_experts {
+        if totals[e] < mean {
+            for r in placement.ranks_hosting(e).into_iter().skip(1) {
+                let _ = placement.remove_replica(e, r);
+            }
+        }
+    }
+}
+
+/// Algorithm 1 with delta planning. `counts_by_source[e][rs]` are the
+/// *predicted* per-expert per-source token counts for the target layer;
+/// `resident` is the placement currently in HBM for that layer (replicas
+/// fetched by earlier plans); `windows[r]` is the per-rank hiding window
+/// (seconds of overlappable compute) budgeting NEW fetches only.
 pub fn plan(
     counts_by_source: &[Vec<f64>],
-    base: &Placement,
+    resident: &Placement,
     model: &MoeModel,
     hw: &HardwareProfile,
     windows: &[f64],
     cfg: &ProbeConfig,
 ) -> PlanOutcome {
-    let ep = base.ep;
+    let ep = resident.ep;
     assert_eq!(windows.len(), ep);
-    let mut placement = base.clone();
-    placement.clear_replicas();
+    let mut placement = resident.clone();
+    if cfg.delta_plan {
+        drop_cold_replicas(&mut placement, counts_by_source);
+    } else {
+        placement.clear_replicas();
+    }
+    let retained_replicas = placement.total_replicas();
 
     let mut a = Assignment::locality_first_from_counts(counts_by_source, &placement);
-    let mut lat = rank_latencies(&a, model, hw);
-    let est_before = lat.iter().cloned().fold(0.0, f64::max);
+    let mut st = LatencyState::from_assignment(&a, model, hw);
+    let est_before = st.max_latency();
+
+    // Zero-cost reuse: water-fill over the retained replicas before any
+    // new fetch is considered (no transfer, no slot, no budget charge).
+    if retained_replicas > 0 {
+        a = polish_assignment(a, &placement, model, hw, 16);
+        st = LatencyState::from_assignment(&a, model, hw);
+    }
 
     let mut fetches: Vec<Vec<usize>> = vec![Vec::new(); ep];
     let mut invalid: Vec<(usize, usize)> = Vec::new();
@@ -111,6 +235,7 @@ pub fn plan(
         iterations += 1;
 
         // select bottleneck/helper pair, skipping invalidated pairs
+        let lat = st.latencies();
         let Some((r_src, r_dst)) = select_pair(&lat, &placement, &invalid) else {
             break;
         };
@@ -123,7 +248,8 @@ pub fn plan(
 
         // dual-side budget check (eq. 6 vs hiding window): the fetch on
         // r_dst and the slot overwrite (evict) both bound the same slot
-        // count; cyclic slot reuse makes |Δ_out| = |Δ_in| per rank.
+        // count; cyclic slot reuse makes |Δ_out| = |Δ_in| per rank. Only
+        // NEW fetches are charged — retained replicas already transferred.
         if cfg.enforce_window {
             let slots_after = fetches[r_dst].len() + 1;
             if transfer_time(slots_after, model, hw) > windows[r_dst] {
@@ -136,18 +262,25 @@ pub fn plan(
             continue;
         }
 
-        // tentative replica + water-filling rebalance
+        // tentative replica + water-filling rebalance on cloned state
+        let before_max = st.max_latency();
         let mut a2 = a.clone();
+        let mut st2 = st.clone();
         let moved = water_fill(
-            &mut a2, &lat, e_star, r_src, r_dst, model, hw, cfg.water_filling,
+            &mut a2,
+            &mut st2,
+            e_star,
+            r_src,
+            r_dst,
+            model,
+            hw,
+            cfg.water_filling,
         );
         if moved <= 0.0 {
             invalid.push((r_src, r_dst));
             continue;
         }
-        let lat2 = rank_latencies(&a2, model, hw);
-        let gain = lat.iter().cloned().fold(0.0, f64::max)
-            - lat2.iter().cloned().fold(0.0, f64::max);
+        let gain = before_max - st2.max_latency();
         if gain <= eps {
             break; // converged (Algorithm 1 line 12)
         }
@@ -156,14 +289,15 @@ pub fn plan(
             .expect("slot availability pre-checked");
         fetches[r_dst].push(e_star);
         a = a2;
-        lat = lat2;
+        st = st2;
     }
 
-    let est_after = lat.iter().cloned().fold(0.0, f64::max);
+    let est_after = st.max_latency();
     PlanOutcome {
         placement,
         assignment: a,
         fetches,
+        retained_replicas,
         iterations,
         est_before,
         est_after,
@@ -226,11 +360,12 @@ fn select_heavy_expert(
 /// Locality-aware water-filling (paper §4.3): tokens generated on `r_src`
 /// stay pinned; remote tokens are redirected to `r_dst` until `r_src`
 /// reaches the cluster average (or the pool empties). The naive ablation
-/// variant moves half the pool unconditionally.
+/// variant moves half the pool unconditionally. Updates the incremental
+/// latency state alongside the assignment.
 #[allow(clippy::too_many_arguments)]
 fn water_fill(
     a: &mut Assignment,
-    lat: &[f64],
+    st: &mut LatencyState,
     e_star: usize,
     r_src: usize,
     r_dst: usize,
@@ -244,6 +379,7 @@ fn water_fill(
         return 0.0;
     }
     let target_tokens = if water_filling {
+        let lat = st.latencies();
         let avg = lat.iter().sum::<f64>() / ep as f64;
         let excess = (lat[r_src] - avg).max(0.0);
         let marginal = marginal_time(a.tokens_on(e_star, r_src), model, hw);
@@ -269,6 +405,7 @@ fn water_fill(
         }
         let share = (have / pool * target_tokens).min(remaining);
         let moved = a.shift(e_star, rs, r_src, r_dst, share);
+        st.apply_shift(e_star, rs, r_src, r_dst, moved, model, hw);
         remaining -= moved;
         if remaining <= 1e-9 {
             break;
@@ -540,5 +677,67 @@ mod tests {
             wf.est_after,
             naive.est_after
         );
+    }
+
+    #[test]
+    fn incremental_state_matches_full_recompute() {
+        let (counts, base, model, hw) = setup(4096, 21);
+        let mut placement = base.clone();
+        placement.add_replica(0, 7).unwrap();
+        placement.add_replica(1, 6).unwrap();
+        let mut a = Assignment::locality_first_from_counts(&counts, &placement);
+        let mut st = LatencyState::from_assignment(&a, &model, &hw);
+        // a handful of arbitrary legal shifts, mirrored on the state
+        for (e, rs, from, to, x) in [
+            (0usize, 2usize, 0usize, 7usize, 5.0f64),
+            (0, 3, 0, 7, 11.0),
+            (1, 5, 0, 6, 7.0),
+            (0, 2, 7, 0, 2.0),
+        ] {
+            let moved = a.shift(e, rs, from, to, x);
+            st.apply_shift(e, rs, from, to, moved, &model, &hw);
+        }
+        let full = LatencyState::from_assignment(&a, &model, &hw).latencies();
+        let inc = st.latencies();
+        for (r, (f, i)) in full.iter().zip(&inc).enumerate() {
+            assert!((f - i).abs() < 1e-9, "rank {r}: full {f} vs incremental {i}");
+        }
+    }
+
+    #[test]
+    fn delta_plan_reuses_resident_replicas() {
+        let (counts, base, model, hw) = setup(6144, 23);
+        let cfg = ProbeConfig::default();
+        assert!(cfg.delta_plan);
+        // first plan from the empty base: everything is a fresh fetch
+        let first = plan(&counts, &base, &model, &hw, &wide_windows(), &cfg);
+        let first_fetches = first.total_fetches();
+        assert!(first_fetches > 0, "first plan fetched nothing");
+        assert_eq!(first.retained_replicas, 0);
+        // re-plan the SAME predicted counts against the resident
+        // placement: the hot replicas are already there — zero fetches
+        let second = plan(&counts, &first.placement, &model, &hw, &wide_windows(), &cfg);
+        assert!(second.retained_replicas > 0);
+        assert!(
+            second.total_fetches() < first_fetches,
+            "delta plan refetched: {} vs {}",
+            second.total_fetches(),
+            first_fetches
+        );
+        // and the balance quality does not regress
+        assert!(second.est_after <= first.est_after * 1.05);
+        second.placement.validate().unwrap();
+    }
+
+    #[test]
+    fn clear_mode_never_retains() {
+        let (counts, base, model, hw) = setup(4096, 25);
+        let mut cfg = ProbeConfig::default();
+        cfg.delta_plan = false;
+        let first = plan(&counts, &base, &model, &hw, &wide_windows(), &cfg);
+        let second = plan(&counts, &first.placement, &model, &hw, &wide_windows(), &cfg);
+        assert_eq!(second.retained_replicas, 0);
+        // clear-every-layer refetches its full replica set
+        assert_eq!(second.total_fetches(), second.placement.total_replicas());
     }
 }

@@ -1,12 +1,25 @@
 //! Lookahead predictors (paper §4.2) and fidelity metrics.
 //!
-//! Two implementations:
-//! * [`StatisticalPredictor`] — an accuracy-parameterized error process
+//! The control pipeline consumes predictors through the
+//! [`LookaheadPredictor`] trait: `observe` feeds ground-truth routing of
+//! executed layers (online updates), `forecast_counts` emits the
+//! per-(expert, source-rank) token counts for a layer `depth` hops ahead
+//! — the planner's only view of the future.
+//!
+//! Implementations:
+//! * [`TransitionPredictor`] — a causal, gate-initialized, online-updated
+//!   per-layer expert transition/co-activation model. Forecasts layer
+//!   `l+L` from layer `l`'s *observed* routing by propagating counts
+//!   through learned layer-to-layer transition matrices; never touches
+//!   future ground truth.
+//! * [`StatisticalPredictor`] — the accuracy-parameterized error process
 //!   used for paper-scale simulations, calibrated to Fig. 10 (≈0.90
-//!   distilled, ≈0.75 untrained prior). Per token-slot, the prediction
-//!   equals the ground truth with probability `accuracy`, otherwise a
-//!   popularity-biased wrong expert (errors cluster on plausible experts,
-//!   as a distilled router's do).
+//!   distilled, ≈0.75 untrained prior). It models "a real predictor with
+//!   accuracy p" by perturbing a stand-in of the target layer's routing
+//!   (supplied by the simulation harness via `feed_target_truth`, or the
+//!   previous step's observation of the same layer index for cross-step
+//!   targets). Per token-slot, the prediction equals the stand-in with
+//!   probability `accuracy`, otherwise a popularity-biased wrong expert.
 //! * `runtime::PjrtPredictor` — the real distilled MLP exported by
 //!   `python/compile/aot.py`, whose predictions arrive fused in the
 //!   decode-step artifact outputs (see [`crate::runtime`]).
@@ -48,12 +61,226 @@ pub fn fidelity(actual: &LayerRouting, predicted: &LayerRouting) -> PredFidelity
     }
 }
 
+/// Count-level fidelity: 1 − total-variation distance between the
+/// normalized per-expert count vectors. 1.0 = identical load shape;
+/// 0.0 = disjoint support. This is the planner-relevant metric — the
+/// planner consumes counts, not per-token assignments.
+pub fn count_fidelity(actual: &[f64], predicted: &[f64]) -> f64 {
+    assert_eq!(actual.len(), predicted.len());
+    let sa: f64 = actual.iter().sum();
+    let sp: f64 = predicted.iter().sum();
+    if sa <= 0.0 || sp <= 0.0 {
+        return 0.0;
+    }
+    let tv: f64 = actual
+        .iter()
+        .zip(predicted)
+        .map(|(&a, &p)| (a / sa - p / sp).abs())
+        .sum::<f64>()
+        * 0.5;
+    1.0 - tv
+}
+
+/// Flatten `[expert][source]` counts to per-expert totals.
+pub fn counts_total(by_source: &[Vec<f64>]) -> Vec<f64> {
+    by_source.iter().map(|v| v.iter().sum()).collect()
+}
+
+/// A lookahead predictor behind the control pipeline (paper §4.2).
+///
+/// The pipeline calls `observe` for every executed layer (ground truth,
+/// in execution order) and `forecast_counts` to plan layer
+/// `target_layer = (observed_layer + depth) % n_layers` — wrapping into
+/// the next decode step. `feed_target_truth` is a harness-only channel
+/// for accuracy-parameterized error-process predictors; causal
+/// predictors ignore it.
+pub trait LookaheadPredictor: std::fmt::Debug {
+    fn name(&self) -> &'static str;
+
+    /// Online update from the ground-truth routing of an executed layer.
+    fn observe(&mut self, layer: usize, actual: &LayerRouting);
+
+    /// Simulation-harness channel: the ground-truth routing of a FUTURE
+    /// layer of the current step, for predictors that model accuracy as
+    /// an error process on the truth. Causal predictors must ignore it.
+    fn feed_target_truth(&mut self, _layer: usize, _truth: &LayerRouting) {}
+
+    /// Forecast per-(expert, source-rank) token counts for
+    /// `target_layer`, `depth` layers after `observed` (= the routing of
+    /// `observed_layer`, the newest executed layer). Returns `None` when
+    /// the predictor has no basis yet (the pipeline then skips planning
+    /// and the target layer falls back to the static placement).
+    fn forecast_counts(
+        &mut self,
+        observed_layer: usize,
+        observed: &LayerRouting,
+        target_layer: usize,
+        depth: usize,
+        ep: usize,
+    ) -> Option<Vec<Vec<f64>>>;
+}
+
+/// Causal cross-layer predictor: per-layer expert transition model.
+///
+/// For each transition `l → (l+1) % n_layers` it keeps an EMA of the
+/// co-activation mass `T_l[e][e']` (token activated `e` at layer `l` and
+/// `e'` at the next layer). Forecasting layer `l+L` from layer `l`'s
+/// observed per-source counts propagates the count vector through the
+/// row-normalized transition matrices; rows with no mass yet fall back
+/// to the target layer's marginal (the gate-statistics prior the model
+/// is initialized with — uniform before any observation).
+#[derive(Debug, Clone)]
+pub struct TransitionPredictor {
+    pub n_layers: usize,
+    pub n_experts: usize,
+    /// EMA decay applied per observation of a layer pair.
+    pub decay: f64,
+    /// `trans[l][e * E + e']`: co-activation mass for `l → (l+1) % L`.
+    trans: Vec<Vec<f64>>,
+    /// Marginal expert mass per layer (gate prior; uniform at init).
+    marginal: Vec<Vec<f64>>,
+    /// Newest observed layer (index, routing) — the next pair's source.
+    prev: Option<(usize, LayerRouting)>,
+    /// Layer pairs observed (observability).
+    pub pairs_seen: usize,
+}
+
+impl TransitionPredictor {
+    pub fn new(n_layers: usize, n_experts: usize) -> TransitionPredictor {
+        assert!(n_layers > 0 && n_experts > 0);
+        TransitionPredictor {
+            n_layers,
+            n_experts,
+            decay: 0.95,
+            trans: vec![vec![0.0; n_experts * n_experts]; n_layers],
+            marginal: vec![vec![1.0; n_experts]; n_layers],
+            prev: None,
+            pairs_seen: 0,
+        }
+    }
+
+    fn update_pair(&mut self, l_src: usize, src: &LayerRouting, dst: &LayerRouting) {
+        if src.n_tokens != dst.n_tokens {
+            // batch size changed between steps; token slots cannot align
+            return;
+        }
+        // NOTE: for the cross-step wrap pair (last layer → layer 0) this
+        // assumes token slot t holds the same request in both steps. That
+        // holds during continuous decode; around retirement/admission the
+        // pairing is approximate — mispaired slots add domain-marginal
+        // noise that the EMA averages toward the fallback prior, so the
+        // wrap forecast degrades gracefully rather than diverging.
+        let e_n = self.n_experts;
+        let t = &mut self.trans[l_src];
+        for v in t.iter_mut() {
+            *v *= self.decay;
+        }
+        for tok in 0..src.n_tokens {
+            for &e in src.token_experts(tok) {
+                let row = e as usize * e_n;
+                for &e2 in dst.token_experts(tok) {
+                    t[row + e2 as usize] += 1.0;
+                }
+            }
+        }
+        self.pairs_seen += 1;
+    }
+
+    /// Propagate one hop: `out[e'] = Σ_e in[e] · T[e][e']` with
+    /// row-normalized T (mass-preserving), marginal fallback for rows
+    /// never observed.
+    fn propagate(&self, l_src: usize, cur: &[Vec<f64>], ep: usize) -> Vec<Vec<f64>> {
+        let e_n = self.n_experts;
+        let next_l = (l_src + 1) % self.n_layers;
+        let t = &self.trans[l_src];
+        let m = &self.marginal[next_l];
+        let m_sum: f64 = m.iter().sum();
+        let mut out = vec![vec![0.0; ep]; e_n];
+        for e in 0..e_n {
+            let mass: f64 = cur[e].iter().sum();
+            if mass <= 0.0 {
+                continue;
+            }
+            let row = &t[e * e_n..(e + 1) * e_n];
+            let row_sum: f64 = row.iter().sum();
+            if row_sum > 1e-12 {
+                for (e2, &w) in row.iter().enumerate() {
+                    if w > 0.0 {
+                        let share = w / row_sum;
+                        for r in 0..ep {
+                            out[e2][r] += cur[e][r] * share;
+                        }
+                    }
+                }
+            } else if m_sum > 0.0 {
+                for (e2, &w) in m.iter().enumerate() {
+                    let share = w / m_sum;
+                    for r in 0..ep {
+                        out[e2][r] += cur[e][r] * share;
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+impl LookaheadPredictor for TransitionPredictor {
+    fn name(&self) -> &'static str {
+        "transition"
+    }
+
+    fn observe(&mut self, layer: usize, actual: &LayerRouting) {
+        let layer = layer % self.n_layers;
+        // marginal EMA (the gate prior sharpens online)
+        let m = &mut self.marginal[layer];
+        for v in m.iter_mut() {
+            *v *= self.decay;
+        }
+        for &e in &actual.experts {
+            m[e as usize] += 1.0;
+        }
+        if let Some((pl, pr)) = self.prev.take() {
+            if (pl + 1) % self.n_layers == layer {
+                self.update_pair(pl, &pr, actual);
+            }
+        }
+        self.prev = Some((layer, actual.clone()));
+    }
+
+    fn forecast_counts(
+        &mut self,
+        observed_layer: usize,
+        observed: &LayerRouting,
+        target_layer: usize,
+        depth: usize,
+        ep: usize,
+    ) -> Option<Vec<Vec<f64>>> {
+        debug_assert_eq!((observed_layer + depth) % self.n_layers, target_layer);
+        let mut cur = observed.expert_counts_by_source_f64(ep);
+        let mut l = observed_layer % self.n_layers;
+        for _ in 0..depth {
+            cur = self.propagate(l, &cur, ep);
+            l = (l + 1) % self.n_layers;
+        }
+        Some(cur)
+    }
+}
+
 /// Accuracy-parameterized predictor for simulator-scale models.
 #[derive(Debug, Clone)]
 pub struct StatisticalPredictor {
     /// Probability a token-slot prediction matches the ground truth.
     pub accuracy: f64,
     rng: Rng,
+    /// Per-layer stand-in routing the error process perturbs: the
+    /// harness-fed target truth (same-step lookahead) or the most recent
+    /// observation of that layer index (cross-step wrap, stale by one
+    /// step of drift).
+    last_seen: Vec<Option<LayerRouting>>,
+    /// `fed[l]`: `last_seen[l]` holds this step's harness-fed truth, so
+    /// the upcoming `observe(l)` (same data) can skip its clone.
+    fed: Vec<bool>,
 }
 
 impl StatisticalPredictor {
@@ -62,6 +289,8 @@ impl StatisticalPredictor {
         StatisticalPredictor {
             accuracy,
             rng: Rng::new(seed),
+            last_seen: Vec::new(),
+            fed: Vec::new(),
         }
     }
 
@@ -71,6 +300,13 @@ impl StatisticalPredictor {
     }
     pub fn untrained(seed: u64) -> StatisticalPredictor {
         StatisticalPredictor::new(0.75, seed)
+    }
+
+    fn ensure_layer(&mut self, layer: usize) {
+        if self.last_seen.len() <= layer {
+            self.last_seen.resize(layer + 1, None);
+            self.fed.resize(layer + 1, false);
+        }
     }
 
     /// Produce the lookahead prediction for one layer: per-token expert
@@ -127,14 +363,58 @@ impl StatisticalPredictor {
     }
 
     /// Predicted per-(expert, source-rank) counts — the planner's input.
-    pub fn predict_counts(&mut self, actual: &LayerRouting, ep: usize) -> (LayerRouting, Vec<Vec<f64>>) {
+    pub fn predict_counts(
+        &mut self,
+        actual: &LayerRouting,
+        ep: usize,
+    ) -> (LayerRouting, Vec<Vec<f64>>) {
         let predicted = self.predict(actual);
-        let counts = predicted
-            .expert_counts_by_source(ep)
-            .into_iter()
-            .map(|v| v.into_iter().map(|c| c as f64).collect())
-            .collect();
+        let counts = predicted.expert_counts_by_source_f64(ep);
         (predicted, counts)
+    }
+}
+
+impl LookaheadPredictor for StatisticalPredictor {
+    fn name(&self) -> &'static str {
+        "statistical"
+    }
+
+    fn observe(&mut self, layer: usize, actual: &LayerRouting) {
+        self.ensure_layer(layer);
+        if self.fed[layer] {
+            // the harness already fed this step's truth for this layer
+            // (identical content) — skip the redundant hot-path clone
+            self.fed[layer] = false;
+            return;
+        }
+        self.last_seen[layer] = Some(actual.clone());
+    }
+
+    fn feed_target_truth(&mut self, layer: usize, truth: &LayerRouting) {
+        self.ensure_layer(layer);
+        self.last_seen[layer] = Some(truth.clone());
+        self.fed[layer] = true;
+    }
+
+    fn forecast_counts(
+        &mut self,
+        _observed_layer: usize,
+        _observed: &LayerRouting,
+        target_layer: usize,
+        depth: usize,
+        ep: usize,
+    ) -> Option<Vec<Vec<f64>>> {
+        // take/restore instead of cloning the stored routing (hot path)
+        let base = self.last_seen.get_mut(target_layer)?.take()?;
+        // per-hop error compounds: a depth-L forecast runs at the
+        // configured accuracy to the power L (depth 1 = the calibrated
+        // Fig. 10 operating point)
+        let nominal = self.accuracy;
+        self.accuracy = nominal.powi(depth.max(1) as i32);
+        let (_, counts) = self.predict_counts(&base, ep);
+        self.accuracy = nominal;
+        self.last_seen[target_layer] = Some(base);
+        Some(counts)
     }
 }
 
@@ -214,5 +494,114 @@ mod tests {
         let b = LayerRouting::new(a.n_tokens, a.top_k, a.n_experts, shifted);
         let f = fidelity(&a, &b);
         assert!(f.top_k_accuracy < 0.35);
+    }
+
+    #[test]
+    fn count_fidelity_bounds() {
+        let a = vec![10.0, 20.0, 30.0];
+        assert!((count_fidelity(&a, &a) - 1.0).abs() < 1e-12);
+        let disjoint = vec![0.0, 0.0, 60.0];
+        let f = count_fidelity(&vec![60.0, 0.0, 0.0], &disjoint);
+        assert!(f.abs() < 1e-12);
+        assert_eq!(count_fidelity(&[0.0; 3], &a), 0.0);
+    }
+
+    #[test]
+    fn statistical_trait_forecasts_from_fed_truth() {
+        let a = actual(512);
+        let mut p = StatisticalPredictor::new(1.0, 9);
+        // no basis yet → no forecast
+        assert!(p.forecast_counts(0, &a, 1, 1, 8).is_none());
+        let target = actual(512);
+        p.feed_target_truth(1, &target);
+        let counts = p.forecast_counts(0, &a, 1, 1, 8).unwrap();
+        // oracle accuracy: forecast counts equal the target's true counts
+        let want: Vec<Vec<f64>> = target
+            .expert_counts_by_source(8)
+            .into_iter()
+            .map(|v| v.into_iter().map(|c| c as f64).collect())
+            .collect();
+        assert_eq!(counts, want);
+    }
+
+    #[test]
+    fn transition_predictor_mass_preserving() {
+        let mut rm = RoutingModel::calibrated(4, 64, 4, 2, 17);
+        let mut tp = TransitionPredictor::new(4, 64);
+        let step = rm.route_step(&vec![0u16; 1024]);
+        for (l, lr) in step.layers.iter().enumerate() {
+            tp.observe(l, lr);
+        }
+        let f = tp
+            .forecast_counts(0, &step.layers[0], 2, 2, 8)
+            .expect("transition predictor always forecasts");
+        let total: f64 = f.iter().flat_map(|v| v.iter()).sum();
+        assert!((total - (1024 * 4) as f64).abs() < 1e-6, "mass {total}");
+    }
+
+    #[test]
+    fn transition_predictor_learns_single_domain_hotspots() {
+        // stationary single-domain traffic: after warm-up, the depth-1
+        // forecast of a layer must match its realized load shape far
+        // better than the uniform gate prior (the Fig. 10 story at the
+        // count granularity the planner consumes).
+        let mut rm = RoutingModel::calibrated(3, 64, 4, 2, 23);
+        rm.drift = 0.0;
+        let mut tp = TransitionPredictor::new(3, 64);
+        let mut cold = TransitionPredictor::new(3, 64);
+        for _ in 0..20 {
+            let step = rm.route_step(&vec![0u16; 2048]);
+            for (l, lr) in step.layers.iter().enumerate() {
+                tp.observe(l, lr);
+            }
+        }
+        let step = rm.route_step(&vec![0u16; 2048]);
+        let mut warm_f = 0.0;
+        let mut cold_f = 0.0;
+        for l in 0..2 {
+            let actual: Vec<f64> = step.layers[l + 1]
+                .expert_counts()
+                .into_iter()
+                .map(|c| c as f64)
+                .collect();
+            let warm = tp
+                .forecast_counts(l, &step.layers[l], l + 1, 1, 8)
+                .unwrap();
+            let prior = cold
+                .forecast_counts(l, &step.layers[l], l + 1, 1, 8)
+                .unwrap();
+            warm_f += count_fidelity(&actual, &counts_total(&warm));
+            cold_f += count_fidelity(&actual, &counts_total(&prior));
+        }
+        warm_f /= 2.0;
+        cold_f /= 2.0;
+        assert!(
+            warm_f > 0.6,
+            "trained transition fidelity too low: {warm_f}"
+        );
+        assert!(
+            warm_f > cold_f + 0.1,
+            "training did not help: {warm_f} vs prior {cold_f}"
+        );
+    }
+
+    #[test]
+    fn transition_wraps_across_steps() {
+        // the last layer's transition targets layer 0 of the NEXT step
+        let mut rm = RoutingModel::calibrated(2, 32, 2, 2, 31);
+        rm.drift = 0.0;
+        let mut tp = TransitionPredictor::new(2, 32);
+        for _ in 0..10 {
+            let step = rm.route_step(&vec![0u16; 512]);
+            for (l, lr) in step.layers.iter().enumerate() {
+                tp.observe(l, lr);
+            }
+        }
+        // pairs: (0→1) and the wrap (1→0) both observed
+        assert!(tp.pairs_seen >= 15, "pairs {}", tp.pairs_seen);
+        let step = rm.route_step(&vec![0u16; 512]);
+        let f = tp.forecast_counts(1, &step.layers[1], 0, 1, 4).unwrap();
+        let total: f64 = f.iter().flat_map(|v| v.iter()).sum();
+        assert!((total - (512 * 2) as f64).abs() < 1e-6);
     }
 }

@@ -56,6 +56,15 @@ impl LayerRouting {
         }
         counts
     }
+
+    /// [`Self::expert_counts_by_source`] as f64 — the planner's and the
+    /// lookahead predictors' input format.
+    pub fn expert_counts_by_source_f64(&self, ep: usize) -> Vec<Vec<f64>> {
+        self.expert_counts_by_source(ep)
+            .into_iter()
+            .map(|v| v.into_iter().map(f64::from).collect())
+            .collect()
+    }
 }
 
 /// Rank owning token `t` under block distribution.

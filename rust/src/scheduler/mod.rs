@@ -4,10 +4,18 @@
 //! Main track:  Attention → All-to-All Dispatch → MoE compute → (sync
 //! wait) → All-to-All Combine.  Aux track: Predict ∥ Dispatch, Plan ∥
 //! Dispatch + MoE, Prefetch ∥ MoE compute — suspended during Combine —
-//! resuming into the next layer's Attention. Overhead not hidden inside
-//! that window is `exposed` and extends the critical path; with
-//! split-phase disabled (ablation) leftover prefetch bytes contend with
-//! Combine and inflate it instead.
+//! resuming into the next layer's Attention.
+//!
+//! Depth-L lookahead (ISSUE 2): a plan created during layer `l` targets
+//! layer `l+L`, so its expert transfer may amortize over the L
+//! intervening hiding windows. The [`PrefetchQueue`] carries the pending
+//! transfer seconds across layer (and step) boundaries; each item has a
+//! deadline — the window count until its target layer executes. An item
+//! reaching its target layer may still finish during that layer's
+//! Attention (the split-phase resume window); whatever remains then is
+//! `exposed` and extends the critical path. With split-phase disabled
+//! (ablation) end-of-layer leftovers contend with Combine and inflate it
+//! instead.
 
 use crate::metrics::{LayerTimeline, Phase, PhaseSpan};
 use crate::model::MoeModel;
@@ -23,10 +31,11 @@ pub struct LayerSchedule {
     pub dispatch: CommVolumes,
     /// Attention seconds for this layer (balanced across DP ranks).
     pub attn_time: f64,
-    /// Attention seconds of the *next* layer (tail of the hiding window).
-    pub next_attn_time: f64,
-    /// Expert prefetch slots per rank planned for the next layer.
+    /// Expert prefetch slots per rank ENQUEUED during this layer — the
+    /// fetches of the plan created here for layer `+prefetch_lookahead`.
     pub prefetch_slots: Vec<usize>,
+    /// Hiding windows until the enqueued transfer's target layer runs.
+    pub prefetch_lookahead: usize,
     /// Aux-track control costs (0 for baselines).
     pub predict_time: f64,
     pub plan_time: f64,
@@ -41,9 +50,47 @@ pub struct LayerSchedule {
     pub pre_dispatch_fraction: f64,
 }
 
-/// Build the dual-track timeline for one MoE layer.
+/// One pending expert transfer moving through the hiding windows.
+#[derive(Debug, Clone)]
+pub struct PrefetchItem {
+    /// Transfer seconds still to transmit.
+    pub remaining: f64,
+    /// Hiding windows (layers) left before the target layer executes;
+    /// 0 = the target layer is the one being scheduled now.
+    pub due_in: usize,
+}
+
+/// Pending prefetch transfers carried across layers and steps
+/// (continuous lookahead pipelining).
+#[derive(Debug, Clone, Default)]
+pub struct PrefetchQueue {
+    items: Vec<PrefetchItem>,
+}
+
+impl PrefetchQueue {
+    pub fn new() -> PrefetchQueue {
+        PrefetchQueue::default()
+    }
+
+    /// Total transfer seconds still queued.
+    pub fn pending(&self) -> f64 {
+        self.items.iter().map(|i| i.remaining).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+}
+
+/// Build the dual-track timeline for one MoE layer, draining `queue`
+/// through this layer's hiding window.
 pub fn schedule_layer(
     s: &LayerSchedule,
+    queue: &mut PrefetchQueue,
     model: &MoeModel,
     hw: &HardwareProfile,
 ) -> LayerTimeline {
@@ -67,27 +114,97 @@ pub fn schedule_layer(
     };
     let mut combine_dur = perfmodel::alltoall_time(&combine_vol, hw);
 
-    // ---- prefetch accounting (split-phase transmission) ----
-    let max_slots = s.prefetch_slots.iter().copied().max().unwrap_or(0);
-    let t_trans = perfmodel::transfer_time(max_slots, model, hw);
-    let compute_max = s.compute.iter().cloned().fold(0.0, f64::max);
-    // phase 1 window: the planner finishes during dispatch+compute; the
-    // transfer may start once the plan lands, overlapping MoE compute.
+    // ---- prefetch accounting (split-phase, cross-layer queue) ----
     let plan_done = s.predict_time + s.plan_time;
-    let phase1_window = (dispatch_dur + compute_max - plan_done).max(0.0);
-    let phase1_sent = t_trans.min(phase1_window);
-    let leftover = t_trans - phase1_sent;
+    let compute_max = s.compute.iter().cloned().fold(0.0, f64::max);
     let mut exposed = 0.0;
-    if leftover > 0.0 {
-        if s.split_phase {
-            // suspend during combine; resume into next attention
-            let phase2 = leftover.min(s.next_attn_time);
-            exposed = leftover - phase2;
-        } else {
-            // contend with combine for fabric bandwidth: serialized share
-            combine_dur += leftover;
+
+    // most urgent first
+    queue.items.sort_by_key(|i| i.due_in);
+
+    // Phase A — this layer's Attention: the split-phase resume window.
+    // Items whose target layer is THIS one must finish here; what they
+    // miss is exposed (the expert is needed at dispatch time). Backlog
+    // items may also stream. Attention-resume transmission IS the
+    // split-phase mechanism, so the ablation without it gets no
+    // attention window at all.
+    let mut attn_budget = if s.split_phase { s.attn_time } else { 0.0 };
+    let mut attn_sent = 0.0;
+    for item in queue.items.iter_mut() {
+        let sent = item.remaining.min(attn_budget);
+        item.remaining -= sent;
+        attn_budget -= sent;
+        attn_sent += sent;
+        if item.due_in == 0 && item.remaining > 0.0 {
+            exposed += item.remaining;
+            item.remaining = 0.0;
         }
     }
+    queue.items.retain(|i| i.remaining > 1e-15);
+
+    // Phase B — Dispatch + MoE compute: backlog transmits from the start
+    // of Dispatch; the transfer enqueued THIS layer can only start once
+    // its plan lands (predict + plan on the aux track).
+    let max_slots = s.prefetch_slots.iter().copied().max().unwrap_or(0);
+    let t_new = perfmodel::transfer_time(max_slots, model, hw);
+    let cap = dispatch_dur + compute_max;
+    let mut used = 0.0;
+    let mut phase_b_sent = 0.0;
+    for item in queue.items.iter_mut() {
+        let sent = item.remaining.min((cap - used).max(0.0));
+        item.remaining -= sent;
+        used += sent;
+        phase_b_sent += sent;
+    }
+    let mut new_item = if t_new > 0.0 {
+        let mut it = PrefetchItem {
+            remaining: t_new,
+            due_in: s.prefetch_lookahead.max(1),
+        };
+        let start = used.max(plan_done);
+        let sent = it.remaining.min((cap - start).max(0.0));
+        it.remaining -= sent;
+        used = start + sent;
+        phase_b_sent += sent;
+        Some(it)
+    } else {
+        None
+    };
+
+    // Phase C — Combine: split-phase suspends transmission. Without it
+    // (ablation) there is no resume window at the target layer, so any
+    // transfer due before the NEXT layer must finish during Combine,
+    // contending with (and inflating) it. Items with farther deadlines
+    // keep draining in later windows — depth-L amortization survives
+    // the ablation.
+    if !s.split_phase {
+        let mut leftover = 0.0;
+        for item in queue.items.iter_mut() {
+            if item.due_in <= 1 {
+                leftover += item.remaining;
+                item.remaining = 0.0;
+            }
+        }
+        if let Some(it) = new_item.as_mut() {
+            if it.due_in <= 1 {
+                leftover += it.remaining;
+                it.remaining = 0.0;
+            }
+        }
+        combine_dur += leftover;
+    }
+
+    // survivors carry to the next window, one deadline closer
+    queue.items.retain(|i| i.remaining > 1e-15);
+    if let Some(it) = new_item {
+        if it.remaining > 1e-15 {
+            queue.items.push(it);
+        }
+    }
+    for item in queue.items.iter_mut() {
+        item.due_in = item.due_in.saturating_sub(1);
+    }
+
     exposed += s.exposed_transfer;
 
     // ---- main-track spans ----
@@ -140,6 +257,14 @@ pub fn schedule_layer(
 
     // ---- aux-track spans (leader view) ----
     let mut aux = Vec::new();
+    if attn_sent > 0.0 {
+        // resumed / backlog transmission during Attention
+        aux.push(PhaseSpan {
+            phase: Phase::Prefetch,
+            start: 0.0,
+            end: attn_sent,
+        });
+    }
     if s.predict_time > 0.0 {
         aux.push(PhaseSpan {
             phase: Phase::Predict,
@@ -154,22 +279,15 @@ pub fn schedule_layer(
             end: attn_end + plan_done,
         });
     }
-    if t_trans > 0.0 {
-        let p1_start = attn_end + plan_done;
+    if phase_b_sent > 0.0 {
+        // rendered from the start of the transmissible window
         aux.push(PhaseSpan {
             phase: Phase::Prefetch,
-            start: p1_start,
-            end: p1_start + phase1_sent,
+            start: attn_end,
+            end: attn_end + phase_b_sent,
         });
-        if leftover > 0.0 && s.split_phase {
-            // resumed segment rendered after combine
-            let resume = comp_end_max + combine_dur;
-            aux.push(PhaseSpan {
-                phase: Phase::Prefetch,
-                start: resume,
-                end: resume + leftover,
-            });
-        }
+    }
+    if t_new > 0.0 || phase_b_sent > 0.0 {
         aux.push(PhaseSpan {
             phase: Phase::Update,
             start: comp_end_max + combine_dur,
@@ -235,26 +353,14 @@ mod tests {
                 v_out: vec![1e6; ep],
             },
             attn_time: 100e-6,
-            next_attn_time: 100e-6,
             prefetch_slots: slots,
+            prefetch_lookahead: 1,
             predict_time: 5e-6,
             plan_time: 20e-6,
             exposed_transfer: 0.0,
             split_phase: split,
             pre_dispatch_fraction: 0.0,
         }
-    }
-
-    #[test]
-    fn pre_dispatch_shrinks_dispatch_phase() {
-        let mut s = mk_sched(vec![1e-3; 8], vec![0; 8], true);
-        let base = schedule_layer(&s, &model(), &hw());
-        s.pre_dispatch_fraction = 0.9;
-        let pre = schedule_layer(&s, &model(), &hw());
-        assert!(
-            pre.mean_phase_dur(Phase::Dispatch) < base.mean_phase_dur(Phase::Dispatch),
-            "pre-dispatch did not shrink dispatch"
-        );
     }
 
     fn hw() -> HardwareProfile {
@@ -264,9 +370,26 @@ mod tests {
         MoeModel::gpt_oss_120b()
     }
 
+    fn one(s: &LayerSchedule) -> LayerTimeline {
+        let mut q = PrefetchQueue::new();
+        schedule_layer(s, &mut q, &model(), &hw())
+    }
+
+    #[test]
+    fn pre_dispatch_shrinks_dispatch_phase() {
+        let mut s = mk_sched(vec![1e-3; 8], vec![0; 8], true);
+        let base = one(&s);
+        s.pre_dispatch_fraction = 0.9;
+        let pre = one(&s);
+        assert!(
+            pre.mean_phase_dur(Phase::Dispatch) < base.mean_phase_dur(Phase::Dispatch),
+            "pre-dispatch did not shrink dispatch"
+        );
+    }
+
     #[test]
     fn straggler_creates_sync_wait() {
-        let tl = schedule_layer(&mk_sched(vec![1e-3, 0.2e-3], vec![0, 0], true), &model(), &hw());
+        let tl = one(&mk_sched(vec![1e-3, 0.2e-3], vec![0, 0], true));
         assert!(tl.phase_dur(1, Phase::SyncWait) > 0.5e-3);
         assert!(tl.phase_dur(0, Phase::SyncWait) < tl.phase_dur(1, Phase::SyncWait));
     }
@@ -274,29 +397,78 @@ mod tests {
     #[test]
     fn small_prefetch_fully_hidden() {
         // 1 expert ≈ 47.5MB / 450GB/s ≈ 105µs < compute window (1ms)
-        let tl = schedule_layer(&mk_sched(vec![1e-3; 8], vec![1; 8], true), &model(), &hw());
+        let mut q = PrefetchQueue::new();
+        let tl = schedule_layer(
+            &mk_sched(vec![1e-3; 8], vec![1; 8], true),
+            &mut q,
+            &model(),
+            &hw(),
+        );
         assert_eq!(tl.exposed_overhead, 0.0);
+        assert!(q.is_empty(), "transfer should finish inside the window");
         assert!(tl.aux.iter().any(|s| s.phase == Phase::Prefetch));
     }
 
     #[test]
-    fn oversized_prefetch_exposes_overhead() {
-        // tiny compute window, many slots → can't hide everything
+    fn oversized_prefetch_exposes_at_target_layer() {
+        // tiny compute window, many slots → the transfer cannot finish
+        // before its target layer (the next one) and is exposed THERE
         let mut s = mk_sched(vec![10e-6; 8], vec![3; 8], true);
         s.attn_time = 10e-6;
-        s.next_attn_time = 10e-6;
-        let tl = schedule_layer(&s, &model(), &hw());
-        assert!(tl.exposed_overhead > 0.0);
+        let mut q = PrefetchQueue::new();
+        let first = schedule_layer(&s, &mut q, &model(), &hw());
+        assert_eq!(first.exposed_overhead, 0.0, "no deadline yet");
+        assert!(!q.is_empty(), "leftover must carry to the next window");
+        let mut s2 = mk_sched(vec![10e-6; 8], vec![0; 8], true);
+        s2.attn_time = 10e-6;
+        let second = schedule_layer(&s2, &mut q, &model(), &hw());
+        assert!(second.exposed_overhead > 0.0, "missed deadline not exposed");
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn deeper_lookahead_never_increases_exposure() {
+        // identical transfer demand under tight windows: more hiding
+        // windows before the deadline can only reduce exposure
+        let layers = 8usize;
+        let mut exposures = Vec::new();
+        for lookahead in [1usize, 2, 4] {
+            let mut q = PrefetchQueue::new();
+            let mut total = 0.0;
+            for l in 0..layers {
+                let slots = if l % 2 == 0 { vec![3; 8] } else { vec![0; 8] };
+                let mut s = mk_sched(vec![20e-6; 8], slots, true);
+                s.attn_time = 10e-6;
+                s.prefetch_lookahead = lookahead;
+                let tl = schedule_layer(&s, &mut q, &model(), &hw());
+                total += tl.exposed_overhead;
+            }
+            // drain the queue so deeper depths can't defer exposure past
+            // the measurement horizon (deadlines beyond `layers`)
+            let mut guard = 0;
+            while !q.is_empty() && guard < 16 {
+                let mut s = mk_sched(vec![20e-6; 8], vec![0; 8], true);
+                s.attn_time = 10e-6;
+                total += schedule_layer(&s, &mut q, &model(), &hw()).exposed_overhead;
+                guard += 1;
+            }
+            assert!(q.is_empty(), "queue failed to drain");
+            exposures.push(total);
+        }
+        assert!(
+            exposures[1] <= exposures[0] + 1e-12 && exposures[2] <= exposures[1] + 1e-12,
+            "exposure increased with depth: {exposures:?}"
+        );
+        assert!(exposures[0] > 0.0, "test not binding: no exposure at L=1");
     }
 
     #[test]
     fn no_split_phase_inflates_combine() {
         let mut s = mk_sched(vec![50e-6; 8], vec![3; 8], true);
         s.attn_time = 10e-6;
-        s.next_attn_time = 10e-6;
-        let with_split = schedule_layer(&s, &model(), &hw());
+        let with_split = one(&s);
         s.split_phase = false;
-        let without = schedule_layer(&s, &model(), &hw());
+        let without = one(&s);
         let combine_with = with_split.mean_phase_dur(Phase::Combine);
         let combine_without = without.mean_phase_dur(Phase::Combine);
         assert!(
@@ -307,10 +479,33 @@ mod tests {
 
     #[test]
     fn aux_track_hidden_when_window_ample() {
-        let tl = schedule_layer(&mk_sched(vec![2e-3; 8], vec![2; 8], true), &model(), &hw());
+        let tl = one(&mk_sched(vec![2e-3; 8], vec![2; 8], true));
         // makespan must equal the main-track phases only
         let main: f64 = tl.ranks[0].iter().map(|s| s.dur()).sum();
         assert!((tl.makespan() - main).abs() < 1e-9);
+    }
+
+    #[test]
+    fn queue_carries_across_layers_and_drains() {
+        // a 3-slot transfer with a 3-window deadline drains over several
+        // small windows without ever being exposed
+        let mut q = PrefetchQueue::new();
+        let t_total = perfmodel::transfer_time(3, &model(), &hw());
+        let mut s = mk_sched(vec![100e-6; 8], vec![3; 8], true);
+        s.attn_time = 20e-6;
+        s.prefetch_lookahead = 3;
+        let mut exposed = 0.0;
+        let tl = schedule_layer(&s, &mut q, &model(), &hw());
+        exposed += tl.exposed_overhead;
+        let after_first = q.pending();
+        assert!(after_first > 0.0 && after_first < t_total);
+        for _ in 0..3 {
+            let mut s2 = mk_sched(vec![100e-6; 8], vec![0; 8], true);
+            s2.attn_time = 20e-6;
+            exposed += schedule_layer(&s2, &mut q, &model(), &hw()).exposed_overhead;
+        }
+        assert!(q.is_empty(), "queue did not drain: {}", q.pending());
+        assert_eq!(exposed, 0.0, "amortized transfer must stay hidden");
     }
 
     #[test]

@@ -6,13 +6,21 @@
 //! (DESIGN.md): balancers plug in as [`LayerDecision`] producers and the
 //! simulator measures exactly what the paper measures — layer makespans,
 //! compute skew, combine inflation, exposed transfer overhead.
+//!
+//! Each decision carries the aux-track work that happens DURING its
+//! layer (predict + plan for layer `l + lookahead`, plus the enqueued
+//! expert transfer); the simulator drains those transfers through a
+//! [`PrefetchQueue`] that persists across layers AND steps, so a depth-L
+//! plan's transfer amortizes over L hiding windows and step-boundary
+//! fetches are charged to the windows where they actually transmit (the
+//! old `(l+1) % n_layers` wrap is gone).
 
 use crate::metrics::{LayerTimeline, Phase};
 use crate::model::MoeModel;
 use crate::perfmodel::{self, Assignment, DispatchPlan};
 use crate::placement::Placement;
 use crate::routing::{LayerRouting, StepRouting};
-use crate::scheduler::{self, LayerSchedule};
+use crate::scheduler::{self, LayerSchedule, PrefetchQueue};
 use crate::topology::Cluster;
 use crate::util::stats::imbalance_ratio;
 
@@ -23,8 +31,14 @@ pub struct LayerDecision {
     /// Token assignment for the ACTUAL routing (dispatch follows the
     /// ground-truth router; only placement was decided ahead of time).
     pub assignment: Assignment,
-    /// Expert prefetch slots per rank (|Δ_r^in| planned this layer).
+    /// Expert prefetch slots per rank ENQUEUED during this layer — the
+    /// new fetches of the plan created here for layer
+    /// `l + prefetch_lookahead`.
     pub prefetch_slots: Vec<usize>,
+    /// Hiding windows between the enqueue and the target layer.
+    pub prefetch_lookahead: usize,
+    /// Aux-track control costs spent during this layer (for the plan
+    /// targeting `l + prefetch_lookahead`).
     pub predict_time: f64,
     pub plan_time: f64,
     /// Reactive transfer charged on the critical path (EPLB).
@@ -43,11 +57,17 @@ impl LayerDecision {
             placement,
             assignment,
             prefetch_slots: vec![0; ep],
+            prefetch_lookahead: 0,
             predict_time: 0.0,
             plan_time: 0.0,
             exposed_transfer: 0.0,
             pre_dispatch_fraction: 0.0,
         }
+    }
+
+    /// Total expert fetches enqueued by this decision.
+    pub fn total_prefetch_slots(&self) -> usize {
+        self.prefetch_slots.iter().sum()
     }
 }
 
@@ -63,6 +83,9 @@ pub struct StepOutcome {
     pub comp_skew_per_layer: Vec<f64>,
     /// Total tokens processed this step.
     pub tokens: usize,
+    /// Expert fetches enqueued across all layers of this step
+    /// (delta-planning observability; clear-mode refetches everything).
+    pub prefetch_slots_total: usize,
 }
 
 impl StepOutcome {
@@ -71,6 +94,10 @@ impl StepOutcome {
     }
     pub fn mean_comp_skew(&self) -> f64 {
         crate::util::stats::mean(&self.comp_skew_per_layer)
+    }
+    /// Total exposed (non-hidden) transfer overhead this step.
+    pub fn total_exposed(&self) -> f64 {
+        self.timelines.iter().map(|t| t.exposed_overhead).sum()
     }
 }
 
@@ -83,6 +110,9 @@ pub struct ClusterSim {
     /// Effective KV rows read per query token (post-GQA/tiling); see
     /// [`crate::scheduler::attention_time`].
     pub mean_ctx: usize,
+    /// In-flight prefetch transfers, carried across layers and steps
+    /// (continuous lookahead pipelining).
+    pub prefetch_queue: PrefetchQueue,
 }
 
 impl ClusterSim {
@@ -92,13 +122,15 @@ impl ClusterSim {
             cluster,
             split_phase: true,
             mean_ctx: 64,
+            prefetch_queue: PrefetchQueue::new(),
         }
     }
 
-    /// Simulate one step. `decisions[l]` drives layer `l`; the prefetch
-    /// planned by layer `l+1`'s decision transmits inside layer `l`'s
-    /// window (continuous lookahead pipelining).
-    pub fn run_step(&self, routing: &StepRouting, decisions: &[LayerDecision]) -> StepOutcome {
+    /// Simulate one step. `decisions[l]` drives layer `l`; the transfer
+    /// a decision enqueues drains through the following
+    /// `prefetch_lookahead` hiding windows (possibly crossing into the
+    /// next step's windows via the persistent queue).
+    pub fn run_step(&mut self, routing: &StepRouting, decisions: &[LayerDecision]) -> StepOutcome {
         let n_layers = routing.layers.len();
         assert_eq!(decisions.len(), n_layers);
         let ep = self.cluster.ep;
@@ -111,14 +143,11 @@ impl ClusterSim {
         let mut ir_per_layer = Vec::with_capacity(n_layers);
         let mut comp_skew = Vec::with_capacity(n_layers);
         let mut latency = 0.0;
+        let mut prefetch_slots_total = 0usize;
 
         for l in 0..n_layers {
             let lr = &routing.layers[l];
             let d = &decisions[l];
-            // prefetch transmitted in this layer's window belongs to the
-            // NEXT layer's plan (wraps to 0 for the last layer: the next
-            // step's first layer).
-            let next = &decisions[(l + 1) % n_layers];
 
             let loads = d.assignment.rank_expert_loads();
             let compute = perfmodel::rank_compute_times(&loads, &self.model, hw);
@@ -129,19 +158,18 @@ impl ClusterSim {
                 compute: compute.clone(),
                 dispatch,
                 attn_time: attn,
-                next_attn_time: attn,
-                prefetch_slots: next.prefetch_slots.clone(),
-                predict_time: next.predict_time,
-                plan_time: next.plan_time,
+                prefetch_slots: d.prefetch_slots.clone(),
+                prefetch_lookahead: d.prefetch_lookahead,
+                predict_time: d.predict_time,
+                plan_time: d.plan_time,
                 exposed_transfer: d.exposed_transfer,
                 split_phase: self.split_phase,
                 pre_dispatch_fraction: d.pre_dispatch_fraction,
             };
-            let tl = scheduler::schedule_layer(&sched, &self.model, hw);
+            let tl = scheduler::schedule_layer(&sched, &mut self.prefetch_queue, &self.model, hw);
+            prefetch_slots_total += d.total_prefetch_slots();
 
-            let rank_tokens: Vec<f64> = (0..ep)
-                .map(|r| loads[r].iter().sum::<f64>())
-                .collect();
+            let rank_tokens: Vec<f64> = (0..ep).map(|r| loads[r].iter().sum::<f64>()).collect();
             ir_per_layer.push(imbalance_ratio(&rank_tokens));
             comp_skew.push(imbalance_ratio(&compute));
             latency += tl.makespan();
@@ -154,6 +182,7 @@ impl ClusterSim {
             ir_per_layer,
             comp_skew_per_layer: comp_skew,
             tokens,
+            prefetch_slots_total,
         }
     }
 
@@ -216,39 +245,45 @@ mod tests {
 
     #[test]
     fn step_outcome_shape() {
-        let s = sim();
+        let mut s = sim();
         let step = routing(&s, 4, 2048, 1);
-        let out = s.run_step(&step, &passthrough_decisions(&s, &step));
+        let ds = passthrough_decisions(&s, &step);
+        let out = s.run_step(&step, &ds);
         assert_eq!(out.timelines.len(), 4);
         assert_eq!(out.ir_per_layer.len(), 4);
         assert!(out.latency > 0.0);
         assert_eq!(out.tokens, 2048);
+        assert_eq!(out.prefetch_slots_total, 0);
     }
 
     #[test]
     fn skewed_routing_has_elevated_ir() {
-        let s = sim();
+        let mut s = sim();
         let step = routing(&s, 8, 6144, 3);
-        let out = s.run_step(&step, &passthrough_decisions(&s, &step));
+        let ds = passthrough_decisions(&s, &step);
+        let out = s.run_step(&step, &ds);
         assert!(out.mean_ir() > 1.2, "mean IR {}", out.mean_ir());
         assert!(out.mean_comp_skew() > 1.1);
     }
 
     #[test]
     fn more_tokens_longer_step() {
-        let s = sim();
+        let mut s = sim();
         let small = routing(&s, 4, 1024, 5);
         let big = routing(&s, 4, 8192, 5);
-        let out_s = s.run_step(&small, &passthrough_decisions(&s, &small));
-        let out_b = s.run_step(&big, &passthrough_decisions(&s, &big));
+        let ds_s = passthrough_decisions(&s, &small);
+        let ds_b = passthrough_decisions(&s, &big);
+        let out_s = s.run_step(&small, &ds_s);
+        let out_b = s.run_step(&big, &ds_b);
         assert!(out_b.latency > out_s.latency);
     }
 
     #[test]
     fn phase_breakdown_sums_near_makespan() {
-        let s = sim();
+        let mut s = sim();
         let step = routing(&s, 4, 4096, 7);
-        let out = s.run_step(&step, &passthrough_decisions(&s, &step));
+        let ds = passthrough_decisions(&s, &step);
+        let out = s.run_step(&step, &ds);
         let phases = ClusterSim::phase_breakdown(&out, false);
         let total: f64 = phases.iter().map(|(_, d)| d).sum();
         let mean_makespan = out.latency / 4.0;
@@ -261,10 +296,33 @@ mod tests {
 
     #[test]
     fn deterministic() {
-        let s = sim();
+        let mut s = sim();
         let step = routing(&s, 4, 2048, 11);
-        let a = s.run_step(&step, &passthrough_decisions(&s, &step));
-        let b = s.run_step(&step, &passthrough_decisions(&s, &step));
+        let ds = passthrough_decisions(&s, &step);
+        let a = s.run_step(&step, &ds);
+        let b = s.run_step(&step, &ds);
         assert_eq!(a.latency, b.latency);
+    }
+
+    #[test]
+    fn lookahead_transfer_carries_across_steps() {
+        // a decision in the LAST layer enqueues a depth-2 transfer; its
+        // bytes must drain in the next step's windows, not be double
+        // charged (or wrapped) inside the current step
+        let mut s = sim();
+        let step = routing(&s, 3, 2048, 13);
+        let mut ds = passthrough_decisions(&s, &step);
+        let last = ds.last_mut().unwrap();
+        last.prefetch_slots = vec![1; s.cluster.ep];
+        last.prefetch_lookahead = 2;
+        last.predict_time = 5e-6;
+        last.plan_time = 15e-6;
+        let out = s.run_step(&step, &ds);
+        // leftover (if any) sits in the queue, not in this step's exposure
+        assert_eq!(out.total_exposed(), 0.0);
+        let ds2 = passthrough_decisions(&s, &step);
+        let out2 = s.run_step(&step, &ds2);
+        assert_eq!(out2.total_exposed(), 0.0, "cross-step transfer exposed");
+        assert!(s.prefetch_queue.is_empty(), "queue never drained");
     }
 }

@@ -64,7 +64,7 @@ fn gains_largest_on_repeat() {
 fn exposed_overhead_zero_for_probe_with_window() {
     let cfg = decode_cfg();
     let mut bal = make_balancer(BalancerKind::Probe, &cfg, 11);
-    let sim = ClusterSim::new(cfg.model.clone(), cfg.cluster.clone());
+    let mut sim = ClusterSim::new(cfg.model.clone(), cfg.cluster.clone());
     let mut rm = RoutingModel::calibrated(4, 128, 4, 4, 11);
     for step in 0..10 {
         let routing = rm.route_step(&vec![0u16; cfg.global_batch()]);
@@ -113,7 +113,8 @@ fn probe_ir_approaches_one_with_big_budget() {
     let mut pc = ProbeConfig::default();
     pc.predictor_accuracy = 0.95;
     let mut bal = probe::balancers::Probe::new(&cfg, pc, 21);
-    let sim = ClusterSim::new(cfg.model.clone(), cfg.cluster.clone());
+    let mut sim = ClusterSim::new(cfg.model.clone(), cfg.cluster.clone());
+    let mut sim_static = ClusterSim::new(cfg.model.clone(), cfg.cluster.clone());
     let mut rm = RoutingModel::calibrated(4, 128, 4, 4, 21);
     let mut static_bal = probe::balancers::StaticEp::new(&cfg);
     let mut ir_probe = Vec::new();
@@ -123,7 +124,7 @@ fn probe_ir_approaches_one_with_big_budget() {
         let dp = decide_step(&mut bal, step, &routing);
         ir_probe.push(sim.run_step(&routing, &dp).mean_ir());
         let ds = decide_step(&mut static_bal, step, &routing);
-        ir_static.push(sim.run_step(&routing, &ds).mean_ir());
+        ir_static.push(sim_static.run_step(&routing, &ds).mean_ir());
         rm.step_drift();
     }
     let (ip, is) = (mean(&ir_probe), mean(&ir_static));

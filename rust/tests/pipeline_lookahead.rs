@@ -1,0 +1,82 @@
+//! End-to-end tests of the depth-L control pipeline through the public
+//! config → engine path (ISSUE 2): the lookahead sweep runs via config,
+//! deeper lookahead never worsens exposed transfer, and the delta-plan
+//! toggle changes fetch volumes the way the paper's reuse story says.
+
+use probe::config::{BalancerKind, Config};
+use probe::coordinator::Coordinator;
+use probe::experiments::make_balancer;
+use probe::simulator::StepOutcome;
+use probe::workload::{Dataset, RequestGenerator, WorkloadSpec};
+
+fn run_with_config(cfg: &Config, steps: usize, seed: u64) -> Vec<StepOutcome> {
+    let bal = make_balancer(cfg.balancer, cfg, seed);
+    let mut c = Coordinator::new(cfg.clone(), bal, seed);
+    let mut spec = WorkloadSpec::new(Dataset::Repeat, 4);
+    spec.mean_prompt_len = 8;
+    spec.mean_new_tokens = steps * 2;
+    let mut g = RequestGenerator::new(spec, seed ^ 11);
+    for r in g.take(cfg.global_batch() + 16) {
+        c.submit(r);
+    }
+    c.run_decode_steps(steps)
+}
+
+fn pipeline_cfg(extra_toml: &str) -> Config {
+    let text = format!(
+        "[balancer]\nkind = \"probe\"\n[workload]\nbatch_per_rank = 96\n{extra_toml}"
+    );
+    let mut cfg = Config::from_toml_str(&text).expect("valid config");
+    cfg.model.n_layers = 4;
+    cfg
+}
+
+#[test]
+fn lookahead_sweep_runs_via_config_and_hides_transfers() {
+    // the acceptance-criterion sweep: lookahead_depth ∈ {1, 2, 4} wired
+    // through the TOML config path, each fully hiding its transfers on
+    // the paper testbed (deeper deadlines only add slack)
+    for depth in [1usize, 2, 4] {
+        let cfg = pipeline_cfg(&format!("[probe]\nlookahead_depth = {depth}\n"));
+        assert_eq!(cfg.probe.lookahead_depth, depth);
+        let outs = run_with_config(&cfg, 12, 5);
+        assert!(!outs.is_empty(), "L={depth}: no steps ran");
+        let exposed: f64 = outs.iter().map(|o| o.total_exposed()).sum();
+        assert_eq!(exposed, 0.0, "L={depth}: exposed {exposed}");
+        let fetches: usize = outs.iter().map(|o| o.prefetch_slots_total).sum();
+        assert!(fetches > 0, "L={depth}: pipeline never prefetched");
+    }
+}
+
+#[test]
+fn probe_beats_static_at_every_depth() {
+    let mut static_cfg = pipeline_cfg("");
+    static_cfg.balancer = BalancerKind::StaticEp;
+    let outs = run_with_config(&static_cfg, 20, 7);
+    let static_latency: f64 = outs.iter().map(|o| o.latency).sum();
+    for depth in [1usize, 2, 4] {
+        let cfg = pipeline_cfg(&format!("[probe]\nlookahead_depth = {depth}\n"));
+        let outs = run_with_config(&cfg, 20, 7);
+        let probe_latency: f64 = outs.iter().map(|o| o.latency).sum();
+        assert!(
+            probe_latency < static_latency,
+            "L={depth}: probe {probe_latency} >= static {static_latency}"
+        );
+    }
+}
+
+#[test]
+fn delta_plan_toggle_cuts_fetch_volume() {
+    let delta_cfg = pipeline_cfg("[probe]\ndelta_plan = true\n");
+    let clear_cfg = pipeline_cfg("[probe]\ndelta_plan = false\n");
+    let fetches = |cfg: &Config| -> usize {
+        run_with_config(cfg, 16, 9)
+            .iter()
+            .map(|o| o.prefetch_slots_total)
+            .sum()
+    };
+    let delta = fetches(&delta_cfg);
+    let clear = fetches(&clear_cfg);
+    assert!(clear > 0, "clear mode never fetched");
+    assert!(delta < clear, "delta {delta} >= clear {clear}");
+}

@@ -28,7 +28,8 @@ fn main() {
         for budget in [0usize, 1, 3] {
             let mut cfg = Config::default();
             cfg.model.n_layers = 6;
-            cfg.cluster = Cluster::new(8, profile.clone());
+            // flat single-node fabric via the fabric-era constructor
+            cfg.cluster = Cluster::flat(8, profile.clone());
             let mut pc = ProbeConfig::default();
             pc.max_redundant = budget;
             let mut bal = Probe::new(&cfg, pc, 7);

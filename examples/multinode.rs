@@ -1,0 +1,36 @@
+//! Multi-node fabric sweep: 32 ranks across 4 nodes, NVSwitch inside a
+//! node and RDMA rails between nodes, sweeping the inter-node bandwidth
+//! ratio and comparing topology-aware vs topology-blind PROBE planning.
+//!
+//! Run: `cargo run --release --example multinode`
+
+use probe::experiments::fabric::run_probe_on_fabric;
+
+fn main() {
+    println!("PROBE on a 32-rank / 4-node fabric (GPT-OSS-120B decode)");
+    println!("NVSwitch 450 GB/s per port; rails = 2 per node\n");
+    println!(
+        "{:<12} {:<8} {:>14} {:>12} {:>12}",
+        "inter/intra", "planner", "step latency", "exposed_us", "tok/s"
+    );
+    let steps = 12;
+    let batch = 512;
+    for ratio in [0.25, 0.125, 0.0625] {
+        for aware in [true, false] {
+            let (lat, exposed, tput) =
+                run_probe_on_fabric(32, 4, ratio, 2, aware, steps, batch, 77);
+            println!(
+                "1/{:<10} {:<8} {:>11.2}ms {:>12.1} {:>12.0}",
+                (1.0 / ratio).round() as usize,
+                if aware { "aware" } else { "blind" },
+                lat * 1e3,
+                exposed * 1e6,
+                tput
+            );
+        }
+    }
+    println!("\nreading: as rails shrink below ~1/8 of NVSwitch, blind");
+    println!("planning keeps fetching replicas across nodes and exposes the");
+    println!("transfer; topology-aware planning sources replicas inside the");
+    println!("node and budgets the rails, keeping the prefetch hidden.");
+}

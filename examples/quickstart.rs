@@ -8,11 +8,15 @@ use probe::config::{BalancerKind, Config};
 use probe::experiments::make_balancer;
 use probe::routing::RoutingModel;
 use probe::simulator::ClusterSim;
+use probe::topology::{Cluster, HardwareProfile};
 use probe::util::stats::mean;
 
 fn main() {
-    // Paper testbed: GPT-OSS-120B on 8x Hopper-141, b=768 tokens/rank.
+    // Paper testbed: GPT-OSS-120B on 8x Hopper-141, b=768 tokens/rank,
+    // built through the fabric API (flat = one NVSwitch node; see
+    // examples/multinode.rs for multi-node fabrics).
     let mut cfg = Config::default();
+    cfg.cluster = Cluster::flat(8, HardwareProfile::hopper_141());
     cfg.model.n_layers = 6; // representative layers (DESIGN.md)
     cfg.batch_per_rank = 768;
 

@@ -192,6 +192,7 @@ impl Balancer for Eplb {
             placement,
             assignment,
             prefetch_slots: vec![0; self.ep],
+            prefetch_flows: Vec::new(),
             prefetch_lookahead: 0,
             predict_time: 0.0,
             plan_time: 0.0,

@@ -21,6 +21,7 @@
 use std::collections::VecDeque;
 
 use crate::config::{Config, PredictorKind, ProbeConfig};
+use crate::fabric::{Fabric, Flow};
 use crate::model::MoeModel;
 use crate::perfmodel::Assignment;
 use crate::placement::Placement;
@@ -42,6 +43,8 @@ struct PlannedLayer {
     assignment: Assignment,
     /// NEW fetches per rank (the delta; retained replicas are free).
     fetches: Vec<Vec<usize>>,
+    /// Routed src→dst transfer flows behind `fetches` (fabric paths).
+    fetch_flows: Vec<Flow>,
     iterations: usize,
     /// Hiding-window estimate the plan was budgeted against (recorded
     /// for the depth-1 oracle equivalence property test).
@@ -56,6 +59,9 @@ struct PlannedLayer {
 pub struct Probe {
     model: MoeModel,
     hw: HardwareProfile,
+    /// Interconnect fabric of the cluster being balanced (flat = the
+    /// pre-fabric scalar model; multi-node enables topology awareness).
+    fabric: Fabric,
     ep: usize,
     pub cfg: ProbeConfig,
     predictor: Box<dyn LookaheadPredictor>,
@@ -97,6 +103,7 @@ impl Probe {
         Probe {
             model: config.model.clone(),
             hw: config.cluster.profile.clone(),
+            fabric: config.cluster.fabric.clone(),
             ep: config.cluster.ep,
             cfg,
             predictor,
@@ -157,6 +164,12 @@ impl Probe {
     fn depth(&self) -> usize {
         self.cfg.lookahead_depth.max(1)
     }
+
+    /// Fabric handle for the planner objective: Some only when topology
+    /// awareness is on AND the cluster actually spans nodes.
+    fn fabric_opt(&self) -> Option<&Fabric> {
+        (self.cfg.topology_aware && !self.fabric.is_flat()).then_some(&self.fabric)
+    }
 }
 
 impl super::Balancer for Probe {
@@ -212,11 +225,12 @@ impl super::Balancer for Probe {
             return; // no basis yet: the target layer will bootstrap
         };
         let windows = self.windows();
-        let out = planner::plan(
+        let out = planner::plan_fabric(
             &pred_counts,
             &self.resident[target_layer],
             &self.model,
             &self.hw,
+            &self.fabric,
             &windows,
             &self.cfg,
         );
@@ -227,6 +241,7 @@ impl super::Balancer for Probe {
             placement: out.placement,
             assignment: out.assignment,
             fetches: out.fetches,
+            fetch_flows: out.fetch_flows,
             iterations: out.iterations,
             windows,
             pred_counts,
@@ -257,7 +272,14 @@ impl super::Balancer for Probe {
                 // volumes), then briefly polished.
                 let assignment = if p.placement.total_replicas() > 0 {
                     let rescaled = p.assignment.rescale_to_counts(&actual_counts, &p.placement);
-                    planner::polish_assignment(rescaled, &p.placement, &self.model, &self.hw, 8)
+                    planner::polish_assignment_on(
+                        rescaled,
+                        &p.placement,
+                        &self.model,
+                        &self.hw,
+                        self.fabric_opt(),
+                        8,
+                    )
                 } else {
                     Assignment::locality_first_from_counts(&actual_counts, &p.placement)
                 };
@@ -288,14 +310,16 @@ impl super::Balancer for Probe {
         // control plane just created for layer `abs + depth` (the back
         // of the queue, pushed by the observe() that preceded us).
         let depth = self.depth();
-        let (prefetch_slots, predict_time, plan_time) = match self.planned.back() {
-            Some(b) if b.abs_layer == abs + depth as u64 => (
-                (0..self.ep).map(|r| b.fetches[r].len()).collect(),
-                scheduler::predict_time(tokens_per_rank, &self.model, &self.hw),
-                scheduler::plan_time(b.iterations, &self.hw),
-            ),
-            _ => (vec![0; self.ep], 0.0, 0.0),
-        };
+        let (prefetch_slots, prefetch_flows, predict_time, plan_time) =
+            match self.planned.back() {
+                Some(b) if b.abs_layer == abs + depth as u64 => (
+                    (0..self.ep).map(|r| b.fetches[r].len()).collect(),
+                    b.fetch_flows.clone(),
+                    scheduler::predict_time(tokens_per_rank, &self.model, &self.hw),
+                    scheduler::plan_time(b.iterations, &self.hw),
+                ),
+                _ => (vec![0; self.ep], Vec::new(), 0.0, 0.0),
+            };
 
         // §6.4 pre-dispatch: destinations of predicted-confident tokens
         // are known before routing completes; their payloads stream
@@ -316,6 +340,7 @@ impl super::Balancer for Probe {
             placement,
             assignment,
             prefetch_slots,
+            prefetch_flows,
             prefetch_lookahead: depth,
             predict_time,
             plan_time,

@@ -98,6 +98,12 @@ pub struct ProbeConfig {
     /// predicted experts, overlapping All-to-All with routing (off by
     /// default — it is the paper's future-work direction).
     pub pre_dispatch: bool,
+    /// Topology-aware planning on multi-node fabrics: intra-node fetch
+    /// sources, per-link hiding-window feasibility, rail congestion in
+    /// the objective. Irrelevant (and harmless) on flat fabrics; turn
+    /// off to get the topology-blind ablation `probe bench fabric`
+    /// measures against.
+    pub topology_aware: bool,
 }
 
 impl Default for ProbeConfig {
@@ -113,6 +119,7 @@ impl Default for ProbeConfig {
             split_phase: true,
             water_filling: true,
             pre_dispatch: false,
+            topology_aware: true,
         }
     }
 }
@@ -189,6 +196,13 @@ impl Config {
     pub fn from_toml_str(text: &str) -> Result<Config, String> {
         let doc = TomlDoc::parse(text)?;
         let mut cfg = Config::default();
+        // fabric spec is assembled AFTER the loop so key order (vs
+        // cluster.ep / cluster.profile) cannot matter
+        let mut fab_nodes: Option<usize> = None;
+        let mut fab_inter_bw: Option<f64> = None;
+        let mut fab_rails: Option<usize> = None;
+        let mut fab_inter_eff: Option<f64> = None;
+        let mut fab_inter_base: Option<f64> = None;
         for (section, key, value) in doc.entries() {
             let path = if section.is_empty() {
                 key.to_string()
@@ -207,6 +221,41 @@ impl Config {
                     cfg.cluster.profile =
                         HardwareProfile::by_name(value.as_str().ok_or("cluster.profile: string")?)
                             .ok_or_else(|| format!("unknown profile {value:?}"))?;
+                }
+                "cluster.nodes" => {
+                    let n = value.as_int().ok_or("cluster.nodes: int")? as usize;
+                    if n == 0 {
+                        return Err("cluster.nodes must be >= 1".into());
+                    }
+                    fab_nodes = Some(n);
+                }
+                "fabric.inter_node_bw" => {
+                    let bw = value.as_float().ok_or("fabric.inter_node_bw: float")?;
+                    if bw <= 0.0 {
+                        return Err("fabric.inter_node_bw must be > 0".into());
+                    }
+                    fab_inter_bw = Some(bw);
+                }
+                "fabric.rails" => {
+                    let r = value.as_int().ok_or("fabric.rails: int")? as usize;
+                    if r == 0 {
+                        return Err("fabric.rails must be >= 1".into());
+                    }
+                    fab_rails = Some(r);
+                }
+                "fabric.inter_efficiency" => {
+                    let e = value.as_float().ok_or("fabric.inter_efficiency: float")?;
+                    if e <= 0.0 || e > 1.0 {
+                        return Err("fabric.inter_efficiency must be in (0, 1]".into());
+                    }
+                    fab_inter_eff = Some(e);
+                }
+                "fabric.inter_base_latency" => {
+                    let l = value.as_float().ok_or("fabric.inter_base_latency: float")?;
+                    if l < 0.0 {
+                        return Err("fabric.inter_base_latency must be >= 0".into());
+                    }
+                    fab_inter_base = Some(l);
                 }
                 "balancer.kind" => {
                     cfg.balancer =
@@ -247,6 +296,9 @@ impl Config {
                 "probe.pre_dispatch" => {
                     cfg.probe.pre_dispatch = value.as_bool().ok_or("bool")?
                 }
+                "probe.topology_aware" => {
+                    cfg.probe.topology_aware = value.as_bool().ok_or("bool")?
+                }
                 "eplb.redundant_slots" => {
                     cfg.eplb.redundant_slots = value.as_int().ok_or("int")? as usize
                 }
@@ -273,6 +325,35 @@ impl Config {
                 "seed" => cfg.seed = value.as_int().ok_or("int")? as u64,
                 other => return Err(format!("unknown config key: {other}")),
             }
+        }
+        // (re)build the cluster so the interconnect fabric always matches
+        // the final ep / profile / node spec
+        let nodes = fab_nodes.unwrap_or(1);
+        let fabric_keys_set = fab_inter_bw.is_some()
+            || fab_rails.is_some()
+            || fab_inter_eff.is_some()
+            || fab_inter_base.is_some();
+        if nodes <= 1 {
+            if fabric_keys_set {
+                return Err("[fabric] keys require cluster.nodes >= 2".into());
+            }
+            cfg.cluster = Cluster::new(cfg.cluster.ep, cfg.cluster.profile.clone());
+        } else {
+            if cfg.cluster.ep % nodes != 0 {
+                return Err(format!(
+                    "cluster.ep {} not divisible by cluster.nodes {nodes}",
+                    cfg.cluster.ep
+                ));
+            }
+            let p = cfg.cluster.profile.clone();
+            let inter = crate::fabric::LinkSpec {
+                bw: fab_inter_bw.unwrap_or(p.net_bw / 8.0),
+                efficiency: fab_inter_eff.unwrap_or(p.alltoall_efficiency),
+                base_latency: fab_inter_base
+                    .unwrap_or(crate::fabric::DEFAULT_INTER_BASE_LATENCY),
+            };
+            let rails = fab_rails.unwrap_or(crate::fabric::DEFAULT_RAILS);
+            cfg.cluster = Cluster::multi_node(cfg.cluster.ep, nodes, p, inter, rails);
         }
         Ok(cfg)
     }
@@ -358,6 +439,61 @@ batch_per_rank = 512
         assert_eq!(c.eplb.redundant_slots, 1);
         assert_eq!(c.dataset, Dataset::Repeat);
         assert_eq!(c.batch_per_rank, 512);
+    }
+
+    #[test]
+    fn parse_multi_node_fabric() {
+        let text = r#"
+[cluster]
+ep = 32
+nodes = 4
+[fabric]
+inter_node_bw = 56.25e9
+rails = 4
+inter_efficiency = 0.7
+inter_base_latency = 30e-6
+[probe]
+topology_aware = false
+"#;
+        let c = Config::from_toml_str(text).unwrap();
+        assert_eq!(c.cluster.ep, 32);
+        assert_eq!(c.cluster.fabric.n_nodes(), 4);
+        assert_eq!(c.cluster.fabric.rails, 4);
+        assert!((c.cluster.fabric.inter.bw - 56.25e9).abs() < 1.0);
+        assert!((c.cluster.fabric.inter.efficiency - 0.7).abs() < 1e-12);
+        assert!((c.cluster.fabric.inter.base_latency - 30e-6).abs() < 1e-12);
+        assert!(!c.probe.topology_aware);
+        // key order must not matter: fabric before cluster
+        let reordered = Config::from_toml_str(
+            "[fabric]\ninter_node_bw = 1e10\n[cluster]\nnodes = 2\nep = 16\n",
+        )
+        .unwrap();
+        assert_eq!(reordered.cluster.fabric.n_nodes(), 2);
+        assert!((reordered.cluster.fabric.inter.bw - 1e10).abs() < 1.0);
+        // invalid combinations fail loudly (Err, never a panic)
+        assert!(Config::from_toml_str("[cluster]\nep = 10\nnodes = 4\n").is_err());
+        assert!(Config::from_toml_str("[fabric]\nrails = 2\n").is_err());
+        assert!(Config::from_toml_str("[cluster]\nnodes = 0\n").is_err());
+        let nodes2 = "[cluster]\nep = 16\nnodes = 2\n";
+        assert!(
+            Config::from_toml_str(&format!("{nodes2}[fabric]\ninter_efficiency = 0.0\n")).is_err()
+        );
+        assert!(
+            Config::from_toml_str(&format!("{nodes2}[fabric]\ninter_efficiency = 1.5\n")).is_err()
+        );
+        assert!(Config::from_toml_str(
+            &format!("{nodes2}[fabric]\ninter_base_latency = -1e-6\n")
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn flat_default_even_after_ep_override() {
+        // cluster.ep alone must still yield a consistent flat fabric
+        let c = Config::from_toml_str("[cluster]\nep = 4\n").unwrap();
+        assert!(c.cluster.fabric.is_flat());
+        assert_eq!(c.cluster.fabric.n_ranks, 4);
+        assert!(c.probe.topology_aware, "aware by default");
     }
 
     #[test]

@@ -1,0 +1,632 @@
+//! Link-level interconnect fabric: hierarchical multi-node topology and
+//! contention-aware transfer modeling.
+//!
+//! The pre-fabric network model was a single scalar `net_bw` per rank
+//! with one `alltoall_efficiency` knob — fine for the paper's single
+//! 8×Hopper node, but unable to express the 16–64-rank multi-node
+//! clusters the ROADMAP targets, where intra-node NVSwitch bandwidth and
+//! inter-node RDMA/IB rails differ by 4–16× and prefetch flows share the
+//! slow links with All-to-All traffic (HarMoEny, arXiv:2506.12417).
+//!
+//! A [`Fabric`] groups `n_ranks` into equal nodes. Each rank owns an
+//! intra-node switch port ([`Fabric::intra`], per direction); each node
+//! owns `rails` inter-node rails ([`Fabric::inter`] per rail, per
+//! direction). Three modeling layers are built on the graph:
+//!
+//! * **Hierarchical All-to-All** ([`Fabric::alltoall_time`]): phase 1
+//!   shuffles intra-node pairs over the switch ports, phase 2 exchanges
+//!   cross-node traffic over the rails (still crossing the ports). Each
+//!   phase is bound by its bottleneck link, mirroring the scalar model's
+//!   bottleneck-rank bound (§3.3).
+//! * **P2P prefetch paths** ([`Fabric::prefetch_path`]): a weight fetch
+//!   occupies the destination's ingress port and, cross-node, one rail
+//!   pair; its line rate is the path minimum. Link indices let the
+//!   scheduler charge shared per-link budgets instead of one aux track.
+//! * **Max-min contention engine** ([`Fabric::share_rates`],
+//!   [`Fabric::drain_time`]): progressive-filling fair share across
+//!   concurrent flows, used for contention analysis and tests.
+//!
+//! `Fabric::flat(ep, hw)` is the single-node degenerate case and is
+//! arithmetically identical to the pre-fabric scalar model: phase 2
+//! never runs, all prefetch flows ride one shared link at `net_bw`, so
+//! every existing single-node experiment output is unchanged.
+
+use crate::perfmodel::TrafficMatrix;
+use crate::topology::HardwareProfile;
+
+/// Default fixed latency of an inter-node rail operation (RDMA
+/// rendezvous + NIC traversal), seconds.
+pub const DEFAULT_INTER_BASE_LATENCY: f64 = 25e-6;
+
+/// Default inter-node rails per node (NICs dedicated to EP traffic).
+pub const DEFAULT_RAILS: usize = 2;
+
+/// One directed link class: bandwidth (bytes/s per direction), the
+/// fraction of it a collective achieves on balanced traffic, and the
+/// fixed per-operation latency.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkSpec {
+    pub bw: f64,
+    pub efficiency: f64,
+    pub base_latency: f64,
+}
+
+impl LinkSpec {
+    /// Bandwidth a collective actually achieves on this link class.
+    pub fn effective_bw(&self) -> f64 {
+        self.bw * self.efficiency
+    }
+}
+
+/// One point-to-point transfer demand routed over the fabric.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Flow {
+    pub src: usize,
+    pub dst: usize,
+    pub bytes: f64,
+}
+
+/// Hierarchical interconnect graph: `n_ranks` split into equal nodes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Fabric {
+    pub n_ranks: usize,
+    pub ranks_per_node: usize,
+    /// Per-rank intra-node switch port (NVSwitch), per direction.
+    pub intra: LinkSpec,
+    /// Per-rail inter-node link (RDMA/IB), per direction.
+    pub inter: LinkSpec,
+    /// Rails per node; node egress/ingress aggregate is `rails × inter.bw`.
+    pub rails: usize,
+}
+
+impl Fabric {
+    /// Single-node fabric reproducing the scalar `net_bw` model exactly.
+    pub fn flat(ep: usize, hw: &HardwareProfile) -> Fabric {
+        assert!(ep >= 1);
+        Fabric {
+            n_ranks: ep,
+            ranks_per_node: ep,
+            intra: hw.intra_link(),
+            // unused on a single node; kept equal to intra so the struct
+            // has no meaningless zeros
+            inter: hw.intra_link(),
+            rails: 1,
+        }
+    }
+
+    /// Multi-node fabric: `nodes` equal nodes, intra-node links from the
+    /// profile, explicit inter-node rail spec.
+    pub fn multi_node(
+        ep: usize,
+        nodes: usize,
+        hw: &HardwareProfile,
+        inter: LinkSpec,
+        rails: usize,
+    ) -> Fabric {
+        assert!(nodes >= 1 && ep % nodes == 0, "ep must divide into nodes");
+        assert!(rails >= 1);
+        assert!(inter.bw > 0.0 && inter.efficiency > 0.0);
+        Fabric {
+            n_ranks: ep,
+            ranks_per_node: ep / nodes,
+            intra: hw.intra_link(),
+            inter,
+            rails,
+        }
+    }
+
+    /// Multi-node fabric with per-rail bandwidth expressed as a fraction
+    /// of the intra-node port bandwidth (the sweep axis of
+    /// `probe bench fabric`).
+    pub fn multi_node_ratio(
+        ep: usize,
+        nodes: usize,
+        hw: &HardwareProfile,
+        inter_bw_ratio: f64,
+        rails: usize,
+    ) -> Fabric {
+        assert!(inter_bw_ratio > 0.0);
+        let inter = LinkSpec {
+            bw: hw.net_bw * inter_bw_ratio,
+            efficiency: hw.alltoall_efficiency,
+            base_latency: DEFAULT_INTER_BASE_LATENCY,
+        };
+        Fabric::multi_node(ep, nodes, hw, inter, rails)
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.n_ranks / self.ranks_per_node
+    }
+
+    pub fn is_flat(&self) -> bool {
+        self.n_nodes() == 1
+    }
+
+    pub fn node_of(&self, rank: usize) -> usize {
+        rank / self.ranks_per_node
+    }
+
+    pub fn same_node(&self, a: usize, b: usize) -> bool {
+        self.node_of(a) == self.node_of(b)
+    }
+
+    /// Aggregate inter-node bandwidth per node per direction.
+    pub fn rail_bw(&self) -> f64 {
+        self.rails as f64 * self.inter.bw
+    }
+
+    // ---- link indexing (scheduler budget accounting) ----
+    //
+    // Flat fabrics expose ONE link (index 0): the pre-fabric model let
+    // all prefetch traffic share a single `net_bw` pipe, and the flat
+    // path must stay arithmetically identical to it. Multi-node fabrics
+    // expose per-rank ingress ports plus per-node rail aggregates:
+    //   [0, n_ranks)                      rank ingress ports
+    //   [n_ranks, n_ranks + n_nodes)      node rail egress
+    //   [n_ranks + n_nodes, +2*n_nodes)   node rail ingress
+
+    pub fn link_count(&self) -> usize {
+        if self.is_flat() {
+            1
+        } else {
+            self.n_ranks + 2 * self.n_nodes()
+        }
+    }
+
+    pub fn link_rank_in(&self, rank: usize) -> usize {
+        rank
+    }
+
+    pub fn link_node_out(&self, node: usize) -> usize {
+        self.n_ranks + node
+    }
+
+    pub fn link_node_in(&self, node: usize) -> usize {
+        self.n_ranks + self.n_nodes() + node
+    }
+
+    /// Raw (protocol-efficiency-free) bandwidth of link `l` — weight
+    /// prefetch is a bulk DMA stream, charged at line rate like the
+    /// scalar model's `transfer_time` (eq. 6).
+    pub fn link_raw_bw(&self, l: usize) -> f64 {
+        if self.is_flat() || l < self.n_ranks {
+            self.intra.bw
+        } else {
+            self.rail_bw()
+        }
+    }
+
+    /// Line rate and occupied links of a P2P prefetch flow. The source
+    /// side streams weights from HBM via DMA and is not charged (the
+    /// scalar model charged the receiver only; we keep that convention
+    /// so flat fabrics are bit-compatible).
+    pub fn prefetch_path(&self, src: usize, dst: usize) -> (f64, Vec<u32>) {
+        if self.is_flat() {
+            return (self.intra.bw, vec![0]);
+        }
+        if self.same_node(src, dst) {
+            return (self.intra.bw, vec![self.link_rank_in(dst) as u32]);
+        }
+        let rate = self.intra.bw.min(self.inter.bw);
+        (
+            rate,
+            vec![
+                self.link_rank_in(dst) as u32,
+                self.link_node_out(self.node_of(src)) as u32,
+                self.link_node_in(self.node_of(dst)) as u32,
+            ],
+        )
+    }
+
+    /// Line rate of a single P2P flow (path bottleneck, one rail).
+    pub fn path_rate(&self, src: usize, dst: usize) -> f64 {
+        self.prefetch_path(src, dst).0
+    }
+
+    /// Transfer latency of one uncontended flow (eq. 6 generalized).
+    pub fn transfer_time_flow(&self, f: &Flow) -> f64 {
+        if f.bytes <= 0.0 {
+            return 0.0;
+        }
+        let t = f.bytes / self.path_rate(f.src, f.dst);
+        if self.same_node(f.src, f.dst) {
+            t
+        } else {
+            t + self.inter.base_latency
+        }
+    }
+
+    // ---- hierarchical All-to-All ----
+
+    /// Phase times of the hierarchical All-to-All for one traffic
+    /// matrix: (intra-node shuffle, inter-node rail exchange). Phase 1
+    /// is always charged (collective launch); phase 2 only when
+    /// cross-node traffic exists — a flat fabric therefore reproduces
+    /// the scalar `alltoall_time` exactly.
+    pub fn alltoall_phase_times(&self, m: &TrafficMatrix) -> (f64, f64) {
+        let ep = m.ep;
+        assert_eq!(ep, self.n_ranks, "traffic matrix does not match fabric");
+        let nn = self.n_nodes();
+        let mut in_intra = vec![0.0; ep];
+        let mut out_intra = vec![0.0; ep];
+        let mut in_inter = vec![0.0; ep];
+        let mut out_inter = vec![0.0; ep];
+        let mut node_in = vec![0.0; nn];
+        let mut node_out = vec![0.0; nn];
+        for s in 0..ep {
+            for d in 0..ep {
+                if s == d {
+                    continue;
+                }
+                let b = m.get(s, d);
+                if b <= 0.0 {
+                    continue;
+                }
+                if self.same_node(s, d) {
+                    out_intra[s] += b;
+                    in_intra[d] += b;
+                } else {
+                    out_inter[s] += b;
+                    in_inter[d] += b;
+                    node_out[self.node_of(s)] += b;
+                    node_in[self.node_of(d)] += b;
+                }
+            }
+        }
+        let crit1 = (0..ep)
+            .map(|r| in_intra[r].max(out_intra[r]))
+            .fold(0.0, f64::max);
+        let t1 = self.intra.base_latency + crit1 / self.intra.effective_bw();
+        let inter_total: f64 = node_out.iter().sum();
+        let t2 = if inter_total <= 0.0 {
+            0.0
+        } else {
+            let rail_term = (0..nn)
+                .map(|n| node_in[n].max(node_out[n]))
+                .fold(0.0, f64::max)
+                / (self.rail_bw() * self.inter.efficiency);
+            let port_term = (0..ep)
+                .map(|r| in_inter[r].max(out_inter[r]))
+                .fold(0.0, f64::max)
+                / self.intra.effective_bw();
+            self.inter.base_latency + rail_term.max(port_term)
+        };
+        (t1, t2)
+    }
+
+    /// Total hierarchical All-to-All latency for one traffic matrix.
+    pub fn alltoall_time(&self, m: &TrafficMatrix) -> f64 {
+        let (t1, t2) = self.alltoall_phase_times(m);
+        t1 + t2
+    }
+
+    /// Per-rank own-traffic completion times plus the collective total:
+    /// a rank finishes its own shuffle share, then (if it has cross-node
+    /// traffic) its proportional share of the rail phase; the remainder
+    /// until the collective total is sync wait. Own times never exceed
+    /// the total.
+    pub fn dispatch_rank_times(&self, m: &TrafficMatrix) -> (Vec<f64>, f64) {
+        let ep = m.ep;
+        assert_eq!(ep, self.n_ranks);
+        let mut in_intra = vec![0.0; ep];
+        let mut out_intra = vec![0.0; ep];
+        let mut inter_crit = vec![0.0; ep];
+        for s in 0..ep {
+            for d in 0..ep {
+                if s == d {
+                    continue;
+                }
+                let b = m.get(s, d);
+                if b <= 0.0 {
+                    continue;
+                }
+                if self.same_node(s, d) {
+                    out_intra[s] += b;
+                    in_intra[d] += b;
+                } else {
+                    inter_crit[s] += b;
+                    inter_crit[d] += b;
+                }
+            }
+        }
+        let (t1, t2) = self.alltoall_phase_times(m);
+        let max_inter = inter_crit.iter().cloned().fold(0.0, f64::max);
+        let own = (0..ep)
+            .map(|r| {
+                let own1 = self.intra.base_latency
+                    + in_intra[r].max(out_intra[r]) / self.intra.effective_bw();
+                let own2 = if t2 > 0.0 && max_inter > 0.0 {
+                    t2 * (inter_crit[r] / max_inter)
+                } else {
+                    0.0
+                };
+                (own1 + own2).min(t1 + t2)
+            })
+            .collect();
+        (own, t1 + t2)
+    }
+
+    // ---- max-min contention engine ----
+
+    /// Max-min fair instantaneous rates (bytes/s) for a set of
+    /// concurrent flows: progressive filling over the shared links, each
+    /// flow additionally capped by its own path line rate (a cross-node
+    /// flow rides one rail even when the node aggregate is idle).
+    pub fn share_rates(&self, flows: &[Flow]) -> Vec<f64> {
+        let n = flows.len();
+        let mut rates = vec![0.0; n];
+        if n == 0 {
+            return rates;
+        }
+        let paths: Vec<(f64, Vec<u32>)> = flows
+            .iter()
+            .map(|f| self.prefetch_path(f.src, f.dst))
+            .collect();
+        let n_links = self.link_count();
+        let mut remaining: Vec<f64> = (0..n_links).map(|l| self.link_raw_bw(l)).collect();
+        let mut active: Vec<bool> = flows.iter().map(|f| f.bytes > 0.0).collect();
+        loop {
+            let n_active = active.iter().filter(|&&a| a).count();
+            if n_active == 0 {
+                break;
+            }
+            // per-link active-flow counts
+            let mut on_link = vec![0usize; n_links];
+            for (i, (_, links)) in paths.iter().enumerate() {
+                if active[i] {
+                    for &l in links {
+                        on_link[l as usize] += 1;
+                    }
+                }
+            }
+            // largest uniform increment every active flow can take
+            let mut inc = f64::INFINITY;
+            for l in 0..n_links {
+                if on_link[l] > 0 {
+                    inc = inc.min(remaining[l] / on_link[l] as f64);
+                }
+            }
+            for i in 0..n {
+                if active[i] {
+                    inc = inc.min(paths[i].0 - rates[i]);
+                }
+            }
+            if !inc.is_finite() || inc <= 0.0 {
+                break;
+            }
+            for i in 0..n {
+                if active[i] {
+                    rates[i] += inc;
+                    for &l in &paths[i].1 {
+                        remaining[l as usize] -= inc;
+                    }
+                }
+            }
+            // freeze flows that hit their path cap or a saturated link
+            let mut frozen = 0usize;
+            for i in 0..n {
+                if !active[i] {
+                    continue;
+                }
+                let capped = rates[i] >= paths[i].0 * (1.0 - 1e-12);
+                let saturated = paths[i]
+                    .1
+                    .iter()
+                    .any(|&l| remaining[l as usize] <= self.link_raw_bw(l as usize) * 1e-12);
+                if capped || saturated {
+                    active[i] = false;
+                    frozen += 1;
+                }
+            }
+            if frozen == 0 {
+                break; // numerically stuck; rates are already fair
+            }
+        }
+        rates
+    }
+
+    /// Wall-clock until every flow completes under max-min sharing
+    /// (fluid model: rates recomputed as flows finish).
+    pub fn drain_time(&self, flows: &[Flow]) -> f64 {
+        let mut left: Vec<Flow> = flows.iter().filter(|f| f.bytes > 0.0).cloned().collect();
+        let mut t = 0.0;
+        let mut guard = 0usize;
+        while !left.is_empty() && guard <= flows.len() + 1 {
+            guard += 1;
+            let rates = self.share_rates(&left);
+            let mut dt = f64::INFINITY;
+            for (f, &r) in left.iter().zip(&rates) {
+                if r > 0.0 {
+                    dt = dt.min(f.bytes / r);
+                }
+            }
+            if !dt.is_finite() {
+                break; // no flow can progress (degenerate input)
+            }
+            for (f, &r) in left.iter_mut().zip(&rates) {
+                f.bytes = (f.bytes - r * dt).max(0.0);
+            }
+            t += dt;
+            left.retain(|f| f.bytes > 1e-6);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel;
+
+    fn hw() -> HardwareProfile {
+        HardwareProfile::hopper_141()
+    }
+
+    fn multi(ep: usize, nodes: usize, ratio: f64) -> Fabric {
+        Fabric::multi_node_ratio(ep, nodes, &hw(), ratio, 2)
+    }
+
+    fn uniform_matrix(ep: usize, bytes: f64) -> TrafficMatrix {
+        let mut m = TrafficMatrix::new(ep);
+        for s in 0..ep {
+            for d in 0..ep {
+                if s != d {
+                    m.add(s, d, bytes);
+                }
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn flat_alltoall_matches_scalar_model() {
+        let h = hw();
+        let f = Fabric::flat(8, &h);
+        let m = uniform_matrix(8, 3.7e5);
+        let scalar = perfmodel::alltoall_time(&m.volumes(), &h);
+        assert_eq!(f.alltoall_time(&m), scalar, "flat fabric must be exact");
+        let (t1, t2) = f.alltoall_phase_times(&m);
+        assert_eq!(t2, 0.0, "flat fabric has no rail phase");
+        assert!(t1 > 0.0);
+    }
+
+    #[test]
+    fn node_grouping_and_links() {
+        let f = multi(16, 2, 0.125);
+        assert_eq!(f.n_nodes(), 2);
+        assert_eq!(f.ranks_per_node, 8);
+        assert!(f.same_node(0, 7) && !f.same_node(7, 8));
+        assert_eq!(f.link_count(), 16 + 4);
+        assert_eq!(f.link_raw_bw(f.link_rank_in(3)), f.intra.bw);
+        assert_eq!(f.link_raw_bw(f.link_node_out(1)), 2.0 * f.inter.bw);
+    }
+
+    #[test]
+    fn hierarchical_phases_split_cross_node_traffic() {
+        let f = multi(16, 2, 0.125);
+        let m = uniform_matrix(16, 1e5);
+        let (t1, t2) = f.alltoall_phase_times(&m);
+        assert!(t1 > 0.0 && t2 > 0.0);
+        // intra-only traffic skips the rail phase entirely
+        let mut intra_only = TrafficMatrix::new(16);
+        for s in 0..8 {
+            for d in 0..8 {
+                if s != d {
+                    intra_only.add(s, d, 1e5);
+                }
+            }
+        }
+        let (_, t2b) = f.alltoall_phase_times(&intra_only);
+        assert_eq!(t2b, 0.0);
+        // slower rails → longer rail phase, same shuffle phase
+        let slow = multi(16, 2, 0.0625);
+        let (t1s, t2s) = slow.alltoall_phase_times(&m);
+        assert_eq!(t1s, t1);
+        assert!(t2s > t2, "halving rail bw must lengthen phase 2");
+    }
+
+    #[test]
+    fn rank_own_times_bounded_by_total() {
+        let f = multi(16, 4, 0.25);
+        let m = uniform_matrix(16, 2.2e5);
+        let (own, total) = f.dispatch_rank_times(&m);
+        assert!((f.alltoall_time(&m) - total).abs() < 1e-15);
+        for t in own {
+            assert!(t > 0.0 && t <= total + 1e-15);
+        }
+    }
+
+    #[test]
+    fn prefetch_path_rates() {
+        let f = multi(16, 2, 0.125);
+        // same node: full port rate, one link
+        let (r_in, links_in) = f.prefetch_path(0, 3);
+        assert_eq!(r_in, f.intra.bw);
+        assert_eq!(links_in, vec![3u32]);
+        // cross node: one rail, three links
+        let (r_x, links_x) = f.prefetch_path(1, 12);
+        assert_eq!(r_x, f.inter.bw);
+        assert_eq!(links_x.len(), 3);
+        assert!(r_x < r_in);
+        // flat: everything shares link 0 at net_bw
+        let flat = Fabric::flat(8, &hw());
+        let (r_f, links_f) = flat.prefetch_path(2, 5);
+        assert_eq!(r_f, hw().net_bw);
+        assert_eq!(links_f, vec![0u32]);
+    }
+
+    #[test]
+    fn maxmin_shares_a_common_port() {
+        let f = multi(16, 2, 0.5);
+        // two same-node flows into the same destination port split it
+        let flows = vec![
+            Flow { src: 0, dst: 3, bytes: 1e6 },
+            Flow { src: 1, dst: 3, bytes: 1e6 },
+        ];
+        let rates = f.share_rates(&flows);
+        assert!((rates[0] - f.intra.bw / 2.0).abs() < f.intra.bw * 1e-9);
+        assert!((rates[1] - f.intra.bw / 2.0).abs() < f.intra.bw * 1e-9);
+        // flows to distinct ports run at full rate
+        let disjoint = vec![
+            Flow { src: 0, dst: 3, bytes: 1e6 },
+            Flow { src: 1, dst: 4, bytes: 1e6 },
+        ];
+        let r2 = f.share_rates(&disjoint);
+        assert!((r2[0] - f.intra.bw).abs() < f.intra.bw * 1e-9);
+        assert!((r2[1] - f.intra.bw).abs() < f.intra.bw * 1e-9);
+    }
+
+    #[test]
+    fn maxmin_rail_aggregate_binds_cross_node_flows() {
+        let f = multi(16, 2, 0.125); // 2 rails × bw/8 per node
+        // four cross-node flows into distinct ports of node 1: the node
+        // ingress aggregate (2 rails) is the bottleneck → bw_rail_agg/4
+        let flows: Vec<Flow> = (0..4)
+            .map(|i| Flow { src: i, dst: 8 + i, bytes: 1e6 })
+            .collect();
+        let rates = f.share_rates(&flows);
+        let expect = f.rail_bw() / 4.0;
+        for r in &rates {
+            assert!((r - expect).abs() < expect * 1e-9, "rate {r} vs {expect}");
+        }
+        // a single cross-node flow is capped by its one rail
+        let one = vec![Flow { src: 0, dst: 8, bytes: 1e6 }];
+        let r1 = f.share_rates(&one);
+        assert!((r1[0] - f.inter.bw).abs() < f.inter.bw * 1e-9);
+    }
+
+    #[test]
+    fn drain_time_serializes_shared_links() {
+        let f = multi(16, 2, 0.25);
+        let b = 1e8;
+        let one = f.drain_time(&[Flow { src: 0, dst: 3, bytes: b }]);
+        assert!((one - b / f.intra.bw).abs() < one * 1e-9);
+        // same port twice → twice the time; disjoint ports → same time
+        let shared = f.drain_time(&[
+            Flow { src: 0, dst: 3, bytes: b },
+            Flow { src: 1, dst: 3, bytes: b },
+        ]);
+        assert!((shared - 2.0 * one).abs() < shared * 1e-6);
+        let disjoint = f.drain_time(&[
+            Flow { src: 0, dst: 3, bytes: b },
+            Flow { src: 1, dst: 4, bytes: b },
+        ]);
+        assert!((disjoint - one).abs() < disjoint * 1e-6);
+    }
+
+    #[test]
+    fn transfer_time_flow_adds_rail_latency_cross_node() {
+        let f = multi(16, 2, 0.125);
+        let b = 4.75e7;
+        let intra = f.transfer_time_flow(&Flow { src: 0, dst: 1, bytes: b });
+        let cross = f.transfer_time_flow(&Flow { src: 0, dst: 9, bytes: b });
+        assert!((intra - b / f.intra.bw).abs() < 1e-12);
+        assert!(cross > intra * 7.0, "cross-node must ride the slow rail");
+    }
+
+    #[test]
+    #[should_panic(expected = "divide")]
+    fn ragged_node_split_rejected() {
+        let _ = Fabric::multi_node_ratio(10, 4, &hw(), 0.25, 2);
+    }
+}

@@ -20,6 +20,7 @@ pub mod config;
 pub mod coordinator;
 pub mod engine;
 pub mod experiments;
+pub mod fabric;
 pub mod metrics;
 pub mod model;
 pub mod perfmodel;

@@ -51,7 +51,8 @@ fn print_help() {
                      --requests-per-replica N [--shift-to D2] [--seed S]\n\
            prefill   --balancer B --tokens N --model M\n\
            bench     fig2|fig3|fig5|fig7|fig8|fig9|fig10|fig11|fleet|\n\
-                     pipeline|all [--steps N]\n\
+                     pipeline|fabric|all [--steps N]\n\
+                     (fabric: multi-node sweep, also --rails N)\n\
            ablate    [--steps N]\n\
            info\n"
     );
@@ -292,6 +293,14 @@ fn cmd_bench(args: &Args) -> i32 {
                 p.seed = args.get_u64("seed", p.seed);
                 exp::pipeline::run(&p)
             }
+            "fabric" => {
+                let mut p = exp::fabric::FabricParams::default();
+                p.steps = args.get_usize("steps", p.steps);
+                p.batch_per_rank = args.get_usize("batch-per-rank", p.batch_per_rank);
+                p.rails = args.get_usize("rails", p.rails);
+                p.seed = args.get_u64("seed", p.seed);
+                exp::fabric::run(&p)
+            }
             "fleet" => {
                 let mut p = exp::fleet::FleetParams::default();
                 p.seed = args.get_u64("seed", p.seed);
@@ -309,6 +318,7 @@ fn cmd_bench(args: &Args) -> i32 {
     if which == "all" {
         for f in [
             "fig2", "fig3", "fig5", "fig7", "fig8", "fig9", "fig10", "fig11", "fleet", "pipeline",
+            "fabric",
         ] {
             run_one(f);
         }

@@ -84,16 +84,99 @@ impl CommVolumes {
     }
 }
 
-/// Compute dispatch traffic for one layer given concrete per-slot target
-/// ranks (`plan.targets[t*k+j]` = rank executing token t's j-th expert).
-pub fn comm_volumes(
+/// Per-pair dispatch traffic (bytes), `src rank → dst rank`. The scalar
+/// model only needs per-rank [`CommVolumes`]; the interconnect fabric
+/// ([`crate::fabric`]) needs the full matrix to split intra-node shuffle
+/// traffic from inter-node rail traffic.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrafficMatrix {
+    pub ep: usize,
+    bytes: Vec<f64>,
+}
+
+impl TrafficMatrix {
+    pub fn new(ep: usize) -> TrafficMatrix {
+        TrafficMatrix {
+            ep,
+            bytes: vec![0.0; ep * ep],
+        }
+    }
+
+    #[inline]
+    pub fn add(&mut self, src: usize, dst: usize, b: f64) {
+        self.bytes[src * self.ep + dst] += b;
+    }
+
+    #[inline]
+    pub fn get(&self, src: usize, dst: usize) -> f64 {
+        self.bytes[src * self.ep + dst]
+    }
+
+    /// Per-rank ingress/egress volumes (self-traffic excluded), matching
+    /// what [`comm_volumes`] computes directly.
+    pub fn volumes(&self) -> CommVolumes {
+        let ep = self.ep;
+        let mut v_in = vec![0.0; ep];
+        let mut v_out = vec![0.0; ep];
+        for s in 0..ep {
+            for d in 0..ep {
+                if s != d {
+                    let b = self.bytes[s * ep + d];
+                    v_out[s] += b;
+                    v_in[d] += b;
+                }
+            }
+        }
+        CommVolumes { v_in, v_out }
+    }
+
+    /// Matrix with every entry scaled by `f` (pre-dispatch residual).
+    pub fn scaled(&self, f: f64) -> TrafficMatrix {
+        TrafficMatrix {
+            ep: self.ep,
+            bytes: self.bytes.iter().map(|b| b * f).collect(),
+        }
+    }
+
+    /// Directions swapped (Combine mirrors Dispatch).
+    pub fn transposed(&self) -> TrafficMatrix {
+        let ep = self.ep;
+        let mut out = TrafficMatrix::new(ep);
+        for s in 0..ep {
+            for d in 0..ep {
+                out.bytes[d * ep + s] = self.bytes[s * ep + d];
+            }
+        }
+        out
+    }
+
+    /// Total off-diagonal (actually transmitted) bytes.
+    pub fn total_remote(&self) -> f64 {
+        let ep = self.ep;
+        let mut t = 0.0;
+        for s in 0..ep {
+            for d in 0..ep {
+                if s != d {
+                    t += self.bytes[s * ep + d];
+                }
+            }
+        }
+        t
+    }
+}
+
+/// Shared token-level traversal behind [`comm_volumes`] and
+/// [`comm_matrix`]: visits each deduplicated remote (src, dst) payload
+/// once, in token order. A token whose k experts land on one target rank
+/// is sent once; self-traffic is never visited. Keeping ONE traversal
+/// guarantees the flat (volumes) and multi-node (matrix) simulator paths
+/// can never desynchronize on dedup rules.
+fn visit_dispatch_payloads(
     routing: &LayerRouting,
     plan: &DispatchPlan,
     ep: usize,
-    token_bytes: f64,
-) -> CommVolumes {
-    let mut v_in = vec![0.0; ep];
-    let mut v_out = vec![0.0; ep];
+    mut visit: impl FnMut(usize, usize),
+) {
     let k = routing.top_k;
     let mut dests = [false; 64]; // ep <= 64
     assert!(ep <= 64);
@@ -105,11 +188,39 @@ pub fn comm_volumes(
         }
         for (rt, &hit) in dests[..ep].iter().enumerate() {
             if hit && rt != rs {
-                v_out[rs] += token_bytes;
-                v_in[rt] += token_bytes;
+                visit(rs, rt);
             }
         }
     }
+}
+
+/// Token-level dispatch traffic matrix for one layer (same dedup rules
+/// as [`comm_volumes`]; they share one traversal).
+pub fn comm_matrix(
+    routing: &LayerRouting,
+    plan: &DispatchPlan,
+    ep: usize,
+    token_bytes: f64,
+) -> TrafficMatrix {
+    let mut m = TrafficMatrix::new(ep);
+    visit_dispatch_payloads(routing, plan, ep, |rs, rt| m.add(rs, rt, token_bytes));
+    m
+}
+
+/// Compute dispatch traffic for one layer given concrete per-slot target
+/// ranks (`plan.targets[t*k+j]` = rank executing token t's j-th expert).
+pub fn comm_volumes(
+    routing: &LayerRouting,
+    plan: &DispatchPlan,
+    ep: usize,
+    token_bytes: f64,
+) -> CommVolumes {
+    let mut v_in = vec![0.0; ep];
+    let mut v_out = vec![0.0; ep];
+    visit_dispatch_payloads(routing, plan, ep, |rs, rt| {
+        v_out[rs] += token_bytes;
+        v_in[rt] += token_bytes;
+    });
     CommVolumes { v_in, v_out }
 }
 
@@ -265,6 +376,28 @@ mod tests {
         };
         assert!(effective_bandwidth(&skewed, &h) < effective_bandwidth(&balanced, &h));
         assert!(alltoall_time(&skewed, &h) > alltoall_time(&balanced, &h));
+    }
+
+    #[test]
+    fn comm_matrix_consistent_with_volumes() {
+        let routing = LayerRouting::new(8, 4, 32, vec![0u16; 32]);
+        let placement = Placement::sharded(8, 32, 3);
+        let a = Assignment::locality_first(&routing, &placement);
+        let plan = DispatchPlan::from_assignment(&routing, &a);
+        let m = model();
+        let direct = comm_volumes(&routing, &plan, 8, m.token_bytes());
+        let via_matrix = comm_matrix(&routing, &plan, 8, m.token_bytes()).volumes();
+        for r in 0..8 {
+            assert!((direct.v_in[r] - via_matrix.v_in[r]).abs() < 1e-9);
+            assert!((direct.v_out[r] - via_matrix.v_out[r]).abs() < 1e-9);
+        }
+        let mat = comm_matrix(&routing, &plan, 8, m.token_bytes());
+        for r in 0..8 {
+            assert_eq!(mat.get(r, r), 0.0, "self-traffic recorded");
+        }
+        let t = mat.transposed();
+        assert_eq!(t.get(1, 0), mat.get(0, 1));
+        assert!((mat.scaled(0.5).total_remote() - 0.5 * mat.total_remote()).abs() < 1e-9);
     }
 
     #[test]

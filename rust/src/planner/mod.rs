@@ -21,6 +21,7 @@
 //!   recomputing the full O(E·ep²) [`rank_latencies`] per iteration.
 
 use crate::config::ProbeConfig;
+use crate::fabric::{Fabric, Flow};
 use crate::model::MoeModel;
 use crate::perfmodel::{expert_compute_time, transfer_time, Assignment};
 use crate::placement::Placement;
@@ -33,6 +34,9 @@ pub struct PlanOutcome {
     pub assignment: Assignment,
     /// Experts NEWLY fetched per rank this plan (|Δ_r^in| minus reuse).
     pub fetches: Vec<Vec<usize>>,
+    /// Routed source→destination transfer flows behind `fetches` (one
+    /// per fetched expert; source chosen topology-aware when enabled).
+    pub fetch_flows: Vec<Flow>,
     /// Resident replicas reused at zero transfer cost (delta planning).
     pub retained_replicas: usize,
     /// Loop iterations consumed (≤ k_max).
@@ -60,6 +64,29 @@ pub fn rank_latencies(a: &Assignment, model: &MoeModel, hw: &HardwareProfile) ->
     LatencyState::from_assignment(a, model, hw).latencies()
 }
 
+/// Eq. 8 objective with inter-node rail congestion added (topology-aware
+/// planning over a multi-node [`Fabric`]).
+pub fn rank_latencies_on(
+    a: &Assignment,
+    model: &MoeModel,
+    hw: &HardwareProfile,
+    fabric: Option<&Fabric>,
+) -> Vec<f64> {
+    LatencyState::from_assignment_on(a, model, hw, fabric).latencies()
+}
+
+/// Per-node inter-node traffic terms of the eq. 8 objective: every
+/// cross-node flow loads its source node's egress rails and its target
+/// node's ingress rails, which all ranks of the node share.
+#[derive(Debug, Clone)]
+struct RailCongestion {
+    node_of: Vec<usize>,
+    n_in: Vec<f64>,
+    n_out: Vec<f64>,
+    /// Effective aggregate rail bandwidth per node per direction.
+    bw: f64,
+}
+
 /// Incrementally-maintained per-rank latency terms of the eq. 8
 /// objective. A flow shift touches O(1) ranks, so the greedy loop pays
 /// O(shift) instead of the full O(E·ep²) recompute per candidate.
@@ -73,12 +100,36 @@ pub struct LatencyState {
     v_out: Vec<f64>,
     /// tokens_on(e, r), indexed `e * ep + r`.
     tok: Vec<f64>,
+    /// Per-node rail congestion terms (None = flat / topology-blind:
+    /// the scalar objective, unchanged from the pre-fabric planner).
+    rail: Option<RailCongestion>,
 }
 
 impl LatencyState {
     pub fn from_assignment(a: &Assignment, model: &MoeModel, hw: &HardwareProfile) -> LatencyState {
+        Self::from_assignment_on(a, model, hw, None)
+    }
+
+    /// Build the state, optionally carrying per-link (rail) congestion
+    /// for a multi-node fabric. A flat fabric degenerates to the scalar
+    /// objective.
+    pub fn from_assignment_on(
+        a: &Assignment,
+        model: &MoeModel,
+        hw: &HardwareProfile,
+        fabric: Option<&Fabric>,
+    ) -> LatencyState {
         let ep = a.ep;
         let tb = model.token_bytes();
+        let rail = match fabric {
+            Some(f) if !f.is_flat() => Some(RailCongestion {
+                node_of: (0..ep).map(|r| f.node_of(r)).collect(),
+                n_in: vec![0.0; f.n_nodes()],
+                n_out: vec![0.0; f.n_nodes()],
+                bw: f.rail_bw() * f.inter.efficiency,
+            }),
+            _ => None,
+        };
         let mut st = LatencyState {
             ep,
             token_bytes: tb,
@@ -87,6 +138,7 @@ impl LatencyState {
             v_in: vec![0.0; ep],
             v_out: vec![0.0; ep],
             tok: vec![0.0; a.n_experts * ep],
+            rail,
         };
         for e in 0..a.n_experts {
             for rt in 0..ep {
@@ -103,6 +155,12 @@ impl LatencyState {
                         let x = a.get(e, rs, rt);
                         if x > 0.0 {
                             st.v_out[rs] += x * tb;
+                            if let Some(rc) = st.rail.as_mut() {
+                                if rc.node_of[rs] != rc.node_of[rt] {
+                                    rc.n_out[rc.node_of[rs]] += x * tb;
+                                    rc.n_in[rc.node_of[rt]] += x * tb;
+                                }
+                            }
                         }
                     }
                 }
@@ -113,7 +171,15 @@ impl LatencyState {
 
     #[inline]
     pub fn latency(&self, r: usize) -> f64 {
-        self.comp[r] + self.v_in[r].max(self.v_out[r]) / self.bw
+        let port = self.v_in[r].max(self.v_out[r]) / self.bw;
+        let traffic = match &self.rail {
+            None => port,
+            Some(rc) => {
+                let n = rc.node_of[r];
+                port.max(rc.n_in[n].max(rc.n_out[n]) / rc.bw)
+            }
+        };
+        self.comp[r] + traffic
     }
 
     pub fn latencies(&self) -> Vec<f64> {
@@ -164,6 +230,18 @@ impl LatencyState {
             let sign = if is_remote { 1.0 } else { -1.0 };
             self.v_out[rs] += sign * x * tb;
         }
+        if let Some(rc) = self.rail.as_mut() {
+            // the rs→from flow shrinks, the rs→to flow grows; each loads
+            // the rails only when it crosses nodes
+            if rc.node_of[rs] != rc.node_of[from] {
+                rc.n_out[rc.node_of[rs]] -= x * tb;
+                rc.n_in[rc.node_of[from]] -= x * tb;
+            }
+            if rc.node_of[rs] != rc.node_of[to] {
+                rc.n_out[rc.node_of[rs]] += x * tb;
+                rc.n_in[rc.node_of[to]] += x * tb;
+            }
+        }
     }
 }
 
@@ -189,11 +267,9 @@ fn drop_cold_replicas(placement: &mut Placement, counts_by_source: &[Vec<f64>]) 
     }
 }
 
-/// Algorithm 1 with delta planning. `counts_by_source[e][rs]` are the
-/// *predicted* per-expert per-source token counts for the target layer;
-/// `resident` is the placement currently in HBM for that layer (replicas
-/// fetched by earlier plans); `windows[r]` is the per-rank hiding window
-/// (seconds of overlappable compute) budgeting NEW fetches only.
+/// Algorithm 1 with delta planning on a flat (single-node) fabric — the
+/// pre-fabric planner, preserved for single-node call sites. See
+/// [`plan_fabric`].
 pub fn plan(
     counts_by_source: &[Vec<f64>],
     resident: &Placement,
@@ -202,8 +278,66 @@ pub fn plan(
     windows: &[f64],
     cfg: &ProbeConfig,
 ) -> PlanOutcome {
+    plan_fabric(
+        counts_by_source,
+        resident,
+        model,
+        hw,
+        &Fabric::flat(resident.ep, hw),
+        windows,
+        cfg,
+    )
+}
+
+/// Source rank a replica of `e` is fetched from onto `dst`. Topology-
+/// aware planning prefers a host inside `dst`'s node (NVSwitch-speed
+/// copy); blind planning (and flat fabrics) always reads from the first
+/// host — the home shard.
+fn pick_source(
+    placement: &Placement,
+    e: usize,
+    dst: usize,
+    fabric: &Fabric,
+    aware: bool,
+) -> usize {
+    let hosts = placement.ranks_hosting(e); // home first
+    if !aware {
+        return hosts[0];
+    }
+    hosts
+        .iter()
+        .copied()
+        .find(|&r| fabric.same_node(r, dst))
+        .unwrap_or(hosts[0])
+}
+
+/// Algorithm 1 with delta planning over an interconnect [`Fabric`].
+/// `counts_by_source[e][rs]` are the *predicted* per-expert per-source
+/// token counts for the target layer; `resident` is the placement
+/// currently in HBM for that layer (replicas fetched by earlier plans);
+/// `windows[r]` is the per-rank hiding window (seconds of overlappable
+/// compute) budgeting NEW fetches only.
+///
+/// Topology-aware mode (`cfg.topology_aware`, multi-node fabrics):
+/// replica fetches prefer intra-node sources, the single per-rank window
+/// check becomes per-link feasibility (destination port, per-flow rail
+/// line rate, shared node rail aggregates), and the greedy objective's
+/// [`LatencyState`] carries per-node rail congestion. Topology-blind
+/// mode keeps the scalar checks — the ablation `probe bench fabric`
+/// compares against.
+pub fn plan_fabric(
+    counts_by_source: &[Vec<f64>],
+    resident: &Placement,
+    model: &MoeModel,
+    hw: &HardwareProfile,
+    fabric: &Fabric,
+    windows: &[f64],
+    cfg: &ProbeConfig,
+) -> PlanOutcome {
     let ep = resident.ep;
     assert_eq!(windows.len(), ep);
+    let aware = cfg.topology_aware && !fabric.is_flat();
+    let fab_opt = if aware { Some(fabric) } else { None };
     let mut placement = resident.clone();
     if cfg.delta_plan {
         drop_cold_replicas(&mut placement, counts_by_source);
@@ -213,20 +347,35 @@ pub fn plan(
     let retained_replicas = placement.total_replicas();
 
     let mut a = Assignment::locality_first_from_counts(counts_by_source, &placement);
-    let mut st = LatencyState::from_assignment(&a, model, hw);
+    let mut st = LatencyState::from_assignment_on(&a, model, hw, fab_opt);
     let est_before = st.max_latency();
 
     // Zero-cost reuse: water-fill over the retained replicas before any
     // new fetch is considered (no transfer, no slot, no budget charge).
     if retained_replicas > 0 {
-        a = polish_assignment(a, &placement, model, hw, 16);
-        st = LatencyState::from_assignment(&a, model, hw);
+        a = polish_assignment_on(a, &placement, model, hw, fab_opt, 16);
+        st = LatencyState::from_assignment_on(&a, model, hw, fab_opt);
     }
 
+    // min hiding window per node: shared rail budgets must fit the
+    // tightest window among the ranks the rails serve
+    let node_win: Vec<f64> = (0..fabric.n_nodes())
+        .map(|n| {
+            (0..ep)
+                .filter(|&r| fabric.node_of(r) == n)
+                .map(|r| windows[r])
+                .fold(f64::INFINITY, f64::min)
+        })
+        .collect();
+
     let mut fetches: Vec<Vec<usize>> = vec![Vec::new(); ep];
+    let mut fetch_flows: Vec<Flow> = Vec::new();
+    let mut node_out_slots = vec![0usize; fabric.n_nodes()];
+    let mut node_in_slots = vec![0usize; fabric.n_nodes()];
     let mut invalid: Vec<(usize, usize)> = Vec::new();
     let mut iterations = 0usize;
     let eps = est_before * 1e-3;
+    let expert_bytes = model.expert_param_bytes();
 
     loop {
         if iterations >= cfg.k_max {
@@ -245,6 +394,7 @@ pub fn plan(
             invalid.push((r_src, r_dst));
             continue;
         };
+        let fetch_src = pick_source(&placement, e_star, r_dst, fabric, aware);
 
         // dual-side budget check (eq. 6 vs hiding window): the fetch on
         // r_dst and the slot overwrite (evict) both bound the same slot
@@ -255,6 +405,30 @@ pub fn plan(
             if transfer_time(slots_after, model, hw) > windows[r_dst] {
                 invalid.push((r_src, r_dst));
                 continue;
+            }
+            if aware && !fabric.same_node(fetch_src, r_dst) {
+                // per-link feasibility for the cross-node path: the
+                // flow's own rail line rate + rendezvous latency, then
+                // the shared node egress/ingress rail aggregates
+                let t_flow = fabric.transfer_time_flow(&Flow {
+                    src: fetch_src,
+                    dst: r_dst,
+                    bytes: expert_bytes,
+                });
+                if t_flow > windows[r_dst] {
+                    invalid.push((r_src, r_dst));
+                    continue;
+                }
+                let ns = fabric.node_of(fetch_src);
+                let nd = fabric.node_of(r_dst);
+                let t_rail =
+                    |slots: usize| slots as f64 * expert_bytes / fabric.rail_bw();
+                if t_rail(node_out_slots[ns] + 1) > node_win[ns]
+                    || t_rail(node_in_slots[nd] + 1) > node_win[nd]
+                {
+                    invalid.push((r_src, r_dst));
+                    continue;
+                }
             }
         }
         if placement.slots_free(r_dst) == 0 {
@@ -288,6 +462,15 @@ pub fn plan(
             .add_replica(e_star, r_dst)
             .expect("slot availability pre-checked");
         fetches[r_dst].push(e_star);
+        fetch_flows.push(Flow {
+            src: fetch_src,
+            dst: r_dst,
+            bytes: expert_bytes,
+        });
+        if !fabric.same_node(fetch_src, r_dst) {
+            node_out_slots[fabric.node_of(fetch_src)] += 1;
+            node_in_slots[fabric.node_of(r_dst)] += 1;
+        }
         a = a2;
         st = st2;
     }
@@ -297,6 +480,7 @@ pub fn plan(
         placement,
         assignment: a,
         fetches,
+        fetch_flows,
         retained_replicas,
         iterations,
         est_before,
@@ -425,8 +609,21 @@ pub fn rebalance_existing(
     hw: &HardwareProfile,
     iters: usize,
 ) -> Assignment {
+    rebalance_existing_on(counts_by_source, placement, model, hw, None, iters)
+}
+
+/// [`rebalance_existing`] with optional rail congestion in the objective
+/// (topology-aware dispatch rebalancing on multi-node fabrics).
+pub fn rebalance_existing_on(
+    counts_by_source: &[Vec<f64>],
+    placement: &Placement,
+    model: &MoeModel,
+    hw: &HardwareProfile,
+    fabric: Option<&Fabric>,
+    iters: usize,
+) -> Assignment {
     let a = Assignment::locality_first_from_counts(counts_by_source, placement);
-    polish_assignment(a, placement, model, hw, iters)
+    polish_assignment_on(a, placement, model, hw, fabric, iters)
 }
 
 /// Iteratively improve an assignment over a FIXED placement: move remote
@@ -434,13 +631,27 @@ pub fn rebalance_existing(
 /// loaded replicas (pairwise equalization). Candidates that fail to
 /// improve are skipped, not fatal.
 pub fn polish_assignment(
-    mut a: Assignment,
+    a: Assignment,
     placement: &Placement,
     model: &MoeModel,
     hw: &HardwareProfile,
     iters: usize,
 ) -> Assignment {
-    let mut lat = rank_latencies(&a, model, hw);
+    polish_assignment_on(a, placement, model, hw, None, iters)
+}
+
+/// [`polish_assignment`] under the fabric-aware objective: with a
+/// multi-node fabric the bottleneck metric includes rail congestion, so
+/// the polish also sheds cross-node traffic when the rails bind.
+pub fn polish_assignment_on(
+    mut a: Assignment,
+    placement: &Placement,
+    model: &MoeModel,
+    hw: &HardwareProfile,
+    fabric: Option<&Fabric>,
+    iters: usize,
+) -> Assignment {
+    let mut lat = rank_latencies_on(&a, model, hw, fabric);
     let mut dead: Vec<(usize, usize)> = Vec::new(); // (expert, dst) that failed
     for _ in 0..iters {
         let r_src = argmax(&lat);
@@ -495,7 +706,7 @@ pub fn polish_assignment(
                     break;
                 }
             }
-            let lat2 = rank_latencies(&a2, model, hw);
+            let lat2 = rank_latencies_on(&a2, model, hw, fabric);
             if lat2[argmax(&lat2)] < lat[r_src] - 1e-12 {
                 a = a2;
                 lat = lat2;
@@ -727,6 +938,81 @@ mod tests {
         // and the balance quality does not regress
         assert!(second.est_after <= first.est_after * 1.05);
         second.placement.validate().unwrap();
+    }
+
+    #[test]
+    fn fetch_sources_prefer_intra_node() {
+        let fabric = Fabric::multi_node_ratio(4, 2, &HardwareProfile::hopper_141(), 0.25, 2);
+        let mut p = Placement::sharded(4, 8, 3);
+        // expert 0: home rank 0 (node 0), resident replica on rank 2 (node 1)
+        p.add_replica(0, 2).unwrap();
+        assert_eq!(pick_source(&p, 0, 3, &fabric, true), 2, "same-node copy");
+        assert_eq!(pick_source(&p, 0, 3, &fabric, false), 0, "blind reads home");
+        assert_eq!(pick_source(&p, 0, 1, &fabric, true), 0, "home is already intra");
+        // expert 5 (home rank 2, node 1) fetched into node 0: no intra
+        // host exists, fall back to the home shard
+        assert_eq!(pick_source(&p, 5, 0, &fabric, true), 2);
+    }
+
+    #[test]
+    fn rail_infeasible_fetches_stay_intra_node_when_aware() {
+        let model = MoeModel::gpt_oss_120b();
+        let hw = HardwareProfile::hopper_141();
+        let mut rm = RoutingModel::calibrated(1, model.n_experts, model.top_k, 3, 27);
+        let routing = rm.route_step(&vec![0u16; 8192]).layers.remove(0);
+        let counts: Vec<Vec<f64>> = routing
+            .expert_counts_by_source(16)
+            .into_iter()
+            .map(|v| v.into_iter().map(|c| c as f64).collect())
+            .collect();
+        let base = Placement::sharded(16, model.n_experts, 3);
+        // rails at 1/16 of NVSwitch: a cross-node expert copy takes 16×
+        // the window; intra copies fit two slots
+        let fabric = Fabric::multi_node_ratio(16, 2, &hw, 1.0 / 16.0, 2);
+        let windows = vec![transfer_time(2, &model, &hw); 16];
+        let mut cfg = ProbeConfig::default();
+        cfg.topology_aware = true;
+        let aware = plan_fabric(&counts, &base, &model, &hw, &fabric, &windows, &cfg);
+        cfg.topology_aware = false;
+        let blind = plan_fabric(&counts, &base, &model, &hw, &fabric, &windows, &cfg);
+        assert!(blind.total_fetches() > 0, "blind planner fetched nothing");
+        let cross = |o: &PlanOutcome| {
+            o.fetch_flows
+                .iter()
+                .filter(|f| !fabric.same_node(f.src, f.dst))
+                .count()
+        };
+        assert_eq!(cross(&aware), 0, "aware planner scheduled a rail-infeasible fetch");
+        assert!(cross(&blind) >= cross(&aware));
+        assert_eq!(aware.fetch_flows.len(), aware.total_fetches());
+    }
+
+    #[test]
+    fn incremental_rail_state_matches_full_recompute() {
+        let (counts, base, model, hw) = setup(4096, 29);
+        let fabric = Fabric::multi_node_ratio(8, 2, &hw, 0.125, 2);
+        let mut placement = base.clone();
+        placement.add_replica(0, 7).unwrap();
+        placement.add_replica(1, 6).unwrap();
+        let mut a = Assignment::locality_first_from_counts(&counts, &placement);
+        let mut st = LatencyState::from_assignment_on(&a, &model, &hw, Some(&fabric));
+        // shifts that cross and re-cross the node boundary (ranks 0–3
+        // node 0, ranks 4–7 node 1)
+        for (e, rs, from, to, x) in [
+            (0usize, 2usize, 0usize, 7usize, 5.0f64),
+            (0, 3, 0, 7, 11.0),
+            (1, 5, 0, 6, 7.0),
+            (0, 2, 7, 0, 2.0),
+        ] {
+            let moved = a.shift(e, rs, from, to, x);
+            st.apply_shift(e, rs, from, to, moved, &model, &hw);
+        }
+        let full =
+            LatencyState::from_assignment_on(&a, &model, &hw, Some(&fabric)).latencies();
+        let inc = st.latencies();
+        for (r, (f, i)) in full.iter().zip(&inc).enumerate() {
+            assert!((f - i).abs() < 1e-9, "rank {r}: full {f} vs incremental {i}");
+        }
     }
 
     #[test]

@@ -16,10 +16,20 @@
 //! `exposed` and extends the critical path. With split-phase disabled
 //! (ablation) end-of-layer leftovers contend with Combine and inflate it
 //! instead.
+//!
+//! Fabric-aware accounting (ISSUE 3): queue items are routed flows over
+//! [`crate::fabric::Fabric`] links; every hiding window grants each link
+//! a budget and items drain greedy-by-deadline against the minimum
+//! available budget along their path, so transfers sharing a slow
+//! inter-node rail serialize while disjoint paths proceed in parallel.
+//! Dispatch/Combine use the hierarchical All-to-All when a traffic
+//! matrix is provided. On a flat (single-node) fabric all of this
+//! degenerates to the exact pre-fabric scalar arithmetic.
 
+use crate::fabric::{Fabric, Flow};
 use crate::metrics::{LayerTimeline, Phase, PhaseSpan};
 use crate::model::MoeModel;
-use crate::perfmodel::{self, CommVolumes};
+use crate::perfmodel::{self, CommVolumes, TrafficMatrix};
 use crate::topology::HardwareProfile;
 
 /// Per-layer scheduling inputs produced by a balancer + the perf model.
@@ -29,6 +39,13 @@ pub struct LayerSchedule {
     pub compute: Vec<f64>,
     /// Dispatch traffic volumes (token-level dedup applied).
     pub dispatch: CommVolumes,
+    /// Per-pair dispatch traffic for hierarchical All-to-All accounting;
+    /// `None` on flat fabrics (the scalar volume model is exact there).
+    pub dispatch_matrix: Option<TrafficMatrix>,
+    /// Routed prefetch flows (src → dst) behind `prefetch_slots`, used
+    /// by multi-node fabrics to charge per-link budgets. Empty = derive
+    /// conservative same-node flows from the slot counts.
+    pub prefetch_flows: Vec<Flow>,
     /// Attention seconds for this layer (balanced across DP ranks).
     pub attn_time: f64,
     /// Expert prefetch slots per rank ENQUEUED during this layer — the
@@ -50,14 +67,50 @@ pub struct LayerSchedule {
     pub pre_dispatch_fraction: f64,
 }
 
-/// One pending expert transfer moving through the hiding windows.
+/// One pending expert transfer moving through the hiding windows, routed
+/// over a set of fabric links.
 #[derive(Debug, Clone)]
 pub struct PrefetchItem {
-    /// Transfer seconds still to transmit.
+    /// Transfer seconds still to transmit *at the flow's own line rate*
+    /// (`rate`); exposure and queue pending are reported in these
+    /// seconds, matching the pre-fabric scalar accounting.
     pub remaining: f64,
+    /// Line rate of the flow's path (bytes/s).
+    pub rate: f64,
+    /// Fabric link indices the flow occupies (single index 0 on a flat
+    /// fabric, where all prefetch traffic shares one `net_bw` pipe).
+    pub links: Vec<u32>,
     /// Hiding windows (layers) left before the target layer executes;
     /// 0 = the target layer is the one being scheduled now.
     pub due_in: usize,
+}
+
+impl PrefetchItem {
+    /// Drain this item against per-link budgets (`avail[l]` =
+    /// link-seconds left in the window) and the phase's wall-clock
+    /// duration `wall`: a flow transmits at its own line rate, so it can
+    /// send at most `wall` seconds of line-rate time per phase even when
+    /// a link aggregate (e.g. a multi-rail node) is wider than its path
+    /// rate. A flow slower than a link consumes proportionally less of
+    /// that link's time; on a flat fabric the factor is exactly 1.0 and
+    /// `wall` equals the single link's budget, so this reduces to the
+    /// scalar serial drain. Returns the seconds transmitted.
+    fn drain(&mut self, avail: &mut [f64], wall: f64, fabric: &Fabric) -> f64 {
+        let mut limit = self.remaining.min(wall.max(0.0));
+        for &l in &self.links {
+            let f = fabric.link_raw_bw(l as usize) / self.rate;
+            limit = limit.min((avail[l as usize] * f).max(0.0));
+        }
+        let sent = limit.max(0.0);
+        if sent > 0.0 {
+            self.remaining -= sent;
+            for &l in &self.links {
+                let f = fabric.link_raw_bw(l as usize) / self.rate;
+                avail[l as usize] -= sent / f;
+            }
+        }
+        sent
+    }
 }
 
 /// Pending prefetch transfers carried across layers and steps
@@ -86,13 +139,97 @@ impl PrefetchQueue {
     }
 }
 
-/// Build the dual-track timeline for one MoE layer, draining `queue`
-/// through this layer's hiding window.
+/// Build the dual-track timeline for one MoE layer on a flat
+/// (single-node) fabric — the pre-fabric scalar model. Thin wrapper over
+/// [`schedule_layer_fabric`]; kept for the many single-node call sites.
 pub fn schedule_layer(
     s: &LayerSchedule,
     queue: &mut PrefetchQueue,
     model: &MoeModel,
     hw: &HardwareProfile,
+) -> LayerTimeline {
+    let fabric = Fabric::flat(s.compute.len(), hw);
+    schedule_layer_fabric(s, queue, model, hw, &fabric)
+}
+
+/// Convert this layer's enqueued fetches into routed queue items. Flat
+/// fabrics aggregate to ONE item at the scalar `transfer_time` of the
+/// max-slot rank (per-rank NVSwitch ports transfer in parallel; the
+/// leader view tracks the slowest — exactly the pre-fabric accounting).
+/// Multi-node fabrics enqueue one item per (src, dst) flow group so
+/// rail contention is charged where it occurs.
+fn new_prefetch_items(
+    s: &LayerSchedule,
+    model: &MoeModel,
+    hw: &HardwareProfile,
+    fabric: &Fabric,
+) -> Vec<PrefetchItem> {
+    let due = s.prefetch_lookahead.max(1);
+    let max_slots = s.prefetch_slots.iter().copied().max().unwrap_or(0);
+    if fabric.is_flat() {
+        let t_new = perfmodel::transfer_time(max_slots, model, hw);
+        if t_new <= 0.0 {
+            return Vec::new();
+        }
+        return vec![PrefetchItem {
+            remaining: t_new,
+            rate: fabric.intra.bw,
+            links: vec![0],
+            due_in: due,
+        }];
+    }
+    if !s.prefetch_flows.is_empty() {
+        // group by (src, dst): one stream per pair
+        let mut grouped: std::collections::BTreeMap<(usize, usize), f64> =
+            std::collections::BTreeMap::new();
+        for f in &s.prefetch_flows {
+            *grouped.entry((f.src, f.dst)).or_insert(0.0) += f.bytes;
+        }
+        return grouped
+            .into_iter()
+            .filter(|&(_, bytes)| bytes > 0.0)
+            .map(|((src, dst), bytes)| {
+                let (rate, links) = fabric.prefetch_path(src, dst);
+                // cross-node streams pay one rail rendezvous up front
+                // (consistent with Fabric::transfer_time_flow)
+                let base = if fabric.same_node(src, dst) {
+                    0.0
+                } else {
+                    fabric.inter.base_latency
+                };
+                PrefetchItem {
+                    remaining: bytes / rate + base,
+                    rate,
+                    links,
+                    due_in: due,
+                }
+            })
+            .collect();
+    }
+    // no routed flows provided: conservative same-node streams per rank
+    s.prefetch_slots
+        .iter()
+        .enumerate()
+        .filter(|&(_, &slots)| slots > 0)
+        .map(|(r, &slots)| PrefetchItem {
+            remaining: perfmodel::transfer_time(slots, model, hw),
+            rate: fabric.intra.bw,
+            links: vec![fabric.link_rank_in(r) as u32],
+            due_in: due,
+        })
+        .collect()
+}
+
+/// Build the dual-track timeline for one MoE layer, draining `queue`
+/// through this layer's hiding window. Prefetch and All-to-All are
+/// charged against the fabric's shared per-link budgets; a flat fabric
+/// reproduces the pre-fabric single-track accounting exactly.
+pub fn schedule_layer_fabric(
+    s: &LayerSchedule,
+    queue: &mut PrefetchQueue,
+    model: &MoeModel,
+    hw: &HardwareProfile,
+    fabric: &Fabric,
 ) -> LayerTimeline {
     let ep = s.compute.len();
     let bw = hw.effective_alltoall_bw();
@@ -100,23 +237,40 @@ pub fn schedule_layer(
     // was already streamed during the previous window; only the residual
     // (mispredicted / low-confidence) volume is on the critical path.
     let residual = (1.0 - s.pre_dispatch_fraction).clamp(0.0, 1.0);
-    let dispatch_vol = perfmodel::CommVolumes {
-        v_in: s.dispatch.v_in.iter().map(|v| v * residual).collect(),
-        v_out: s.dispatch.v_out.iter().map(|v| v * residual).collect(),
-    };
-    let dispatch_dur = perfmodel::alltoall_time(&dispatch_vol, hw);
-    let crit = dispatch_vol.critical();
+    let (dispatch_dur, mut combine_dur, own_disp): (f64, f64, Vec<f64>) =
+        match (&s.dispatch_matrix, fabric.is_flat()) {
+            (Some(m), false) => {
+                // hierarchical All-to-All over the link graph
+                let (own, dur) = fabric.dispatch_rank_times(&m.scaled(residual));
+                let combine = fabric.alltoall_time(&m.transposed());
+                (dur, combine, own)
+            }
+            _ => {
+                // scalar bottleneck-rank model (exact on one node)
+                let dispatch_vol = perfmodel::CommVolumes {
+                    v_in: s.dispatch.v_in.iter().map(|v| v * residual).collect(),
+                    v_out: s.dispatch.v_out.iter().map(|v| v * residual).collect(),
+                };
+                let dur = perfmodel::alltoall_time(&dispatch_vol, hw);
+                let own = dispatch_vol
+                    .critical()
+                    .iter()
+                    .map(|&c| hw.collective_base_latency + c / bw)
+                    .collect();
+                // Combine mirrors dispatch volumes with directions swapped.
+                let combine_vol = CommVolumes {
+                    v_in: s.dispatch.v_out.clone(),
+                    v_out: s.dispatch.v_in.clone(),
+                };
+                (dur, perfmodel::alltoall_time(&combine_vol, hw), own)
+            }
+        };
 
-    // Combine mirrors dispatch volumes with directions swapped.
-    let combine_vol = CommVolumes {
-        v_in: s.dispatch.v_out.clone(),
-        v_out: s.dispatch.v_in.clone(),
-    };
-    let mut combine_dur = perfmodel::alltoall_time(&combine_vol, hw);
-
-    // ---- prefetch accounting (split-phase, cross-layer queue) ----
+    // ---- prefetch accounting (split-phase, cross-layer queue, shared
+    // per-link budgets) ----
     let plan_done = s.predict_time + s.plan_time;
     let compute_max = s.compute.iter().cloned().fold(0.0, f64::max);
+    let n_links = fabric.link_count();
     let mut exposed = 0.0;
 
     // most urgent first
@@ -128,13 +282,11 @@ pub fn schedule_layer(
     // items may also stream. Attention-resume transmission IS the
     // split-phase mechanism, so the ablation without it gets no
     // attention window at all.
-    let mut attn_budget = if s.split_phase { s.attn_time } else { 0.0 };
+    let attn_window = if s.split_phase { s.attn_time } else { 0.0 };
+    let mut avail = vec![attn_window; n_links];
     let mut attn_sent = 0.0;
     for item in queue.items.iter_mut() {
-        let sent = item.remaining.min(attn_budget);
-        item.remaining -= sent;
-        attn_budget -= sent;
-        attn_sent += sent;
+        attn_sent += item.drain(&mut avail, attn_window, fabric);
         if item.due_in == 0 && item.remaining > 0.0 {
             exposed += item.remaining;
             item.remaining = 0.0;
@@ -143,33 +295,22 @@ pub fn schedule_layer(
     queue.items.retain(|i| i.remaining > 1e-15);
 
     // Phase B — Dispatch + MoE compute: backlog transmits from the start
-    // of Dispatch; the transfer enqueued THIS layer can only start once
-    // its plan lands (predict + plan on the aux track).
-    let max_slots = s.prefetch_slots.iter().copied().max().unwrap_or(0);
-    let t_new = perfmodel::transfer_time(max_slots, model, hw);
+    // of Dispatch; the transfers enqueued THIS layer can only start once
+    // their plan lands (predict + plan on the aux track).
     let cap = dispatch_dur + compute_max;
-    let mut used = 0.0;
+    let mut avail = vec![cap; n_links];
     let mut phase_b_sent = 0.0;
     for item in queue.items.iter_mut() {
-        let sent = item.remaining.min((cap - used).max(0.0));
-        item.remaining -= sent;
-        used += sent;
-        phase_b_sent += sent;
+        phase_b_sent += item.drain(&mut avail, cap, fabric);
     }
-    let mut new_item = if t_new > 0.0 {
-        let mut it = PrefetchItem {
-            remaining: t_new,
-            due_in: s.prefetch_lookahead.max(1),
-        };
-        let start = used.max(plan_done);
-        let sent = it.remaining.min((cap - start).max(0.0));
-        it.remaining -= sent;
-        used = start + sent;
-        phase_b_sent += sent;
-        Some(it)
-    } else {
-        None
-    };
+    let mut new_items = new_prefetch_items(s, model, hw, fabric);
+    let t_new: f64 = new_items.iter().map(|i| i.remaining).sum();
+    // plan-completion floor: what the backlog left, capped by the time
+    // remaining after predict+plan
+    let mut new_avail: Vec<f64> = avail.iter().map(|&a| a.min(cap - plan_done)).collect();
+    for item in new_items.iter_mut() {
+        phase_b_sent += item.drain(&mut new_avail, cap - plan_done, fabric);
+    }
 
     // Phase C — Combine: split-phase suspends transmission. Without it
     // (ablation) there is no resume window at the target layer, so any
@@ -179,16 +320,10 @@ pub fn schedule_layer(
     // the ablation.
     if !s.split_phase {
         let mut leftover = 0.0;
-        for item in queue.items.iter_mut() {
+        for item in queue.items.iter_mut().chain(new_items.iter_mut()) {
             if item.due_in <= 1 {
                 leftover += item.remaining;
                 item.remaining = 0.0;
-            }
-        }
-        if let Some(it) = new_item.as_mut() {
-            if it.due_in <= 1 {
-                leftover += it.remaining;
-                it.remaining = 0.0;
             }
         }
         combine_dur += leftover;
@@ -196,7 +331,7 @@ pub fn schedule_layer(
 
     // survivors carry to the next window, one deadline closer
     queue.items.retain(|i| i.remaining > 1e-15);
-    if let Some(it) = new_item {
+    for it in new_items {
         if it.remaining > 1e-15 {
             queue.items.push(it);
         }
@@ -220,16 +355,15 @@ pub fn schedule_layer(
             end: attn_end,
         });
         // own traffic first, then wait for the collective to complete
-        let own_disp = hw.collective_base_latency + crit[r] / bw;
         spans.push(PhaseSpan {
             phase: Phase::Dispatch,
             start: attn_end,
-            end: attn_end + own_disp,
+            end: attn_end + own_disp[r],
         });
-        if own_disp < dispatch_dur {
+        if own_disp[r] < dispatch_dur {
             spans.push(PhaseSpan {
                 phase: Phase::SyncWait,
-                start: attn_end + own_disp,
+                start: attn_end + own_disp[r],
                 end: dispatch_end,
             });
         }
@@ -352,6 +486,8 @@ mod tests {
                 v_in: vec![1e6; ep],
                 v_out: vec![1e6; ep],
             },
+            dispatch_matrix: None,
+            prefetch_flows: Vec::new(),
             attn_time: 100e-6,
             prefetch_slots: slots,
             prefetch_lookahead: 1,
@@ -506,6 +642,119 @@ mod tests {
         }
         assert!(q.is_empty(), "queue did not drain: {}", q.pending());
         assert_eq!(exposed, 0.0, "amortized transfer must stay hidden");
+    }
+
+    #[test]
+    fn flat_fabric_schedule_is_identity() {
+        // schedule_layer (scalar wrapper) and schedule_layer_fabric on an
+        // explicit flat fabric must produce identical timelines and queue
+        // state — the flat fabric IS the pre-fabric model
+        let s = mk_sched(vec![40e-6; 8], vec![2; 8], true);
+        let fabric = Fabric::flat(8, &hw());
+        let mut q1 = PrefetchQueue::new();
+        let mut q2 = PrefetchQueue::new();
+        for _ in 0..4 {
+            let a = schedule_layer(&s, &mut q1, &model(), &hw());
+            let b = schedule_layer_fabric(&s, &mut q2, &model(), &hw(), &fabric);
+            assert_eq!(a.exposed_overhead, b.exposed_overhead);
+            assert_eq!(a.makespan(), b.makespan());
+            assert_eq!(q1.pending(), q2.pending());
+        }
+    }
+
+    #[test]
+    fn cross_node_flows_drain_slower_than_intra() {
+        // identical byte demand; the cross-node flow rides a 1/8 rail and
+        // misses the deadline the intra-node flow meets
+        let h = hw();
+        let m = model();
+        let fabric = crate::fabric::Fabric::multi_node_ratio(16, 2, &h, 0.125, 2);
+        let run = |src: usize| -> f64 {
+            let mut q = PrefetchQueue::new();
+            let mut s = mk_sched(vec![150e-6; 16], vec![0; 16], true);
+            s.prefetch_slots[2] = 1;
+            s.prefetch_flows = vec![Flow {
+                src,
+                dst: 2,
+                bytes: m.expert_param_bytes(),
+            }];
+            s.attn_time = 20e-6;
+            let mut exposed =
+                schedule_layer_fabric(&s, &mut q, &m, &h, &fabric).exposed_overhead;
+            let s2 = mk_sched(vec![150e-6; 16], vec![0; 16], true);
+            exposed += schedule_layer_fabric(&s2, &mut q, &m, &h, &fabric).exposed_overhead;
+            exposed
+        };
+        let intra = run(5); // same node as rank 2
+        let cross = run(12); // other node
+        assert_eq!(intra, 0.0, "intra-node fetch must hide");
+        assert!(cross > 0.0, "rail-limited fetch must miss the window");
+    }
+
+    #[test]
+    fn shared_rail_budget_is_not_double_counted() {
+        // two cross-node flows into different dst ports share the node
+        // ingress rail: together they need twice the wall time of one
+        let h = hw();
+        let m = model();
+        let fabric = crate::fabric::Fabric::multi_node_ratio(16, 2, &h, 0.25, 1);
+        let drain_windows = |flows: Vec<Flow>| -> usize {
+            let mut q = PrefetchQueue::new();
+            let mut s = mk_sched(vec![100e-6; 16], vec![0; 16], true);
+            s.prefetch_slots[8] = 1;
+            s.prefetch_flows = flows;
+            s.prefetch_lookahead = 8; // generous deadline: count windows
+            s.attn_time = 0.0;
+            s.predict_time = 0.0;
+            s.plan_time = 0.0;
+            let _ = schedule_layer_fabric(&s, &mut q, &m, &h, &fabric);
+            let mut windows = 0usize;
+            while !q.is_empty() && windows < 32 {
+                let s2 = mk_sched(vec![100e-6; 16], vec![0; 16], true);
+                let _ = schedule_layer_fabric(&s2, &mut q, &m, &h, &fabric);
+                windows += 1;
+            }
+            windows
+        };
+        let b = m.expert_param_bytes();
+        let one = drain_windows(vec![Flow { src: 0, dst: 8, bytes: b }]);
+        let two = drain_windows(vec![
+            Flow { src: 0, dst: 8, bytes: b },
+            Flow { src: 1, dst: 9, bytes: b },
+        ]);
+        assert!(two > one, "shared rail must serialize: {one} vs {two} windows");
+    }
+
+    #[test]
+    fn single_cross_flow_capped_at_its_own_line_rate() {
+        // rails=2: the node aggregate is twice the flow's one-rail line
+        // rate, but a single flow rides one rail — per window it can
+        // send at most the window's wall time, not aggregate/rate times
+        // more
+        let h = hw();
+        let m = model();
+        let fabric = crate::fabric::Fabric::multi_node_ratio(16, 2, &h, 0.25, 2);
+        let mut q = PrefetchQueue::new();
+        let mut s = mk_sched(vec![100e-6; 16], vec![0; 16], true);
+        s.prefetch_slots[8] = 1;
+        s.prefetch_flows = vec![Flow {
+            src: 0,
+            dst: 8,
+            bytes: m.expert_param_bytes(),
+        }];
+        s.prefetch_lookahead = 8;
+        s.attn_time = 0.0;
+        s.predict_time = 0.0;
+        s.plan_time = 0.0;
+        let _ = schedule_layer_fabric(&s, &mut q, &m, &h, &fabric);
+        let t_total = m.expert_param_bytes() / fabric.path_rate(0, 8);
+        // window wall ≈ dispatch (~15µs) + compute (100µs) < 120µs
+        assert!(
+            q.pending() >= t_total - 120e-6,
+            "flow drained faster than its line rate: pending {} of {}",
+            q.pending(),
+            t_total
+        );
     }
 
     #[test]

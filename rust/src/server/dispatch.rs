@@ -61,6 +61,12 @@ pub struct Dispatcher {
     kind: DispatchKind,
     next_rr: usize,
     outstanding: Vec<f64>,
+    /// Optional replica→fabric-node grouping: when set, domain-affinity
+    /// spills prefer the least-loaded NODE first (replicas sharing a
+    /// node contend for the same inter-node rails, so spreading spill
+    /// traffic across nodes protects their prefetch windows). Off by
+    /// default — plain least-loaded replica.
+    node_of: Option<Vec<usize>>,
 }
 
 impl Dispatcher {
@@ -70,7 +76,18 @@ impl Dispatcher {
             kind,
             next_rr: 0,
             outstanding: vec![0.0; replicas],
+            node_of: None,
         }
+    }
+
+    /// Group replicas into fabric nodes of `replicas_per_node` each
+    /// (replica r lives on node r / replicas_per_node). Enables the
+    /// node-aware spill in [`DispatchKind::DomainAffinity`].
+    pub fn with_node_grouping(mut self, replicas_per_node: usize) -> Dispatcher {
+        assert!(replicas_per_node > 0);
+        let n = self.outstanding.len();
+        self.node_of = Some((0..n).map(|r| r / replicas_per_node).collect());
+        self
     }
 
     pub fn replicas(&self) -> usize {
@@ -96,6 +113,45 @@ impl Dispatcher {
         best
     }
 
+    /// Spill target for domain affinity: with node grouping, the least-
+    /// loaded replica WITHIN the least-loaded node that offers one;
+    /// otherwise the global least-loaded replica. The over-bound `home`
+    /// is never a candidate (without grouping that held implicitly:
+    /// a replica above 1.25× the fleet mean cannot be the global
+    /// minimum; with ragged grouping a node may contain only `home`,
+    /// so it must be excluded explicitly).
+    fn spill_target(&self, home: usize) -> usize {
+        let Some(nodes) = &self.node_of else {
+            return self.least_loaded();
+        };
+        let n_nodes = nodes.iter().max().copied().unwrap_or(0) + 1;
+        let mut node_load = vec![0.0f64; n_nodes];
+        for (r, &n) in nodes.iter().enumerate() {
+            node_load[n] += self.outstanding[r];
+        }
+        // least-loaded replica within the least-loaded node, considering
+        // only nodes that have a non-home replica
+        let mut best: Option<usize> = None;
+        for (r, &n) in nodes.iter().enumerate() {
+            if r == home {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some(b) => {
+                    let bn = nodes[b];
+                    node_load[n] < node_load[bn]
+                        || (node_load[n] == node_load[bn]
+                            && self.outstanding[r] < self.outstanding[b])
+                }
+            };
+            if better {
+                best = Some(r);
+            }
+        }
+        best.unwrap_or(home) // single-replica fleet: nowhere to spill
+    }
+
     /// Pick the replica for `req` and account its work.
     pub fn dispatch(&mut self, req: &Request) -> usize {
         let n = self.outstanding.len();
@@ -117,7 +173,7 @@ impl Dispatcher {
                 if self.outstanding[home] <= SPILL_FACTOR * (total + w) / n as f64 {
                     home
                 } else {
-                    self.least_loaded()
+                    self.spill_target(home)
                 }
             }
         };
@@ -193,6 +249,42 @@ mod tests {
             let domain = (i % 4) as u16;
             assert_eq!(d.dispatch(&req(i, domain, 10)), domain as usize);
         }
+    }
+
+    #[test]
+    fn node_grouped_spill_prefers_least_loaded_node() {
+        // replicas {0,1} = node 0, {2,3} = node 1. Node 0 carries far
+        // more work in aggregate, but replica 1 is the GLOBAL least
+        // loaded — a node-blind spill would pick it; the node-aware
+        // spill must route to node 1 instead.
+        let mut d = Dispatcher::new(DispatchKind::DomainAffinity, 4).with_node_grouping(2);
+        assert_eq!(d.dispatch(&req(0, 0, 100)), 0);
+        assert_eq!(d.dispatch(&req(1, 1, 10)), 1);
+        assert_eq!(d.dispatch(&req(2, 2, 30)), 2);
+        assert_eq!(d.dispatch(&req(3, 3, 30)), 3);
+        // flood domain 0: its home (replica 0) is over the spill bound
+        let pick = d.dispatch(&req(4, 0, 10));
+        assert!(pick == 2 || pick == 3, "spill left the cold node: {pick}");
+        // without grouping the same state spills to the global minimum
+        let mut blind = Dispatcher::new(DispatchKind::DomainAffinity, 4);
+        blind.dispatch(&req(0, 0, 100));
+        blind.dispatch(&req(1, 1, 10));
+        blind.dispatch(&req(2, 2, 30));
+        blind.dispatch(&req(3, 3, 30));
+        assert_eq!(blind.dispatch(&req(4, 0, 10)), 1);
+    }
+
+    #[test]
+    fn ragged_grouping_never_spills_back_to_home() {
+        // node 1 contains ONLY the overloaded home replica; the spill
+        // must leave it even though its node has the lower aggregate
+        let mut d = Dispatcher::new(DispatchKind::DomainAffinity, 4).with_node_grouping(3);
+        for r in 0..3u64 {
+            d.dispatch(&req(r, r as u16, 250)); // replicas 0..2 at 250
+        }
+        d.dispatch(&req(3, 3, 400)); // home of domain 3, node 1, alone
+        let pick = d.dispatch(&req(4, 3, 10));
+        assert_ne!(pick, 3, "spill returned the over-bound home");
     }
 
     #[test]

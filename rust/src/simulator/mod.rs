@@ -15,6 +15,7 @@
 //! fetches are charged to the windows where they actually transmit (the
 //! old `(l+1) % n_layers` wrap is gone).
 
+use crate::fabric::Flow;
 use crate::metrics::{LayerTimeline, Phase};
 use crate::model::MoeModel;
 use crate::perfmodel::{self, Assignment, DispatchPlan};
@@ -35,6 +36,11 @@ pub struct LayerDecision {
     /// new fetches of the plan created here for layer
     /// `l + prefetch_lookahead`.
     pub prefetch_slots: Vec<usize>,
+    /// Routed src→dst flows behind `prefetch_slots` (topology-aware
+    /// planners fill these; empty = scheduler derives conservative
+    /// same-node flows). Ignored on flat fabrics, which use the exact
+    /// pre-fabric aggregate accounting.
+    pub prefetch_flows: Vec<Flow>,
     /// Hiding windows between the enqueue and the target layer.
     pub prefetch_lookahead: usize,
     /// Aux-track control costs spent during this layer (for the plan
@@ -57,6 +63,7 @@ impl LayerDecision {
             placement,
             assignment,
             prefetch_slots: vec![0; ep],
+            prefetch_flows: Vec::new(),
             prefetch_lookahead: 0,
             predict_time: 0.0,
             plan_time: 0.0,
@@ -152,11 +159,24 @@ impl ClusterSim {
             let loads = d.assignment.rank_expert_loads();
             let compute = perfmodel::rank_compute_times(&loads, &self.model, hw);
             let plan = DispatchPlan::from_assignment(lr, &d.assignment);
-            let dispatch = perfmodel::comm_volumes(lr, &plan, ep, self.model.token_bytes());
+            // flat fabrics keep the exact scalar volume path; multi-node
+            // fabrics need the full matrix for hierarchical A2A phases
+            let fabric = &self.cluster.fabric;
+            let (dispatch, dispatch_matrix) = if fabric.is_flat() {
+                (
+                    perfmodel::comm_volumes(lr, &plan, ep, self.model.token_bytes()),
+                    None,
+                )
+            } else {
+                let m = perfmodel::comm_matrix(lr, &plan, ep, self.model.token_bytes());
+                (m.volumes(), Some(m))
+            };
 
             let sched = LayerSchedule {
                 compute: compute.clone(),
                 dispatch,
+                dispatch_matrix,
+                prefetch_flows: d.prefetch_flows.clone(),
                 attn_time: attn,
                 prefetch_slots: d.prefetch_slots.clone(),
                 prefetch_lookahead: d.prefetch_lookahead,
@@ -166,7 +186,13 @@ impl ClusterSim {
                 split_phase: self.split_phase,
                 pre_dispatch_fraction: d.pre_dispatch_fraction,
             };
-            let tl = scheduler::schedule_layer(&sched, &mut self.prefetch_queue, &self.model, hw);
+            let tl = scheduler::schedule_layer_fabric(
+                &sched,
+                &mut self.prefetch_queue,
+                &self.model,
+                hw,
+                fabric,
+            );
             prefetch_slots_total += d.total_prefetch_slots();
 
             let rank_tokens: Vec<f64> = (0..ep).map(|r| loads[r].iter().sum::<f64>()).collect();

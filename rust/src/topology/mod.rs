@@ -36,10 +36,13 @@ pub struct HardwareProfile {
 }
 
 impl HardwareProfile {
-    /// The paper's testbed: 8×NVIDIA Hopper-141GB, 900 GB/s NVSwitch.
-    pub fn hopper_141() -> HardwareProfile {
+    /// Shared-field base all Hopper-class variants derive from. Named
+    /// variants override the one or two fields that define them instead
+    /// of restating all twelve (fabric-era profiles add per-link
+    /// parameters through [`Cluster`] constructors, not new fields here).
+    fn hopper_base(name: &str) -> HardwareProfile {
         HardwareProfile {
-            name: "hopper-141".into(),
+            name: name.into(),
             peak_flops: 989e12,          // H200 dense BF16
             hbm_bw: 4.8e12,              // HBM3e
             net_bw: 450e9,               // 900 GB/s bidir => 450 GB/s per dir
@@ -53,14 +56,18 @@ impl HardwareProfile {
         }
     }
 
+    /// The paper's testbed: 8×NVIDIA Hopper-141GB, 900 GB/s NVSwitch.
+    pub fn hopper_141() -> HardwareProfile {
+        Self::hopper_base("hopper-141")
+    }
+
     /// A bandwidth-constrained variant (e.g. H800-like NVLink cap) used
     /// by the hardware-aware planning ablation: smaller hiding window per
     /// byte transferred.
     pub fn hopper_lowbw() -> HardwareProfile {
         HardwareProfile {
-            name: "hopper-lowbw".into(),
             net_bw: 200e9,
-            ..Self::hopper_141()
+            ..Self::hopper_base("hopper-lowbw")
         }
     }
 
@@ -68,10 +75,9 @@ impl HardwareProfile {
     /// overlap window (paper §2.3 "Enforcing Zero-Overhead Balancing").
     pub fn compute_heavy() -> HardwareProfile {
         HardwareProfile {
-            name: "compute-heavy".into(),
             peak_flops: 2.0e15,
             net_bw: 150e9,
-            ..Self::hopper_141()
+            ..Self::hopper_base("compute-heavy")
         }
     }
 
@@ -80,7 +86,6 @@ impl HardwareProfile {
     /// simulated windows are sane relative to wall-clock execution.
     pub fn cpu_host() -> HardwareProfile {
         HardwareProfile {
-            name: "cpu-host".into(),
             peak_flops: 200e9,
             hbm_bw: 40e9,
             net_bw: 10e9,
@@ -91,6 +96,7 @@ impl HardwareProfile {
             gemm_half_tokens: 32.0,
             gemm_max_eff: 0.7,
             gemm_tile: 16,
+            ..Self::hopper_base("cpu-host")
         }
     }
 
@@ -108,19 +114,67 @@ impl HardwareProfile {
     pub fn effective_alltoall_bw(&self) -> f64 {
         self.net_bw * self.alltoall_efficiency
     }
+
+    /// Intra-node link class of this profile (the NVSwitch port every
+    /// rank owns), consumed by [`crate::fabric::Fabric`] constructors.
+    pub fn intra_link(&self) -> LinkSpec {
+        LinkSpec {
+            bw: self.net_bw,
+            efficiency: self.alltoall_efficiency,
+            base_latency: self.collective_base_latency,
+        }
+    }
 }
 
-/// An EP cluster: `ep` identical ranks on one fabric.
+use crate::fabric::{Fabric, LinkSpec};
+
+/// An EP cluster: `ep` identical ranks on an interconnect [`Fabric`]
+/// (one node by default; multi-node via [`Cluster::multi_node`]).
 #[derive(Debug, Clone)]
 pub struct Cluster {
     pub ep: usize,
     pub profile: HardwareProfile,
+    pub fabric: Fabric,
 }
 
 impl Cluster {
+    /// Single-node cluster: the flat fabric reproduces the scalar
+    /// `net_bw` model exactly, so this is the pre-fabric behavior.
     pub fn new(ep: usize, profile: HardwareProfile) -> Cluster {
         assert!(ep >= 1);
-        Cluster { ep, profile }
+        let fabric = Fabric::flat(ep, &profile);
+        Cluster { ep, profile, fabric }
+    }
+
+    /// Alias of [`Cluster::new`] that names the topology explicitly.
+    pub fn flat(ep: usize, profile: HardwareProfile) -> Cluster {
+        Cluster::new(ep, profile)
+    }
+
+    /// Multi-node cluster: `ep` ranks split into `nodes` equal nodes,
+    /// with an explicit inter-node rail spec (`rails` per node).
+    pub fn multi_node(
+        ep: usize,
+        nodes: usize,
+        profile: HardwareProfile,
+        inter: LinkSpec,
+        rails: usize,
+    ) -> Cluster {
+        let fabric = Fabric::multi_node(ep, nodes, &profile, inter, rails);
+        Cluster { ep, profile, fabric }
+    }
+
+    /// Multi-node cluster with per-rail bandwidth as a fraction of the
+    /// intra-node port bandwidth (the `probe bench fabric` sweep axis).
+    pub fn multi_node_ratio(
+        ep: usize,
+        nodes: usize,
+        profile: HardwareProfile,
+        inter_bw_ratio: f64,
+        rails: usize,
+    ) -> Cluster {
+        let fabric = Fabric::multi_node_ratio(ep, nodes, &profile, inter_bw_ratio, rails);
+        Cluster { ep, profile, fabric }
     }
 
     /// The paper's default evaluation cluster.
@@ -146,6 +200,17 @@ mod tests {
         let c = Cluster::paper_testbed();
         assert_eq!(c.ep, 8);
         assert_eq!(c.profile.name, "hopper-141");
+        assert!(c.fabric.is_flat(), "default cluster must be single-node");
+        assert_eq!(c.fabric.intra.bw, c.profile.net_bw);
+    }
+
+    #[test]
+    fn multi_node_cluster_groups_ranks() {
+        let c = Cluster::multi_node_ratio(32, 4, HardwareProfile::hopper_141(), 0.125, 2);
+        assert_eq!(c.ep, 32);
+        assert_eq!(c.fabric.n_nodes(), 4);
+        assert_eq!(c.fabric.ranks_per_node, 8);
+        assert!(c.fabric.inter.bw < c.fabric.intra.bw);
     }
 
     #[test]

@@ -1,0 +1,177 @@
+//! Fabric equivalence and multi-node topology tests (ISSUE 3).
+//!
+//! The load-bearing property: a flat (single-node) `Fabric` reproduces
+//! the pre-fabric scalar network model within 1e-9 across randomized
+//! traffic, so every existing single-node experiment output is unchanged
+//! by the fabric subsystem. Plus end-to-end multi-node coverage through
+//! the config → balancer → simulator path.
+
+use probe::config::{BalancerKind, Config};
+use probe::coordinator::Coordinator;
+use probe::experiments::make_balancer;
+use probe::fabric::{Fabric, Flow};
+use probe::perfmodel::{self, TrafficMatrix};
+use probe::topology::HardwareProfile;
+use probe::util::proptest::check;
+use probe::prop_assert;
+use probe::workload::{Dataset, RequestGenerator, WorkloadSpec};
+
+fn hw() -> HardwareProfile {
+    HardwareProfile::hopper_141()
+}
+
+#[test]
+fn prop_flat_fabric_alltoall_matches_scalar() {
+    let h = hw();
+    check(200, 61, |g| {
+        let ep = g.usize_in(2..17);
+        let fabric = Fabric::flat(ep, &h);
+        let mut m = TrafficMatrix::new(ep);
+        for s in 0..ep {
+            for d in 0..ep {
+                // include diagonal entries: both models must ignore them
+                m.add(s, d, g.f64_in(0.0, 8e6));
+            }
+        }
+        let scalar = perfmodel::alltoall_time(&m.volumes(), &h);
+        let fab = fabric.alltoall_time(&m);
+        prop_assert!(
+            (fab - scalar).abs() < 1e-9,
+            "ep={ep}: fabric {fab} vs scalar {scalar}"
+        );
+        let (_, t2) = fabric.alltoall_phase_times(&m);
+        prop_assert!(t2 == 0.0, "flat fabric ran a rail phase: {t2}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_flat_fabric_transfer_matches_scalar() {
+    let h = hw();
+    let model = probe::model::MoeModel::gpt_oss_120b();
+    check(100, 67, |g| {
+        let ep = g.usize_in(2..17);
+        let fabric = Fabric::flat(ep, &h);
+        let slots = g.usize_in(0..6);
+        let scalar = perfmodel::transfer_time(slots, &model, &h);
+        let src = g.usize_in(0..ep);
+        let dst = g.usize_in(0..ep);
+        let flow = Flow {
+            src,
+            dst,
+            bytes: slots as f64 * model.expert_param_bytes(),
+        };
+        let fab = fabric.transfer_time_flow(&flow);
+        prop_assert!(
+            (fab - scalar).abs() < 1e-9,
+            "slots={slots}: fabric {fab} vs scalar {scalar}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hierarchical_alltoall_never_below_flat() {
+    // cross-node traffic can only slow a collective down relative to an
+    // all-NVSwitch fabric of the same size
+    let h = hw();
+    check(100, 71, |g| {
+        let nodes = *g.pick(&[2usize, 4]);
+        let ep = nodes * g.usize_in(2..5);
+        let flat = Fabric::flat(ep, &h);
+        let multi = Fabric::multi_node_ratio(ep, nodes, &h, g.f64_in(0.05, 0.5), 2);
+        let mut m = TrafficMatrix::new(ep);
+        for s in 0..ep {
+            for d in 0..ep {
+                if s != d {
+                    m.add(s, d, g.f64_in(0.0, 4e6));
+                }
+            }
+        }
+        let t_flat = flat.alltoall_time(&m);
+        let t_multi = multi.alltoall_time(&m);
+        prop_assert!(
+            t_multi >= t_flat - 1e-12,
+            "multi-node A2A faster than flat: {t_multi} vs {t_flat}"
+        );
+        Ok(())
+    });
+}
+
+fn run_decode(cfg: &Config, steps: usize, seed: u64) -> (f64, f64) {
+    let bal = make_balancer(cfg.balancer, cfg, seed);
+    let mut c = Coordinator::new(cfg.clone(), bal, seed);
+    let mut spec = WorkloadSpec::new(Dataset::Repeat, 4);
+    spec.mean_prompt_len = 8;
+    spec.mean_new_tokens = steps * 2;
+    let mut g = RequestGenerator::new(spec, seed ^ 3);
+    for r in g.take(cfg.global_batch() + 16) {
+        c.submit(r);
+    }
+    let outs = c.run_decode_steps(steps);
+    let lat: f64 = outs.iter().map(|o| o.latency).sum();
+    let exposed: f64 = outs.iter().map(|o| o.total_exposed()).sum();
+    (lat, exposed)
+}
+
+#[test]
+fn multi_node_config_serves_end_to_end() {
+    let text = r#"
+[balancer]
+kind = "probe"
+[cluster]
+ep = 16
+nodes = 2
+[fabric]
+inter_node_bw = 56.25e9
+rails = 2
+[workload]
+batch_per_rank = 96
+"#;
+    let mut cfg = Config::from_toml_str(text).unwrap();
+    cfg.model.n_layers = 4;
+    assert_eq!(cfg.cluster.fabric.n_nodes(), 2);
+    assert_eq!(cfg.balancer, BalancerKind::Probe);
+    let (lat_a, _) = run_decode(&cfg, 8, 9);
+    assert!(lat_a > 0.0);
+    // deterministic across identical runs
+    let (lat_b, _) = run_decode(&cfg, 8, 9);
+    assert_eq!(lat_a, lat_b);
+}
+
+#[test]
+fn slower_rails_slow_the_same_workload() {
+    let mk = |ratio: f64| -> Config {
+        let mut cfg = Config::from_toml_str(&format!(
+            "[balancer]\nkind = \"static\"\n[cluster]\nep = 16\nnodes = 2\n\
+             [fabric]\ninter_node_bw = {:.3e}\n[workload]\nbatch_per_rank = 96\n",
+            hw().net_bw * ratio
+        ))
+        .unwrap();
+        cfg.model.n_layers = 4;
+        cfg
+    };
+    let (fast, _) = run_decode(&mk(0.5), 6, 11);
+    let (slow, _) = run_decode(&mk(0.0625), 6, 11);
+    assert!(
+        slow > fast,
+        "1/16 rails not slower than 1/2 rails: {slow} vs {fast}"
+    );
+}
+
+#[test]
+fn flat_config_unchanged_by_fabric_subsystem() {
+    // the default (single-node) config must produce identical step
+    // latencies whether built via Cluster::new or Cluster::flat — and a
+    // probe run must have zero exposure exactly as before the fabric
+    let mut cfg = Config::default();
+    cfg.model.n_layers = 4;
+    cfg.batch_per_rank = 96;
+    cfg.balancer = BalancerKind::Probe;
+    let (lat1, exp1) = run_decode(&cfg, 10, 17);
+    let mut cfg2 = cfg.clone();
+    cfg2.cluster = probe::topology::Cluster::flat(8, HardwareProfile::hopper_141());
+    let (lat2, exp2) = run_decode(&cfg2, 10, 17);
+    assert_eq!(lat1, lat2);
+    assert_eq!(exp1, exp2);
+}

@@ -29,6 +29,7 @@ use crate::topology::HardwareProfile;
 
 use super::Balancer;
 
+/// The DeepSeek-EPLB baseline (see module docs).
 #[derive(Debug, Clone)]
 pub struct Eplb {
     model: MoeModel,
@@ -50,6 +51,7 @@ pub struct Eplb {
 }
 
 impl Eplb {
+    /// EPLB over the config's model/cluster shape with its own knobs.
     pub fn new(config: &Config, cfg: EplbConfig) -> Eplb {
         Eplb {
             model: config.model.clone(),

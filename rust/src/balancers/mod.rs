@@ -46,6 +46,7 @@ use crate::simulator::LayerDecision;
 /// argument exists because dispatch-time token assignment over the
 /// already-resident placement legally sees the router output.
 pub trait Balancer {
+    /// Policy name for logs and reports.
     fn name(&self) -> &'static str;
 
     /// Control-pipeline depth L: placements for layer `l` are emitted

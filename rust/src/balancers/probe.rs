@@ -55,6 +55,8 @@ struct PlannedLayer {
     pred_counts: Vec<Vec<f64>>,
 }
 
+/// The PROBE balancer: a depth-L continuous lookahead pipeline (see
+/// module docs).
 #[derive(Debug)]
 pub struct Probe {
     model: MoeModel,
@@ -63,6 +65,7 @@ pub struct Probe {
     /// pre-fabric scalar model; multi-node enables topology awareness).
     fabric: Fabric,
     ep: usize,
+    /// PROBE knobs the pipeline runs with.
     pub cfg: ProbeConfig,
     predictor: Box<dyn LookaheadPredictor>,
     /// EMA of per-rank MoE compute time — the hiding-window estimate.
@@ -90,6 +93,8 @@ pub struct Probe {
 }
 
 impl Probe {
+    /// PROBE over the config's model/cluster/fabric with its own knobs;
+    /// `seed` drives the statistical predictor's error process.
     pub fn new(config: &Config, cfg: ProbeConfig, seed: u64) -> Probe {
         let predictor: Box<dyn LookaheadPredictor> = match cfg.predictor_kind {
             PredictorKind::Statistical => {

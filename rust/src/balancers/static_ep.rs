@@ -15,6 +15,7 @@ use crate::simulator::LayerDecision;
 
 use super::Balancer;
 
+/// The SGLang-style static sharded EP baseline (see module docs).
 #[derive(Debug, Clone)]
 pub struct StaticEp {
     model: MoeModel,
@@ -22,6 +23,7 @@ pub struct StaticEp {
 }
 
 impl StaticEp {
+    /// Baseline over the config's model/cluster shape.
     pub fn new(cfg: &Config) -> StaticEp {
         StaticEp {
             model: cfg.model.clone(),

@@ -23,6 +23,7 @@ pub enum BalancerKind {
 }
 
 impl BalancerKind {
+    /// Resolve a balancer from its CLI/TOML name.
     pub fn by_name(s: &str) -> Option<BalancerKind> {
         match s {
             "static" | "sglang" => Some(BalancerKind::StaticEp),
@@ -31,6 +32,7 @@ impl BalancerKind {
             _ => None,
         }
     }
+    /// Canonical name used by the CLI, TOML config, and reports.
     pub fn name(&self) -> &'static str {
         match self {
             BalancerKind::StaticEp => "static",
@@ -52,6 +54,7 @@ pub enum PredictorKind {
 }
 
 impl PredictorKind {
+    /// Resolve a predictor from its CLI/TOML name.
     pub fn by_name(s: &str) -> Option<PredictorKind> {
         match s {
             "statistical" => Some(PredictorKind::Statistical),
@@ -59,6 +62,7 @@ impl PredictorKind {
             _ => None,
         }
     }
+    /// Canonical name used by the CLI, TOML config, and reports.
     pub fn name(&self) -> &'static str {
         match self {
             PredictorKind::Statistical => "statistical",
@@ -128,6 +132,7 @@ impl Default for ProbeConfig {
 /// to 2 decode steps; warm-up needs ~110 steps of statistics).
 #[derive(Debug, Clone, PartialEq)]
 pub struct EplbConfig {
+    /// Replica slots per rank per layer (paper: 2).
     pub redundant_slots: usize,
     /// Steps of history needed before the first rebalance.
     pub warmup_steps: usize,
@@ -148,15 +153,59 @@ impl Default for EplbConfig {
     }
 }
 
+/// Scenario-engine knobs (`[scenario]` TOML table): drive the serving
+/// workload from a named volatility preset or a recorded trace instead
+/// of a plain single-dataset stream. See [`crate::workload::scenario`]
+/// and `probe bench volatility`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioConfig {
+    /// Named preset (`steady`/`burst`/`storm`/`drift`/`multi_tenant`);
+    /// `None` = no scenario, plain `workload.dataset` stream.
+    pub preset: Option<String>,
+    /// Offered load as a fraction of the engine's measured decode
+    /// service capacity (0.7 ≈ busy-but-stable; >1 overloads). The
+    /// scenario's absolute arrival rate is derived from a short
+    /// calibration run, so presets are hardware/batch-size portable.
+    pub load: f64,
+    /// Scenario horizon in decode-step units (converted to seconds via
+    /// the same calibration).
+    pub steps: usize,
+    /// Replay this JSONL trace instead of generating from the preset
+    /// (bit-exact: see [`crate::workload::trace`]).
+    pub trace: Option<String>,
+    /// Record the generated stream to this JSONL path before serving.
+    pub record: Option<String>,
+}
+
+impl Default for ScenarioConfig {
+    fn default() -> ScenarioConfig {
+        ScenarioConfig {
+            preset: None,
+            load: 0.7,
+            steps: 120,
+            trace: None,
+            record: None,
+        }
+    }
+}
+
 /// Full experiment / serving configuration.
 #[derive(Debug, Clone)]
 pub struct Config {
+    /// MoE model preset being served.
     pub model: MoeModel,
+    /// EP cluster (ranks, hardware profile, interconnect fabric).
     pub cluster: Cluster,
+    /// Balancing system running the MoE layers.
     pub balancer: BalancerKind,
+    /// PROBE-specific knobs.
     pub probe: ProbeConfig,
+    /// EPLB baseline knobs.
     pub eplb: EplbConfig,
+    /// Workload dataset (ignored when a scenario preset/trace is set).
     pub dataset: Dataset,
+    /// Workload-volatility scenario knobs (`[scenario]` table).
+    pub scenario: ScenarioConfig,
     /// Decode tokens per rank per step.
     pub batch_per_rank: usize,
     /// Chunked-prefill tokens per rank.
@@ -165,6 +214,7 @@ pub struct Config {
     /// drives the simulator's attention time AND the balancer's
     /// hiding-window estimate (they must agree — ISSUE 2 satellite).
     pub mean_ctx: usize,
+    /// Root seed for all stochastic components.
     pub seed: u64,
 }
 
@@ -177,6 +227,7 @@ impl Default for Config {
             probe: ProbeConfig::default(),
             eplb: EplbConfig::default(),
             dataset: Dataset::Mixed,
+            scenario: ScenarioConfig::default(),
             batch_per_rank: 768,
             prefill_chunk_per_rank: 8192,
             mean_ctx: 64,
@@ -322,6 +373,40 @@ impl Config {
                     cfg.prefill_chunk_per_rank = value.as_int().ok_or("int")? as usize
                 }
                 "workload.mean_ctx" => cfg.mean_ctx = value.as_int().ok_or("int")? as usize,
+                "scenario.preset" => {
+                    let p = value.as_str().ok_or("scenario.preset: string")?;
+                    if !crate::workload::Scenario::PRESETS.iter().any(|&k| k == p) {
+                        return Err(format!(
+                            "unknown scenario preset {p:?} (have {:?})",
+                            crate::workload::Scenario::PRESETS
+                        ));
+                    }
+                    cfg.scenario.preset = Some(p.to_string());
+                }
+                "scenario.load" => {
+                    let l = value.as_float().ok_or("scenario.load: float")?;
+                    // str::parse::<f64> accepts "nan"/"inf"; both must be
+                    // rejected here or the generator panics downstream
+                    if !(l.is_finite() && l > 0.0) {
+                        return Err("scenario.load must be finite and > 0".into());
+                    }
+                    cfg.scenario.load = l;
+                }
+                "scenario.steps" => {
+                    let s = value.as_int().ok_or("scenario.steps: int")? as usize;
+                    if s == 0 {
+                        return Err("scenario.steps must be >= 1".into());
+                    }
+                    cfg.scenario.steps = s;
+                }
+                "scenario.trace" => {
+                    cfg.scenario.trace =
+                        Some(value.as_str().ok_or("scenario.trace: string")?.to_string());
+                }
+                "scenario.record" => {
+                    cfg.scenario.record =
+                        Some(value.as_str().ok_or("scenario.record: string")?.to_string());
+                }
                 "seed" => cfg.seed = value.as_int().ok_or("int")? as u64,
                 other => return Err(format!("unknown config key: {other}")),
             }
@@ -358,6 +443,7 @@ impl Config {
         Ok(cfg)
     }
 
+    /// Load a config from a TOML-subset file (see [`Config::from_toml_str`]).
     pub fn from_toml_file(path: &str) -> Result<Config, String> {
         let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
         Config::from_toml_str(&text)
@@ -494,6 +580,35 @@ topology_aware = false
         assert!(c.cluster.fabric.is_flat());
         assert_eq!(c.cluster.fabric.n_ranks, 4);
         assert!(c.probe.topology_aware, "aware by default");
+    }
+
+    #[test]
+    fn parse_scenario_table() {
+        let text = r#"
+[scenario]
+preset = "storm"
+load = 0.9
+steps = 60
+record = "bench_results/storm.jsonl"
+"#;
+        let c = Config::from_toml_str(text).unwrap();
+        assert_eq!(c.scenario.preset.as_deref(), Some("storm"));
+        assert!((c.scenario.load - 0.9).abs() < 1e-12);
+        assert_eq!(c.scenario.steps, 60);
+        assert_eq!(c.scenario.record.as_deref(), Some("bench_results/storm.jsonl"));
+        assert_eq!(c.scenario.trace, None);
+        let replay = Config::from_toml_str("[scenario]\ntrace = \"t.jsonl\"\n").unwrap();
+        assert_eq!(replay.scenario.trace.as_deref(), Some("t.jsonl"));
+        // defaults without a [scenario] table
+        let d = Config::from_toml_str("").unwrap();
+        assert_eq!(d.scenario, ScenarioConfig::default());
+        assert_eq!(d.scenario.preset, None);
+        // invalid values fail loudly
+        assert!(Config::from_toml_str("[scenario]\npreset = \"chaos\"\n").is_err());
+        assert!(Config::from_toml_str("[scenario]\nload = 0.0\n").is_err());
+        assert!(Config::from_toml_str("[scenario]\nload = nan\n").is_err());
+        assert!(Config::from_toml_str("[scenario]\nload = inf\n").is_err());
+        assert!(Config::from_toml_str("[scenario]\nsteps = 0\n").is_err());
     }
 
     #[test]

@@ -6,26 +6,34 @@
 /// A parsed scalar (or flat array) value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum TomlValue {
+    /// A quoted string.
     Str(String),
+    /// An integer.
     Int(i64),
+    /// A float.
     Float(f64),
+    /// A boolean.
     Bool(bool),
+    /// A flat array of values.
     Array(Vec<TomlValue>),
 }
 
 impl TomlValue {
+    /// String value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             TomlValue::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// Integer value, if this is an integer.
     pub fn as_int(&self) -> Option<i64> {
         match self {
             TomlValue::Int(x) => Some(*x),
             _ => None,
         }
     }
+    /// Float value (integers coerce).
     pub fn as_float(&self) -> Option<f64> {
         match self {
             TomlValue::Float(x) => Some(*x),
@@ -33,6 +41,7 @@ impl TomlValue {
             _ => None,
         }
     }
+    /// Boolean value, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             TomlValue::Bool(b) => Some(*b),
@@ -48,6 +57,7 @@ pub struct TomlDoc {
 }
 
 impl TomlDoc {
+    /// Parse a document (errors are line-tagged).
     pub fn parse(text: &str) -> Result<TomlDoc, String> {
         let mut doc = TomlDoc::default();
         let mut section = String::new();
@@ -74,12 +84,14 @@ impl TomlDoc {
         Ok(doc)
     }
 
+    /// Iterate (section, key, value) triples in document order.
     pub fn entries(&self) -> impl Iterator<Item = (&str, &str, &TomlValue)> {
         self.entries
             .iter()
             .map(|(s, k, v)| (s.as_str(), k.as_str(), v))
     }
 
+    /// First value of `section.key`, if present.
     pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
         self.entries
             .iter()

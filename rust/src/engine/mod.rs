@@ -43,6 +43,7 @@ pub struct StepReport {
 /// A request in a decode slot.
 #[derive(Debug, Clone)]
 pub struct ActiveEntry {
+    /// The request occupying the slot.
     pub req: Request,
     /// Tokens emitted so far (the prefill emits the first).
     pub decoded: usize,
@@ -99,17 +100,21 @@ struct Queued {
 
 /// Continuous-batching serving engine over any [`StepExecutor`].
 pub struct ServingEngine<E: StepExecutor> {
+    /// The step backend (simulator or PJRT runtime).
     pub executor: E,
     queue: VecDeque<Queued>,
     active: Vec<ActiveEntry>,
     /// Virtual serving clock: advances by step latencies and jumps
     /// forward to the next arrival when idle.
     pub clock: f64,
+    /// Per-request and per-step serving metrics.
     pub metrics: ServingMetrics,
+    /// Imbalance-ratio samples reported by the executor.
     pub ir: IrTracker,
 }
 
 impl<E: StepExecutor> ServingEngine<E> {
+    /// Wrap an executor in a fresh engine (empty queue, clock at 0).
     pub fn from_executor(executor: E) -> ServingEngine<E> {
         ServingEngine {
             executor,
@@ -130,6 +135,7 @@ impl<E: StepExecutor> ServingEngine<E> {
         let midx = self.metrics.requests.len();
         self.metrics.requests.push(RequestMetrics {
             id: req.id,
+            tenant: req.tenant,
             arrival: req.arrival,
             ..Default::default()
         });
@@ -138,6 +144,16 @@ impl<E: StepExecutor> ServingEngine<E> {
             pos -= 1;
         }
         self.queue.insert(pos, Queued { req, midx });
+    }
+
+    /// Submit a whole stream (e.g. a replayed
+    /// [`crate::workload::trace`] or a generated scenario). Arrival
+    /// times are preserved, so replaying a recorded trace reproduces
+    /// the original open-loop workload bit-exactly.
+    pub fn submit_all<I: IntoIterator<Item = Request>>(&mut self, reqs: I) {
+        for r in reqs {
+            self.submit(r);
+        }
     }
 
     /// Requests waiting for a decode slot.
@@ -355,6 +371,7 @@ mod tests {
     fn req(id: u64, arrival: f64, new_tokens: usize) -> Request {
         Request {
             id,
+            tenant: 0,
             domain: (id % 4) as u16,
             dataset: Dataset::Mixed,
             prompt_len: 8,

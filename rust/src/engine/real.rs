@@ -33,17 +33,22 @@ struct Slot {
 /// Per-layer accumulated predictor fidelity (Fig. 10 measured from rust).
 #[derive(Debug, Clone, Default)]
 pub struct FidelityAccum {
+    /// Per-layer fidelity of the distilled lookahead predictions.
     pub trained: Vec<PredFidelity>,
+    /// Per-layer fidelity of the untrained-prior predictions.
     pub prior: Vec<PredFidelity>,
     /// Running mean count-level fidelity of the online (causal)
     /// [`TransitionPredictor`] per layer, at depth 1.
     pub transition_cf: Vec<f64>,
+    /// Samples behind each `transition_cf` entry.
     pub transition_n: Vec<usize>,
+    /// Decode steps accumulated.
     pub samples: usize,
 }
 
 /// PJRT-backed serving executor over the real model.
 pub struct RealExecutor {
+    /// The compiled PJRT engine executing the artifacts.
     pub engine: Engine,
     batch: usize,
     kv: Vec<f32>,
@@ -51,6 +56,7 @@ pub struct RealExecutor {
     /// Prompt tokens awaiting admission, keyed by request id (provided
     /// via `submit_with_prompt` or synthesized at `begin`).
     prompts: HashMap<u64, Vec<i32>>,
+    /// Predictor-fidelity accumulators over live traffic (Fig. 10).
     pub fidelity: FidelityAccum,
     /// Causal cross-layer predictor fed the real router traces online —
     /// measures what a gate-initialized transition model would achieve
@@ -62,6 +68,8 @@ pub struct RealExecutor {
 }
 
 impl RealExecutor {
+    /// Executor over a loaded PJRT engine; `virtual_ep` sets the EP size
+    /// the real router traces are aggregated to for IR accounting.
     pub fn new(engine: Engine, virtual_ep: usize, seed: u64) -> RealExecutor {
         let batch = engine.pick_batch(8);
         let kv = vec![0.0; engine.cfg().kv_len(batch)];
@@ -371,6 +379,7 @@ impl StepExecutor for RealExecutor {
 
 /// The PJRT-backed serving engine (the old `RealCoordinator` API).
 impl ServingEngine<RealExecutor> {
+    /// PJRT-backed engine (see [`RealExecutor::new`]).
     pub fn new(engine: Engine, virtual_ep: usize, seed: u64) -> ServingEngine<RealExecutor> {
         ServingEngine::from_executor(RealExecutor::new(engine, virtual_ep, seed))
     }

@@ -19,8 +19,11 @@ pub const PREFILL_EFFECTIVE_CTX: usize = 192;
 
 /// Paper-scale serving backend over the cluster simulator.
 pub struct SimExecutor {
+    /// Serving configuration (model, cluster, batch shape).
     pub cfg: Config,
+    /// The discrete-event cluster simulator.
     pub sim: ClusterSim,
+    /// Synthetic semantic routing model driving token→expert choices.
     pub routing_model: RoutingModel,
     balancer: Box<dyn Balancer>,
     step_idx: usize,
@@ -30,6 +33,8 @@ pub struct SimExecutor {
 }
 
 impl SimExecutor {
+    /// Executor over `cfg`'s cluster with a pluggable balancer; `seed`
+    /// drives the routing model.
     pub fn new(cfg: Config, balancer: Box<dyn Balancer>, seed: u64) -> SimExecutor {
         let mut sim = ClusterSim::new(cfg.model.clone(), cfg.cluster.clone());
         // decode attention context: the balancer's hiding-window estimate
@@ -52,6 +57,7 @@ impl SimExecutor {
         }
     }
 
+    /// Name of the balancer driving this executor.
     pub fn balancer_name(&self) -> &'static str {
         self.balancer.name()
     }
@@ -157,10 +163,12 @@ impl StepExecutor for SimExecutor {
 
 /// The simulator-backed serving engine (the old `Coordinator` API).
 impl ServingEngine<SimExecutor> {
+    /// Simulator-backed engine (see [`SimExecutor::new`]).
     pub fn new(cfg: Config, balancer: Box<dyn Balancer>, seed: u64) -> ServingEngine<SimExecutor> {
         ServingEngine::from_executor(SimExecutor::new(cfg, balancer, seed))
     }
 
+    /// Name of the balancer driving the backend.
     pub fn balancer_name(&self) -> &'static str {
         self.executor.balancer_name()
     }

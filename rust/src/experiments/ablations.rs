@@ -67,6 +67,7 @@ fn run_variant_on(
     )
 }
 
+/// Run every design-choice ablation for `steps` decode steps.
 pub fn run(steps: usize) -> BenchSet {
     let mut b = BenchSet::new(
         "ablations",

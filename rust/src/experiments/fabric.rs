@@ -23,14 +23,19 @@ use crate::util::Rng;
 
 use super::SIM_LAYERS;
 
+/// Fabric sweep parameters.
 pub struct FabricParams {
+    /// Decode steps per configuration.
     pub steps: usize,
+    /// Decode tokens per rank.
     pub batch_per_rank: usize,
     /// (ep, nodes) cluster shapes to sweep.
     pub shapes: Vec<(usize, usize)>,
     /// Per-rail inter-node bandwidth as a fraction of NVSwitch.
     pub ratios: Vec<f64>,
+    /// Inter-node rails per node.
     pub rails: usize,
+    /// Sweep seed.
     pub seed: u64,
 }
 
@@ -120,6 +125,7 @@ pub fn flat_equivalence_err(ep: usize, cases: usize, seed: u64) -> f64 {
     worst
 }
 
+/// Run the fabric sweep → `bench_results/BENCH_fabric.json`.
 pub fn run(p: &FabricParams) -> BenchSet {
     let mut b = BenchSet::new("BENCH_fabric", &["metric", "value", "unit"]);
 

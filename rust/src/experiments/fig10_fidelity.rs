@@ -19,9 +19,13 @@ use crate::routing::RoutingModel;
 use crate::util::bench::BenchSet;
 use crate::util::Json;
 
+/// Fig. 10 sweep parameters.
 pub struct Fig10Params {
+    /// Artifacts directory holding `predictor_metrics.json` (optional).
     pub artifacts_dir: String,
+    /// Tokens per fidelity measurement.
     pub tokens: usize,
+    /// Simulation seed.
     pub seed: u64,
 }
 
@@ -35,6 +39,7 @@ impl Default for Fig10Params {
     }
 }
 
+/// Regenerate the Fig. 10 predictor-fidelity table.
 pub fn run(p: &Fig10Params) -> BenchSet {
     let mut b = BenchSet::new(
         "fig10_predictor_fidelity",

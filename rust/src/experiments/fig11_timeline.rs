@@ -16,10 +16,15 @@ use crate::util::stats::mean;
 
 use super::{make_balancer, sim_config};
 
+/// Fig. 11 measurement parameters.
 pub struct Fig11Params {
+    /// Decode tokens per rank.
     pub batch_per_rank: usize,
+    /// MoE layers simulated per step.
     pub layers: usize,
+    /// Warm-up steps before the measured step.
     pub warm_steps: usize,
+    /// Simulation seed.
     pub seed: u64,
 }
 
@@ -34,15 +39,23 @@ impl Default for Fig11Params {
     }
 }
 
+/// One system's measured timeline breakdown.
 pub struct TimelineResult {
+    /// Mean main-track phase durations (layers 1..).
     pub phases: Vec<(Phase, f64)>,
+    /// Mean aux-track phase durations (layers 1..).
     pub aux_phases: Vec<(Phase, f64)>,
+    /// Mean token-load IR (layers 1..).
     pub mean_ir: f64,
+    /// Mean compute skew (layers 1..).
     pub mean_comp_skew: f64,
+    /// Total exposed transfer of the measured step.
     pub exposed: f64,
+    /// Measured step latency.
     pub step_latency: f64,
 }
 
+/// Measure one balancer's warmed dual-track timeline.
 pub fn measure(kind: BalancerKind, p: &Fig11Params) -> TimelineResult {
     let mut cfg = sim_config("gpt-oss-120b");
     cfg.model.n_layers = p.layers;
@@ -98,6 +111,7 @@ pub fn measure(kind: BalancerKind, p: &Fig11Params) -> TimelineResult {
     }
 }
 
+/// Regenerate the Fig. 11 timeline-breakdown table.
 pub fn run(p: &Fig11Params) -> BenchSet {
     let mut b = BenchSet::new(
         "fig11_timeline_breakdown",

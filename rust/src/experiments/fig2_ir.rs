@@ -12,11 +12,17 @@ use crate::util::stats::{imbalance_ratio, Summary};
 use crate::util::Rng;
 use crate::workload::Dataset;
 
+/// Fig. 2 sweep parameters.
 pub struct Fig2Params {
+    /// Tokens per prefill burst.
     pub prefill_tokens: usize,
+    /// Tokens per decode step.
     pub decode_tokens: usize,
+    /// Steps per IR trace.
     pub steps: usize,
+    /// Expert-parallel group size.
     pub ep: usize,
+    /// Routing-model seed.
     pub seed: u64,
 }
 
@@ -78,6 +84,7 @@ fn ir_series(
     series
 }
 
+/// Regenerate the Fig. 2 IR-trace table.
 pub fn run(p: &Fig2Params) -> BenchSet {
     let mut b = BenchSet::new(
         "fig2_ir_traces",

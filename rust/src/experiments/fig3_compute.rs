@@ -15,10 +15,15 @@ use crate::topology::HardwareProfile;
 use crate::util::bench::BenchSet;
 use crate::util::stats;
 
+/// Fig. 3 sweep parameters.
 pub struct Fig3Params {
+    /// Expert-parallel group size.
     pub ep: usize,
+    /// Token counts swept.
     pub token_counts: Vec<usize>,
+    /// Redundant experts for the EP+extra series.
     pub extra_experts: usize,
+    /// Routing-model seed.
     pub seed: u64,
 }
 
@@ -39,6 +44,7 @@ fn rank_times(a: &Assignment, model: &MoeModel, hw: &HardwareProfile) -> Vec<f64
     crate::perfmodel::rank_compute_times(&loads, model, hw)
 }
 
+/// Regenerate the Fig. 3 MoE-compute table.
 pub fn run(p: &Fig3Params) -> BenchSet {
     let model = MoeModel::gpt_oss_120b();
     let hw = HardwareProfile::hopper_141();

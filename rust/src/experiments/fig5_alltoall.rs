@@ -13,9 +13,13 @@ use crate::topology::HardwareProfile;
 use crate::util::bench::BenchSet;
 use crate::util::Rng;
 
+/// Fig. 5 sweep parameters.
 pub struct Fig5Params {
+    /// Expert-parallel group size.
     pub ep: usize,
+    /// Token counts swept.
     pub token_counts: Vec<usize>,
+    /// Routing-model seed.
     pub seed: u64,
 }
 
@@ -54,6 +58,7 @@ fn measure(routing: &LayerRouting, ep: usize, model: &MoeModel, hw: &HardwarePro
     (effective_bandwidth(&vol, hw), vol.max_critical())
 }
 
+/// Regenerate the Fig. 5 All-to-All-skew table.
 pub fn run(p: &Fig5Params) -> BenchSet {
     let model = MoeModel::gpt_oss_120b();
     let hw = HardwareProfile::hopper_141();

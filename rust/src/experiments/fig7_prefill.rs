@@ -12,8 +12,11 @@ use crate::util::bench::BenchSet;
 
 use super::{layer_scale, make_balancer, sim_config, SIM_LAYERS};
 
+/// Fig. 7 sweep parameters.
 pub struct Fig7Params {
+    /// Total input-token counts swept.
     pub total_tokens: Vec<usize>,
+    /// Simulation seed.
     pub seed: u64,
 }
 
@@ -45,6 +48,7 @@ fn prefill_latency(
     c.measure_prefill(total_tokens, 0) * scale
 }
 
+/// Regenerate the Fig. 7 prefill-latency table.
 pub fn run(p: &Fig7Params) -> BenchSet {
     let mut b = BenchSet::new(
         "fig7_prefill_latency",

@@ -12,10 +12,15 @@ use crate::workload::{Dataset, RequestGenerator, WorkloadSpec};
 
 use super::{layer_scale, make_balancer, sim_config, SIM_LAYERS};
 
+/// Fig. 8 sweep parameters.
 pub struct Fig8Params {
+    /// Per-rank decode batch sizes swept.
     pub batches_per_rank: Vec<usize>,
+    /// Datasets swept.
     pub datasets: Vec<Dataset>,
+    /// Decode steps per run.
     pub steps: usize,
+    /// Simulation seed.
     pub seed: u64,
 }
 
@@ -71,6 +76,7 @@ pub fn decode_run(
     (thr, tpot)
 }
 
+/// Regenerate the Fig. 8 Pareto-frontier table.
 pub fn run(p: &Fig8Params) -> BenchSet {
     let mut b = BenchSet::new(
         "fig8_decode_pareto",

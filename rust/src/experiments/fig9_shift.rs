@@ -13,10 +13,15 @@ use crate::workload::{Dataset, RequestGenerator, WorkloadSpec};
 
 use super::{layer_scale, make_balancer, sim_config, SIM_LAYERS};
 
+/// Fig. 9 measurement parameters.
 pub struct Fig9Params {
+    /// Decode steps per trace.
     pub steps: usize,
+    /// Step at which the semantic shift lands.
     pub shift_at: usize,
+    /// Decode tokens per rank.
     pub batch_per_rank: usize,
+    /// Simulation seed.
     pub seed: u64,
     /// Report throughput averaged over windows of this many steps.
     pub window: usize,
@@ -83,6 +88,7 @@ pub fn trace(kind: BalancerKind, p: &Fig9Params) -> Vec<f64> {
     out
 }
 
+/// Regenerate the Fig. 9 semantic-shift table.
 pub fn run(p: &Fig9Params) -> BenchSet {
     let mut b = BenchSet::new(
         "fig9_semantic_shift",

@@ -23,6 +23,7 @@ use super::SIM_LAYERS;
 /// One swept workload: a dataset, optionally shifting mid-stream.
 #[derive(Debug, Clone, Copy)]
 pub struct FleetWorkload {
+    /// Dataset the stream starts on.
     pub dataset: Dataset,
     /// Fig. 9-style semantic shift: switch to this dataset halfway
     /// through the request stream.
@@ -30,6 +31,7 @@ pub struct FleetWorkload {
 }
 
 impl FleetWorkload {
+    /// Row label, e.g. `code->chinese`.
     pub fn label(&self) -> String {
         match self.shift_to {
             Some(to) => format!("{}->{}", self.dataset.name(), to.name()),
@@ -38,9 +40,13 @@ impl FleetWorkload {
     }
 }
 
+/// Fleet sweep parameters.
 pub struct FleetParams {
+    /// Fleet sizes swept.
     pub replicas: Vec<usize>,
+    /// Dispatch policies swept.
     pub policies: Vec<DispatchKind>,
+    /// Workloads swept.
     pub workloads: Vec<FleetWorkload>,
     /// Request stream length per replica (total = this × replicas, so
     /// offered load scales with fleet size).
@@ -51,7 +57,9 @@ pub struct FleetParams {
     /// Open-loop arrival rate in requests per simulated second per
     /// replica (0.0 = closed loop).
     pub arrival_rate_per_replica: f64,
+    /// Per-replica decode-step safety cap.
     pub max_steps: usize,
+    /// Sweep seed.
     pub seed: u64,
 }
 
@@ -134,6 +142,7 @@ pub fn run_cell(
     run_fleet(&cfg, &reqs, factory)
 }
 
+/// Run the fleet sweep and emit `bench_results/fleet_scaling.json`.
 pub fn run(p: &FleetParams) -> BenchSet {
     let mut b = BenchSet::new(
         "fleet_scaling",
@@ -208,7 +217,7 @@ mod tests {
     fn fleet_experiment_emits_all_cells() {
         let p = small();
         let b = run(&p);
-        assert_eq!(b.rows.len(), 3, "one row per policy");
+        assert_eq!(b.rows.len(), DispatchKind::ALL.len(), "one row per policy");
         for row in &b.rows {
             assert_eq!(row[8], "48", "all requests complete: {row:?}");
         }

@@ -16,6 +16,7 @@ pub mod fabric;
 pub mod fig10_fidelity;
 pub mod fleet;
 pub mod pipeline;
+pub mod volatility;
 pub mod fig11_timeline;
 pub mod fig2_ir;
 pub mod fig3_compute;
@@ -52,10 +53,11 @@ pub fn sim_config(model_name: &str) -> Config {
     cfg
 }
 
-/// Default EPLB/probe knobs shared by experiments (paper §6.1).
+/// Default PROBE knobs shared by experiments (paper §6.1).
 pub fn experiment_probe_cfg() -> ProbeConfig {
     ProbeConfig::default()
 }
+/// Default EPLB knobs shared by experiments (paper §6.1).
 pub fn experiment_eplb_cfg() -> EplbConfig {
     EplbConfig::default()
 }

@@ -19,9 +19,13 @@ use crate::workload::{Dataset, RequestGenerator, WorkloadSpec};
 
 use super::{fig10_fidelity, sim_config, SIM_LAYERS};
 
+/// Pipeline-bench parameters.
 pub struct PipelineParams {
+    /// Decode steps per lookahead-depth run.
     pub steps: usize,
+    /// Tokens per planner/predictor micro-benchmark step.
     pub tokens: usize,
+    /// Bench seed.
     pub seed: u64,
 }
 
@@ -35,6 +39,7 @@ impl Default for PipelineParams {
     }
 }
 
+/// Run the control-pipeline bench → `bench_results/BENCH_pipeline.json`.
 pub fn run(p: &PipelineParams) -> BenchSet {
     let mut b = BenchSet::new("BENCH_pipeline", &["metric", "value", "unit"]);
 

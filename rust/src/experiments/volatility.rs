@@ -1,0 +1,343 @@
+//! `probe bench volatility` — cross-balancer workload-volatility sweep.
+//!
+//! Runs every scenario preset (`steady`/`burst`/`storm`/`drift`/
+//! `multi_tenant`, see [`crate::workload::scenario`]) against all three
+//! balancing systems {static, EPLB, PROBE} on the serving engine and
+//! reports TTFT/TPOT percentiles, decode throughput, exposed transfer,
+//! and the per-window **hotspot-migration rate**
+//! ([`crate::metrics::HotspotTracker`]) → `bench_results/BENCH_volatility.json`.
+//!
+//! Scenario rates are *self-calibrating*: a short closed-loop run under
+//! the static balancer measures the mean decode-step latency, and the
+//! preset's absolute arrival rate is derived so the offered load is a
+//! fixed fraction (`load`) of the engine's decode service capacity.
+//! The same calibration fixes the horizon (`steps` step-units), so the
+//! sweep is portable across batch sizes and hardware profiles — and
+//! every balancer sees the *identical* request stream per preset.
+
+use crate::config::{BalancerKind, Config};
+use crate::coordinator::Coordinator;
+use crate::metrics::HotspotTracker;
+use crate::util::bench::BenchSet;
+use crate::util::stats::Summary;
+use crate::workload::{
+    Dataset, Request, RequestGenerator, Scenario, ScenarioGenerator, WorkloadSpec,
+};
+
+use super::{make_balancer, SIM_LAYERS};
+
+/// Sweep parameters.
+pub struct VolatilityParams {
+    /// Scenario presets to run (defaults to all of [`Scenario::PRESETS`]).
+    pub presets: Vec<String>,
+    /// Balancers to compare.
+    pub balancers: Vec<BalancerKind>,
+    /// Offered load as a fraction of calibrated decode capacity.
+    pub load: f64,
+    /// Scenario horizon in decode-step units.
+    pub steps: usize,
+    /// Decode tokens per rank (kept small so queueing is visible).
+    pub batch_per_rank: usize,
+    /// Mean decode budget per request (tokens).
+    pub mean_new_tokens: usize,
+    /// Hotspot-tracker window in steps.
+    pub window: usize,
+    /// Safety cap on decode steps per cell.
+    pub max_steps: usize,
+    /// Root seed (streams and balancers derive from it).
+    pub seed: u64,
+}
+
+impl Default for VolatilityParams {
+    fn default() -> Self {
+        VolatilityParams {
+            presets: Scenario::PRESETS.iter().map(|s| s.to_string()).collect(),
+            balancers: vec![BalancerKind::StaticEp, BalancerKind::Eplb, BalancerKind::Probe],
+            load: 0.7,
+            steps: 200,
+            batch_per_rank: 2,
+            mean_new_tokens: 32,
+            window: 10,
+            max_steps: 20_000,
+            seed: 37,
+        }
+    }
+}
+
+fn volatility_cfg(p: &VolatilityParams) -> Config {
+    let mut cfg = Config::default();
+    cfg.model.n_layers = SIM_LAYERS;
+    cfg.batch_per_rank = p.batch_per_rank;
+    cfg.prefill_chunk_per_rank = 1024;
+    cfg
+}
+
+/// Mean decode-step latency (simulated seconds) of a short closed-loop
+/// run under the static balancer on an arbitrary serving config — the
+/// time base scenarios calibrate against.
+pub fn calibrate_step_latency_for(cfg: &Config, seed: u64) -> f64 {
+    let bal = make_balancer(BalancerKind::StaticEp, cfg, seed);
+    let mut c = Coordinator::new(cfg.clone(), bal, seed);
+    let mut spec = WorkloadSpec::new(Dataset::Mixed, 4);
+    spec.mean_prompt_len = 16;
+    spec.mean_new_tokens = 64;
+    let mut g = RequestGenerator::new(spec, seed ^ 0xCA1B);
+    c.submit_all(g.take(cfg.global_batch() + 8));
+    let outs = c.run_decode_steps(12);
+    let lat: Vec<f64> = outs.iter().map(|o| o.latency).collect();
+    let t = crate::util::stats::mean(&lat);
+    assert!(t > 0.0, "calibration produced no steps");
+    t
+}
+
+/// [`calibrate_step_latency_for`] on the sweep's own config.
+pub fn calibrate_step_latency(p: &VolatilityParams) -> f64 {
+    calibrate_step_latency_for(&volatility_cfg(p), p.seed)
+}
+
+/// Build a preset scenario for an arbitrary serving config, sized to
+/// the calibrated step latency: the horizon spans `steps` step-units
+/// and the total base arrival rate offers `load ×` the engine's decode
+/// service capacity (`capacity / mean_new_tokens` requests per step).
+pub fn build_scenario_for(
+    cfg: &Config,
+    preset: &str,
+    load: f64,
+    steps: usize,
+    mean_new_tokens: usize,
+    t_step: f64,
+) -> Option<Scenario> {
+    let capacity = cfg.global_batch() as f64;
+    let duration = steps as f64 * t_step;
+    // one request occupies a decode slot for ~mean_new_tokens steps
+    let service_rate = capacity / (mean_new_tokens as f64 * t_step);
+    let base_rate = load * service_rate;
+    let mut s = Scenario::preset(preset, base_rate, duration, 4)?;
+    for t in &mut s.tenants {
+        t.spec.mean_prompt_len = 16;
+        t.spec.mean_new_tokens = mean_new_tokens;
+    }
+    Some(s)
+}
+
+/// [`build_scenario_for`] on the sweep's own config. Panics on unknown
+/// presets (sweep inputs are validated upstream).
+pub fn build_scenario(preset: &str, p: &VolatilityParams, t_step: f64) -> Scenario {
+    build_scenario_for(
+        &volatility_cfg(p),
+        preset,
+        p.load,
+        p.steps,
+        p.mean_new_tokens,
+        t_step,
+    )
+    .unwrap_or_else(|| panic!("unknown scenario preset {preset:?}"))
+}
+
+/// Calibrate and generate a scenario request stream for an arbitrary
+/// serving config (the `probe simulate --scenario` / `[scenario]` TOML
+/// path). Returns `Err` on unknown presets.
+pub fn scenario_stream_for(
+    cfg: &Config,
+    preset: &str,
+    load: f64,
+    steps: usize,
+    seed: u64,
+) -> Result<Vec<Request>, String> {
+    let t_step = calibrate_step_latency_for(cfg, seed);
+    let scenario = build_scenario_for(cfg, preset, load, steps, 32, t_step)
+        .ok_or_else(|| format!("unknown scenario preset {preset:?}"))?;
+    Ok(ScenarioGenerator::new(scenario, seed).generate())
+}
+
+/// Outcome of one (preset, balancer) cell.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    /// Requests submitted.
+    pub submitted: usize,
+    /// Requests that completed within the step cap.
+    pub completed: usize,
+    /// Decode steps executed.
+    pub steps: usize,
+    /// Aggregate decode throughput (tokens/s).
+    pub throughput: f64,
+    /// TTFT distribution (seconds).
+    pub ttft: Summary,
+    /// TPOT distribution (seconds).
+    pub tpot: Summary,
+    /// Total exposed (non-hidden) transfer seconds.
+    pub exposed: f64,
+    /// Per-window hotspot-migration rate in [0, 1].
+    pub hotspot_migration: f64,
+}
+
+/// Serve one request stream under one balancer and collect the cell
+/// metrics. Every balancer must be given the identical stream so the
+/// comparison isolates the balancing system.
+pub fn run_cell(p: &VolatilityParams, kind: BalancerKind, reqs: &[Request]) -> CellResult {
+    let cfg = volatility_cfg(p);
+    let bal = make_balancer(kind, &cfg, p.seed);
+    let mut c = Coordinator::new(cfg, bal, p.seed);
+    c.submit_all(reqs.iter().cloned());
+    let mut hot = HotspotTracker::new(p.window);
+    let mut exposed = 0.0;
+    let mut steps = 0usize;
+    while steps < p.max_steps {
+        match c.decode_step() {
+            Some(o) => {
+                exposed += o.total_exposed();
+                hot.push_loads(&o.rank_token_loads);
+                steps += 1;
+            }
+            None => break,
+        }
+    }
+    CellResult {
+        submitted: reqs.len(),
+        completed: c
+            .metrics
+            .requests
+            .iter()
+            .filter(|m| m.finished.is_some())
+            .count(),
+        steps,
+        throughput: c.metrics.throughput(),
+        ttft: c.metrics.ttft_summary(),
+        tpot: c.metrics.tpot_summary(),
+        exposed,
+        hotspot_migration: hot.migration_rate(),
+    }
+}
+
+/// Run the full sweep and emit `bench_results/BENCH_volatility.json`.
+pub fn run(p: &VolatilityParams) -> BenchSet {
+    let mut b = BenchSet::new(
+        "BENCH_volatility",
+        &[
+            "scenario",
+            "balancer",
+            "requests",
+            "completed",
+            "tok_s",
+            "ttft_p50_ms",
+            "ttft_p99_ms",
+            "tpot_p50_ms",
+            "exposed_ms",
+            "hotspot_migration",
+        ],
+    );
+    let t_step = calibrate_step_latency(p);
+    for (idx, preset) in p.presets.iter().enumerate() {
+        let scenario = build_scenario(preset, p, t_step);
+        // distinct stream seed per preset slot (the preset name itself
+        // is not hashed: same-length names must not collide)
+        let stream_seed = p.seed ^ (idx as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let reqs = ScenarioGenerator::new(scenario, stream_seed).generate();
+        for &kind in &p.balancers {
+            let cell = run_cell(p, kind, &reqs);
+            b.row(&[
+                preset.clone(),
+                kind.name().to_string(),
+                cell.submitted.to_string(),
+                cell.completed.to_string(),
+                format!("{:.0}", cell.throughput),
+                format!("{:.2}", cell.ttft.p50 * 1e3),
+                format!("{:.2}", cell.ttft.p99 * 1e3),
+                format!("{:.3}", cell.tpot.p50 * 1e3),
+                format!("{:.3}", cell.exposed * 1e3),
+                format!("{:.3}", cell.hotspot_migration),
+            ]);
+        }
+    }
+    b.note(&format!(
+        "self-calibrated: t_step {:.1}us (static closed-loop), load {:.0}% of \
+         decode capacity, horizon {} steps, {} sim layers, batch/rank {}",
+        t_step * 1e6,
+        p.load * 100.0,
+        p.steps,
+        SIM_LAYERS,
+        p.batch_per_rank
+    ));
+    b.note("identical request stream per scenario across balancers;");
+    b.note("hotspot_migration = per-window argmax-rank migration rate");
+    b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> VolatilityParams {
+        VolatilityParams {
+            presets: vec!["steady".into(), "storm".into()],
+            balancers: vec![BalancerKind::StaticEp, BalancerKind::Probe],
+            load: 0.7,
+            steps: 40,
+            batch_per_rank: 1,
+            mean_new_tokens: 16,
+            window: 5,
+            max_steps: 3_000,
+            seed: 5,
+        }
+    }
+
+    #[test]
+    fn volatility_bench_emits_all_cells() {
+        let p = small();
+        let b = run(&p);
+        assert_eq!(b.rows.len(), 4, "2 presets x 2 balancers");
+        for row in &b.rows {
+            let submitted: usize = row[2].parse().unwrap();
+            let completed: usize = row[3].parse().unwrap();
+            assert!(submitted > 0, "{row:?}: empty stream");
+            assert!(completed > 0, "{row:?}: nothing completed");
+            assert!(
+                completed <= submitted,
+                "{row:?}: completed more than submitted"
+            );
+            let migration: f64 = row[9].parse().unwrap();
+            assert!((0.0..=1.0).contains(&migration), "{row:?}");
+        }
+        // scenario cells exist for both balancers with the same stream
+        let stream_size = |scenario: &str, balancer: &str| -> usize {
+            b.rows
+                .iter()
+                .find(|r| r[0] == scenario && r[1] == balancer)
+                .unwrap()[2]
+                .parse()
+                .unwrap()
+        };
+        assert_eq!(
+            stream_size("storm", "static"),
+            stream_size("storm", "probe"),
+            "balancers must see the identical stream"
+        );
+    }
+
+    #[test]
+    fn storm_cell_migrates_hotspots_and_calibration_sizes_stream() {
+        let mut p = small();
+        p.steps = 60;
+        let t_step = calibrate_step_latency(&p);
+        assert!(t_step > 0.0 && t_step.is_finite());
+        let scenario = build_scenario("storm", &p, t_step);
+        // horizon spans the requested step budget at the calibrated rate
+        assert!((scenario.duration - 60.0 * t_step).abs() < 1e-12);
+        let reqs = ScenarioGenerator::new(scenario, 11).generate();
+        // offered load 0.7 of capacity: the stream is sized to roughly
+        // load x capacity x steps / mean_new_tokens requests (Poisson)
+        let expect = 0.7 * 8.0 * 60.0 / 16.0;
+        assert!(
+            (reqs.len() as f64) > expect * 0.4 && (reqs.len() as f64) < expect * 2.5,
+            "stream size {} far from calibrated target {expect:.0}",
+            reqs.len()
+        );
+        let cell = run_cell(&p, BalancerKind::StaticEp, &reqs);
+        assert!(cell.completed > 0);
+        assert!(
+            cell.hotspot_migration > 0.0,
+            "shift storm never migrated the hotspot"
+        );
+        assert!(cell.ttft.p50 >= 0.0 && cell.throughput > 0.0);
+    }
+}

@@ -46,8 +46,11 @@ pub const DEFAULT_RAILS: usize = 2;
 /// fixed per-operation latency.
 #[derive(Debug, Clone, PartialEq)]
 pub struct LinkSpec {
+    /// Raw bandwidth, bytes/s per direction.
     pub bw: f64,
+    /// Fraction of `bw` a collective achieves on balanced traffic.
     pub efficiency: f64,
+    /// Fixed per-operation latency, seconds.
     pub base_latency: f64,
 }
 
@@ -61,15 +64,20 @@ impl LinkSpec {
 /// One point-to-point transfer demand routed over the fabric.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Flow {
+    /// Source rank.
     pub src: usize,
+    /// Destination rank.
     pub dst: usize,
+    /// Payload bytes.
     pub bytes: f64,
 }
 
 /// Hierarchical interconnect graph: `n_ranks` split into equal nodes.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Fabric {
+    /// Total EP ranks on the fabric.
     pub n_ranks: usize,
+    /// Ranks per node (`n_ranks` must divide evenly).
     pub ranks_per_node: usize,
     /// Per-rank intra-node switch port (NVSwitch), per direction.
     pub intra: LinkSpec,
@@ -134,18 +142,22 @@ impl Fabric {
         Fabric::multi_node(ep, nodes, hw, inter, rails)
     }
 
+    /// Number of nodes the ranks group into.
     pub fn n_nodes(&self) -> usize {
         self.n_ranks / self.ranks_per_node
     }
 
+    /// True for the single-node (scalar-equivalent) degenerate case.
     pub fn is_flat(&self) -> bool {
         self.n_nodes() == 1
     }
 
+    /// Node hosting `rank`.
     pub fn node_of(&self, rank: usize) -> usize {
         rank / self.ranks_per_node
     }
 
+    /// True when both ranks share a node (NVSwitch-only path).
     pub fn same_node(&self, a: usize, b: usize) -> bool {
         self.node_of(a) == self.node_of(b)
     }
@@ -165,6 +177,7 @@ impl Fabric {
     //   [n_ranks, n_ranks + n_nodes)      node rail egress
     //   [n_ranks + n_nodes, +2*n_nodes)   node rail ingress
 
+    /// Number of budget-tracked links (see the indexing scheme above).
     pub fn link_count(&self) -> usize {
         if self.is_flat() {
             1
@@ -173,14 +186,17 @@ impl Fabric {
         }
     }
 
+    /// Link index of `rank`'s ingress switch port.
     pub fn link_rank_in(&self, rank: usize) -> usize {
         rank
     }
 
+    /// Link index of `node`'s aggregate rail egress.
     pub fn link_node_out(&self, node: usize) -> usize {
         self.n_ranks + node
     }
 
+    /// Link index of `node`'s aggregate rail ingress.
     pub fn link_node_in(&self, node: usize) -> usize {
         self.n_ranks + self.n_nodes() + node
     }

@@ -13,7 +13,36 @@
 //! - Layer 1: Pallas grouped-GEMM expert kernel
 //!   (`python/compile/kernels/`), lowered into the same HLO.
 //!
-//! See DESIGN.md for the system inventory and the per-experiment index.
+//! See DESIGN.md for the system inventory and the per-experiment index,
+//! README.md for the quickstart, and docs/CONFIG.md for every TOML/CLI
+//! knob.
+//!
+//! # Quickstart
+//!
+//! Serve a skewed closed-loop stream through the simulator-backed
+//! serving engine and read the headline metrics:
+//!
+//! ```no_run
+//! use probe::config::Config;
+//! use probe::coordinator::Coordinator;
+//! use probe::experiments::make_balancer;
+//! use probe::workload::{Dataset, RequestGenerator, WorkloadSpec};
+//!
+//! let cfg = Config::default(); // paper testbed: GPT-OSS-120B, ep=8
+//! let bal = make_balancer(cfg.balancer, &cfg, 0);
+//! let mut engine = Coordinator::new(cfg.clone(), bal, 0);
+//! let mut gen = RequestGenerator::new(WorkloadSpec::new(Dataset::Repeat, 4), 1);
+//! engine.submit_all(gen.take(64));
+//! engine.run_to_completion(10_000).unwrap();
+//! println!("throughput: {:.0} tok/s", engine.metrics.throughput());
+//! ```
+//!
+//! Workload volatility is scripted through the scenario engine
+//! ([`workload::scenario`]) and benchmarked by `probe bench volatility`;
+//! any stream records to a JSONL trace and replays bit-exactly
+//! ([`workload::trace`]).
+
+#![warn(missing_docs)]
 
 pub mod balancers;
 pub mod config;

@@ -3,9 +3,11 @@
 //! Subcommands:
 //!   serve     — serve the real small model via PJRT (needs `make artifacts`)
 //!   simulate  — run a paper-scale decode simulation and print metrics
+//!               (supports scenario presets and trace record/replay)
 //!   fleet     — multi-replica serving sweep (replicas × dispatch policy)
 //!   prefill   — prefill latency measurement (Fig. 7 single point)
 //!   bench     — regenerate a paper figure: `probe bench fig8 [--steps N]`
+//!               (`bench volatility` = scenario × balancer sweep)
 //!   ablate    — PROBE design-choice ablations (DESIGN.md list)
 //!   info      — print presets and artifact status
 
@@ -47,12 +49,16 @@ fn print_help() {
            simulate  --balancer static|eplb|probe --dataset D --steps N\n\
                      --batch-per-rank N --model M [--config FILE]\n\
                      [--lookahead L] [--predictor statistical|transition]\n\
-           fleet     --replicas N --policy rr|jsq|affinity|all --dataset D\n\
-                     --requests-per-replica N [--shift-to D2] [--seed S]\n\
+                     [--scenario steady|burst|storm|drift|multi_tenant]\n\
+                     [--record-trace F.jsonl] [--replay-trace F.jsonl]\n\
+           fleet     --replicas N --policy rr|jsq|affinity|tenant|all\n\
+                     --dataset D --requests-per-replica N [--shift-to D2]\n\
+                     [--seed S]\n\
            prefill   --balancer B --tokens N --model M\n\
            bench     fig2|fig3|fig5|fig7|fig8|fig9|fig10|fig11|fleet|\n\
-                     pipeline|fabric|all [--steps N]\n\
-                     (fabric: multi-node sweep, also --rails N)\n\
+                     pipeline|fabric|volatility|all [--steps N]\n\
+                     (fabric: multi-node sweep, also --rails N;\n\
+                      volatility: scenario x balancer sweep, also --load F)\n\
            ablate    [--steps N]\n\
            info\n"
     );
@@ -97,6 +103,22 @@ fn load_config(args: &Args) -> Config {
             std::process::exit(2);
         });
     }
+    if let Some(p) = args.get("scenario") {
+        if !probe::workload::Scenario::PRESETS.iter().any(|&k| k == p) {
+            eprintln!(
+                "unknown scenario preset {p} (have {:?})",
+                probe::workload::Scenario::PRESETS
+            );
+            std::process::exit(2);
+        }
+        cfg.scenario.preset = Some(p.to_string());
+    }
+    if let Some(t) = args.get("replay-trace") {
+        cfg.scenario.trace = Some(t.to_string());
+    }
+    if let Some(r) = args.get("record-trace") {
+        cfg.scenario.record = Some(r.to_string());
+    }
     cfg.seed = args.get_u64("seed", cfg.seed);
     cfg
 }
@@ -125,6 +147,7 @@ fn cmd_serve(args: &Args) -> i32 {
         let prompt = coord.synth_prompt(domain, plen);
         let req = probe::workload::Request {
             id: i as u64,
+            tenant: 0,
             domain,
             dataset: Dataset::Mixed,
             prompt_len: plen,
@@ -169,7 +192,15 @@ fn cmd_serve(args: &Args) -> i32 {
 
 fn cmd_simulate(args: &Args) -> i32 {
     let cfg = load_config(args);
-    let steps = args.get_usize("steps", 100);
+    // scenario/trace streams carry their own horizon: unless --steps is
+    // given explicitly, serve the WHOLE scripted timeline instead of
+    // truncating it at the closed-loop default of 100 steps
+    let scenario_active = cfg.scenario.trace.is_some() || cfg.scenario.preset.is_some();
+    let steps = match args.get("steps") {
+        Some(_) => args.get_usize("steps", 100),
+        None if scenario_active => 100_000,
+        None => 100,
+    };
     let bal = exp::make_balancer(cfg.balancer, &cfg, cfg.seed);
     println!(
         "simulate: model={} ep={} balancer={} dataset={} batch/rank={} steps={steps}",
@@ -180,14 +211,58 @@ fn cmd_simulate(args: &Args) -> i32 {
         cfg.batch_per_rank
     );
     let dataset = cfg.dataset;
-    let mut c = Coordinator::new(cfg.clone(), bal, cfg.seed);
-    let mut spec = WorkloadSpec::new(dataset, 4);
-    spec.mean_prompt_len = 16;
-    spec.mean_new_tokens = steps * 2;
-    let mut g = RequestGenerator::new(spec, cfg.seed ^ 1);
-    for r in g.take(cfg.global_batch() + 32) {
-        c.submit(r);
+    // workload source: replayed trace > scenario preset > closed loop
+    let reqs = if let Some(path) = cfg.scenario.trace.clone() {
+        match probe::workload::trace::read_trace(&path) {
+            Ok(reqs) => {
+                println!("replaying trace {path} ({} requests)", reqs.len());
+                reqs
+            }
+            Err(e) => {
+                eprintln!("trace replay failed: {e}");
+                return 2;
+            }
+        }
+    } else if let Some(preset) = cfg.scenario.preset.clone() {
+        match exp::volatility::scenario_stream_for(
+            &cfg,
+            &preset,
+            cfg.scenario.load,
+            cfg.scenario.steps,
+            cfg.seed,
+        ) {
+            Ok(reqs) => {
+                println!(
+                    "scenario {preset}: {} requests over {} step-units (load {:.0}%)",
+                    reqs.len(),
+                    cfg.scenario.steps,
+                    cfg.scenario.load * 100.0
+                );
+                reqs
+            }
+            Err(e) => {
+                eprintln!("scenario generation failed: {e}");
+                return 2;
+            }
+        }
+    } else {
+        let mut spec = WorkloadSpec::new(dataset, 4);
+        spec.mean_prompt_len = 16;
+        spec.mean_new_tokens = steps * 2;
+        let mut g = RequestGenerator::new(spec, cfg.seed ^ 1);
+        g.take(cfg.global_batch() + 32)
+    };
+    if let Some(path) = &cfg.scenario.record {
+        match probe::workload::trace::write_trace(path, &reqs) {
+            Ok(()) => println!("recorded trace to {path}"),
+            Err(e) => {
+                eprintln!("trace record failed: {path}: {e}");
+                return 2;
+            }
+        }
     }
+    let mut c = Coordinator::new(cfg.clone(), bal, cfg.seed);
+    c.submit_all(reqs);
     let outs = c.run_decode_steps(steps);
     let lat: Vec<f64> = outs.iter().map(|o| o.latency).collect();
     let irs: Vec<f64> = outs.iter().map(|o| o.mean_ir()).collect();
@@ -216,7 +291,7 @@ fn cmd_fleet(args: &Args) -> i32 {
             match DispatchKind::by_name(pol) {
                 Some(k) => p.policies = vec![k],
                 None => {
-                    eprintln!("unknown policy {pol} (rr|jsq|affinity|all)");
+                    eprintln!("unknown policy {pol} (rr|jsq|affinity|tenant|all)");
                     return 2;
                 }
             }
@@ -301,6 +376,21 @@ fn cmd_bench(args: &Args) -> i32 {
                 p.seed = args.get_u64("seed", p.seed);
                 exp::fabric::run(&p)
             }
+            "volatility" => {
+                let mut p = exp::volatility::VolatilityParams::default();
+                p.steps = args.get_usize("steps", p.steps);
+                p.load = args.get_f64("load", p.load);
+                p.seed = args.get_u64("seed", p.seed);
+                if p.steps == 0 || !(p.load > 0.0 && p.load.is_finite()) {
+                    eprintln!(
+                        "bench volatility needs --steps >= 1 and finite --load > 0 \
+                         (got steps {}, load {})",
+                        p.steps, p.load
+                    );
+                    return false;
+                }
+                exp::volatility::run(&p)
+            }
             "fleet" => {
                 let mut p = exp::fleet::FleetParams::default();
                 p.seed = args.get_u64("seed", p.seed);
@@ -318,7 +408,7 @@ fn cmd_bench(args: &Args) -> i32 {
     if which == "all" {
         for f in [
             "fig2", "fig3", "fig5", "fig7", "fig8", "fig9", "fig10", "fig11", "fleet", "pipeline",
-            "fabric",
+            "fabric", "volatility",
         ] {
             run_one(f);
         }
@@ -343,6 +433,8 @@ fn cmd_info(args: &Args) -> i32 {
     println!("profiles: hopper-141, hopper-lowbw, compute-heavy, cpu-host");
     println!("datasets: chinese, code, repeat, mixed");
     println!("balancers: static (sglang), eplb, probe");
+    println!("scenarios: steady, burst, storm, drift, multi_tenant");
+    println!("policies:  rr, jsq, affinity, tenant");
     let dir = args.get_or("artifacts", "artifacts");
     match std::fs::metadata(format!("{dir}/metadata.json")) {
         Ok(_) => println!("artifacts: present in {dir}/"),

@@ -1,5 +1,8 @@
-//! Metrics: imbalance tracking, step timelines, latency breakdowns, and
-//! serving-level SLO statistics (TTFT / TPOT / throughput).
+//! Metrics: imbalance tracking, step timelines, latency breakdowns,
+//! serving-level SLO statistics (TTFT / TPOT / throughput), and the
+//! per-window hotspot-migration rate for volatility analysis.
+
+use std::collections::BTreeMap;
 
 use crate::util::stats::{imbalance_ratio, Online, Summary};
 
@@ -7,20 +10,29 @@ use crate::util::stats::{imbalance_ratio, Online, Summary};
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Phase {
     // main (deterministic) track
+    /// Attention (projections + KV streaming) on every DP rank.
     Attention,
+    /// All-to-All dispatch of token payloads to expert ranks.
     Dispatch,
+    /// Grouped-GEMM expert computation.
     MoeCompute,
+    /// All-to-All combine returning expert outputs.
     Combine,
     /// Idle time at the synchronization barrier (straggler wait).
     SyncWait,
     // auxiliary (control-plane) track
+    /// Lookahead prediction of a future layer's routing.
     Predict,
+    /// Balance planning (Algorithm 1) for the predicted layer.
     Plan,
+    /// Expert-weight prefetch transmission inside the hiding window.
     Prefetch,
+    /// Placement/metadata update after a transfer lands.
     Update,
 }
 
 impl Phase {
+    /// Phase name used in reports and bench tables.
     pub fn name(&self) -> &'static str {
         match self {
             Phase::Attention => "attention",
@@ -35,6 +47,7 @@ impl Phase {
         }
     }
 
+    /// Main-track phases in execution order.
     pub const MAIN: [Phase; 5] = [
         Phase::Attention,
         Phase::Dispatch,
@@ -42,18 +55,23 @@ impl Phase {
         Phase::Combine,
         Phase::SyncWait,
     ];
+    /// Auxiliary (control-plane) track phases.
     pub const AUX: [Phase; 4] = [Phase::Predict, Phase::Plan, Phase::Prefetch, Phase::Update];
 }
 
 /// A half-open time span tagged with a phase.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PhaseSpan {
+    /// Phase this span belongs to.
     pub phase: Phase,
+    /// Span start (seconds on the layer-local clock).
     pub start: f64,
+    /// Span end (seconds on the layer-local clock).
     pub end: f64,
 }
 
 impl PhaseSpan {
+    /// Span duration (clamped at 0 for degenerate spans).
     pub fn dur(&self) -> f64 {
         (self.end - self.start).max(0.0)
     }
@@ -126,11 +144,13 @@ impl LayerTimeline {
 /// Aggregates IR and phase stats across steps/layers.
 #[derive(Debug, Clone, Default)]
 pub struct IrTracker {
+    /// One imbalance-ratio sample per recorded step/layer.
     pub per_step: Vec<f64>,
     online: Online,
 }
 
 impl IrTracker {
+    /// Empty tracker.
     pub fn new() -> IrTracker {
         IrTracker {
             per_step: Vec::new(),
@@ -138,6 +158,7 @@ impl IrTracker {
         }
     }
 
+    /// Record the imbalance ratio of a per-rank load vector.
     pub fn push_loads(&mut self, loads: &[f64]) {
         self.push_ir(imbalance_ratio(loads));
     }
@@ -148,30 +169,132 @@ impl IrTracker {
         self.online.push(ir);
     }
 
+    /// Mean IR over all samples.
     pub fn mean(&self) -> f64 {
         self.online.mean()
     }
 
+    /// Max IR over all samples.
     pub fn max(&self) -> f64 {
         self.online.max()
     }
 
+    /// Full distribution summary of the recorded samples.
     pub fn summary(&self) -> Summary {
         Summary::of(&self.per_step)
+    }
+}
+
+/// Per-window hotspot-migration tracking (workload-volatility metric).
+///
+/// Each step records the *hotspot* — the argmax entity (rank or expert)
+/// of a load vector. Steps aggregate into windows of `window` steps;
+/// each window's hotspot is the per-step mode. The **hotspot-migration
+/// rate** is the fraction of consecutive window pairs whose hotspot
+/// differs: 0.0 = the hot set is stationary (EPLB's comfort zone),
+/// 1.0 = it moves every window (the storm regime PROBE targets).
+#[derive(Debug, Clone)]
+pub struct HotspotTracker {
+    window: usize,
+    /// Argmax entity per recorded step.
+    per_step_hot: Vec<usize>,
+}
+
+impl HotspotTracker {
+    /// Tracker with `window` steps per window (must be ≥ 1).
+    pub fn new(window: usize) -> HotspotTracker {
+        assert!(window >= 1, "window must be >= 1");
+        HotspotTracker {
+            window,
+            per_step_hot: Vec::new(),
+        }
+    }
+
+    /// Record one step's load vector (ties pick the lowest index;
+    /// empty vectors are ignored).
+    pub fn push_loads(&mut self, loads: &[f64]) {
+        if loads.is_empty() {
+            return;
+        }
+        let mut best = 0;
+        for (i, &x) in loads.iter().enumerate() {
+            if x > loads[best] {
+                best = i;
+            }
+        }
+        self.per_step_hot.push(best);
+    }
+
+    /// Steps recorded so far.
+    pub fn steps(&self) -> usize {
+        self.per_step_hot.len()
+    }
+
+    /// Window size in steps.
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    /// Hotspot (per-step mode; ties pick the lowest entity index) of
+    /// each *complete* window recorded so far.
+    pub fn window_hotspots(&self) -> Vec<usize> {
+        self.per_step_hot
+            .chunks_exact(self.window)
+            .map(|chunk| {
+                let mut counts: BTreeMap<usize, usize> = BTreeMap::new();
+                for &h in chunk {
+                    *counts.entry(h).or_insert(0) += 1;
+                }
+                // the Reverse(entity) key component breaks count ties
+                // toward the LOWEST entity index (max_by_key alone would
+                // return the last — i.e. highest — tied key).
+                counts
+                    .into_iter()
+                    .max_by_key(|&(entity, count)| (count, std::cmp::Reverse(entity)))
+                    .map(|(entity, _)| entity)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+
+    /// Number of consecutive-window hotspot changes.
+    pub fn migrations(&self) -> usize {
+        self.window_hotspots()
+            .windows(2)
+            .filter(|w| w[0] != w[1])
+            .count()
+    }
+
+    /// Fraction of consecutive window pairs whose hotspot differs, in
+    /// `[0, 1]`; 0.0 when fewer than two complete windows exist.
+    pub fn migration_rate(&self) -> f64 {
+        let hot = self.window_hotspots();
+        if hot.len() < 2 {
+            return 0.0;
+        }
+        self.migrations() as f64 / (hot.len() - 1) as f64
     }
 }
 
 /// Per-request serving metrics.
 #[derive(Debug, Clone, Default)]
 pub struct RequestMetrics {
+    /// Request id (from [`crate::workload::Request::id`]).
     pub id: u64,
+    /// Tenant stream the request belongs to (multi-tenant scenarios).
+    pub tenant: u16,
+    /// Arrival time on the serving clock.
     pub arrival: f64,
+    /// Time the first token was emitted (None while queued/prefilling).
     pub first_token: Option<f64>,
+    /// Time the request retired (None while decoding).
     pub finished: Option<f64>,
+    /// Tokens emitted by retirement.
     pub tokens_out: usize,
 }
 
 impl RequestMetrics {
+    /// Time to first token (None until the first token exists).
     pub fn ttft(&self) -> Option<f64> {
         self.first_token.map(|t| t - self.arrival)
     }
@@ -189,12 +312,14 @@ impl RequestMetrics {
 /// Serving-level aggregation.
 #[derive(Debug, Clone, Default)]
 pub struct ServingMetrics {
+    /// One record per submitted request, in submission order.
     pub requests: Vec<RequestMetrics>,
     /// (sim_time, tokens decoded this step) samples for throughput curves.
     pub step_tokens: Vec<(f64, usize)>,
 }
 
 impl ServingMetrics {
+    /// TTFT distribution over requests that produced a first token.
     pub fn ttft_summary(&self) -> Summary {
         Summary::of(
             &self
@@ -205,6 +330,7 @@ impl ServingMetrics {
         )
     }
 
+    /// TPOT distribution over completed multi-token requests.
     pub fn tpot_summary(&self) -> Summary {
         Summary::of(
             &self
@@ -213,6 +339,34 @@ impl ServingMetrics {
                 .filter_map(|r| r.tpot())
                 .collect::<Vec<_>>(),
         )
+    }
+
+    /// Tenant ids present in the request records, ascending.
+    pub fn tenants(&self) -> Vec<u16> {
+        let mut ids: Vec<u16> = self.requests.iter().map(|r| r.tenant).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids
+    }
+
+    /// TTFT distribution restricted to one tenant's requests.
+    pub fn ttft_summary_for_tenant(&self, tenant: u16) -> Summary {
+        Summary::of(
+            &self
+                .requests
+                .iter()
+                .filter(|r| r.tenant == tenant)
+                .filter_map(|r| r.ttft())
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    /// Completed-request count restricted to one tenant.
+    pub fn completed_for_tenant(&self, tenant: u16) -> usize {
+        self.requests
+            .iter()
+            .filter(|r| r.tenant == tenant && r.finished.is_some())
+            .count()
     }
 
     /// Merge replica-level metrics into one cross-replica view: request
@@ -307,9 +461,59 @@ mod tests {
     }
 
     #[test]
+    fn hotspot_tracker_stationary_is_zero() {
+        let mut h = HotspotTracker::new(2);
+        for _ in 0..8 {
+            h.push_loads(&[1.0, 5.0, 2.0]); // rank 1 always hot
+        }
+        assert_eq!(h.window_hotspots(), vec![1, 1, 1, 1]);
+        assert_eq!(h.migrations(), 0);
+        assert_eq!(h.migration_rate(), 0.0);
+    }
+
+    #[test]
+    fn hotspot_tracker_detects_migration() {
+        let mut h = HotspotTracker::new(2);
+        // two windows hot on 0, then two windows hot on 2
+        for _ in 0..4 {
+            h.push_loads(&[9.0, 1.0, 1.0]);
+        }
+        for _ in 0..4 {
+            h.push_loads(&[1.0, 1.0, 9.0]);
+        }
+        assert_eq!(h.window_hotspots(), vec![0, 0, 2, 2]);
+        assert_eq!(h.migrations(), 1);
+        assert!((h.migration_rate() - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hotspot_window_mode_ignores_single_step_noise() {
+        let mut h = HotspotTracker::new(4);
+        // window of 4 with one noisy step: mode is still 1
+        h.push_loads(&[1.0, 9.0]);
+        h.push_loads(&[9.0, 1.0]); // noise
+        h.push_loads(&[1.0, 9.0]);
+        h.push_loads(&[1.0, 9.0]);
+        assert_eq!(h.window_hotspots(), vec![1]);
+        // incomplete second window is not counted
+        h.push_loads(&[9.0, 1.0]);
+        assert_eq!(h.window_hotspots().len(), 1);
+        assert_eq!(h.migration_rate(), 0.0, "one window cannot migrate");
+    }
+
+    #[test]
+    fn hotspot_mode_tie_picks_lowest_entity() {
+        let mut h = HotspotTracker::new(2);
+        h.push_loads(&[9.0, 1.0]); // hot 0
+        h.push_loads(&[1.0, 9.0]); // hot 1 -> tie in the window
+        assert_eq!(h.window_hotspots(), vec![0]);
+    }
+
+    #[test]
     fn ttft_tpot() {
         let r = RequestMetrics {
             id: 0,
+            tenant: 0,
             arrival: 1.0,
             first_token: Some(1.5),
             finished: Some(2.5),
@@ -338,6 +542,27 @@ mod tests {
         let m = ServingMetrics::merge([&a, &b]);
         assert_eq!(m.requests.len(), 2);
         assert_eq!(m.step_tokens, vec![(0.0, 1), (1.0, 2), (2.0, 3)]);
+    }
+
+    #[test]
+    fn per_tenant_breakdown() {
+        let mk = |tenant: u16, arrival: f64, first: f64| RequestMetrics {
+            id: 0,
+            tenant,
+            arrival,
+            first_token: Some(first),
+            finished: Some(first + 1.0),
+            tokens_out: 2,
+        };
+        let m = ServingMetrics {
+            requests: vec![mk(0, 0.0, 1.0), mk(1, 0.0, 3.0), mk(0, 1.0, 1.5)],
+            step_tokens: vec![],
+        };
+        assert_eq!(m.tenants(), vec![0, 1]);
+        assert_eq!(m.completed_for_tenant(0), 2);
+        assert_eq!(m.completed_for_tenant(1), 1);
+        assert!((m.ttft_summary_for_tenant(1).p50 - 3.0).abs() < 1e-12);
+        assert!(m.ttft_summary_for_tenant(0).p50 < 1.0 + 1e-12);
     }
 
     #[test]

@@ -8,6 +8,7 @@
 /// Static description of an MoE model (per paper §3.1 notation).
 #[derive(Debug, Clone, PartialEq)]
 pub struct MoeModel {
+    /// Preset name (CLI/TOML key).
     pub name: String,
     /// Number of MoE layers (dense layers are irrelevant to EP balance).
     pub n_layers: usize,
@@ -68,6 +69,7 @@ impl MoeModel {
         }
     }
 
+    /// Resolve a model preset from its CLI/TOML name.
     pub fn by_name(name: &str) -> Option<MoeModel> {
         match name {
             "gpt-oss-120b" => Some(Self::gpt_oss_120b()),

@@ -11,12 +11,15 @@ use crate::routing::{token_rank, LayerRouting};
 /// originating on rank `rs` assigned to the copy on rank `rt`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Assignment {
+    /// Expert-parallel group size (ranks).
     pub ep: usize,
+    /// Experts in the layer.
     pub n_experts: usize,
     flow: Vec<f64>, // [(e*ep + rs)*ep + rt]
 }
 
 impl Assignment {
+    /// All-zero flow tensor.
     pub fn zeros(n_experts: usize, ep: usize) -> Assignment {
         Assignment {
             ep,
@@ -63,11 +66,13 @@ impl Assignment {
         (e * self.ep + rs) * self.ep + rt
     }
 
+    /// Tokens of expert `e` originating on `rs` assigned to `rt`.
     #[inline]
     pub fn get(&self, e: usize, rs: usize, rt: usize) -> f64 {
         self.flow[self.idx(e, rs, rt)]
     }
 
+    /// Add `x` tokens to the `(e, rs, rt)` flow cell.
     #[inline]
     pub fn add(&mut self, e: usize, rs: usize, rt: usize, x: f64) {
         let i = self.idx(e, rs, rt);

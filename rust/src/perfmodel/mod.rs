@@ -65,7 +65,9 @@ pub fn rank_compute_times(
 /// whose k experts land on the same target rank is sent once.
 #[derive(Debug, Clone, PartialEq)]
 pub struct CommVolumes {
+    /// Ingress bytes per rank.
     pub v_in: Vec<f64>,
+    /// Egress bytes per rank.
     pub v_out: Vec<f64>,
 }
 
@@ -79,6 +81,7 @@ impl CommVolumes {
             .collect()
     }
 
+    /// Bottleneck-rank critical volume (§3.3).
     pub fn max_critical(&self) -> f64 {
         self.critical().iter().cloned().fold(0.0, f64::max)
     }
@@ -90,11 +93,13 @@ impl CommVolumes {
 /// traffic from inter-node rail traffic.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TrafficMatrix {
+    /// Expert-parallel group size (matrix is `ep × ep`).
     pub ep: usize,
     bytes: Vec<f64>,
 }
 
 impl TrafficMatrix {
+    /// Zero matrix over `ep` ranks.
     pub fn new(ep: usize) -> TrafficMatrix {
         TrafficMatrix {
             ep,
@@ -102,11 +107,13 @@ impl TrafficMatrix {
         }
     }
 
+    /// Add `b` bytes to the `src → dst` cell.
     #[inline]
     pub fn add(&mut self, src: usize, dst: usize, b: f64) {
         self.bytes[src * self.ep + dst] += b;
     }
 
+    /// Bytes in the `src → dst` cell.
     #[inline]
     pub fn get(&self, src: usize, dst: usize) -> f64 {
         self.bytes[src * self.ep + dst]

@@ -13,17 +13,24 @@ use crate::topology::HardwareProfile;
 /// Bytes breakdown for one rank.
 #[derive(Debug, Clone, PartialEq)]
 pub struct MemoryBreakdown {
+    /// Resident model weights (experts + non-expert share).
     pub weights: f64,
+    /// Replica-region reservation under the active policy.
     pub replica_buffers: f64,
+    /// Transient activation bytes for in-flight tokens.
     pub activations: f64,
+    /// KV-cache reservation.
     pub kv_reserved: f64,
+    /// HBM capacity of the rank.
     pub capacity: f64,
 }
 
 impl MemoryBreakdown {
+    /// Total bytes consumed.
     pub fn total(&self) -> f64 {
         self.weights + self.replica_buffers + self.activations + self.kv_reserved
     }
+    /// True when the breakdown fits into capacity.
     pub fn fits(&self) -> bool {
         self.total() <= self.capacity
     }
@@ -40,13 +47,20 @@ pub enum ReplicaPolicy {
     None,
     /// Static per-layer placeholders: `slots` resident replicas per rank
     /// on EVERY layer (EPLB).
-    StaticPerLayer { slots: usize },
+    StaticPerLayer {
+        /// Replica slots per rank per layer.
+        slots: usize,
+    },
     /// One double-buffered region reused across layers (PROBE):
     /// `2 × max_redundant` expert slots total.
-    CyclicBuffer { max_redundant: usize },
+    CyclicBuffer {
+        /// Replica slots per rank (doubled for the two buffers).
+        max_redundant: usize,
+    },
 }
 
 impl ReplicaPolicy {
+    /// HBM bytes the policy reserves per rank.
     pub fn bytes(&self, model: &MoeModel) -> f64 {
         let w = model.expert_param_bytes();
         match self {

@@ -11,7 +11,9 @@ pub mod memory;
 /// Placement of one MoE layer's experts across an EP group.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Placement {
+    /// Expert-parallel group size (ranks).
     pub ep: usize,
+    /// Experts in the layer.
     pub n_experts: usize,
     /// Expert -> home rank (static shard; contiguous blocks).
     home: Vec<u16>,
@@ -38,6 +40,7 @@ impl Placement {
         }
     }
 
+    /// Static home shard of `expert`.
     pub fn home_rank(&self, expert: usize) -> usize {
         self.home[expert] as usize
     }
@@ -49,6 +52,7 @@ impl Placement {
         out
     }
 
+    /// True when `rank` holds a copy of `expert` (home or replica).
     pub fn hosts(&self, expert: usize, rank: usize) -> bool {
         self.home[expert] as usize == rank
             || self.replicas[expert].contains(&(rank as u16))
@@ -68,10 +72,12 @@ impl Placement {
             .collect()
     }
 
+    /// Replica slots in use on `rank`.
     pub fn slots_used(&self, rank: usize) -> usize {
         self.slots_used[rank]
     }
 
+    /// Replica slots still free on `rank`.
     pub fn slots_free(&self, rank: usize) -> usize {
         self.max_redundant.saturating_sub(self.slots_used[rank])
     }
@@ -151,14 +157,32 @@ impl Placement {
     }
 }
 
+/// Placement mutation / invariant failures.
 #[derive(Debug, Clone, PartialEq, thiserror::Error)]
 pub enum PlacementError {
+    /// The rank already holds a copy of the expert.
     #[error("expert {expert} already hosted on rank {rank}")]
-    AlreadyHosted { expert: usize, rank: usize },
+    AlreadyHosted {
+        /// Expert involved.
+        expert: usize,
+        /// Rank involved.
+        rank: usize,
+    },
+    /// The rank's replica-slot budget is exhausted.
     #[error("no replica slot free on rank {rank}")]
-    NoSlot { rank: usize },
+    NoSlot {
+        /// Rank involved.
+        rank: usize,
+    },
+    /// Attempted to remove a replica that does not exist.
     #[error("expert {expert} has no replica on rank {rank}")]
-    NotReplica { expert: usize, rank: usize },
+    NotReplica {
+        /// Expert involved.
+        expert: usize,
+        /// Rank involved.
+        rank: usize,
+    },
+    /// Internal per-rank slot counters diverged from the replica sets.
     #[error("slot accounting mismatch")]
     SlotAccounting,
 }
@@ -174,6 +198,7 @@ pub struct PlacementDelta {
 }
 
 impl PlacementDelta {
+    /// Per-rank fetch/evict sets turning `old` into `new`.
     pub fn between(old: &Placement, new: &Placement) -> PlacementDelta {
         assert_eq!(old.ep, new.ep);
         let mut fetch = vec![Vec::new(); new.ep];
@@ -200,6 +225,7 @@ impl PlacementDelta {
         self.fetch[rank].len().max(self.evict[rank].len())
     }
 
+    /// True when the two placements are identical.
     pub fn is_empty(&self) -> bool {
         self.fetch.iter().all(|f| f.is_empty()) && self.evict.iter().all(|e| e.is_empty())
     }

@@ -30,7 +30,9 @@ use crate::topology::HardwareProfile;
 /// Result of one planning invocation (one layer, one step).
 #[derive(Debug, Clone)]
 pub struct PlanOutcome {
+    /// Planned placement for the target layer.
     pub placement: Placement,
+    /// Token assignment over the predicted counts.
     pub assignment: Assignment,
     /// Experts NEWLY fetched per rank this plan (|Δ_r^in| minus reuse).
     pub fetches: Vec<Vec<usize>>,
@@ -41,18 +43,22 @@ pub struct PlanOutcome {
     pub retained_replicas: usize,
     /// Loop iterations consumed (≤ k_max).
     pub iterations: usize,
-    /// Planner's internal latency estimate before/after (seconds).
+    /// Planner's internal latency estimate before planning (seconds).
     pub est_before: f64,
+    /// Planner's internal latency estimate after planning (seconds).
     pub est_after: f64,
 }
 
 impl PlanOutcome {
+    /// New fetches planned onto `rank`.
     pub fn fetch_slots(&self, rank: usize) -> usize {
         self.fetches[rank].len()
     }
+    /// Largest per-rank fetch count (the eq. 6 numerator).
     pub fn max_fetch_slots(&self) -> usize {
         self.fetches.iter().map(|f| f.len()).max().unwrap_or(0)
     }
+    /// Total new fetches across ranks.
     pub fn total_fetches(&self) -> usize {
         self.fetches.iter().map(|f| f.len()).sum()
     }
@@ -106,6 +112,7 @@ pub struct LatencyState {
 }
 
 impl LatencyState {
+    /// Build the state under the scalar (topology-blind) objective.
     pub fn from_assignment(a: &Assignment, model: &MoeModel, hw: &HardwareProfile) -> LatencyState {
         Self::from_assignment_on(a, model, hw, None)
     }
@@ -169,6 +176,7 @@ impl LatencyState {
         st
     }
 
+    /// Estimated latency of rank `r` under the current flows.
     #[inline]
     pub fn latency(&self, r: usize) -> f64 {
         let port = self.v_in[r].max(self.v_out[r]) / self.bw;
@@ -182,14 +190,17 @@ impl LatencyState {
         self.comp[r] + traffic
     }
 
+    /// Per-rank latency estimates.
     pub fn latencies(&self) -> Vec<f64> {
         (0..self.ep).map(|r| self.latency(r)).collect()
     }
 
+    /// Bottleneck-rank latency estimate (the greedy objective).
     pub fn max_latency(&self) -> f64 {
         (0..self.ep).map(|r| self.latency(r)).fold(0.0, f64::max)
     }
 
+    /// Tokens of expert `e` currently executing on rank `r`.
     pub fn tokens_on(&self, e: usize, r: usize) -> f64 {
         self.tok[e * self.ep + r]
     }

@@ -34,6 +34,7 @@ pub struct PredFidelity {
     pub top_k_accuracy: f64,
     /// Fraction of the actual top-⌈k/2⌉ covered by the predicted top-k.
     pub top_half_k_hit_rate: f64,
+    /// Tokens the fidelity was measured over.
     pub n_tokens: usize,
 }
 
@@ -95,6 +96,7 @@ pub fn counts_total(by_source: &[Vec<f64>]) -> Vec<f64> {
 /// for accuracy-parameterized error-process predictors; causal
 /// predictors ignore it.
 pub trait LookaheadPredictor: std::fmt::Debug {
+    /// Predictor name for logs and reports.
     fn name(&self) -> &'static str;
 
     /// Online update from the ground-truth routing of an executed layer.
@@ -131,7 +133,9 @@ pub trait LookaheadPredictor: std::fmt::Debug {
 /// is initialized with — uniform before any observation).
 #[derive(Debug, Clone)]
 pub struct TransitionPredictor {
+    /// MoE layers in the model (transition `l → (l+1) % n_layers`).
     pub n_layers: usize,
+    /// Experts per layer.
     pub n_experts: usize,
     /// EMA decay applied per observation of a layer pair.
     pub decay: f64,
@@ -146,6 +150,7 @@ pub struct TransitionPredictor {
 }
 
 impl TransitionPredictor {
+    /// Gate-initialized predictor (uniform marginals, no pairs seen).
     pub fn new(n_layers: usize, n_experts: usize) -> TransitionPredictor {
         assert!(n_layers > 0 && n_experts > 0);
         TransitionPredictor {
@@ -284,6 +289,7 @@ pub struct StatisticalPredictor {
 }
 
 impl StatisticalPredictor {
+    /// Error-process predictor with per-slot accuracy in `[0, 1]`.
     pub fn new(accuracy: f64, seed: u64) -> StatisticalPredictor {
         assert!((0.0..=1.0).contains(&accuracy));
         StatisticalPredictor {
@@ -294,10 +300,11 @@ impl StatisticalPredictor {
         }
     }
 
-    /// Paper Fig. 10 presets.
+    /// Paper Fig. 10 distilled operating point (≈ 0.90).
     pub fn distilled(seed: u64) -> StatisticalPredictor {
         StatisticalPredictor::new(0.90, seed)
     }
+    /// Paper Fig. 10 untrained-prior operating point (≈ 0.75).
     pub fn untrained(seed: u64) -> StatisticalPredictor {
         StatisticalPredictor::new(0.75, seed)
     }

@@ -11,14 +11,18 @@ use crate::util::Rng;
 /// Ground-truth routing of one MoE layer for one step.
 #[derive(Debug, Clone, PartialEq)]
 pub struct LayerRouting {
+    /// Tokens routed this layer.
     pub n_tokens: usize,
+    /// Experts activated per token.
     pub top_k: usize,
+    /// Experts in the layer.
     pub n_experts: usize,
     /// Flat `[n_tokens * top_k]`, token-major; distinct within a token.
     pub experts: Vec<u16>,
 }
 
 impl LayerRouting {
+    /// Wrap a flat expert-id buffer (asserts the shape).
     pub fn new(n_tokens: usize, top_k: usize, n_experts: usize, experts: Vec<u16>) -> LayerRouting {
         assert_eq!(experts.len(), n_tokens * top_k);
         debug_assert!(experts.iter().all(|&e| (e as usize) < n_experts));
@@ -79,6 +83,7 @@ pub fn token_rank(t: usize, n_tokens: usize, ep: usize) -> usize {
 /// Routing for all MoE layers of one step.
 #[derive(Debug, Clone)]
 pub struct StepRouting {
+    /// One routing per MoE layer, in execution order.
     pub layers: Vec<LayerRouting>,
 }
 
@@ -88,9 +93,13 @@ pub struct StepRouting {
 /// affinity and uniform noise; domain affinities drift over steps.
 #[derive(Debug, Clone)]
 pub struct RoutingModel {
+    /// MoE layers modeled.
     pub n_layers: usize,
+    /// Experts per layer.
     pub n_experts: usize,
+    /// Experts activated per token.
     pub top_k: usize,
+    /// Semantic domains with distinct expert affinities.
     pub n_domains: usize,
     /// `[layer][domain][expert]` affinity (sums to 1).
     affinity: Vec<Vec<Vec<f64>>>,
@@ -104,6 +113,8 @@ pub struct RoutingModel {
 }
 
 impl RoutingModel {
+    /// Routing model with explicit skew (`alpha`), drift, and noise.
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         n_layers: usize,
         n_experts: usize,

@@ -26,21 +26,32 @@ use pjrt_stub as xla;
 /// Shape/config of the small real model (from `artifacts/metadata.json`).
 #[derive(Debug, Clone)]
 pub struct SmallModelCfg {
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Hidden (residual-stream) width.
     pub d_model: usize,
+    /// Transformer layers (all MoE).
     pub n_layers: usize,
+    /// Experts per layer.
     pub n_experts: usize,
+    /// Experts activated per token.
     pub top_k: usize,
+    /// Maximum sequence length the KV cache holds.
     pub max_seq: usize,
+    /// Sequences per prefill artifact execution.
     pub prefill_batch: usize,
+    /// Tokens per prefill chunk.
     pub prefill_chunk: usize,
+    /// Decode batch sizes with compiled artifacts.
     pub decode_batches: Vec<usize>,
 }
 
 impl SmallModelCfg {
+    /// Flat f32 length of the KV cache for `batch` sequences.
     pub fn kv_len(&self, batch: usize) -> usize {
         self.n_layers * 2 * batch * self.max_seq * self.d_model
     }
+    /// KV-cache tensor dims `[L, 2, B, S, H]` for `batch` sequences.
     pub fn kv_dims(&self, batch: usize) -> Vec<usize> {
         vec![self.n_layers, 2, batch, self.max_seq, self.d_model]
     }
@@ -58,6 +69,7 @@ struct WeightEntry {
 /// Outputs of one decode step (all layers).
 #[derive(Debug, Clone)]
 pub struct DecodeOut {
+    /// Decode batch size executed.
     pub batch: usize,
     /// `[B, vocab]` next-token logits.
     pub logits: Vec<f32>,
@@ -76,15 +88,21 @@ pub struct DecodeOut {
 /// Outputs of one prefill chunk.
 #[derive(Debug, Clone)]
 pub struct PrefillOut {
+    /// Prefill batch size executed.
     pub batch: usize,
+    /// Chunk length in tokens.
     pub chunk: usize,
     /// `[B, vocab]` logits at the last chunk position.
     pub logits_last: Vec<f32>,
-    /// `[L, B, S, K]`.
+    /// `[L, B, S, K]` ground-truth routed experts.
     pub actual_idx: Vec<i32>,
+    /// `[L, B, S, K]` gate weights.
     pub actual_gate: Vec<f32>,
+    /// `[L, B, S, K]` distilled lookahead predictions (-1 on layer 0).
     pub pred_idx: Vec<i32>,
+    /// `[L, B, S, K]` untrained-prior predictions (-1 on layer 0).
     pub prior_idx: Vec<i32>,
+    /// Wall-clock of the PJRT execution (incl. host copies).
     pub exec_time: f64,
 }
 
@@ -207,6 +225,7 @@ impl Engine {
             .map(|d| d.as_slice())
     }
 
+    /// Shape/config the artifacts were compiled for.
     pub fn cfg(&self) -> &SmallModelCfg {
         &self.cfg
     }
@@ -368,6 +387,7 @@ impl Engine {
         Ok((y, t0.elapsed().as_secs_f64()))
     }
 
+    /// Number of weight tensors uploaded at load time.
     pub fn n_params(&self) -> usize {
         self.n_params
     }

@@ -53,8 +53,9 @@ pub struct LayerSchedule {
     pub prefetch_slots: Vec<usize>,
     /// Hiding windows until the enqueued transfer's target layer runs.
     pub prefetch_lookahead: usize,
-    /// Aux-track control costs (0 for baselines).
+    /// Aux-track prediction cost (0 for baselines).
     pub predict_time: f64,
+    /// Aux-track planning cost (0 for baselines).
     pub plan_time: f64,
     /// Reactive (non-hidden) transfer charged directly on the critical
     /// path (EPLB-style rebalancing).
@@ -121,6 +122,7 @@ pub struct PrefetchQueue {
 }
 
 impl PrefetchQueue {
+    /// Empty queue.
     pub fn new() -> PrefetchQueue {
         PrefetchQueue::default()
     }
@@ -130,10 +132,12 @@ impl PrefetchQueue {
         self.items.iter().map(|i| i.remaining).sum()
     }
 
+    /// True when no transfer is in flight.
     pub fn is_empty(&self) -> bool {
         self.items.is_empty()
     }
 
+    /// Number of queued transfer items.
     pub fn len(&self) -> usize {
         self.items.len()
     }

@@ -10,38 +10,54 @@
 //!   exploits), with consistent-hashing-style *bounded load*: when the
 //!   home replica exceeds `SPILL_FACTOR ×` the fleet-mean outstanding
 //!   work, the request spills to the least-loaded replica.
+//! * [`DispatchKind::TenantAffinity`] — multi-tenant scenarios
+//!   ([`crate::workload::Scenario`]): each tenant stream keeps a home
+//!   replica (tenants are the coarser, operator-visible locality unit —
+//!   one tenant's flash crowd stays off the other tenants' replicas),
+//!   with the same bounded-load spill as domain affinity.
 
 use crate::workload::Request;
 
 /// Pluggable dispatch policy selector.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DispatchKind {
+    /// Cyclic, load-blind baseline.
     RoundRobin,
+    /// Join-shortest-queue on the outstanding-work estimate.
     ShortestQueue,
+    /// Domain-keyed home replica with bounded-load spill.
     DomainAffinity,
+    /// Tenant-keyed home replica with bounded-load spill.
+    TenantAffinity,
 }
 
 impl DispatchKind {
-    pub const ALL: [DispatchKind; 3] = [
+    /// Every policy, in sweep order.
+    pub const ALL: [DispatchKind; 4] = [
         DispatchKind::RoundRobin,
         DispatchKind::ShortestQueue,
         DispatchKind::DomainAffinity,
+        DispatchKind::TenantAffinity,
     ];
 
+    /// Resolve a policy from its CLI name (short or long form).
     pub fn by_name(s: &str) -> Option<DispatchKind> {
         match s {
             "rr" | "round-robin" => Some(DispatchKind::RoundRobin),
             "jsq" | "shortest-queue" => Some(DispatchKind::ShortestQueue),
             "affinity" | "domain-affinity" => Some(DispatchKind::DomainAffinity),
+            "tenant" | "tenant-affinity" => Some(DispatchKind::TenantAffinity),
             _ => None,
         }
     }
 
+    /// Canonical (long-form) policy name.
     pub fn name(&self) -> &'static str {
         match self {
             DispatchKind::RoundRobin => "round-robin",
             DispatchKind::ShortestQueue => "shortest-queue",
             DispatchKind::DomainAffinity => "domain-affinity",
+            DispatchKind::TenantAffinity => "tenant-affinity",
         }
     }
 }
@@ -70,6 +86,7 @@ pub struct Dispatcher {
 }
 
 impl Dispatcher {
+    /// Dispatcher over `replicas` engines (must be ≥ 1).
     pub fn new(kind: DispatchKind, replicas: usize) -> Dispatcher {
         assert!(replicas > 0);
         Dispatcher {
@@ -90,10 +107,12 @@ impl Dispatcher {
         self
     }
 
+    /// Number of replicas dispatched over.
     pub fn replicas(&self) -> usize {
         self.outstanding.len()
     }
 
+    /// The active dispatch policy.
     pub fn kind(&self) -> DispatchKind {
         self.kind
     }
@@ -163,8 +182,11 @@ impl Dispatcher {
                 r
             }
             DispatchKind::ShortestQueue => self.least_loaded(),
-            DispatchKind::DomainAffinity => {
-                let home = req.domain as usize % n;
+            DispatchKind::DomainAffinity | DispatchKind::TenantAffinity => {
+                let home = match self.kind {
+                    DispatchKind::TenantAffinity => req.tenant as usize % n,
+                    _ => req.domain as usize % n,
+                };
                 let total: f64 = self.outstanding.iter().sum();
                 // bounded load with one-request slack (the ceil() in
                 // consistent hashing with bounded loads): keep the home
@@ -196,6 +218,7 @@ mod tests {
     fn req(id: u64, domain: u16, work: usize) -> Request {
         Request {
             id,
+            tenant: 0,
             domain,
             dataset: Dataset::Mixed,
             prompt_len: work / 2,
@@ -285,6 +308,26 @@ mod tests {
         d.dispatch(&req(3, 3, 400)); // home of domain 3, node 1, alone
         let pick = d.dispatch(&req(4, 3, 10));
         assert_ne!(pick, 3, "spill returned the over-bound home");
+    }
+
+    #[test]
+    fn tenant_affinity_keys_on_tenant_not_domain() {
+        let mut d = Dispatcher::new(DispatchKind::TenantAffinity, 4);
+        // balanced per-tenant traffic with scrambled domains stays home
+        for i in 0..16u64 {
+            let mut r = req(i, (i % 3) as u16, 10);
+            r.tenant = (i % 4) as u16;
+            assert_eq!(d.dispatch(&r), r.tenant as usize);
+        }
+        // one tenant floods: bounded load spills it off its home
+        let mut flood = Dispatcher::new(DispatchKind::TenantAffinity, 4);
+        let mut used = [false; 4];
+        for i in 0..32u64 {
+            let mut r = req(i, (i % 4) as u16, 10);
+            r.tenant = 2;
+            used[flood.dispatch(&r)] = true;
+        }
+        assert!(used.iter().filter(|&&u| u).count() >= 3, "{used:?}");
     }
 
     #[test]

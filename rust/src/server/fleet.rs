@@ -22,7 +22,9 @@ use super::dispatch::{DispatchKind, Dispatcher};
 /// Fleet shape and limits.
 #[derive(Debug, Clone)]
 pub struct FleetConfig {
+    /// Engine replicas the stream shards across.
     pub replicas: usize,
+    /// Dispatch policy assigning requests to replicas.
     pub policy: DispatchKind,
     /// Per-replica decode-step cap (safety valve for stuck workloads).
     pub max_steps: usize,
@@ -44,15 +46,21 @@ impl Default for FleetConfig {
 /// Outcome of one replica's run.
 #[derive(Debug, Clone)]
 pub struct ReplicaReport {
+    /// Replica index within the fleet.
     pub replica: usize,
+    /// Requests dispatched to this replica.
     pub assigned: usize,
+    /// Requests that finished decoding.
     pub completed: usize,
     /// Decode tokens produced (sum over step samples).
     pub tokens: usize,
     /// Final serving clock (busy span; replicas all start at 0).
     pub clock: f64,
+    /// Decode steps executed.
     pub steps: usize,
+    /// Mean imbalance ratio observed by the replica's engine.
     pub mean_ir: f64,
+    /// The replica's full serving metrics.
     pub metrics: ServingMetrics,
     /// Engine construction/serving failure; a failed replica's zeroed
     /// stats are excluded from fleet aggregates.
@@ -62,7 +70,9 @@ pub struct ReplicaReport {
 /// Merged view over all replicas of one fleet run.
 #[derive(Debug, Clone)]
 pub struct FleetReport {
+    /// Dispatch policy the run used.
     pub policy: DispatchKind,
+    /// One report per replica, by replica index.
     pub per_replica: Vec<ReplicaReport>,
 }
 
@@ -80,10 +90,12 @@ impl FleetReport {
             .collect()
     }
 
+    /// Requests completed across the whole fleet.
     pub fn completed(&self) -> usize {
         self.per_replica.iter().map(|r| r.completed).sum()
     }
 
+    /// Decode tokens produced across the whole fleet.
     pub fn total_tokens(&self) -> usize {
         self.per_replica.iter().map(|r| r.tokens).sum()
     }
@@ -122,8 +134,30 @@ impl FleetReport {
         self.healthy().map(|r| r.mean_ir).collect()
     }
 
+    /// Fleet-mean imbalance ratio over healthy replicas.
     pub fn mean_ir(&self) -> f64 {
         crate::util::stats::mean(&self.per_replica_ir())
+    }
+
+    /// Per-tenant serving quality across the fleet: for every tenant id
+    /// present in the merged request records, (tenant, completed
+    /// requests, TTFT summary). This is how multi-tenant
+    /// [`crate::workload::Scenario`] runs are judged — one tenant's
+    /// flash crowd should degrade its own TTFT, not every tenant's
+    /// (which is what [`DispatchKind::TenantAffinity`] buys).
+    pub fn per_tenant(&self) -> Vec<(u16, usize, Summary)> {
+        let merged = self.merged_metrics();
+        merged
+            .tenants()
+            .into_iter()
+            .map(|t| {
+                (
+                    t,
+                    merged.completed_for_tenant(t),
+                    merged.ttft_summary_for_tenant(t),
+                )
+            })
+            .collect()
     }
 }
 
@@ -283,6 +317,44 @@ mod tests {
             jsq > rr,
             "shortest-queue {jsq} did not beat round-robin {rr} on Repeat"
         );
+    }
+
+    #[test]
+    fn multi_tenant_scenario_through_fleet_with_tenant_affinity() {
+        use crate::workload::{Scenario, ScenarioGenerator};
+        // a real multi-tenant scenario stream (3 tenants) sharded by
+        // tenant affinity: every request completes, every tenant shows
+        // up in the per-tenant breakdown, and under balanced load each
+        // tenant's requests stay on its home replica
+        let mut scenario = Scenario::preset("multi_tenant", 12.0, 4.0, 4).unwrap();
+        for t in &mut scenario.tenants {
+            t.spec.mean_prompt_len = 16;
+            t.spec.mean_new_tokens = 24;
+        }
+        let reqs = ScenarioGenerator::new(scenario, 9).generate();
+        assert!(!reqs.is_empty());
+        let n = reqs.len();
+        let cfg = FleetConfig {
+            replicas: 3,
+            policy: DispatchKind::TenantAffinity,
+            max_steps: 50_000,
+            threads: 0,
+        };
+        let mut want_tenants: Vec<u16> = reqs.iter().map(|r| r.tenant).collect();
+        want_tenants.sort_unstable();
+        want_tenants.dedup();
+        let report = run_fleet(&cfg, &reqs, sim_factory(9));
+        assert_eq!(report.completed(), n, "dropped requests");
+        let per_tenant = report.per_tenant();
+        let got: Vec<u16> = per_tenant.iter().map(|&(t, _, _)| t).collect();
+        assert_eq!(got, want_tenants, "{per_tenant:?}");
+        assert!(got.len() >= 2, "scenario degenerated to one tenant");
+        let total: usize = per_tenant.iter().map(|(_, c, _)| c).sum();
+        assert_eq!(total, n);
+        for (t, completed, ttft) in &per_tenant {
+            assert!(*completed > 0, "tenant {t} completed nothing");
+            assert!(ttft.p50 >= 0.0);
+        }
     }
 
     #[test]

@@ -24,9 +24,13 @@ use crate::workload::{Dataset, Request};
 /// A client-visible generation request.
 #[derive(Debug, Clone)]
 pub struct ServeRequest {
+    /// Client-assigned request id (echoed in the response).
     pub id: u64,
+    /// Semantic domain of the request.
     pub domain: u16,
+    /// Prompt length in tokens.
     pub prompt_len: usize,
+    /// Decode budget in tokens.
     pub max_new_tokens: usize,
     /// Arrival time on the engine's serving clock (0.0 = already
     /// arrived). Open-loop traces set this from the workload generator
@@ -37,9 +41,13 @@ pub struct ServeRequest {
 /// Completion notification.
 #[derive(Debug, Clone)]
 pub struct ServeResponse {
+    /// Id of the completed request.
     pub id: u64,
+    /// Time to first token (serving-clock seconds).
     pub ttft: f64,
+    /// Time per output token after the first (None for 1-token runs).
     pub tpot: Option<f64>,
+    /// Tokens emitted.
     pub tokens_out: usize,
 }
 
@@ -58,11 +66,17 @@ pub struct ServerHandle {
 /// Aggregate statistics returned at shutdown.
 #[derive(Debug, Clone, Default)]
 pub struct ServeStats {
+    /// Decode steps executed.
     pub steps: usize,
+    /// Requests completed.
     pub completed: usize,
+    /// Aggregate decode throughput (tokens/s).
     pub throughput: f64,
+    /// Median time to first token (seconds).
     pub ttft_p50: f64,
+    /// Median time per output token (seconds).
     pub tpot_p50: f64,
+    /// Mean imbalance ratio over the run.
     pub mean_ir: f64,
 }
 
@@ -106,6 +120,7 @@ fn serve_loop<E: StepExecutor>(
                 Ok(Msg::Submit(sr)) => {
                     engine.submit(Request {
                         id: sr.id,
+                        tenant: 0,
                         domain: sr.domain,
                         dataset: Dataset::Mixed,
                         prompt_len: sr.prompt_len,
@@ -166,6 +181,7 @@ fn serve_loop<E: StepExecutor>(
 }
 
 impl ServerHandle {
+    /// Enqueue a request for the serving loop.
     pub fn submit(&self, req: ServeRequest) {
         let _ = self.tx.send(Msg::Submit(req));
     }

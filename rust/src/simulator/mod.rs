@@ -28,6 +28,7 @@ use crate::util::stats::imbalance_ratio;
 /// Balancer output for one layer of one step.
 #[derive(Debug, Clone)]
 pub struct LayerDecision {
+    /// Expert placement executing this layer.
     pub placement: Placement,
     /// Token assignment for the ACTUAL routing (dispatch follows the
     /// ground-truth router; only placement was decided ahead of time).
@@ -43,9 +44,10 @@ pub struct LayerDecision {
     pub prefetch_flows: Vec<Flow>,
     /// Hiding windows between the enqueue and the target layer.
     pub prefetch_lookahead: usize,
-    /// Aux-track control costs spent during this layer (for the plan
+    /// Aux-track prediction cost spent during this layer (for the plan
     /// targeting `l + prefetch_lookahead`).
     pub predict_time: f64,
+    /// Aux-track planning cost spent during this layer.
     pub plan_time: f64,
     /// Reactive transfer charged on the critical path (EPLB).
     pub exposed_transfer: f64,
@@ -83,6 +85,7 @@ impl LayerDecision {
 pub struct StepOutcome {
     /// End-to-end step latency (sum of layer makespans + exposure).
     pub latency: f64,
+    /// Per-layer dual-track timelines.
     pub timelines: Vec<LayerTimeline>,
     /// Token-load IR per layer (paper eq. 1 at rank granularity).
     pub ir_per_layer: Vec<f64>,
@@ -93,12 +96,17 @@ pub struct StepOutcome {
     /// Expert fetches enqueued across all layers of this step
     /// (delta-planning observability; clear-mode refetches everything).
     pub prefetch_slots_total: usize,
+    /// Per-rank token loads of the first simulated layer — the hotspot
+    /// signal [`crate::metrics::HotspotTracker`] consumes.
+    pub rank_token_loads: Vec<f64>,
 }
 
 impl StepOutcome {
+    /// Mean token-load IR across the step's layers.
     pub fn mean_ir(&self) -> f64 {
         crate::util::stats::mean(&self.ir_per_layer)
     }
+    /// Mean compute skew across the step's layers.
     pub fn mean_comp_skew(&self) -> f64 {
         crate::util::stats::mean(&self.comp_skew_per_layer)
     }
@@ -111,8 +119,11 @@ impl StepOutcome {
 /// Cluster simulator for one model on one cluster.
 #[derive(Debug, Clone)]
 pub struct ClusterSim {
+    /// Model being served (shape/cost descriptor).
     pub model: MoeModel,
+    /// Cluster (ranks, hardware profile, interconnect fabric).
     pub cluster: Cluster,
+    /// Split-phase prefetch transmission (PROBE on, ablation off).
     pub split_phase: bool,
     /// Effective KV rows read per query token (post-GQA/tiling); see
     /// [`crate::scheduler::attention_time`].
@@ -123,6 +134,7 @@ pub struct ClusterSim {
 }
 
 impl ClusterSim {
+    /// Simulator with default decode context and split-phase on.
     pub fn new(model: MoeModel, cluster: Cluster) -> ClusterSim {
         ClusterSim {
             model,
@@ -151,6 +163,7 @@ impl ClusterSim {
         let mut comp_skew = Vec::with_capacity(n_layers);
         let mut latency = 0.0;
         let mut prefetch_slots_total = 0usize;
+        let mut first_rank_tokens: Vec<f64> = Vec::new();
 
         for l in 0..n_layers {
             let lr = &routing.layers[l];
@@ -196,6 +209,9 @@ impl ClusterSim {
             prefetch_slots_total += d.total_prefetch_slots();
 
             let rank_tokens: Vec<f64> = (0..ep).map(|r| loads[r].iter().sum::<f64>()).collect();
+            if l == 0 {
+                first_rank_tokens = rank_tokens.clone();
+            }
             ir_per_layer.push(imbalance_ratio(&rank_tokens));
             comp_skew.push(imbalance_ratio(&compute));
             latency += tl.makespan();
@@ -209,6 +225,7 @@ impl ClusterSim {
             comp_skew_per_layer: comp_skew,
             tokens,
             prefetch_slots_total,
+            rank_token_loads: first_rank_tokens,
         }
     }
 
@@ -280,6 +297,9 @@ mod tests {
         assert!(out.latency > 0.0);
         assert_eq!(out.tokens, 2048);
         assert_eq!(out.prefetch_slots_total, 0);
+        assert_eq!(out.rank_token_loads.len(), s.cluster.ep);
+        let total: f64 = out.rank_token_loads.iter().sum();
+        assert!((total - 2048.0 * s.model.top_k as f64).abs() < 1e-6);
     }
 
     #[test]

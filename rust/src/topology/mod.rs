@@ -8,6 +8,7 @@
 /// Per-rank hardware characteristics.
 #[derive(Debug, Clone, PartialEq)]
 pub struct HardwareProfile {
+    /// Preset name (CLI/TOML key).
     pub name: String,
     /// Peak dense BF16 FLOP/s per rank.
     pub peak_flops: f64,
@@ -100,6 +101,7 @@ impl HardwareProfile {
         }
     }
 
+    /// Resolve a profile preset from its CLI/TOML name.
     pub fn by_name(name: &str) -> Option<HardwareProfile> {
         match name {
             "hopper-141" => Some(Self::hopper_141()),
@@ -132,8 +134,11 @@ use crate::fabric::{Fabric, LinkSpec};
 /// (one node by default; multi-node via [`Cluster::multi_node`]).
 #[derive(Debug, Clone)]
 pub struct Cluster {
+    /// Expert-parallel group size (ranks).
     pub ep: usize,
+    /// Per-rank hardware characteristics.
     pub profile: HardwareProfile,
+    /// Interconnect topology the ranks communicate over.
     pub fabric: Fabric,
 }
 

@@ -25,13 +25,18 @@ pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Summary {
 /// A named collection of measurement rows printed as an aligned table and
 /// saved as JSON.
 pub struct BenchSet {
+    /// Table name (also the `bench_results/<name>.json` file stem).
     pub name: String,
+    /// Column headers.
     pub columns: Vec<String>,
+    /// Data rows (each matching the column arity).
     pub rows: Vec<Vec<String>>,
+    /// Free-form footnotes printed under the table.
     pub notes: Vec<String>,
 }
 
 impl BenchSet {
+    /// Empty table with the given name and columns.
     pub fn new(name: &str, columns: &[&str]) -> BenchSet {
         BenchSet {
             name: name.to_string(),
@@ -41,11 +46,13 @@ impl BenchSet {
         }
     }
 
+    /// Append one row (panics on arity mismatch).
     pub fn row(&mut self, cells: &[String]) {
         assert_eq!(cells.len(), self.columns.len(), "row arity mismatch");
         self.rows.push(cells.to_vec());
     }
 
+    /// Append a footnote.
     pub fn note(&mut self, s: impl Into<String>) {
         self.notes.push(s.into());
     }

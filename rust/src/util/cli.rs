@@ -7,8 +7,11 @@ use std::collections::BTreeMap;
 /// Parsed command line: positionals plus key/value options.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// Positional arguments, in order.
     pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options.
     pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
     pub flags: Vec<String>,
 }
 
@@ -37,30 +40,37 @@ impl Args {
         out
     }
 
+    /// Parse the process's own arguments.
     pub fn from_env() -> Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// Raw value of `--key`, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.options.get(key).map(|s| s.as_str())
     }
 
+    /// Value of `--key` or a default.
     pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).unwrap_or(default)
     }
 
+    /// `--key` parsed as usize, or the default.
     pub fn get_usize(&self, key: &str, default: usize) -> usize {
         self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
 
+    /// `--key` parsed as u64, or the default.
     pub fn get_u64(&self, key: &str, default: u64) -> u64 {
         self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
 
+    /// `--key` parsed as f64, or the default.
     pub fn get_f64(&self, key: &str, default: f64) -> f64 {
         self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
 
+    /// True when the bare `--name` flag was given.
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }

@@ -12,45 +12,58 @@ use std::fmt;
 /// A JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// A number (the JSON number model: f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
             _ => None,
         }
     }
+    /// Number truncated to i64.
     pub fn as_i64(&self) -> Option<i64> {
         self.as_f64().map(|x| x as i64)
     }
+    /// Number truncated to usize.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|x| x as usize)
     }
+    /// String value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// Boolean value, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
             _ => None,
         }
     }
+    /// Array elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
             _ => None,
         }
     }
+    /// Object map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(o) => Some(o),
@@ -68,6 +81,7 @@ impl Json {
         self.as_arr().and_then(|a| a.get(idx)).unwrap_or(&NULL)
     }
 
+    /// Parse a complete JSON document (trailing characters rejected).
     pub fn parse(text: &str) -> Result<Json, JsonError> {
         let mut p = Parser {
             b: text.as_bytes(),
@@ -82,6 +96,7 @@ impl Json {
         Ok(v)
     }
 
+    /// Object from (key, value) pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(
             pairs
@@ -91,6 +106,7 @@ impl Json {
         )
     }
 
+    /// Numeric array from an f64 slice.
     pub fn arr_f64(xs: &[f64]) -> Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
     }
@@ -126,7 +142,9 @@ impl From<bool> for Json {
 #[derive(Debug, Clone, thiserror::Error)]
 #[error("json error at byte {offset}: {msg}")]
 pub struct JsonError {
+    /// Byte offset of the failure in the input.
     pub offset: usize,
+    /// Failure description.
     pub msg: String,
 }
 

@@ -16,25 +16,32 @@ use super::rng::Rng;
 
 /// Case generator handed to each property iteration.
 pub struct Gen {
+    /// The case's deterministic RNG (seed + case index).
     pub rng: Rng,
 }
 
 impl Gen {
+    /// Uniform usize in the half-open range.
     pub fn usize_in(&mut self, range: std::ops::Range<usize>) -> usize {
         range.start + self.rng.next_usize(range.end - range.start)
     }
+    /// Uniform u64 in the half-open range.
     pub fn u64_in(&mut self, range: std::ops::Range<u64>) -> u64 {
         range.start + self.rng.next_below(range.end - range.start)
     }
+    /// Uniform f64 in `[lo, hi)`.
     pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
         self.rng.range_f64(lo, hi)
     }
+    /// Fair coin flip.
     pub fn bool(&mut self) -> bool {
         self.rng.next_u64() & 1 == 1
     }
+    /// Uniformly pick one element.
     pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
         &xs[self.rng.next_usize(xs.len())]
     }
+    /// Vector with length drawn from `len`, elements from `f`.
     pub fn vec<T>(
         &mut self,
         len: std::ops::Range<usize>,
@@ -57,6 +64,7 @@ impl Gen {
 /// Property failure with context.
 #[derive(Debug)]
 pub struct PropError {
+    /// Failure description from `prop_assert!`.
     pub msg: String,
 }
 

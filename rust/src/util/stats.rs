@@ -3,17 +3,26 @@
 /// Summary of a sample: mean/std/min/max and selected percentiles.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Summary {
+    /// Sample count.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Population standard deviation.
     pub std: f64,
+    /// Smallest sample.
     pub min: f64,
+    /// Largest sample.
     pub max: f64,
+    /// Median (linear interpolation).
     pub p50: f64,
+    /// 90th percentile.
     pub p90: f64,
+    /// 99th percentile.
     pub p99: f64,
 }
 
 impl Summary {
+    /// Summarize a sample (all-zero summary for an empty slice).
     pub fn of(xs: &[f64]) -> Summary {
         if xs.is_empty() {
             return Summary {
@@ -60,6 +69,7 @@ pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
     }
 }
 
+/// Arithmetic mean (0.0 for an empty slice).
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         0.0
@@ -68,10 +78,12 @@ pub fn mean(xs: &[f64]) -> f64 {
     }
 }
 
+/// Maximum (−∞ for an empty slice).
 pub fn max(xs: &[f64]) -> f64 {
     xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
 }
 
+/// Minimum (+∞ for an empty slice).
 pub fn min(xs: &[f64]) -> f64 {
     xs.iter().cloned().fold(f64::INFINITY, f64::min)
 }
@@ -100,6 +112,7 @@ pub struct Online {
 }
 
 impl Online {
+    /// Empty accumulator.
     pub fn new() -> Online {
         Online {
             n: 0,
@@ -109,6 +122,7 @@ impl Online {
             max: f64::NEG_INFINITY,
         }
     }
+    /// Fold one sample in.
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -117,12 +131,15 @@ impl Online {
         self.min = self.min.min(x);
         self.max = self.max.max(x);
     }
+    /// Samples folded so far.
     pub fn count(&self) -> u64 {
         self.n
     }
+    /// Running mean.
     pub fn mean(&self) -> f64 {
         self.mean
     }
+    /// Running population variance (0 below 2 samples).
     pub fn var(&self) -> f64 {
         if self.n < 2 {
             0.0
@@ -130,9 +147,11 @@ impl Online {
             self.m2 / self.n as f64
         }
     }
+    /// Running population standard deviation.
     pub fn std(&self) -> f64 {
         self.var().sqrt()
     }
+    /// Smallest sample (0 when empty).
     pub fn min(&self) -> f64 {
         if self.n == 0 {
             0.0
@@ -140,6 +159,7 @@ impl Online {
             self.min
         }
     }
+    /// Largest sample (0 when empty).
     pub fn max(&self) -> f64 {
         if self.n == 0 {
             0.0
@@ -152,14 +172,20 @@ impl Online {
 /// Fixed-bucket histogram for latency distributions.
 #[derive(Debug, Clone)]
 pub struct Histogram {
+    /// Inclusive lower bound of the bucketed range.
     pub lo: f64,
+    /// Exclusive upper bound of the bucketed range.
     pub hi: f64,
+    /// Per-bucket sample counts.
     pub counts: Vec<u64>,
+    /// Samples below `lo`.
     pub underflow: u64,
+    /// Samples at or above `hi`.
     pub overflow: u64,
 }
 
 impl Histogram {
+    /// Histogram over `[lo, hi)` with `buckets` equal buckets.
     pub fn new(lo: f64, hi: f64, buckets: usize) -> Histogram {
         assert!(hi > lo && buckets > 0);
         Histogram {
@@ -170,6 +196,7 @@ impl Histogram {
             overflow: 0,
         }
     }
+    /// Count one sample.
     pub fn push(&mut self, x: f64) {
         if x < self.lo {
             self.underflow += 1;
@@ -181,6 +208,7 @@ impl Histogram {
             self.counts[b.min(n - 1)] += 1;
         }
     }
+    /// Total samples counted (including under/overflow).
     pub fn total(&self) -> u64 {
         self.counts.iter().sum::<u64>() + self.underflow + self.overflow
     }

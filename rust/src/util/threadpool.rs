@@ -17,6 +17,7 @@ pub struct ThreadPool {
 }
 
 impl ThreadPool {
+    /// Pool with `threads` workers (must be ≥ 1).
     pub fn new(threads: usize) -> ThreadPool {
         assert!(threads > 0);
         let (tx, rx) = mpsc::channel::<Job>();

@@ -1,24 +1,50 @@
-//! Workload generation: datasets as semantic domains, request arrival,
-//! and scripted events (dataset injection, semantic shift).
+//! Workload layer: datasets as semantic domains, request streams, and
+//! the scenario engine for workload volatility.
 //!
-//! Stands in for the paper's *Chinese* / *Code* / *Repeat* corpora: each
-//! request belongs to a domain; the routing model maps domains to expert
-//! affinities. The *Repeat* dataset is modeled as a single ultra-narrow
-//! domain (duplicated prompts → maximal semantic concentration).
+//! Three levels of dynamism:
+//! * [`RequestGenerator`] — a single stream with Poisson (or closed-loop)
+//!   arrivals and scripted step shifts keyed on request index
+//!   (`shift_after`, the Fig. 9 Code→Chinese switch).
+//! * [`scenario`] — scripted traffic *timelines*: arrival-rate bursts
+//!   with exponential decay (flash crowds), sinusoidal/diurnal rate
+//!   modulation, gradual dataset-mixture ramps, shift storms, and
+//!   multi-tenant blends of concurrent [`WorkloadSpec`]s with per-tenant
+//!   arrival processes ([`Scenario`], [`ScenarioGenerator`], named
+//!   presets `steady`/`burst`/`storm`/`drift`/`multi_tenant`).
+//! * [`trace`] — JSONL record/replay: any generated stream dumps to a
+//!   trace file and replays bit-exactly through
+//!   [`crate::engine::ServingEngine`] (open-loop arrivals preserved via
+//!   [`Request::arrival`]), so scenarios are shareable, diffable
+//!   artifacts.
+//!
+//! Datasets stand in for the paper's *Chinese* / *Code* / *Repeat*
+//! corpora: each request belongs to a domain; the routing model maps
+//! domains to expert affinities. The *Repeat* dataset is modeled as a
+//! single ultra-narrow domain (duplicated prompts → maximal semantic
+//! concentration).
+
+pub mod scenario;
+pub mod trace;
+
+pub use scenario::{Scenario, ScenarioEvent, ScenarioGenerator, TenantSpec};
 
 use crate::util::Rng;
 
 /// Named dataset presets matching the paper's evaluation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Dataset {
+    /// Chinese-language corpus: moderately concentrated domain mixture.
     Chinese,
+    /// Code corpus: concentrated on a distinct domain from Chinese.
     Code,
+    /// Duplicated-prompt corpus: one ultra-narrow domain (extreme skew).
     Repeat,
     /// Even blend over all domains (background traffic).
     Mixed,
 }
 
 impl Dataset {
+    /// Resolve a dataset from its CLI/TOML name.
     pub fn by_name(s: &str) -> Option<Dataset> {
         match s {
             "chinese" => Some(Dataset::Chinese),
@@ -29,6 +55,7 @@ impl Dataset {
         }
     }
 
+    /// Canonical name used by the CLI, TOML config, and trace format.
     pub fn name(&self) -> &'static str {
         match self {
             Dataset::Chinese => "chinese",
@@ -68,8 +95,15 @@ impl Dataset {
 /// One inference request.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Request {
+    /// Stream-unique request id (submission order within a generator).
     pub id: u64,
+    /// Tenant stream index within a multi-tenant [`Scenario`]
+    /// (0 for single-tenant streams).
+    pub tenant: u16,
+    /// Semantic domain the routing model maps to expert affinities.
     pub domain: u16,
+    /// Dataset label the request was drawn from (during a mixture ramp
+    /// this is the nearer endpoint; the domain mixture interpolates).
     pub dataset: Dataset,
     /// Prompt length in tokens.
     pub prompt_len: usize,
@@ -90,16 +124,21 @@ impl Request {
 /// Arrival + length distributions for a request stream.
 #[derive(Debug, Clone)]
 pub struct WorkloadSpec {
+    /// Dataset the stream draws domains from.
     pub dataset: Dataset,
     /// Requests per second (Poisson). `f64::INFINITY` = closed-loop
     /// (always enough requests queued).
     pub arrival_rate: f64,
+    /// Mean prompt length in tokens (lognormal-ish spread).
     pub mean_prompt_len: usize,
+    /// Mean decode budget in tokens (lognormal-ish spread).
     pub mean_new_tokens: usize,
+    /// Routing-model domain count the dataset weights span.
     pub n_domains: usize,
 }
 
 impl WorkloadSpec {
+    /// Closed-loop spec with default lengths (512 prompt / 256 decode).
     pub fn new(dataset: Dataset, n_domains: usize) -> WorkloadSpec {
         WorkloadSpec {
             dataset,
@@ -112,7 +151,9 @@ impl WorkloadSpec {
 }
 
 /// Generates a request stream; supports scripted dataset switches
-/// (the Fig. 9 Code→Chinese shift) keyed on request index.
+/// (the Fig. 9 Code→Chinese shift) keyed on request index. For
+/// time-keyed events, bursts, ramps, and multi-tenant blends see
+/// [`ScenarioGenerator`].
 #[derive(Debug, Clone)]
 pub struct RequestGenerator {
     spec: WorkloadSpec,
@@ -124,6 +165,7 @@ pub struct RequestGenerator {
 }
 
 impl RequestGenerator {
+    /// Build a generator over `spec` with a deterministic seed.
     pub fn new(spec: WorkloadSpec, seed: u64) -> RequestGenerator {
         RequestGenerator {
             spec,
@@ -141,6 +183,7 @@ impl RequestGenerator {
         self
     }
 
+    /// Dataset the next request will be drawn from.
     pub fn dataset(&self) -> Dataset {
         self.spec.dataset
     }
@@ -165,6 +208,7 @@ impl RequestGenerator {
         let dlen = sample_len(&mut self.rng, self.spec.mean_new_tokens);
         let r = Request {
             id: self.next_id,
+            tenant: 0,
             domain,
             dataset: self.spec.dataset,
             prompt_len: plen,
@@ -181,7 +225,8 @@ impl RequestGenerator {
     }
 }
 
-fn sample_len(rng: &mut Rng, mean: usize) -> usize {
+/// Lognormal-ish token length around `mean`, clamped to `[4, 8 × mean]`.
+pub(crate) fn sample_len(rng: &mut Rng, mean: usize) -> usize {
     let sigma = 0.6_f64;
     let mu = (mean as f64).ln() - sigma * sigma / 2.0;
     let x = (mu + sigma * rng.next_gaussian()).exp();
@@ -251,5 +296,12 @@ mod tests {
         let spec = WorkloadSpec::new(Dataset::Repeat, 4);
         let mut g = RequestGenerator::new(spec, 13);
         assert!(g.take(30).iter().all(|r| r.domain == 3));
+    }
+
+    #[test]
+    fn single_stream_requests_are_tenant_zero() {
+        let spec = WorkloadSpec::new(Dataset::Mixed, 4);
+        let mut g = RequestGenerator::new(spec, 17);
+        assert!(g.take(10).iter().all(|r| r.tenant == 0));
     }
 }

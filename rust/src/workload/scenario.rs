@@ -1,0 +1,760 @@
+//! Scenario engine: scripted traffic timelines for workload volatility.
+//!
+//! PROBE's headline claim is robustness under *extreme workload
+//! volatility* — continuous batching plus diverse concurrent requests
+//! causing hotspots to migrate abruptly. A [`Scenario`] scripts exactly
+//! that axis as a timeline of events over one or more tenant streams:
+//!
+//! * [`ScenarioEvent::Burst`] — flash crowd: the tenant's arrival rate
+//!   jumps by `factor` at `at` and decays back exponentially (time
+//!   constant `decay`).
+//! * [`ScenarioEvent::Sinusoid`] — diurnal modulation: the rate swings
+//!   by `±amplitude` around its base with period `period`.
+//! * [`ScenarioEvent::Shift`] — step change of the tenant's dataset
+//!   (the Fig. 9 switch, but keyed on *time*, not request index).
+//! * [`ScenarioEvent::Ramp`] — gradual drift: the domain mixture
+//!   interpolates linearly from the current dataset to `to` over
+//!   `duration` seconds (hotspots migrate smoothly, not abruptly).
+//! * [`ScenarioEvent::Storm`] — repeated shift flips cycling through a
+//!   dataset list at a fixed period (hotspots migrate abruptly and
+//!   repeatedly — the adversarial case for history-based balancers).
+//!
+//! Multi-tenant blends: a scenario holds several [`TenantSpec`]s, each
+//! with its own Poisson arrival process, dataset, and length
+//! distributions; [`ScenarioGenerator`] merges them into one globally
+//! arrival-ordered stream (each [`Request`] carries its tenant index).
+//!
+//! Named presets (`steady`/`burst`/`storm`/`drift`/`multi_tenant`, see
+//! [`Scenario::preset`]) are shared by the `[scenario]` TOML table and
+//! `probe bench volatility`.
+//!
+//! Arrival sampling draws each inter-arrival gap from the instantaneous
+//! rate at the gap's start (a standard piecewise approximation of the
+//! inhomogeneous Poisson process — exact while the rate is constant,
+//! slightly smoothed across event boundaries). Generation is
+//! deterministic per seed, so a scenario is fully reproducible — and
+//! recordable/replayable via [`super::trace`].
+//!
+//! ```
+//! use probe::workload::{Scenario, ScenarioGenerator};
+//!
+//! let s = Scenario::preset("burst", 100.0, 2.0, 4).unwrap();
+//! let reqs = ScenarioGenerator::new(s, 7).generate();
+//! assert!(!reqs.is_empty());
+//! assert!(reqs.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+//! ```
+
+use super::{sample_len, Dataset, Request, WorkloadSpec};
+use crate::util::Rng;
+
+/// One tenant stream of a scenario: a named [`WorkloadSpec`] with a
+/// finite base arrival rate.
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    /// Human-readable tenant name (reports and traces).
+    pub name: String,
+    /// Arrival/length/dataset distributions. `arrival_rate` must be
+    /// finite and positive (closed-loop streams have no timeline).
+    pub spec: WorkloadSpec,
+}
+
+/// A scripted event on a scenario timeline. All times are seconds since
+/// scenario start; every event targets one tenant stream.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ScenarioEvent {
+    /// Flash crowd: at `at` the tenant's arrival rate multiplies by
+    /// `factor`, decaying back exponentially with time constant `decay`
+    /// (rate factor `1 + (factor−1)·e^{−(t−at)/decay}`).
+    Burst {
+        /// Event time (seconds).
+        at: f64,
+        /// Target tenant index.
+        tenant: usize,
+        /// Peak rate multiplier (> 0; < 1 models a trough).
+        factor: f64,
+        /// Exponential decay time constant (seconds, > 0).
+        decay: f64,
+    },
+    /// Sinusoidal (diurnal) rate modulation from `at` onward: the rate
+    /// multiplies by `1 + amplitude·sin(2π(t−at)/period)`, floored at
+    /// 0.05 so the stream never fully stops.
+    Sinusoid {
+        /// Modulation start time (seconds).
+        at: f64,
+        /// Target tenant index.
+        tenant: usize,
+        /// Oscillation period (seconds, > 0).
+        period: f64,
+        /// Relative swing in `[0, 1]`.
+        amplitude: f64,
+    },
+    /// Step change of the tenant's dataset at `at`.
+    Shift {
+        /// Event time (seconds).
+        at: f64,
+        /// Target tenant index.
+        tenant: usize,
+        /// Dataset the stream switches to.
+        to: Dataset,
+    },
+    /// Gradual mixture drift: from `at` the domain mixture interpolates
+    /// linearly from the tenant's current dataset to `to` over
+    /// `duration` seconds. The request's dataset *label* is the nearer
+    /// endpoint; the sampled domain mixture interpolates continuously.
+    Ramp {
+        /// Ramp start time (seconds).
+        at: f64,
+        /// Target tenant index.
+        tenant: usize,
+        /// Dataset the mixture drifts toward.
+        to: Dataset,
+        /// Ramp length (seconds, > 0).
+        duration: f64,
+    },
+    /// Shift storm: `flips` step shifts at `at, at+period, …`, cycling
+    /// through `cycle` — repeated abrupt hotspot migration. Expanded to
+    /// plain [`ScenarioEvent::Shift`]s by [`Scenario::normalized_events`].
+    Storm {
+        /// First flip time (seconds).
+        at: f64,
+        /// Target tenant index.
+        tenant: usize,
+        /// Seconds between consecutive flips (> 0).
+        period: f64,
+        /// Datasets the flips cycle through (non-empty).
+        cycle: Vec<Dataset>,
+        /// Number of flips (≥ 1). The last flipped dataset persists.
+        flips: usize,
+    },
+}
+
+impl ScenarioEvent {
+    /// Event (start) time in seconds since scenario start.
+    pub fn at(&self) -> f64 {
+        match self {
+            ScenarioEvent::Burst { at, .. }
+            | ScenarioEvent::Sinusoid { at, .. }
+            | ScenarioEvent::Shift { at, .. }
+            | ScenarioEvent::Ramp { at, .. }
+            | ScenarioEvent::Storm { at, .. } => *at,
+        }
+    }
+
+    /// Tenant stream the event targets.
+    pub fn tenant(&self) -> usize {
+        match self {
+            ScenarioEvent::Burst { tenant, .. }
+            | ScenarioEvent::Sinusoid { tenant, .. }
+            | ScenarioEvent::Shift { tenant, .. }
+            | ScenarioEvent::Ramp { tenant, .. }
+            | ScenarioEvent::Storm { tenant, .. } => *tenant,
+        }
+    }
+}
+
+/// A workload-volatility scenario: tenant streams + event timeline +
+/// horizon. Build one directly, via [`Scenario::single`], or from a
+/// named [`Scenario::preset`].
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    /// Scenario name (reports, bench rows, trace headers).
+    pub name: String,
+    /// Concurrent tenant streams (at least one).
+    pub tenants: Vec<TenantSpec>,
+    /// Scripted events (any order; sorted by [`Self::normalized_events`]).
+    pub events: Vec<ScenarioEvent>,
+    /// Horizon in seconds: no arrivals are generated past this time.
+    pub duration: f64,
+}
+
+impl Scenario {
+    /// The named presets [`Scenario::preset`] resolves.
+    pub const PRESETS: [&'static str; 5] =
+        ["steady", "burst", "storm", "drift", "multi_tenant"];
+
+    /// Single-tenant scenario with no events.
+    pub fn single(name: &str, spec: WorkloadSpec, duration: f64) -> Scenario {
+        Scenario {
+            name: name.to_string(),
+            tenants: vec![TenantSpec {
+                name: "main".to_string(),
+                spec,
+            }],
+            events: Vec::new(),
+            duration,
+        }
+    }
+
+    /// Resolve a named preset at a given per-scenario total base rate
+    /// (requests/s summed over tenants) and horizon. Returns `None` for
+    /// unknown names. Presets:
+    ///
+    /// | name | shape |
+    /// |---|---|
+    /// | `steady` | one Mixed tenant, constant rate |
+    /// | `burst` | one Mixed tenant; ×8 flash crowd at 25% of the horizon |
+    /// | `storm` | one Code tenant; 6 flips cycling Chinese→Repeat→Code |
+    /// | `drift` | one Code tenant; linear ramp to Chinese over 60% of the horizon |
+    /// | `multi_tenant` | chat (Mixed) + code (Code, bursty) + batch (Repeat, sinusoidal) |
+    pub fn preset(
+        name: &str,
+        base_rate: f64,
+        duration: f64,
+        n_domains: usize,
+    ) -> Option<Scenario> {
+        let spec = |ds: Dataset, rate: f64| -> WorkloadSpec {
+            let mut s = WorkloadSpec::new(ds, n_domains);
+            s.arrival_rate = rate;
+            s
+        };
+        let tenant = |name: &str, ds: Dataset, rate: f64| TenantSpec {
+            name: name.to_string(),
+            spec: spec(ds, rate),
+        };
+        let s = match name {
+            "steady" => Scenario {
+                name: "steady".to_string(),
+                tenants: vec![tenant("main", Dataset::Mixed, base_rate)],
+                events: Vec::new(),
+                duration,
+            },
+            "burst" => Scenario {
+                name: "burst".to_string(),
+                tenants: vec![tenant("main", Dataset::Mixed, base_rate)],
+                events: vec![ScenarioEvent::Burst {
+                    at: duration * 0.25,
+                    tenant: 0,
+                    factor: 8.0,
+                    decay: duration * 0.1,
+                }],
+                duration,
+            },
+            "storm" => Scenario {
+                name: "storm".to_string(),
+                tenants: vec![tenant("main", Dataset::Code, base_rate)],
+                events: vec![ScenarioEvent::Storm {
+                    at: duration * 0.2,
+                    tenant: 0,
+                    period: duration * 0.1,
+                    // cycle starts AWAY from the tenant's base dataset so
+                    // every one of the 6 flips actually migrates hotspots
+                    cycle: vec![Dataset::Chinese, Dataset::Repeat, Dataset::Code],
+                    flips: 6,
+                }],
+                duration,
+            },
+            "drift" => Scenario {
+                name: "drift".to_string(),
+                tenants: vec![tenant("main", Dataset::Code, base_rate)],
+                events: vec![ScenarioEvent::Ramp {
+                    at: duration * 0.2,
+                    tenant: 0,
+                    to: Dataset::Chinese,
+                    duration: duration * 0.6,
+                }],
+                duration,
+            },
+            "multi_tenant" => Scenario {
+                name: "multi_tenant".to_string(),
+                tenants: vec![
+                    tenant("chat", Dataset::Mixed, base_rate * 0.5),
+                    tenant("code", Dataset::Code, base_rate * 0.3),
+                    tenant("batch", Dataset::Repeat, base_rate * 0.2),
+                ],
+                events: vec![
+                    ScenarioEvent::Burst {
+                        at: duration * 0.3,
+                        tenant: 1,
+                        factor: 6.0,
+                        decay: duration * 0.08,
+                    },
+                    ScenarioEvent::Sinusoid {
+                        at: 0.0,
+                        tenant: 2,
+                        period: duration * 0.5,
+                        amplitude: 0.8,
+                    },
+                ],
+                duration,
+            },
+            _ => return None,
+        };
+        Some(s)
+    }
+
+    /// Structural validation: finite positive rates and horizon, event
+    /// times within `[0, ∞)`, tenant indices in range, positive decay/
+    /// period/duration parameters.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.tenants.is_empty() {
+            return Err("scenario has no tenants".into());
+        }
+        if !(self.duration.is_finite() && self.duration > 0.0) {
+            return Err(format!("scenario duration must be finite > 0, got {}", self.duration));
+        }
+        for (i, t) in self.tenants.iter().enumerate() {
+            let r = t.spec.arrival_rate;
+            if !(r.is_finite() && r > 0.0) {
+                return Err(format!(
+                    "tenant {i} ({}): arrival_rate must be finite > 0 (closed-loop \
+                     streams have no timeline), got {r}",
+                    t.name
+                ));
+            }
+            if t.spec.n_domains < 3 {
+                return Err(format!("tenant {i}: n_domains must be >= 3"));
+            }
+        }
+        for (k, ev) in self.events.iter().enumerate() {
+            if !(ev.at().is_finite() && ev.at() >= 0.0) {
+                return Err(format!("event {k}: time must be finite >= 0"));
+            }
+            if ev.tenant() >= self.tenants.len() {
+                return Err(format!(
+                    "event {k}: tenant {} out of range (have {})",
+                    ev.tenant(),
+                    self.tenants.len()
+                ));
+            }
+            match ev {
+                ScenarioEvent::Burst { factor, decay, .. } => {
+                    // finiteness matters: an infinite factor makes the
+                    // rate infinite and the arrival process never advance
+                    if !(factor.is_finite() && *factor > 0.0 && decay.is_finite() && *decay > 0.0)
+                    {
+                        return Err(format!(
+                            "event {k}: burst needs finite factor > 0, finite decay > 0"
+                        ));
+                    }
+                }
+                ScenarioEvent::Sinusoid { period, amplitude, .. } => {
+                    if !(period.is_finite() && *period > 0.0 && (0.0..=1.0).contains(amplitude)) {
+                        return Err(format!(
+                            "event {k}: sinusoid needs finite period > 0, amplitude in [0, 1]"
+                        ));
+                    }
+                }
+                ScenarioEvent::Ramp { duration, .. } => {
+                    if !(duration.is_finite() && *duration > 0.0) {
+                        return Err(format!("event {k}: ramp duration must be finite > 0"));
+                    }
+                }
+                ScenarioEvent::Storm { period, cycle, flips, .. } => {
+                    if !(period.is_finite() && *period > 0.0 && *flips >= 1 && !cycle.is_empty())
+                    {
+                        return Err(format!(
+                            "event {k}: storm needs finite period > 0, flips >= 1, non-empty cycle"
+                        ));
+                    }
+                }
+                ScenarioEvent::Shift { .. } => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// Event timeline with storms expanded into their individual
+    /// [`ScenarioEvent::Shift`] flips, stably sorted by time (same-time
+    /// events keep declaration order). This is the timeline the
+    /// generator executes.
+    pub fn normalized_events(&self) -> Vec<ScenarioEvent> {
+        let mut out: Vec<ScenarioEvent> = Vec::with_capacity(self.events.len());
+        for ev in &self.events {
+            match ev {
+                ScenarioEvent::Storm { at, tenant, period, cycle, flips } => {
+                    for i in 0..*flips {
+                        out.push(ScenarioEvent::Shift {
+                            at: at + i as f64 * period,
+                            tenant: *tenant,
+                            to: cycle[i % cycle.len()],
+                        });
+                    }
+                }
+                other => out.push(other.clone()),
+            }
+        }
+        out.sort_by(|a, b| {
+            a.at()
+                .partial_cmp(&b.at())
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        out
+    }
+}
+
+/// Per-tenant generation state.
+#[derive(Debug, Clone)]
+struct TenantState {
+    rng: Rng,
+    /// Absolute time of this tenant's next arrival.
+    next_arrival: f64,
+}
+
+/// Executes a [`Scenario`]: merges the per-tenant inhomogeneous Poisson
+/// streams into one globally arrival-ordered request stream, applying
+/// the event timeline to rates and domain mixtures. Deterministic per
+/// seed.
+#[derive(Debug, Clone)]
+pub struct ScenarioGenerator {
+    tenants: Vec<TenantSpec>,
+    /// Normalized (storm-expanded, time-sorted) event timeline.
+    events: Vec<ScenarioEvent>,
+    duration: f64,
+    states: Vec<TenantState>,
+    next_id: u64,
+}
+
+impl ScenarioGenerator {
+    /// Build a generator. Panics if `scenario.validate()` fails.
+    pub fn new(scenario: Scenario, seed: u64) -> ScenarioGenerator {
+        scenario.validate().expect("invalid scenario");
+        let events = scenario.normalized_events();
+        let mut g = ScenarioGenerator {
+            states: Vec::new(),
+            tenants: scenario.tenants,
+            events,
+            duration: scenario.duration,
+            next_id: 0,
+        };
+        for i in 0..g.tenants.len() {
+            let mut rng =
+                Rng::new(seed.wrapping_add((i as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)));
+            let first = rng.next_exp(g.rate_at(i, 0.0));
+            g.states.push(TenantState {
+                rng,
+                next_arrival: first,
+            });
+        }
+        g
+    }
+
+    /// Number of tenant streams.
+    pub fn n_tenants(&self) -> usize {
+        self.tenants.len()
+    }
+
+    /// Instantaneous arrival rate (requests/s) of `tenant` at time `t`:
+    /// the base rate scaled by every burst/sinusoid active at `t`,
+    /// floored at 1e-3 of the base so the stream never stalls.
+    pub fn rate_at(&self, tenant: usize, t: f64) -> f64 {
+        let base = self.tenants[tenant].spec.arrival_rate;
+        let mut rate = base;
+        for ev in &self.events {
+            if ev.at() > t {
+                break;
+            }
+            if ev.tenant() != tenant {
+                continue;
+            }
+            match ev {
+                ScenarioEvent::Burst { at, factor, decay, .. } => {
+                    rate *= 1.0 + (factor - 1.0) * (-(t - at) / decay).exp();
+                }
+                ScenarioEvent::Sinusoid { at, period, amplitude, .. } => {
+                    let phase = std::f64::consts::TAU * (t - at) / period;
+                    rate *= (1.0 + amplitude * phase.sin()).max(0.05);
+                }
+                _ => {}
+            }
+        }
+        rate.max(base * 1e-3)
+    }
+
+    /// Dataset label and domain-mixture weights of `tenant` at time `t`
+    /// after applying every shift/ramp up to `t`. During an active ramp
+    /// the weights interpolate linearly; the label is the nearer
+    /// endpoint.
+    pub fn mixture_at(&self, tenant: usize, t: f64) -> (Dataset, Vec<f64>) {
+        let spec = &self.tenants[tenant].spec;
+        let n = spec.n_domains;
+        let mut ds = spec.dataset;
+        let mut ramp: Option<(Dataset, Dataset, f64, f64)> = None;
+        for ev in &self.events {
+            if ev.at() > t {
+                break;
+            }
+            if ev.tenant() != tenant {
+                continue;
+            }
+            match ev {
+                ScenarioEvent::Shift { to, .. } => {
+                    ds = *to;
+                    ramp = None;
+                }
+                ScenarioEvent::Ramp { at, to, duration, .. } => {
+                    if t >= at + duration {
+                        ds = *to;
+                        ramp = None;
+                    } else {
+                        ramp = Some((ds, *to, *at, *duration));
+                    }
+                }
+                _ => {}
+            }
+        }
+        match ramp {
+            None => (ds, ds.domain_weights(n)),
+            Some((from, to, at, dur)) => {
+                let a = ((t - at) / dur).clamp(0.0, 1.0);
+                let wf = from.domain_weights(n);
+                let wt = to.domain_weights(n);
+                let w = wf
+                    .iter()
+                    .zip(&wt)
+                    .map(|(f, g)| (1.0 - a) * f + a * g)
+                    .collect();
+                (if a < 0.5 { from } else { to }, w)
+            }
+        }
+    }
+
+    /// Draw the next request in global arrival order, or `None` once
+    /// every tenant's next arrival lies past the horizon.
+    pub fn next_request(&mut self) -> Option<Request> {
+        let (i, t) = self
+            .states
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (i, s.next_arrival))
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal))?;
+        if t > self.duration {
+            return None;
+        }
+        let (label, weights) = self.mixture_at(i, t);
+        let rate = self.rate_at(i, t);
+        let mean_p = self.tenants[i].spec.mean_prompt_len;
+        let mean_n = self.tenants[i].spec.mean_new_tokens;
+        let id = self.next_id;
+        self.next_id += 1;
+        let st = &mut self.states[i];
+        let domain = st.rng.next_weighted(&weights) as u16;
+        let prompt_len = sample_len(&mut st.rng, mean_p);
+        let max_new_tokens = sample_len(&mut st.rng, mean_n);
+        st.next_arrival = t + st.rng.next_exp(rate);
+        Some(Request {
+            id,
+            tenant: i as u16,
+            domain,
+            dataset: label,
+            prompt_len,
+            max_new_tokens,
+            arrival: t,
+        })
+    }
+
+    /// Generate up to `n` requests (fewer if the horizon ends first).
+    pub fn take(&mut self, n: usize) -> Vec<Request> {
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            match self.next_request() {
+                Some(r) => out.push(r),
+                None => break,
+            }
+        }
+        out
+    }
+
+    /// Generate the whole stream up to the horizon.
+    pub fn generate(&mut self) -> Vec<Request> {
+        let mut out = Vec::new();
+        while let Some(r) = self.next_request() {
+            out.push(r);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gen(name: &str, seed: u64) -> ScenarioGenerator {
+        ScenarioGenerator::new(Scenario::preset(name, 50.0, 10.0, 4).unwrap(), seed)
+    }
+
+    #[test]
+    fn presets_resolve_and_validate() {
+        for name in Scenario::PRESETS {
+            let s = Scenario::preset(name, 20.0, 5.0, 4).unwrap();
+            s.validate().unwrap();
+            assert_eq!(s.name, name);
+        }
+        assert!(Scenario::preset("nope", 20.0, 5.0, 4).is_none());
+    }
+
+    #[test]
+    fn storm_expands_to_ordered_shifts() {
+        let s = Scenario::preset("storm", 20.0, 10.0, 4).unwrap();
+        let evs = s.normalized_events();
+        assert_eq!(evs.len(), 6, "6 flips -> 6 shifts");
+        let mut last = f64::NEG_INFINITY;
+        for (i, ev) in evs.iter().enumerate() {
+            assert!(ev.at() >= last, "shift {i} out of order");
+            last = ev.at();
+            let want = [Dataset::Chinese, Dataset::Repeat, Dataset::Code][i % 3];
+            match ev {
+                ScenarioEvent::Shift { to, .. } => assert_eq!(*to, want),
+                other => panic!("storm expanded to non-shift {other:?}"),
+            }
+        }
+        // the first flip actually leaves the base dataset (no no-op flip)
+        assert_ne!(
+            match &evs[0] {
+                ScenarioEvent::Shift { to, .. } => *to,
+                _ => unreachable!(),
+            },
+            s.tenants[0].spec.dataset
+        );
+        // flips are exactly one period apart
+        assert!((evs[1].at() - evs[0].at() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn normalized_events_sorted_regardless_of_declaration_order() {
+        let mut s = Scenario::preset("steady", 20.0, 10.0, 4).unwrap();
+        s.events = vec![
+            ScenarioEvent::Shift { at: 8.0, tenant: 0, to: Dataset::Repeat },
+            ScenarioEvent::Burst { at: 1.0, tenant: 0, factor: 2.0, decay: 1.0 },
+            ScenarioEvent::Ramp { at: 4.0, tenant: 0, to: Dataset::Code, duration: 2.0 },
+        ];
+        let evs = s.normalized_events();
+        let times: Vec<f64> = evs.iter().map(|e| e.at()).collect();
+        assert_eq!(times, vec![1.0, 4.0, 8.0]);
+    }
+
+    #[test]
+    fn burst_raises_rate_then_decays() {
+        let g = gen("burst", 1);
+        let base = 50.0;
+        let at = 10.0 * 0.25;
+        let before = g.rate_at(0, at - 0.01);
+        let peak = g.rate_at(0, at);
+        let later = g.rate_at(0, at + 5.0 * 1.0); // 5 decay constants
+        assert!((before - base).abs() < 1e-9, "rate before burst: {before}");
+        assert!((peak - base * 8.0).abs() < 1e-6, "peak: {peak}");
+        assert!(later < base * 1.1, "decay failed: {later}");
+        assert!(peak > g.rate_at(0, at + 1.0), "must decay monotonically");
+    }
+
+    #[test]
+    fn sinusoid_stays_positive_and_oscillates() {
+        let g = gen("multi_tenant", 2);
+        // tenant 2 (batch) carries the sinusoid: period = 5s, amp 0.8
+        let base = 50.0 * 0.2;
+        let hi = g.rate_at(2, 1.25); // quarter period: sin = 1
+        let lo = g.rate_at(2, 3.75); // three quarters: sin = -1
+        assert!((hi - base * 1.8).abs() < 1e-6, "hi {hi}");
+        assert!((lo - base * 0.2).abs() < 1e-6, "lo {lo}");
+        for k in 0..100 {
+            assert!(g.rate_at(2, k as f64 * 0.1) > 0.0);
+        }
+    }
+
+    #[test]
+    fn ramp_interpolates_mixture_and_flips_label_midway() {
+        let g = gen("drift", 3);
+        // ramp: Code -> Chinese over [2, 8]
+        let (l0, w0) = g.mixture_at(0, 1.0);
+        assert_eq!(l0, Dataset::Code);
+        assert_eq!(w0, Dataset::Code.domain_weights(4));
+        let (l_mid, w_mid) = g.mixture_at(0, 5.0);
+        assert_eq!(l_mid, Dataset::Chinese, "label flips at midpoint");
+        let wf = Dataset::Code.domain_weights(4);
+        let wt = Dataset::Chinese.domain_weights(4);
+        for d in 0..4 {
+            let want = 0.5 * wf[d] + 0.5 * wt[d];
+            assert!((w_mid[d] - want).abs() < 1e-9, "domain {d}");
+        }
+        let (l_end, w_end) = g.mixture_at(0, 9.0);
+        assert_eq!(l_end, Dataset::Chinese);
+        assert_eq!(w_end, Dataset::Chinese.domain_weights(4));
+    }
+
+    #[test]
+    fn storm_mixture_follows_cycle() {
+        let g = gen("storm", 4);
+        // flips at 2, 3, 4, 5, 6, 7 cycling chinese/repeat/code
+        assert_eq!(g.mixture_at(0, 1.9).0, Dataset::Code, "base before the storm");
+        assert_eq!(g.mixture_at(0, 2.5).0, Dataset::Chinese, "first flip migrates");
+        assert_eq!(g.mixture_at(0, 3.1).0, Dataset::Repeat);
+        assert_eq!(g.mixture_at(0, 4.5).0, Dataset::Code);
+        assert_eq!(g.mixture_at(0, 5.5).0, Dataset::Chinese);
+        // last flip persists past the storm
+        assert_eq!(g.mixture_at(0, 9.9).0, Dataset::Code);
+    }
+
+    #[test]
+    fn stream_is_arrival_sorted_within_horizon_and_deterministic() {
+        let a = gen("multi_tenant", 7).generate();
+        let b = gen("multi_tenant", 7).generate();
+        assert_eq!(a, b, "same seed must reproduce the stream");
+        assert!(!a.is_empty());
+        for w in a.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival, "stream not arrival-sorted");
+        }
+        assert!(a.iter().all(|r| r.arrival <= 10.0));
+        // ids are the submission order
+        for (i, r) in a.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+        }
+    }
+
+    #[test]
+    fn multi_tenant_blend_carries_tenant_tags() {
+        let reqs = gen("multi_tenant", 9).generate();
+        for t in 0..3u16 {
+            assert!(
+                reqs.iter().any(|r| r.tenant == t),
+                "tenant {t} missing from the blend"
+            );
+        }
+        // batch tenant (2) is Repeat: its domain is always the last one
+        assert!(reqs
+            .iter()
+            .filter(|r| r.tenant == 2)
+            .all(|r| r.domain == 3 && r.dataset == Dataset::Repeat));
+    }
+
+    #[test]
+    fn burst_densifies_arrivals() {
+        let count_in = |reqs: &[Request], lo: f64, hi: f64| {
+            reqs.iter().filter(|r| r.arrival >= lo && r.arrival < hi).count()
+        };
+        let steady = gen("steady", 11).generate();
+        let burst = gen("burst", 11).generate();
+        // window right after the flash crowd (t = 2.5, decay 1.0)
+        let s = count_in(&steady, 2.5, 3.5);
+        let b = count_in(&burst, 2.5, 3.5);
+        assert!(
+            b > s * 3,
+            "burst window not denser: burst {b} vs steady {s}"
+        );
+    }
+
+    #[test]
+    fn invalid_scenarios_rejected() {
+        let mut s = Scenario::preset("steady", 20.0, 5.0, 4).unwrap();
+        s.tenants[0].spec.arrival_rate = f64::INFINITY;
+        assert!(s.validate().is_err(), "closed-loop tenant must be rejected");
+        let mut s = Scenario::preset("steady", 20.0, 5.0, 4).unwrap();
+        s.events = vec![ScenarioEvent::Shift { at: 1.0, tenant: 3, to: Dataset::Code }];
+        assert!(s.validate().is_err(), "out-of-range tenant must be rejected");
+        let mut s = Scenario::preset("steady", 20.0, 5.0, 4).unwrap();
+        s.events = vec![ScenarioEvent::Burst { at: 1.0, tenant: 0, factor: 0.0, decay: 1.0 }];
+        assert!(s.validate().is_err(), "zero burst factor must be rejected");
+        let mut s = Scenario::preset("steady", 20.0, 5.0, 4).unwrap();
+        s.events = vec![ScenarioEvent::Burst {
+            at: 1.0,
+            tenant: 0,
+            factor: f64::INFINITY,
+            decay: 1.0,
+        }];
+        assert!(
+            s.validate().is_err(),
+            "infinite burst factor must be rejected (generate() would never advance)"
+        );
+        let mut s = Scenario::preset("steady", 20.0, 5.0, 4).unwrap();
+        s.duration = 0.0;
+        assert!(s.validate().is_err(), "zero duration must be rejected");
+    }
+}

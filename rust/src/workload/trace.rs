@@ -1,0 +1,184 @@
+//! Trace record/replay: JSONL serialization of request streams.
+//!
+//! Any generated stream ([`RequestGenerator`](super::RequestGenerator)
+//! or [`ScenarioGenerator`](super::ScenarioGenerator)) can be dumped to
+//! a JSONL trace — one request object per line — and replayed
+//! **bit-exactly** through [`crate::engine::ServingEngine`]: every
+//! field round-trips unchanged (floats are written in Rust's
+//! shortest-round-trip decimal form), and replay submits requests with
+//! their recorded [`Request::arrival`], so open-loop timing survives.
+//! Traces are therefore shareable, diffable artifacts: two runs over
+//! the same trace see the identical workload.
+//!
+//! Line format (one JSON object per request; keys are written in
+//! alphabetical order, any order is accepted on read):
+//!
+//! ```text
+//! {"arrival":0.0314159,"dataset":"code","domain":2,"id":0,
+//!  "max_new_tokens":40,"prompt_len":17,"tenant":1}
+//! ```
+//!
+//! ```
+//! use probe::workload::{trace, Scenario, ScenarioGenerator};
+//!
+//! let s = Scenario::preset("steady", 50.0, 1.0, 4).unwrap();
+//! let reqs = ScenarioGenerator::new(s, 3).generate();
+//! let text = trace::to_jsonl(&reqs);
+//! assert_eq!(trace::from_jsonl(&text).unwrap(), reqs);
+//! ```
+
+use super::{Dataset, Request};
+use crate::util::Json;
+
+/// Serialize one request as a JSON object.
+///
+/// `id` round-trips exactly for values below 2^53 (the JSON number
+/// model); generators emit sequential ids, so this never binds in
+/// practice.
+pub fn request_to_json(r: &Request) -> Json {
+    Json::obj(vec![
+        ("id", Json::Num(r.id as f64)),
+        ("tenant", Json::Num(r.tenant as f64)),
+        ("domain", Json::Num(r.domain as f64)),
+        ("dataset", Json::Str(r.dataset.name().to_string())),
+        ("prompt_len", Json::Num(r.prompt_len as f64)),
+        ("max_new_tokens", Json::Num(r.max_new_tokens as f64)),
+        ("arrival", Json::Num(r.arrival)),
+    ])
+}
+
+/// Parse one request from a JSON object (strict: every field required,
+/// unknown datasets rejected).
+pub fn request_from_json(j: &Json) -> Result<Request, String> {
+    let num = |key: &str| -> Result<f64, String> {
+        j.get(key)
+            .as_f64()
+            .ok_or_else(|| format!("trace record missing numeric field {key:?}"))
+    };
+    let dataset_name = j
+        .get("dataset")
+        .as_str()
+        .ok_or_else(|| "trace record missing string field \"dataset\"".to_string())?;
+    let dataset = Dataset::by_name(dataset_name)
+        .ok_or_else(|| format!("trace record has unknown dataset {dataset_name:?}"))?;
+    Ok(Request {
+        id: num("id")? as u64,
+        tenant: num("tenant")? as u16,
+        domain: num("domain")? as u16,
+        dataset,
+        prompt_len: num("prompt_len")? as usize,
+        max_new_tokens: num("max_new_tokens")? as usize,
+        arrival: num("arrival")?,
+    })
+}
+
+/// Serialize a stream as JSONL (one request per line, trailing newline).
+pub fn to_jsonl(reqs: &[Request]) -> String {
+    let mut out = String::new();
+    for r in reqs {
+        out.push_str(&request_to_json(r).to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Parse a JSONL trace (blank lines ignored; errors are line-tagged).
+pub fn from_jsonl(text: &str) -> Result<Vec<Request>, String> {
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let j = Json::parse(line).map_err(|e| format!("trace line {}: {e}", lineno + 1))?;
+        out.push(
+            request_from_json(&j).map_err(|e| format!("trace line {}: {e}", lineno + 1))?,
+        );
+    }
+    Ok(out)
+}
+
+/// Write a stream to a JSONL trace file.
+pub fn write_trace(path: &str, reqs: &[Request]) -> std::io::Result<()> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, to_jsonl(reqs))
+}
+
+/// Read a JSONL trace file back into a request stream.
+pub fn read_trace(path: &str) -> Result<Vec<Request>, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    from_jsonl(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{Scenario, ScenarioGenerator};
+
+    fn stream(preset: &str, seed: u64) -> Vec<Request> {
+        let s = Scenario::preset(preset, 40.0, 5.0, 4).unwrap();
+        ScenarioGenerator::new(s, seed).generate()
+    }
+
+    #[test]
+    fn round_trip_is_bit_exact_for_every_preset() {
+        for preset in Scenario::PRESETS {
+            let reqs = stream(preset, 13);
+            assert!(!reqs.is_empty(), "{preset}: empty stream");
+            let text = to_jsonl(&reqs);
+            let back = from_jsonl(&text).unwrap();
+            // Request derives PartialEq, so this compares every field —
+            // including the f64 arrival — for bit-exact equality.
+            assert_eq!(back, reqs, "{preset}: round trip not exact");
+            // and the serialization itself is stable
+            assert_eq!(to_jsonl(&back), text);
+        }
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let reqs = stream("multi_tenant", 5);
+        let dir = std::env::temp_dir().join("probe_trace_test");
+        let path = dir.join("trace.jsonl");
+        let path = path.to_str().unwrap();
+        write_trace(path, &reqs).unwrap();
+        let back = read_trace(path).unwrap();
+        assert_eq!(back, reqs);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fractional_arrivals_survive() {
+        // adversarial float values: shortest-round-trip printing must
+        // recover the exact bits
+        let mut reqs = stream("steady", 7);
+        reqs[0].arrival = 0.1 + 0.2; // 0.30000000000000004
+        reqs[1].arrival = 1.0 / 3.0;
+        reqs[2].arrival = f64::MIN_POSITIVE;
+        let back = from_jsonl(&to_jsonl(&reqs)).unwrap();
+        for (a, b) in reqs.iter().zip(&back) {
+            assert_eq!(a.arrival.to_bits(), b.arrival.to_bits());
+        }
+    }
+
+    #[test]
+    fn malformed_lines_are_line_tagged() {
+        let err = from_jsonl("{\"id\":0}\n").unwrap_err();
+        assert!(err.contains("line 1"), "{err}");
+        let good = to_jsonl(&stream("steady", 1)[..2]);
+        let err = from_jsonl(&format!("{good}not json\n")).unwrap_err();
+        assert!(err.contains("line 3"), "{err}");
+        let err = from_jsonl(
+            "{\"id\":0,\"tenant\":0,\"domain\":0,\"dataset\":\"klingon\",\
+             \"prompt_len\":4,\"max_new_tokens\":4,\"arrival\":0}\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("klingon"), "{err}");
+        // blank lines are fine
+        assert_eq!(from_jsonl("\n\n").unwrap(), Vec::<Request>::new());
+    }
+}

@@ -111,6 +111,7 @@ fn prefill_then_decode_serves_a_request() {
     c.submit_with_prompt(
         Request {
             id: 0,
+            tenant: 0,
             domain: 1,
             dataset: Dataset::Code,
             prompt_len: prompt.len(),
@@ -138,6 +139,7 @@ fn continuous_batching_mixes_requests() {
         c.submit_with_prompt(
             Request {
                 id: i,
+                tenant: 0,
                 domain,
                 dataset: Dataset::Mixed,
                 prompt_len: prompt.len(),

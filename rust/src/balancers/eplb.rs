@@ -48,6 +48,12 @@ pub struct Eplb {
     transfer_cost_per_step: f64,
     step_idx: usize,
     n_layers_hint: usize,
+    /// Live per-rank replica-slot caps from the engine's memory
+    /// governor (empty = ungoverned). EPLB's static per-layer
+    /// placeholders make each slot cost `n_layers × W`, so under HBM
+    /// pressure these collapse to zero long before PROBE's cyclic
+    /// buffer does — the paper's Fig. 7 exclusion, enforced live.
+    replica_caps: Vec<usize>,
 }
 
 impl Eplb {
@@ -66,7 +72,16 @@ impl Eplb {
             transfer_cost_per_step: 0.0,
             step_idx: 0,
             n_layers_hint: 0,
+            replica_caps: Vec::new(),
         }
+    }
+
+    /// Replica slots rank `r` may hold under the governor's live caps.
+    fn slot_cap(&self, r: usize) -> usize {
+        self.replica_caps
+            .get(r)
+            .copied()
+            .unwrap_or(self.cfg.redundant_slots)
     }
 
     fn ensure_layers(&mut self, n: usize) {
@@ -121,10 +136,9 @@ impl Eplb {
             // coldest rank with a slot not already hosting e_star
             let mut ranks: Vec<usize> = (0..self.ep).collect();
             ranks.sort_by(|&a, &b| loads[a].partial_cmp(&loads[b]).unwrap());
-            let Some(&dst) = ranks
-                .iter()
-                .find(|&&r| p.slots_free(r) > 0 && !p.hosts(e_star, r))
-            else {
+            let Some(&dst) = ranks.iter().find(|&&r| {
+                p.slots_free(r) > 0 && p.slots_used(r) < self.slot_cap(r) && !p.hosts(e_star, r)
+            }) else {
                 break;
             };
             if p.add_replica(e_star, dst).is_err() {
@@ -139,6 +153,16 @@ impl Eplb {
 impl Balancer for Eplb {
     fn name(&self) -> &'static str {
         "eplb"
+    }
+
+    fn set_replica_caps(&mut self, caps: &[usize]) {
+        self.replica_caps = caps.to_vec();
+    }
+
+    fn replica_policy(&self) -> crate::placement::memory::ReplicaPolicy {
+        crate::placement::memory::ReplicaPolicy::StaticPerLayer {
+            slots: self.cfg.redundant_slots,
+        }
     }
 
     fn begin_step(&mut self, step_idx: usize, n_layers: usize) {

@@ -55,6 +55,33 @@ pub trait Balancer {
         0
     }
 
+    /// Live per-rank replica-slot caps published by the serving
+    /// engine's memory governor
+    /// ([`crate::placement::memory::MemoryManager::replica_caps`]):
+    /// how many replica slots still fit each rank's free HBM this step.
+    /// Replicating policies must bound placement growth by these caps,
+    /// so replication shrinks as KV pressure rises; the default no-op
+    /// suits policies that never replicate.
+    fn set_replica_caps(&mut self, _caps: &[usize]) {}
+
+    /// The engine's estimate of the NEXT step's token count
+    /// ([`crate::engine::BatchComposition::next_tokens_hint`]). A
+    /// prefetch planned during a large mixed (prefill-heavy) step must
+    /// hide inside the *following* step's windows, which may be
+    /// decode-scale — balancers that budget transfers against hiding
+    /// windows should cap their estimates accordingly. Default no-op.
+    fn set_next_step_tokens(&mut self, _tokens: usize) {}
+
+    /// The HBM reservation shape this policy's replicas occupy
+    /// ([`crate::placement::memory::ReplicaPolicy`]) — how the memory
+    /// governor prices one replica slot (PROBE's cyclic double buffer
+    /// is `2 × W` flat; EPLB's static per-layer placeholders are
+    /// `n_layers × W`). Non-replicating policies keep the default
+    /// [`crate::placement::memory::ReplicaPolicy::None`].
+    fn replica_policy(&self) -> crate::placement::memory::ReplicaPolicy {
+        crate::placement::memory::ReplicaPolicy::None
+    }
+
     /// Called once per step before any layer.
     fn begin_step(&mut self, step_idx: usize, n_layers: usize);
 

@@ -81,6 +81,14 @@ pub struct Probe {
     /// Token scale (tokens/rank) the window EMA was anchored at; a >2x
     /// change (prefill chunk vs decode batch) triggers a re-bootstrap.
     ema_tokens_per_rank: usize,
+    /// Live per-rank replica-slot caps from the engine's memory
+    /// governor (empty = ungoverned: the full `max_redundant` budget).
+    replica_caps: Vec<usize>,
+    /// Engine hint: the next step's expected token count. Caps the
+    /// hiding-window estimate when the next step is smaller than the
+    /// scale the EMA is anchored at (a prefill burst must not budget
+    /// fetches the following decode-scale step cannot hide).
+    next_tokens: Option<usize>,
     /// Layers per step (set by `begin_step`; pipeline resets on change).
     n_layers: usize,
     /// Absolute index of the next layer to decide.
@@ -117,6 +125,8 @@ impl Probe {
             mean_ctx: config.mean_ctx,
             last_iterations: 0,
             ema_tokens_per_rank: 0,
+            replica_caps: Vec::new(),
+            next_tokens: None,
             n_layers: 0,
             abs_next: 0,
             planned: VecDeque::new(),
@@ -130,10 +140,36 @@ impl Probe {
     /// fetch budget stays one window — deeper lookahead buys slack, not
     /// extra committed bandwidth (the windows are shared by the L plans
     /// in flight).
-    fn windows(&self) -> Vec<f64> {
-        self.window_ema
+    ///
+    /// `cross_step`: the plan's target layer executes in the NEXT
+    /// engine step. When the engine hints that step is smaller than the
+    /// scale the EMA is anchored at (the tail of a prefill burst), the
+    /// estimate is capped by the scaled-down window so a transfer is
+    /// never budgeted against a window the following decode-scale step
+    /// cannot provide. Within-step plans keep the current step's
+    /// windows.
+    fn windows_for(&self, cross_step: bool) -> Vec<f64> {
+        let base: Vec<f64> = self
+            .window_ema
             .iter()
             .map(|&w| (w + self.attn_ema).max(0.0))
+            .collect();
+        if !cross_step {
+            return base;
+        }
+        let Some(next) = self.next_tokens else { return base };
+        let anchor = self.ema_tokens_per_rank.max(1);
+        let next_tpr = next.div_ceil(self.ep).max(1);
+        if next_tpr >= anchor {
+            return base;
+        }
+        let scale = next_tpr as f64 / anchor as f64;
+        let attn_next =
+            scheduler::attention_time(next_tpr, self.mean_ctx, &self.model, &self.hw);
+        self.window_ema
+            .iter()
+            .zip(&base)
+            .map(|(&w, &b)| b.min((w * scale + attn_next).max(0.0)))
             .collect()
     }
 
@@ -175,6 +211,17 @@ impl Probe {
     fn fabric_opt(&self) -> Option<&Fabric> {
         (self.cfg.topology_aware && !self.fabric.is_flat()).then_some(&self.fabric)
     }
+
+    /// Per-rank replica-slot caps the planner budgets against: the
+    /// memory governor's live headroom when published, else the full
+    /// policy budget.
+    fn slot_caps(&self) -> Vec<usize> {
+        if self.replica_caps.len() == self.ep {
+            self.replica_caps.clone()
+        } else {
+            vec![self.cfg.max_redundant; self.ep]
+        }
+    }
 }
 
 impl super::Balancer for Probe {
@@ -212,6 +259,20 @@ impl super::Balancer for Probe {
         self.predictor.feed_target_truth(target_layer, truth);
     }
 
+    fn set_replica_caps(&mut self, caps: &[usize]) {
+        self.replica_caps = caps.to_vec();
+    }
+
+    fn set_next_step_tokens(&mut self, tokens: usize) {
+        self.next_tokens = Some(tokens.max(1));
+    }
+
+    fn replica_policy(&self) -> crate::placement::memory::ReplicaPolicy {
+        crate::placement::memory::ReplicaPolicy::CyclicBuffer {
+            max_redundant: self.cfg.max_redundant,
+        }
+    }
+
     /// Control plane: forecast layer `l + L` from layer `l`'s observed
     /// routing and emit its delta plan.
     fn observe(&mut self, layer: usize, actual: &LayerRouting) {
@@ -229,7 +290,9 @@ impl super::Balancer for Probe {
         else {
             return; // no basis yet: the target layer will bootstrap
         };
-        let windows = self.windows();
+        // plans whose target layer falls past the end of this step must
+        // hide inside the NEXT step's (possibly decode-scale) windows
+        let windows = self.windows_for(layer + depth >= self.n_layers);
         let out = planner::plan_fabric(
             &pred_counts,
             &self.resident[target_layer],
@@ -237,6 +300,7 @@ impl super::Balancer for Probe {
             &self.hw,
             &self.fabric,
             &windows,
+            &self.slot_caps(),
             &self.cfg,
         );
         self.last_iterations = out.iterations;

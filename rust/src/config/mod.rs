@@ -189,6 +189,43 @@ impl Default for ScenarioConfig {
     }
 }
 
+/// Batch-composition knobs (`[batch]` TOML table): how the serving
+/// engine assembles each step's mixed prefill + decode batch
+/// ([`crate::engine::BatchComposition`], vLLM-style token budget).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct BatchConfig {
+    /// Max tokens (decode + prefill chunks) composed into one step.
+    /// `0` = auto: the global decode batch plus one full prefill chunk,
+    /// so a saturated decode set still admits prefill work every step.
+    pub token_budget: usize,
+    /// Max concurrently active (admitted) requests. `0` = auto: the
+    /// global decode batch (one decode token per request per step).
+    pub max_active: usize,
+}
+
+/// Memory-governance knobs (`[memory]` TOML table) for the per-rank
+/// [`crate::placement::memory::MemoryManager`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemoryConfig {
+    /// Gate admission on per-rank HBM headroom and shrink the replica
+    /// caps as KV pressure rises. `false` = pass-through governor
+    /// (legacy behavior, ablations).
+    pub enforce: bool,
+    /// Override the hardware profile's per-rank HBM capacity, in GB
+    /// (1e9 bytes). `0` = use the profile's capacity. The lever memory-
+    /// pressure scenarios (`probe bench memory`) turn.
+    pub hbm_capacity_gb: f64,
+}
+
+impl Default for MemoryConfig {
+    fn default() -> MemoryConfig {
+        MemoryConfig {
+            enforce: true,
+            hbm_capacity_gb: 0.0,
+        }
+    }
+}
+
 /// Full experiment / serving configuration.
 #[derive(Debug, Clone)]
 pub struct Config {
@@ -206,6 +243,10 @@ pub struct Config {
     pub dataset: Dataset,
     /// Workload-volatility scenario knobs (`[scenario]` table).
     pub scenario: ScenarioConfig,
+    /// Batch-composition knobs (`[batch]` table).
+    pub batch: BatchConfig,
+    /// Memory-governance knobs (`[memory]` table).
+    pub memory: MemoryConfig,
     /// Decode tokens per rank per step.
     pub batch_per_rank: usize,
     /// Chunked-prefill tokens per rank.
@@ -228,6 +269,8 @@ impl Default for Config {
             eplb: EplbConfig::default(),
             dataset: Dataset::Mixed,
             scenario: ScenarioConfig::default(),
+            batch: BatchConfig::default(),
+            memory: MemoryConfig::default(),
             batch_per_rank: 768,
             prefill_chunk_per_rank: 8192,
             mean_ctx: 64,
@@ -406,6 +449,23 @@ impl Config {
                 "scenario.record" => {
                     cfg.scenario.record =
                         Some(value.as_str().ok_or("scenario.record: string")?.to_string());
+                }
+                "batch.token_budget" => {
+                    cfg.batch.token_budget =
+                        value.as_int().ok_or("batch.token_budget: int")? as usize
+                }
+                "batch.max_active" => {
+                    cfg.batch.max_active = value.as_int().ok_or("batch.max_active: int")? as usize
+                }
+                "memory.enforce" => {
+                    cfg.memory.enforce = value.as_bool().ok_or("memory.enforce: bool")?
+                }
+                "memory.hbm_capacity_gb" => {
+                    let g = value.as_float().ok_or("memory.hbm_capacity_gb: float")?;
+                    if !(g.is_finite() && g >= 0.0) {
+                        return Err("memory.hbm_capacity_gb must be finite and >= 0".into());
+                    }
+                    cfg.memory.hbm_capacity_gb = g;
                 }
                 "seed" => cfg.seed = value.as_int().ok_or("int")? as u64,
                 other => return Err(format!("unknown config key: {other}")),
@@ -609,6 +669,35 @@ record = "bench_results/storm.jsonl"
         assert!(Config::from_toml_str("[scenario]\nload = nan\n").is_err());
         assert!(Config::from_toml_str("[scenario]\nload = inf\n").is_err());
         assert!(Config::from_toml_str("[scenario]\nsteps = 0\n").is_err());
+    }
+
+    #[test]
+    fn parse_batch_and_memory_tables() {
+        let text = r#"
+[batch]
+token_budget = 4096
+max_active = 64
+[memory]
+enforce = false
+hbm_capacity_gb = 33.5
+"#;
+        let c = Config::from_toml_str(text).unwrap();
+        assert_eq!(c.batch.token_budget, 4096);
+        assert_eq!(c.batch.max_active, 64);
+        assert!(!c.memory.enforce);
+        assert!((c.memory.hbm_capacity_gb - 33.5).abs() < 1e-12);
+        // defaults: auto-sized batch, governor on, profile capacity
+        let d = Config::from_toml_str("").unwrap();
+        assert_eq!(d.batch, BatchConfig::default());
+        assert_eq!(d.memory, MemoryConfig::default());
+        assert!(d.memory.enforce);
+        assert_eq!(d.memory.hbm_capacity_gb, 0.0);
+        // integer capacity coerces; invalid values fail loudly
+        let g = Config::from_toml_str("[memory]\nhbm_capacity_gb = 34\n").unwrap();
+        assert!((g.memory.hbm_capacity_gb - 34.0).abs() < 1e-12);
+        assert!(Config::from_toml_str("[memory]\nhbm_capacity_gb = -1.0\n").is_err());
+        assert!(Config::from_toml_str("[memory]\nhbm_capacity_gb = nan\n").is_err());
+        assert!(Config::from_toml_str("[batch]\ntoken_budget = \"big\"\n").is_err());
     }
 
     #[test]

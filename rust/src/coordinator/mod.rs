@@ -7,7 +7,10 @@
 //! [`crate::engine::StepExecutor`] backends.
 
 pub use crate::engine::sim::{SimExecutor, PREFILL_EFFECTIVE_CTX};
-pub use crate::engine::{ActiveEntry, ServingEngine, StepExecutor, StepReport};
+pub use crate::engine::{
+    ActiveEntry, BatchComposition, DecodeSlot, PrefillChunk, ServingEngine, StepExecutor,
+    StepReport,
+};
 
 /// Continuous-batching coordinator over the simulated EP cluster
 /// (paper-scale models, Figs. 7–9, 11).

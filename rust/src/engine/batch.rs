@@ -1,0 +1,180 @@
+//! Batch composition for the memory-governed continuous-batching step
+//! model (ISSUE 5): every [`crate::engine::ServingEngine`] step executes
+//! ONE mixed batch of chunked-prefill tokens riding alongside decode
+//! tokens, assembled under a vLLM-style per-step token budget and
+//! admitted through the per-rank
+//! [`crate::placement::memory::MemoryManager`].
+//!
+//! The composition carries per-request context lengths, so the
+//! simulator's attention model charges the batch's *actual* context
+//! distribution ([`crate::scheduler::ContextProfile`]) instead of one
+//! global `mean_ctx` scalar, and the routing layer sees the true
+//! decode-plus-prefill domain mixture — the regime where prefill chunks
+//! drive the abrupt hotspot migrations PROBE reacts to.
+
+use crate::scheduler::ContextProfile;
+
+/// GQA sharing group: effective KV rows read per decode query token are
+/// `context / GQA_SHARE` after key/value head sharing (GQA-8; see
+/// [`crate::scheduler::attention_time`]).
+pub const GQA_SHARE: usize = 8;
+
+/// Effective KV rows read per prefill query token (multi-K contexts
+/// after GQA-8 sharing and flash tile reuse) vs the decode default.
+pub const PREFILL_EFFECTIVE_CTX: usize = 192;
+
+/// One decode token of an active, fully-prefilled request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecodeSlot {
+    /// Request emitting this token.
+    pub req_id: u64,
+    /// Semantic domain routing the token.
+    pub domain: u16,
+    /// KV rows behind the query (prompt + tokens decoded so far).
+    pub context_len: usize,
+}
+
+/// One chunk of a request's prompt scheduled into a step.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrefillChunk {
+    /// Request being prefilled.
+    pub req_id: u64,
+    /// Semantic domain routing the chunk's tokens.
+    pub domain: u16,
+    /// Prompt tokens already prefilled before this chunk.
+    pub offset: usize,
+    /// Tokens in this chunk.
+    pub tokens: usize,
+    /// Whether this chunk completes the prefill — its completion inside
+    /// the shared step stream IS the request's first-token time.
+    pub is_last: bool,
+}
+
+/// The mixed batch one serving step executes: decode tokens of every
+/// fully-prefilled active request plus the prefill chunks that fit the
+/// remaining token budget.
+#[derive(Debug, Clone, Default)]
+pub struct BatchComposition {
+    /// One decode token per fully-prefilled active request.
+    pub decode: Vec<DecodeSlot>,
+    /// Prefill chunks riding alongside, in admission order.
+    pub prefill: Vec<PrefillChunk>,
+    /// The step token budget the composition was assembled under.
+    pub token_budget: usize,
+    /// Engine estimate of the NEXT step's token count (decode survivors
+    /// plus the prefill leftovers that fit the budget). Balancers use
+    /// it to budget prefetches that must hide inside the *next* step's
+    /// windows — a prefill burst must not overcommit bandwidth the
+    /// following decode-scale step cannot hide.
+    pub next_tokens_hint: usize,
+}
+
+impl BatchComposition {
+    /// Decode tokens in the batch (one per decoding request).
+    pub fn decode_tokens(&self) -> usize {
+        self.decode.len()
+    }
+
+    /// Prefill tokens in the batch (sum over chunks).
+    pub fn prefill_tokens(&self) -> usize {
+        self.prefill.iter().map(|c| c.tokens).sum()
+    }
+
+    /// Total tokens the step processes.
+    pub fn total_tokens(&self) -> usize {
+        self.decode_tokens() + self.prefill_tokens()
+    }
+
+    /// True when the step has nothing to execute.
+    pub fn is_empty(&self) -> bool {
+        self.decode.is_empty() && self.prefill.is_empty()
+    }
+
+    /// Per-token routing domains: decode tokens first (active-set
+    /// mixture), then each prefill chunk's tokens — the continuous-
+    /// batching domain blend the routing model sees.
+    pub fn domains(&self) -> Vec<u16> {
+        let mut out = Vec::with_capacity(self.total_tokens());
+        out.extend(self.decode.iter().map(|d| d.domain));
+        for c in &self.prefill {
+            out.extend(std::iter::repeat(c.domain).take(c.tokens));
+        }
+        out
+    }
+
+    /// Effective-context distribution of the batch: each decode token
+    /// reads `context / GQA_SHARE` KV rows, each prefill token the flat
+    /// [`PREFILL_EFFECTIVE_CTX`]. This is what
+    /// [`crate::scheduler::attention_time_profile`] charges instead of
+    /// the old global `mean_ctx` scalar.
+    pub fn context_profile(&self) -> ContextProfile {
+        let mut p = ContextProfile::default();
+        for d in &self.decode {
+            p.push(1, (d.context_len / GQA_SHARE).max(1));
+        }
+        for c in &self.prefill {
+            p.push(c.tokens, PREFILL_EFFECTIVE_CTX);
+        }
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> BatchComposition {
+        BatchComposition {
+            decode: vec![
+                DecodeSlot {
+                    req_id: 1,
+                    domain: 0,
+                    context_len: 512,
+                },
+                DecodeSlot {
+                    req_id: 2,
+                    domain: 3,
+                    context_len: 4,
+                },
+            ],
+            prefill: vec![PrefillChunk {
+                req_id: 3,
+                domain: 1,
+                offset: 0,
+                tokens: 5,
+                is_last: false,
+            }],
+            token_budget: 64,
+            next_tokens_hint: 7,
+        }
+    }
+
+    #[test]
+    fn token_accounting() {
+        let b = sample();
+        assert_eq!(b.decode_tokens(), 2);
+        assert_eq!(b.prefill_tokens(), 5);
+        assert_eq!(b.total_tokens(), 7);
+        assert!(!b.is_empty());
+        assert!(BatchComposition::default().is_empty());
+    }
+
+    #[test]
+    fn domains_cover_every_token() {
+        let b = sample();
+        let d = b.domains();
+        assert_eq!(d.len(), 7);
+        assert_eq!(&d[..2], &[0, 3]);
+        assert!(d[2..].iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn context_profile_groups_by_source() {
+        let b = sample();
+        let p = b.context_profile();
+        assert_eq!(p.total_tokens(), 7);
+        // 512/8 = 64 rows, tiny context clamps to 1, prefill flat rate
+        let want = 64.0 + 1.0 + 5.0 * PREFILL_EFFECTIVE_CTX as f64;
+        assert!((p.total_kv_rows() - want).abs() < 1e-9);
+    }
+}

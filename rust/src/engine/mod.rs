@@ -3,7 +3,32 @@
 //! join/leave at step boundaries → retirement) parameterized over a
 //! [`StepExecutor`] backend.
 //!
-//! Backends plug in the "route → decide → execute one step" core:
+//! ## The memory-governed continuous-batching step model (ISSUE 5)
+//!
+//! Every [`ServingEngine::step`] assembles ONE [`BatchComposition`]:
+//! decode tokens of all fully-prefilled active requests plus the prefill
+//! chunks that fit the remaining vLLM-style per-step token budget, in
+//! admission order. The composed batch is admitted through the
+//! executor's per-rank [`MemoryManager`] before execution:
+//!
+//! * a new request is admitted only if its first prefill chunk's KV
+//!   fits the least-loaded rank's headroom;
+//! * the step's projected KV growth plus activation watermark must fit
+//!   every rank — when a rank overflows, the latest-arrived request on
+//!   it is **preempted**: its KV pages are dropped and it re-queues for
+//!   recompute (vLLM-style), counted in
+//!   [`ServingMetrics::preemptions`];
+//! * the replica-slot headroom left after KV is published to the
+//!   balancer, so expert replication shrinks as KV pressure rises.
+//!
+//! A request's **first-token time is the completion of its final
+//! prefill chunk inside the shared step stream** — there is no
+//! out-of-band prefill measurement anymore (the old
+//! `measure_prefill` path is retired; TTFT experiments drive the real
+//! mixed-step loop).
+//!
+//! Backends plug in the "route → decide → execute one mixed batch"
+//! core:
 //! * [`sim::SimExecutor`] — the paper-scale cluster simulator driven by
 //!   the synthetic routing model and a pluggable balancer (Figs. 7–9, 11).
 //! * [`real::RealExecutor`] — the small real MoE model served through
@@ -11,28 +36,31 @@
 //!
 //! [`ServingEngine`] owns the queue, the active set, the (virtual)
 //! clock, and all serving metrics; executors own only backend state
-//! (simulator/balancer or KV cache/slots). The engine can be
-//! instantiated N times behind the multi-replica front-end in
+//! (simulator/balancer/memory governor or KV cache/slots). The engine
+//! can be instantiated N times behind the multi-replica front-end in
 //! [`crate::server`].
 
+pub mod batch;
 pub mod real;
 pub mod sim;
 
-use std::collections::VecDeque;
+pub use batch::{BatchComposition, DecodeSlot, PrefillChunk, GQA_SHARE, PREFILL_EFFECTIVE_CTX};
 
-use anyhow::Result;
+use std::collections::{HashMap, HashSet, VecDeque};
+
+use anyhow::{anyhow, Result};
 
 use crate::metrics::{IrTracker, RequestMetrics, ServingMetrics};
+use crate::placement::memory::MemoryManager;
 use crate::workload::Request;
 
-/// Executor-agnostic result of one executed step (prefill or decode).
+/// Executor-agnostic result of one executed mixed step.
 #[derive(Debug, Clone, Default)]
 pub struct StepReport {
     /// Time this step occupied the backend: simulated seconds for the
     /// cluster simulator, measured wall seconds for the PJRT runtime.
     pub latency: f64,
-    /// Tokens processed (decode: one per active request; prefill: the
-    /// admitted prompt tokens).
+    /// Tokens processed (decode tokens plus prefill-chunk tokens).
     pub tokens: usize,
     /// Imbalance-ratio samples to append to the engine's [`IrTracker`]
     /// (the simulator reports one per step, the real runtime one per
@@ -40,62 +68,116 @@ pub struct StepReport {
     pub ir_samples: Vec<f64>,
 }
 
-/// A request in a decode slot.
+/// A request occupying an engine slot (prefilling or decoding).
 #[derive(Debug, Clone)]
 pub struct ActiveEntry {
     /// The request occupying the slot.
     pub req: Request,
-    /// Tokens emitted so far (the prefill emits the first).
+    /// Tokens emitted so far (the final prefill chunk emits the first).
     pub decoded: usize,
     /// Total tokens to emit before retirement.
     pub budget: usize,
+    /// Prompt tokens prefilled so far (chunked across steps; reset to 0
+    /// on preemption for recompute).
+    pub prefilled: usize,
+    /// KV rows currently resident for this request on its rank.
+    pub kv_tokens: usize,
+    /// Rank holding this request's KV pages (DP attention).
+    pub kv_rank: usize,
     /// Index into [`ServingMetrics::requests`], carried with the request
     /// so completion bookkeeping never rescans the metrics vector.
     pub(crate) midx: usize,
 }
 
-/// One serving step backend: route the active tokens, decide placement/
-/// assignment, execute, and report a [`StepReport`]. Implementations
-/// keep only backend state; the request lifecycle lives in
-/// [`ServingEngine`].
+/// Prefill tokens a request needs before decoding (re-)starts: the
+/// prompt plus recompute of tokens already generated before a
+/// preemption (vLLM recompute semantics). The single source of truth
+/// for admission-time chunk sizing and active-set chunking.
+fn prefill_target_for(req: &Request, decoded: usize) -> usize {
+    req.prompt_len.max(1) + decoded.saturating_sub(1)
+}
+
+impl ActiveEntry {
+    /// Prompt tokens that must be prefilled before decoding (re-)starts.
+    /// A preempted request recomputes its prompt plus the tokens it had
+    /// already generated (vLLM recompute preemption).
+    pub fn prefill_target(&self) -> usize {
+        prefill_target_for(&self.req, self.decoded)
+    }
+
+    /// Whether the request still has prefill chunks outstanding.
+    pub fn is_prefilling(&self) -> bool {
+        self.prefilled < self.prefill_target()
+    }
+}
+
+/// One serving step backend: execute one composed mixed batch and report
+/// a [`StepReport`]. Implementations keep only backend state; the
+/// request lifecycle lives in [`ServingEngine`].
 pub trait StepExecutor {
     /// Backend name for logs and reports.
     fn name(&self) -> &'static str;
 
-    /// Concurrent decode slots (tokens per step for the simulator,
-    /// KV-cache slots for the real runtime).
+    /// Max concurrently active (admitted) requests.
     fn capacity(&self) -> usize;
 
-    /// Max requests prefilled together in one admission group (the real
-    /// prefill artifact runs a fixed batch; the simulator charges
-    /// per-request chunks).
-    fn prefill_group_limit(&self) -> usize {
-        1
+    /// Max tokens (decode + prefill chunks) composed into one step
+    /// (vLLM-style `max_num_batched_tokens`). Decode tokens are never
+    /// throttled by this; it bounds how much prefill rides along.
+    fn token_budget(&self) -> usize {
+        usize::MAX
+    }
+
+    /// Max prefill tokens one request contributes per step (its chunk
+    /// size).
+    fn prefill_chunk(&self) -> usize {
+        usize::MAX
+    }
+
+    /// Max requests mid-prefill at once (the real backend's prefill
+    /// artifact holds a fixed number of in-flight sequences).
+    fn max_prefilling(&self) -> usize {
+        usize::MAX
+    }
+
+    /// The backend's per-rank HBM governor, if it has one. When present
+    /// the engine gates admission, projects every step's KV growth and
+    /// activation watermark through it, and preempts on overflow.
+    fn memory(&mut self) -> Option<&mut MemoryManager> {
+        None
     }
 
     /// Prepare backend state for an admitted request and return its
     /// decode budget (total tokens to emit, counting the prefill's
-    /// first token).
+    /// first token). Called again when a preempted request re-admits.
     fn begin(&mut self, req: &Request) -> Result<usize>;
 
-    /// Run the chunked prefill of one admission group. `active` is the
-    /// current decode set (the simulator routes prefill chunks with the
-    /// active domain mixture, matching continuous batching).
-    fn prefill(&mut self, group: &[Request], active: &[ActiveEntry]) -> Result<StepReport>;
-
-    /// One continuous-batching decode step over the active set.
-    fn decode(&mut self, active: &[ActiveEntry]) -> Result<StepReport>;
+    /// Execute one composed mixed batch (prefill chunks + decode
+    /// tokens) and report its latency/IR.
+    fn execute(&mut self, batch: &BatchComposition) -> Result<StepReport>;
 
     /// Drop backend state of a retired request.
     fn retire(&mut self, _req: &Request) {}
 }
 
 /// A queued request plus its metrics index (recorded at submit time so
-/// admission is O(1) instead of scanning all request metrics).
+/// admission is O(1) instead of scanning all request metrics) and the
+/// decode progress to resume from after a preemption.
 #[derive(Debug, Clone)]
 struct Queued {
     req: Request,
     midx: usize,
+    /// Tokens already emitted before a preemption (0 for fresh
+    /// requests); recompute prefill re-covers them.
+    resume_decoded: usize,
+}
+
+impl Queued {
+    /// Prefill tokens this request needs when admitted (prompt plus
+    /// recompute of already-generated tokens).
+    fn prefill_target(&self) -> usize {
+        prefill_target_for(&self.req, self.resume_decoded)
+    }
 }
 
 /// Continuous-batching serving engine over any [`StepExecutor`].
@@ -126,8 +208,8 @@ impl<E: StepExecutor> ServingEngine<E> {
         }
     }
 
-    /// Enqueue a request (admitted at the next step boundary once its
-    /// arrival time has passed). The queue is kept sorted by arrival —
+    /// Enqueue a request (admitted at a step boundary once its arrival
+    /// time has passed). The queue is kept sorted by arrival —
     /// admission gates on the front entry, so an out-of-order
     /// submission must not head-of-line-block earlier arrivals; ties
     /// keep submission order.
@@ -139,11 +221,21 @@ impl<E: StepExecutor> ServingEngine<E> {
             arrival: req.arrival,
             ..Default::default()
         });
+        self.requeue(Queued {
+            req,
+            midx,
+            resume_decoded: 0,
+        });
+    }
+
+    /// Insert into the arrival-sorted queue (after equal arrivals, so
+    /// ties keep insertion order).
+    fn requeue(&mut self, q: Queued) {
         let mut pos = self.queue.len();
-        while pos > 0 && self.queue[pos - 1].req.arrival > req.arrival {
+        while pos > 0 && self.queue[pos - 1].req.arrival > q.req.arrival {
             pos -= 1;
         }
-        self.queue.insert(pos, Queued { req, midx });
+        self.queue.insert(pos, q);
     }
 
     /// Submit a whole stream (e.g. a replayed
@@ -156,17 +248,17 @@ impl<E: StepExecutor> ServingEngine<E> {
         }
     }
 
-    /// Requests waiting for a decode slot.
+    /// Requests waiting for a slot.
     pub fn pending(&self) -> usize {
         self.queue.len()
     }
 
-    /// Requests currently decoding.
+    /// Requests currently admitted (prefilling or decoding).
     pub fn active_count(&self) -> usize {
         self.active.len()
     }
 
-    /// Concurrent decode slots.
+    /// Concurrent request slots.
     pub fn decode_capacity(&self) -> usize {
         self.executor.capacity()
     }
@@ -176,113 +268,329 @@ impl<E: StepExecutor> ServingEngine<E> {
         &self.active
     }
 
-    /// Admit arrived requests into free decode slots, charging their
-    /// chunked prefill through the executor.
-    fn admit(&mut self) -> Result<()> {
+    /// Assemble the step's mixed batch: decode tokens first, then
+    /// admission of arrived requests, then prefill chunks under the
+    /// token budget, then the memory projection with preemption (see
+    /// module docs).
+    fn compose(&mut self) -> Result<BatchComposition> {
+        let cap = self.executor.capacity().max(1);
+        let token_budget = self.executor.token_budget().max(1);
+        let chunk_max = self.executor.prefill_chunk().max(1);
+        let max_prefilling = self.executor.max_prefilling().max(1);
+        let governed = self.executor.memory().is_some();
+        let n_ranks = self.executor.memory().map(|m| m.ranks()).unwrap_or(1);
+
+        // ---- decode set: every fully-prefilled active request ----
+        let mut decode: Vec<DecodeSlot> = self
+            .active
+            .iter()
+            .filter(|e| !e.is_prefilling())
+            .map(|e| DecodeSlot {
+                req_id: e.req.id,
+                domain: e.req.domain,
+                context_len: e.kv_tokens.max(1),
+            })
+            .collect();
+        let mut used = decode.len();
+
+        // ---- admission: arrived requests, in arrival order ----
+        let mut pending_kv = vec![0usize; n_ranks];
+        // freshly admitted entries are always prefilling, so the count
+        // updates incrementally instead of rescanning per admission
+        let mut prefilling = self.active.iter().filter(|e| e.is_prefilling()).count();
         loop {
-            let free = self
-                .executor
-                .capacity()
-                .saturating_sub(self.active.len());
-            if free == 0 {
+            if self.active.len() >= cap || prefilling >= max_prefilling {
                 break;
             }
-            let limit = free.min(self.executor.prefill_group_limit().max(1));
-            let mut group: Vec<Queued> = Vec::new();
-            while group.len() < limit {
-                let arrived = self
-                    .queue
-                    .front()
-                    .is_some_and(|q| q.req.arrival <= self.clock);
-                if !arrived {
-                    break;
-                }
-                group.push(self.queue.pop_front().unwrap());
-            }
-            if group.is_empty() {
+            let Some(front) = self.queue.front() else { break };
+            if front.req.arrival > self.clock || used >= token_budget {
                 break;
             }
-            let mut budgets = Vec::with_capacity(group.len());
-            let mut result = Ok(());
-            for q in &group {
-                match self.executor.begin(&q.req) {
-                    Ok(b) => budgets.push(b),
-                    Err(e) => {
-                        result = Err(e);
-                        break;
+            let first_chunk = front
+                .prefill_target()
+                .min(chunk_max)
+                .min(token_budget - used)
+                .max(1);
+            let kv_rank = match self.executor.memory() {
+                Some(mm) => {
+                    match mm.admit_rank(first_chunk, used + first_chunk, &pending_kv) {
+                        Some(r) => r,
+                        None if self.active.is_empty() => {
+                            let q = self.queue.front().unwrap();
+                            return Err(anyhow!(
+                                "request {} (prompt {} tokens) cannot be admitted: per-rank \
+                                 HBM headroom exhausted even with an idle engine",
+                                q.req.id,
+                                q.req.prompt_len
+                            ));
+                        }
+                        None => break, // wait for retirements to free KV
                     }
                 }
-            }
-            let rep = match result.and_then(|()| {
-                let reqs: Vec<Request> = group.iter().map(|q| q.req.clone()).collect();
-                self.executor.prefill(&reqs, &self.active)
-            }) {
-                Ok(rep) => rep,
+                None => 0,
+            };
+            let q = self.queue.pop_front().unwrap();
+            let budget = match self.executor.begin(&q.req) {
+                Ok(b) => b,
                 Err(e) => {
-                    // put the group back (front, original order) so a
-                    // transient backend failure loses no requests
-                    for q in group.into_iter().rev() {
-                        self.queue.push_front(q);
-                    }
+                    // put it back so a transient backend failure loses
+                    // no requests
+                    self.queue.push_front(q);
                     return Err(e);
                 }
             };
-            self.clock += rep.latency;
-            for &ir in &rep.ir_samples {
-                self.ir.push_ir(ir);
+            pending_kv[kv_rank] += first_chunk;
+            prefilling += 1;
+            self.active.push(ActiveEntry {
+                req: q.req,
+                decoded: q.resume_decoded,
+                budget,
+                prefilled: 0,
+                kv_tokens: 0,
+                kv_rank,
+                midx: q.midx,
+            });
+        }
+
+        // ---- prefill chunks under the remaining token budget ----
+        let mut prefill: Vec<PrefillChunk> = Vec::new();
+        for e in &self.active {
+            if !e.is_prefilling() {
+                continue;
             }
-            for (q, budget) in group.into_iter().zip(budgets) {
-                self.metrics.requests[q.midx].first_token = Some(self.clock);
-                self.active.push(ActiveEntry {
-                    req: q.req,
-                    decoded: 1, // the prefill emits the first token
-                    budget,
-                    midx: q.midx,
-                });
+            if used >= token_budget {
+                break;
+            }
+            let remaining = e.prefill_target() - e.prefilled;
+            let t = remaining.min(chunk_max).min(token_budget - used);
+            if t == 0 {
+                break;
+            }
+            prefill.push(PrefillChunk {
+                req_id: e.req.id,
+                domain: e.req.domain,
+                offset: e.prefilled,
+                tokens: t,
+                is_last: t == remaining,
+            });
+            used += t;
+        }
+
+        // ---- memory projection + preemption ----
+        if governed {
+            loop {
+                let step_tokens =
+                    decode.len() + prefill.iter().map(|c| c.tokens).sum::<usize>();
+                // per-rank KV rows this step would commit
+                let rank_of: HashMap<u64, usize> = self
+                    .active
+                    .iter()
+                    .map(|e| (e.req.id, e.kv_rank))
+                    .collect();
+                let mut extra: HashMap<usize, usize> = HashMap::new();
+                for d in &decode {
+                    *extra.entry(rank_of[&d.req_id]).or_insert(0) += 1;
+                }
+                for c in &prefill {
+                    *extra.entry(rank_of[&c.req_id]).or_insert(0) += c.tokens;
+                }
+                let overfull = {
+                    let mm = self.executor.memory().expect("governed");
+                    (0..mm.ranks()).find(|&r| {
+                        !mm.fits_extra(r, extra.get(&r).copied().unwrap_or(0), step_tokens)
+                    })
+                };
+                let Some(rank) = overfull else { break };
+                // victim: latest-arrived request on the overfull rank
+                // (ties by submission order), recompute-preempted.
+                // Only entries whose eviction actually helps qualify —
+                // resident KV or a contribution to this batch; a
+                // chunk-starved zero-KV entry frees nothing and would
+                // only churn the preemption counter.
+                let contributing: HashSet<u64> = decode
+                    .iter()
+                    .map(|d| d.req_id)
+                    .chain(prefill.iter().map(|c| c.req_id))
+                    .collect();
+                let victim = self
+                    .active
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, e)| {
+                        e.kv_rank == rank
+                            && (e.kv_tokens > 0 || contributing.contains(&e.req.id))
+                    })
+                    .max_by(|(_, a), (_, b)| {
+                        a.req
+                            .arrival
+                            .partial_cmp(&b.req.arrival)
+                            .unwrap_or(std::cmp::Ordering::Equal)
+                            .then(a.midx.cmp(&b.midx))
+                    })
+                    .map(|(i, _)| i);
+                match victim {
+                    Some(i) => {
+                        let e = self.active.swap_remove(i);
+                        if let Some(mm) = self.executor.memory() {
+                            mm.release(e.kv_rank, e.kv_tokens);
+                        }
+                        decode.retain(|d| d.req_id != e.req.id);
+                        prefill.retain(|c| c.req_id != e.req.id);
+                        self.metrics.preemptions += 1;
+                        self.requeue(Queued {
+                            req: e.req,
+                            midx: e.midx,
+                            resume_decoded: e.decoded,
+                        });
+                    }
+                    None => {
+                        // no KV tenant on the rank: the activation
+                        // watermark alone overflows — shed the largest
+                        // prefill chunk to shrink it
+                        if let Some(i) = (0..prefill.len()).max_by_key(|&i| prefill[i].tokens)
+                        {
+                            prefill.remove(i);
+                        } else {
+                            return Err(anyhow!(
+                                "rank {rank} HBM capacity exhausted below the batch's \
+                                 activation watermark"
+                            ));
+                        }
+                    }
+                }
+            }
+            let step_tokens = decode.len() + prefill.iter().map(|c| c.tokens).sum::<usize>();
+            if let Some(mm) = self.executor.memory() {
+                mm.set_step_tokens(step_tokens);
             }
         }
-        Ok(())
+
+        // next-step scale hint: decode survivors (including prefills
+        // completing this step) plus the prefill leftovers that will
+        // fit the budget — so balancers never budget a prefetch against
+        // a window the following step cannot actually provide
+        let decode_next = decode.len() + prefill.iter().filter(|c| c.is_last).count();
+        let chunked: HashMap<u64, usize> = prefill.iter().map(|c| (c.req_id, c.tokens)).collect();
+        let leftover: usize = self
+            .active
+            .iter()
+            .filter(|e| e.is_prefilling())
+            .map(|e| {
+                (e.prefill_target() - e.prefilled)
+                    .saturating_sub(chunked.get(&e.req.id).copied().unwrap_or(0))
+            })
+            .sum();
+        let next_tokens_hint =
+            decode_next + leftover.min(token_budget.saturating_sub(decode_next));
+
+        Ok(BatchComposition {
+            decode,
+            prefill,
+            token_budget,
+            next_tokens_hint,
+        })
     }
 
-    /// One continuous-batching step: admit, decode, retire. Returns
-    /// `Ok(None)` when the engine has fully drained.
-    pub fn step(&mut self) -> Result<Option<StepReport>> {
-        self.admit()?;
-        if self.active.is_empty() {
-            // idle: jump the clock to the next arrival if any
-            let next_arrival = self.queue.front().map(|q| q.req.arrival);
-            if let Some(t) = next_arrival {
-                self.clock = self.clock.max(t);
-                self.admit()?;
+    /// Post-execution bookkeeping: prefill progress (the final chunk
+    /// emits the first token), decode progress, KV growth, retirement.
+    fn apply(&mut self, batch: &BatchComposition) {
+        let clock = self.clock;
+        // positions are stable until the retirement pass below
+        let idx: HashMap<u64, usize> = self
+            .active
+            .iter()
+            .enumerate()
+            .map(|(i, e)| (e.req.id, i))
+            .collect();
+        for c in &batch.prefill {
+            let i = idx[&c.req_id];
+            self.active[i].prefilled += c.tokens;
+            self.active[i].kv_tokens += c.tokens;
+            let rank = self.active[i].kv_rank;
+            if let Some(mm) = self.executor.memory() {
+                mm.grow(rank, c.tokens);
             }
-            if self.active.is_empty() {
-                return Ok(None);
+            if c.is_last && self.active[i].decoded == 0 {
+                // the prefill emits the first token: TTFT is the
+                // completion of the final chunk in the shared stream
+                self.active[i].decoded = 1;
+                let midx = self.active[i].midx;
+                self.metrics.requests[midx].first_token = Some(clock);
             }
         }
-        let rep = self.executor.decode(&self.active)?;
+        for d in &batch.decode {
+            let i = idx[&d.req_id];
+            self.active[i].decoded += 1;
+            self.active[i].kv_tokens += 1;
+            let rank = self.active[i].kv_rank;
+            if let Some(mm) = self.executor.memory() {
+                mm.grow(rank, 1);
+            }
+        }
+        // retirement
+        let mut i = 0;
+        while i < self.active.len() {
+            let done = {
+                let e = &self.active[i];
+                e.decoded >= e.budget && !e.is_prefilling()
+            };
+            if done {
+                let e = self.active.swap_remove(i);
+                if let Some(mm) = self.executor.memory() {
+                    mm.release(e.kv_rank, e.kv_tokens);
+                }
+                let m = &mut self.metrics.requests[e.midx];
+                m.finished = Some(clock);
+                m.tokens_out = e.decoded;
+                self.executor.retire(&e.req);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// One continuous-batching step: compose the mixed batch (admission,
+    /// chunking, memory projection, preemption), execute it, and apply
+    /// the bookkeeping. Returns `Ok(None)` when the engine has fully
+    /// drained.
+    pub fn step(&mut self) -> Result<Option<StepReport>> {
+        if self.active.is_empty() {
+            let arrived = self
+                .queue
+                .front()
+                .is_some_and(|q| q.req.arrival <= self.clock);
+            if !arrived {
+                // idle: jump the clock to the next arrival if any
+                match self.queue.front().map(|q| q.req.arrival) {
+                    Some(t) => self.clock = self.clock.max(t),
+                    None => return Ok(None),
+                }
+            }
+        }
+        let batch = self.compose()?;
+        if batch.is_empty() {
+            if self.active.is_empty() && self.queue.is_empty() {
+                return Ok(None); // fully drained
+            }
+            // requests exist but nothing could be composed (e.g. the
+            // preemption loop evicted every contributor): surface the
+            // stall instead of reporting a silent, lossy drain
+            return Err(anyhow!(
+                "serving stalled: {} active / {} queued requests but no admissible \
+                 work (per-rank HBM capacity too small for the workload)",
+                self.active.len(),
+                self.queue.len()
+            ));
+        }
+        let rep = self.executor.execute(&batch)?;
         self.clock += rep.latency;
         for &ir in &rep.ir_samples {
             self.ir.push_ir(ir);
         }
         self.metrics
             .step_tokens
-            .push((self.clock, self.active.len()));
-
-        // token bookkeeping + retirement
-        let clock = self.clock;
-        let mut i = 0;
-        while i < self.active.len() {
-            self.active[i].decoded += 1;
-            if self.active[i].decoded >= self.active[i].budget {
-                let a = self.active.swap_remove(i);
-                let m = &mut self.metrics.requests[a.midx];
-                m.finished = Some(clock);
-                m.tokens_out = a.decoded;
-                self.executor.retire(&a.req);
-            } else {
-                i += 1;
-            }
-        }
+            .push((self.clock, batch.decode_tokens()));
+        self.apply(&batch);
         Ok(Some(rep))
     }
 
@@ -299,7 +607,7 @@ impl<E: StepExecutor> ServingEngine<E> {
     }
 
     /// Serve until every submitted request finishes (or `max_steps`).
-    /// Returns the number of decode steps executed.
+    /// Returns the number of steps executed.
     pub fn run_to_completion(&mut self, max_steps: usize) -> Result<usize> {
         let mut steps = 0;
         while steps < max_steps {
@@ -315,15 +623,24 @@ impl<E: StepExecutor> ServingEngine<E> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::MoeModel;
+    use crate::placement::memory::{activation_bytes, kv_bytes_per_token, weights_per_rank};
     use crate::workload::Dataset;
 
-    /// Deterministic mock backend: fixed latency per step, `cap` slots.
+    /// Deterministic mock backend: fixed latency per step, `cap` slots,
+    /// optional chunking/budget/memory for the composition tests.
     struct MockExecutor {
         cap: usize,
         step_latency: f64,
         prefill_latency: f64,
+        chunk: usize,
+        budget_tokens: usize,
         begun: Vec<u64>,
         retired: Vec<u64>,
+        /// (req, offset, tokens, is_last) of every executed chunk.
+        chunks_seen: Vec<(u64, usize, usize, bool)>,
+        max_batch_tokens: usize,
+        mem: Option<MemoryManager>,
     }
 
     impl MockExecutor {
@@ -332,8 +649,13 @@ mod tests {
                 cap,
                 step_latency: 1.0,
                 prefill_latency: 0.5,
+                chunk: usize::MAX,
+                budget_tokens: usize::MAX,
                 begun: Vec::new(),
                 retired: Vec::new(),
+                chunks_seen: Vec::new(),
+                max_batch_tokens: 0,
+                mem: None,
             }
         }
     }
@@ -345,22 +667,35 @@ mod tests {
         fn capacity(&self) -> usize {
             self.cap
         }
+        fn token_budget(&self) -> usize {
+            self.budget_tokens
+        }
+        fn prefill_chunk(&self) -> usize {
+            self.chunk
+        }
+        fn memory(&mut self) -> Option<&mut MemoryManager> {
+            self.mem.as_mut()
+        }
         fn begin(&mut self, req: &Request) -> Result<usize> {
             self.begun.push(req.id);
             Ok(req.max_new_tokens.max(1))
         }
-        fn prefill(&mut self, group: &[Request], _active: &[ActiveEntry]) -> Result<StepReport> {
+        fn execute(&mut self, batch: &BatchComposition) -> Result<StepReport> {
+            for c in &batch.prefill {
+                self.chunks_seen.push((c.req_id, c.offset, c.tokens, c.is_last));
+            }
+            self.max_batch_tokens = self.max_batch_tokens.max(batch.total_tokens());
+            let latency = if batch.prefill.is_empty() {
+                self.step_latency
+            } else if batch.decode.is_empty() {
+                self.prefill_latency
+            } else {
+                self.step_latency + self.prefill_latency
+            };
             Ok(StepReport {
-                latency: self.prefill_latency,
-                tokens: group.iter().map(|r| r.prompt_len).sum(),
-                ir_samples: vec![1.0],
-            })
-        }
-        fn decode(&mut self, active: &[ActiveEntry]) -> Result<StepReport> {
-            Ok(StepReport {
-                latency: self.step_latency,
-                tokens: active.len(),
-                ir_samples: vec![1.5],
+                latency,
+                tokens: batch.total_tokens(),
+                ir_samples: vec![if batch.decode.is_empty() { 1.0 } else { 1.5 }],
             })
         }
         fn retire(&mut self, req: &Request) {
@@ -387,8 +722,8 @@ mod tests {
             e.submit(req(i, 0.0, 4));
         }
         let steps = e.run_to_completion(100).unwrap();
-        // each request needs 3 decode steps after the prefill token
-        assert_eq!(steps, 3);
+        // one shared prefill step, then 3 decode steps per request
+        assert_eq!(steps, 4);
         assert_eq!(e.active_count(), 0);
         assert_eq!(e.pending(), 0);
         assert_eq!(e.executor.begun, vec![0, 1, 2]);
@@ -467,8 +802,132 @@ mod tests {
         let mut e = ServingEngine::from_executor(MockExecutor::new(2));
         e.submit(req(0, 0.0, 3));
         e.run_to_completion(10).unwrap();
-        // one prefill sample + one per decode step
+        // one prefill-step sample + one per decode step
         assert!(e.ir.per_step.len() >= 3);
         assert!(e.ir.mean() >= 1.0);
+    }
+
+    #[test]
+    fn chunked_prefill_conserves_tokens_and_emits_first_token_on_last_chunk() {
+        let mut exec = MockExecutor::new(4);
+        exec.chunk = 4;
+        let mut e = ServingEngine::from_executor(exec);
+        let mut r = req(0, 0.0, 2);
+        r.prompt_len = 10;
+        e.submit(r);
+        e.run_to_completion(20).unwrap();
+        // chunks: (0,4) (4,4) (8,2 last) — contiguous, conserving tokens
+        let chunks = &e.executor.chunks_seen;
+        assert_eq!(chunks.len(), 3, "{chunks:?}");
+        let mut covered = 0usize;
+        for (i, &(id, offset, tokens, is_last)) in chunks.iter().enumerate() {
+            assert_eq!(id, 0);
+            assert_eq!(offset, covered, "chunks must be contiguous");
+            covered += tokens;
+            assert_eq!(is_last, i == chunks.len() - 1);
+        }
+        assert_eq!(covered, 10, "prefill must conserve prompt tokens");
+        // the first token appears only when the LAST chunk lands: two
+        // chunk-only steps at 0.5 each precede it
+        let ttft = e.metrics.requests[0].ttft().unwrap();
+        assert!((ttft - 1.5).abs() < 1e-12, "ttft {ttft}");
+    }
+
+    #[test]
+    fn token_budget_bounds_every_step() {
+        let mut exec = MockExecutor::new(4);
+        exec.budget_tokens = 6;
+        let mut e = ServingEngine::from_executor(exec);
+        for i in 0..2u64 {
+            let mut r = req(i, 0.0, 2);
+            r.prompt_len = 8;
+            e.submit(r);
+        }
+        e.run_to_completion(30).unwrap();
+        assert!(
+            e.executor.max_batch_tokens <= 6,
+            "budget exceeded: {}",
+            e.executor.max_batch_tokens
+        );
+        // both prompts fully covered despite interleaved chunking
+        for id in 0..2u64 {
+            let total: usize = e
+                .executor
+                .chunks_seen
+                .iter()
+                .filter(|&&(r, _, _, _)| r == id)
+                .map(|&(_, _, t, _)| t)
+                .sum();
+            assert_eq!(total, 8, "request {id} prefill tokens not conserved");
+        }
+        assert!(e.metrics.requests.iter().all(|m| m.finished.is_some()));
+    }
+
+    /// Build a one-rank governor whose pool holds `kv_pool` KV rows on
+    /// top of weights and an activation allowance of 16 in-flight
+    /// tokens.
+    fn tiny_memory(kv_pool: usize) -> MemoryManager {
+        let m = MoeModel::small_real();
+        let cap = weights_per_rank(&m, 1)
+            + activation_bytes(&m, 16)
+            + kv_pool as f64 * kv_bytes_per_token(&m);
+        MemoryManager::new(&m, 1, cap, 3, 0.0, 16, true)
+    }
+
+    #[test]
+    fn memory_pressure_preempts_and_recovers() {
+        let mk = || {
+            let mut exec = MockExecutor::new(4);
+            exec.chunk = 4; // small chunks keep the activation watermark low
+            exec.mem = Some(tiny_memory(40));
+            let mut e = ServingEngine::from_executor(exec);
+            for i in 0..2u64 {
+                let mut r = req(i, 0.0, 40);
+                r.prompt_len = 20;
+                e.submit(r);
+            }
+            e.run_to_completion(500).unwrap();
+            e
+        };
+        let e = mk();
+        // both requests fit one at a time but not together at full
+        // context: someone must have been preempted, and everyone
+        // still completes via recompute
+        assert!(e.metrics.preemptions > 0, "no preemption under pressure");
+        assert!(
+            e.metrics.requests.iter().all(|m| m.finished.is_some()),
+            "preempted request never completed"
+        );
+        for m in &e.metrics.requests {
+            assert_eq!(m.tokens_out, 40);
+        }
+        // the governor's breakdown must fit after the run (all released)
+        let mut e = e;
+        let mm = e.executor.memory().unwrap();
+        assert!(mm.breakdown(0).fits());
+        assert_eq!(mm.total_kv_tokens(), 0.0, "retirement must release KV");
+        // bit-determinism: preemption decisions replay identically
+        let e2 = mk();
+        assert_eq!(e.clock.to_bits(), e2.clock.to_bits());
+        assert_eq!(e.metrics.preemptions, e2.metrics.preemptions);
+        let per_req = |e: &ServingEngine<MockExecutor>| -> Vec<(Option<f64>, Option<f64>)> {
+            e.metrics
+                .requests
+                .iter()
+                .map(|m| (m.first_token, m.finished))
+                .collect()
+        };
+        assert_eq!(per_req(&e), per_req(&e2));
+    }
+
+    #[test]
+    fn unadmittable_request_on_idle_engine_errors() {
+        let mut exec = MockExecutor::new(4);
+        exec.mem = Some(tiny_memory(8));
+        let mut e = ServingEngine::from_executor(exec);
+        let mut r = req(0, 0.0, 4);
+        r.prompt_len = 4096; // can never fit the 8-row pool
+        e.submit(r);
+        assert!(e.step().is_err(), "impossible admission must fail loudly");
     }
 }

@@ -1,13 +1,21 @@
 //! Real-model executor: continuous batching over the PJRT engine.
 //!
 //! Executes the small MoE transformer built by `python/compile` — real
-//! prefill chunks, real decode steps, greedy sampling, KV-cache slot
-//! management — and feeds the *real* router traces into the PROBE
-//! metrics/balancer stack (IR tracking at a virtual EP size, predictor
-//! fidelity). The request lifecycle itself lives in the generic
-//! [`ServingEngine`]; this module only owns backend state.
+//! chunked prefill riding alongside real decode steps inside one mixed
+//! [`BatchComposition`], greedy sampling, KV-cache slot management — and
+//! feeds the *real* router traces into the PROBE metrics/balancer stack
+//! (IR tracking at a virtual EP size, predictor fidelity). The request
+//! lifecycle itself lives in the generic [`ServingEngine`]; this module
+//! only owns backend state.
+//!
+//! Chunked prefill is stateful here: in-flight prompts occupy rows of a
+//! persistent prefill KV buffer (the artifact's fixed `[Bp, S]` shape)
+//! across steps, and a sequence's rows migrate into its decode slot when
+//! its final chunk lands — which is also when its first token is
+//! sampled, so TTFT is the completion of the last chunk in the shared
+//! step stream.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
 use anyhow::{anyhow, Result};
 
@@ -20,7 +28,7 @@ use crate::util::stats::imbalance_ratio;
 use crate::util::Rng;
 use crate::workload::Request;
 
-use super::{ActiveEntry, ServingEngine, StepExecutor, StepReport};
+use super::{BatchComposition, ServingEngine, StepExecutor, StepReport};
 
 /// A decode slot holding one active sequence's sampling state.
 #[derive(Debug, Clone)]
@@ -52,9 +60,14 @@ pub struct RealExecutor {
     pub engine: Engine,
     batch: usize,
     kv: Vec<f32>,
+    /// Persistent prefill KV buffer ([prefill_batch] sequences) shared
+    /// by all in-flight chunked prefills.
+    pkv: Vec<f32>,
+    /// Which request occupies each prefill row (None = free).
+    prefill_rows: Vec<Option<u64>>,
     slots: Vec<Option<Slot>>,
-    /// Prompt tokens awaiting admission, keyed by request id (provided
-    /// via `submit_with_prompt` or synthesized at `begin`).
+    /// Prompt tokens awaiting/undergoing prefill, keyed by request id
+    /// (provided via `submit_with_prompt` or synthesized at `begin`).
     prompts: HashMap<u64, Vec<i32>>,
     /// Predictor-fidelity accumulators over live traffic (Fig. 10).
     pub fidelity: FidelityAccum,
@@ -73,12 +86,16 @@ impl RealExecutor {
     pub fn new(engine: Engine, virtual_ep: usize, seed: u64) -> RealExecutor {
         let batch = engine.pick_batch(8);
         let kv = vec![0.0; engine.cfg().kv_len(batch)];
+        let pkv = vec![0.0; engine.cfg().kv_len(engine.cfg().prefill_batch)];
+        let prefill_rows = vec![None; engine.cfg().prefill_batch];
         let n_layers = engine.cfg().n_layers;
         let n_experts = engine.cfg().n_experts;
         RealExecutor {
             engine,
             batch,
             kv,
+            pkv,
+            prefill_rows,
             slots: (0..batch).map(|_| None).collect(),
             prompts: HashMap::new(),
             fidelity: FidelityAccum {
@@ -168,127 +185,92 @@ impl RealExecutor {
         }
     }
 
-    /// Mean per-layer predictor fidelity accumulated so far.
-    pub fn fidelity_report(&self) -> Vec<(usize, f64, f64)> {
-        (1..self.engine.cfg().n_layers)
-            .map(|l| {
-                let t = &self.fidelity.trained[l];
-                let p = &self.fidelity.prior[l];
-                (l, t.top_k_accuracy, p.top_k_accuracy)
-            })
-            .collect()
-    }
-
-    /// Mean per-layer count-level fidelity of the online transition
-    /// predictor (layers with at least one sample).
-    pub fn transition_fidelity_report(&self) -> Vec<(usize, f64)> {
-        (1..self.engine.cfg().n_layers)
-            .filter(|&l| self.fidelity.transition_n[l] > 0)
-            .map(|l| (l, self.fidelity.transition_cf[l]))
-            .collect()
-    }
-}
-
-impl StepExecutor for RealExecutor {
-    fn name(&self) -> &'static str {
-        "pjrt"
-    }
-
-    fn capacity(&self) -> usize {
-        self.batch
-    }
-
-    fn prefill_group_limit(&self) -> usize {
-        self.engine.cfg().prefill_batch
-    }
-
-    fn begin(&mut self, req: &Request) -> Result<usize> {
-        let plen = match self.prompts.get(&req.id) {
-            Some(p) => p.len(),
-            None => {
-                let p = self.synth_prompt(req.domain, req.prompt_len.max(1));
-                let len = p.len();
-                self.prompts.insert(req.id, p);
-                len
-            }
-        };
-        let cap = self.engine.cfg().max_seq.saturating_sub(plen + 1).max(1);
-        Ok(req.max_new_tokens.max(1).min(cap))
-    }
-
-    /// Real chunked prefill of an admission group. The prefill artifact
-    /// runs `[Bp, S]`; each prefilled sequence's KV rows are migrated
-    /// into its decode cache slot.
-    fn prefill(&mut self, group: &[Request], _active: &[ActiveEntry]) -> Result<StepReport> {
+    /// Run this step's prefill chunks through one `[Bp, S]` artifact
+    /// call: rows with a chunk advance at their offsets; idle in-flight
+    /// rows re-run harmlessly (their next real chunk overwrites the
+    /// same KV region). Completed sequences migrate into decode slots.
+    fn run_prefill(&mut self, batch: &BatchComposition) -> Result<(f64, Vec<f64>)> {
         let cfg = self.engine.cfg().clone();
-        // read (don't consume) the stored prompts: on a transient PJRT
-        // error the engine re-queues the group, and the retry must use
-        // the same client-supplied tokens, not a fresh synthesis
-        let prompts: Vec<Vec<i32>> = group
-            .iter()
-            .map(|r| self.prompts.get(&r.id).cloned().unwrap_or_default())
-            .collect();
-        let longest = prompts.iter().map(|p| p.len()).max().unwrap_or(0);
-        let mut pkv = vec![0.0f32; cfg.kv_len(cfg.prefill_batch)];
-        let mut start = 0usize;
-        let mut last_logits: Vec<f32> = Vec::new();
-        let mut latency = 0.0;
-        let mut irs = Vec::new();
-        while start < longest {
-            let s = cfg.prefill_chunk;
-            let mut tokens = vec![0i32; cfg.prefill_batch * s];
-            for (bi, prompt) in prompts.iter().enumerate() {
-                for j in 0..s {
-                    let p = start + j;
-                    tokens[bi * s + j] = if p < prompt.len() { prompt[p] } else { 0 };
+        let s = cfg.prefill_chunk;
+        // assign rows to chunks that do not have one yet
+        for c in &batch.prefill {
+            if !self.prefill_rows.contains(&Some(c.req_id)) {
+                let row = self
+                    .prefill_rows
+                    .iter()
+                    .position(|r| r.is_none())
+                    .ok_or_else(|| anyhow!("no free prefill row for request {}", c.req_id))?;
+                self.prefill_rows[row] = Some(c.req_id);
+            }
+        }
+        let mut toks = vec![0i32; cfg.prefill_batch * s];
+        let mut start_pos = vec![0i32; cfg.prefill_batch];
+        for (row, occ) in self.prefill_rows.iter().enumerate() {
+            let Some(id) = occ else { continue };
+            let Some(c) = batch.prefill.iter().find(|c| c.req_id == *id) else {
+                continue;
+            };
+            start_pos[row] = c.offset as i32;
+            // tokens beyond the chunk (or the prompt) pad with zeros —
+            // the same padding tolerance the one-shot prefill had
+            let prompt: &[i32] = self.prompts.get(id).map(|p| p.as_slice()).unwrap_or(&[]);
+            for j in 0..s.min(c.tokens) {
+                let p = c.offset + j;
+                if p < prompt.len() {
+                    toks[row * s + j] = prompt[p];
                 }
             }
-            let start_pos = vec![start as i32; cfg.prefill_batch];
-            let out = self.engine.prefill_chunk(&tokens, &start_pos, &mut pkv)?;
-            latency += out.exec_time;
-            irs.extend(self.prefill_irs(
-                &out.actual_idx,
-                cfg.n_layers,
-                cfg.prefill_batch,
-                s,
-                cfg.top_k,
-                cfg.n_experts,
-            ));
-            last_logits = out.logits_last;
-            start += s;
         }
-        // migrate each prefilled sequence into a decode slot
-        for (bi, req) in group.iter().enumerate() {
+        let out = self.engine.prefill_chunk(&toks, &start_pos, &mut self.pkv)?;
+        let irs = self.prefill_irs(
+            &out.actual_idx,
+            cfg.n_layers,
+            cfg.prefill_batch,
+            s,
+            cfg.top_k,
+            cfg.n_experts,
+        );
+        // completed prefills migrate into decode slots; their first
+        // token is sampled from the final chunk's last logits
+        for c in batch.prefill.iter().filter(|c| c.is_last) {
+            let row = self
+                .prefill_rows
+                .iter()
+                .position(|r| *r == Some(c.req_id))
+                .expect("completing chunk lost its prefill row");
+            let used = c.offset + c.tokens;
             let slot = self
                 .free_slot()
-                .ok_or_else(|| anyhow!("no free decode slot at prefill"))?;
-            self.migrate_kv(&pkv, bi, slot, prompts[bi].len());
-            let first_tok = if last_logits.is_empty() {
+                .ok_or_else(|| anyhow!("no free decode slot at prefill completion"))?;
+            let pkv_local = std::mem::take(&mut self.pkv);
+            self.migrate_kv(&pkv_local, row, slot, used);
+            self.pkv = pkv_local;
+            let first_tok = if out.logits_last.is_empty() {
                 0
             } else {
-                argmax(&last_logits[bi * cfg.vocab..(bi + 1) * cfg.vocab]) as i32
+                argmax(&out.logits_last[row * cfg.vocab..(row + 1) * cfg.vocab]) as i32
             };
             self.slots[slot] = Some(Slot {
-                req_id: req.id,
-                pos: prompts[bi].len(),
+                req_id: c.req_id,
+                pos: used,
                 last_token: first_tok,
             });
+            self.prefill_rows[row] = None;
+            self.prompts.remove(&c.req_id);
         }
-        for req in group {
-            self.prompts.remove(&req.id);
-        }
-        Ok(StepReport {
-            latency,
-            tokens: prompts.iter().map(|p| p.len()).sum(),
-            ir_samples: irs,
-        })
+        Ok((out.exec_time, irs))
     }
 
-    /// One real decode step over all held slots; the engine does the
-    /// token bookkeeping and retirement.
-    fn decode(&mut self, _active: &[ActiveEntry]) -> Result<StepReport> {
+    /// One real decode step advancing only the sequences in the batch's
+    /// decode set (freshly-migrated sequences wait for their next step).
+    fn run_decode(&mut self, batch: &BatchComposition) -> Result<(f64, Vec<f64>, usize)> {
         let cfg = self.engine.cfg().clone();
-        let n_active = self.slots.iter().filter(|s| s.is_some()).count();
+        let decode_ids: HashSet<u64> = batch.decode.iter().map(|d| d.req_id).collect();
+        let n_active = self
+            .slots
+            .iter()
+            .filter(|s| s.as_ref().is_some_and(|x| decode_ids.contains(&x.req_id)))
+            .count();
         if n_active == 0 {
             return Err(anyhow!("decode with no active slots"));
         }
@@ -353,16 +335,90 @@ impl StepExecutor for RealExecutor {
         }
         self.fidelity.samples += 1;
 
-        // --- greedy sampling + slot advance ---
+        // --- greedy sampling + slot advance (decode set only) ---
         for i in 0..self.batch {
             let Some(slot) = &mut self.slots[i] else { continue };
+            if !decode_ids.contains(&slot.req_id) {
+                continue;
+            }
             let logits = &out.logits[i * cfg.vocab..(i + 1) * cfg.vocab];
             slot.last_token = argmax(logits) as i32;
             slot.pos += 1;
         }
+        Ok((out.exec_time, irs, n_active))
+    }
+
+    /// Mean per-layer predictor fidelity accumulated so far.
+    pub fn fidelity_report(&self) -> Vec<(usize, f64, f64)> {
+        (1..self.engine.cfg().n_layers)
+            .map(|l| {
+                let t = &self.fidelity.trained[l];
+                let p = &self.fidelity.prior[l];
+                (l, t.top_k_accuracy, p.top_k_accuracy)
+            })
+            .collect()
+    }
+
+    /// Mean per-layer count-level fidelity of the online transition
+    /// predictor (layers with at least one sample).
+    pub fn transition_fidelity_report(&self) -> Vec<(usize, f64)> {
+        (1..self.engine.cfg().n_layers)
+            .filter(|&l| self.fidelity.transition_n[l] > 0)
+            .map(|l| (l, self.fidelity.transition_cf[l]))
+            .collect()
+    }
+}
+
+impl StepExecutor for RealExecutor {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn capacity(&self) -> usize {
+        self.batch
+    }
+
+    fn prefill_chunk(&self) -> usize {
+        self.engine.cfg().prefill_chunk
+    }
+
+    fn max_prefilling(&self) -> usize {
+        self.engine.cfg().prefill_batch
+    }
+
+    fn begin(&mut self, req: &Request) -> Result<usize> {
+        let plen = match self.prompts.get(&req.id) {
+            Some(p) => p.len(),
+            None => {
+                let p = self.synth_prompt(req.domain, req.prompt_len.max(1));
+                let len = p.len();
+                self.prompts.insert(req.id, p);
+                len
+            }
+        };
+        let cap = self.engine.cfg().max_seq.saturating_sub(plen + 1).max(1);
+        Ok(req.max_new_tokens.max(1).min(cap))
+    }
+
+    fn execute(&mut self, batch: &BatchComposition) -> Result<StepReport> {
+        let mut latency = 0.0;
+        let mut irs: Vec<f64> = Vec::new();
+        let mut tokens = 0usize;
+        if !batch.prefill.is_empty() {
+            let (t, ir) = self.run_prefill(batch)?;
+            latency += t;
+            irs.extend(ir);
+            tokens += batch.prefill_tokens();
+        }
+        if !batch.decode.is_empty() {
+            let (t, ir, n) = self.run_decode(batch)?;
+            latency += t;
+            irs.extend(ir);
+            tokens += n;
+        }
         Ok(StepReport {
-            latency: out.exec_time,
-            tokens: n_active,
+            latency,
+            tokens,
             ir_samples: irs,
         })
     }
@@ -371,6 +427,11 @@ impl StepExecutor for RealExecutor {
         for s in self.slots.iter_mut() {
             if s.as_ref().is_some_and(|x| x.req_id == req.id) {
                 *s = None;
+            }
+        }
+        for r in self.prefill_rows.iter_mut() {
+            if *r == Some(req.id) {
+                *r = None;
             }
         }
         self.prompts.remove(&req.id);

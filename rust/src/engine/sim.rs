@@ -1,34 +1,45 @@
-//! Simulator-backed executor: routes each step through the synthetic
-//! [`RoutingModel`], lets a [`Balancer`] decide placement/assignment,
-//! and executes on the discrete-event [`ClusterSim`] (the stand-in for
-//! the paper's 8×Hopper testbed).
+//! Simulator-backed executor: routes each composed mixed batch through
+//! the synthetic [`RoutingModel`], lets a [`Balancer`] decide placement/
+//! assignment under the memory governor's live replica caps, and
+//! executes on the discrete-event [`ClusterSim`] (the stand-in for the
+//! paper's 8×Hopper testbed).
+//!
+//! Every step is a memory-checked mixed batch (ISSUE 5): prefill chunks
+//! ride alongside decode tokens, attention is charged for the batch's
+//! actual per-request context distribution, and the per-rank
+//! [`MemoryManager`] bounds both admission (KV + activation watermark)
+//! and the replica slots the balancer may fetch.
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::balancers::{decide_step, Balancer};
 use crate::config::Config;
+use crate::placement::memory::MemoryManager;
 use crate::routing::RoutingModel;
 use crate::simulator::{ClusterSim, StepOutcome};
-use crate::workload::Request;
+use crate::workload::{Dataset, Request};
 
-use super::{ActiveEntry, ServingEngine, StepExecutor, StepReport};
+use super::{BatchComposition, ServingEngine, StepExecutor, StepReport};
 
-/// Effective KV rows read per prefill query token (multi-K contexts after
-/// GQA-8 sharing and flash tile reuse) vs the decode default of 64.
-pub const PREFILL_EFFECTIVE_CTX: usize = 192;
+pub use super::batch::PREFILL_EFFECTIVE_CTX;
 
 /// Paper-scale serving backend over the cluster simulator.
 pub struct SimExecutor {
-    /// Serving configuration (model, cluster, batch shape).
+    /// Serving configuration (model, cluster, batch shape, memory).
     pub cfg: Config,
     /// The discrete-event cluster simulator.
     pub sim: ClusterSim,
     /// Synthetic semantic routing model driving token→expert choices.
     pub routing_model: RoutingModel,
+    /// Per-rank HBM governor gating admission and replica headroom.
+    pub memory: MemoryManager,
+    /// Replica caps published to the balancer at the last executed step
+    /// (test/bench observability of the plan-time bound).
+    pub last_replica_caps: Vec<usize>,
     balancer: Box<dyn Balancer>,
     step_idx: usize,
-    /// Full simulator outcome of the most recent decode step (the
-    /// generic [`StepReport`] keeps only the latency/IR aggregates).
+    /// Full simulator outcome of the most recent step (the generic
+    /// [`StepReport`] keeps only the latency/IR aggregates).
     pub last_outcome: Option<StepOutcome>,
 }
 
@@ -37,8 +48,8 @@ impl SimExecutor {
     /// drives the routing model.
     pub fn new(cfg: Config, balancer: Box<dyn Balancer>, seed: u64) -> SimExecutor {
         let mut sim = ClusterSim::new(cfg.model.clone(), cfg.cluster.clone());
-        // decode attention context: the balancer's hiding-window estimate
-        // is derived from the same config value (ISSUE 2 satellite)
+        // scalar decode context for direct run_step callers; engine
+        // steps carry the batch's real context profile instead
         sim.mean_ctx = cfg.mean_ctx;
         let routing_model = RoutingModel::calibrated(
             cfg.model.n_layers,
@@ -47,10 +58,54 @@ impl SimExecutor {
             4,
             seed,
         );
+        // The governor models the balancer's declared reservation shape
+        // (Balancer::replica_policy): EPLB's static per-layer
+        // placeholders cost n_layers × W per slot (the paper's Fig. 7
+        // OOM mechanism); PROBE's cyclic double buffer costs a flat
+        // 2 × W per redundant expert. Non-replicating baselines are
+        // priced at the default cyclic budget so the headroom they
+        // *could* grant stays comparable across balancers.
+        let w = cfg.model.expert_param_bytes();
+        let (max_slots, slot_cost) = match balancer.replica_policy() {
+            crate::placement::memory::ReplicaPolicy::StaticPerLayer { slots } => {
+                (slots, cfg.model.n_layers as f64 * w)
+            }
+            crate::placement::memory::ReplicaPolicy::CyclicBuffer { max_redundant } => {
+                (max_redundant, 2.0 * w)
+            }
+            crate::placement::memory::ReplicaPolicy::None => {
+                (cfg.probe.max_redundant, 2.0 * w)
+            }
+        };
+        let capacity = if cfg.memory.hbm_capacity_gb > 0.0 {
+            cfg.memory.hbm_capacity_gb * 1e9
+        } else {
+            cfg.cluster.profile.hbm_capacity
+        };
+        // the replica pool reserves against the engine's peak per-step
+        // watermark: the resolved token budget
+        let chunk_tokens = (cfg.prefill_chunk_per_rank * cfg.cluster.ep).max(1);
+        let act_reserve_tokens = if cfg.batch.token_budget > 0 {
+            cfg.batch.token_budget
+        } else {
+            cfg.global_batch().saturating_add(chunk_tokens)
+        };
+        let memory = MemoryManager::new(
+            &cfg.model,
+            cfg.cluster.ep,
+            capacity,
+            max_slots,
+            slot_cost,
+            act_reserve_tokens,
+            cfg.memory.enforce,
+        );
+        let ep = cfg.cluster.ep;
         SimExecutor {
             cfg,
             sim,
             routing_model,
+            memory,
+            last_replica_caps: vec![max_slots; ep],
             balancer,
             step_idx: 0,
             last_outcome: None,
@@ -61,62 +116,6 @@ impl SimExecutor {
     pub fn balancer_name(&self) -> &'static str {
         self.balancer.name()
     }
-
-    /// Route + balance + simulate one step of `tokens` tokens. The
-    /// domain mixture follows the active set (continuous batching) or
-    /// the hint when nothing is decoding (pure prefill).
-    fn routed_step(
-        &mut self,
-        tokens: usize,
-        domain_hint: u16,
-        active: &[ActiveEntry],
-    ) -> StepOutcome {
-        let domains: Vec<u16> = if active.is_empty() {
-            vec![domain_hint; tokens]
-        } else {
-            (0..tokens)
-                .map(|i| active[i % active.len()].req.domain)
-                .collect()
-        };
-        let routing = self.routing_model.route_step(&domains);
-        let decisions = decide_step(self.balancer.as_mut(), self.step_idx, &routing);
-        let outcome = self.sim.run_step(&routing, &decisions);
-        self.step_idx += 1;
-        outcome
-    }
-
-    /// Chunked prefill of `total_tokens`; returns (latency, first-layer
-    /// IR per chunk). Shared by admission and [`measure_prefill`].
-    fn prefill_chunks(
-        &mut self,
-        total_tokens: usize,
-        domain: u16,
-        active: &[ActiveEntry],
-    ) -> (f64, Vec<f64>) {
-        let chunk = self.cfg.prefill_chunk_per_rank * self.cfg.cluster.ep;
-        let decode_ctx = self.sim.mean_ctx;
-        self.sim.mean_ctx = PREFILL_EFFECTIVE_CTX;
-        let mut remaining = total_tokens;
-        let mut latency = 0.0;
-        let mut irs = Vec::new();
-        while remaining > 0 {
-            let this = remaining.min(chunk);
-            let outcome = self.routed_step(this.max(1), domain, active);
-            latency += outcome.latency;
-            if let Some(ir) = outcome.ir_per_layer.first() {
-                irs.push(*ir);
-            }
-            remaining -= this;
-        }
-        self.sim.mean_ctx = decode_ctx;
-        (latency, irs)
-    }
-
-    /// Prefill latency (TTFT component) for a standalone prompt of
-    /// `total_tokens` processed in chunks (Fig. 7).
-    pub fn measure_prefill(&mut self, total_tokens: usize, domain: u16) -> (f64, Vec<f64>) {
-        self.prefill_chunks(total_tokens, domain, &[])
-    }
 }
 
 impl StepExecutor for SimExecutor {
@@ -125,31 +124,55 @@ impl StepExecutor for SimExecutor {
     }
 
     fn capacity(&self) -> usize {
-        self.cfg.global_batch()
+        if self.cfg.batch.max_active > 0 {
+            self.cfg.batch.max_active
+        } else {
+            self.cfg.global_batch()
+        }
+    }
+
+    fn token_budget(&self) -> usize {
+        if self.cfg.batch.token_budget > 0 {
+            self.cfg.batch.token_budget
+        } else {
+            // a saturated decode set still admits one prefill chunk
+            self.cfg.global_batch().saturating_add(self.prefill_chunk())
+        }
+    }
+
+    fn prefill_chunk(&self) -> usize {
+        (self.cfg.prefill_chunk_per_rank * self.cfg.cluster.ep).max(1)
+    }
+
+    fn memory(&mut self) -> Option<&mut MemoryManager> {
+        Some(&mut self.memory)
     }
 
     fn begin(&mut self, req: &Request) -> Result<usize> {
         Ok(req.max_new_tokens.max(1))
     }
 
-    fn prefill(&mut self, group: &[Request], active: &[ActiveEntry]) -> Result<StepReport> {
-        // group limit is 1: per-request chunked prefill
-        let req = &group[0];
-        let (latency, ir_samples) = self.prefill_chunks(req.prompt_len, req.domain, active);
-        Ok(StepReport {
-            latency,
-            tokens: req.prompt_len,
-            ir_samples,
-        })
-    }
-
-    fn decode(&mut self, active: &[ActiveEntry]) -> Result<StepReport> {
-        let domains: Vec<u16> = active.iter().map(|a| a.req.domain).collect();
+    fn execute(&mut self, batch: &BatchComposition) -> Result<StepReport> {
+        let domains = batch.domains();
+        if domains.is_empty() {
+            return Err(anyhow!("executed an empty batch"));
+        }
         let routing = self.routing_model.route_step(&domains);
+        // publish the live replica headroom and the next step's scale
+        // before the control plane plans this step's fetches
+        let caps = self.memory.replica_caps();
+        self.balancer.set_replica_caps(&caps);
+        self.last_replica_caps = caps;
+        self.balancer.set_next_step_tokens(batch.next_tokens_hint.max(1));
         let decisions = decide_step(self.balancer.as_mut(), self.step_idx, &routing);
-        let outcome = self.sim.run_step(&routing, &decisions);
+        let profile = batch.context_profile();
+        let outcome = self.sim.run_step_ctx(&routing, &decisions, Some(&profile));
         self.step_idx += 1;
-        self.routing_model.step_drift();
+        if !batch.decode.is_empty() {
+            // semantic drift advances with decode progress, as before
+            // the mixed-step refactor (pure-prefill steps do not drift)
+            self.routing_model.step_drift();
+        }
         let rep = StepReport {
             latency: outcome.latency,
             tokens: outcome.tokens,
@@ -173,14 +196,14 @@ impl ServingEngine<SimExecutor> {
         self.executor.balancer_name()
     }
 
-    /// One decode step, returning the full simulator outcome (timelines,
-    /// per-layer IR) or `None` when drained.
+    /// One serving step, returning the full simulator outcome
+    /// (timelines, per-layer IR) or `None` when drained.
     pub fn decode_step(&mut self) -> Option<StepOutcome> {
-        let rep = self.step().expect("sim executor is infallible");
+        let rep = self.step().expect("sim executor step failed");
         rep.and_then(|_| self.executor.last_outcome.take())
     }
 
-    /// Run `n` decode steps (stops early when the system drains).
+    /// Run `n` serving steps (stops early when the system drains).
     pub fn run_decode_steps(&mut self, n: usize) -> Vec<StepOutcome> {
         let mut out = Vec::with_capacity(n);
         for _ in 0..n {
@@ -192,14 +215,26 @@ impl ServingEngine<SimExecutor> {
         out
     }
 
-    /// Measure prefill latency for `total_tokens` of `domain` (Fig. 7),
-    /// recording IR samples without advancing the serving clock.
-    pub fn measure_prefill(&mut self, total_tokens: usize, domain: u16) -> f64 {
-        let (latency, irs) = self.executor.measure_prefill(total_tokens, domain);
-        for ir in irs {
-            self.ir.push_ir(ir);
-        }
-        latency
+    /// TTFT of a standalone prompt of `total_tokens` in `domain`,
+    /// measured through the real mixed-step path (Fig. 7): submit one
+    /// request, chunk its prefill through shared steps, and read the
+    /// completion time of its final chunk. Replaces the retired
+    /// out-of-band `measure_prefill`.
+    pub fn prefill_ttft(&mut self, total_tokens: usize, domain: u16) -> f64 {
+        let id = 0x5EED_0000 + self.metrics.requests.len() as u64;
+        let midx = self.metrics.requests.len();
+        self.submit(Request {
+            id,
+            tenant: 0,
+            domain,
+            dataset: Dataset::Mixed,
+            prompt_len: total_tokens.max(1),
+            max_new_tokens: 1,
+            arrival: self.clock,
+        });
+        self.run_to_completion(1_000_000)
+            .expect("prefill measurement failed");
+        self.metrics.requests[midx].ttft().unwrap_or(0.0)
     }
 }
 
@@ -269,14 +304,15 @@ mod tests {
     }
 
     #[test]
-    fn prefill_latency_scales_with_tokens() {
+    fn prefill_ttft_scales_with_tokens() {
         let cfg = small_cfg();
         let bal = Box::new(StaticEp::new(&cfg));
         let mut c = Coordinator::new(cfg.clone(), bal, 5);
-        let t_small = c.measure_prefill(2048, 0);
+        let t_small = c.prefill_ttft(2048, 0);
         let bal2 = Box::new(StaticEp::new(&cfg));
         let mut c2 = Coordinator::new(cfg, bal2, 5);
-        let t_big = c2.measure_prefill(16384, 0);
+        let t_big = c2.prefill_ttft(16384, 0);
+        assert!(t_small > 0.0);
         assert!(t_big > t_small * 2.0, "{t_small} vs {t_big}");
     }
 
@@ -289,7 +325,7 @@ mod tests {
             for r in g.take(512) {
                 c.submit(r);
             }
-            c.run_decode_steps(12);
+            c.run_decode_steps(24);
             c.metrics.throughput()
         };
         let thr_static = run(Box::new(StaticEp::new(&cfg)));
@@ -313,5 +349,54 @@ mod tests {
         assert!(!out.timelines.is_empty());
         assert!(out.latency > 0.0);
         assert!(!out.ir_per_layer.is_empty());
+    }
+
+    #[test]
+    fn prefill_rides_alongside_decode_in_shared_steps() {
+        // with a small chunk, a long prompt must take several steps and
+        // decode must keep flowing during them (continuous batching)
+        let mut cfg = small_cfg();
+        cfg.prefill_chunk_per_rank = 16; // 128-token chunks
+        let bal = Box::new(StaticEp::new(&cfg));
+        let mut c = Coordinator::new(cfg, bal, 13);
+        // short request first: decoding by the time the long one arrives
+        let mut short = gen(Dataset::Mixed, 5).take(1).remove(0);
+        short.prompt_len = 32;
+        short.max_new_tokens = 40;
+        short.arrival = 0.0;
+        c.submit(short);
+        let mut long = gen(Dataset::Mixed, 6).take(1).remove(0);
+        long.id = 999;
+        long.prompt_len = 640; // 5 chunks
+        long.max_new_tokens = 4;
+        long.arrival = 0.0;
+        c.submit(long);
+        c.run_decode_steps(80);
+        let m_short = &c.metrics.requests[0];
+        let m_long = &c.metrics.requests[1];
+        assert!(m_short.finished.is_some() && m_long.finished.is_some());
+        // the long prompt's TTFT covers its chunked prefill; the short
+        // request's first token lands earlier in the shared stream
+        assert!(m_long.ttft().unwrap() > m_short.ttft().unwrap());
+    }
+
+    #[test]
+    fn governor_defaults_do_not_bite_at_paper_capacity() {
+        // at the profile's real 141 GB the governor must be invisible:
+        // no preemptions, full replica caps
+        let cfg = small_cfg();
+        assert!(cfg.memory.enforce);
+        let bal = Box::new(StaticEp::new(&cfg));
+        let mut c = Coordinator::new(cfg.clone(), bal, 17);
+        let mut g = gen(Dataset::Mixed, 7);
+        for r in g.take(32) {
+            c.submit(r);
+        }
+        c.run_decode_steps(60);
+        assert_eq!(c.metrics.preemptions, 0);
+        assert_eq!(
+            c.executor.last_replica_caps,
+            vec![cfg.probe.max_redundant; cfg.cluster.ep]
+        );
     }
 }

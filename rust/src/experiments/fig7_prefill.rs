@@ -5,6 +5,11 @@
 //! pressure OOMs under prefill and reactive transfers outweigh gains in
 //! the few prefill steps). Paper peak speedup: 1.32×, larger on the
 //! sparser GPT-OSS.
+//!
+//! Measured through the real mixed-step serving path
+//! (`Coordinator::prefill_ttft`): TTFT is the completion time of the
+//! request's final prefill chunk inside the shared step stream, not a
+//! separately-measured prefill.
 
 use crate::config::BalancerKind;
 use crate::coordinator::Coordinator;
@@ -45,7 +50,7 @@ fn prefill_latency(
     };
     let bal = make_balancer(kind, &cfg, seed);
     let mut c = Coordinator::new(cfg, bal, seed);
-    c.measure_prefill(total_tokens, 0) * scale
+    c.prefill_ttft(total_tokens, 0) * scale
 }
 
 /// Regenerate the Fig. 7 prefill-latency table.

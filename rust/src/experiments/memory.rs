@@ -1,0 +1,339 @@
+//! `probe bench memory` — memory-governance sweep (ISSUE 5).
+//!
+//! Runs {static, eplb, probe} × {short-ctx, long-ctx, prefill-burst} on
+//! the memory-governed serving engine and reports TTFT/TPOT percentiles,
+//! decode throughput, the preemption rate, and the replica-headroom
+//! utilization (fraction of the policy's replica budget the per-rank
+//! [`crate::placement::memory::MemoryManager`] could still grant,
+//! averaged over steps) → `bench_results/BENCH_memory.json`.
+//!
+//! The pressured cells derive their per-rank HBM capacity from the
+//! governor's own formulas (weights + activation reserve + a KV pool
+//! sized to a *fraction* of the scenario's concurrent demand), so the
+//! sweep is model-portable: long-ctx decode drains the replica headroom
+//! as KV grows, prefill-burst adds the activation watermark of large
+//! chunked prompts, short-ctx runs at the profile's full capacity as a
+//! control. Streams use fixed per-request lengths so the pressure
+//! fraction is exact. EPLB's static per-layer placeholders cost
+//! `n_layers × W` per slot, so its headroom collapses first — the
+//! paper's Fig. 7 exclusion measured live.
+
+use crate::config::{BalancerKind, Config};
+use crate::coordinator::Coordinator;
+use crate::placement::memory::{activation_bytes, kv_bytes_per_token, weights_per_rank};
+use crate::util::bench::BenchSet;
+use crate::util::stats::Summary;
+use crate::workload::{Dataset, Request};
+
+use super::{make_balancer, SIM_LAYERS};
+
+/// One memory scenario: fixed request shape plus how tight the KV pool
+/// is relative to the concurrent demand.
+#[derive(Debug, Clone)]
+pub struct MemoryScenario {
+    /// Cell label (`scenario` column).
+    pub name: String,
+    /// Prompt tokens per request (exact, not a distribution mean).
+    pub prompt: usize,
+    /// Decode tokens per request (exact).
+    pub new_tokens: usize,
+    /// KV pool as a fraction of the concurrent per-rank KV demand;
+    /// `0.0` = run at the hardware profile's full capacity (control).
+    pub pool_frac: f64,
+}
+
+impl MemoryScenario {
+    /// The paper-motivated default cells: a short-context control,
+    /// long-context decode (KV pressure), and a prefill-heavy burst
+    /// (activation + KV pressure).
+    pub fn presets() -> Vec<MemoryScenario> {
+        vec![
+            MemoryScenario {
+                name: "short-ctx".into(),
+                prompt: 64,
+                new_tokens: 32,
+                pool_frac: 0.0,
+            },
+            MemoryScenario {
+                name: "long-ctx".into(),
+                prompt: 4096,
+                new_tokens: 512,
+                pool_frac: 0.62,
+            },
+            MemoryScenario {
+                name: "prefill-burst".into(),
+                prompt: 8192,
+                new_tokens: 16,
+                pool_frac: 0.55,
+            },
+        ]
+    }
+}
+
+/// Sweep parameters.
+pub struct MemoryParams {
+    /// Scenario cells to run.
+    pub scenarios: Vec<MemoryScenario>,
+    /// Balancers to compare.
+    pub balancers: Vec<BalancerKind>,
+    /// Requests per cell (identical stream per scenario across
+    /// balancers).
+    pub requests: usize,
+    /// Decode tokens per rank (kept small so queueing is visible).
+    pub batch_per_rank: usize,
+    /// Chunked-prefill tokens per rank per step.
+    pub chunk_per_rank: usize,
+    /// Safety cap on steps per cell.
+    pub max_steps: usize,
+    /// Root seed (balancers derive from it).
+    pub seed: u64,
+}
+
+impl Default for MemoryParams {
+    fn default() -> Self {
+        MemoryParams {
+            scenarios: MemoryScenario::presets(),
+            balancers: vec![BalancerKind::StaticEp, BalancerKind::Eplb, BalancerKind::Probe],
+            requests: 48,
+            batch_per_rank: 8,
+            chunk_per_rank: 512,
+            max_steps: 20_000,
+            seed: 41,
+        }
+    }
+}
+
+/// Serving config for one scenario cell: SIM_LAYERS representative
+/// layers, small decode batch, and — for pressured scenarios — a
+/// per-rank HBM capacity derived from the governor's own formulas so
+/// the KV pool holds only `pool_frac` of the concurrent demand (with a
+/// floor of 1.15× one request, so a single request always fits and the
+/// engine can make progress; pressure comes from concurrency).
+pub fn scenario_cfg(s: &MemoryScenario, p: &MemoryParams) -> Config {
+    let mut cfg = Config::default();
+    cfg.model.n_layers = SIM_LAYERS;
+    cfg.batch_per_rank = p.batch_per_rank;
+    cfg.prefill_chunk_per_rank = p.chunk_per_rank;
+    if s.pool_frac > 0.0 {
+        let ep = cfg.cluster.ep;
+        let rows_per_req = (s.prompt + s.new_tokens) as f64;
+        let concurrency = p.requests.min(cfg.global_batch());
+        let per_rank = (concurrency as f64 / ep as f64).ceil().max(1.0);
+        let pool_rows = (s.pool_frac * per_rank * rows_per_req).max(1.15 * rows_per_req);
+        let budget_tokens = cfg.global_batch() + cfg.prefill_chunk_per_rank * ep;
+        let capacity = weights_per_rank(&cfg.model, ep)
+            + activation_bytes(&cfg.model, budget_tokens.div_ceil(ep))
+            + pool_rows * kv_bytes_per_token(&cfg.model);
+        cfg.memory.hbm_capacity_gb = capacity / 1e9;
+    }
+    cfg
+}
+
+/// The scenario's closed-loop request stream: fixed lengths, maximal
+/// semantic skew (the Repeat domain), identical across balancers.
+pub fn scenario_stream(s: &MemoryScenario, p: &MemoryParams) -> Vec<Request> {
+    (0..p.requests as u64)
+        .map(|id| Request {
+            id,
+            tenant: 0,
+            domain: 3, // Repeat collapses onto the last of 4 domains
+            dataset: Dataset::Repeat,
+            prompt_len: s.prompt,
+            max_new_tokens: s.new_tokens,
+            arrival: 0.0,
+        })
+        .collect()
+}
+
+/// Outcome of one (scenario, balancer) cell.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    /// Requests submitted.
+    pub submitted: usize,
+    /// Requests completed within the step cap.
+    pub completed: usize,
+    /// Steps executed.
+    pub steps: usize,
+    /// Aggregate decode throughput (tokens/s).
+    pub throughput: f64,
+    /// TTFT distribution (seconds).
+    pub ttft: Summary,
+    /// TPOT distribution (seconds).
+    pub tpot: Summary,
+    /// Preemptions over the run.
+    pub preemptions: usize,
+    /// Preemptions per executed step.
+    pub preempt_rate: f64,
+    /// Mean fraction of the policy's replica budget still grantable
+    /// (1.0 = full headroom, 0.0 = KV pressure exhausted it).
+    pub headroom_util: f64,
+}
+
+/// Serve one scenario stream under one balancer and collect the cell
+/// metrics.
+pub fn run_cell(
+    s: &MemoryScenario,
+    p: &MemoryParams,
+    kind: BalancerKind,
+    reqs: &[Request],
+) -> CellResult {
+    let cfg = scenario_cfg(s, p);
+    let bal = make_balancer(kind, &cfg, p.seed);
+    let mut c = Coordinator::new(cfg, bal, p.seed);
+    c.submit_all(reqs.iter().cloned());
+    let max_slots = c.executor.memory.max_slots().max(1);
+    let mut steps = 0usize;
+    let mut headroom_acc = 0.0;
+    while steps < p.max_steps {
+        if c.decode_step().is_none() {
+            break;
+        }
+        steps += 1;
+        let caps = &c.executor.last_replica_caps;
+        let granted: usize = caps.iter().map(|&x| x.min(max_slots)).sum();
+        headroom_acc += granted as f64 / (caps.len().max(1) * max_slots) as f64;
+    }
+    CellResult {
+        submitted: reqs.len(),
+        completed: c
+            .metrics
+            .requests
+            .iter()
+            .filter(|m| m.finished.is_some())
+            .count(),
+        steps,
+        throughput: c.metrics.throughput(),
+        ttft: c.metrics.ttft_summary(),
+        tpot: c.metrics.tpot_summary(),
+        preemptions: c.metrics.preemptions,
+        preempt_rate: c.metrics.preemptions as f64 / steps.max(1) as f64,
+        headroom_util: headroom_acc / steps.max(1) as f64,
+    }
+}
+
+/// Run the full sweep and emit `bench_results/BENCH_memory.json`.
+pub fn run(p: &MemoryParams) -> BenchSet {
+    let mut b = BenchSet::new(
+        "BENCH_memory",
+        &[
+            "scenario",
+            "balancer",
+            "requests",
+            "completed",
+            "tok_s",
+            "ttft_p50_ms",
+            "ttft_p99_ms",
+            "tpot_p50_ms",
+            "preempt_rate",
+            "headroom_util",
+        ],
+    );
+    for s in &p.scenarios {
+        let reqs = scenario_stream(s, p);
+        for &kind in &p.balancers {
+            let cell = run_cell(s, p, kind, &reqs);
+            b.row(&[
+                s.name.clone(),
+                kind.name().to_string(),
+                cell.submitted.to_string(),
+                cell.completed.to_string(),
+                format!("{:.0}", cell.throughput),
+                format!("{:.2}", cell.ttft.p50 * 1e3),
+                format!("{:.2}", cell.ttft.p99 * 1e3),
+                format!("{:.3}", cell.tpot.p50 * 1e3),
+                format!("{:.4}", cell.preempt_rate),
+                format!("{:.3}", cell.headroom_util),
+            ]);
+        }
+    }
+    b.note(&format!(
+        "{} sim layers, batch/rank {}, chunk/rank {}, {} reqs/cell, identical stream per scenario",
+        SIM_LAYERS, p.batch_per_rank, p.chunk_per_rank, p.requests
+    ));
+    b.note("pressured cells derive HBM capacity from the governor's formulas");
+    b.note("(weights + activation reserve + KV pool at a fraction of demand);");
+    b.note("headroom_util = mean grantable fraction of the replica budget;");
+    b.note("EPLB slots cost n_layers x W, so its headroom collapses first");
+    b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Test-scale params: same machinery, smaller shapes so debug-mode
+    /// runs stay fast.
+    fn small() -> MemoryParams {
+        MemoryParams {
+            scenarios: vec![
+                MemoryScenario {
+                    name: "short-ctx".into(),
+                    prompt: 64,
+                    new_tokens: 24,
+                    pool_frac: 0.0,
+                },
+                MemoryScenario {
+                    name: "long-ctx".into(),
+                    prompt: 512,
+                    new_tokens: 48,
+                    pool_frac: 0.6,
+                },
+            ],
+            balancers: vec![BalancerKind::StaticEp, BalancerKind::Probe],
+            requests: 16,
+            batch_per_rank: 4,
+            chunk_per_rank: 16,
+            max_steps: 4_000,
+            seed: 5,
+        }
+    }
+
+    #[test]
+    fn memory_bench_emits_all_cells() {
+        let p = small();
+        let b = run(&p);
+        assert_eq!(b.rows.len(), 4, "2 scenarios x 2 balancers");
+        for row in &b.rows {
+            let submitted: usize = row[2].parse().unwrap();
+            let completed: usize = row[3].parse().unwrap();
+            assert!(submitted > 0 && completed > 0, "{row:?}");
+            assert!(completed <= submitted, "{row:?}");
+            let util: f64 = row[9].parse().unwrap();
+            assert!((0.0..=1.0).contains(&util), "{row:?}");
+        }
+        // identical stream per scenario across balancers
+        let get = |scenario: &str, balancer: &str, col: usize| -> String {
+            b.rows
+                .iter()
+                .find(|r| r[0] == scenario && r[1] == balancer)
+                .unwrap()[col]
+                .clone()
+        };
+        assert_eq!(get("long-ctx", "static", 2), get("long-ctx", "probe", 2));
+    }
+
+    #[test]
+    fn long_ctx_cell_is_memory_pressured() {
+        let p = small();
+        let long = p.scenarios[1].clone();
+        let reqs = scenario_stream(&long, &p);
+        let cell = run_cell(&long, &p, BalancerKind::StaticEp, &reqs);
+        assert_eq!(cell.completed, cell.submitted, "pressured cell must drain");
+        assert!(
+            cell.preemptions > 0,
+            "long-ctx at a fractional KV pool must preempt"
+        );
+        assert!(
+            cell.headroom_util < 0.999,
+            "KV pressure never dented the replica headroom: {}",
+            cell.headroom_util
+        );
+        // the unpressured control keeps its full headroom and never
+        // preempts
+        let short = p.scenarios[0].clone();
+        let reqs = scenario_stream(&short, &p);
+        let control = run_cell(&short, &p, BalancerKind::StaticEp, &reqs);
+        assert_eq!(control.preemptions, 0);
+        assert!(control.headroom_util > 0.999, "{}", control.headroom_util);
+    }
+}

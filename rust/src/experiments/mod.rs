@@ -15,6 +15,7 @@ pub mod ablations;
 pub mod fabric;
 pub mod fig10_fidelity;
 pub mod fleet;
+pub mod memory;
 pub mod pipeline;
 pub mod volatility;
 pub mod fig11_timeline;

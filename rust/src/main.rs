@@ -56,9 +56,10 @@ fn print_help() {
                      [--seed S]\n\
            prefill   --balancer B --tokens N --model M\n\
            bench     fig2|fig3|fig5|fig7|fig8|fig9|fig10|fig11|fleet|\n\
-                     pipeline|fabric|volatility|all [--steps N]\n\
+                     pipeline|fabric|volatility|memory|all [--steps N]\n\
                      (fabric: multi-node sweep, also --rails N;\n\
-                      volatility: scenario x balancer sweep, also --load F)\n\
+                      volatility: scenario x balancer sweep, also --load F;\n\
+                      memory: governance sweep, also --requests N)\n\
            ablate    [--steps N]\n\
            info\n"
     );
@@ -331,9 +332,11 @@ fn cmd_prefill(args: &Args) -> i32 {
     let tokens = args.get_usize("tokens", 65536);
     let bal = exp::make_balancer(cfg.balancer, &cfg, cfg.seed);
     let mut c = Coordinator::new(cfg.clone(), bal, cfg.seed);
-    let t = c.measure_prefill(tokens, 0);
+    // TTFT through the real mixed-step path: the completion time of the
+    // request's final prefill chunk in the shared step stream
+    let t = c.prefill_ttft(tokens, 0);
     println!(
-        "prefill {} tokens on {} with {}: {:.1} ms",
+        "prefill {} tokens on {} with {}: TTFT {:.1} ms",
         tokens,
         cfg.model.name,
         cfg.balancer.name(),
@@ -376,6 +379,17 @@ fn cmd_bench(args: &Args) -> i32 {
                 p.seed = args.get_u64("seed", p.seed);
                 exp::fabric::run(&p)
             }
+            "memory" => {
+                let mut p = exp::memory::MemoryParams::default();
+                p.requests = args.get_usize("requests", p.requests);
+                p.max_steps = args.get_usize("steps", p.max_steps);
+                p.seed = args.get_u64("seed", p.seed);
+                if p.requests == 0 || p.max_steps == 0 {
+                    eprintln!("bench memory needs --requests >= 1 and --steps >= 1");
+                    return false;
+                }
+                exp::memory::run(&p)
+            }
             "volatility" => {
                 let mut p = exp::volatility::VolatilityParams::default();
                 p.steps = args.get_usize("steps", p.steps);
@@ -408,7 +422,7 @@ fn cmd_bench(args: &Args) -> i32 {
     if which == "all" {
         for f in [
             "fig2", "fig3", "fig5", "fig7", "fig8", "fig9", "fig10", "fig11", "fleet", "pipeline",
-            "fabric", "volatility",
+            "fabric", "volatility", "memory",
         ] {
             run_one(f);
         }

@@ -316,6 +316,10 @@ pub struct ServingMetrics {
     pub requests: Vec<RequestMetrics>,
     /// (sim_time, tokens decoded this step) samples for throughput curves.
     pub step_tokens: Vec<(f64, usize)>,
+    /// Requests preempted (KV dropped, re-queued for recompute) by the
+    /// memory governor over the run. A request preempted twice counts
+    /// twice.
+    pub preemptions: usize,
 }
 
 impl ServingMetrics {
@@ -379,6 +383,7 @@ impl ServingMetrics {
         for m in parts {
             out.requests.extend(m.requests.iter().cloned());
             out.step_tokens.extend(m.step_tokens.iter().copied());
+            out.preemptions += m.preemptions;
         }
         out.step_tokens
             .sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
@@ -531,6 +536,7 @@ mod tests {
                 ..Default::default()
             }],
             step_tokens: vec![(0.0, 1), (2.0, 3)],
+            preemptions: 2,
         };
         let b = ServingMetrics {
             requests: vec![RequestMetrics {
@@ -538,10 +544,12 @@ mod tests {
                 ..Default::default()
             }],
             step_tokens: vec![(1.0, 2)],
+            preemptions: 1,
         };
         let m = ServingMetrics::merge([&a, &b]);
         assert_eq!(m.requests.len(), 2);
         assert_eq!(m.step_tokens, vec![(0.0, 1), (1.0, 2), (2.0, 3)]);
+        assert_eq!(m.preemptions, 3, "preemptions must pool across replicas");
     }
 
     #[test]
@@ -557,6 +565,7 @@ mod tests {
         let m = ServingMetrics {
             requests: vec![mk(0, 0.0, 1.0), mk(1, 0.0, 3.0), mk(0, 1.0, 1.5)],
             step_tokens: vec![],
+            preemptions: 0,
         };
         assert_eq!(m.tenants(), vec![0, 1]);
         assert_eq!(m.completed_for_tenant(0), 2);
@@ -570,6 +579,7 @@ mod tests {
         let m = ServingMetrics {
             requests: vec![],
             step_tokens: vec![(0.0, 0), (1.0, 100), (2.0, 100)],
+            preemptions: 0,
         };
         assert!((m.throughput() - 100.0).abs() < 1e-9);
     }

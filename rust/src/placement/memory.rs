@@ -1,11 +1,20 @@
 //! Per-rank HBM accounting: why static per-layer replication (EPLB) OOMs
 //! under prefill memory pressure while PROBE's cyclically-reused replica
-//! buffer does not (paper §6.2 / Fig. 7 exclusion note).
+//! buffer does not (paper §6.2 / Fig. 7 exclusion note), plus the live
+//! [`MemoryManager`] the serving engine admits every mixed batch
+//! through (ISSUE 5).
 //!
 //! EPLB reserves `slots × n_layers` expert placeholders per rank (every
 //! layer keeps its replicas resident). PROBE double-buffers a single
 //! region of `2 × max_redundant` slots reused across layers (§5: 3
 //! replicas → 6 slots per device), leaving the capacity to the KV cache.
+//!
+//! The static functions below answer "does a configuration fit"; the
+//! [`MemoryManager`] answers the same question *continuously* while the
+//! engine serves: KV pages grow with decode progress, the activation
+//! watermark follows the step's in-flight tokens, and the replica-slot
+//! headroom published to the balancer shrinks as KV pressure rises —
+//! the co-balancing tension the paper's hardware-aware solver encodes.
 
 use crate::model::MoeModel;
 use crate::topology::HardwareProfile;
@@ -87,6 +96,16 @@ pub fn activation_bytes(model: &MoeModel, tokens_in_flight: usize) -> f64 {
     6.0 * tokens_in_flight as f64 * model.hidden as f64 * model.dtype_bytes
 }
 
+/// Resident model weight bytes per rank: MoE expert shards plus the
+/// non-expert (attention etc.) share, approximated as 15% of the expert
+/// mass. Shared by [`rank_memory`] and the live [`MemoryManager`].
+pub fn weights_per_rank(model: &MoeModel, ep: usize) -> f64 {
+    let experts = model.n_experts as f64 / ep.max(1) as f64
+        * model.n_layers as f64
+        * model.expert_param_bytes();
+    experts * 1.15
+}
+
 /// Build the per-rank breakdown for a serving configuration.
 pub fn rank_memory(
     model: &MoeModel,
@@ -96,14 +115,8 @@ pub fn rank_memory(
     prefill_tokens_per_rank: usize,
     kv_tokens_per_rank: usize,
 ) -> MemoryBreakdown {
-    // MoE expert weights per rank + non-expert (attention etc.) share,
-    // approximated as 15% of the expert mass.
-    let experts = model.n_experts as f64 / ep as f64
-        * model.n_layers as f64
-        * model.expert_param_bytes();
-    let weights = experts * 1.15;
     MemoryBreakdown {
-        weights,
+        weights: weights_per_rank(model, ep),
         replica_buffers: policy.bytes(model),
         activations: activation_bytes(model, prefill_tokens_per_rank),
         kv_reserved: kv_tokens_per_rank as f64 * kv_bytes_per_token(model),
@@ -122,6 +135,222 @@ pub fn max_kv_tokens(
 ) -> f64 {
     let b = rank_memory(model, hw, ep, policy, prefill_tokens_per_rank, 0);
     (b.headroom() / kv_bytes_per_token(model)).max(0.0)
+}
+
+/// Live per-rank HBM governor for the memory-checked continuous-batching
+/// step model (ISSUE 5).
+///
+/// The serving engine threads every [`crate::engine::BatchComposition`]
+/// through one of these before execution:
+/// * **KV pages** — each admitted request's KV lives on one rank
+///   (DP attention; see [`kv_bytes_per_token`]) and grows by one row per
+///   decode step and by the chunk size per prefill chunk.
+/// * **Activation watermark** — the transient in-flight bytes of the
+///   current step's tokens ([`activation_bytes`]), shared evenly by all
+///   ranks.
+/// * **Replica headroom** — how many expert-replica slots still fit in
+///   each rank's free HBM *after* weights + activations + KV. Replicas
+///   are the lowest-priority tenant (eviction is a free overwrite), so
+///   admission never charges them; instead the published
+///   [`MemoryManager::replica_caps`] shrink as KV pressure rises and the
+///   planner bounds replication by them.
+///
+/// `slot_cost` encodes the policy's reservation shape: PROBE's cyclic
+/// double buffer costs `2 × W` per redundant expert regardless of depth;
+/// EPLB's static per-layer placeholders cost `n_layers × W` per slot —
+/// which is why its caps collapse first under memory pressure (the
+/// paper's Fig. 7 exclusion, now live).
+#[derive(Debug, Clone)]
+pub struct MemoryManager {
+    model: MoeModel,
+    ep: usize,
+    capacity: f64,
+    weights: f64,
+    max_slots: usize,
+    slot_cost: f64,
+    /// Fixed activation reservation the replica pool is sized against:
+    /// the engine's peak per-step watermark (token budget). Using the
+    /// peak instead of the live watermark keeps the replica caps a pure
+    /// function of KV pressure — monotonically shrinking while KV grows
+    /// — and guarantees a prefill-heavy step never OOMs into space a
+    /// replica was granted from.
+    act_reserve: f64,
+    kv_bpt: f64,
+    kv_tokens: Vec<f64>,
+    step_tokens: usize,
+    enforce: bool,
+}
+
+impl MemoryManager {
+    /// Governor over `ep` ranks of `capacity` bytes each serving `model`.
+    /// `max_slots` is the policy's replica budget per rank, `slot_cost`
+    /// the HBM bytes one granted slot reserves, `act_reserve_tokens`
+    /// the peak per-step token watermark the replica pool must leave
+    /// room for (the engine's step token budget); `enforce = false`
+    /// turns the governor into a pass-through (admit everything,
+    /// publish the full `max_slots`) for ablations.
+    pub fn new(
+        model: &MoeModel,
+        ep: usize,
+        capacity: f64,
+        max_slots: usize,
+        slot_cost: f64,
+        act_reserve_tokens: usize,
+        enforce: bool,
+    ) -> MemoryManager {
+        let ep = ep.max(1);
+        MemoryManager {
+            model: model.clone(),
+            ep,
+            capacity,
+            weights: weights_per_rank(model, ep),
+            max_slots,
+            slot_cost,
+            act_reserve: activation_bytes(model, act_reserve_tokens.div_ceil(ep)),
+            kv_bpt: kv_bytes_per_token(model),
+            kv_tokens: vec![0.0; ep],
+            step_tokens: 0,
+            enforce,
+        }
+    }
+
+    /// Whether admission checks and headroom caps are live.
+    pub fn enforced(&self) -> bool {
+        self.enforce
+    }
+
+    /// The policy's replica-slot budget per rank (the cap ceiling).
+    pub fn max_slots(&self) -> usize {
+        self.max_slots
+    }
+
+    /// KV rows currently resident on `rank`.
+    pub fn kv_tokens(&self, rank: usize) -> f64 {
+        self.kv_tokens[rank]
+    }
+
+    /// KV rows resident across all ranks.
+    pub fn total_kv_tokens(&self) -> f64 {
+        self.kv_tokens.iter().sum()
+    }
+
+    /// Transient activation bytes of the current step's watermark.
+    fn activations(&self) -> f64 {
+        activation_bytes(&self.model, self.step_tokens.div_ceil(self.ep))
+    }
+
+    /// HBM left on `rank` after weights, the fixed peak-activation
+    /// reservation, and resident KV — the pool replica slots are
+    /// granted from. A pure function of KV pressure, so it only shrinks
+    /// while KV grows.
+    pub fn free_bytes(&self, rank: usize) -> f64 {
+        self.capacity - self.weights - self.act_reserve - self.kv_tokens[rank] * self.kv_bpt
+    }
+
+    /// Fraction of the rank's post-weights capacity consumed by KV.
+    pub fn kv_occupancy(&self, rank: usize) -> f64 {
+        let pool = (self.capacity - self.weights).max(1.0);
+        (self.kv_tokens[rank] * self.kv_bpt / pool).clamp(0.0, 1.0)
+    }
+
+    /// Replica slots still grantable on `rank` under the live headroom
+    /// (the planner's per-rank bound). Monotonically non-increasing
+    /// while KV grows.
+    pub fn replica_cap(&self, rank: usize) -> usize {
+        if !self.enforce || self.slot_cost <= 0.0 {
+            return self.max_slots;
+        }
+        ((self.free_bytes(rank).max(0.0) / self.slot_cost) as usize).min(self.max_slots)
+    }
+
+    /// [`MemoryManager::replica_cap`] for every rank.
+    pub fn replica_caps(&self) -> Vec<usize> {
+        (0..self.ep).map(|r| self.replica_cap(r)).collect()
+    }
+
+    /// Full bytes breakdown of `rank` with the replica region at its
+    /// currently-granted cap. By construction a breakdown built from an
+    /// admitted state always satisfies [`MemoryBreakdown::fits`]: the
+    /// cap is derived from the free bytes the other tenants left.
+    pub fn breakdown(&self, rank: usize) -> MemoryBreakdown {
+        MemoryBreakdown {
+            weights: self.weights,
+            replica_buffers: self.replica_cap(rank) as f64 * self.slot_cost,
+            activations: self.activations(),
+            kv_reserved: self.kv_tokens[rank] * self.kv_bpt,
+            capacity: self.capacity,
+        }
+    }
+
+    /// Admission check: would `rank` still fit with `extra_kv` more KV
+    /// rows under a step watermark of `step_tokens` in-flight tokens?
+    /// (Replica buffers are not charged — they yield to KV for free.)
+    pub fn fits_extra(&self, rank: usize, extra_kv: usize, step_tokens: usize) -> bool {
+        if !self.enforce {
+            return true;
+        }
+        let act = activation_bytes(&self.model, step_tokens.div_ceil(self.ep));
+        self.weights + act + (self.kv_tokens[rank] + extra_kv as f64) * self.kv_bpt
+            <= self.capacity
+    }
+
+    /// Rank with the most KV headroom (ties pick the lowest index) —
+    /// where a newly admitted request's KV pages land.
+    pub fn least_loaded_rank(&self) -> usize {
+        let mut best = 0;
+        for r in 1..self.ep {
+            if self.kv_tokens[r] < self.kv_tokens[best] {
+                best = r;
+            }
+        }
+        best
+    }
+
+    /// Ranks the governor accounts for.
+    pub fn ranks(&self) -> usize {
+        self.ep
+    }
+
+    /// Pick the KV home rank for a new admission: the least-loaded rank
+    /// (counting `pending` provisional rows from admissions earlier in
+    /// the same step) that still fits `extra_kv` more rows under a
+    /// `step_tokens` activation watermark. `None` when no rank fits.
+    pub fn admit_rank(
+        &self,
+        extra_kv: usize,
+        step_tokens: usize,
+        pending: &[usize],
+    ) -> Option<usize> {
+        let load = |r: usize| self.kv_tokens[r] + pending.get(r).copied().unwrap_or(0) as f64;
+        let mut best: Option<usize> = None;
+        for r in 0..self.ep {
+            let pend = pending.get(r).copied().unwrap_or(0);
+            if !self.fits_extra(r, extra_kv + pend, step_tokens) {
+                continue;
+            }
+            if best.map_or(true, |b| load(r) < load(b)) {
+                best = Some(r);
+            }
+        }
+        best
+    }
+
+    /// Record the current step's activation watermark (total in-flight
+    /// prefill + decode tokens of the composed batch).
+    pub fn set_step_tokens(&mut self, tokens: usize) {
+        self.step_tokens = tokens;
+    }
+
+    /// Commit `tokens` more KV rows onto `rank` (prefill chunk or
+    /// decode progress).
+    pub fn grow(&mut self, rank: usize, tokens: usize) {
+        self.kv_tokens[rank] += tokens as f64;
+    }
+
+    /// Release `tokens` KV rows from `rank` (retirement or preemption).
+    pub fn release(&mut self, rank: usize, tokens: usize) {
+        self.kv_tokens[rank] = (self.kv_tokens[rank] - tokens as f64).max(0.0);
+    }
 }
 
 #[cfg(test)]
@@ -204,5 +433,64 @@ mod tests {
         let (m, _) = setup();
         let q = MoeModel::qwen3_235b();
         assert!(kv_bytes_per_token(&q) > kv_bytes_per_token(&m));
+    }
+
+    #[test]
+    fn manager_caps_shrink_as_kv_grows_and_breakdown_always_fits() {
+        let (m, _) = setup();
+        let w = m.expert_param_bytes();
+        // capacity = weights + room for 3 double-buffered slots + some KV
+        let cap = weights_per_rank(&m, 8) + 3.0 * 2.0 * w + 40_000.0 * kv_bytes_per_token(&m);
+        let mut mm = MemoryManager::new(&m, 8, cap, 3, 2.0 * w, 0, true);
+        assert_eq!(mm.replica_cap(0), 3);
+        assert!(mm.breakdown(0).fits());
+        let mut last = mm.replica_cap(0);
+        // grow to 45k rows: inside the pool (so the breakdown always
+        // fits) but past the point where the last replica slot fits
+        for _ in 0..9 {
+            mm.grow(0, 5_000);
+            let cap_now = mm.replica_cap(0);
+            assert!(cap_now <= last, "cap rose while KV grew: {last} -> {cap_now}");
+            assert!(mm.breakdown(0).fits(), "{:?}", mm.breakdown(0));
+            last = cap_now;
+        }
+        assert_eq!(last, 0, "caps should exhaust under KV pressure");
+        // release restores headroom
+        mm.release(0, 45_000);
+        assert_eq!(mm.replica_cap(0), 3);
+    }
+
+    #[test]
+    fn manager_admission_respects_capacity_and_watermark() {
+        let (m, _) = setup();
+        let cap = weights_per_rank(&m, 8) + 10_000.0 * kv_bytes_per_token(&m);
+        let mut mm = MemoryManager::new(&m, 8, cap, 3, 0.0, 0, true);
+        assert!(mm.fits_extra(0, 9_000, 0));
+        assert!(!mm.fits_extra(0, 11_000, 0));
+        // a big activation watermark eats the same pool
+        let big_step = 4 * 1024 * 1024;
+        assert!(!mm.fits_extra(0, 9_000, big_step));
+        // committed KV moves the line
+        mm.grow(0, 8_000);
+        assert!(!mm.fits_extra(0, 4_000, 0));
+        assert!(mm.fits_extra(1, 9_000, 0), "other ranks unaffected");
+        assert_eq!(mm.least_loaded_rank(), 1);
+        // pass-through mode admits anything and publishes the full budget
+        let off = MemoryManager::new(&m, 8, cap, 3, 2.0 * m.expert_param_bytes(), 0, false);
+        assert!(off.fits_extra(0, usize::MAX / 2, 0));
+        assert_eq!(off.replica_cap(0), 3);
+    }
+
+    #[test]
+    fn per_layer_slot_cost_collapses_before_cyclic() {
+        // EPLB-shaped reservations (n_layers x W per slot) run out of
+        // headroom long before PROBE's cyclic buffer does
+        let (m, _) = setup();
+        let w = m.expert_param_bytes();
+        let cap = weights_per_rank(&m, 8) + 8.0 * w;
+        let probe = MemoryManager::new(&m, 8, cap, 3, 2.0 * w, 0, true);
+        let eplb = MemoryManager::new(&m, 8, cap, 2, m.n_layers as f64 * w, 0, true);
+        assert_eq!(probe.replica_cap(0), 3);
+        assert_eq!(eplb.replica_cap(0), 0);
     }
 }

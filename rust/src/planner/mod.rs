@@ -278,9 +278,10 @@ fn drop_cold_replicas(placement: &mut Placement, counts_by_source: &[Vec<f64>]) 
     }
 }
 
-/// Algorithm 1 with delta planning on a flat (single-node) fabric — the
-/// pre-fabric planner, preserved for single-node call sites. See
-/// [`plan_fabric`].
+/// Algorithm 1 with delta planning on a flat (single-node) fabric and
+/// an uncapped slot budget — the pre-governor planner, preserved for
+/// single-node call sites. Memory-governed callers use [`plan_fabric`]
+/// with the live per-rank headroom instead.
 pub fn plan(
     counts_by_source: &[Vec<f64>],
     resident: &Placement,
@@ -296,8 +297,36 @@ pub fn plan(
         hw,
         &Fabric::flat(resident.ep, hw),
         windows,
+        &vec![usize::MAX; resident.ep],
         cfg,
     )
+}
+
+/// Evict replicas beyond each rank's live slot cap (the memory
+/// governor shrank the headroom since they were fetched): coldest
+/// predicted load first — eviction is a free overwrite, so the only
+/// cost is losing the replica's balance contribution.
+fn enforce_slot_caps(placement: &mut Placement, counts_by_source: &[Vec<f64>], caps: &[usize]) {
+    let totals: Vec<f64> = counts_by_source.iter().map(|v| v.iter().sum()).collect();
+    for r in 0..placement.ep {
+        let cap = caps.get(r).copied().unwrap_or(usize::MAX);
+        while placement.slots_used(r) > cap {
+            let victim = placement
+                .replica_experts(r)
+                .into_iter()
+                .min_by(|&a, &b| {
+                    let ta = totals.get(a).copied().unwrap_or(0.0);
+                    let tb = totals.get(b).copied().unwrap_or(0.0);
+                    ta.partial_cmp(&tb).unwrap_or(std::cmp::Ordering::Equal)
+                });
+            match victim {
+                Some(e) => {
+                    let _ = placement.remove_replica(e, r);
+                }
+                None => break,
+            }
+        }
+    }
 }
 
 /// Source rank a replica of `e` is fetched from onto `dst`. Topology-
@@ -327,7 +356,13 @@ fn pick_source(
 /// token counts for the target layer; `resident` is the placement
 /// currently in HBM for that layer (replicas fetched by earlier plans);
 /// `windows[r]` is the per-rank hiding window (seconds of overlappable
-/// compute) budgeting NEW fetches only.
+/// compute) budgeting NEW fetches only; `slot_caps[r]` is the memory
+/// governor's live replica headroom
+/// ([`crate::placement::memory::MemoryManager::replica_caps`]) — the
+/// plan never holds more than `slot_caps[r]` replicas on rank `r`, so
+/// replication is bounded by actual free HBM rather than the fixed
+/// `max_redundant` alone, shrinking automatically as KV pressure rises
+/// (resident replicas above a shrunken cap are evicted coldest-first).
 ///
 /// Topology-aware mode (`cfg.topology_aware`, multi-node fabrics):
 /// replica fetches prefer intra-node sources, the single per-rank window
@@ -343,10 +378,12 @@ pub fn plan_fabric(
     hw: &HardwareProfile,
     fabric: &Fabric,
     windows: &[f64],
+    slot_caps: &[usize],
     cfg: &ProbeConfig,
 ) -> PlanOutcome {
     let ep = resident.ep;
     assert_eq!(windows.len(), ep);
+    assert_eq!(slot_caps.len(), ep);
     let aware = cfg.topology_aware && !fabric.is_flat();
     let fab_opt = if aware { Some(fabric) } else { None };
     let mut placement = resident.clone();
@@ -355,6 +392,8 @@ pub fn plan_fabric(
     } else {
         placement.clear_replicas();
     }
+    // live memory headroom: evict what no longer fits before planning
+    enforce_slot_caps(&mut placement, counts_by_source, slot_caps);
     let retained_replicas = placement.total_replicas();
 
     let mut a = Assignment::locality_first_from_counts(counts_by_source, &placement);
@@ -396,7 +435,7 @@ pub fn plan_fabric(
 
         // select bottleneck/helper pair, skipping invalidated pairs
         let lat = st.latencies();
-        let Some((r_src, r_dst)) = select_pair(&lat, &placement, &invalid) else {
+        let Some((r_src, r_dst)) = select_pair(&lat, &placement, slot_caps, &invalid) else {
             break;
         };
 
@@ -442,7 +481,7 @@ pub fn plan_fabric(
                 }
             }
         }
-        if placement.slots_free(r_dst) == 0 {
+        if placement.slots_free(r_dst) == 0 || placement.slots_used(r_dst) >= slot_caps[r_dst] {
             invalid.push((r_src, r_dst));
             continue;
         }
@@ -500,10 +539,12 @@ pub fn plan_fabric(
 }
 
 /// Pick (argmax, argmin) latency ranks avoiding invalidated pairs; the
-/// destination must have a free replica slot.
+/// destination must have a free replica slot within its live memory
+/// cap.
 fn select_pair(
     lat: &[f64],
     placement: &Placement,
+    slot_caps: &[usize],
     invalid: &[(usize, usize)],
 ) -> Option<(usize, usize)> {
     let ep = lat.len();
@@ -516,7 +557,9 @@ fn select_pair(
             if d == s || lat[d] >= lat[s] {
                 continue;
             }
-            if placement.slots_free(d) == 0 {
+            if placement.slots_free(d) == 0
+                || placement.slots_used(d) >= slot_caps.get(d).copied().unwrap_or(usize::MAX)
+            {
                 continue;
             }
             if !invalid.contains(&(s, d)) {
@@ -982,10 +1025,11 @@ mod tests {
         let fabric = Fabric::multi_node_ratio(16, 2, &hw, 1.0 / 16.0, 2);
         let windows = vec![transfer_time(2, &model, &hw); 16];
         let mut cfg = ProbeConfig::default();
+        let caps = vec![usize::MAX; 16];
         cfg.topology_aware = true;
-        let aware = plan_fabric(&counts, &base, &model, &hw, &fabric, &windows, &cfg);
+        let aware = plan_fabric(&counts, &base, &model, &hw, &fabric, &windows, &caps, &cfg);
         cfg.topology_aware = false;
-        let blind = plan_fabric(&counts, &base, &model, &hw, &fabric, &windows, &cfg);
+        let blind = plan_fabric(&counts, &base, &model, &hw, &fabric, &windows, &caps, &cfg);
         assert!(blind.total_fetches() > 0, "blind planner fetched nothing");
         let cross = |o: &PlanOutcome| {
             o.fetch_flows
@@ -1024,6 +1068,89 @@ mod tests {
         for (r, (f, i)) in full.iter().zip(&inc).enumerate() {
             assert!((f - i).abs() < 1e-9, "rank {r}: full {f} vs incremental {i}");
         }
+    }
+
+    #[test]
+    fn slot_caps_bound_replication_per_rank() {
+        let (counts, base, model, hw) = setup(6144, 31);
+        let cfg = ProbeConfig::default();
+        let fabric = Fabric::flat(8, &hw);
+        // ragged caps: rank r may hold at most r % 3 replicas
+        let caps: Vec<usize> = (0..8).map(|r| r % 3).collect();
+        let out = plan_fabric(
+            &counts, &base, &model, &hw, &fabric, &wide_windows(), &caps, &cfg,
+        );
+        for r in 0..8 {
+            assert!(
+                out.placement.slots_used(r) <= caps[r],
+                "rank {r}: {} replicas over cap {}",
+                out.placement.slots_used(r),
+                caps[r]
+            );
+        }
+        out.placement.validate().unwrap();
+        // an all-zero cap vector forbids replication entirely even with
+        // wide windows (the KV-pressure endgame)
+        let none = plan_fabric(
+            &counts, &base, &model, &hw, &fabric, &wide_windows(), &vec![0; 8], &cfg,
+        );
+        assert_eq!(none.placement.total_replicas(), 0);
+        assert_eq!(none.est_after, none.est_before);
+    }
+
+    #[test]
+    fn shrinking_caps_evict_resident_replicas_monotonically() {
+        // replicate under generous headroom, then re-plan the SAME
+        // forecast against progressively tighter caps with no fetch
+        // budget left (k_max = 0): the resident replica count must
+        // shrink monotonically to zero and never exceed any cap — the
+        // ISSUE 5 co-balancing tension at planner level
+        let (counts, base, model, hw) = setup(6144, 33);
+        let mut cfg = ProbeConfig::default();
+        assert!(cfg.delta_plan);
+        cfg.k_max = 64;
+        let fabric = Fabric::flat(8, &hw);
+        let generous = plan_fabric(
+            &counts,
+            &base,
+            &model,
+            &hw,
+            &fabric,
+            &wide_windows(),
+            &vec![3; 8],
+            &cfg,
+        );
+        assert!(
+            generous.placement.total_replicas() > 0,
+            "planner never replicated under generous caps"
+        );
+        cfg.k_max = 0; // pressure phase: evictions only
+        let mut resident = generous.placement;
+        let mut last_total = resident.total_replicas();
+        for cap in (0..3usize).rev() {
+            let out = plan_fabric(
+                &counts,
+                &resident,
+                &model,
+                &hw,
+                &fabric,
+                &wide_windows(),
+                &vec![cap; 8],
+                &cfg,
+            );
+            let total = out.placement.total_replicas();
+            for r in 0..8 {
+                assert!(out.placement.slots_used(r) <= cap, "cap {cap} rank {r}");
+            }
+            assert!(
+                total <= last_total,
+                "replicas grew as headroom shrank: {last_total} -> {total} at cap {cap}"
+            );
+            out.placement.validate().unwrap();
+            last_total = total;
+            resident = out.placement;
+        }
+        assert_eq!(last_total, 0, "cap 0 must evict every replica");
     }
 
     #[test]

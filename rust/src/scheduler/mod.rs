@@ -440,13 +440,58 @@ pub fn schedule_layer_fabric(
     }
 }
 
+/// Per-token effective-context composition of one mixed batch (ISSUE 5):
+/// groups of `(tokens, kv_rows)` where `kv_rows` is the effective KV
+/// rows each token in the group reads after GQA sharing and flash tile
+/// reuse. Built by [`crate::engine::BatchComposition::context_profile`]
+/// from the batch's per-request context lengths, so attention is charged
+/// for the *actual* context distribution instead of one global
+/// `mean_ctx` scalar.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ContextProfile {
+    /// `(token count, effective KV rows per token)` groups.
+    pub groups: Vec<(usize, usize)>,
+}
+
+impl ContextProfile {
+    /// A single-group profile: `tokens` tokens all reading `kv_rows`
+    /// effective rows (the legacy scalar model).
+    pub fn uniform(tokens: usize, kv_rows: usize) -> ContextProfile {
+        ContextProfile {
+            groups: vec![(tokens, kv_rows)],
+        }
+    }
+
+    /// Append a group (no-op for empty groups).
+    pub fn push(&mut self, tokens: usize, kv_rows: usize) {
+        if tokens > 0 {
+            self.groups.push((tokens, kv_rows));
+        }
+    }
+
+    /// Tokens across all groups.
+    pub fn total_tokens(&self) -> usize {
+        self.groups.iter().map(|&(t, _)| t).sum()
+    }
+
+    /// Token-weighted KV rows (Σ tokens × rows) — the quantity both the
+    /// score FLOPs and the KV streaming bytes scale with.
+    pub fn total_kv_rows(&self) -> f64 {
+        self.groups
+            .iter()
+            .map(|&(t, c)| t as f64 * c as f64)
+            .sum()
+    }
+}
+
 /// Attention time estimate for one layer at `tokens_per_rank` tokens:
 /// projection FLOPs plus KV-cache streaming. `mean_ctx` is the
 /// *effective* KV rows read per query token after GQA sharing and
 /// flash-attention tile reuse (≈ context/8 for GQA-8 decode; far less
 /// for prefill where query tiles share KV). The paper notes chunked
 /// prefill + short prompts keep attention off the critical path; MoE
-/// stragglers dominate.
+/// stragglers dominate. The scalar primitive behind
+/// [`attention_time_profile`], kept for direct simulator call sites.
 pub fn attention_time(
     tokens_per_rank: usize,
     mean_ctx: usize,
@@ -458,6 +503,28 @@ pub fn attention_time(
     let score_flops = 4.0 * mean_ctx as f64 * h * tokens_per_rank as f64;
     let flops_t = (proj_flops + score_flops) / (hw.gemm_max_eff * hw.peak_flops);
     let kv_bytes = tokens_per_rank as f64 * mean_ctx as f64 * 2.0 * h * model.dtype_bytes;
+    let mem_t = kv_bytes / hw.hbm_bw;
+    flops_t.max(mem_t) + hw.kernel_launch
+}
+
+/// [`attention_time`] generalized to a mixed batch's per-request context
+/// distribution: the batch's tokens (and their token-weighted KV rows)
+/// are spread across `ep` DP ranks. A uniform profile reproduces the
+/// scalar model exactly, so the legacy decode path is a special case.
+pub fn attention_time_profile(
+    profile: &ContextProfile,
+    ep: usize,
+    model: &MoeModel,
+    hw: &HardwareProfile,
+) -> f64 {
+    let ep = ep.max(1) as f64;
+    let tokens_per_rank = (profile.total_tokens() as f64 / ep).ceil();
+    let rows_per_rank = profile.total_kv_rows() / ep;
+    let h = model.hidden as f64;
+    let proj_flops = 8.0 * h * h * tokens_per_rank;
+    let score_flops = 4.0 * h * rows_per_rank;
+    let flops_t = (proj_flops + score_flops) / (hw.gemm_max_eff * hw.peak_flops);
+    let kv_bytes = rows_per_rank * 2.0 * h * model.dtype_bytes;
     let mem_t = kv_bytes / hw.hbm_bw;
     flops_t.max(mem_t) + hw.kernel_launch
 }
@@ -766,6 +833,38 @@ mod tests {
         let m = model();
         let h = hw();
         assert!(attention_time(2048, 512, &m, &h) > attention_time(256, 512, &m, &h));
+    }
+
+    #[test]
+    fn uniform_profile_matches_scalar_attention() {
+        let m = model();
+        let h = hw();
+        for (tpr, ctx, ep) in [(768usize, 64usize, 8usize), (2048, 192, 8), (13, 7, 4)] {
+            let scalar = attention_time(tpr, ctx, &m, &h);
+            let profile = ContextProfile::uniform(tpr * ep, ctx);
+            let mixed = attention_time_profile(&profile, ep, &m, &h);
+            assert!(
+                (scalar - mixed).abs() / scalar < 1e-12,
+                "tpr {tpr} ctx {ctx}: {scalar} vs {mixed}"
+            );
+        }
+    }
+
+    #[test]
+    fn longer_contexts_cost_more_attention() {
+        let m = model();
+        let h = hw();
+        let short = ContextProfile::uniform(1024, 8);
+        let mut long = ContextProfile::uniform(512, 8);
+        long.push(512, 4096);
+        assert_eq!(short.total_tokens(), long.total_tokens());
+        assert!(
+            attention_time_profile(&long, 8, &m, &h)
+                > attention_time_profile(&short, 8, &m, &h)
+        );
+        // group accounting
+        assert_eq!(long.groups.len(), 2);
+        assert!((long.total_kv_rows() - (512.0 * 8.0 + 512.0 * 4096.0)).abs() < 1e-9);
     }
 
     #[test]

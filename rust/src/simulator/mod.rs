@@ -96,9 +96,15 @@ pub struct StepOutcome {
     /// Expert fetches enqueued across all layers of this step
     /// (delta-planning observability; clear-mode refetches everything).
     pub prefetch_slots_total: usize,
-    /// Per-rank token loads of the first simulated layer — the hotspot
-    /// signal [`crate::metrics::HotspotTracker`] consumes.
+    /// Per-rank token loads summed across ALL layers of the step — the
+    /// whole-step hotspot signal [`crate::metrics::HotspotTracker`]
+    /// consumes (a single-layer sample would report a first-layer
+    /// artifact, not the step's hotspot).
     pub rank_token_loads: Vec<f64>,
+    /// Per-rank replica slots resident during the step (max over its
+    /// layers' placements) — the realized replication the memory
+    /// governor's caps bound.
+    pub replica_slots_used: Vec<usize>,
 }
 
 impl StepOutcome {
@@ -148,22 +154,42 @@ impl ClusterSim {
     /// Simulate one step. `decisions[l]` drives layer `l`; the transfer
     /// a decision enqueues drains through the following
     /// `prefetch_lookahead` hiding windows (possibly crossing into the
-    /// next step's windows via the persistent queue).
+    /// next step's windows via the persistent queue). Attention is
+    /// charged at the scalar `mean_ctx`; mixed batches with a real
+    /// context distribution go through [`ClusterSim::run_step_ctx`].
     pub fn run_step(&mut self, routing: &StepRouting, decisions: &[LayerDecision]) -> StepOutcome {
+        self.run_step_ctx(routing, decisions, None)
+    }
+
+    /// [`ClusterSim::run_step`] with the mixed batch's per-request
+    /// context distribution: when `ctx` is given, attention is charged
+    /// for the composition's actual token-weighted KV rows
+    /// ([`scheduler::attention_time_profile`]) instead of the global
+    /// `mean_ctx` scalar (ISSUE 5).
+    pub fn run_step_ctx(
+        &mut self,
+        routing: &StepRouting,
+        decisions: &[LayerDecision],
+        ctx: Option<&scheduler::ContextProfile>,
+    ) -> StepOutcome {
         let n_layers = routing.layers.len();
         assert_eq!(decisions.len(), n_layers);
         let ep = self.cluster.ep;
         let hw = &self.cluster.profile;
         let tokens = routing.layers.first().map(|l| l.n_tokens).unwrap_or(0);
         let tokens_per_rank = tokens.div_ceil(ep.max(1));
-        let attn = scheduler::attention_time(tokens_per_rank, self.mean_ctx, &self.model, hw);
+        let attn = match ctx {
+            Some(p) => scheduler::attention_time_profile(p, ep, &self.model, hw),
+            None => scheduler::attention_time(tokens_per_rank, self.mean_ctx, &self.model, hw),
+        };
 
         let mut timelines = Vec::with_capacity(n_layers);
         let mut ir_per_layer = Vec::with_capacity(n_layers);
         let mut comp_skew = Vec::with_capacity(n_layers);
         let mut latency = 0.0;
         let mut prefetch_slots_total = 0usize;
-        let mut first_rank_tokens: Vec<f64> = Vec::new();
+        let mut rank_tokens_acc = vec![0.0f64; ep];
+        let mut replica_slots_used = vec![0usize; ep];
 
         for l in 0..n_layers {
             let lr = &routing.layers[l];
@@ -209,8 +235,9 @@ impl ClusterSim {
             prefetch_slots_total += d.total_prefetch_slots();
 
             let rank_tokens: Vec<f64> = (0..ep).map(|r| loads[r].iter().sum::<f64>()).collect();
-            if l == 0 {
-                first_rank_tokens = rank_tokens.clone();
+            for r in 0..ep {
+                rank_tokens_acc[r] += rank_tokens[r];
+                replica_slots_used[r] = replica_slots_used[r].max(d.placement.slots_used(r));
             }
             ir_per_layer.push(imbalance_ratio(&rank_tokens));
             comp_skew.push(imbalance_ratio(&compute));
@@ -225,7 +252,8 @@ impl ClusterSim {
             comp_skew_per_layer: comp_skew,
             tokens,
             prefetch_slots_total,
-            rank_token_loads: first_rank_tokens,
+            rank_token_loads: rank_tokens_acc,
+            replica_slots_used,
         }
     }
 
@@ -298,8 +326,31 @@ mod tests {
         assert_eq!(out.tokens, 2048);
         assert_eq!(out.prefetch_slots_total, 0);
         assert_eq!(out.rank_token_loads.len(), s.cluster.ep);
+        // whole-step hotspot signal: loads sum over ALL 4 layers
         let total: f64 = out.rank_token_loads.iter().sum();
-        assert!((total - 2048.0 * s.model.top_k as f64).abs() < 1e-6);
+        assert!((total - 2048.0 * s.model.top_k as f64 * 4.0).abs() < 1e-6);
+        // passthrough decisions carry no replicas
+        assert_eq!(out.replica_slots_used, vec![0; s.cluster.ep]);
+    }
+
+    #[test]
+    fn context_profile_drives_attention_cost() {
+        let mut s = sim();
+        let step = routing(&s, 4, 2048, 21);
+        let ds = passthrough_decisions(&s, &step);
+        let short = crate::scheduler::ContextProfile::uniform(2048, 8);
+        let long = crate::scheduler::ContextProfile::uniform(2048, 4096);
+        let t_short = s.run_step_ctx(&step, &ds, Some(&short)).latency;
+        let t_long = s.run_step_ctx(&step, &ds, Some(&long)).latency;
+        assert!(t_long > t_short, "{t_short} vs {t_long}");
+        // scalar path == uniform profile at the same effective context
+        let mid = crate::scheduler::ContextProfile::uniform(2048, s.mean_ctx);
+        let t_prof = s.run_step_ctx(&step, &ds, Some(&mid)).latency;
+        let t_scalar = s.run_step(&step, &ds).latency;
+        assert!(
+            (t_prof - t_scalar).abs() / t_scalar < 1e-9,
+            "{t_prof} vs {t_scalar}"
+        );
     }
 
     #[test]

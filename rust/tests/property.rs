@@ -4,6 +4,7 @@
 //! timeline sanity.
 
 use probe::config::ProbeConfig;
+use probe::engine::{BatchComposition, ServingEngine, StepExecutor, StepReport};
 use probe::model::MoeModel;
 use probe::perfmodel::{comm_volumes, transfer_time, Assignment, DispatchPlan};
 use probe::placement::Placement;
@@ -13,6 +14,7 @@ use probe::routing::{LayerRouting, RoutingModel};
 use probe::topology::HardwareProfile;
 use probe::util::proptest::{check, Gen};
 use probe::util::stats::imbalance_ratio;
+use probe::workload::{Dataset, Request};
 
 /// Random EP-divisible geometry + routed layer.
 fn arb_routing(g: &mut Gen) -> (LayerRouting, usize) {
@@ -97,6 +99,116 @@ fn prop_planner_preserves_conservation_and_budgets() {
             out.est_after
         );
         prop_assert!(out.iterations <= cfg.k_max, "iteration cap violated");
+        Ok(())
+    });
+}
+
+/// Minimal recording backend for engine-composition properties: fixed
+/// latencies, configurable chunk size / token budget, logs every
+/// executed chunk.
+struct RecordingExecutor {
+    cap: usize,
+    chunk: usize,
+    budget: usize,
+    /// (req, offset, tokens, is_last) of every executed prefill chunk.
+    chunks: Vec<(u64, usize, usize, bool)>,
+    max_step_tokens: usize,
+}
+
+impl StepExecutor for RecordingExecutor {
+    fn name(&self) -> &'static str {
+        "recording"
+    }
+    fn capacity(&self) -> usize {
+        self.cap
+    }
+    fn token_budget(&self) -> usize {
+        self.budget
+    }
+    fn prefill_chunk(&self) -> usize {
+        self.chunk
+    }
+    fn begin(&mut self, req: &Request) -> anyhow::Result<usize> {
+        Ok(req.max_new_tokens.max(1))
+    }
+    fn execute(&mut self, batch: &BatchComposition) -> anyhow::Result<StepReport> {
+        for c in &batch.prefill {
+            self.chunks.push((c.req_id, c.offset, c.tokens, c.is_last));
+        }
+        self.max_step_tokens = self.max_step_tokens.max(batch.total_tokens());
+        Ok(StepReport {
+            latency: 1.0,
+            tokens: batch.total_tokens(),
+            ir_samples: vec![1.0],
+        })
+    }
+}
+
+#[test]
+fn prop_chunked_prefill_conserves_tokens_under_any_budget() {
+    // ISSUE 5 satellite: for random prompt lengths, chunk sizes, token
+    // budgets, and slot capacities, every request's prefill chunks are
+    // contiguous from offset 0, conserve the prompt exactly, end with
+    // exactly one is_last chunk, and no step exceeds the token budget.
+    check(40, 0x5EED, |g| {
+        let n_reqs = g.usize_in(1..7);
+        let chunk = g.usize_in(1..40);
+        let cap = g.usize_in(1..5);
+        let prompts: Vec<usize> = (0..n_reqs).map(|_| g.usize_in(1..120)).collect();
+        // budget must admit at least one decode token per active
+        // request plus one prefill token, or composition stalls by
+        // design; anything >= cap + 1 is fair game
+        let budget = g.usize_in(cap + 1..cap + 90);
+        let mut e = ServingEngine::from_executor(RecordingExecutor {
+            cap,
+            chunk,
+            budget,
+            chunks: Vec::new(),
+            max_step_tokens: 0,
+        });
+        for (i, &p) in prompts.iter().enumerate() {
+            e.submit(Request {
+                id: i as u64,
+                tenant: 0,
+                domain: (i % 4) as u16,
+                dataset: Dataset::Mixed,
+                prompt_len: p,
+                max_new_tokens: g.usize_in(1..6),
+                arrival: 0.0,
+            });
+        }
+        e.run_to_completion(20_000).unwrap();
+        prop_assert!(
+            e.metrics.requests.iter().all(|m| m.finished.is_some()),
+            "stream did not drain"
+        );
+        prop_assert!(
+            e.executor.max_step_tokens <= budget,
+            "step exceeded token budget: {} > {budget}",
+            e.executor.max_step_tokens
+        );
+        for (i, &p) in prompts.iter().enumerate() {
+            let mine: Vec<&(u64, usize, usize, bool)> = e
+                .executor
+                .chunks
+                .iter()
+                .filter(|c| c.0 == i as u64)
+                .collect();
+            let mut covered = 0usize;
+            for (j, c) in mine.iter().enumerate() {
+                prop_assert!(c.1 == covered, "request {i}: chunk offset gap");
+                prop_assert!(c.2 >= 1 && c.2 <= chunk, "request {i}: bad chunk size");
+                covered += c.2;
+                prop_assert!(
+                    c.3 == (j == mine.len() - 1),
+                    "request {i}: is_last mismatch"
+                );
+            }
+            prop_assert!(
+                covered == p,
+                "request {i}: prefill tokens not conserved ({covered} != {p})"
+            );
+        }
         Ok(())
     });
 }

@@ -7,7 +7,8 @@
 use probe::balancers::StaticEp;
 use probe::config::Config;
 use probe::coordinator::Coordinator;
-use probe::workload::{trace, Request, Scenario, ScenarioGenerator};
+use probe::placement::memory::{activation_bytes, kv_bytes_per_token, weights_per_rank};
+use probe::workload::{trace, Dataset, Request, Scenario, ScenarioGenerator};
 
 fn small_cfg() -> Config {
     let mut cfg = Config::default();
@@ -70,6 +71,73 @@ fn recorded_trace_replays_bit_exactly_through_the_engine() {
     // and the run actually served everything (open-loop arrivals kept)
     assert!(metrics_a.iter().all(|(_, _, first, fin, _)| {
         first.is_some() && fin.is_some()
+    }));
+}
+
+/// Memory-pressured variant of [`small_cfg`]: 128-token chunks and a
+/// derived HBM capacity whose KV pool (420 rows/rank) holds one
+/// 288-row request comfortably but not the 4 assigned per rank — so
+/// the governor must preempt and recompute mid-stream.
+fn pressured_cfg() -> Config {
+    let mut cfg = small_cfg();
+    cfg.prefill_chunk_per_rank = 16;
+    let ep = cfg.cluster.ep;
+    let budget = cfg.global_batch() + cfg.prefill_chunk_per_rank * ep;
+    let capacity = weights_per_rank(&cfg.model, ep)
+        + activation_bytes(&cfg.model, budget.div_ceil(ep))
+        + 420.0 * kv_bytes_per_token(&cfg.model);
+    cfg.memory.hbm_capacity_gb = capacity / 1e9;
+    cfg
+}
+
+/// Serve a stream on the pressured config and return every observable.
+fn serve_pressured(
+    reqs: Vec<Request>,
+) -> (f64, usize, usize, Vec<(u64, Option<f64>, Option<f64>, usize)>) {
+    let cfg = pressured_cfg();
+    let bal = Box::new(StaticEp::new(&cfg));
+    let mut c = Coordinator::new(cfg, bal, 23);
+    c.submit_all(reqs);
+    let steps = c.run_to_completion(200_000).unwrap();
+    let per_req = c
+        .metrics
+        .requests
+        .iter()
+        .map(|m| (m.id, m.first_token, m.finished, m.tokens_out))
+        .collect();
+    (c.clock, steps, c.metrics.preemptions, per_req)
+}
+
+#[test]
+fn preemption_and_readmission_replay_bit_exactly() {
+    // the ISSUE 5 satellite: preemption + re-admission decisions are
+    // part of the deterministic step model, so a recorded trace must
+    // replay bit-exactly even when the governor recomputes requests
+    let original: Vec<Request> = (0..32u64)
+        .map(|id| Request {
+            id,
+            tenant: 0,
+            domain: (id % 4) as u16,
+            dataset: Dataset::Mixed,
+            prompt_len: 256,
+            max_new_tokens: 32,
+            arrival: id as f64 * 0.002,
+        })
+        .collect();
+    let text = trace::to_jsonl(&original);
+    let replayed = trace::from_jsonl(&text).unwrap();
+    assert_eq!(replayed, original);
+
+    let (clock_a, steps_a, preempt_a, metrics_a) = serve_pressured(original);
+    let (clock_b, steps_b, preempt_b, metrics_b) = serve_pressured(replayed);
+    assert!(preempt_a > 0, "pressured config never preempted");
+    assert_eq!(preempt_a, preempt_b, "preemption decisions diverged");
+    assert_eq!(clock_a.to_bits(), clock_b.to_bits(), "serving clocks diverged");
+    assert_eq!(steps_a, steps_b);
+    assert_eq!(metrics_a, metrics_b, "per-request metrics diverged");
+    // everything drains despite recompute preemption
+    assert!(metrics_a.iter().all(|(_, first, fin, out)| {
+        first.is_some() && fin.is_some() && *out == 32
     }));
 }
 

@@ -3,10 +3,11 @@
 //! materialization, traffic accounting, and a full simulated step.
 
 use probe::config::ProbeConfig;
+use probe::fabric::Fabric;
 use probe::model::MoeModel;
-use probe::perfmodel::{comm_volumes, Assignment, DispatchPlan};
+use probe::perfmodel::{comm_volumes, Assignment, DispatchPlan, DispatchScratch};
 use probe::placement::Placement;
-use probe::planner;
+use probe::planner::{self, PlanScratch};
 use probe::routing::RoutingModel;
 use probe::topology::HardwareProfile;
 use probe::util::bench::{fmt_time, time_it, BenchSet};
@@ -18,11 +19,8 @@ fn main() {
     let tokens = 6144; // b=768/rank
     let mut rm = RoutingModel::calibrated(1, model.n_experts, model.top_k, 4, 3);
     let routing = rm.route_step(&vec![0u16; tokens]).layers.remove(0);
-    let counts: Vec<Vec<f64>> = routing
-        .expert_counts_by_source(ep)
-        .into_iter()
-        .map(|v| v.into_iter().map(f64::from).collect())
-        .collect();
+    // single f64 pass (the old u32 -> f64 re-collect doubled the walk)
+    let counts: Vec<Vec<f64>> = routing.expert_counts_by_source_f64(ep);
     let base = Placement::sharded(ep, model.n_experts, 3);
     let cfg = ProbeConfig::default();
     let windows = vec![1e-3; ep];
@@ -44,6 +42,50 @@ fn main() {
         fmt_time(s.p99),
         "~dispatch (100-300us)".into(),
     ]);
+
+    // scratch-reused planner (the balancer's steady-state path): same
+    // output bit-for-bit, no per-call allocation
+    {
+        let fabric = Fabric::flat(ep, &hw);
+        let slot_caps = vec![cfg.max_redundant; ep];
+        let mut scratch = PlanScratch::default();
+        let s = time_it(3, 30, || {
+            std::hint::black_box(planner::plan_fabric_with(
+                &mut scratch,
+                &counts,
+                &base,
+                &model,
+                &hw,
+                &fabric,
+                &windows,
+                &slot_caps,
+                &cfg,
+            ));
+        });
+        b.row(&[
+            "planner(reused scratch)".into(),
+            fmt_time(s.mean),
+            fmt_time(s.p50),
+            fmt_time(s.p99),
+            "~dispatch (100-300us)".into(),
+        ]);
+    }
+
+    // flat counts extraction: the zero-allocation decide-path variant
+    {
+        let mut flat = Vec::new();
+        let s = time_it(3, 50, || {
+            routing.expert_counts_by_source_into(ep, &mut flat);
+            std::hint::black_box(flat.len());
+        });
+        b.row(&[
+            "counts_by_source(flat, reused)".into(),
+            fmt_time(s.mean),
+            fmt_time(s.p50),
+            fmt_time(s.p99),
+            "sim-only".into(),
+        ]);
+    }
 
     let mut rm2 = RoutingModel::calibrated(1, model.n_experts, model.top_k, 4, 5);
     let s = time_it(3, 20, || {
@@ -68,6 +110,21 @@ fn main() {
         fmt_time(s.p99),
         "sim-only".into(),
     ]);
+
+    // scratch-reused dispatch-plan build (the simulator's step path)
+    {
+        let mut ds = DispatchScratch::default();
+        let s = time_it(3, 30, || {
+            std::hint::black_box(DispatchPlan::from_assignment_with(&mut ds, &routing, &a));
+        });
+        b.row(&[
+            "dispatch_plan(reused scratch)".into(),
+            fmt_time(s.mean),
+            fmt_time(s.p50),
+            fmt_time(s.p99),
+            "sim-only".into(),
+        ]);
+    }
 
     let plan = DispatchPlan::from_assignment(&routing, &a);
     let s = time_it(3, 50, || {

@@ -26,6 +26,7 @@ use crate::planner::rebalance_existing;
 use crate::routing::LayerRouting;
 use crate::simulator::LayerDecision;
 use crate::topology::HardwareProfile;
+use crate::util::parallel::ordered_map;
 
 use super::Balancer;
 
@@ -54,6 +55,9 @@ pub struct Eplb {
     /// pressure these collapse to zero long before PROBE's cyclic
     /// buffer does — the paper's Fig. 7 exclusion, enforced live.
     replica_caps: Vec<usize>,
+    /// Worker threads for the per-layer rebalance fan-out (`[perf]`
+    /// table; `1` = sequential).
+    par_threads: usize,
 }
 
 impl Eplb {
@@ -73,6 +77,7 @@ impl Eplb {
             step_idx: 0,
             n_layers_hint: 0,
             replica_caps: Vec::new(),
+            par_threads: config.perf.effective_threads(),
         }
     }
 
@@ -169,9 +174,18 @@ impl Balancer for Eplb {
         self.ensure_layers(n_layers);
         self.step_idx = step_idx;
         if self.should_rebalance() && self.n_layers_hint > 0 {
+            // Each layer's derivation reads only `&self` history, so the
+            // layers fan out across worker threads; the index-ordered
+            // merge keeps placements and `max_fetch` bit-identical to
+            // the sequential loop ([perf] parallel determinism).
+            let this = &*self;
+            let new_placements = ordered_map(
+                self.par_threads,
+                (0..self.n_layers_hint).collect(),
+                |_, layer| this.derive_placement(layer),
+            );
             let mut max_fetch = 0usize;
-            for layer in 0..self.n_layers_hint {
-                let newp = self.derive_placement(layer);
+            for (layer, newp) in new_placements.into_iter().enumerate() {
                 // transfer volume = replicas fetched vs previous placement
                 let old = self.placements[layer]
                     .clone()

@@ -98,6 +98,15 @@ pub struct Probe {
     /// Per layer index: the placement currently resident in HBM (what
     /// the last plan for that layer fetched) — the delta-plan base.
     resident: Vec<Placement>,
+    /// Reusable planner scratch buffers (reset-not-free): the steady
+    /// state observe/decide hot path plans without heap allocation.
+    scratch: planner::PlanScratch,
+    /// Flat `[e * ep + rs]` ground-truth counts buffer (decide path).
+    counts_flat: Vec<f64>,
+    /// Per-rank slot-cap buffer handed to the planner each plan.
+    caps_buf: Vec<usize>,
+    /// `[rank][expert]` loads buffer for the window-EMA update.
+    loads_buf: Vec<Vec<f64>>,
 }
 
 impl Probe {
@@ -131,6 +140,10 @@ impl Probe {
             abs_next: 0,
             planned: VecDeque::new(),
             resident: Vec::new(),
+            scratch: planner::PlanScratch::default(),
+            counts_flat: Vec::new(),
+            caps_buf: Vec::new(),
+            loads_buf: Vec::new(),
         }
     }
 
@@ -206,20 +219,15 @@ impl Probe {
         self.cfg.lookahead_depth.max(1)
     }
 
-    /// Fabric handle for the planner objective: Some only when topology
-    /// awareness is on AND the cluster actually spans nodes.
-    fn fabric_opt(&self) -> Option<&Fabric> {
-        (self.cfg.topology_aware && !self.fabric.is_flat()).then_some(&self.fabric)
-    }
-
     /// Per-rank replica-slot caps the planner budgets against: the
     /// memory governor's live headroom when published, else the full
-    /// policy budget.
-    fn slot_caps(&self) -> Vec<usize> {
+    /// policy budget. Fills the reusable `caps_buf`.
+    fn fill_slot_caps(&mut self) {
+        self.caps_buf.clear();
         if self.replica_caps.len() == self.ep {
-            self.replica_caps.clone()
+            self.caps_buf.extend_from_slice(&self.replica_caps);
         } else {
-            vec![self.cfg.max_redundant; self.ep]
+            self.caps_buf.resize(self.ep, self.cfg.max_redundant);
         }
     }
 }
@@ -293,14 +301,16 @@ impl super::Balancer for Probe {
         // plans whose target layer falls past the end of this step must
         // hide inside the NEXT step's (possibly decode-scale) windows
         let windows = self.windows_for(layer + depth >= self.n_layers);
-        let out = planner::plan_fabric(
+        self.fill_slot_caps();
+        let out = planner::plan_fabric_with(
+            &mut self.scratch,
             &pred_counts,
             &self.resident[target_layer],
             &self.model,
             &self.hw,
             &self.fabric,
             &windows,
-            &self.slot_caps(),
+            &self.caps_buf,
             &self.cfg,
         );
         self.last_iterations = out.iterations;
@@ -331,8 +341,15 @@ impl super::Balancer for Probe {
             None
         };
 
-        let actual_counts = actual.expert_counts_by_source_f64(self.ep);
+        actual.expert_counts_by_source_into(self.ep, &mut self.counts_flat);
         let planned_ahead = plan.is_some();
+        // `fabric_opt()` inlined as direct field borrows so the scratch
+        // can be handed to the polish pass mutably alongside it.
+        let fab_opt = if self.cfg.topology_aware && !self.fabric.is_flat() {
+            Some(&self.fabric)
+        } else {
+            None
+        };
         let (placement, assignment) = match plan {
             Some(p) => {
                 // Execute: ground-truth dispatch over the planned
@@ -340,17 +357,19 @@ impl super::Balancer for Probe {
                 // actual router counts (prediction error only shifts
                 // volumes), then briefly polished.
                 let assignment = if p.placement.total_replicas() > 0 {
-                    let rescaled = p.assignment.rescale_to_counts(&actual_counts, &p.placement);
-                    planner::polish_assignment_on(
+                    let rescaled =
+                        p.assignment.rescale_to_counts_flat(&self.counts_flat, &p.placement);
+                    planner::polish_assignment_with(
+                        &mut self.scratch,
                         rescaled,
                         &p.placement,
                         &self.model,
                         &self.hw,
-                        self.fabric_opt(),
+                        fab_opt,
                         8,
                     )
                 } else {
-                    Assignment::locality_first_from_counts(&actual_counts, &p.placement)
+                    Assignment::locality_first_from_counts_flat(&self.counts_flat, &p.placement)
                 };
                 (p.placement, assignment)
             }
@@ -358,14 +377,15 @@ impl super::Balancer for Probe {
                 // pipeline fill: static sharding, locality-first
                 let placement =
                     Placement::sharded(self.ep, self.model.n_experts, self.cfg.max_redundant);
-                let assignment = Assignment::locality_first_from_counts(&actual_counts, &placement);
+                let assignment =
+                    Assignment::locality_first_from_counts_flat(&self.counts_flat, &placement);
                 (placement, assignment)
             }
         };
 
         // window EMA update from realized compute
-        let loads = assignment.rank_expert_loads();
-        let comp = crate::perfmodel::rank_compute_times(&loads, &self.model, &self.hw);
+        assignment.rank_expert_loads_into(&mut self.loads_buf);
+        let comp = crate::perfmodel::rank_compute_times(&self.loads_buf, &self.model, &self.hw);
         for (w, &c) in self.window_ema.iter_mut().zip(comp.iter()) {
             *w = 0.8 * *w + 0.2 * c;
         }

@@ -226,6 +226,45 @@ impl Default for MemoryConfig {
     }
 }
 
+/// Raw-speed knobs (`[perf]` TOML table, ISSUE 6): parallel execution
+/// of independent work (fleet replicas, per-layer rebalance plans).
+/// Merges are index-ordered, so results are bit-identical to the
+/// sequential path — `parallel` trades threads for wall-clock only.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PerfConfig {
+    /// Run independent work (fleet replicas, EPLB per-layer plans) on
+    /// scoped worker threads with deterministic index-ordered merge.
+    /// `false` = fully sequential (debugging / single-core CI).
+    pub parallel: bool,
+    /// Worker threads for parallel sections. `0` = auto (available
+    /// parallelism, capped at 8).
+    pub threads: usize,
+}
+
+impl Default for PerfConfig {
+    fn default() -> PerfConfig {
+        PerfConfig {
+            parallel: true,
+            threads: 0,
+        }
+    }
+}
+
+impl PerfConfig {
+    /// Effective worker-thread count: 1 when parallelism is disabled,
+    /// otherwise `threads` (or the auto heuristic when 0).
+    pub fn effective_threads(&self) -> usize {
+        if !self.parallel {
+            return 1;
+        }
+        if self.threads > 0 {
+            self.threads
+        } else {
+            crate::util::parallel::auto_threads()
+        }
+    }
+}
+
 /// Full experiment / serving configuration.
 #[derive(Debug, Clone)]
 pub struct Config {
@@ -247,6 +286,8 @@ pub struct Config {
     pub batch: BatchConfig,
     /// Memory-governance knobs (`[memory]` table).
     pub memory: MemoryConfig,
+    /// Raw-speed knobs (`[perf]` table).
+    pub perf: PerfConfig,
     /// Decode tokens per rank per step.
     pub batch_per_rank: usize,
     /// Chunked-prefill tokens per rank.
@@ -271,6 +312,7 @@ impl Default for Config {
             scenario: ScenarioConfig::default(),
             batch: BatchConfig::default(),
             memory: MemoryConfig::default(),
+            perf: PerfConfig::default(),
             batch_per_rank: 768,
             prefill_chunk_per_rank: 8192,
             mean_ctx: 64,
@@ -466,6 +508,12 @@ impl Config {
                         return Err("memory.hbm_capacity_gb must be finite and >= 0".into());
                     }
                     cfg.memory.hbm_capacity_gb = g;
+                }
+                "perf.parallel" => {
+                    cfg.perf.parallel = value.as_bool().ok_or("perf.parallel: bool")?
+                }
+                "perf.threads" => {
+                    cfg.perf.threads = value.as_int().ok_or("perf.threads: int")? as usize
                 }
                 "seed" => cfg.seed = value.as_int().ok_or("int")? as u64,
                 other => return Err(format!("unknown config key: {other}")),
@@ -698,6 +746,28 @@ hbm_capacity_gb = 33.5
         assert!(Config::from_toml_str("[memory]\nhbm_capacity_gb = -1.0\n").is_err());
         assert!(Config::from_toml_str("[memory]\nhbm_capacity_gb = nan\n").is_err());
         assert!(Config::from_toml_str("[batch]\ntoken_budget = \"big\"\n").is_err());
+    }
+
+    #[test]
+    fn parse_perf_table() {
+        let text = r#"
+[perf]
+parallel = false
+threads = 3
+"#;
+        let c = Config::from_toml_str(text).unwrap();
+        assert!(!c.perf.parallel);
+        assert_eq!(c.perf.threads, 3);
+        // parallel off forces one effective worker regardless of threads
+        assert_eq!(c.perf.effective_threads(), 1);
+        // defaults: parallel on, auto thread count >= 1
+        let d = Config::from_toml_str("").unwrap();
+        assert_eq!(d.perf, PerfConfig::default());
+        assert!(d.perf.parallel);
+        assert!(d.perf.effective_threads() >= 1);
+        let fixed = Config::from_toml_str("[perf]\nthreads = 5\n").unwrap();
+        assert_eq!(fixed.perf.effective_threads(), 5);
+        assert!(Config::from_toml_str("[perf]\nparallel = 3\n").is_err());
     }
 
     #[test]

@@ -123,14 +123,15 @@ pub fn run_cell(
     replicas: usize,
     policy: DispatchKind,
 ) -> FleetReport {
+    let base_cfg = fleet_cfg(p);
     let cfg = FleetConfig {
         replicas,
         policy,
         max_steps: p.max_steps,
-        threads: 0,
+        threads: base_cfg.perf.threads,
+        parallel: base_cfg.perf.parallel,
     };
     let reqs = request_stream(p, w, replicas);
-    let base_cfg = fleet_cfg(p);
     let seed = p.seed;
     type SimEngine = ServingEngine<SimExecutor>;
     let factory = move |idx: usize| -> Result<SimEngine> {

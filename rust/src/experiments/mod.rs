@@ -17,6 +17,7 @@ pub mod fig10_fidelity;
 pub mod fleet;
 pub mod memory;
 pub mod pipeline;
+pub mod speed;
 pub mod volatility;
 pub mod fig11_timeline;
 pub mod fig2_ir;

@@ -1,0 +1,288 @@
+//! `probe bench speed` — raw-speed suite for the §Perf pass (ISSUE 6).
+//!
+//! Two measurements per rank count (default {16, 32, 64, 128}), both on
+//! the `storm` scenario preset:
+//!
+//! 1. **steps/sec** — wall-clock throughput of the full serving loop
+//!    (coordinator + PROBE balancer + simulator) over a calibrated
+//!    storm request stream: the end-to-end number the arena-backed
+//!    step state, incremental accounting, and parallel sections buy.
+//! 2. **planner-μs/step** — mean wall-clock of Algorithm 1
+//!    ([`planner::plan_fabric_with`] with a reused
+//!    [`planner::PlanScratch`]) on routed counts at that rank count,
+//!    multiplied by the simulated layer depth: the control-plane cost
+//!    a real deployment must hide inside the dispatch window.
+//!
+//! Results go to `bench_results/BENCH_speed.json`; CI diffs steps/sec
+//! against the committed `BENCH_speed_baseline.json` (advisory ±15%).
+
+use std::time::Instant;
+
+use crate::config::{BalancerKind, Config};
+use crate::coordinator::Coordinator;
+use crate::perfmodel::expert_compute_time;
+use crate::placement::Placement;
+use crate::planner::{self, PlanScratch};
+use crate::routing::RoutingModel;
+use crate::topology::Cluster;
+use crate::util::bench::BenchSet;
+
+use super::{make_balancer, SIM_LAYERS};
+
+/// Sweep parameters.
+pub struct SpeedParams {
+    /// Rank counts swept (must divide the model's expert count).
+    pub ranks: Vec<usize>,
+    /// Scenario horizon in decode-step units.
+    pub steps: usize,
+    /// Offered load as a fraction of calibrated decode capacity.
+    pub load: f64,
+    /// Decode tokens per rank (kept small so the horizon stays short).
+    pub batch_per_rank: usize,
+    /// Planner invocations timed per rank count.
+    pub plans: usize,
+    /// Safety cap on decode steps per cell.
+    pub max_steps: usize,
+    /// Root seed.
+    pub seed: u64,
+}
+
+impl Default for SpeedParams {
+    fn default() -> Self {
+        SpeedParams {
+            ranks: vec![16, 32, 64, 128],
+            steps: 120,
+            load: 0.7,
+            batch_per_rank: 2,
+            plans: 40,
+            max_steps: 20_000,
+            seed: 41,
+        }
+    }
+}
+
+/// Serving config at `ranks` expert-parallel ranks (flat fabric, sim
+/// layer depth, small decode batch).
+pub fn speed_cfg(p: &SpeedParams, ranks: usize) -> Config {
+    let mut cfg = Config::default();
+    assert!(
+        cfg.model.n_experts % ranks == 0,
+        "rank count {ranks} must divide {} experts",
+        cfg.model.n_experts
+    );
+    cfg.cluster = Cluster::new(ranks, cfg.cluster.profile.clone());
+    cfg.model.n_layers = SIM_LAYERS;
+    cfg.batch_per_rank = p.batch_per_rank;
+    cfg.prefill_chunk_per_rank = 1024;
+    cfg
+}
+
+/// Mean wall-clock seconds of one Algorithm 1 invocation at the
+/// config's rank count: `plans` delta plans over drifting routed
+/// counts, scratch reused across calls exactly as the PROBE balancer
+/// does in steady state.
+pub fn planner_secs_per_plan(cfg: &Config, plans: usize, seed: u64) -> f64 {
+    let ep = cfg.cluster.ep;
+    let model = &cfg.model;
+    let hw = &cfg.cluster.profile;
+    let fabric = &cfg.cluster.fabric;
+    let mut rm = RoutingModel::calibrated(4, model.n_experts, model.top_k, 3, seed);
+    let tokens = 64 * ep;
+    let mut scratch = PlanScratch::default();
+    let mut resident = Placement::sharded(ep, model.n_experts, cfg.probe.max_redundant);
+    let slot_caps = vec![cfg.probe.max_redundant; ep];
+    let mut windows = vec![0.0; ep];
+    let mut total = 0.0f64;
+    let mut done = 0usize;
+    while done < plans.max(1) {
+        let routing = rm.route_step(&vec![0u16; tokens]);
+        for lr in &routing.layers {
+            if done >= plans.max(1) {
+                break;
+            }
+            let counts = lr.expert_counts_by_source_f64(ep);
+            // hiding window: average static-shard compute per rank
+            // (the same conservative bootstrap the balancer uses)
+            let mut avg = 0.0;
+            for row in &counts {
+                let c: f64 = row.iter().sum();
+                avg += expert_compute_time(c, model, hw);
+            }
+            avg /= ep as f64;
+            windows.iter_mut().for_each(|w| *w = avg);
+            let t0 = Instant::now();
+            let out = planner::plan_fabric_with(
+                &mut scratch,
+                &counts,
+                &resident,
+                model,
+                hw,
+                fabric,
+                &windows,
+                &slot_caps,
+                &cfg.probe,
+            );
+            total += t0.elapsed().as_secs_f64();
+            resident = out.placement;
+            done += 1;
+        }
+        rm.step_drift();
+    }
+    total / done as f64
+}
+
+/// Outcome of one rank-count serving cell.
+#[derive(Debug, Clone)]
+pub struct SpeedCell {
+    /// Requests in the calibrated storm stream.
+    pub submitted: usize,
+    /// Requests that completed within the step cap.
+    pub completed: usize,
+    /// Decode steps executed.
+    pub steps: usize,
+    /// Wall-clock seconds of the timed serving loop.
+    pub wall: f64,
+}
+
+impl SpeedCell {
+    /// Decode steps per wall-clock second.
+    pub fn steps_per_sec(&self) -> f64 {
+        if self.wall > 0.0 {
+            self.steps as f64 / self.wall
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Run the storm serving loop under PROBE at one rank count, wall-clock
+/// timed end to end (stream generation and calibration excluded).
+pub fn run_serving_cell(p: &SpeedParams, cfg: &Config) -> Result<SpeedCell, String> {
+    let reqs =
+        super::volatility::scenario_stream_for(cfg, "storm", p.load, p.steps, p.seed)?;
+    let bal = make_balancer(BalancerKind::Probe, cfg, p.seed);
+    let mut c = Coordinator::new(cfg.clone(), bal, p.seed);
+    c.submit_all(reqs.iter().cloned());
+    let t0 = Instant::now();
+    let mut steps = 0usize;
+    while steps < p.max_steps {
+        match c.decode_step() {
+            Some(_) => steps += 1,
+            None => break,
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    Ok(SpeedCell {
+        submitted: reqs.len(),
+        completed: c
+            .metrics
+            .requests
+            .iter()
+            .filter(|m| m.finished.is_some())
+            .count(),
+        steps,
+        wall,
+    })
+}
+
+/// Run the sweep and emit `bench_results/BENCH_speed.json`.
+pub fn run(p: &SpeedParams) -> BenchSet {
+    let mut b = BenchSet::new(
+        "BENCH_speed",
+        &[
+            "ranks",
+            "requests",
+            "completed",
+            "steps",
+            "steps_per_s",
+            "planner_us_per_step",
+            "wall_ms",
+        ],
+    );
+    for &ranks in &p.ranks {
+        let cfg = speed_cfg(p, ranks);
+        let plan_s = planner_secs_per_plan(&cfg, p.plans, p.seed ^ ranks as u64);
+        let cell = match run_serving_cell(p, &cfg) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("speed cell at {ranks} ranks failed: {e}");
+                continue;
+            }
+        };
+        b.row(&[
+            ranks.to_string(),
+            cell.submitted.to_string(),
+            cell.completed.to_string(),
+            cell.steps.to_string(),
+            format!("{:.1}", cell.steps_per_sec()),
+            format!("{:.1}", plan_s * 1e6 * SIM_LAYERS as f64),
+            format!("{:.1}", cell.wall * 1e3),
+        ]);
+    }
+    b.note(&format!(
+        "storm preset, load {:.0}% of decode capacity, horizon {} steps, \
+         {} sim layers, batch/rank {}, probe balancer",
+        p.load * 100.0,
+        p.steps,
+        SIM_LAYERS,
+        p.batch_per_rank
+    ));
+    b.note("steps_per_s = wall-clock serving-loop throughput (host-dependent;");
+    b.note("CI diffs vs BENCH_speed_baseline.json at +/-15%, advisory only)");
+    b.note(&format!(
+        "planner_us_per_step = {} layers x mean plan_fabric_with wall-clock",
+        SIM_LAYERS
+    ));
+    b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> SpeedParams {
+        SpeedParams {
+            ranks: vec![8, 16],
+            steps: 30,
+            load: 0.7,
+            batch_per_rank: 1,
+            plans: 6,
+            max_steps: 3_000,
+            seed: 5,
+        }
+    }
+
+    #[test]
+    fn speed_bench_emits_all_rank_points() {
+        let p = small();
+        let b = run(&p);
+        assert_eq!(b.rows.len(), 2, "one row per rank count");
+        for row in &b.rows {
+            let steps: usize = row[3].parse().unwrap();
+            let sps: f64 = row[4].parse().unwrap();
+            let plan_us: f64 = row[5].parse().unwrap();
+            assert!(steps > 0, "{row:?}: no steps ran");
+            assert!(sps > 0.0, "{row:?}: zero throughput");
+            assert!(plan_us > 0.0 && plan_us.is_finite(), "{row:?}");
+        }
+    }
+
+    #[test]
+    fn planner_microbench_positive_and_scales() {
+        let p = small();
+        let c8 = speed_cfg(&p, 8);
+        let t8 = planner_secs_per_plan(&c8, 4, 3);
+        assert!(t8 > 0.0 && t8.is_finite());
+    }
+
+    #[test]
+    fn storm_run_completes_at_128_ranks() {
+        // the acceptance smoke: a 128-rank storm cell must finish
+        let mut p = small();
+        p.ranks = vec![128];
+        p.steps = 10;
+        let cfg = speed_cfg(&p, 128);
+        let cell = run_serving_cell(&p, &cfg).expect("128-rank cell");
+        assert!(cell.steps > 0 && cell.submitted > 0);
+    }
+}

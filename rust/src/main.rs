@@ -56,10 +56,12 @@ fn print_help() {
                      [--seed S]\n\
            prefill   --balancer B --tokens N --model M\n\
            bench     fig2|fig3|fig5|fig7|fig8|fig9|fig10|fig11|fleet|\n\
-                     pipeline|fabric|volatility|memory|all [--steps N]\n\
+                     pipeline|fabric|volatility|memory|speed|all [--steps N]\n\
                      (fabric: multi-node sweep, also --rails N;\n\
                       volatility: scenario x balancer sweep, also --load F;\n\
-                      memory: governance sweep, also --requests N)\n\
+                      memory: governance sweep, also --requests N;\n\
+                      speed: steps/sec + planner-us/step raw-speed sweep,\n\
+                      also --ranks 16,32,64,128 --load F)\n\
            ablate    [--steps N]\n\
            info\n"
     );
@@ -410,6 +412,32 @@ fn cmd_bench(args: &Args) -> i32 {
                 p.seed = args.get_u64("seed", p.seed);
                 exp::fleet::run(&p)
             }
+            "speed" => {
+                let mut p = exp::speed::SpeedParams::default();
+                p.steps = args.get_usize("steps", p.steps);
+                p.load = args.get_f64("load", p.load);
+                p.seed = args.get_u64("seed", p.seed);
+                if let Some(list) = args.get("ranks") {
+                    let parsed: Result<Vec<usize>, _> =
+                        list.split(',').map(|s| s.trim().parse::<usize>()).collect();
+                    match parsed {
+                        Ok(v) if !v.is_empty() && v.iter().all(|&r| r > 0) => p.ranks = v,
+                        _ => {
+                            eprintln!("bench speed: --ranks wants a comma list like 16,32");
+                            return false;
+                        }
+                    }
+                }
+                if p.steps == 0 || !(p.load > 0.0 && p.load.is_finite()) {
+                    eprintln!(
+                        "bench speed needs --steps >= 1 and finite --load > 0 \
+                         (got steps {}, load {})",
+                        p.steps, p.load
+                    );
+                    return false;
+                }
+                exp::speed::run(&p)
+            }
             other => {
                 eprintln!("unknown figure {other}");
                 return false;
@@ -422,7 +450,7 @@ fn cmd_bench(args: &Args) -> i32 {
     if which == "all" {
         for f in [
             "fig2", "fig3", "fig5", "fig7", "fig8", "fig9", "fig10", "fig11", "fleet", "pipeline",
-            "fabric", "volatility", "memory",
+            "fabric", "volatility", "memory", "speed",
         ] {
             run_one(f);
         }

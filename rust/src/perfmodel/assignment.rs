@@ -33,11 +33,12 @@ impl Assignment {
     pub fn locality_first(routing: &LayerRouting, placement: &Placement) -> Assignment {
         let ep = placement.ep;
         let mut a = Assignment::zeros(routing.n_experts, ep);
-        let by_src = routing.expert_counts_by_source(ep);
+        let mut counts = Vec::new();
+        routing.expert_counts_by_source_into(ep, &mut counts);
         for e in 0..routing.n_experts {
             let home = placement.home_rank(e);
             for rs in 0..ep {
-                a.add(e, rs, home, by_src[e][rs] as f64);
+                a.add(e, rs, home, counts[e * ep + rs]);
             }
         }
         a
@@ -56,6 +57,26 @@ impl Assignment {
             let home = placement.home_rank(e);
             for rs in 0..ep {
                 a.add(e, rs, home, counts_by_source[e][rs]);
+            }
+        }
+        a
+    }
+
+    /// [`Assignment::locality_first_from_counts`] from a flat
+    /// `counts[e * ep + rs]` buffer — the zero-allocation caller path
+    /// paired with `LayerRouting::expert_counts_by_source_into`.
+    pub fn locality_first_from_counts_flat(
+        counts_flat: &[f64],
+        placement: &Placement,
+    ) -> Assignment {
+        let ep = placement.ep;
+        let n_experts = placement.n_experts;
+        debug_assert_eq!(counts_flat.len(), n_experts * ep);
+        let mut a = Assignment::zeros(n_experts, ep);
+        for e in 0..n_experts {
+            let home = placement.home_rank(e);
+            for rs in 0..ep {
+                a.add(e, rs, home, counts_flat[e * ep + rs]);
             }
         }
         a
@@ -91,6 +112,41 @@ impl Assignment {
         moved
     }
 
+    /// [`Assignment::shift`] with an undo journal (ISSUE 6 incremental
+    /// planner): the touched cells' raw values are pushed onto `log`
+    /// before the move, so [`Assignment::undo_shifts`] restores them
+    /// **bit-exactly** — speculative candidate moves no longer need a
+    /// full O(E·ep²) clone of the flow tensor.
+    pub fn shift_logged(
+        &mut self,
+        e: usize,
+        rs: usize,
+        from: usize,
+        to: usize,
+        x: f64,
+        log: &mut Vec<ShiftUndo>,
+    ) -> f64 {
+        let i_from = self.idx(e, rs, from);
+        let i_to = self.idx(e, rs, to);
+        log.push(ShiftUndo {
+            idx_from: i_from,
+            idx_to: i_to,
+            old_from: self.flow[i_from],
+            old_to: self.flow[i_to],
+        });
+        self.shift(e, rs, from, to, x)
+    }
+
+    /// Pop and revert journaled shifts until `log` is back to length
+    /// `mark` (exact bit-level restore, newest first).
+    pub fn undo_shifts(&mut self, log: &mut Vec<ShiftUndo>, mark: usize) {
+        while log.len() > mark {
+            let u = log.pop().expect("journal underflow");
+            self.flow[u.idx_to] = u.old_to;
+            self.flow[u.idx_from] = u.old_from;
+        }
+    }
+
     /// Tokens of expert `e` executed on rank `rt` (n_{e,r}).
     pub fn tokens_on(&self, e: usize, rt: usize) -> f64 {
         (0..self.ep).map(|rs| self.get(e, rs, rt)).sum()
@@ -107,7 +163,15 @@ impl Assignment {
 
     /// Per-rank per-expert loads: `loads[rank][expert]` for eq. 2.
     pub fn rank_expert_loads(&self) -> Vec<Vec<f64>> {
-        let mut loads = vec![vec![0.0; self.n_experts]; self.ep];
+        let mut loads = Vec::new();
+        self.rank_expert_loads_into(&mut loads);
+        loads
+    }
+
+    /// [`Assignment::rank_expert_loads`] into a caller-owned buffer
+    /// (reset-not-free: every inner row is reused — ISSUE 6 hot path).
+    pub fn rank_expert_loads_into(&self, loads: &mut Vec<Vec<f64>>) {
+        crate::util::arena::reset_nested_f64(loads, self.ep, self.n_experts);
         for e in 0..self.n_experts {
             for rs in 0..self.ep {
                 for rt in 0..self.ep {
@@ -118,7 +182,6 @@ impl Assignment {
                 }
             }
         }
-        loads
     }
 
     /// Total tokens of expert `e` (conservation check: Σ_r n_{e,r} = n_e).
@@ -136,11 +199,31 @@ impl Assignment {
         actual_counts_by_source: &[Vec<f64>],
         placement: &Placement,
     ) -> Assignment {
+        self.rescale_with(placement, |e, rs| actual_counts_by_source[e][rs])
+    }
+
+    /// [`Assignment::rescale_to_counts`] from a flat `counts[e*ep + rs]`
+    /// buffer (the zero-allocation counts format of
+    /// [`LayerRouting::expert_counts_by_source_into`], ISSUE 6).
+    pub fn rescale_to_counts_flat(
+        &self,
+        actual_counts_flat: &[f64],
+        placement: &Placement,
+    ) -> Assignment {
+        debug_assert_eq!(actual_counts_flat.len(), self.n_experts * self.ep);
+        self.rescale_with(placement, |e, rs| actual_counts_flat[e * self.ep + rs])
+    }
+
+    fn rescale_with(
+        &self,
+        placement: &Placement,
+        counts: impl Fn(usize, usize) -> f64,
+    ) -> Assignment {
         let mut out = Assignment::zeros(self.n_experts, self.ep);
         for e in 0..self.n_experts {
             let home = placement.home_rank(e);
             for rs in 0..self.ep {
-                let actual = actual_counts_by_source[e][rs];
+                let actual = counts(e, rs);
                 if actual <= 0.0 {
                     continue;
                 }
@@ -191,6 +274,17 @@ impl Assignment {
     }
 }
 
+/// Journal entry recording the raw cell values one
+/// [`Assignment::shift_logged`] overwrote (see
+/// [`Assignment::undo_shifts`]).
+#[derive(Debug, Clone, Copy)]
+pub struct ShiftUndo {
+    idx_from: usize,
+    idx_to: usize,
+    old_from: f64,
+    old_to: f64,
+}
+
 /// Concrete per-slot dispatch targets for one layer.
 #[derive(Debug, Clone, PartialEq)]
 pub struct DispatchPlan {
@@ -198,29 +292,80 @@ pub struct DispatchPlan {
     pub targets: Vec<u16>,
 }
 
+/// Reusable flat working buffers for [`DispatchPlan::from_assignment_with`]
+/// (reset-not-free: all five buffers are cleared and refilled in place
+/// each layer — ISSUE 6 zero-allocation hot path).
+#[derive(Debug, Clone, Default)]
+pub struct DispatchScratch {
+    totals: Vec<u32>,        // [e*ep + rs] actual token counts
+    quotas: Vec<u32>,        // [(e*ep + rs)*ep + rt] rounded quotas
+    raw: Vec<f64>,           // [ep] one group's flow row
+    scaled: Vec<f64>,        // [ep] largest-remainder scratch
+    rema: Vec<(usize, f64)>, // [ep] largest-remainder order
+    cur_rt: Vec<u16>,        // [groups] cursor: current target
+    cur_left: Vec<u32>,      // [groups] cursor: remaining quota
+}
+
 impl DispatchPlan {
     /// Materialize a rank-granular assignment into per-slot targets.
     /// Within each (expert, source-rank) group, tokens are handed out to
     /// target ranks in order, consuming each target's (rounded) quota.
     pub fn from_assignment(routing: &LayerRouting, a: &Assignment) -> DispatchPlan {
+        DispatchPlan::from_assignment_with(&mut DispatchScratch::default(), routing, a)
+    }
+
+    /// [`DispatchPlan::from_assignment`] with caller-owned scratch
+    /// buffers (identical output; no steady-state allocation besides the
+    /// returned plan itself).
+    pub fn from_assignment_with(
+        scratch: &mut DispatchScratch,
+        routing: &LayerRouting,
+        a: &Assignment,
+    ) -> DispatchPlan {
         let ep = a.ep;
         let k = routing.top_k;
+        let groups = routing.n_experts * ep;
+        // actual per-(e, rs) token counts
+        let totals = &mut scratch.totals;
+        totals.clear();
+        totals.resize(groups, 0);
+        for t in 0..routing.n_tokens {
+            let rs = token_rank(t, routing.n_tokens, ep);
+            for &e in routing.token_experts(t) {
+                totals[e as usize * ep + rs] += 1;
+            }
+        }
         // per (e, rs): integer quota per rt via largest-remainder rounding
-        let mut quotas: Vec<Vec<u32>> = Vec::with_capacity(routing.n_experts * ep);
-        let by_src = routing.expert_counts_by_source(ep);
+        let quotas = &mut scratch.quotas;
+        quotas.clear();
+        quotas.resize(groups * ep, 0);
+        scratch.raw.clear();
+        scratch.raw.resize(ep, 0.0);
         for e in 0..routing.n_experts {
             for rs in 0..ep {
-                let total = by_src[e][rs];
-                let raw: Vec<f64> = (0..ep).map(|rt| a.get(e, rs, rt)).collect();
-                quotas.push(round_quota(&raw, total));
+                let gi = e * ep + rs;
+                for rt in 0..ep {
+                    scratch.raw[rt] = a.get(e, rs, rt);
+                }
+                round_quota_into(
+                    &scratch.raw,
+                    totals[gi],
+                    &mut quotas[gi * ep..(gi + 1) * ep],
+                    &mut scratch.scaled,
+                    &mut scratch.rema,
+                );
             }
         }
         // amortized-O(1) per slot: each group keeps a (current target,
         // remaining quota) cursor that only advances forward (§Perf).
-        let mut cur_rt: Vec<u16> = vec![0; routing.n_experts * ep];
-        let mut cur_left: Vec<u32> = vec![0; routing.n_experts * ep];
-        for gi in 0..quotas.len() {
-            let q = &quotas[gi];
+        let cur_rt = &mut scratch.cur_rt;
+        let cur_left = &mut scratch.cur_left;
+        cur_rt.clear();
+        cur_rt.resize(groups, 0);
+        cur_left.clear();
+        cur_left.resize(groups, 0);
+        for gi in 0..groups {
+            let q = &quotas[gi * ep..(gi + 1) * ep];
             let first = q.iter().position(|&c| c > 0).unwrap_or(0);
             cur_rt[gi] = first as u16;
             cur_left[gi] = q.get(first).copied().unwrap_or(0);
@@ -233,7 +378,7 @@ impl DispatchPlan {
                 let gi = e * ep + rs;
                 while cur_left[gi] == 0 && (cur_rt[gi] as usize) < ep - 1 {
                     cur_rt[gi] += 1;
-                    cur_left[gi] = quotas[gi][cur_rt[gi] as usize];
+                    cur_left[gi] = quotas[gi * ep + cur_rt[gi] as usize];
                 }
                 targets[t * k + j] = cur_rt[gi];
                 cur_left[gi] = cur_left[gi].saturating_sub(1);
@@ -245,7 +390,24 @@ impl DispatchPlan {
 
 /// Round non-negative weights to integers summing to `total`
 /// (largest-remainder method).
+#[cfg(test)]
 fn round_quota(raw: &[f64], total: u32) -> Vec<u32> {
+    let mut out = vec![0u32; raw.len()];
+    round_quota_into(raw, total, &mut out, &mut Vec::new(), &mut Vec::new());
+    out
+}
+
+/// [`round_quota`] into a caller-provided slice with reusable scratch
+/// (identical arithmetic; zero allocation once the scratch is warm).
+fn round_quota_into(
+    raw: &[f64],
+    total: u32,
+    out: &mut [u32],
+    scaled: &mut Vec<f64>,
+    rema: &mut Vec<(usize, f64)>,
+) {
+    debug_assert_eq!(out.len(), raw.len());
+    out.iter_mut().for_each(|x| *x = 0);
     // fast path (§Perf): the vast majority of (expert, source) groups
     // send all tokens to a single target (unreplicated experts)
     let mut nonzero = 0usize;
@@ -257,14 +419,12 @@ fn round_quota(raw: &[f64], total: u32) -> Vec<u32> {
         }
     }
     if nonzero == 1 {
-        let mut out = vec![0u32; raw.len()];
         out[last] = total;
-        return out;
+        return;
     }
     let sum: f64 = raw.iter().sum();
     if sum <= 0.0 || total == 0 {
         // degenerate: dump everything on the argmax (home) slot
-        let mut out = vec![0u32; raw.len()];
         if total > 0 {
             let arg = raw
                 .iter()
@@ -274,16 +434,17 @@ fn round_quota(raw: &[f64], total: u32) -> Vec<u32> {
                 .unwrap_or(0);
             out[arg] = total;
         }
-        return out;
+        return;
     }
-    let scaled: Vec<f64> = raw.iter().map(|&x| x * total as f64 / sum).collect();
-    let mut out: Vec<u32> = scaled.iter().map(|&x| x.floor() as u32).collect();
-    let mut assigned: u32 = out.iter().sum();
-    let mut rema: Vec<(usize, f64)> = scaled
-        .iter()
-        .enumerate()
-        .map(|(i, &x)| (i, x - x.floor()))
-        .collect();
+    scaled.clear();
+    scaled.extend(raw.iter().map(|&x| x * total as f64 / sum));
+    let mut assigned: u32 = 0;
+    for (o, &x) in out.iter_mut().zip(scaled.iter()) {
+        *o = x.floor() as u32;
+        assigned += *o;
+    }
+    rema.clear();
+    rema.extend(scaled.iter().enumerate().map(|(i, &x)| (i, x - x.floor())));
     rema.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
     let mut i = 0;
     while assigned < total {
@@ -291,7 +452,6 @@ fn round_quota(raw: &[f64], total: u32) -> Vec<u32> {
         assigned += 1;
         i += 1;
     }
-    out
 }
 
 #[cfg(test)]
@@ -393,6 +553,58 @@ mod tests {
         assert_eq!(q.iter().sum::<u32>(), 5);
         let q = round_quota(&[1.0], 0);
         assert_eq!(q.iter().sum::<u32>(), 0);
+    }
+
+    #[test]
+    fn shift_logged_undo_restores_bit_exact() {
+        let r = routing(64, 4, 32, 7);
+        let mut p = Placement::sharded(8, 32, 3);
+        p.add_replica(0, 7).unwrap();
+        p.add_replica(5, 2).unwrap();
+        let mut a = Assignment::locality_first(&r, &p);
+        let before = a.clone();
+        let mut log = Vec::new();
+        let mark = log.len();
+        a.shift_logged(0, 1, p.home_rank(0), 7, 2.5, &mut log);
+        a.shift_logged(5, 3, p.home_rank(5), 2, 1.0, &mut log);
+        a.shift_logged(0, 1, 7, p.home_rank(0), 0.25, &mut log);
+        assert_ne!(a, before);
+        a.undo_shifts(&mut log, mark);
+        assert_eq!(a, before, "undo must restore the exact bits");
+        assert!(log.is_empty());
+    }
+
+    #[test]
+    fn dispatch_scratch_matches_fresh_path() {
+        let r = routing(128, 4, 32, 9);
+        let mut p = Placement::sharded(8, 32, 3);
+        p.add_replica(0, 5).unwrap();
+        let mut a = Assignment::locality_first(&r, &p);
+        let have = a.get(0, 2, 0);
+        a.shift(0, 2, 0, 5, have / 2.0);
+        let fresh = DispatchPlan::from_assignment(&r, &a);
+        let mut scratch = DispatchScratch::default();
+        // run twice through the same scratch: reuse must not leak state
+        for _ in 0..2 {
+            let reused = DispatchPlan::from_assignment_with(&mut scratch, &r, &a);
+            assert_eq!(fresh, reused);
+        }
+    }
+
+    #[test]
+    fn rescale_flat_matches_nested() {
+        let r = routing(96, 4, 32, 11);
+        let mut p = Placement::sharded(8, 32, 3);
+        p.add_replica(3, 6).unwrap();
+        let mut a = Assignment::locality_first(&r, &p);
+        let have = a.get(3, 1, p.home_rank(3));
+        a.shift(3, 1, p.home_rank(3), 6, have / 3.0);
+        let nested = r.expert_counts_by_source_f64(8);
+        let mut flat = Vec::new();
+        r.expert_counts_by_source_into(8, &mut flat);
+        let via_nested = a.rescale_to_counts(&nested, &p);
+        let via_flat = a.rescale_to_counts_flat(&flat, &p);
+        assert_eq!(via_nested, via_flat);
     }
 
     #[test]

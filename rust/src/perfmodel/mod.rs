@@ -11,7 +11,7 @@
 
 pub mod assignment;
 
-pub use assignment::{Assignment, DispatchPlan};
+pub use assignment::{Assignment, DispatchPlan, DispatchScratch, ShiftUndo};
 
 use crate::model::MoeModel;
 use crate::routing::{token_rank, LayerRouting};
@@ -107,10 +107,44 @@ impl TrafficMatrix {
         }
     }
 
+    /// Reset to a zero matrix over `ep` ranks, reusing the existing
+    /// allocation when it is large enough (arena reset-not-free).
+    pub fn reset(&mut self, ep: usize) {
+        self.ep = ep;
+        self.bytes.clear();
+        self.bytes.resize(ep * ep, 0.0);
+    }
+
     /// Add `b` bytes to the `src → dst` cell.
     #[inline]
     pub fn add(&mut self, src: usize, dst: usize, b: f64) {
         self.bytes[src * self.ep + dst] += b;
+    }
+
+    /// Incremental delta (ISSUE 6): move `b` bytes of `src`'s egress
+    /// from destination `old_dst` to `new_dst` — the traffic effect of
+    /// reassigning tokens between expert replicas. O(1) vs an
+    /// O(ranks²) rebuild; reverse by calling with the destinations
+    /// swapped (`shift(src, new_dst, old_dst, b)`).
+    #[inline]
+    pub fn shift(&mut self, src: usize, old_dst: usize, new_dst: usize, b: f64) {
+        self.bytes[src * self.ep + old_dst] -= b;
+        self.bytes[src * self.ep + new_dst] += b;
+    }
+
+    /// Apply a set of point flows (e.g. a `LayerDecision`'s prefetch
+    /// flows) as deltas; [`TrafficMatrix::unapply_flows`] undoes them.
+    pub fn apply_flows(&mut self, flows: &[crate::fabric::Flow]) {
+        for f in flows {
+            self.add(f.src, f.dst, f.bytes);
+        }
+    }
+
+    /// Subtract a previously applied flow set (delta undo).
+    pub fn unapply_flows(&mut self, flows: &[crate::fabric::Flow]) {
+        for f in flows {
+            self.add(f.src, f.dst, -f.bytes);
+        }
     }
 
     /// Bytes in the `src → dst` cell.
@@ -185,15 +219,23 @@ fn visit_dispatch_payloads(
     mut visit: impl FnMut(usize, usize),
 ) {
     let k = routing.top_k;
-    let mut dests = [false; 64]; // ep <= 64
-    assert!(ep <= 64);
+    // stack scratch up to 128 ranks, heap beyond (no hard ep cap —
+    // ISSUE 6 runs 128-rank fleets; larger groups still work).
+    let mut stack = [false; 128];
+    let mut heap;
+    let dests: &mut [bool] = if ep <= 128 {
+        &mut stack[..ep]
+    } else {
+        heap = vec![false; ep];
+        &mut heap[..]
+    };
     for t in 0..routing.n_tokens {
         let rs = token_rank(t, routing.n_tokens, ep);
-        dests[..ep].iter_mut().for_each(|d| *d = false);
+        dests.iter_mut().for_each(|d| *d = false);
         for j in 0..k {
             dests[plan.targets[t * k + j] as usize] = true;
         }
-        for (rt, &hit) in dests[..ep].iter().enumerate() {
+        for (rt, &hit) in dests.iter().enumerate() {
             if hit && rt != rs {
                 visit(rs, rt);
             }
@@ -210,8 +252,21 @@ pub fn comm_matrix(
     token_bytes: f64,
 ) -> TrafficMatrix {
     let mut m = TrafficMatrix::new(ep);
-    visit_dispatch_payloads(routing, plan, ep, |rs, rt| m.add(rs, rt, token_bytes));
+    comm_matrix_into(routing, plan, ep, token_bytes, &mut m);
     m
+}
+
+/// [`comm_matrix`] into a caller-owned matrix (reset-not-free: reuses
+/// the matrix's allocation across layers — ISSUE 6 hot path).
+pub fn comm_matrix_into(
+    routing: &LayerRouting,
+    plan: &DispatchPlan,
+    ep: usize,
+    token_bytes: f64,
+    m: &mut TrafficMatrix,
+) {
+    m.reset(ep);
+    visit_dispatch_payloads(routing, plan, ep, |rs, rt| m.add(rs, rt, token_bytes));
 }
 
 /// Compute dispatch traffic for one layer given concrete per-slot target
@@ -405,6 +460,91 @@ mod tests {
         let t = mat.transposed();
         assert_eq!(t.get(1, 0), mat.get(0, 1));
         assert!((mat.scaled(0.5).total_remote() - 0.5 * mat.total_remote()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn traffic_shift_matches_rebuild_and_reset_reuses() {
+        let ep = 4;
+        let mut inc = TrafficMatrix::new(ep);
+        let mut cells = vec![vec![0.0f64; ep]; ep];
+        // seed with some traffic
+        for s in 0..ep {
+            for d in 0..ep {
+                if s != d {
+                    inc.add(s, d, (s * ep + d) as f64);
+                    cells[s][d] = (s * ep + d) as f64;
+                }
+            }
+        }
+        // a shift sequence, mirrored in the dense reference
+        let shifts = [(0usize, 1usize, 2usize, 3.5f64), (2, 3, 0, 1.25), (1, 0, 3, 2.0)];
+        for &(s, from, to, b) in &shifts {
+            inc.shift(s, from, to, b);
+            cells[s][from] -= b;
+            cells[s][to] += b;
+        }
+        for s in 0..ep {
+            for d in 0..ep {
+                assert!((inc.get(s, d) - cells[s][d]).abs() < 1e-12);
+            }
+        }
+        // undo (swapped destinations) restores the original matrix
+        for &(s, from, to, b) in shifts.iter().rev() {
+            inc.shift(s, to, from, b);
+        }
+        for s in 0..ep {
+            for d in 0..ep {
+                let orig = if s != d { (s * ep + d) as f64 } else { 0.0 };
+                assert!((inc.get(s, d) - orig).abs() < 1e-12);
+            }
+        }
+        // reset reuses the allocation and zeroes everything
+        inc.reset(ep);
+        assert_eq!(inc.total_remote(), 0.0);
+        // apply/unapply flows round-trips
+        let flows = vec![
+            crate::fabric::Flow { src: 0, dst: 2, bytes: 7.0 },
+            crate::fabric::Flow { src: 3, dst: 1, bytes: 2.5 },
+        ];
+        inc.apply_flows(&flows);
+        assert!((inc.get(0, 2) - 7.0).abs() < 1e-12);
+        assert!((inc.total_remote() - 9.5).abs() < 1e-12);
+        inc.unapply_flows(&flows);
+        assert!(inc.total_remote().abs() < 1e-12);
+    }
+
+    #[test]
+    fn comm_matrix_into_reuses_buffer() {
+        let routing = LayerRouting::new(8, 4, 32, vec![0u16; 32]);
+        let placement = Placement::sharded(8, 32, 3);
+        let a = Assignment::locality_first(&routing, &placement);
+        let plan = DispatchPlan::from_assignment(&routing, &a);
+        let m = model();
+        let fresh = comm_matrix(&routing, &plan, 8, m.token_bytes());
+        let mut reused = TrafficMatrix::new(8);
+        reused.add(3, 4, 1e9); // stale garbage must be cleared
+        comm_matrix_into(&routing, &plan, 8, m.token_bytes(), &mut reused);
+        assert_eq!(fresh, reused);
+    }
+
+    #[test]
+    fn dispatch_traversal_handles_large_ep() {
+        // ISSUE 6: the 64-rank cap is gone — 128-rank (and larger)
+        // groups must traverse without panicking.
+        for ep in [128usize, 160] {
+            let n = ep * 2;
+            let experts: Vec<u16> = (0..n).map(|t| (t % ep) as u16).collect();
+            let routing = LayerRouting::new(n, 1, ep, experts);
+            let placement = Placement::sharded(ep, ep, 1);
+            let a = Assignment::locality_first(&routing, &placement);
+            let plan = DispatchPlan::from_assignment(&routing, &a);
+            let vol = comm_volumes(&routing, &plan, ep, 2.0);
+            let via = comm_matrix(&routing, &plan, ep, 2.0).volumes();
+            for r in 0..ep {
+                assert!((vol.v_in[r] - via.v_in[r]).abs() < 1e-9);
+                assert!((vol.v_out[r] - via.v_out[r]).abs() < 1e-9);
+            }
+        }
     }
 
     #[test]

@@ -52,6 +52,13 @@ impl Placement {
         out
     }
 
+    /// Allocation-free variant of [`Self::ranks_hosting`]: iterates the home
+    /// rank followed by each replica rank, in the same order.
+    pub fn hosts_iter(&self, expert: usize) -> impl Iterator<Item = usize> + '_ {
+        std::iter::once(self.home[expert] as usize)
+            .chain(self.replicas[expert].iter().map(|&r| r as usize))
+    }
+
     /// True when `rank` holds a copy of `expert` (home or replica).
     pub fn hosts(&self, expert: usize, rank: usize) -> bool {
         self.home[expert] as usize == rank
@@ -158,10 +165,9 @@ impl Placement {
 }
 
 /// Placement mutation / invariant failures.
-#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum PlacementError {
     /// The rank already holds a copy of the expert.
-    #[error("expert {expert} already hosted on rank {rank}")]
     AlreadyHosted {
         /// Expert involved.
         expert: usize,
@@ -169,13 +175,11 @@ pub enum PlacementError {
         rank: usize,
     },
     /// The rank's replica-slot budget is exhausted.
-    #[error("no replica slot free on rank {rank}")]
     NoSlot {
         /// Rank involved.
         rank: usize,
     },
     /// Attempted to remove a replica that does not exist.
-    #[error("expert {expert} has no replica on rank {rank}")]
     NotReplica {
         /// Expert involved.
         expert: usize,
@@ -183,9 +187,27 @@ pub enum PlacementError {
         rank: usize,
     },
     /// Internal per-rank slot counters diverged from the replica sets.
-    #[error("slot accounting mismatch")]
     SlotAccounting,
 }
+
+impl std::fmt::Display for PlacementError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlacementError::AlreadyHosted { expert, rank } => {
+                write!(f, "expert {expert} already hosted on rank {rank}")
+            }
+            PlacementError::NoSlot { rank } => {
+                write!(f, "no replica slot free on rank {rank}")
+            }
+            PlacementError::NotReplica { expert, rank } => {
+                write!(f, "expert {expert} has no replica on rank {rank}")
+            }
+            PlacementError::SlotAccounting => write!(f, "slot accounting mismatch"),
+        }
+    }
+}
+
+impl std::error::Error for PlacementError {}
 
 /// Difference between two placements: per-rank prefetch/evict sets
 /// (paper Δ_r^in / Δ_r^out), used to cost expert transfers (eq. 6).

@@ -23,7 +23,7 @@
 use crate::config::ProbeConfig;
 use crate::fabric::{Fabric, Flow};
 use crate::model::MoeModel;
-use crate::perfmodel::{expert_compute_time, transfer_time, Assignment};
+use crate::perfmodel::{expert_compute_time, transfer_time, Assignment, ShiftUndo};
 use crate::placement::Placement;
 use crate::topology::HardwareProfile;
 
@@ -195,6 +195,12 @@ impl LatencyState {
         (0..self.ep).map(|r| self.latency(r)).collect()
     }
 
+    /// Allocation-free [`Self::latencies`]: writes into a caller buffer.
+    pub fn latencies_into(&self, out: &mut Vec<f64>) {
+        out.clear();
+        out.extend((0..self.ep).map(|r| self.latency(r)));
+    }
+
     /// Bottleneck-rank latency estimate (the greedy objective).
     pub fn max_latency(&self) -> f64 {
         (0..self.ep).map(|r| self.latency(r)).fold(0.0, f64::max)
@@ -254,6 +260,126 @@ impl LatencyState {
             }
         }
     }
+
+    /// [`Self::apply_shift`] that journals the raw pre-shift values of
+    /// every touched cell into `log`, so [`Self::undo_shifts`] can later
+    /// restore the state *bit-exactly* (reversing the arithmetic would
+    /// not: `(v ± x) ∓ x ≠ v` in f64). A shift that is a no-op
+    /// (`x ≤ 0` or `from == to`) logs nothing.
+    #[allow(clippy::too_many_arguments)]
+    pub fn apply_shift_logged(
+        &mut self,
+        e: usize,
+        rs: usize,
+        from: usize,
+        to: usize,
+        x: f64,
+        model: &MoeModel,
+        hw: &HardwareProfile,
+        log: &mut Vec<StateUndo>,
+    ) {
+        if x <= 0.0 || from == to {
+            return;
+        }
+        let i_from = e * self.ep + from;
+        let i_to = e * self.ep + to;
+        log.push(StateUndo {
+            rs,
+            from,
+            to,
+            i_from,
+            i_to,
+            tok_from: self.tok[i_from],
+            tok_to: self.tok[i_to],
+            comp_from: self.comp[from],
+            comp_to: self.comp[to],
+            v_in_from: self.v_in[from],
+            v_in_to: self.v_in[to],
+            v_out_rs: self.v_out[rs],
+            rail: self.rail.as_ref().map(|rc| {
+                (
+                    rc.n_out[rc.node_of[rs]],
+                    rc.n_in[rc.node_of[from]],
+                    rc.n_in[rc.node_of[to]],
+                )
+            }),
+        });
+        self.apply_shift(e, rs, from, to, x, model, hw);
+    }
+
+    /// Pop and revert journal entries down to `mark` (LIFO), restoring
+    /// the exact pre-shift bits recorded by [`Self::apply_shift_logged`].
+    /// All snapshots in one entry predate that entry's mutation, so
+    /// restore order within an entry is alias-safe even when two rail
+    /// terms share a node.
+    pub fn undo_shifts(&mut self, log: &mut Vec<StateUndo>, mark: usize) {
+        while log.len() > mark {
+            let u = log.pop().expect("journal underflow");
+            self.tok[u.i_from] = u.tok_from;
+            self.tok[u.i_to] = u.tok_to;
+            self.comp[u.from] = u.comp_from;
+            self.comp[u.to] = u.comp_to;
+            self.v_in[u.from] = u.v_in_from;
+            self.v_in[u.to] = u.v_in_to;
+            self.v_out[u.rs] = u.v_out_rs;
+            if let Some((out_rs, in_from, in_to)) = u.rail {
+                let rc = self.rail.as_mut().expect("rail journal without rail state");
+                rc.n_in[rc.node_of[u.to]] = in_to;
+                rc.n_in[rc.node_of[u.from]] = in_from;
+                rc.n_out[rc.node_of[u.rs]] = out_rs;
+            }
+        }
+    }
+}
+
+/// Raw-value journal entry recorded by [`LatencyState::apply_shift_logged`]
+/// and reverted by [`LatencyState::undo_shifts`]. Opaque to callers.
+#[derive(Debug, Clone, Copy)]
+pub struct StateUndo {
+    rs: usize,
+    from: usize,
+    to: usize,
+    i_from: usize,
+    i_to: usize,
+    tok_from: f64,
+    tok_to: f64,
+    comp_from: f64,
+    comp_to: f64,
+    v_in_from: f64,
+    v_in_to: f64,
+    v_out_rs: f64,
+    /// Pre-shift (n_out[node(rs)], n_in[node(from)], n_in[node(to)]).
+    rail: Option<(f64, f64, f64)>,
+}
+
+/// Reusable planner working memory (ISSUE 6): every `Vec` the greedy
+/// loop, water-filling, and polish passes need is held here and reset
+/// (`clear`, never freed) between calls, so a long-lived caller — e.g.
+/// the PROBE balancer planning every layer of every step — performs no
+/// steady-state heap allocation inside the planner.
+/// `PlanScratch::default()` starts empty; buffers grow to the
+/// high-water mark of the workload and stay there.
+///
+/// Routing a plan through a scratch does not change its output:
+/// [`plan_fabric_with`] is bit-identical to [`plan_fabric`] (which is
+/// now a thin wrapper constructing a fresh scratch).
+#[derive(Debug, Clone, Default)]
+pub struct PlanScratch {
+    lat: Vec<f64>,
+    lat2: Vec<f64>,
+    wf_lat: Vec<f64>,
+    src_order: Vec<usize>,
+    dst_order: Vec<usize>,
+    invalid: Vec<(usize, usize)>,
+    totals: Vec<f64>,
+    hosts: Vec<usize>,
+    node_win: Vec<f64>,
+    node_out_slots: Vec<usize>,
+    node_in_slots: Vec<usize>,
+    cands: Vec<(usize, usize, f64)>,
+    dead: Vec<(usize, usize)>,
+    a_log: Vec<ShiftUndo>,
+    st_log: Vec<StateUndo>,
 }
 
 /// Marginal seconds per additional token of expert `e` at load `n`.
@@ -265,13 +391,21 @@ fn marginal_time(n: f64, model: &MoeModel, hw: &HardwareProfile) -> f64 {
 /// Evict replicas whose predicted load fell below the per-expert mean:
 /// the slot is reclaimed for free (overwrite), and only hot experts keep
 /// their zero-cost resident copies.
-fn drop_cold_replicas(placement: &mut Placement, counts_by_source: &[Vec<f64>]) {
-    let totals: Vec<f64> = counts_by_source.iter().map(|v| v.iter().sum()).collect();
+fn drop_cold_replicas(
+    placement: &mut Placement,
+    counts_by_source: &[Vec<f64>],
+    totals: &mut Vec<f64>,
+    hosts: &mut Vec<usize>,
+) {
+    totals.clear();
+    totals.extend(counts_by_source.iter().map(|v| v.iter().sum::<f64>()));
     let n = totals.len().max(1) as f64;
     let mean = totals.iter().sum::<f64>() / n;
     for e in 0..placement.n_experts {
         if totals[e] < mean {
-            for r in placement.ranks_hosting(e).into_iter().skip(1) {
+            hosts.clear();
+            hosts.extend(placement.hosts_iter(e).skip(1)); // replicas only
+            for &r in hosts.iter() {
                 let _ = placement.remove_replica(e, r);
             }
         }
@@ -306,21 +440,31 @@ pub fn plan(
 /// governor shrank the headroom since they were fetched): coldest
 /// predicted load first — eviction is a free overwrite, so the only
 /// cost is losing the replica's balance contribution.
-fn enforce_slot_caps(placement: &mut Placement, counts_by_source: &[Vec<f64>], caps: &[usize]) {
-    let totals: Vec<f64> = counts_by_source.iter().map(|v| v.iter().sum()).collect();
+fn enforce_slot_caps(
+    placement: &mut Placement,
+    counts_by_source: &[Vec<f64>],
+    caps: &[usize],
+    totals: &mut Vec<f64>,
+) {
+    totals.clear();
+    totals.extend(counts_by_source.iter().map(|v| v.iter().sum::<f64>()));
     for r in 0..placement.ep {
         let cap = caps.get(r).copied().unwrap_or(usize::MAX);
         while placement.slots_used(r) > cap {
-            let victim = placement
-                .replica_experts(r)
-                .into_iter()
-                .min_by(|&a, &b| {
-                    let ta = totals.get(a).copied().unwrap_or(0.0);
-                    let tb = totals.get(b).copied().unwrap_or(0.0);
-                    ta.partial_cmp(&tb).unwrap_or(std::cmp::Ordering::Equal)
-                });
+            // coldest replica on r; `<=` keeps the last minimal expert,
+            // matching the previous `Iterator::min_by` tie-breaking
+            let mut victim: Option<(usize, f64)> = None;
+            for e in 0..placement.n_experts {
+                if placement.home_rank(e) == r || !placement.hosts(e, r) {
+                    continue;
+                }
+                let t = totals.get(e).copied().unwrap_or(0.0);
+                if victim.map_or(true, |(_, tv)| t <= tv) {
+                    victim = Some((e, t));
+                }
+            }
             match victim {
-                Some(e) => {
+                Some((e, _)) => {
                     let _ = placement.remove_replica(e, r);
                 }
                 None => break,
@@ -340,15 +484,13 @@ fn pick_source(
     fabric: &Fabric,
     aware: bool,
 ) -> usize {
-    let hosts = placement.ranks_hosting(e); // home first
     if !aware {
-        return hosts[0];
+        return placement.home_rank(e);
     }
-    hosts
-        .iter()
-        .copied()
+    placement
+        .hosts_iter(e) // home first
         .find(|&r| fabric.same_node(r, dst))
-        .unwrap_or(hosts[0])
+        .unwrap_or_else(|| placement.home_rank(e))
 }
 
 /// Algorithm 1 with delta planning over an interconnect [`Fabric`].
@@ -381,6 +523,38 @@ pub fn plan_fabric(
     slot_caps: &[usize],
     cfg: &ProbeConfig,
 ) -> PlanOutcome {
+    plan_fabric_with(
+        &mut PlanScratch::default(),
+        counts_by_source,
+        resident,
+        model,
+        hw,
+        fabric,
+        windows,
+        slot_caps,
+        cfg,
+    )
+}
+
+/// [`plan_fabric`] with caller-held working memory: identical output,
+/// but every internal buffer (latency snapshots, candidate orders,
+/// water-fill journals, eviction scratch) lives in `scratch` and is
+/// reused across calls instead of reallocated. Speculative water-fill
+/// candidates mutate the live assignment/state in place under a
+/// raw-value journal and are rolled back bit-exactly on rejection —
+/// replacing the per-iteration O(E·ep²) clone of the old greedy loop.
+#[allow(clippy::too_many_arguments)]
+pub fn plan_fabric_with(
+    scratch: &mut PlanScratch,
+    counts_by_source: &[Vec<f64>],
+    resident: &Placement,
+    model: &MoeModel,
+    hw: &HardwareProfile,
+    fabric: &Fabric,
+    windows: &[f64],
+    slot_caps: &[usize],
+    cfg: &ProbeConfig,
+) -> PlanOutcome {
     let ep = resident.ep;
     assert_eq!(windows.len(), ep);
     assert_eq!(slot_caps.len(), ep);
@@ -388,12 +562,17 @@ pub fn plan_fabric(
     let fab_opt = if aware { Some(fabric) } else { None };
     let mut placement = resident.clone();
     if cfg.delta_plan {
-        drop_cold_replicas(&mut placement, counts_by_source);
+        drop_cold_replicas(
+            &mut placement,
+            counts_by_source,
+            &mut scratch.totals,
+            &mut scratch.hosts,
+        );
     } else {
         placement.clear_replicas();
     }
     // live memory headroom: evict what no longer fits before planning
-    enforce_slot_caps(&mut placement, counts_by_source, slot_caps);
+    enforce_slot_caps(&mut placement, counts_by_source, slot_caps, &mut scratch.totals);
     let retained_replicas = placement.total_replicas();
 
     let mut a = Assignment::locality_first_from_counts(counts_by_source, &placement);
@@ -403,26 +582,30 @@ pub fn plan_fabric(
     // Zero-cost reuse: water-fill over the retained replicas before any
     // new fetch is considered (no transfer, no slot, no budget charge).
     if retained_replicas > 0 {
-        a = polish_assignment_on(a, &placement, model, hw, fab_opt, 16);
+        a = polish_assignment_with(scratch, a, &placement, model, hw, fab_opt, 16);
         st = LatencyState::from_assignment_on(&a, model, hw, fab_opt);
     }
 
     // min hiding window per node: shared rail budgets must fit the
     // tightest window among the ranks the rails serve
-    let node_win: Vec<f64> = (0..fabric.n_nodes())
-        .map(|n| {
-            (0..ep)
-                .filter(|&r| fabric.node_of(r) == n)
-                .map(|r| windows[r])
-                .fold(f64::INFINITY, f64::min)
-        })
-        .collect();
+    scratch.node_win.clear();
+    for n in 0..fabric.n_nodes() {
+        let mut w = f64::INFINITY;
+        for r in 0..ep {
+            if fabric.node_of(r) == n {
+                w = w.min(windows[r]);
+            }
+        }
+        scratch.node_win.push(w);
+    }
 
     let mut fetches: Vec<Vec<usize>> = vec![Vec::new(); ep];
     let mut fetch_flows: Vec<Flow> = Vec::new();
-    let mut node_out_slots = vec![0usize; fabric.n_nodes()];
-    let mut node_in_slots = vec![0usize; fabric.n_nodes()];
-    let mut invalid: Vec<(usize, usize)> = Vec::new();
+    scratch.node_out_slots.clear();
+    scratch.node_out_slots.resize(fabric.n_nodes(), 0);
+    scratch.node_in_slots.clear();
+    scratch.node_in_slots.resize(fabric.n_nodes(), 0);
+    scratch.invalid.clear();
     let mut iterations = 0usize;
     let eps = est_before * 1e-3;
     let expert_bytes = model.expert_param_bytes();
@@ -434,14 +617,21 @@ pub fn plan_fabric(
         iterations += 1;
 
         // select bottleneck/helper pair, skipping invalidated pairs
-        let lat = st.latencies();
-        let Some((r_src, r_dst)) = select_pair(&lat, &placement, slot_caps, &invalid) else {
+        st.latencies_into(&mut scratch.lat);
+        let Some((r_src, r_dst)) = select_pair(
+            &scratch.lat,
+            &placement,
+            slot_caps,
+            &scratch.invalid,
+            &mut scratch.src_order,
+            &mut scratch.dst_order,
+        ) else {
             break;
         };
 
         // hottest expert on r_src with a movable remote pool
         let Some(e_star) = select_heavy_expert(&a, &placement, r_src, r_dst) else {
-            invalid.push((r_src, r_dst));
+            scratch.invalid.push((r_src, r_dst));
             continue;
         };
         let fetch_src = pick_source(&placement, e_star, r_dst, fabric, aware);
@@ -453,7 +643,7 @@ pub fn plan_fabric(
         if cfg.enforce_window {
             let slots_after = fetches[r_dst].len() + 1;
             if transfer_time(slots_after, model, hw) > windows[r_dst] {
-                invalid.push((r_src, r_dst));
+                scratch.invalid.push((r_src, r_dst));
                 continue;
             }
             if aware && !fabric.same_node(fetch_src, r_dst) {
@@ -466,46 +656,54 @@ pub fn plan_fabric(
                     bytes: expert_bytes,
                 });
                 if t_flow > windows[r_dst] {
-                    invalid.push((r_src, r_dst));
+                    scratch.invalid.push((r_src, r_dst));
                     continue;
                 }
                 let ns = fabric.node_of(fetch_src);
                 let nd = fabric.node_of(r_dst);
                 let t_rail =
                     |slots: usize| slots as f64 * expert_bytes / fabric.rail_bw();
-                if t_rail(node_out_slots[ns] + 1) > node_win[ns]
-                    || t_rail(node_in_slots[nd] + 1) > node_win[nd]
+                if t_rail(scratch.node_out_slots[ns] + 1) > scratch.node_win[ns]
+                    || t_rail(scratch.node_in_slots[nd] + 1) > scratch.node_win[nd]
                 {
-                    invalid.push((r_src, r_dst));
+                    scratch.invalid.push((r_src, r_dst));
                     continue;
                 }
             }
         }
         if placement.slots_free(r_dst) == 0 || placement.slots_used(r_dst) >= slot_caps[r_dst] {
-            invalid.push((r_src, r_dst));
+            scratch.invalid.push((r_src, r_dst));
             continue;
         }
 
-        // tentative replica + water-filling rebalance on cloned state
+        // tentative replica + water-filling rebalance, journaled in
+        // place: rejection rolls the exact pre-candidate bits back
         let before_max = st.max_latency();
-        let mut a2 = a.clone();
-        let mut st2 = st.clone();
+        scratch.a_log.clear();
+        scratch.st_log.clear();
         let moved = water_fill(
-            &mut a2,
-            &mut st2,
+            &mut a,
+            &mut st,
             e_star,
             r_src,
             r_dst,
             model,
             hw,
             cfg.water_filling,
+            &mut scratch.wf_lat,
+            &mut scratch.a_log,
+            &mut scratch.st_log,
         );
         if moved <= 0.0 {
-            invalid.push((r_src, r_dst));
+            a.undo_shifts(&mut scratch.a_log, 0);
+            st.undo_shifts(&mut scratch.st_log, 0);
+            scratch.invalid.push((r_src, r_dst));
             continue;
         }
-        let gain = before_max - st2.max_latency();
+        let gain = before_max - st.max_latency();
         if gain <= eps {
+            a.undo_shifts(&mut scratch.a_log, 0);
+            st.undo_shifts(&mut scratch.st_log, 0);
             break; // converged (Algorithm 1 line 12)
         }
         placement
@@ -518,11 +716,9 @@ pub fn plan_fabric(
             bytes: expert_bytes,
         });
         if !fabric.same_node(fetch_src, r_dst) {
-            node_out_slots[fabric.node_of(fetch_src)] += 1;
-            node_in_slots[fabric.node_of(r_dst)] += 1;
+            scratch.node_out_slots[fabric.node_of(fetch_src)] += 1;
+            scratch.node_in_slots[fabric.node_of(r_dst)] += 1;
         }
-        a = a2;
-        st = st2;
     }
 
     let est_after = st.max_latency();
@@ -546,14 +742,18 @@ fn select_pair(
     placement: &Placement,
     slot_caps: &[usize],
     invalid: &[(usize, usize)],
+    src_order: &mut Vec<usize>,
+    dst_order: &mut Vec<usize>,
 ) -> Option<(usize, usize)> {
     let ep = lat.len();
-    let mut src_order: Vec<usize> = (0..ep).collect();
+    src_order.clear();
+    src_order.extend(0..ep);
     src_order.sort_by(|&x, &y| lat[y].partial_cmp(&lat[x]).unwrap());
-    let mut dst_order: Vec<usize> = (0..ep).collect();
+    dst_order.clear();
+    dst_order.extend(0..ep);
     dst_order.sort_by(|&x, &y| lat[x].partial_cmp(&lat[y]).unwrap());
-    for &s in &src_order {
-        for &d in &dst_order {
+    for &s in src_order.iter() {
+        for &d in dst_order.iter() {
             if d == s || lat[d] >= lat[s] {
                 continue;
             }
@@ -599,7 +799,9 @@ fn select_heavy_expert(
 /// stay pinned; remote tokens are redirected to `r_dst` until `r_src`
 /// reaches the cluster average (or the pool empties). The naive ablation
 /// variant moves half the pool unconditionally. Updates the incremental
-/// latency state alongside the assignment.
+/// latency state alongside the assignment; every mutation is journaled
+/// into `a_log`/`st_log` so the caller can roll the candidate back
+/// bit-exactly if it does not pay off.
 #[allow(clippy::too_many_arguments)]
 fn water_fill(
     a: &mut Assignment,
@@ -610,6 +812,9 @@ fn water_fill(
     model: &MoeModel,
     hw: &HardwareProfile,
     water_filling: bool,
+    lat_buf: &mut Vec<f64>,
+    a_log: &mut Vec<ShiftUndo>,
+    st_log: &mut Vec<StateUndo>,
 ) -> f64 {
     let ep = a.ep;
     let pool: f64 = a.remote_tokens_on(e_star, r_src);
@@ -617,9 +822,9 @@ fn water_fill(
         return 0.0;
     }
     let target_tokens = if water_filling {
-        let lat = st.latencies();
-        let avg = lat.iter().sum::<f64>() / ep as f64;
-        let excess = (lat[r_src] - avg).max(0.0);
+        st.latencies_into(lat_buf);
+        let avg = lat_buf.iter().sum::<f64>() / ep as f64;
+        let excess = (lat_buf[r_src] - avg).max(0.0);
         let marginal = marginal_time(a.tokens_on(e_star, r_src), model, hw);
         if marginal <= 0.0 {
             return 0.0;
@@ -642,8 +847,8 @@ fn water_fill(
             continue;
         }
         let share = (have / pool * target_tokens).min(remaining);
-        let moved = a.shift(e_star, rs, r_src, r_dst, share);
-        st.apply_shift(e_star, rs, r_src, r_dst, moved, model, hw);
+        let moved = a.shift_logged(e_star, rs, r_src, r_dst, share, a_log);
+        st.apply_shift_logged(e_star, rs, r_src, r_dst, moved, model, hw, st_log);
         remaining -= moved;
         if remaining <= 1e-9 {
             break;
@@ -676,8 +881,31 @@ pub fn rebalance_existing_on(
     fabric: Option<&Fabric>,
     iters: usize,
 ) -> Assignment {
+    rebalance_existing_with(
+        &mut PlanScratch::default(),
+        counts_by_source,
+        placement,
+        model,
+        hw,
+        fabric,
+        iters,
+    )
+}
+
+/// [`rebalance_existing_on`] with caller-held working memory (see
+/// [`PlanScratch`]); the per-step dispatch rebalance in the balancers
+/// routes through this to stay allocation-free at steady state.
+pub fn rebalance_existing_with(
+    scratch: &mut PlanScratch,
+    counts_by_source: &[Vec<f64>],
+    placement: &Placement,
+    model: &MoeModel,
+    hw: &HardwareProfile,
+    fabric: Option<&Fabric>,
+    iters: usize,
+) -> Assignment {
     let a = Assignment::locality_first_from_counts(counts_by_source, placement);
-    polish_assignment_on(a, placement, model, hw, fabric, iters)
+    polish_assignment_with(scratch, a, placement, model, hw, fabric, iters)
 }
 
 /// Iteratively improve an assignment over a FIXED placement: move remote
@@ -698,6 +926,27 @@ pub fn polish_assignment(
 /// multi-node fabric the bottleneck metric includes rail congestion, so
 /// the polish also sheds cross-node traffic when the rails bind.
 pub fn polish_assignment_on(
+    a: Assignment,
+    placement: &Placement,
+    model: &MoeModel,
+    hw: &HardwareProfile,
+    fabric: Option<&Fabric>,
+    iters: usize,
+) -> Assignment {
+    polish_assignment_with(&mut PlanScratch::default(), a, placement, model, hw, fabric, iters)
+}
+
+/// [`polish_assignment_on`] with caller-held working memory. Candidate
+/// moves are applied to the live assignment under a raw-value journal
+/// and evaluated against an incrementally-maintained [`LatencyState`]
+/// (instead of cloning the assignment and recomputing the full
+/// O(E·ep²) objective per candidate); rejected candidates are rolled
+/// back bit-exactly. The incremental objective can differ from a full
+/// recompute by f64 rounding (~1e-15), which only matters on exact
+/// ties between candidates — the accept threshold keeps its 1e-12
+/// margin.
+pub fn polish_assignment_with(
+    scratch: &mut PlanScratch,
     mut a: Assignment,
     placement: &Placement,
     model: &MoeModel,
@@ -705,12 +954,15 @@ pub fn polish_assignment_on(
     fabric: Option<&Fabric>,
     iters: usize,
 ) -> Assignment {
-    let mut lat = rank_latencies_on(&a, model, hw, fabric);
-    let mut dead: Vec<(usize, usize)> = Vec::new(); // (expert, dst) that failed
+    let mut st = LatencyState::from_assignment_on(&a, model, hw, fabric);
+    st.latencies_into(&mut scratch.lat);
+    scratch.dead.clear(); // (expert, dst) that failed
+    scratch.a_log.clear();
+    scratch.st_log.clear();
     for _ in 0..iters {
-        let r_src = argmax(&lat);
+        let r_src = argmax(&scratch.lat);
         // candidate moves off the bottleneck, best (most movable) first
-        let mut cands: Vec<(usize, usize, f64)> = Vec::new();
+        scratch.cands.clear();
         for e in 0..a.n_experts {
             if !placement.hosts(e, r_src) {
                 continue;
@@ -719,55 +971,71 @@ pub fn polish_assignment_on(
             if movable <= 0.0 {
                 continue;
             }
-            for rt in placement.ranks_hosting(e) {
-                if rt == r_src || lat[rt] >= lat[r_src] || dead.contains(&(e, rt)) {
+            for rt in placement.hosts_iter(e) {
+                if rt == r_src
+                    || scratch.lat[rt] >= scratch.lat[r_src]
+                    || scratch.dead.contains(&(e, rt))
+                {
                     continue;
                 }
-                cands.push((e, rt, movable.min(a.tokens_on(e, r_src))));
+                scratch.cands.push((e, rt, movable.min(a.tokens_on(e, r_src))));
             }
         }
-        if cands.is_empty() {
+        if scratch.cands.is_empty() {
             break;
         }
-        cands.sort_by(|x, y| y.2.partial_cmp(&x.2).unwrap());
+        scratch.cands.sort_by(|x, y| y.2.partial_cmp(&x.2).unwrap());
         let mut progressed = false;
-        for &(e_star, r_dst, _) in cands.iter().take(4) {
-            let mut a2 = a.clone();
+        for ci in 0..scratch.cands.len().min(4) {
+            let (e_star, r_dst, _) = scratch.cands[ci];
             // pairwise equalization: close half the latency gap
-            let marginal = marginal_time(a2.tokens_on(e_star, r_src), model, hw);
+            let marginal = marginal_time(a.tokens_on(e_star, r_src), model, hw);
             if marginal <= 0.0 {
                 continue;
             }
-            let want = ((lat[r_src] - lat[r_dst]) * 0.5 / marginal).max(0.0);
-            let pool = a2.remote_tokens_on(e_star, r_src);
+            let want = ((scratch.lat[r_src] - scratch.lat[r_dst]) * 0.5 / marginal).max(0.0);
+            let pool = a.remote_tokens_on(e_star, r_src);
             let target = want.min(pool);
             if target <= 0.0 {
-                dead.push((e_star, r_dst));
+                scratch.dead.push((e_star, r_dst));
                 continue;
             }
             let mut remaining = target;
-            for rs in 0..a2.ep {
+            for rs in 0..a.ep {
                 if rs == r_src {
                     continue;
                 }
-                let have = a2.get(e_star, rs, r_src);
+                let have = a.get(e_star, rs, r_src);
                 if have <= 0.0 {
                     continue;
                 }
-                let moved = a2.shift(e_star, rs, r_src, r_dst, (have / pool * target).min(remaining));
+                let moved = a.shift_logged(
+                    e_star,
+                    rs,
+                    r_src,
+                    r_dst,
+                    (have / pool * target).min(remaining),
+                    &mut scratch.a_log,
+                );
+                st.apply_shift_logged(
+                    e_star, rs, r_src, r_dst, moved, model, hw, &mut scratch.st_log,
+                );
                 remaining -= moved;
                 if remaining <= 1e-9 {
                     break;
                 }
             }
-            let lat2 = rank_latencies_on(&a2, model, hw, fabric);
-            if lat2[argmax(&lat2)] < lat[r_src] - 1e-12 {
-                a = a2;
-                lat = lat2;
+            st.latencies_into(&mut scratch.lat2);
+            if scratch.lat2[argmax(&scratch.lat2)] < scratch.lat[r_src] - 1e-12 {
+                std::mem::swap(&mut scratch.lat, &mut scratch.lat2);
+                scratch.a_log.clear();
+                scratch.st_log.clear();
                 progressed = true;
                 break;
             }
-            dead.push((e_star, r_dst));
+            a.undo_shifts(&mut scratch.a_log, 0);
+            st.undo_shifts(&mut scratch.st_log, 0);
+            scratch.dead.push((e_star, r_dst));
         }
         if !progressed {
             break;
@@ -1151,6 +1419,95 @@ mod tests {
             resident = out.placement;
         }
         assert_eq!(last_total, 0, "cap 0 must evict every replica");
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_identical() {
+        // one long-lived scratch reused across heterogeneous plans must
+        // give the same bits as a fresh scratch per call (ISSUE 6)
+        let cfg = ProbeConfig::default();
+        let mut scratch = PlanScratch::default();
+        let mut resident: Option<Placement> = None;
+        for seed in [3u64, 5, 9, 23] {
+            let (counts, base, model, hw) = setup(4096, seed);
+            let from = resident.as_ref().unwrap_or(&base).clone();
+            let fabric = Fabric::flat(8, &hw);
+            let caps = vec![usize::MAX; 8];
+            let fresh = plan_fabric(
+                &counts, &from, &model, &hw, &fabric, &wide_windows(), &caps, &cfg,
+            );
+            let reused = plan_fabric_with(
+                &mut scratch,
+                &counts,
+                &from,
+                &model,
+                &hw,
+                &fabric,
+                &wide_windows(),
+                &caps,
+                &cfg,
+            );
+            assert_eq!(fresh.est_before.to_bits(), reused.est_before.to_bits());
+            assert_eq!(fresh.est_after.to_bits(), reused.est_after.to_bits());
+            assert_eq!(fresh.iterations, reused.iterations);
+            assert_eq!(fresh.fetches, reused.fetches);
+            assert_eq!(fresh.retained_replicas, reused.retained_replicas);
+            for e in 0..model.n_experts {
+                for r in 0..8 {
+                    assert_eq!(
+                        fresh.assignment.tokens_on(e, r).to_bits(),
+                        reused.assignment.tokens_on(e, r).to_bits(),
+                        "expert {e} rank {r} diverged (seed {seed})"
+                    );
+                }
+            }
+            resident = Some(reused.placement);
+        }
+    }
+
+    #[test]
+    fn logged_state_undo_restores_bit_exact() {
+        let (counts, base, model, hw) = setup(4096, 37);
+        let fabric = Fabric::multi_node_ratio(8, 2, &hw, 0.125, 2);
+        let mut placement = base.clone();
+        placement.add_replica(0, 7).unwrap();
+        placement.add_replica(1, 6).unwrap();
+        let mut a = Assignment::locality_first_from_counts(&counts, &placement);
+        let mut st = LatencyState::from_assignment_on(&a, &model, &hw, Some(&fabric));
+        let lat_before = st.latencies();
+        let mut a_log = Vec::new();
+        let mut st_log = Vec::new();
+        // shifts crossing the node boundary both ways, then a no-op
+        for (e, rs, from, to, x) in [
+            (0usize, 2usize, 0usize, 7usize, 5.0f64),
+            (0, 3, 0, 7, 11.0),
+            (1, 5, 0, 6, 7.0),
+            (0, 2, 7, 0, 2.0),
+            (0, 2, 0, 0, 3.0), // from == to: state logs nothing
+        ] {
+            let moved = a.shift_logged(e, rs, from, to, x, &mut a_log);
+            st.apply_shift_logged(e, rs, from, to, moved, &model, &hw, &mut st_log);
+        }
+        assert!(st_log.len() <= a_log.len());
+        a.undo_shifts(&mut a_log, 0);
+        st.undo_shifts(&mut st_log, 0);
+        assert!(a_log.is_empty() && st_log.is_empty());
+        let lat_after = st.latencies();
+        for (r, (b, c)) in lat_before.iter().zip(&lat_after).enumerate() {
+            assert_eq!(b.to_bits(), c.to_bits(), "rank {r} not restored exactly");
+        }
+        // and the assignment matches a fresh locality-first build
+        let fresh = Assignment::locality_first_from_counts(&counts, &placement);
+        for e in 0..model.n_experts {
+            for rs in 0..8 {
+                for rt in 0..8 {
+                    assert_eq!(
+                        a.get(e, rs, rt).to_bits(),
+                        fresh.get(e, rs, rt).to_bits()
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -69,6 +69,23 @@ impl LayerRouting {
             .map(|v| v.into_iter().map(f64::from).collect())
             .collect()
     }
+
+    /// Tokens per expert per source rank, written into a caller-provided
+    /// flat buffer `out[e * ep + rs]` (f64): the zero-allocation variant
+    /// of [`Self::expert_counts_by_source_f64`] for the per-layer
+    /// observe/decide hot path (ISSUE 6). The buffer is cleared and
+    /// resized in place, so a reused buffer never reallocates once it
+    /// has grown to the layer's `n_experts * ep`.
+    pub fn expert_counts_by_source_into(&self, ep: usize, out: &mut Vec<f64>) {
+        out.clear();
+        out.resize(self.n_experts * ep, 0.0);
+        for t in 0..self.n_tokens {
+            let rs = token_rank(t, self.n_tokens, ep);
+            for &e in self.token_experts(t) {
+                out[e as usize * ep + rs] += 1.0;
+            }
+        }
+    }
 }
 
 /// Rank owning token `t` under block distribution.
@@ -303,6 +320,23 @@ mod tests {
         let by_src = step.layers[0].expert_counts_by_source(8);
         let total: u32 = by_src.iter().flat_map(|v| v.iter()).sum();
         assert_eq!(total as usize, 64 * 4);
+    }
+
+    #[test]
+    fn counts_into_matches_nested() {
+        let mut m = model();
+        let step = m.route_step(&vec![1u16; 100]);
+        let lr = &step.layers[0];
+        let ep = 8;
+        let nested = lr.expert_counts_by_source_f64(ep);
+        let mut flat = vec![1e9; 3]; // stale garbage must be cleared
+        lr.expert_counts_by_source_into(ep, &mut flat);
+        assert_eq!(flat.len(), lr.n_experts * ep);
+        for e in 0..lr.n_experts {
+            for rs in 0..ep {
+                assert_eq!(flat[e * ep + rs], nested[e][rs]);
+            }
+        }
     }
 
     #[test]

@@ -115,10 +115,22 @@ impl PrefetchItem {
 }
 
 /// Pending prefetch transfers carried across layers and steps
-/// (continuous lookahead pipelining).
+/// (continuous lookahead pipelining). Also owns the scheduler's
+/// step-reused working buffers (per-link budgets, flow grouping,
+/// staged items): they are reset — never freed — each
+/// [`schedule_layer_fabric`] call, so the steady-state scheduling loop
+/// allocates nothing (ISSUE 6).
 #[derive(Debug, Clone, Default)]
 pub struct PrefetchQueue {
     items: Vec<PrefetchItem>,
+    /// Per-link seconds left in the current phase window.
+    avail: Vec<f64>,
+    /// Plan-completion-floored budgets for items enqueued this layer.
+    new_avail: Vec<f64>,
+    /// (src, dst, bytes) flow-grouping scratch.
+    pairs: Vec<(usize, usize, f64)>,
+    /// Items enqueued this layer, before they join `items`.
+    staged: Vec<PrefetchItem>,
 }
 
 impl PrefetchQueue {
@@ -162,66 +174,79 @@ pub fn schedule_layer(
 /// leader view tracks the slowest — exactly the pre-fabric accounting).
 /// Multi-node fabrics enqueue one item per (src, dst) flow group so
 /// rail contention is charged where it occurs.
-fn new_prefetch_items(
+fn stage_prefetch_items(
     s: &LayerSchedule,
     model: &MoeModel,
     hw: &HardwareProfile,
     fabric: &Fabric,
-) -> Vec<PrefetchItem> {
+    pairs: &mut Vec<(usize, usize, f64)>,
+    out: &mut Vec<PrefetchItem>,
+) {
+    out.clear();
     let due = s.prefetch_lookahead.max(1);
     let max_slots = s.prefetch_slots.iter().copied().max().unwrap_or(0);
     if fabric.is_flat() {
         let t_new = perfmodel::transfer_time(max_slots, model, hw);
         if t_new <= 0.0 {
-            return Vec::new();
+            return;
         }
-        return vec![PrefetchItem {
+        out.push(PrefetchItem {
             remaining: t_new,
             rate: fabric.intra.bw,
             links: vec![0],
             due_in: due,
-        }];
+        });
+        return;
     }
     if !s.prefetch_flows.is_empty() {
-        // group by (src, dst): one stream per pair
-        let mut grouped: std::collections::BTreeMap<(usize, usize), f64> =
-            std::collections::BTreeMap::new();
-        for f in &s.prefetch_flows {
-            *grouped.entry((f.src, f.dst)).or_insert(0.0) += f.bytes;
+        // group by (src, dst): one stream per pair. A stable sort plus
+        // adjacent merge accumulates each pair's bytes in arrival order
+        // and emits pairs in (src, dst) order — exactly the former
+        // BTreeMap grouping, without its per-call node allocations.
+        pairs.clear();
+        pairs.extend(s.prefetch_flows.iter().map(|f| (f.src, f.dst, f.bytes)));
+        pairs.sort_by_key(|&(src, dst, _)| (src, dst));
+        let mut i = 0;
+        while i < pairs.len() {
+            let (src, dst, mut bytes) = pairs[i];
+            i += 1;
+            while i < pairs.len() && pairs[i].0 == src && pairs[i].1 == dst {
+                bytes += pairs[i].2;
+                i += 1;
+            }
+            if bytes <= 0.0 {
+                continue;
+            }
+            let (rate, links) = fabric.prefetch_path(src, dst);
+            // cross-node streams pay one rail rendezvous up front
+            // (consistent with Fabric::transfer_time_flow)
+            let base = if fabric.same_node(src, dst) {
+                0.0
+            } else {
+                fabric.inter.base_latency
+            };
+            out.push(PrefetchItem {
+                remaining: bytes / rate + base,
+                rate,
+                links,
+                due_in: due,
+            });
         }
-        return grouped
-            .into_iter()
-            .filter(|&(_, bytes)| bytes > 0.0)
-            .map(|((src, dst), bytes)| {
-                let (rate, links) = fabric.prefetch_path(src, dst);
-                // cross-node streams pay one rail rendezvous up front
-                // (consistent with Fabric::transfer_time_flow)
-                let base = if fabric.same_node(src, dst) {
-                    0.0
-                } else {
-                    fabric.inter.base_latency
-                };
-                PrefetchItem {
-                    remaining: bytes / rate + base,
-                    rate,
-                    links,
-                    due_in: due,
-                }
-            })
-            .collect();
+        return;
     }
     // no routed flows provided: conservative same-node streams per rank
-    s.prefetch_slots
-        .iter()
-        .enumerate()
-        .filter(|&(_, &slots)| slots > 0)
-        .map(|(r, &slots)| PrefetchItem {
-            remaining: perfmodel::transfer_time(slots, model, hw),
-            rate: fabric.intra.bw,
-            links: vec![fabric.link_rank_in(r) as u32],
-            due_in: due,
-        })
-        .collect()
+    out.extend(
+        s.prefetch_slots
+            .iter()
+            .enumerate()
+            .filter(|&(_, &slots)| slots > 0)
+            .map(|(r, &slots)| PrefetchItem {
+                remaining: perfmodel::transfer_time(slots, model, hw),
+                rate: fabric.intra.bw,
+                links: vec![fabric.link_rank_in(r) as u32],
+                due_in: due,
+            }),
+    );
 }
 
 /// Build the dual-track timeline for one MoE layer, draining `queue`
@@ -287,10 +312,11 @@ pub fn schedule_layer_fabric(
     // split-phase mechanism, so the ablation without it gets no
     // attention window at all.
     let attn_window = if s.split_phase { s.attn_time } else { 0.0 };
-    let mut avail = vec![attn_window; n_links];
+    queue.avail.clear();
+    queue.avail.resize(n_links, attn_window);
     let mut attn_sent = 0.0;
     for item in queue.items.iter_mut() {
-        attn_sent += item.drain(&mut avail, attn_window, fabric);
+        attn_sent += item.drain(&mut queue.avail, attn_window, fabric);
         if item.due_in == 0 && item.remaining > 0.0 {
             exposed += item.remaining;
             item.remaining = 0.0;
@@ -302,18 +328,22 @@ pub fn schedule_layer_fabric(
     // of Dispatch; the transfers enqueued THIS layer can only start once
     // their plan lands (predict + plan on the aux track).
     let cap = dispatch_dur + compute_max;
-    let mut avail = vec![cap; n_links];
+    queue.avail.clear();
+    queue.avail.resize(n_links, cap);
     let mut phase_b_sent = 0.0;
     for item in queue.items.iter_mut() {
-        phase_b_sent += item.drain(&mut avail, cap, fabric);
+        phase_b_sent += item.drain(&mut queue.avail, cap, fabric);
     }
-    let mut new_items = new_prefetch_items(s, model, hw, fabric);
-    let t_new: f64 = new_items.iter().map(|i| i.remaining).sum();
+    stage_prefetch_items(s, model, hw, fabric, &mut queue.pairs, &mut queue.staged);
+    let t_new: f64 = queue.staged.iter().map(|i| i.remaining).sum();
     // plan-completion floor: what the backlog left, capped by the time
     // remaining after predict+plan
-    let mut new_avail: Vec<f64> = avail.iter().map(|&a| a.min(cap - plan_done)).collect();
-    for item in new_items.iter_mut() {
-        phase_b_sent += item.drain(&mut new_avail, cap - plan_done, fabric);
+    queue.new_avail.clear();
+    queue
+        .new_avail
+        .extend(queue.avail.iter().map(|&a| a.min(cap - plan_done)));
+    for item in queue.staged.iter_mut() {
+        phase_b_sent += item.drain(&mut queue.new_avail, cap - plan_done, fabric);
     }
 
     // Phase C — Combine: split-phase suspends transmission. Without it
@@ -324,7 +354,7 @@ pub fn schedule_layer_fabric(
     // the ablation.
     if !s.split_phase {
         let mut leftover = 0.0;
-        for item in queue.items.iter_mut().chain(new_items.iter_mut()) {
+        for item in queue.items.iter_mut().chain(queue.staged.iter_mut()) {
             if item.due_in <= 1 {
                 leftover += item.remaining;
                 item.remaining = 0.0;
@@ -335,7 +365,7 @@ pub fn schedule_layer_fabric(
 
     // survivors carry to the next window, one deadline closer
     queue.items.retain(|i| i.remaining > 1e-15);
-    for it in new_items {
+    for it in queue.staged.drain(..) {
         if it.remaining > 1e-15 {
             queue.items.push(it);
         }

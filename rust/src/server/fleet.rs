@@ -1,6 +1,9 @@
 //! Data-parallel multi-replica serving: shard an arrival-timed request
 //! stream across N independent [`ServingEngine`] replicas running on
-//! [`ThreadPool`] workers, then merge cross-replica metrics.
+//! scoped worker threads ([`crate::util::parallel::ordered_map`]), then
+//! merge cross-replica metrics. The merge is index-ordered, so the
+//! [`FleetReport`] is bit-identical whether the replicas ran in
+//! parallel or sequentially (`[perf] parallel = false`).
 //!
 //! Each replica is a full serving engine (own queue, clock, balancer
 //! state); the dispatcher assigns every request exactly once, up front,
@@ -13,8 +16,8 @@ use anyhow::Result;
 
 use crate::engine::{ServingEngine, StepExecutor};
 use crate::metrics::ServingMetrics;
+use crate::util::parallel::ordered_map;
 use crate::util::stats::Summary;
-use crate::util::threadpool::ThreadPool;
 use crate::workload::Request;
 
 use super::dispatch::{DispatchKind, Dispatcher};
@@ -30,6 +33,10 @@ pub struct FleetConfig {
     pub max_steps: usize,
     /// Worker threads (0 = one per replica, capped at 8).
     pub threads: usize,
+    /// Run replicas on worker threads (`[perf] parallel`). `false`
+    /// forces a sequential run on the caller's thread; the report is
+    /// bit-identical either way.
+    pub parallel: bool,
 }
 
 impl Default for FleetConfig {
@@ -39,6 +46,7 @@ impl Default for FleetConfig {
             policy: DispatchKind::ShortestQueue,
             max_steps: 100_000,
             threads: 0,
+            parallel: true,
         }
     }
 }
@@ -177,15 +185,16 @@ where
         let r = dispatcher.dispatch(req);
         shards[r].push(req.clone());
     }
-    let threads = if cfg.threads > 0 {
+    let threads = if !cfg.parallel {
+        1
+    } else if cfg.threads > 0 {
         cfg.threads
     } else {
         n.min(8)
     };
-    let pool = ThreadPool::new(threads);
     let max_steps = cfg.max_steps;
     let items: Vec<(usize, Vec<Request>)> = shards.into_iter().enumerate().collect();
-    let per_replica = pool.map(items, move |(idx, shard)| {
+    let per_replica = ordered_map(threads, items, move |_, (idx, shard)| {
         let assigned = shard.len();
         let failed = move |error: String| ReplicaReport {
             replica: idx,
@@ -275,6 +284,7 @@ mod tests {
             policy,
             max_steps: 20_000,
             threads: 0,
+            parallel: true,
         };
         let reqs = skewed_trace(96, seed);
         let report = run_fleet(&cfg, &reqs, sim_factory(seed));
@@ -290,6 +300,7 @@ mod tests {
                 policy,
                 max_steps: 20_000,
                 threads: 0,
+                parallel: true,
             };
             let reqs = skewed_trace(32, 5);
             let report = run_fleet(&cfg, &reqs, sim_factory(5));
@@ -339,6 +350,7 @@ mod tests {
             policy: DispatchKind::TenantAffinity,
             max_steps: 50_000,
             threads: 0,
+            parallel: true,
         };
         let mut want_tenants: Vec<u16> = reqs.iter().map(|r| r.tenant).collect();
         want_tenants.sort_unstable();
@@ -364,6 +376,7 @@ mod tests {
             policy: DispatchKind::RoundRobin,
             max_steps: 20_000,
             threads: 0,
+            parallel: true,
         };
         let reqs = skewed_trace(16, 3);
         let report = run_fleet(&cfg, &reqs, sim_factory(3));

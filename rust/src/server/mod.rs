@@ -6,9 +6,9 @@
 //! continuous-batching loop; clients submit [`ServeRequest`]s through a
 //! channel and receive [`ServeResponse`]s when their request retires.
 //! Multi replica: [`fleet`] shards an open-loop, arrival-timed request
-//! stream across N engine replicas on [`crate::util::threadpool`]
-//! workers, with pluggable [`dispatch`] policies and merged
-//! cross-replica metrics.
+//! stream across N engine replicas on scoped worker threads
+//! ([`crate::util::parallel`]), with pluggable [`dispatch`] policies
+//! and merged cross-replica metrics.
 
 pub mod dispatch;
 pub mod fleet;

@@ -18,7 +18,7 @@
 use crate::fabric::Flow;
 use crate::metrics::{LayerTimeline, Phase};
 use crate::model::MoeModel;
-use crate::perfmodel::{self, Assignment, DispatchPlan};
+use crate::perfmodel::{self, Assignment, DispatchPlan, DispatchScratch};
 use crate::placement::Placement;
 use crate::routing::{LayerRouting, StepRouting};
 use crate::scheduler::{self, LayerSchedule, PrefetchQueue};
@@ -137,6 +137,20 @@ pub struct ClusterSim {
     /// In-flight prefetch transfers, carried across layers and steps
     /// (continuous lookahead pipelining).
     pub prefetch_queue: PrefetchQueue,
+    /// Step-reused working buffers (reset, never freed, each layer) so
+    /// the steady-state step loop allocates no unbounded heap (ISSUE 6).
+    scratch: StepScratch,
+}
+
+/// Per-layer working memory of [`ClusterSim::run_step_ctx`].
+#[derive(Debug, Clone, Default)]
+struct StepScratch {
+    /// `loads[rank][expert]` rows, reused across layers.
+    loads: Vec<Vec<f64>>,
+    /// Per-rank token totals of the current layer.
+    rank_tokens: Vec<f64>,
+    /// Dispatch materialization buffers.
+    dispatch: DispatchScratch,
 }
 
 impl ClusterSim {
@@ -148,6 +162,7 @@ impl ClusterSim {
             split_phase: true,
             mean_ctx: 64,
             prefetch_queue: PrefetchQueue::new(),
+            scratch: StepScratch::default(),
         }
     }
 
@@ -195,9 +210,11 @@ impl ClusterSim {
             let lr = &routing.layers[l];
             let d = &decisions[l];
 
-            let loads = d.assignment.rank_expert_loads();
-            let compute = perfmodel::rank_compute_times(&loads, &self.model, hw);
-            let plan = DispatchPlan::from_assignment(lr, &d.assignment);
+            d.assignment.rank_expert_loads_into(&mut self.scratch.loads);
+            let loads = &self.scratch.loads;
+            let compute = perfmodel::rank_compute_times(loads, &self.model, hw);
+            let plan =
+                DispatchPlan::from_assignment_with(&mut self.scratch.dispatch, lr, &d.assignment);
             // flat fabrics keep the exact scalar volume path; multi-node
             // fabrics need the full matrix for hierarchical A2A phases
             let fabric = &self.cluster.fabric;
@@ -211,8 +228,21 @@ impl ClusterSim {
                 (m.volumes(), Some(m))
             };
 
+            // metrics that read `loads`/`compute` come first so `compute`
+            // can move into the schedule without a per-layer clone
+            self.scratch.rank_tokens.clear();
+            self.scratch
+                .rank_tokens
+                .extend((0..ep).map(|r| loads[r].iter().sum::<f64>()));
+            for r in 0..ep {
+                rank_tokens_acc[r] += self.scratch.rank_tokens[r];
+                replica_slots_used[r] = replica_slots_used[r].max(d.placement.slots_used(r));
+            }
+            ir_per_layer.push(imbalance_ratio(&self.scratch.rank_tokens));
+            comp_skew.push(imbalance_ratio(&compute));
+
             let sched = LayerSchedule {
-                compute: compute.clone(),
+                compute,
                 dispatch,
                 dispatch_matrix,
                 prefetch_flows: d.prefetch_flows.clone(),
@@ -233,14 +263,6 @@ impl ClusterSim {
                 fabric,
             );
             prefetch_slots_total += d.total_prefetch_slots();
-
-            let rank_tokens: Vec<f64> = (0..ep).map(|r| loads[r].iter().sum::<f64>()).collect();
-            for r in 0..ep {
-                rank_tokens_acc[r] += rank_tokens[r];
-                replica_slots_used[r] = replica_slots_used[r].max(d.placement.slots_used(r));
-            }
-            ir_per_layer.push(imbalance_ratio(&rank_tokens));
-            comp_skew.push(imbalance_ratio(&compute));
             latency += tl.makespan();
             timelines.push(tl);
         }

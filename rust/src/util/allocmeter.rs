@@ -1,0 +1,53 @@
+//! Feature-gated global-allocation counter (ISSUE 6 zero-alloc guard).
+//!
+//! Built only with `--features alloc-count`. A test binary installs
+//! [`CountingAlloc`] as its `#[global_allocator]`; [`alloc_count`] then
+//! reports every heap allocation made by that process. The
+//! `alloc_guard` integration test uses it to assert the steady-state
+//! step loop stays allocation-flat, so future PRs cannot silently
+//! regress the arena-backed hot path.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+/// System allocator wrapper that counts `alloc`/`realloc` calls.
+pub struct CountingAlloc;
+
+impl CountingAlloc {
+    /// Const constructor for `static` installation.
+    pub const fn new() -> CountingAlloc {
+        CountingAlloc
+    }
+}
+
+impl Default for CountingAlloc {
+    fn default() -> CountingAlloc {
+        CountingAlloc::new()
+    }
+}
+
+// SAFETY: defers every operation to `System`; only adds a relaxed
+// atomic counter increment on the allocation paths.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+/// Heap allocations made by this process so far (monotone counter;
+/// meaningful only when [`CountingAlloc`] is the global allocator).
+pub fn alloc_count() -> u64 {
+    ALLOCATIONS.load(Ordering::Relaxed)
+}

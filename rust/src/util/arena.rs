@@ -1,0 +1,179 @@
+//! Reset-not-free scratch arena for the per-step hot loop (ISSUE 6).
+//!
+//! The planner, scheduler, and simulator re-run the same bounded-size
+//! computations every layer of every step. Allocating fresh `Vec`s each
+//! time makes the allocator the hot path at 64–128 ranks. The [`Arena`]
+//! keeps typed free-lists of previously used buffers: `take_*` pops a
+//! recycled buffer (clearing and resizing it, never shrinking its
+//! capacity), `put_*` returns it. After the first few steps every take
+//! is a pop — steady state performs no heap allocation.
+//!
+//! The arena also counts how many buffers it had to allocate fresh
+//! ([`Arena::fresh_allocations`]); equivalence/guard tests assert this
+//! count goes flat once warm.
+
+/// Typed free-lists of reusable buffers with reset-not-free semantics.
+#[derive(Debug, Default)]
+pub struct Arena {
+    free_f64: Vec<Vec<f64>>,
+    free_usize: Vec<Vec<usize>>,
+    free_pairs: Vec<Vec<(usize, usize)>>,
+    fresh: usize,
+}
+
+impl Arena {
+    /// Empty arena (no buffers pooled yet).
+    pub fn new() -> Arena {
+        Arena::default()
+    }
+
+    /// Buffers handed out that could NOT be recycled from a free-list.
+    /// Flat across iterations ⇔ the hot loop reached zero-allocation
+    /// steady state.
+    pub fn fresh_allocations(&self) -> usize {
+        self.fresh
+    }
+
+    /// A zeroed `f64` buffer of length `len` (recycled when possible).
+    pub fn take_f64(&mut self, len: usize, fill: f64) -> Vec<f64> {
+        match self.free_f64.pop() {
+            Some(mut v) => {
+                v.clear();
+                if v.capacity() < len {
+                    self.fresh += 1;
+                }
+                v.resize(len, fill);
+                v
+            }
+            None => {
+                self.fresh += 1;
+                vec![fill; len]
+            }
+        }
+    }
+
+    /// Return an `f64` buffer for reuse.
+    pub fn put_f64(&mut self, v: Vec<f64>) {
+        self.free_f64.push(v);
+    }
+
+    /// An empty `usize` buffer with capacity ≥ `cap` (recycled when
+    /// possible).
+    pub fn take_usize(&mut self, cap: usize) -> Vec<usize> {
+        match self.free_usize.pop() {
+            Some(mut v) => {
+                v.clear();
+                if v.capacity() < cap {
+                    self.fresh += 1;
+                    v.reserve(cap);
+                }
+                v
+            }
+            None => {
+                self.fresh += 1;
+                Vec::with_capacity(cap)
+            }
+        }
+    }
+
+    /// Return a `usize` buffer for reuse.
+    pub fn put_usize(&mut self, v: Vec<usize>) {
+        self.free_usize.push(v);
+    }
+
+    /// An empty `(usize, usize)` pair buffer (recycled when possible).
+    pub fn take_pairs(&mut self, cap: usize) -> Vec<(usize, usize)> {
+        match self.free_pairs.pop() {
+            Some(mut v) => {
+                v.clear();
+                if v.capacity() < cap {
+                    self.fresh += 1;
+                    v.reserve(cap);
+                }
+                v
+            }
+            None => {
+                self.fresh += 1;
+                Vec::with_capacity(cap)
+            }
+        }
+    }
+
+    /// Return a pair buffer for reuse.
+    pub fn put_pairs(&mut self, v: Vec<(usize, usize)>) {
+        self.free_pairs.push(v);
+    }
+}
+
+/// Clear-and-refill a nested `[outer][inner]` f64 buffer in place
+/// (reusing every inner allocation) so shapes like `loads[rank][expert]`
+/// can be rebuilt each layer without reallocating.
+pub fn reset_nested_f64(buf: &mut Vec<Vec<f64>>, outer: usize, inner: usize) {
+    if buf.len() > outer {
+        buf.truncate(outer);
+    }
+    for row in buf.iter_mut() {
+        row.clear();
+        row.resize(inner, 0.0);
+    }
+    while buf.len() < outer {
+        buf.push(vec![0.0; inner]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_recycles_after_put() {
+        let mut a = Arena::new();
+        let v = a.take_f64(16, 0.0);
+        assert_eq!(v.len(), 16);
+        assert_eq!(a.fresh_allocations(), 1);
+        a.put_f64(v);
+        let v2 = a.take_f64(8, 1.0);
+        assert_eq!(v2.len(), 8);
+        assert!(v2.iter().all(|&x| x == 1.0));
+        // same (larger) buffer recycled: no fresh allocation
+        assert_eq!(a.fresh_allocations(), 1);
+    }
+
+    #[test]
+    fn growth_counts_as_fresh() {
+        let mut a = Arena::new();
+        let v = a.take_f64(4, 0.0);
+        a.put_f64(v);
+        let _ = a.take_f64(1024, 0.0); // must grow the recycled buffer
+        assert_eq!(a.fresh_allocations(), 2);
+    }
+
+    #[test]
+    fn typed_lists_are_independent() {
+        let mut a = Arena::new();
+        let u = a.take_usize(8);
+        let p = a.take_pairs(8);
+        a.put_usize(u);
+        a.put_pairs(p);
+        let u2 = a.take_usize(4);
+        let p2 = a.take_pairs(4);
+        assert!(u2.is_empty() && u2.capacity() >= 4);
+        assert!(p2.is_empty() && p2.capacity() >= 4);
+        assert_eq!(a.fresh_allocations(), 2);
+    }
+
+    #[test]
+    fn reset_nested_reuses_rows() {
+        let mut buf: Vec<Vec<f64>> = Vec::new();
+        reset_nested_f64(&mut buf, 3, 4);
+        assert_eq!(buf.len(), 3);
+        buf[1][2] = 9.0;
+        let row_ptr = buf[1].as_ptr();
+        reset_nested_f64(&mut buf, 3, 4);
+        assert_eq!(buf[1][2], 0.0);
+        assert_eq!(buf[1].as_ptr(), row_ptr, "inner row reallocated");
+        reset_nested_f64(&mut buf, 2, 2);
+        assert_eq!(buf.len(), 2);
+        assert_eq!(buf[0].len(), 2);
+    }
+}

@@ -139,14 +139,21 @@ impl From<bool> for Json {
 }
 
 /// Parse / structure error with byte offset.
-#[derive(Debug, Clone, thiserror::Error)]
-#[error("json error at byte {offset}: {msg}")]
+#[derive(Debug, Clone)]
 pub struct JsonError {
     /// Byte offset of the failure in the input.
     pub offset: usize,
     /// Failure description.
     pub msg: String,
 }
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "json error at byte {}: {}", self.offset, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 struct Parser<'a> {
     b: &'a [u8],

@@ -1,14 +1,17 @@
 //! Self-contained utility substrates (no external deps available offline):
-//! PRNG, JSON, statistics, CLI parsing, thread pool, property testing,
-//! bench harness.
+//! PRNG, JSON, statistics, CLI parsing, scoped parallel map, scratch
+//! arena, property testing, bench harness.
 
+#[cfg(feature = "alloc-count")]
+pub mod allocmeter;
+pub mod arena;
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod parallel;
 pub mod proptest;
 pub mod rng;
 pub mod stats;
-pub mod threadpool;
 
 pub use json::Json;
 pub use rng::Rng;

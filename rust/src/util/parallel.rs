@@ -1,0 +1,116 @@
+//! Deterministic data-parallel map over scoped std threads (ISSUE 6).
+//!
+//! The offline crate set has no `rayon`; this is the minimal substitute
+//! the fleet runner and the balancers' per-layer plan fan-out need:
+//! split the items into contiguous index chunks, run one scoped thread
+//! per chunk, and concatenate results **in index order**. Because each
+//! item's closure sees exactly the same `(index, item)` it would see
+//! sequentially and results are merged by index, output is bit-identical
+//! to the sequential path — trace replay and metrics cannot diverge
+//! (ISSUE 6 equivalence tests).
+//!
+//! `threads <= 1` (or one item) short-circuits to a plain sequential
+//! loop on the caller's thread, which is also the `[perf] parallel =
+//! false` escape hatch.
+
+/// Worker count to use when the config asks for "auto" (`threads = 0`):
+/// available parallelism capped at 8 (matching the fleet's historical
+/// default cap).
+pub fn auto_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(8)
+}
+
+/// Map `f` over `items`, preserving index order in the result.
+///
+/// With `threads > 1` the items run on scoped worker threads in
+/// contiguous chunks; the closure receives the item's original index so
+/// index-dependent work (seeds, layer ids) stays identical to the
+/// sequential path.
+pub fn ordered_map<T, R, F>(threads: usize, items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+{
+    let n = items.len();
+    if threads <= 1 || n <= 1 {
+        return items.into_iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let workers = threads.min(n);
+    let chunk = n.div_ceil(workers);
+    // split into contiguous chunks, remembering each chunk's base index
+    let mut chunks: Vec<(usize, Vec<T>)> = Vec::with_capacity(workers);
+    let mut items = items;
+    let mut base = n;
+    while !items.is_empty() {
+        let at = items.len().saturating_sub(chunk);
+        let tail = items.split_off(at);
+        base = at;
+        chunks.push((base, tail));
+    }
+    debug_assert_eq!(base, 0);
+    chunks.reverse(); // ascending base index
+    let f = &f;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = chunks
+            .into_iter()
+            .map(|(base, part)| {
+                s.spawn(move || {
+                    part.into_iter()
+                        .enumerate()
+                        .map(|(j, t)| f(base + j, t))
+                        .collect::<Vec<R>>()
+                })
+            })
+            .collect();
+        let mut out = Vec::with_capacity(n);
+        for h in handles {
+            out.extend(h.join().expect("parallel worker panicked"));
+        }
+        out
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_sequential_order() {
+        let items: Vec<i64> = (0..97).collect();
+        let seq = ordered_map(1, items.clone(), |i, x| x * 3 + i as i64);
+        let par = ordered_map(4, items, |i, x| x * 3 + i as i64);
+        assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn indices_are_original() {
+        let par = ordered_map(3, vec!["a", "b", "c", "d", "e"], |i, s| (i, s));
+        assert_eq!(
+            par,
+            vec![(0, "a"), (1, "b"), (2, "c"), (3, "d"), (4, "e")]
+        );
+    }
+
+    #[test]
+    fn more_threads_than_items() {
+        let out = ordered_map(16, vec![10, 20], |i, x| x + i);
+        assert_eq!(out, vec![10, 21]);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let empty: Vec<i32> = ordered_map(4, Vec::<i32>::new(), |_, x| x);
+        assert!(empty.is_empty());
+        assert_eq!(ordered_map(4, vec![7], |_, x| x * 2), vec![14]);
+    }
+
+    #[test]
+    fn auto_threads_positive() {
+        let t = auto_threads();
+        assert!(t >= 1 && t <= 8);
+    }
+}

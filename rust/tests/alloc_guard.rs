@@ -1,0 +1,56 @@
+//! Zero-allocation guard for the steady-state step loop (ISSUE 6).
+//!
+//! Runs only with `--features alloc-count`: installs the counting
+//! global allocator, warms a PROBE-balanced simulator loop until every
+//! scratch buffer has reached its high-water mark, then measures two
+//! equal-length steady-state blocks and asserts the second allocates no
+//! more than the first. Absolute zero is not required — per-step
+//! outputs (decisions, timelines, metric rows) legitimately allocate —
+//! but steady-state allocation must not GROW, which is exactly what the
+//! arena/reset-not-free buffers guarantee and what an accidental
+//! per-step `Vec::new` in the hot path would break.
+#![cfg(feature = "alloc-count")]
+
+use probe::balancers::{decide_step, Probe};
+use probe::config::{Config, ProbeConfig};
+use probe::routing::RoutingModel;
+use probe::simulator::ClusterSim;
+use probe::util::allocmeter::{alloc_count, CountingAlloc};
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc::new();
+
+#[test]
+fn steady_state_step_loop_is_allocation_flat() {
+    let mut cfg = Config::default();
+    cfg.model.n_layers = 4;
+    let mut bal = Probe::new(&cfg, ProbeConfig::default(), 7);
+    let mut sim = ClusterSim::new(cfg.model.clone(), cfg.cluster.clone());
+    let mut rm = RoutingModel::calibrated(4, cfg.model.n_experts, cfg.model.top_k, 3, 11);
+    let tokens = vec![0u16; 2048];
+
+    let mut run_block = |steps: usize, base: usize| {
+        for s in 0..steps {
+            let routing = rm.route_step(&tokens);
+            let ds = decide_step(&mut bal, base + s, &routing);
+            std::hint::black_box(sim.run_step(&routing, &ds));
+        }
+    };
+
+    // warmup: fill the pipeline, grow every scratch to its high-water mark
+    run_block(20, 0);
+
+    let c0 = alloc_count();
+    run_block(100, 20);
+    let c1 = alloc_count();
+    run_block(100, 120);
+    let c2 = alloc_count();
+
+    let delta1 = c1 - c0;
+    let delta2 = c2 - c1;
+    assert!(
+        delta2 <= delta1,
+        "steady-state allocations grew: block1 {delta1}, block2 {delta2} \
+         (a hot-path buffer is being reallocated per step)"
+    );
+}

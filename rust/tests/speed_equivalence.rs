@@ -1,0 +1,214 @@
+//! §Perf equivalence gates (ISSUE 6): the raw-speed paths must be
+//! observationally identical to the straightforward ones they replace.
+//!
+//! 1. parallel fleet == sequential fleet, field for field;
+//! 2. incremental TrafficMatrix delta apply/undo == full rebuild within
+//!    1e-12 relative over randomized flow sequences;
+//! 3. scratch-reused `plan_fabric_with` == allocating `plan_fabric`
+//!    bit-for-bit on a drifting workload.
+
+use anyhow::Result;
+
+use probe::balancers::StaticEp;
+use probe::config::Config;
+use probe::engine::sim::SimExecutor;
+use probe::engine::ServingEngine;
+use probe::fabric::{Fabric, Flow};
+use probe::perfmodel::TrafficMatrix;
+use probe::placement::Placement;
+use probe::planner::{self, PlanScratch};
+use probe::routing::RoutingModel;
+use probe::server::dispatch::DispatchKind;
+use probe::server::fleet::{run_fleet, FleetConfig, FleetReport};
+use probe::util::Rng;
+use probe::workload::{Dataset, Request, RequestGenerator, WorkloadSpec};
+
+type SimEngine = ServingEngine<SimExecutor>;
+
+fn small_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.batch_per_rank = 1;
+    cfg.prefill_chunk_per_rank = 512;
+    cfg.model.n_layers = 2;
+    cfg
+}
+
+fn sim_factory(seed: u64) -> impl Fn(usize) -> Result<SimEngine> + Send + Sync {
+    move |idx: usize| {
+        let cfg = small_cfg();
+        let bal = Box::new(StaticEp::new(&cfg));
+        Ok(SimEngine::new(cfg, bal, seed ^ (idx as u64).wrapping_mul(0x9E37_79B9)))
+    }
+}
+
+fn trace(n: usize, seed: u64) -> Vec<Request> {
+    let mut spec = WorkloadSpec::new(Dataset::Repeat, 4);
+    spec.mean_prompt_len = 16;
+    spec.mean_new_tokens = 32;
+    RequestGenerator::new(spec, seed).take(n)
+}
+
+fn run_with(parallel: bool, seed: u64) -> FleetReport {
+    let cfg = FleetConfig {
+        replicas: 4,
+        policy: DispatchKind::ShortestQueue,
+        max_steps: 20_000,
+        threads: 0,
+        parallel,
+    };
+    let reqs = trace(48, seed);
+    run_fleet(&cfg, &reqs, sim_factory(seed))
+}
+
+#[test]
+fn parallel_fleet_report_matches_sequential() {
+    let seq = run_with(false, 7);
+    let par = run_with(true, 7);
+    assert_eq!(seq.per_replica.len(), par.per_replica.len());
+    for (s, p) in seq.per_replica.iter().zip(par.per_replica.iter()) {
+        assert_eq!(s.replica, p.replica);
+        assert_eq!(s.assigned, p.assigned);
+        assert_eq!(s.completed, p.completed);
+        assert_eq!(s.tokens, p.tokens);
+        assert_eq!(s.steps, p.steps);
+        assert_eq!(
+            s.clock.to_bits(),
+            p.clock.to_bits(),
+            "replica {} clock diverged",
+            s.replica
+        );
+        assert_eq!(
+            s.mean_ir.to_bits(),
+            p.mean_ir.to_bits(),
+            "replica {} IR diverged",
+            s.replica
+        );
+        assert!(s.error.is_none() && p.error.is_none());
+    }
+    // merged metrics pool in the same order -> identical summaries
+    let st = seq.ttft_summary();
+    let pt = par.ttft_summary();
+    assert_eq!(st.p50.to_bits(), pt.p50.to_bits());
+    assert_eq!(st.p99.to_bits(), pt.p99.to_bits());
+    assert_eq!(
+        seq.aggregate_throughput().to_bits(),
+        par.aggregate_throughput().to_bits()
+    );
+}
+
+#[test]
+fn traffic_delta_apply_undo_matches_rebuild() {
+    let ep = 16;
+    let mut rng = Rng::new(0xBEEF);
+    for case in 0..20 {
+        // base matrix + a log of applied flow batches
+        let mut m = TrafficMatrix::new(ep);
+        let mut history: Vec<Vec<Flow>> = Vec::new();
+        for _ in 0..30 {
+            let batch: Vec<Flow> = (0..1 + rng.next_usize(5))
+                .map(|_| Flow {
+                    src: rng.next_usize(ep),
+                    dst: rng.next_usize(ep),
+                    bytes: rng.range_f64(0.0, 4e6),
+                })
+                .collect();
+            m.apply_flows(&batch);
+            history.push(batch);
+        }
+        // undo a random suffix, then rebuild from scratch and compare;
+        // tolerance is relative to the total traffic ever applied (a
+        // fully-undone cell keeps a summation residual far below that)
+        let keep = rng.next_usize(history.len() + 1);
+        for batch in history[keep..].iter().rev() {
+            m.unapply_flows(batch);
+        }
+        let mut rebuilt = TrafficMatrix::new(ep);
+        for batch in &history[..keep] {
+            rebuilt.apply_flows(batch);
+        }
+        let total: f64 = history
+            .iter()
+            .flat_map(|b| b.iter().map(|f| f.bytes.abs()))
+            .sum();
+        let tol = 1e-12 * total.max(1.0);
+        for s in 0..ep {
+            for d in 0..ep {
+                let a = m.get(s, d);
+                let b = rebuilt.get(s, d);
+                assert!(
+                    (a - b).abs() <= tol,
+                    "case {case}: cell ({s},{d}) {a} vs rebuilt {b} (tol {tol:e})"
+                );
+            }
+        }
+        // link-level aggregates agree too
+        let va = m.volumes();
+        let vb = rebuilt.volumes();
+        for r in 0..ep {
+            assert!((va.v_out[r] - vb.v_out[r]).abs() <= tol, "case {case}: v_out[{r}]");
+            assert!((va.v_in[r] - vb.v_in[r]).abs() <= tol, "case {case}: v_in[{r}]");
+        }
+    }
+}
+
+#[test]
+fn scratch_planner_matches_allocating_planner_on_drift() {
+    let cfg = Config::default();
+    let model = &cfg.model;
+    let hw = &cfg.cluster.profile;
+    let ep = 8;
+    let fabric = Fabric::flat(ep, hw);
+    let slot_caps = vec![cfg.probe.max_redundant; ep];
+    let windows = vec![8e-4; ep];
+    let mut rm = RoutingModel::calibrated(4, model.n_experts, model.top_k, 3, 23);
+    let mut scratch = PlanScratch::default();
+    // resident placements carried forward independently per path
+    let mut res_a = Placement::sharded(ep, model.n_experts, cfg.probe.max_redundant);
+    let mut res_b = res_a.clone();
+    let mut planned = 0usize;
+    for _ in 0..4 {
+        let routing = rm.route_step(&vec![0u16; 4096]);
+        for lr in &routing.layers {
+            let counts = lr.expert_counts_by_source_f64(ep);
+            let alloc = planner::plan_fabric(
+                &counts, &res_a, model, hw, &fabric, &windows, &slot_caps, &cfg.probe,
+            );
+            let reused = planner::plan_fabric_with(
+                &mut scratch,
+                &counts,
+                &res_b,
+                model,
+                hw,
+                &fabric,
+                &windows,
+                &slot_caps,
+                &cfg.probe,
+            );
+            assert_eq!(alloc.placement, reused.placement);
+            assert_eq!(alloc.iterations, reused.iterations);
+            assert_eq!(alloc.retained_replicas, reused.retained_replicas);
+            assert_eq!(alloc.fetches, reused.fetches);
+            assert_eq!(
+                alloc.est_after.to_bits(),
+                reused.est_after.to_bits(),
+                "objective diverged after {planned} plans"
+            );
+            for e in 0..model.n_experts {
+                for rs in 0..ep {
+                    for rt in 0..ep {
+                        assert_eq!(
+                            alloc.assignment.get(e, rs, rt).to_bits(),
+                            reused.assignment.get(e, rs, rt).to_bits(),
+                            "flow ({e},{rs},{rt}) diverged"
+                        );
+                    }
+                }
+            }
+            res_a = alloc.placement;
+            res_b = reused.placement;
+            planned += 1;
+        }
+        rm.step_drift();
+    }
+    assert!(planned >= 8, "drift loop barely ran");
+}

@@ -265,6 +265,52 @@ impl PerfConfig {
     }
 }
 
+/// Disaggregated prefill/decode serving knobs (`[disagg]` TOML table,
+/// ISSUE 7): role assignment, dynamic re-balancing, and decode-pool
+/// admission control for [`crate::server::disagg::run_disagg`] and
+/// `probe bench disagg`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DisaggConfig {
+    /// Fixed prefill-pool size; `0` = auto (seeded from the first
+    /// rebalance window's prefill:decode token share, then re-balanced
+    /// dynamically).
+    pub prefill_replicas: usize,
+    /// Re-balancing never shrinks the prefill pool below this.
+    pub min_prefill: usize,
+    /// Re-balancing never shrinks the decode pool below this.
+    pub min_decode: usize,
+    /// Requests per re-balancing window: the role split is re-evaluated
+    /// once per window from the windowed prefill:decode backlog.
+    pub rebalance_window: usize,
+    /// Hysteresis on the prefill token share (fraction of the fleet): a
+    /// role flip needs the backlog share to drift at least this far
+    /// from the current pool split.
+    pub rebalance_threshold: f64,
+    /// Decode-pool admission limit: each window admits at most
+    /// `admit_limit x decode replicas x per-replica decode slots`
+    /// decode tokens of handoffs; excess non-interactive requests defer
+    /// to the next window (counted, never dropped).
+    pub admit_limit: f64,
+    /// Fraction of inter-replica rail bandwidth assumed consumed by
+    /// background All-to-All + expert-prefetch traffic; KV handoff
+    /// flows contend for the remainder.
+    pub background_utilization: f64,
+}
+
+impl Default for DisaggConfig {
+    fn default() -> DisaggConfig {
+        DisaggConfig {
+            prefill_replicas: 0,
+            min_prefill: 1,
+            min_decode: 1,
+            rebalance_window: 32,
+            rebalance_threshold: 0.125,
+            admit_limit: 4.0,
+            background_utilization: 0.3,
+        }
+    }
+}
+
 /// Full experiment / serving configuration.
 #[derive(Debug, Clone)]
 pub struct Config {
@@ -288,6 +334,8 @@ pub struct Config {
     pub memory: MemoryConfig,
     /// Raw-speed knobs (`[perf]` table).
     pub perf: PerfConfig,
+    /// Disaggregated prefill/decode serving knobs (`[disagg]` table).
+    pub disagg: DisaggConfig,
     /// Decode tokens per rank per step.
     pub batch_per_rank: usize,
     /// Chunked-prefill tokens per rank.
@@ -313,6 +361,7 @@ impl Default for Config {
             batch: BatchConfig::default(),
             memory: MemoryConfig::default(),
             perf: PerfConfig::default(),
+            disagg: DisaggConfig::default(),
             batch_per_rank: 768,
             prefill_chunk_per_rank: 8192,
             mean_ctx: 64,
@@ -514,6 +563,52 @@ impl Config {
                 }
                 "perf.threads" => {
                     cfg.perf.threads = value.as_int().ok_or("perf.threads: int")? as usize
+                }
+                "disagg.prefill_replicas" => {
+                    cfg.disagg.prefill_replicas =
+                        value.as_int().ok_or("disagg.prefill_replicas: int")? as usize
+                }
+                "disagg.min_prefill" => {
+                    let v = value.as_int().ok_or("disagg.min_prefill: int")? as usize;
+                    if v == 0 {
+                        return Err("disagg.min_prefill must be >= 1".into());
+                    }
+                    cfg.disagg.min_prefill = v;
+                }
+                "disagg.min_decode" => {
+                    let v = value.as_int().ok_or("disagg.min_decode: int")? as usize;
+                    if v == 0 {
+                        return Err("disagg.min_decode must be >= 1".into());
+                    }
+                    cfg.disagg.min_decode = v;
+                }
+                "disagg.rebalance_window" => {
+                    let v = value.as_int().ok_or("disagg.rebalance_window: int")? as usize;
+                    if v == 0 {
+                        return Err("disagg.rebalance_window must be >= 1".into());
+                    }
+                    cfg.disagg.rebalance_window = v;
+                }
+                "disagg.rebalance_threshold" => {
+                    let t = value.as_float().ok_or("disagg.rebalance_threshold: float")?;
+                    if !(t.is_finite() && (0.0..1.0).contains(&t)) {
+                        return Err("disagg.rebalance_threshold must be in [0, 1)".into());
+                    }
+                    cfg.disagg.rebalance_threshold = t;
+                }
+                "disagg.admit_limit" => {
+                    let a = value.as_float().ok_or("disagg.admit_limit: float")?;
+                    if !(a.is_finite() && a > 0.0) {
+                        return Err("disagg.admit_limit must be finite and > 0".into());
+                    }
+                    cfg.disagg.admit_limit = a;
+                }
+                "disagg.background_utilization" => {
+                    let u = value.as_float().ok_or("disagg.background_utilization: float")?;
+                    if !(u.is_finite() && (0.0..1.0).contains(&u)) {
+                        return Err("disagg.background_utilization must be in [0, 1)".into());
+                    }
+                    cfg.disagg.background_utilization = u;
                 }
                 "seed" => cfg.seed = value.as_int().ok_or("int")? as u64,
                 other => return Err(format!("unknown config key: {other}")),
@@ -768,6 +863,38 @@ threads = 3
         let fixed = Config::from_toml_str("[perf]\nthreads = 5\n").unwrap();
         assert_eq!(fixed.perf.effective_threads(), 5);
         assert!(Config::from_toml_str("[perf]\nparallel = 3\n").is_err());
+    }
+
+    #[test]
+    fn parse_disagg_table() {
+        let text = r#"
+[disagg]
+prefill_replicas = 2
+min_prefill = 1
+min_decode = 2
+rebalance_window = 16
+rebalance_threshold = 0.2
+admit_limit = 2.5
+background_utilization = 0.4
+"#;
+        let c = Config::from_toml_str(text).unwrap();
+        assert_eq!(c.disagg.prefill_replicas, 2);
+        assert_eq!(c.disagg.min_prefill, 1);
+        assert_eq!(c.disagg.min_decode, 2);
+        assert_eq!(c.disagg.rebalance_window, 16);
+        assert_eq!(c.disagg.rebalance_threshold, 0.2);
+        assert_eq!(c.disagg.admit_limit, 2.5);
+        assert_eq!(c.disagg.background_utilization, 0.4);
+        // defaults survive an empty config
+        let d = Config::from_toml_str("").unwrap();
+        assert_eq!(d.disagg, DisaggConfig::default());
+        // validation: zero pools, out-of-range fractions, bad limits
+        assert!(Config::from_toml_str("[disagg]\nmin_prefill = 0\n").is_err());
+        assert!(Config::from_toml_str("[disagg]\nmin_decode = 0\n").is_err());
+        assert!(Config::from_toml_str("[disagg]\nrebalance_window = 0\n").is_err());
+        assert!(Config::from_toml_str("[disagg]\nrebalance_threshold = 1.5\n").is_err());
+        assert!(Config::from_toml_str("[disagg]\nadmit_limit = 0.0\n").is_err());
+        assert!(Config::from_toml_str("[disagg]\nbackground_utilization = 1.0\n").is_err());
     }
 
     #[test]

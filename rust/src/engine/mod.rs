@@ -68,6 +68,27 @@ pub struct StepReport {
     pub ir_samples: Vec<f64>,
 }
 
+/// A finished prefill ready for KV-cache handoff to a decode replica
+/// (disaggregated serving, ISSUE 7). Produced by engines fed through
+/// [`ServingEngine::submit_prefill_only`]: when such a request's final
+/// prefill chunk completes, its KV pages are released locally and the
+/// handoff record carries everything a decode replica needs to admit
+/// the transferred pages via [`ServingEngine::submit_resident`].
+#[derive(Debug, Clone)]
+pub struct PrefillHandoff {
+    /// The original request (decode budget untouched — the prefill-only
+    /// engine overrode its budget to 1, the decode side restores it).
+    pub req: Request,
+    /// KV rows resident at handoff (== pages freed on the prefill
+    /// replica == pages the decode replica must admit).
+    pub kv_tokens: usize,
+    /// Rank that held the KV on the prefill replica (transfer source).
+    pub kv_rank: usize,
+    /// Serving-clock time the final prefill chunk completed (transfer
+    /// can start no earlier).
+    pub ready_at: f64,
+}
+
 /// A request occupying an engine slot (prefilling or decoding).
 #[derive(Debug, Clone)]
 pub struct ActiveEntry {
@@ -170,6 +191,12 @@ struct Queued {
     /// Tokens already emitted before a preemption (0 for fresh
     /// requests); recompute prefill re-covers them.
     resume_decoded: usize,
+    /// KV rows arriving pre-filled from another replica (disaggregated
+    /// handoff, see [`ServingEngine::submit_resident`]); 0 for normal
+    /// requests. Admission charges these rows to the governor directly
+    /// instead of scheduling prefill chunks. Preemption clears it — a
+    /// re-admitted victim recomputes its prompt locally.
+    resident_kv: usize,
 }
 
 impl Queued {
@@ -193,6 +220,16 @@ pub struct ServingEngine<E: StepExecutor> {
     pub metrics: ServingMetrics,
     /// Imbalance-ratio samples reported by the executor.
     pub ir: IrTracker,
+    /// Request ids submitted via [`ServingEngine::submit_prefill_only`]:
+    /// their decode budget is forced to 1 and retirement emits a
+    /// [`PrefillHandoff`] instead of a served response.
+    prefill_only: HashSet<u64>,
+    /// Finished prefill-only requests awaiting KV handoff to a decode
+    /// replica, in retirement order (disaggregated serving).
+    pub handoffs: Vec<PrefillHandoff>,
+    /// Total KV rows admitted through [`ServingEngine::submit_resident`]
+    /// (the decode-side half of the handoff conservation property).
+    pub resident_admitted_kv: usize,
 }
 
 impl<E: StepExecutor> ServingEngine<E> {
@@ -205,6 +242,9 @@ impl<E: StepExecutor> ServingEngine<E> {
             clock: 0.0,
             metrics: ServingMetrics::default(),
             ir: IrTracker::new(),
+            prefill_only: HashSet::new(),
+            handoffs: Vec::new(),
+            resident_admitted_kv: 0,
         }
     }
 
@@ -225,6 +265,55 @@ impl<E: StepExecutor> ServingEngine<E> {
             req,
             midx,
             resume_decoded: 0,
+            resident_kv: 0,
+        });
+    }
+
+    /// Enqueue a request to be **prefilled only** (disaggregated
+    /// serving): it runs the normal chunked-prefill admission path, but
+    /// its decode budget is forced to 1 (the final chunk's implicit
+    /// first token) and retirement pushes a [`PrefillHandoff`] carrying
+    /// its KV page count, source rank, and completion time onto
+    /// [`ServingEngine::handoffs`]. The request's local KV pages are
+    /// released exactly as on a normal retirement, so pages freed here
+    /// equal pages the decode replica later admits.
+    pub fn submit_prefill_only(&mut self, req: Request) {
+        self.prefill_only.insert(req.id);
+        self.submit(req);
+    }
+
+    /// Enqueue a request whose prompt KV arrives **pre-filled** from a
+    /// prefill replica (the decode-side half of a disaggregated
+    /// handoff). `kv_tokens` is the transferred page count and
+    /// `ready_at` the time the KV transfer completes on this replica's
+    /// rails — the request becomes admissible only after it, charging
+    /// the transfer latency (and any prefill/transfer queueing) to
+    /// TTFT. The recorded arrival stays the request's ORIGINAL arrival,
+    /// so TTFT spans prefill + transfer + both queues end to end.
+    ///
+    /// On admission the engine charges `kv_tokens` rows straight to the
+    /// governor (no prefill chunks), stamps the first token, and the
+    /// request joins the decode set in the same step. If it is later
+    /// preempted its pages are dropped and it recomputes its prompt
+    /// locally, exactly like a native preemption victim.
+    pub fn submit_resident(&mut self, mut req: Request, kv_tokens: usize, ready_at: f64) {
+        let midx = self.metrics.requests.len();
+        self.metrics.requests.push(RequestMetrics {
+            id: req.id,
+            tenant: req.tenant,
+            arrival: req.arrival,
+            ..Default::default()
+        });
+        if ready_at > req.arrival {
+            // gate admissibility on transfer completion; metrics above
+            // already captured the true arrival
+            req.arrival = ready_at;
+        }
+        self.requeue(Queued {
+            req,
+            midx,
+            resume_decoded: 0,
+            resident_kv: kv_tokens.max(1),
         });
     }
 
@@ -298,6 +387,8 @@ impl<E: StepExecutor> ServingEngine<E> {
         // freshly admitted entries are always prefilling, so the count
         // updates incrementally instead of rescanning per admission
         let mut prefilling = self.active.iter().filter(|e| e.is_prefilling()).count();
+        // resident-KV admissions join the decode set in this same step
+        let mut resident_now: Vec<(u64, u16, usize)> = Vec::new();
         loop {
             if self.active.len() >= cap || prefilling >= max_prefilling {
                 break;
@@ -306,14 +397,22 @@ impl<E: StepExecutor> ServingEngine<E> {
             if front.req.arrival > self.clock || used >= token_budget {
                 break;
             }
-            let first_chunk = front
-                .prefill_target()
-                .min(chunk_max)
-                .min(token_budget - used)
-                .max(1);
+            // a resident handoff charges its transferred pages whole and
+            // needs no prefill chunk in the batch
+            let resident_kv = front.resident_kv;
+            let first_chunk = if resident_kv > 0 {
+                0
+            } else {
+                front
+                    .prefill_target()
+                    .min(chunk_max)
+                    .min(token_budget - used)
+                    .max(1)
+            };
+            let admit_kv = if resident_kv > 0 { resident_kv } else { first_chunk };
             let kv_rank = match self.executor.memory() {
                 Some(mm) => {
-                    match mm.admit_rank(first_chunk, used + first_chunk, &pending_kv) {
+                    match mm.admit_rank(admit_kv, used + first_chunk, &pending_kv) {
                         Some(r) => r,
                         None if self.active.is_empty() => {
                             let q = self.queue.front().unwrap();
@@ -339,16 +438,58 @@ impl<E: StepExecutor> ServingEngine<E> {
                     return Err(e);
                 }
             };
-            pending_kv[kv_rank] += first_chunk;
-            prefilling += 1;
-            self.active.push(ActiveEntry {
-                req: q.req,
-                decoded: q.resume_decoded,
-                budget,
-                prefilled: 0,
-                kv_tokens: 0,
-                kv_rank,
-                midx: q.midx,
+            // prefill-only requests retire after the final chunk's
+            // implicit first token; their decode happens elsewhere
+            let budget = if self.prefill_only.contains(&q.req.id) { 1 } else { budget };
+            if resident_kv > 0 {
+                // KV landed from the transfer: the first token was
+                // already produced by the remote prefill, so stamp it at
+                // admission (>= transfer completion) and start decoding
+                self.resident_admitted_kv += resident_kv;
+                self.metrics.requests[q.midx].first_token = Some(self.clock);
+                if budget <= 1 {
+                    // nothing left to decode — retire inline without
+                    // ever occupying pages or a slot
+                    let m = &mut self.metrics.requests[q.midx];
+                    m.finished = Some(self.clock);
+                    m.tokens_out = 1;
+                    self.executor.retire(&q.req);
+                    continue;
+                }
+                if let Some(mm) = self.executor.memory() {
+                    mm.grow(kv_rank, resident_kv);
+                }
+                used += 1; // its decode token rides in this step
+                resident_now.push((q.req.id, q.req.domain, resident_kv));
+                let prefilled = prefill_target_for(&q.req, 1);
+                self.active.push(ActiveEntry {
+                    decoded: 1,
+                    budget,
+                    prefilled,
+                    kv_tokens: resident_kv,
+                    kv_rank,
+                    midx: q.midx,
+                    req: q.req,
+                });
+            } else {
+                pending_kv[kv_rank] += first_chunk;
+                prefilling += 1;
+                self.active.push(ActiveEntry {
+                    req: q.req,
+                    decoded: q.resume_decoded,
+                    budget,
+                    prefilled: 0,
+                    kv_tokens: 0,
+                    kv_rank,
+                    midx: q.midx,
+                });
+            }
+        }
+        for (req_id, domain, kv) in resident_now {
+            decode.push(DecodeSlot {
+                req_id,
+                domain,
+                context_len: kv.max(1),
             });
         }
 
@@ -441,6 +582,9 @@ impl<E: StepExecutor> ServingEngine<E> {
                             req: e.req,
                             midx: e.midx,
                             resume_decoded: e.decoded,
+                            // dropped pages are gone: a preempted
+                            // handoff recomputes its prompt locally
+                            resident_kv: 0,
                         });
                     }
                     None => {
@@ -542,6 +686,16 @@ impl<E: StepExecutor> ServingEngine<E> {
                 let m = &mut self.metrics.requests[e.midx];
                 m.finished = Some(clock);
                 m.tokens_out = e.decoded;
+                if self.prefill_only.remove(&e.req.id) {
+                    // the pages just released are exactly what the
+                    // decode replica must re-admit after the transfer
+                    self.handoffs.push(PrefillHandoff {
+                        kv_tokens: e.kv_tokens,
+                        kv_rank: e.kv_rank,
+                        ready_at: clock,
+                        req: e.req.clone(),
+                    });
+                }
                 self.executor.retire(&e.req);
             } else {
                 i += 1;
@@ -918,6 +1072,96 @@ mod tests {
                 .collect()
         };
         assert_eq!(per_req(&e), per_req(&e2));
+    }
+
+    #[test]
+    fn prefill_only_emits_handoff_and_frees_local_kv() {
+        let mut exec = MockExecutor::new(4);
+        exec.chunk = 4;
+        exec.mem = Some(tiny_memory(64));
+        let mut e = ServingEngine::from_executor(exec);
+        let mut r = req(0, 0.0, 40); // decode budget must be ignored
+        r.prompt_len = 10;
+        e.submit_prefill_only(r);
+        e.run_to_completion(50).unwrap();
+        assert_eq!(e.handoffs.len(), 1);
+        let h = &e.handoffs[0];
+        assert_eq!(h.req.id, 0);
+        assert_eq!(h.kv_tokens, 10, "handoff must carry the prompt KV");
+        assert_eq!(h.ready_at, e.metrics.requests[0].finished.unwrap());
+        // only the prefill's implicit first token was produced here
+        assert_eq!(e.metrics.requests[0].tokens_out, 1);
+        // pages freed locally: conservation's prefill-side half
+        let mm = e.executor.memory().unwrap();
+        assert_eq!(mm.total_kv_tokens(), 0.0);
+    }
+
+    #[test]
+    fn resident_admission_charges_transfer_to_ttft_and_skips_prefill() {
+        let mut exec = MockExecutor::new(4);
+        exec.mem = Some(tiny_memory(64));
+        let mut e = ServingEngine::from_executor(exec);
+        let mut r = req(0, 0.0, 4);
+        r.prompt_len = 10;
+        e.submit_resident(r, 10, 3.0); // KV lands at t=3
+        e.run_to_completion(50).unwrap();
+        let m = &e.metrics.requests[0];
+        // TTFT spans the original arrival through transfer completion
+        assert!((m.arrival - 0.0).abs() < 1e-12);
+        assert!(m.first_token.unwrap() >= 3.0);
+        assert!(m.ttft().unwrap() >= 3.0);
+        assert_eq!(m.tokens_out, 4);
+        assert_eq!(e.resident_admitted_kv, 10);
+        // no prefill chunks ever executed: the KV arrived pre-filled
+        assert!(e.executor.chunks_seen.is_empty());
+        let mm = e.executor.memory().unwrap();
+        assert_eq!(mm.total_kv_tokens(), 0.0, "retirement must release KV");
+    }
+
+    #[test]
+    fn handoff_pages_conserved_across_replica_pair() {
+        // prefill replica
+        let mut pexec = MockExecutor::new(4);
+        pexec.chunk = 8;
+        pexec.mem = Some(tiny_memory(128));
+        let mut pe = ServingEngine::from_executor(pexec);
+        for i in 0..3u64 {
+            let mut r = req(i, 0.1 * i as f64, 6);
+            r.prompt_len = 12 + 2 * i as usize;
+            pe.submit_prefill_only(r);
+        }
+        pe.run_to_completion(100).unwrap();
+        assert_eq!(pe.handoffs.len(), 3);
+        let freed: usize = pe.handoffs.iter().map(|h| h.kv_tokens).sum();
+        // decode replica admits exactly what the prefill side freed
+        let mut dexec = MockExecutor::new(4);
+        dexec.mem = Some(tiny_memory(128));
+        let mut de = ServingEngine::from_executor(dexec);
+        for h in &pe.handoffs {
+            de.submit_resident(h.req.clone(), h.kv_tokens, h.ready_at + 0.5);
+        }
+        de.run_to_completion(100).unwrap();
+        assert_eq!(de.resident_admitted_kv, freed, "handoff pages not conserved");
+        assert!(de.metrics.requests.iter().all(|m| m.finished.is_some()));
+        for m in &de.metrics.requests {
+            assert_eq!(m.tokens_out, 6);
+        }
+    }
+
+    #[test]
+    fn resident_single_token_budget_retires_inline() {
+        let mut exec = MockExecutor::new(4);
+        exec.mem = Some(tiny_memory(64));
+        let mut e = ServingEngine::from_executor(exec);
+        let mut r = req(0, 0.0, 1); // first token already produced remotely
+        r.prompt_len = 5;
+        e.submit_resident(r, 5, 2.0);
+        e.run_to_completion(20).unwrap();
+        let m = &e.metrics.requests[0];
+        assert_eq!(m.tokens_out, 1);
+        assert_eq!(m.first_token, m.finished);
+        assert_eq!(e.resident_admitted_kv, 5);
+        assert_eq!(e.active_count(), 0);
     }
 
     #[test]

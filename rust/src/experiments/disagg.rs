@@ -1,0 +1,295 @@
+//! `probe bench disagg` — colocated vs disaggregated prefill/decode
+//! serving at matched offered load.
+//!
+//! For each scenario preset the same calibrated request stream (see
+//! [`super::volatility`] for the self-calibration scheme) is served
+//! twice on the same replica count:
+//!
+//! * **colocated** — [`crate::server::fleet::run_fleet`] under JSQ
+//!   dispatch: every replica runs the unified continuous-batching step,
+//!   so prefill chunks ride in decode steps and inflate TPOT;
+//! * **disagg** — [`crate::server::disagg::run_disagg`]: dedicated
+//!   prefill/decode pools, KV handoff as routed flows on the
+//!   inter-replica fabric, SLO-aware admission, backlog-driven role
+//!   re-balancing.
+//!
+//! Reported per cell: decode throughput, TTFT/TPOT percentiles (disagg
+//! TTFT *includes* the KV transfer), KV bytes shipped, exposed transfer
+//! time, deferral and re-balance counts →
+//! `bench_results/BENCH_disagg.json`.
+
+use crate::balancers::StaticEp;
+use crate::config::Config;
+use crate::engine::sim::SimExecutor;
+use crate::engine::ServingEngine;
+use crate::server::disagg::{run_disagg, DisaggReport, DisaggRunConfig};
+use crate::server::dispatch::DispatchKind;
+use crate::server::fleet::{run_fleet, FleetConfig, FleetReport};
+use crate::util::bench::BenchSet;
+use crate::workload::{Request, Scenario, ScenarioGenerator};
+
+use super::volatility::{build_scenario_for, calibrate_step_latency_for};
+use super::SIM_LAYERS;
+
+/// Sweep parameters.
+pub struct DisaggParams {
+    /// Scenario presets to run (default: the three the paper-style
+    /// comparison needs — steady, burst, multi_tenant).
+    pub presets: Vec<String>,
+    /// Replicas per serving mode (split across roles under disagg).
+    pub replicas: usize,
+    /// Offered load as a fraction of calibrated decode capacity.
+    pub load: f64,
+    /// Scenario horizon in decode-step units.
+    pub steps: usize,
+    /// Decode tokens per rank (kept small so queueing is visible).
+    pub batch_per_rank: usize,
+    /// Mean prompt length of the base tenant (the stream is reshaped
+    /// prefill-heavy so the colocated interference is visible).
+    pub mean_prompt: usize,
+    /// Mean decode budget per request (tokens).
+    pub mean_new_tokens: usize,
+    /// Safety cap on steps per replica.
+    pub max_steps: usize,
+    /// Root seed (streams and engines derive from it).
+    pub seed: u64,
+}
+
+impl Default for DisaggParams {
+    fn default() -> Self {
+        DisaggParams {
+            presets: vec!["steady".into(), "burst".into(), "multi_tenant".into()],
+            replicas: 4,
+            load: 0.7,
+            steps: 160,
+            batch_per_rank: 2,
+            mean_prompt: 384,
+            mean_new_tokens: 24,
+            max_steps: 200_000,
+            seed: 41,
+        }
+    }
+}
+
+/// Serving config for both modes: small decode batch, a prefill chunk
+/// small enough that long prompts span many chunked steps — the regime
+/// where colocated prefill visibly stretches decode steps.
+pub fn disagg_cfg(p: &DisaggParams) -> Config {
+    let mut cfg = Config::default();
+    cfg.model.n_layers = SIM_LAYERS;
+    cfg.batch_per_rank = p.batch_per_rank;
+    cfg.prefill_chunk_per_rank = 64;
+    cfg
+}
+
+/// Reshape the calibrated scenario's tenants into a mixed
+/// prompt-length population ([`build_scenario_for`] pins prompts to 16
+/// tokens, which would make KV handoffs trivial): tenant *i* cycles
+/// through {base, prompt-heavy, decode-heavy} shapes around
+/// `mean_prompt`/`mean_new_tokens`.
+fn shape_tenants(s: &mut Scenario, mean_prompt: usize, mean_new_tokens: usize) {
+    for (i, t) in s.tenants.iter_mut().enumerate() {
+        match i % 3 {
+            0 => {
+                t.spec.mean_prompt_len = mean_prompt;
+                t.spec.mean_new_tokens = mean_new_tokens;
+            }
+            1 => {
+                t.spec.mean_prompt_len = mean_prompt * 2;
+                t.spec.mean_new_tokens = (mean_new_tokens / 2).max(4);
+            }
+            _ => {
+                t.spec.mean_prompt_len = (mean_prompt / 2).max(8);
+                t.spec.mean_new_tokens = mean_new_tokens * 2;
+            }
+        }
+    }
+}
+
+/// The identical calibrated stream both modes serve for one preset.
+pub fn stream_for(p: &DisaggParams, preset: &str, idx: usize) -> Vec<Request> {
+    let cfg = disagg_cfg(p);
+    let t_step = calibrate_step_latency_for(&cfg, p.seed);
+    let mut scenario =
+        build_scenario_for(&cfg, preset, p.load, p.steps, p.mean_new_tokens, t_step)
+            .unwrap_or_else(|| panic!("unknown scenario preset {preset:?}"));
+    shape_tenants(&mut scenario, p.mean_prompt, p.mean_new_tokens);
+    let stream_seed = p.seed ^ (idx as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    ScenarioGenerator::new(scenario, stream_seed).generate()
+}
+
+fn sim_factory(
+    p: &DisaggParams,
+) -> impl Fn(usize) -> anyhow::Result<ServingEngine<SimExecutor>> + Send + Sync + 'static {
+    let cfg = disagg_cfg(p);
+    let seed = p.seed;
+    move |idx: usize| {
+        let bal = Box::new(StaticEp::new(&cfg));
+        Ok(ServingEngine::new(
+            cfg.clone(),
+            bal,
+            seed ^ (idx as u64).wrapping_mul(0x9E37_79B9),
+        ))
+    }
+}
+
+/// Serve one preset's stream in both modes. Exposed for integration
+/// tests (the burst TPOT-win gate in `tests/disagg_handoff.rs`).
+pub fn run_pair(p: &DisaggParams, preset: &str, idx: usize) -> (Vec<Request>, FleetReport, DisaggReport) {
+    let reqs = stream_for(p, preset, idx);
+    let cfg = disagg_cfg(p);
+    let fleet_cfg = FleetConfig {
+        replicas: p.replicas,
+        policy: DispatchKind::ShortestQueue,
+        max_steps: p.max_steps,
+        threads: 0,
+        parallel: true,
+    };
+    let colocated = run_fleet(&fleet_cfg, &reqs, sim_factory(p));
+    let t_step = calibrate_step_latency_for(&cfg, p.seed);
+    let mut rc = DisaggRunConfig::from_config(p.replicas, &cfg);
+    rc.max_steps = p.max_steps;
+    // calibrated backlog-model rates: a decode step moves the global
+    // batch, a prefill step moves a whole chunk
+    let gb = cfg.global_batch().max(1) as f64;
+    let chunk = (cfg.prefill_chunk_per_rank * cfg.cluster.ep).max(1) as f64;
+    rc.service_rate = gb / t_step;
+    rc.prefill_rate_ratio = (chunk / gb).max(1.0);
+    let disagg = run_disagg(&rc, &reqs, sim_factory(p));
+    (reqs, colocated, disagg)
+}
+
+/// Run the full comparison and emit `bench_results/BENCH_disagg.json`.
+pub fn run(p: &DisaggParams) -> BenchSet {
+    let mut b = BenchSet::new(
+        "BENCH_disagg",
+        &[
+            "scenario",
+            "mode",
+            "replicas",
+            "requests",
+            "completed",
+            "decode_tok_s",
+            "ttft_p50_ms",
+            "ttft_p99_ms",
+            "tpot_p50_ms",
+            "tpot_p99_ms",
+            "kv_gb",
+            "exposed_p99_ms",
+            "deferred",
+            "rebalances",
+        ],
+    );
+    for (idx, preset) in p.presets.iter().enumerate() {
+        let (reqs, colocated, disagg) = run_pair(p, preset, idx);
+        let cm = colocated.merged_metrics();
+        let (cttft, ctpot) = (cm.ttft_summary(), cm.tpot_summary());
+        b.row(&[
+            preset.clone(),
+            "colocated".to_string(),
+            p.replicas.to_string(),
+            reqs.len().to_string(),
+            colocated.completed().to_string(),
+            format!("{:.0}", colocated.aggregate_throughput()),
+            format!("{:.2}", cttft.p50 * 1e3),
+            format!("{:.2}", cttft.p99 * 1e3),
+            format!("{:.3}", ctpot.p50 * 1e3),
+            format!("{:.3}", ctpot.p99 * 1e3),
+            "0.000".to_string(),
+            "0.00".to_string(),
+            "0".to_string(),
+            "0".to_string(),
+        ]);
+        let (dttft, dtpot) = (disagg.ttft_summary(), disagg.tpot_summary());
+        b.row(&[
+            preset.clone(),
+            "disagg".to_string(),
+            p.replicas.to_string(),
+            reqs.len().to_string(),
+            disagg.completed().to_string(),
+            format!("{:.0}", disagg.aggregate_throughput()),
+            format!("{:.2}", dttft.p50 * 1e3),
+            format!("{:.2}", dttft.p99 * 1e3),
+            format!("{:.3}", dtpot.p50 * 1e3),
+            format!("{:.3}", dtpot.p99 * 1e3),
+            format!("{:.3}", disagg.kv_bytes / 1e9),
+            format!("{:.2}", disagg.exposed_transfer.p99 * 1e3),
+            disagg.deferred.to_string(),
+            disagg.rebalances.to_string(),
+        ]);
+    }
+    b.note(&format!(
+        "matched offered load per preset: identical calibrated stream served \
+         colocated (fleet JSQ) and disaggregated ({} replicas, auto role split)",
+        p.replicas
+    ));
+    b.note("disagg ttft includes KV transfer; kv_gb = bytes shipped over inter-replica rails");
+    b.note(&format!(
+        "prefill-heavy shaped tenants (mean prompt {}), load {:.0}% of decode capacity, \
+         horizon {} steps",
+        p.mean_prompt,
+        p.load * 100.0,
+        p.steps
+    ));
+    b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> DisaggParams {
+        DisaggParams {
+            presets: vec!["steady".into()],
+            replicas: 4,
+            load: 0.6,
+            steps: 40,
+            batch_per_rank: 1,
+            mean_prompt: 192,
+            mean_new_tokens: 16,
+            max_steps: 100_000,
+            seed: 41,
+        }
+    }
+
+    #[test]
+    fn disagg_bench_emits_paired_cells() {
+        let p = small();
+        let b = run(&p);
+        assert_eq!(b.rows.len(), 2, "one colocated + one disagg row");
+        for row in &b.rows {
+            let submitted: usize = row[3].parse().unwrap();
+            let completed: usize = row[4].parse().unwrap();
+            assert!(submitted > 0, "{row:?}: empty stream");
+            assert_eq!(completed, submitted, "{row:?}: dropped requests");
+            let tok_s: f64 = row[5].parse().unwrap();
+            assert!(tok_s > 0.0, "{row:?}");
+        }
+        assert_eq!(b.rows[0][1], "colocated");
+        assert_eq!(b.rows[1][1], "disagg");
+        // the disagg row must ship real KV bytes over the fabric
+        let kv_gb: f64 = b.rows[1][10].parse().unwrap();
+        assert!(kv_gb > 0.0, "disagg run moved no KV");
+    }
+
+    #[test]
+    fn both_modes_serve_the_identical_stream() {
+        let p = small();
+        let (reqs, colocated, disagg) = run_pair(&p, "steady", 0);
+        assert_eq!(colocated.completed(), reqs.len());
+        assert_eq!(disagg.completed(), reqs.len());
+        assert_eq!(disagg.kv_pages_freed, disagg.kv_pages_admitted);
+        // deterministic: same pair again is bit-identical
+        let (_, c2, d2) = run_pair(&p, "steady", 0);
+        assert_eq!(
+            colocated.ttft_summary().p50.to_bits(),
+            c2.ttft_summary().p50.to_bits()
+        );
+        assert_eq!(
+            disagg.ttft_summary().p50.to_bits(),
+            d2.ttft_summary().p50.to_bits()
+        );
+        assert_eq!(disagg.kv_bytes.to_bits(), d2.kv_bytes.to_bits());
+        assert_eq!(disagg.role_timeline, d2.role_timeline);
+    }
+}

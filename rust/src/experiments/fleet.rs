@@ -143,8 +143,12 @@ pub fn run_cell(
     run_fleet(&cfg, &reqs, factory)
 }
 
-/// Run the fleet sweep and emit `bench_results/fleet_scaling.json`.
-pub fn run(p: &FleetParams) -> BenchSet {
+/// Run the fleet sweep and also collect per-replica attribution rows
+/// (role, utilization, assignment counts) as a second `fleet_replicas`
+/// table — the pool-saturation view `probe fleet` prints alongside the
+/// summary. Emits `bench_results/fleet_scaling.json` and
+/// `bench_results/fleet_replicas.json`.
+pub fn run_with_detail(p: &FleetParams) -> (BenchSet, BenchSet) {
     let mut b = BenchSet::new(
         "fleet_scaling",
         &[
@@ -157,6 +161,20 @@ pub fn run(p: &FleetParams) -> BenchSet {
             "tpot_p50_ms",
             "mean_ir",
             "completed",
+        ],
+    );
+    let mut d = BenchSet::new(
+        "fleet_replicas",
+        &[
+            "dataset",
+            "replicas",
+            "policy",
+            "replica",
+            "role",
+            "utilization",
+            "assigned",
+            "completed",
+            "tokens",
         ],
     );
     for w in &p.workloads {
@@ -181,6 +199,21 @@ pub fn run(p: &FleetParams) -> BenchSet {
                     format!("{:.2}", report.mean_ir()),
                     report.completed().to_string(),
                 ]);
+                for (replica, role, util, assigned, completed, tokens) in
+                    report.per_replica_rows()
+                {
+                    d.row(&[
+                        w.label(),
+                        n.to_string(),
+                        policy.name().to_string(),
+                        replica.to_string(),
+                        role.to_string(),
+                        format!("{util:.3}"),
+                        assigned.to_string(),
+                        completed.to_string(),
+                        tokens.to_string(),
+                    ]);
+                }
             }
         }
     }
@@ -191,7 +224,14 @@ pub fn run(p: &FleetParams) -> BenchSet {
     ));
     b.note("load-aware dispatch (shortest-queue / bounded-load affinity)");
     b.note("vs round-robin matters most on the skewed Repeat stream");
-    b
+    d.note("utilization = replica busy span / fleet makespan (1.0 = the straggler)");
+    d.note("role is 'colocated' for fleet runs; disagg runs split prefill/decode");
+    (b, d)
+}
+
+/// Run the fleet sweep and emit `bench_results/fleet_scaling.json`.
+pub fn run(p: &FleetParams) -> BenchSet {
+    run_with_detail(p).0
 }
 
 #[cfg(test)]
@@ -217,10 +257,17 @@ mod tests {
     #[test]
     fn fleet_experiment_emits_all_cells() {
         let p = small();
-        let b = run(&p);
+        let (b, d) = run_with_detail(&p);
         assert_eq!(b.rows.len(), DispatchKind::ALL.len(), "one row per policy");
         for row in &b.rows {
             assert_eq!(row[8], "48", "all requests complete: {row:?}");
+        }
+        // one detail row per (policy, replica), role + utilization filled
+        assert_eq!(d.rows.len(), DispatchKind::ALL.len() * 4);
+        for row in &d.rows {
+            assert_eq!(row[4], "colocated", "{row:?}");
+            let util: f64 = row[5].parse().unwrap();
+            assert!((0.0..=1.0).contains(&util), "{row:?}");
         }
     }
 

@@ -12,6 +12,7 @@
 //! notes).
 
 pub mod ablations;
+pub mod disagg;
 pub mod fabric;
 pub mod fig10_fidelity;
 pub mod fleet;

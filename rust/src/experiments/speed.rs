@@ -14,7 +14,9 @@
 //!    a real deployment must hide inside the dispatch window.
 //!
 //! Results go to `bench_results/BENCH_speed.json`; CI diffs steps/sec
-//! against the committed `BENCH_speed_baseline.json` (advisory ±15%).
+//! against a CI-produced rolling baseline (`BENCH_speed_baseline.json`
+//! in the actions cache, bootstrapped from the first run on a fresh
+//! cache key — advisory ±15%, no placeholder rows tolerated).
 
 use std::time::Instant;
 
@@ -228,7 +230,7 @@ pub fn run(p: &SpeedParams) -> BenchSet {
         p.batch_per_rank
     ));
     b.note("steps_per_s = wall-clock serving-loop throughput (host-dependent;");
-    b.note("CI diffs vs BENCH_speed_baseline.json at +/-15%, advisory only)");
+    b.note("CI diffs vs the cached rolling BENCH_speed_baseline at +/-15%, advisory only)");
     b.note(&format!(
         "planner_us_per_step = {} layers x mean plan_fabric_with wall-clock",
         SIM_LAYERS

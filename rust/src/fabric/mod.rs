@@ -467,6 +467,54 @@ impl Fabric {
         }
         t
     }
+
+    /// Per-flow completion times under the same fluid max-min model as
+    /// [`Fabric::drain_time`]: rates are recomputed as flows finish and
+    /// each slot records when its flow's bytes hit zero. Zero-byte flows
+    /// complete at 0.0; `drain_time(flows)` equals the maximum entry.
+    /// Used by disaggregated serving to charge each KV handoff its own
+    /// exposed transfer latency while the wave contends for the rails.
+    pub fn drain_schedule(&self, flows: &[Flow]) -> Vec<f64> {
+        let mut done = vec![0.0; flows.len()];
+        let mut left: Vec<(usize, Flow)> = flows
+            .iter()
+            .enumerate()
+            .filter(|(_, f)| f.bytes > 0.0)
+            .map(|(i, f)| (i, f.clone()))
+            .collect();
+        let mut t = 0.0;
+        let mut guard = 0usize;
+        while !left.is_empty() && guard <= flows.len() + 1 {
+            guard += 1;
+            let active: Vec<Flow> = left.iter().map(|(_, f)| f.clone()).collect();
+            let rates = self.share_rates(&active);
+            let mut dt = f64::INFINITY;
+            for ((_, f), &r) in left.iter().zip(&rates) {
+                if r > 0.0 {
+                    dt = dt.min(f.bytes / r);
+                }
+            }
+            if !dt.is_finite() {
+                break; // no flow can progress (degenerate input)
+            }
+            for (slot, &r) in left.iter_mut().zip(&rates) {
+                slot.1.bytes = (slot.1.bytes - r * dt).max(0.0);
+            }
+            t += dt;
+            for (i, f) in &left {
+                if f.bytes <= 1e-6 {
+                    done[*i] = t;
+                }
+            }
+            left.retain(|(_, f)| f.bytes > 1e-6);
+        }
+        // degenerate leftovers (no progress possible) complete at the
+        // horizon reached so far, matching drain_time's early exit
+        for (i, _) in left {
+            done[i] = t;
+        }
+        done
+    }
 }
 
 #[cfg(test)]
@@ -628,6 +676,30 @@ mod tests {
             Flow { src: 1, dst: 4, bytes: b },
         ]);
         assert!((disjoint - one).abs() < disjoint * 1e-6);
+    }
+
+    #[test]
+    fn drain_schedule_matches_drain_time_and_orders_completions() {
+        let f = multi(16, 2, 0.25);
+        let b = 1e8;
+        // zero-byte flows complete instantly; ragged sizes on a shared
+        // destination port complete in size order and the wave's last
+        // completion equals drain_time
+        let flows = vec![
+            Flow { src: 0, dst: 3, bytes: b },
+            Flow { src: 1, dst: 3, bytes: 0.25 * b },
+            Flow { src: 2, dst: 3, bytes: 0.0 },
+        ];
+        let sched = f.drain_schedule(&flows);
+        assert_eq!(sched.len(), 3);
+        assert_eq!(sched[2], 0.0);
+        assert!(sched[1] < sched[0], "smaller flow must finish first");
+        let total = f.drain_time(&flows);
+        let last = sched.iter().cloned().fold(0.0_f64, f64::max);
+        assert!((last - total).abs() <= total * 1e-9, "{last} vs {total}");
+        // singleton sanity: completion equals the scalar transfer time
+        let one = f.drain_schedule(&[Flow { src: 0, dst: 3, bytes: b }]);
+        assert!((one[0] - b / f.intra.bw).abs() < one[0] * 1e-9);
     }
 
     #[test]

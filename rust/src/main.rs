@@ -56,12 +56,16 @@ fn print_help() {
                      [--seed S]\n\
            prefill   --balancer B --tokens N --model M\n\
            bench     fig2|fig3|fig5|fig7|fig8|fig9|fig10|fig11|fleet|\n\
-                     pipeline|fabric|volatility|memory|speed|all [--steps N]\n\
+                     pipeline|fabric|volatility|memory|speed|disagg|all\n\
+                     [--steps N]\n\
                      (fabric: multi-node sweep, also --rails N;\n\
                       volatility: scenario x balancer sweep, also --load F;\n\
                       memory: governance sweep, also --requests N;\n\
                       speed: steps/sec + planner-us/step raw-speed sweep,\n\
-                      also --ranks 16,32,64,128 --load F)\n\
+                      also --ranks 16,32,64,128 --load F;\n\
+                      disagg: colocated vs prefill/decode-disaggregated\n\
+                      pools, also --replicas N --load F\n\
+                      --presets steady,burst,multi_tenant)\n\
            ablate    [--steps N]\n\
            info\n"
     );
@@ -323,9 +327,11 @@ fn cmd_fleet(args: &Args) -> i32 {
     p.requests_per_replica = args.get_usize("requests-per-replica", p.requests_per_replica);
     p.batch_per_rank = args.get_usize("batch-per-rank", p.batch_per_rank);
     p.seed = args.get_u64("seed", p.seed);
-    let b = probe::experiments::fleet::run(&p);
+    let (b, d) = probe::experiments::fleet::run_with_detail(&p);
     b.print();
     let _ = b.save();
+    d.print();
+    let _ = d.save();
     0
 }
 
@@ -412,6 +418,32 @@ fn cmd_bench(args: &Args) -> i32 {
                 p.seed = args.get_u64("seed", p.seed);
                 exp::fleet::run(&p)
             }
+            "disagg" => {
+                let mut p = exp::disagg::DisaggParams::default();
+                p.steps = args.get_usize("steps", p.steps);
+                p.load = args.get_f64("load", p.load);
+                p.seed = args.get_u64("seed", p.seed);
+                p.replicas = args.get_usize("replicas", p.replicas);
+                if let Some(list) = args.get("presets") {
+                    let v: Vec<String> =
+                        list.split(',').map(|s| s.trim().to_string()).collect();
+                    let known = probe::workload::Scenario::PRESETS;
+                    if v.is_empty() || v.iter().any(|s| !known.contains(&s.as_str())) {
+                        eprintln!("bench disagg: --presets wants a comma list from {known:?}");
+                        return false;
+                    }
+                    p.presets = v;
+                }
+                if p.steps == 0 || p.replicas < 2 || !(p.load > 0.0 && p.load.is_finite()) {
+                    eprintln!(
+                        "bench disagg needs --steps >= 1, --replicas >= 2 and finite \
+                         --load > 0 (got steps {}, replicas {}, load {})",
+                        p.steps, p.replicas, p.load
+                    );
+                    return false;
+                }
+                exp::disagg::run(&p)
+            }
             "speed" => {
                 let mut p = exp::speed::SpeedParams::default();
                 p.steps = args.get_usize("steps", p.steps);
@@ -450,7 +482,7 @@ fn cmd_bench(args: &Args) -> i32 {
     if which == "all" {
         for f in [
             "fig2", "fig3", "fig5", "fig7", "fig8", "fig9", "fig10", "fig11", "fleet", "pipeline",
-            "fabric", "volatility", "memory", "speed",
+            "fabric", "volatility", "memory", "speed", "disagg",
         ] {
             run_one(f);
         }

@@ -210,6 +210,175 @@ impl Dispatcher {
     }
 }
 
+/// Serving role a fleet replica plays (disaggregated serving, ISSUE 7).
+///
+/// Prefill and decode have opposite batch shapes — prefill wants long
+/// token-dense chunks, decode wants many small latency-critical steps —
+/// so disaggregated pools dedicate replicas per role and ship finished
+/// KV caches across the fabric, while `Colocated` replicas run the
+/// unified PR 5 mixed-step model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplicaRole {
+    /// Runs chunked prefill only; finished KV pages hand off over the
+    /// fabric to a decode replica.
+    Prefill,
+    /// Runs decode only; admits transferred KV pages as resident.
+    Decode,
+    /// Unified prefill+decode mixed steps (the non-disaggregated
+    /// baseline; every [`super::fleet::run_fleet`] replica).
+    Colocated,
+}
+
+impl ReplicaRole {
+    /// Canonical role name for reports and CLI tables.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReplicaRole::Prefill => "prefill",
+            ReplicaRole::Decode => "decode",
+            ReplicaRole::Colocated => "colocated",
+        }
+    }
+
+    /// Resolve a role from its canonical name.
+    pub fn by_name(s: &str) -> Option<ReplicaRole> {
+        match s {
+            "prefill" => Some(ReplicaRole::Prefill),
+            "decode" => Some(ReplicaRole::Decode),
+            "colocated" => Some(ReplicaRole::Colocated),
+            _ => None,
+        }
+    }
+}
+
+/// Request SLO class: deadline/priority tier driving disaggregated
+/// admission control. Classification is a pure function of the request
+/// shape, so it is reproducible from a recorded trace alone.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SloClass {
+    /// Short prompt, short completion — chat-style, tightest TTFT
+    /// deadline, never deferred by admission control.
+    Interactive,
+    /// Everything between the two extremes.
+    Standard,
+    /// Long prompt or long completion — batch/offline-style, loosest
+    /// deadline, first to be deferred when the decode pool saturates.
+    Batch,
+}
+
+impl SloClass {
+    /// Classify a request by shape (prompt/completion lengths).
+    pub fn of(req: &Request) -> SloClass {
+        if req.prompt_len <= 128 && req.max_new_tokens <= 64 {
+            SloClass::Interactive
+        } else if req.prompt_len >= 1024 || req.max_new_tokens >= 512 {
+            SloClass::Batch
+        } else {
+            SloClass::Standard
+        }
+    }
+
+    /// Admission priority (0 = highest, admitted first).
+    pub fn priority(&self) -> u8 {
+        match self {
+            SloClass::Interactive => 0,
+            SloClass::Standard => 1,
+            SloClass::Batch => 2,
+        }
+    }
+
+    /// Advisory TTFT deadline (seconds) for SLO-attainment reporting.
+    pub fn ttft_deadline(&self) -> f64 {
+        match self {
+            SloClass::Interactive => 0.5,
+            SloClass::Standard => 2.0,
+            SloClass::Batch => 10.0,
+        }
+    }
+
+    /// Canonical class name for reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SloClass::Interactive => "interactive",
+            SloClass::Standard => "standard",
+            SloClass::Batch => "batch",
+        }
+    }
+}
+
+/// Role-partitioned dispatcher: join-shortest-queue restricted to the
+/// replicas currently holding a given [`ReplicaRole`]. Outstanding-work
+/// estimates persist across role re-assignments (a replica switching
+/// role keeps its backlog), mirroring [`Dispatcher`]'s offline greedy
+/// least-work semantics within each pool.
+#[derive(Debug, Clone)]
+pub struct RolePools {
+    roles: Vec<ReplicaRole>,
+    outstanding: Vec<f64>,
+}
+
+impl RolePools {
+    /// Pools over `roles.len()` replicas with the given initial roles
+    /// (must be non-empty).
+    pub fn new(roles: Vec<ReplicaRole>) -> RolePools {
+        assert!(!roles.is_empty());
+        let n = roles.len();
+        RolePools {
+            roles,
+            outstanding: vec![0.0; n],
+        }
+    }
+
+    /// Current per-replica roles.
+    pub fn roles(&self) -> &[ReplicaRole] {
+        &self.roles
+    }
+
+    /// Re-assign roles (a re-balancing step); fleet size is fixed.
+    pub fn set_roles(&mut self, roles: Vec<ReplicaRole>) {
+        assert_eq!(roles.len(), self.roles.len());
+        self.roles = roles;
+    }
+
+    /// Replica indices currently holding `role`, ascending.
+    pub fn pool(&self, role: ReplicaRole) -> Vec<usize> {
+        (0..self.roles.len())
+            .filter(|&r| self.roles[r] == role)
+            .collect()
+    }
+
+    /// Outstanding-work estimates (tokens) per replica.
+    pub fn outstanding(&self) -> &[f64] {
+        &self.outstanding
+    }
+
+    /// Total outstanding work across the `role` pool.
+    pub fn pool_outstanding(&self, role: ReplicaRole) -> f64 {
+        (0..self.roles.len())
+            .filter(|&r| self.roles[r] == role)
+            .map(|r| self.outstanding[r])
+            .sum()
+    }
+
+    /// Dispatch `work` estimated tokens to the least-loaded replica in
+    /// the `role` pool (ties → lowest index) and account it. `None` if
+    /// no replica currently holds the role.
+    pub fn dispatch(&mut self, role: ReplicaRole, work: f64) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for r in 0..self.roles.len() {
+            if self.roles[r] != role {
+                continue;
+            }
+            if best.map_or(true, |b| self.outstanding[r] < self.outstanding[b]) {
+                best = Some(r);
+            }
+        }
+        if let Some(r) = best {
+            self.outstanding[r] += work.max(0.0);
+        }
+        best
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -339,5 +508,57 @@ mod tests {
         }
         // bounded load must have pushed traffic off the single home
         assert!(used.iter().filter(|&&u| u).count() >= 3, "{used:?}");
+    }
+
+    #[test]
+    fn role_names_roundtrip() {
+        for r in [ReplicaRole::Prefill, ReplicaRole::Decode, ReplicaRole::Colocated] {
+            assert_eq!(ReplicaRole::by_name(r.name()), Some(r));
+        }
+        assert!(ReplicaRole::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn slo_classes_partition_the_shape_space() {
+        let shaped = |prompt: usize, new: usize| {
+            let mut r = req(0, 0, 2);
+            r.prompt_len = prompt;
+            r.max_new_tokens = new;
+            SloClass::of(&r)
+        };
+        assert_eq!(shaped(64, 32), SloClass::Interactive);
+        assert_eq!(shaped(256, 128), SloClass::Standard);
+        assert_eq!(shaped(2048, 16), SloClass::Batch);
+        assert_eq!(shaped(64, 600), SloClass::Batch);
+        // priority and deadline orderings agree with the class ordering
+        assert!(SloClass::Interactive.priority() < SloClass::Standard.priority());
+        assert!(SloClass::Standard.priority() < SloClass::Batch.priority());
+        assert!(SloClass::Interactive.ttft_deadline() < SloClass::Batch.ttft_deadline());
+    }
+
+    #[test]
+    fn role_pools_dispatch_within_pool_and_survive_rebalance() {
+        use ReplicaRole::{Decode, Prefill};
+        let mut p = RolePools::new(vec![Prefill, Prefill, Decode, Decode]);
+        assert_eq!(p.pool(Prefill), vec![0, 1]);
+        assert_eq!(p.pool(Decode), vec![2, 3]);
+        // JSQ within the prefill pool only
+        assert_eq!(p.dispatch(Prefill, 100.0), Some(0));
+        assert_eq!(p.dispatch(Prefill, 10.0), Some(1));
+        assert_eq!(p.dispatch(Prefill, 10.0), Some(1));
+        // decode pool is untouched by prefill work
+        assert_eq!(p.dispatch(Decode, 5.0), Some(2));
+        assert_eq!(p.dispatch(Decode, 5.0), Some(3));
+        // rebalance: replica 1 flips to decode, keeping its backlog —
+        // with 20 outstanding it loses JSQ to the 5-loaded replicas
+        p.set_roles(vec![Prefill, Decode, Decode, Decode]);
+        assert_eq!(p.pool(Decode), vec![1, 2, 3]);
+        assert_eq!(p.dispatch(Decode, 1.0), Some(2));
+        // prefill pool shrank to the single remaining replica
+        assert_eq!(p.dispatch(Prefill, 1.0), Some(0));
+        // an empty pool dispatches nothing
+        p.set_roles(vec![Decode, Decode, Decode, Decode]);
+        assert_eq!(p.dispatch(Prefill, 1.0), None);
+        assert!(p.pool_outstanding(Decode) > 0.0);
     }
 }

@@ -20,7 +20,7 @@ use crate::util::parallel::ordered_map;
 use crate::util::stats::Summary;
 use crate::workload::Request;
 
-use super::dispatch::{DispatchKind, Dispatcher};
+use super::dispatch::{DispatchKind, Dispatcher, ReplicaRole};
 
 /// Fleet shape and limits.
 #[derive(Debug, Clone)]
@@ -56,6 +56,14 @@ impl Default for FleetConfig {
 pub struct ReplicaReport {
     /// Replica index within the fleet.
     pub replica: usize,
+    /// Serving role the replica held for this run (always
+    /// [`ReplicaRole::Colocated`] under [`run_fleet`]; disaggregated
+    /// runs emit one report per role stint).
+    pub role: ReplicaRole,
+    /// Busy-span share of the fleet makespan (this replica's final
+    /// clock over the slowest replica's) — the pool-saturation signal
+    /// surfaced in `probe fleet` output.
+    pub utilization: f64,
     /// Requests dispatched to this replica.
     pub assigned: usize,
     /// Requests that finished decoding.
@@ -167,6 +175,39 @@ impl FleetReport {
             })
             .collect()
     }
+
+    /// Per-replica attribution rows `(replica, role name, utilization,
+    /// assigned, completed, tokens)` — the pool-saturation view printed
+    /// under `probe fleet` tables.
+    pub fn per_replica_rows(&self) -> Vec<(usize, &'static str, f64, usize, usize, usize)> {
+        self.per_replica
+            .iter()
+            .map(|r| {
+                (
+                    r.replica,
+                    r.role.name(),
+                    r.utilization,
+                    r.assigned,
+                    r.completed,
+                    r.tokens,
+                )
+            })
+            .collect()
+    }
+}
+
+/// Fill in each replica's busy-span share of the fleet makespan (the
+/// slowest healthy replica's clock). Shared by colocated and
+/// disaggregated runs so utilization means the same thing in both.
+pub(crate) fn fill_utilization(reports: &mut [ReplicaReport]) {
+    let makespan = reports
+        .iter()
+        .filter(|r| r.error.is_none())
+        .map(|r| r.clock)
+        .fold(0.0, f64::max);
+    for r in reports.iter_mut() {
+        r.utilization = if makespan > 0.0 { r.clock / makespan } else { 0.0 };
+    }
 }
 
 /// Shard `requests` (already in arrival order) across replicas by
@@ -198,6 +239,8 @@ where
         let assigned = shard.len();
         let failed = move |error: String| ReplicaReport {
             replica: idx,
+            role: ReplicaRole::Colocated,
+            utilization: 0.0,
             assigned,
             completed: 0,
             tokens: 0,
@@ -220,6 +263,8 @@ where
         };
         ReplicaReport {
             replica: idx,
+            role: ReplicaRole::Colocated,
+            utilization: 0.0,
             assigned,
             completed: engine
                 .metrics
@@ -235,6 +280,8 @@ where
             error: None,
         }
     });
+    let mut per_replica = per_replica;
+    fill_utilization(&mut per_replica);
     FleetReport {
         policy: cfg.policy,
         per_replica,
@@ -367,6 +414,33 @@ mod tests {
             assert!(*completed > 0, "tenant {t} completed nothing");
             assert!(ttft.p50 >= 0.0);
         }
+    }
+
+    #[test]
+    fn per_replica_rows_expose_role_and_utilization() {
+        let cfg = FleetConfig {
+            replicas: 3,
+            policy: DispatchKind::ShortestQueue,
+            max_steps: 20_000,
+            threads: 0,
+            parallel: true,
+        };
+        let reqs = skewed_trace(24, 13);
+        let report = run_fleet(&cfg, &reqs, sim_factory(13));
+        let rows = report.per_replica_rows();
+        assert_eq!(rows.len(), 3);
+        let mut saw_full = false;
+        for (i, (replica, role, util, assigned, completed, tokens)) in rows.iter().enumerate() {
+            assert_eq!(*replica, i);
+            assert_eq!(*role, "colocated");
+            assert!((0.0..=1.0).contains(util), "utilization {util}");
+            assert_eq!(assigned, completed);
+            assert!(*tokens > 0);
+            if (*util - 1.0).abs() < 1e-12 {
+                saw_full = true;
+            }
+        }
+        assert!(saw_full, "the slowest replica must sit at utilization 1.0");
     }
 
     #[test]

@@ -10,6 +10,7 @@
 //! ([`crate::util::parallel`]), with pluggable [`dispatch`] policies
 //! and merged cross-replica metrics.
 
+pub mod disagg;
 pub mod dispatch;
 pub mod fleet;
 

@@ -5,7 +5,9 @@
 //! 2. incremental TrafficMatrix delta apply/undo == full rebuild within
 //!    1e-12 relative over randomized flow sequences;
 //! 3. scratch-reused `plan_fabric_with` == allocating `plan_fabric`
-//!    bit-for-bit on a drifting workload.
+//!    bit-for-bit on a drifting workload;
+//! 4. parallel disagg (role-partitioned pools) == sequential disagg,
+//!    bit for bit, per role stint (ISSUE 7 satellite).
 
 use anyhow::Result;
 
@@ -86,6 +88,62 @@ fn parallel_fleet_report_matches_sequential() {
         assert!(s.error.is_none() && p.error.is_none());
     }
     // merged metrics pool in the same order -> identical summaries
+    let st = seq.ttft_summary();
+    let pt = par.ttft_summary();
+    assert_eq!(st.p50.to_bits(), pt.p50.to_bits());
+    assert_eq!(st.p99.to_bits(), pt.p99.to_bits());
+    assert_eq!(
+        seq.aggregate_throughput().to_bits(),
+        par.aggregate_throughput().to_bits()
+    );
+}
+
+#[test]
+fn parallel_disagg_report_matches_sequential() {
+    use probe::server::disagg::{run_disagg, DisaggRunConfig, DisaggReport};
+
+    let run_disagg_with = |parallel: bool, seed: u64| -> DisaggReport {
+        let mut rc = DisaggRunConfig::from_config(4, &small_cfg());
+        rc.parallel = parallel;
+        rc.max_steps = 50_000;
+        rc.disagg.rebalance_window = 8;
+        let reqs = trace(48, seed);
+        run_disagg(&rc, &reqs, sim_factory(seed))
+    };
+    let seq = run_disagg_with(false, 7);
+    let par = run_disagg_with(true, 7);
+    // role partitioning must be identical before anything else
+    assert_eq!(seq.role_timeline, par.role_timeline);
+    assert_eq!(seq.rebalances, par.rebalances);
+    assert_eq!(seq.deferred, par.deferred);
+    // per role stint: every report field bit-identical
+    assert_eq!(seq.per_replica.len(), par.per_replica.len());
+    for (s, p) in seq.per_replica.iter().zip(par.per_replica.iter()) {
+        assert_eq!(s.replica, p.replica);
+        assert_eq!(s.role, p.role);
+        assert_eq!(s.assigned, p.assigned);
+        assert_eq!(s.completed, p.completed);
+        assert_eq!(s.tokens, p.tokens);
+        assert_eq!(s.steps, p.steps);
+        assert_eq!(
+            s.clock.to_bits(),
+            p.clock.to_bits(),
+            "replica {} ({}) clock diverged",
+            s.replica,
+            s.role.name()
+        );
+        assert_eq!(s.utilization.to_bits(), p.utilization.to_bits());
+        assert!(s.error.is_none() && p.error.is_none());
+    }
+    // transfer accounting and end-to-end latency bit-identical
+    assert_eq!(seq.kv_bytes.to_bits(), par.kv_bytes.to_bits());
+    assert_eq!(seq.kv_transfers, par.kv_transfers);
+    assert_eq!(seq.kv_pages_freed, par.kv_pages_freed);
+    assert_eq!(seq.kv_pages_admitted, par.kv_pages_admitted);
+    assert_eq!(
+        seq.exposed_transfer.p99.to_bits(),
+        par.exposed_transfer.p99.to_bits()
+    );
     let st = seq.ttft_summary();
     let pt = par.ttft_summary();
     assert_eq!(st.p50.to_bits(), pt.p50.to_bits());

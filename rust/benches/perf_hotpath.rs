@@ -29,6 +29,12 @@ fn main() {
         "perf_hotpath",
         &["op", "mean", "p50", "p99", "per_step_budget"],
     );
+    {
+        let mut meta_cfg = probe::config::Config::default();
+        meta_cfg.model = model.clone();
+        meta_cfg.cluster.ep = ep;
+        b.set_meta(probe::experiments::bench_meta(&meta_cfg, "perf_hotpath"));
+    }
 
     let s = time_it(3, 30, || {
         std::hint::black_box(planner::plan(&counts, &base, &model, &hw, &windows, &cfg));

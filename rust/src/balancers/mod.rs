@@ -102,6 +102,13 @@ pub trait Balancer {
     /// static sharding during the bootstrap prefix); `actual` only
     /// drives the dispatch assignment over that placement.
     fn decide(&mut self, layer: usize, actual: &LayerRouting) -> LayerDecision;
+
+    /// Flush control-plane telemetry events buffered since the last
+    /// drain into `rec`. Policies that record nothing (the baselines)
+    /// keep this default no-op; [`Probe`] emits `Predict` and
+    /// `PlanDelta` events here so the hot decide path never touches the
+    /// ring buffer.
+    fn drain_events(&mut self, _rec: &mut crate::telemetry::Recorder) {}
 }
 
 /// Drive a balancer over a whole step's routing in pipeline order:

@@ -26,10 +26,11 @@ use crate::model::MoeModel;
 use crate::perfmodel::Assignment;
 use crate::placement::Placement;
 use crate::planner;
-use crate::predictor::{LookaheadPredictor, StatisticalPredictor, TransitionPredictor};
+use crate::predictor::{count_fidelity, LookaheadPredictor, StatisticalPredictor, TransitionPredictor};
 use crate::routing::LayerRouting;
 use crate::scheduler;
 use crate::simulator::LayerDecision;
+use crate::telemetry::{Event, Recorder};
 use crate::topology::HardwareProfile;
 
 /// A decision emitted by the control plane, waiting for its layer.
@@ -50,8 +51,9 @@ struct PlannedLayer {
     /// for the depth-1 oracle equivalence property test).
     #[allow(dead_code)]
     windows: Vec<f64>,
-    /// Forecast the plan was derived from (test introspection).
-    #[allow(dead_code)]
+    /// Forecast the plan was derived from — scored against the realized
+    /// routing for the flight recorder's `Predict` events (and test
+    /// introspection).
     pred_counts: Vec<Vec<f64>>,
 }
 
@@ -107,6 +109,14 @@ pub struct Probe {
     caps_buf: Vec<usize>,
     /// `[rank][expert]` loads buffer for the window-EMA update.
     loads_buf: Vec<Vec<f64>>,
+    /// Flight-recorder buffering on (`[telemetry] enabled`): `Predict`
+    /// and `PlanDelta` events accumulate in `events` until the driver
+    /// drains them. Off = the buffer is never touched (zero alloc).
+    telemetry: bool,
+    /// Engine step index of the current `begin_step` (event tagging).
+    cur_step: u32,
+    /// Buffered control-plane events awaiting `drain_events`.
+    events: Vec<Event>,
 }
 
 impl Probe {
@@ -144,6 +154,9 @@ impl Probe {
             counts_flat: Vec::new(),
             caps_buf: Vec::new(),
             loads_buf: Vec::new(),
+            telemetry: config.telemetry.enabled,
+            cur_step: 0,
+            events: Vec::new(),
         }
     }
 
@@ -241,7 +254,8 @@ impl super::Balancer for Probe {
         self.depth()
     }
 
-    fn begin_step(&mut self, _step_idx: usize, n_layers: usize) {
+    fn begin_step(&mut self, step_idx: usize, n_layers: usize) {
+        self.cur_step = step_idx as u32;
         if self.n_layers != n_layers {
             // layer-count change: flush the pipeline and resident state,
             // and re-anchor the absolute-layer counter so target layers
@@ -302,6 +316,7 @@ impl super::Balancer for Probe {
         // hide inside the NEXT step's (possibly decode-scale) windows
         let windows = self.windows_for(layer + depth >= self.n_layers);
         self.fill_slot_caps();
+        let prev_replicas = self.resident[target_layer].total_replicas();
         let out = planner::plan_fabric_with(
             &mut self.scratch,
             &pred_counts,
@@ -315,6 +330,31 @@ impl super::Balancer for Probe {
         );
         self.last_iterations = out.iterations;
         self.resident[target_layer] = out.placement.clone();
+        if self.telemetry {
+            let added: usize = out.fetches.iter().map(|f| f.len()).sum();
+            let max_slots = out.fetches.iter().map(|f| f.len()).max().unwrap_or(0);
+            let evicted = prev_replicas.saturating_sub(out.retained_replicas);
+            let fetch_bytes = if out.fetch_flows.is_empty() {
+                added as f64 * self.model.expert_param_bytes()
+            } else {
+                out.fetch_flows.iter().map(|f| f.bytes).sum()
+            };
+            let min_window = windows.iter().cloned().fold(f64::INFINITY, f64::min);
+            let window_slack = if min_window.is_finite() {
+                min_window
+                    - crate::perfmodel::transfer_time(max_slots, &self.model, &self.hw)
+            } else {
+                0.0
+            };
+            self.events.push(Event::PlanDelta {
+                step: self.cur_step,
+                layer: target_layer as u16,
+                added: added.min(u16::MAX as usize) as u16,
+                evicted: evicted.min(u16::MAX as usize) as u16,
+                fetch_bytes,
+                window_slack,
+            });
+        }
         self.planned.push_back(PlannedLayer {
             abs_layer: target_abs,
             placement: out.placement,
@@ -329,7 +369,7 @@ impl super::Balancer for Probe {
 
     /// Data plane: pop the placement planned L layers ago and re-derive
     /// the dispatch assignment from the ground-truth routing over it.
-    fn decide(&mut self, _layer: usize, actual: &LayerRouting) -> LayerDecision {
+    fn decide(&mut self, layer: usize, actual: &LayerRouting) -> LayerDecision {
         let abs = self.abs_next;
         self.abs_next += 1;
         while self.planned.front().map_or(false, |p| p.abs_layer < abs) {
@@ -340,6 +380,23 @@ impl super::Balancer for Probe {
         } else {
             None
         };
+
+        if self.telemetry {
+            if let Some(p) = plan.as_ref() {
+                // prediction truth arrives NOW: score the forecast this
+                // plan was derived from against the realized routing
+                let pred: Vec<f64> =
+                    p.pred_counts.iter().map(|c| c.iter().sum()).collect();
+                let act: Vec<f64> =
+                    actual.expert_counts().iter().map(|&c| c as f64).collect();
+                self.events.push(Event::Predict {
+                    step: self.cur_step,
+                    layer: layer as u16,
+                    confidence: self.predictor.confidence(),
+                    fidelity: count_fidelity(&act, &pred),
+                });
+            }
+        }
 
         actual.expert_counts_by_source_into(self.ep, &mut self.counts_flat);
         let planned_ahead = plan.is_some();
@@ -435,6 +492,12 @@ impl super::Balancer for Probe {
             plan_time,
             exposed_transfer: 0.0,
             pre_dispatch_fraction,
+        }
+    }
+
+    fn drain_events(&mut self, rec: &mut Recorder) {
+        for e in self.events.drain(..) {
+            rec.record(e);
         }
     }
 }

@@ -265,6 +265,34 @@ impl PerfConfig {
     }
 }
 
+/// Flight-recorder telemetry knobs (`[telemetry]` TOML table, ISSUE 8)
+/// for [`crate::telemetry::Recorder`]. Disabled by default: recording
+/// must cost zero allocations and leave every result bit-exact, so
+/// nothing is captured unless asked for.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TelemetryConfig {
+    /// Capture control-plane events (and the step timeline log used by
+    /// `--trace-out`). Off by default.
+    pub enabled: bool,
+    /// Ring-buffer capacity in events; when full the oldest event is
+    /// overwritten (the ring keeps the newest `ring_capacity`).
+    pub ring_capacity: usize,
+    /// Keep 1 in N high-frequency statistical events (predict /
+    /// plan-delta / batch-composed); lifecycle events are never
+    /// decimated. 1 = keep everything.
+    pub sample_every: usize,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> TelemetryConfig {
+        TelemetryConfig {
+            enabled: false,
+            ring_capacity: 65_536,
+            sample_every: 1,
+        }
+    }
+}
+
 /// Disaggregated prefill/decode serving knobs (`[disagg]` TOML table,
 /// ISSUE 7): role assignment, dynamic re-balancing, and decode-pool
 /// admission control for [`crate::server::disagg::run_disagg`] and
@@ -336,6 +364,8 @@ pub struct Config {
     pub perf: PerfConfig,
     /// Disaggregated prefill/decode serving knobs (`[disagg]` table).
     pub disagg: DisaggConfig,
+    /// Flight-recorder telemetry knobs (`[telemetry]` table).
+    pub telemetry: TelemetryConfig,
     /// Decode tokens per rank per step.
     pub batch_per_rank: usize,
     /// Chunked-prefill tokens per rank.
@@ -362,11 +392,27 @@ impl Default for Config {
             memory: MemoryConfig::default(),
             perf: PerfConfig::default(),
             disagg: DisaggConfig::default(),
+            telemetry: TelemetryConfig::default(),
             batch_per_rank: 768,
             prefill_chunk_per_rank: 8192,
             mean_ctx: 64,
             seed: 0,
         }
+    }
+}
+
+impl Config {
+    /// Deterministic FNV-1a hash of the full configuration (via its
+    /// canonical `Debug` rendering), used as the run-provenance
+    /// `config_hash` in every `bench_results/BENCH_*.json` meta header
+    /// so trajectories are comparable across PRs.
+    pub fn content_hash(&self) -> String {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in format!("{self:?}").bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+        format!("{h:016x}")
     }
 }
 
@@ -609,6 +655,23 @@ impl Config {
                         return Err("disagg.background_utilization must be in [0, 1)".into());
                     }
                     cfg.disagg.background_utilization = u;
+                }
+                "telemetry.enabled" => {
+                    cfg.telemetry.enabled = value.as_bool().ok_or("telemetry.enabled: bool")?
+                }
+                "telemetry.ring_capacity" => {
+                    let v = value.as_int().ok_or("telemetry.ring_capacity: int")? as usize;
+                    if v == 0 {
+                        return Err("telemetry.ring_capacity must be >= 1".into());
+                    }
+                    cfg.telemetry.ring_capacity = v;
+                }
+                "telemetry.sample_every" => {
+                    let v = value.as_int().ok_or("telemetry.sample_every: int")? as usize;
+                    if v == 0 {
+                        return Err("telemetry.sample_every must be >= 1".into());
+                    }
+                    cfg.telemetry.sample_every = v;
                 }
                 "seed" => cfg.seed = value.as_int().ok_or("int")? as u64,
                 other => return Err(format!("unknown config key: {other}")),
@@ -901,6 +964,39 @@ background_utilization = 0.4
     fn unknown_key_rejected() {
         assert!(Config::from_toml_str("[model]\nnam = \"x\"\n").is_err());
         assert!(Config::from_toml_str("[model]\nname = \"not-a-model\"\n").is_err());
+    }
+
+    #[test]
+    fn parse_telemetry_table() {
+        let text = r#"
+[telemetry]
+enabled = true
+ring_capacity = 1024
+sample_every = 8
+"#;
+        let c = Config::from_toml_str(text).unwrap();
+        assert!(c.telemetry.enabled);
+        assert_eq!(c.telemetry.ring_capacity, 1024);
+        assert_eq!(c.telemetry.sample_every, 8);
+        // defaults: disabled, with a sane ring
+        let d = Config::from_toml_str("").unwrap();
+        assert_eq!(d.telemetry, TelemetryConfig::default());
+        assert!(!d.telemetry.enabled);
+        // validation
+        assert!(Config::from_toml_str("[telemetry]\nring_capacity = 0\n").is_err());
+        assert!(Config::from_toml_str("[telemetry]\nsample_every = 0\n").is_err());
+        assert!(Config::from_toml_str("[telemetry]\nenabled = 3\n").is_err());
+    }
+
+    #[test]
+    fn content_hash_is_stable_and_sensitive() {
+        let a = Config::default();
+        let b = Config::default();
+        assert_eq!(a.content_hash(), b.content_hash());
+        assert_eq!(a.content_hash().len(), 16);
+        let mut c = Config::default();
+        c.seed = 12345;
+        assert_ne!(a.content_hash(), c.content_hash());
     }
 
     #[test]

@@ -52,6 +52,7 @@ use anyhow::{anyhow, Result};
 
 use crate::metrics::{IrTracker, RequestMetrics, ServingMetrics};
 use crate::placement::memory::MemoryManager;
+use crate::telemetry::{Event, Recorder};
 use crate::workload::Request;
 
 /// Executor-agnostic result of one executed mixed step.
@@ -174,8 +175,12 @@ pub trait StepExecutor {
     fn begin(&mut self, req: &Request) -> Result<usize>;
 
     /// Execute one composed mixed batch (prefill chunks + decode
-    /// tokens) and report its latency/IR.
-    fn execute(&mut self, batch: &BatchComposition) -> Result<StepReport>;
+    /// tokens) and report its latency/IR. `rec` is the engine's flight
+    /// recorder — backends with control-plane state (predictor,
+    /// planner, prefetch queue) emit their decision events into it; a
+    /// disabled recorder (the default everywhere telemetry is off)
+    /// makes every `record` a no-op.
+    fn execute(&mut self, batch: &BatchComposition, rec: &mut Recorder) -> Result<StepReport>;
 
     /// Drop backend state of a retired request.
     fn retire(&mut self, _req: &Request) {}
@@ -230,6 +235,12 @@ pub struct ServingEngine<E: StepExecutor> {
     /// Total KV rows admitted through [`ServingEngine::submit_resident`]
     /// (the decode-side half of the handoff conservation property).
     pub resident_admitted_kv: usize,
+    /// Flight recorder for this engine's control-plane events
+    /// ([`crate::telemetry`]). Disabled (zero-capacity, every record a
+    /// no-op) unless the constructor enables it from
+    /// `[telemetry]` config; owned per engine so parallel fleet
+    /// replicas record without sharing.
+    pub recorder: Recorder,
 }
 
 impl<E: StepExecutor> ServingEngine<E> {
@@ -245,6 +256,7 @@ impl<E: StepExecutor> ServingEngine<E> {
             prefill_only: HashSet::new(),
             handoffs: Vec::new(),
             resident_admitted_kv: 0,
+            recorder: Recorder::disabled(),
         }
     }
 
@@ -446,13 +458,13 @@ impl<E: StepExecutor> ServingEngine<E> {
                 // already produced by the remote prefill, so stamp it at
                 // admission (>= transfer completion) and start decoding
                 self.resident_admitted_kv += resident_kv;
-                self.metrics.requests[q.midx].first_token = Some(self.clock);
+                let clock = self.clock;
+                self.metrics.stamp_first_token(q.midx, clock);
                 if budget <= 1 {
                     // nothing left to decode — retire inline without
                     // ever occupying pages or a slot
-                    let m = &mut self.metrics.requests[q.midx];
-                    m.finished = Some(self.clock);
-                    m.tokens_out = 1;
+                    self.metrics.requests[q.midx].tokens_out = 1;
+                    self.metrics.stamp_finished(q.midx, clock);
                     self.executor.retire(&q.req);
                     continue;
                 }
@@ -578,6 +590,13 @@ impl<E: StepExecutor> ServingEngine<E> {
                         decode.retain(|d| d.req_id != e.req.id);
                         prefill.retain(|c| c.req_id != e.req.id);
                         self.metrics.preemptions += 1;
+                        if self.recorder.is_on() {
+                            self.recorder.record(Event::Preempt {
+                                step: self.metrics.step_tokens.len() as u32,
+                                request: e.req.id,
+                                kv_pages: e.kv_tokens as u64,
+                            });
+                        }
                         self.requeue(Queued {
                             req: e.req,
                             midx: e.midx,
@@ -659,7 +678,7 @@ impl<E: StepExecutor> ServingEngine<E> {
                 // completion of the final chunk in the shared stream
                 self.active[i].decoded = 1;
                 let midx = self.active[i].midx;
-                self.metrics.requests[midx].first_token = Some(clock);
+                self.metrics.stamp_first_token(midx, clock);
             }
         }
         for d in &batch.decode {
@@ -683,9 +702,8 @@ impl<E: StepExecutor> ServingEngine<E> {
                 if let Some(mm) = self.executor.memory() {
                     mm.release(e.kv_rank, e.kv_tokens);
                 }
-                let m = &mut self.metrics.requests[e.midx];
-                m.finished = Some(clock);
-                m.tokens_out = e.decoded;
+                self.metrics.requests[e.midx].tokens_out = e.decoded;
+                self.metrics.stamp_finished(e.midx, clock);
                 if self.prefill_only.remove(&e.req.id) {
                     // the pages just released are exactly what the
                     // decode replica must re-admit after the transfer
@@ -736,7 +754,27 @@ impl<E: StepExecutor> ServingEngine<E> {
                 self.queue.len()
             ));
         }
-        let rep = self.executor.execute(&batch)?;
+        if self.recorder.is_on() {
+            let step = self.metrics.step_tokens.len() as u32;
+            if let Some(snap) = self.executor.memory().map(|mm| mm.telemetry_snapshot()) {
+                let (kv_pages, watermark, cap_min) = snap;
+                self.recorder.record(Event::MemGovernor {
+                    step,
+                    kv_pages,
+                    watermark: watermark as f64,
+                    replica_cap_min: cap_min.min(u16::MAX as usize) as u16,
+                });
+            }
+            self.recorder.record(Event::BatchComposed {
+                step,
+                decode: batch.decode.len().min(u16::MAX as usize) as u16,
+                prefill: batch.prefill.len().min(u16::MAX as usize) as u16,
+                tokens: batch.total_tokens() as u32,
+            });
+            self.recorder.registry.queue_depth = self.queue.len() as f64;
+            self.recorder.registry.active_requests = self.active.len() as f64;
+        }
+        let rep = self.executor.execute(&batch, &mut self.recorder)?;
         self.clock += rep.latency;
         for &ir in &rep.ir_samples {
             self.ir.push_ir(ir);
@@ -834,7 +872,7 @@ mod tests {
             self.begun.push(req.id);
             Ok(req.max_new_tokens.max(1))
         }
-        fn execute(&mut self, batch: &BatchComposition) -> Result<StepReport> {
+        fn execute(&mut self, batch: &BatchComposition, _rec: &mut Recorder) -> Result<StepReport> {
             for c in &batch.prefill {
                 self.chunks_seen.push((c.req_id, c.offset, c.tokens, c.is_last));
             }

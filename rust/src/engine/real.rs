@@ -400,7 +400,11 @@ impl StepExecutor for RealExecutor {
         Ok(req.max_new_tokens.max(1).min(cap))
     }
 
-    fn execute(&mut self, batch: &BatchComposition) -> Result<StepReport> {
+    fn execute(
+        &mut self,
+        batch: &BatchComposition,
+        _rec: &mut crate::telemetry::Recorder,
+    ) -> Result<StepReport> {
         let mut latency = 0.0;
         let mut irs: Vec<f64> = Vec::new();
         let mut tokens = 0usize;

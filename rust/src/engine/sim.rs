@@ -17,6 +17,8 @@ use crate::config::Config;
 use crate::placement::memory::MemoryManager;
 use crate::routing::RoutingModel;
 use crate::simulator::{ClusterSim, StepOutcome};
+use crate::telemetry::export::TimelineLog;
+use crate::telemetry::Recorder;
 use crate::workload::{Dataset, Request};
 
 use super::{BatchComposition, ServingEngine, StepExecutor, StepReport};
@@ -41,6 +43,12 @@ pub struct SimExecutor {
     /// Full simulator outcome of the most recent step (the generic
     /// [`StepReport`] keeps only the latency/IR aggregates).
     pub last_outcome: Option<StepOutcome>,
+    /// Capture per-step layer timelines into `timeline_log`
+    /// (`[telemetry] enabled`); off = never touched, zero overhead.
+    capture: bool,
+    /// Accumulated `(step, LayerTimeline)` spans for the Perfetto
+    /// exporter ([`crate::telemetry::export::perfetto_trace`]).
+    pub timeline_log: TimelineLog,
 }
 
 impl SimExecutor {
@@ -100,6 +108,7 @@ impl SimExecutor {
             cfg.memory.enforce,
         );
         let ep = cfg.cluster.ep;
+        let capture = cfg.telemetry.enabled;
         SimExecutor {
             cfg,
             sim,
@@ -109,6 +118,8 @@ impl SimExecutor {
             balancer,
             step_idx: 0,
             last_outcome: None,
+            capture,
+            timeline_log: TimelineLog::new(),
         }
     }
 
@@ -152,7 +163,7 @@ impl StepExecutor for SimExecutor {
         Ok(req.max_new_tokens.max(1))
     }
 
-    fn execute(&mut self, batch: &BatchComposition) -> Result<StepReport> {
+    fn execute(&mut self, batch: &BatchComposition, rec: &mut Recorder) -> Result<StepReport> {
         let domains = batch.domains();
         if domains.is_empty() {
             return Err(anyhow!("executed an empty batch"));
@@ -164,9 +175,18 @@ impl StepExecutor for SimExecutor {
         self.balancer.set_replica_caps(&caps);
         self.last_replica_caps = caps;
         self.balancer.set_next_step_tokens(batch.next_tokens_hint.max(1));
+        let step = self.step_idx as u32;
         let decisions = decide_step(self.balancer.as_mut(), self.step_idx, &routing);
+        self.balancer.drain_events(rec);
         let profile = batch.context_profile();
-        let outcome = self.sim.run_step_ctx(&routing, &decisions, Some(&profile));
+        let outcome =
+            self.sim
+                .run_step_telemetry(&routing, &decisions, Some(&profile), rec, step);
+        if self.capture {
+            for tl in &outcome.timelines {
+                self.timeline_log.push(step, tl.clone());
+            }
+        }
         self.step_idx += 1;
         if !batch.decode.is_empty() {
             // semantic drift advances with decode progress, as before
@@ -186,9 +206,15 @@ impl StepExecutor for SimExecutor {
 
 /// The simulator-backed serving engine (the old `Coordinator` API).
 impl ServingEngine<SimExecutor> {
-    /// Simulator-backed engine (see [`SimExecutor::new`]).
+    /// Simulator-backed engine (see [`SimExecutor::new`]). When the
+    /// config enables `[telemetry]`, the engine's flight recorder is
+    /// armed and the executor captures per-step timelines for the
+    /// Perfetto exporter; otherwise both stay inert (zero allocation).
     pub fn new(cfg: Config, balancer: Box<dyn Balancer>, seed: u64) -> ServingEngine<SimExecutor> {
-        ServingEngine::from_executor(SimExecutor::new(cfg, balancer, seed))
+        let recorder = Recorder::new(&cfg.telemetry);
+        let mut engine = ServingEngine::from_executor(SimExecutor::new(cfg, balancer, seed));
+        engine.recorder = recorder;
+        engine
     }
 
     /// Name of the balancer driving the backend.

@@ -79,6 +79,7 @@ pub fn run(steps: usize) -> BenchSet {
             "fetch_slots",
         ],
     );
+    b.set_meta(super::bench_meta(&sim_config("gpt-oss-120b"), "ablations"));
     let seed = 51;
     let mut variants: Vec<VariantRow> = Vec::new();
 

@@ -180,6 +180,10 @@ pub fn run(p: &DisaggParams) -> BenchSet {
             "rebalances",
         ],
     );
+    b.set_meta(super::bench_meta(
+        &disagg_cfg(p),
+        &p.presets.join(","),
+    ));
     for (idx, preset) in p.presets.iter().enumerate() {
         let (reqs, colocated, disagg) = run_pair(p, preset, idx);
         let cm = colocated.merged_metrics();

@@ -128,6 +128,10 @@ pub fn flat_equivalence_err(ep: usize, cases: usize, seed: u64) -> f64 {
 /// Run the fabric sweep → `bench_results/BENCH_fabric.json`.
 pub fn run(p: &FabricParams) -> BenchSet {
     let mut b = BenchSet::new("BENCH_fabric", &["metric", "value", "unit"]);
+    b.set_meta(super::bench_meta(
+        &crate::config::Config::default(),
+        "fabric",
+    ));
 
     b.row(&[
         "flat_equiv_max_abs_err".into(),

@@ -47,6 +47,10 @@ pub fn run(p: &Fig10Params) -> BenchSet {
             "source", "layer", "variant", "top_k_acc", "top_half_k", "2x_recall",
         ],
     );
+    b.set_meta(super::bench_meta(
+        &crate::config::Config::default(),
+        "fig10_fidelity",
+    ));
 
     // (1) real distilled predictor (build-time JSON)
     match std::fs::read_to_string(format!("{}/predictor_metrics.json", p.artifacts_dir)) {

@@ -117,6 +117,10 @@ pub fn run(p: &Fig11Params) -> BenchSet {
         "fig11_timeline_breakdown",
         &["system", "phase", "track", "mean_us"],
     );
+    b.set_meta(super::bench_meta(
+        &sim_config("gpt-oss-120b"),
+        "fig11_timeline",
+    ));
     for (kind, name) in [
         (BalancerKind::StaticEp, "baseline"),
         (BalancerKind::Probe, "probe"),

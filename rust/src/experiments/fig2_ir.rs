@@ -93,6 +93,11 @@ pub fn run(p: &Fig2Params) -> BenchSet {
             "spikes>2.6", "band",
         ],
     );
+    {
+        let mut meta_cfg = crate::config::Config::default();
+        meta_cfg.cluster.ep = p.ep;
+        b.set_meta(super::bench_meta(&meta_cfg, "fig2_ir"));
+    }
     for (name, experts, k) in [("gpt-oss-120b", 128, 4), ("qwen3-235b", 128, 8)] {
         for (phase, tokens, prefill) in [
             ("prefill", p.prefill_tokens, true),

@@ -55,6 +55,12 @@ pub fn run(p: &Fig3Params) -> BenchSet {
             "EP+extra_max_ms", "EP_skew", "EP+extra_skew",
         ],
     );
+    {
+        let mut meta_cfg = crate::config::Config::default();
+        meta_cfg.model = model.clone();
+        meta_cfg.cluster.ep = p.ep;
+        b.set_meta(super::bench_meta(&meta_cfg, "fig3_compute"));
+    }
     let mut rm = RoutingModel::calibrated(1, model.n_experts, model.top_k, 4, p.seed);
     for &tokens in &p.token_counts {
         let routing = rm.route_step(&vec![0u16; tokens]).layers.remove(0);

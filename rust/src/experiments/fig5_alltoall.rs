@@ -62,6 +62,9 @@ fn measure(routing: &LayerRouting, ep: usize, model: &MoeModel, hw: &HardwarePro
 pub fn run(p: &Fig5Params) -> BenchSet {
     let model = MoeModel::gpt_oss_120b();
     let hw = HardwareProfile::hopper_141();
+    let mut meta_cfg = crate::config::Config::default();
+    meta_cfg.model = model.clone();
+    meta_cfg.cluster.ep = p.ep;
     let mut b = BenchSet::new(
         "fig5_alltoall_skew",
         &[
@@ -73,6 +76,7 @@ pub fn run(p: &Fig5Params) -> BenchSet {
             "real_maxvol_MB",
         ],
     );
+    b.set_meta(super::bench_meta(&meta_cfg, "fig5_alltoall"));
     let mut rm = RoutingModel::calibrated(1, model.n_experts, model.top_k, 4, p.seed);
     for &tokens in &p.token_counts {
         let balanced = balanced_routing(tokens, &model, p.seed ^ tokens as u64);

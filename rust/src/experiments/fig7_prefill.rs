@@ -61,6 +61,10 @@ pub fn run(p: &Fig7Params) -> BenchSet {
             "model", "total_tokens", "sglang_ms", "probe_ms", "speedup",
         ],
     );
+    b.set_meta(super::bench_meta(
+        &sim_config("gpt-oss-120b"),
+        "fig7_prefill",
+    ));
     for (model_name, chunk) in [("gpt-oss-120b", 8192usize), ("qwen3-235b", 16384)] {
         for &tokens in &p.total_tokens {
             let t_static = prefill_latency(model_name, BalancerKind::StaticEp, tokens, chunk, p.seed);

@@ -85,6 +85,7 @@ pub fn run(p: &Fig8Params) -> BenchSet {
             "vs_eplb", "vs_static",
         ],
     );
+    b.set_meta(super::bench_meta(&sim_config("gpt-oss-120b"), "fig8_pareto"));
     for &dataset in &p.datasets {
         for &bpr in &p.batches_per_rank {
             let (thr_s, tpot_s) =

@@ -94,6 +94,7 @@ pub fn run(p: &Fig9Params) -> BenchSet {
         "fig9_semantic_shift",
         &["window_end_step", "sglang", "eplb", "probe"],
     );
+    b.set_meta(super::bench_meta(&sim_config("gpt-oss-120b"), "fig9_shift"));
     let t_static = trace(BalancerKind::StaticEp, p);
     let t_eplb = trace(BalancerKind::Eplb, p);
     let t_probe = trace(BalancerKind::Probe, p);

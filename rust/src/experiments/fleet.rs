@@ -163,6 +163,7 @@ pub fn run_with_detail(p: &FleetParams) -> (BenchSet, BenchSet) {
             "completed",
         ],
     );
+    b.set_meta(super::bench_meta(&fleet_cfg(p), "fleet"));
     let mut d = BenchSet::new(
         "fleet_replicas",
         &[
@@ -177,6 +178,7 @@ pub fn run_with_detail(p: &FleetParams) -> (BenchSet, BenchSet) {
             "tokens",
         ],
     );
+    d.set_meta(super::bench_meta(&fleet_cfg(p), "fleet"));
     for w in &p.workloads {
         for &n in &p.replicas {
             for &policy in &p.policies {

@@ -228,6 +228,9 @@ pub fn run(p: &MemoryParams) -> BenchSet {
             "headroom_util",
         ],
     );
+    if let Some(s0) = p.scenarios.first() {
+        b.set_meta(super::bench_meta(&scenario_cfg(s0, p), &s0.name));
+    }
     for s in &p.scenarios {
         let reqs = scenario_stream(s, p);
         for &kind in &p.balancers {

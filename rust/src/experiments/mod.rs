@@ -33,6 +33,24 @@ pub const SIM_LAYERS: usize = 6;
 
 use crate::balancers::{Balancer, Eplb, Probe, StaticEp};
 use crate::config::{BalancerKind, Config, EplbConfig, ProbeConfig};
+use crate::util::bench::BenchMeta;
+
+/// Bench-result JSON schema version (bump on layout changes).
+pub const BENCH_SCHEMA_VERSION: u32 = 1;
+
+/// Provenance header for a bench table produced under `cfg`: schema
+/// version, config content hash, preset label, EP ranks, and the wall
+/// date from the `PROBE_BENCH_DATE` env var (empty when unset, so
+/// hermetic CI replays stay bit-identical).
+pub fn bench_meta(cfg: &Config, preset: &str) -> BenchMeta {
+    BenchMeta {
+        schema_version: BENCH_SCHEMA_VERSION,
+        config_hash: cfg.content_hash(),
+        preset: preset.to_string(),
+        ranks: cfg.cluster.ep,
+        date: std::env::var("PROBE_BENCH_DATE").unwrap_or_default(),
+    }
+}
 
 /// Instantiate a balancer by kind with the experiment's config.
 pub fn make_balancer(kind: BalancerKind, cfg: &Config, seed: u64) -> Box<dyn Balancer> {

@@ -42,6 +42,7 @@ impl Default for PipelineParams {
 /// Run the control-pipeline bench → `bench_results/BENCH_pipeline.json`.
 pub fn run(p: &PipelineParams) -> BenchSet {
     let mut b = BenchSet::new("BENCH_pipeline", &["metric", "value", "unit"]);
+    b.set_meta(super::bench_meta(&sim_config("gpt-oss-120b"), "pipeline"));
 
     // --- planner micro-benchmark ---
     let model = crate::model::MoeModel::gpt_oss_120b();

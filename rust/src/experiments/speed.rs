@@ -201,6 +201,9 @@ pub fn run(p: &SpeedParams) -> BenchSet {
             "wall_ms",
         ],
     );
+    if let Some(&r0) = p.ranks.first() {
+        b.set_meta(super::bench_meta(&speed_cfg(p, r0), "speed"));
+    }
     for &ranks in &p.ranks {
         let cfg = speed_cfg(p, ranks);
         let plan_s = planner_secs_per_plan(&cfg, p.plans, p.seed ^ ranks as u64);

@@ -226,6 +226,7 @@ pub fn run(p: &VolatilityParams) -> BenchSet {
             "hotspot_migration",
         ],
     );
+    b.set_meta(super::bench_meta(&volatility_cfg(p), &p.presets.join(",")));
     let t_step = calibrate_step_latency(p);
     for (idx, preset) in p.presets.iter().enumerate() {
         let scenario = build_scenario(preset, p, t_step);

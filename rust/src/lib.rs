@@ -61,6 +61,7 @@ pub mod runtime;
 pub mod scheduler;
 pub mod server;
 pub mod simulator;
+pub mod telemetry;
 pub mod topology;
 pub mod util;
 pub mod workload;

@@ -51,6 +51,8 @@ fn print_help() {
                      [--lookahead L] [--predictor statistical|transition]\n\
                      [--scenario steady|burst|storm|drift|multi_tenant]\n\
                      [--record-trace F.jsonl] [--replay-trace F.jsonl]\n\
+                     [--trace-out T.json] [--metrics-out M.prom]\n\
+                     [--events-out E.jsonl]\n\
            fleet     --replicas N --policy rr|jsq|affinity|tenant|all\n\
                      --dataset D --requests-per-replica N [--shift-to D2]\n\
                      [--seed S]\n\
@@ -198,7 +200,15 @@ fn cmd_serve(args: &Args) -> i32 {
 }
 
 fn cmd_simulate(args: &Args) -> i32 {
-    let cfg = load_config(args);
+    let mut cfg = load_config(args);
+    // exporter outputs imply telemetry: flip the recorder on before the
+    // balancer/engine are built so every event source is live
+    let trace_out = args.get("trace-out").map(str::to_string);
+    let metrics_out = args.get("metrics-out").map(str::to_string);
+    let events_out = args.get("events-out").map(str::to_string);
+    if trace_out.is_some() || metrics_out.is_some() || events_out.is_some() {
+        cfg.telemetry.enabled = true;
+    }
     // scenario/trace streams carry their own horizon: unless --steps is
     // given explicitly, serve the WHOLE scripted timeline instead of
     // truncating it at the closed-loop default of 100 steps
@@ -281,6 +291,46 @@ fn cmd_simulate(args: &Args) -> i32 {
         probe::util::stats::max(&irs),
         c.metrics.throughput(),
     );
+    if cfg.telemetry.enabled {
+        use probe::telemetry::export;
+        let mut write = |path: &str, body: String, what: &str| -> bool {
+            match std::fs::write(path, body) {
+                Ok(()) => {
+                    println!("wrote {what} to {path}");
+                    true
+                }
+                Err(e) => {
+                    eprintln!("{what} write failed: {path}: {e}");
+                    false
+                }
+            }
+        };
+        let log = &c.executor.timeline_log;
+        let mut ok = true;
+        if let Some(path) = &trace_out {
+            let doc = export::perfetto_trace(log, &c.recorder);
+            ok &= write(path, doc.to_string(), "Perfetto trace");
+        }
+        if let Some(path) = &metrics_out {
+            let links = export::link_utilization(log, &c.executor.sim.cluster.fabric);
+            ok &= write(
+                path,
+                export::prometheus_text(&c.recorder.registry, &links),
+                "Prometheus snapshot",
+            );
+        }
+        if let Some(path) = &events_out {
+            ok &= write(path, export::events_jsonl(&c.recorder), "event dump");
+        }
+        println!(
+            "telemetry: {} events recorded ({} dropped by ring/sampling)",
+            c.recorder.len(),
+            c.recorder.dropped()
+        );
+        if !ok {
+            return 1;
+        }
+    }
     0
 }
 

@@ -4,7 +4,7 @@
 
 use std::collections::BTreeMap;
 
-use crate::util::stats::{imbalance_ratio, Online, Summary};
+use crate::util::stats::{imbalance_ratio, LogHistogram, Online, Summary};
 
 /// Execution phases of one MoE layer step (paper Fig. 6 / Fig. 11).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -320,6 +320,20 @@ pub struct ServingMetrics {
     /// memory governor over the run. A request preempted twice counts
     /// twice.
     pub preemptions: usize,
+    /// Per-replica busy windows `(busy-window end, decode tokens)`
+    /// accumulated by [`ServingMetrics::merge`]. Empty on a
+    /// single-replica view; when non-empty, fleet throughput is
+    /// `Σ tokens / max end` — NOT derived from the interleaved
+    /// `step_tokens`, whose per-replica clocks each start at 0 and
+    /// would double-count the union span.
+    pub replica_windows: Vec<(f64, usize)>,
+    /// Streaming TTFT distribution (seconds; log-bucketed, see
+    /// [`LogHistogram`]) filled as first tokens are stamped — the
+    /// percentile path that scales to million-request traces.
+    /// [`ServingMetrics::ttft_summary`] remains the exact path.
+    pub ttft_hist: LogHistogram,
+    /// Streaming TPOT distribution (seconds), filled at retirement.
+    pub tpot_hist: LogHistogram,
 }
 
 impl ServingMetrics {
@@ -373,25 +387,93 @@ impl ServingMetrics {
             .count()
     }
 
+    /// Stamp a request's first token and fold its TTFT into the
+    /// streaming histogram.
+    pub fn stamp_first_token(&mut self, idx: usize, t: f64) {
+        self.requests[idx].first_token = Some(t);
+        if let Some(ttft) = self.requests[idx].ttft() {
+            self.ttft_hist.push(ttft);
+        }
+    }
+
+    /// Stamp a request's retirement and fold its TPOT into the
+    /// streaming histogram.
+    pub fn stamp_finished(&mut self, idx: usize, t: f64) {
+        self.requests[idx].finished = Some(t);
+        if let Some(tpot) = self.requests[idx].tpot() {
+            self.tpot_hist.push(tpot);
+        }
+    }
+
+    /// Streaming TTFT quantile estimate (see [`LogHistogram`] for the
+    /// error bound); prefer [`ServingMetrics::ttft_summary`] in tests.
+    pub fn ttft_quantile(&self, q: f64) -> f64 {
+        self.ttft_hist.quantile(q)
+    }
+
+    /// Streaming TPOT quantile estimate.
+    pub fn tpot_quantile(&self, q: f64) -> f64 {
+        self.tpot_hist.quantile(q)
+    }
+
+    /// This view's own busy window `(end, decode tokens)` derived from
+    /// its step samples — the replica's contribution to fleet
+    /// throughput. The first sample carries the tokens of the warmup
+    /// step whose duration is unobserved, so (as in
+    /// [`ServingMetrics::throughput`]) its tokens are excluded.
+    fn busy_window(&self) -> Option<(f64, usize)> {
+        if self.step_tokens.len() < 2 {
+            return None;
+        }
+        let end = self.step_tokens.last().unwrap().0;
+        let tokens: usize = self.step_tokens.iter().skip(1).map(|&(_, n)| n).sum();
+        Some((end, tokens))
+    }
+
     /// Merge replica-level metrics into one cross-replica view: request
-    /// records are pooled and step samples interleaved by time, so
-    /// latency percentiles and [`ServingMetrics::throughput`] reflect
-    /// the whole fleet (each replica runs its own serving clock from 0;
-    /// the union span approximates the fleet's busy window).
+    /// records and streaming histograms are pooled, step samples are
+    /// interleaved by time (for throughput *curves*), and each part
+    /// contributes its busy window to [`ServingMetrics::replica_windows`]
+    /// so fleet throughput divides by the longest replica clock instead
+    /// of the union span of interleaved clocks that each start at 0.
     pub fn merge<'a, I: IntoIterator<Item = &'a ServingMetrics>>(parts: I) -> ServingMetrics {
         let mut out = ServingMetrics::default();
         for m in parts {
             out.requests.extend(m.requests.iter().cloned());
             out.step_tokens.extend(m.step_tokens.iter().copied());
             out.preemptions += m.preemptions;
+            out.ttft_hist.merge(&m.ttft_hist);
+            out.tpot_hist.merge(&m.tpot_hist);
+            if m.replica_windows.is_empty() {
+                // leaf replica: its own steps form one busy window
+                if let Some(w) = m.busy_window() {
+                    out.replica_windows.push(w);
+                }
+            } else {
+                // already-merged view: carry its windows through
+                out.replica_windows.extend(m.replica_windows.iter().copied());
+            }
         }
         out.step_tokens
             .sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
         out
     }
 
-    /// Aggregate decode throughput (tokens/s) over the recorded steps.
+    /// Aggregate decode throughput (tokens/s). Single-replica views
+    /// divide by their own step span; merged views divide the fleet's
+    /// token total by the longest per-replica busy window (each
+    /// replica's serving clock starts at 0, so the windows overlap in
+    /// wall time rather than concatenating).
     pub fn throughput(&self) -> f64 {
+        if !self.replica_windows.is_empty() {
+            let tokens: usize = self.replica_windows.iter().map(|&(_, n)| n).sum();
+            let span = self
+                .replica_windows
+                .iter()
+                .map(|&(end, _)| end)
+                .fold(0.0, f64::max);
+            return if span > 0.0 { tokens as f64 / span } else { 0.0 };
+        }
         if self.step_tokens.len() < 2 {
             return 0.0;
         }
@@ -537,6 +619,7 @@ mod tests {
             }],
             step_tokens: vec![(0.0, 1), (2.0, 3)],
             preemptions: 2,
+            ..Default::default()
         };
         let b = ServingMetrics {
             requests: vec![RequestMetrics {
@@ -545,11 +628,73 @@ mod tests {
             }],
             step_tokens: vec![(1.0, 2)],
             preemptions: 1,
+            ..Default::default()
         };
         let m = ServingMetrics::merge([&a, &b]);
         assert_eq!(m.requests.len(), 2);
         assert_eq!(m.step_tokens, vec![(0.0, 1), (1.0, 2), (2.0, 3)]);
         assert_eq!(m.preemptions, 3, "preemptions must pool across replicas");
+    }
+
+    #[test]
+    fn fleet_throughput_uses_busy_windows_not_union_span() {
+        // two hand-built replicas, clocks both starting at 0: replica A
+        // decodes 300 tokens over 3 s, replica B 100 tokens over 1 s.
+        // The fleet served 400 tokens in 3 s of wall time = 133.3 tok/s.
+        // The old interleaved-span computation summed the same tokens
+        // over the union span (still 3 s here) but with replicas of
+        // equal length it halves the denominator's meaning — interleave
+        // (0,a),(0,b),(1,a),(1,b) spans 1 s while the fleet decoded
+        // both replicas' tokens concurrently.
+        let a = ServingMetrics {
+            step_tokens: vec![(0.0, 0), (1.0, 100), (2.0, 100), (3.0, 100)],
+            ..Default::default()
+        };
+        let b = ServingMetrics {
+            step_tokens: vec![(0.0, 0), (1.0, 100)],
+            ..Default::default()
+        };
+        let m = ServingMetrics::merge([&a, &b]);
+        assert_eq!(m.replica_windows, vec![(3.0, 300), (1.0, 100)]);
+        assert!(
+            (m.throughput() - 400.0 / 3.0).abs() < 1e-9,
+            "fleet throughput must divide by the longest busy window, got {}",
+            m.throughput()
+        );
+        // the single-replica path is untouched (bit-compatible)
+        assert!((a.throughput() - 100.0).abs() < 1e-9);
+        // merging merged views carries windows through unchanged
+        let mm = ServingMetrics::merge([&m]);
+        assert_eq!(mm.replica_windows, m.replica_windows);
+        assert!((mm.throughput() - m.throughput()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stamp_helpers_feed_streaming_histograms() {
+        let mut m = ServingMetrics::default();
+        for i in 0..100u64 {
+            m.requests.push(RequestMetrics {
+                id: i,
+                arrival: 0.0,
+                ..Default::default()
+            });
+            let ttft = 0.010 + i as f64 * 0.001;
+            m.stamp_first_token(i as usize, ttft);
+            m.requests[i as usize].tokens_out = 11;
+            m.stamp_finished(i as usize, ttft + 1.0); // tpot = 0.1 for all
+        }
+        assert_eq!(m.ttft_hist.count(), 100);
+        assert_eq!(m.tpot_hist.count(), 100);
+        let exact = m.ttft_summary();
+        let est = m.ttft_quantile(0.5);
+        assert!(
+            (est - exact.p50).abs() <= 0.05 * exact.p50,
+            "streaming p50 {est} vs exact {exact:?}"
+        );
+        assert!((m.tpot_quantile(0.9) - 0.1).abs() < 0.01);
+        // merge pools the histograms
+        let merged = ServingMetrics::merge([&m]);
+        assert_eq!(merged.ttft_hist.count(), 100);
     }
 
     #[test]
@@ -564,8 +709,7 @@ mod tests {
         };
         let m = ServingMetrics {
             requests: vec![mk(0, 0.0, 1.0), mk(1, 0.0, 3.0), mk(0, 1.0, 1.5)],
-            step_tokens: vec![],
-            preemptions: 0,
+            ..Default::default()
         };
         assert_eq!(m.tenants(), vec![0, 1]);
         assert_eq!(m.completed_for_tenant(0), 2);
@@ -577,9 +721,8 @@ mod tests {
     #[test]
     fn throughput_from_steps() {
         let m = ServingMetrics {
-            requests: vec![],
             step_tokens: vec![(0.0, 0), (1.0, 100), (2.0, 100)],
-            preemptions: 0,
+            ..Default::default()
         };
         assert!((m.throughput() - 100.0).abs() < 1e-9);
     }

@@ -268,6 +268,17 @@ impl MemoryManager {
         (0..self.ep).map(|r| self.replica_cap(r)).collect()
     }
 
+    /// Allocation-free governor snapshot for the flight recorder's
+    /// `MemGovernor` events: `(resident KV rows, step token watermark,
+    /// min per-rank replica cap)`.
+    pub fn telemetry_snapshot(&self) -> (f64, usize, usize) {
+        let cap_min = (0..self.ep)
+            .map(|r| self.replica_cap(r))
+            .min()
+            .unwrap_or(0);
+        (self.total_kv_tokens(), self.step_tokens, cap_min)
+    }
+
     /// Full bytes breakdown of `rank` with the replica region at its
     /// currently-granted cap. By construction a breakdown built from an
     /// admitted state always satisfies [`MemoryBreakdown::fits`]: the

@@ -120,6 +120,14 @@ pub trait LookaheadPredictor: std::fmt::Debug {
         depth: usize,
         ep: usize,
     ) -> Option<Vec<Vec<f64>>>;
+
+    /// Self-reported forecast confidence in `[0, 1]` for the flight
+    /// recorder's `Predict` events. Error-process predictors report
+    /// their parameterized accuracy; online predictors a warm-up
+    /// saturating estimate. Default: fully confident (oracle).
+    fn confidence(&self) -> f64 {
+        1.0
+    }
 }
 
 /// Causal cross-layer predictor: per-layer expert transition model.
@@ -269,6 +277,14 @@ impl LookaheadPredictor for TransitionPredictor {
             l = (l + 1) % self.n_layers;
         }
         Some(cur)
+    }
+
+    /// Warm-up saturating confidence: with no layer pairs observed the
+    /// model is running on the gate prior (low confidence); each
+    /// observed pair sharpens the transition rows toward the EMA
+    /// steady state.
+    fn confidence(&self) -> f64 {
+        self.pairs_seen as f64 / (self.pairs_seen as f64 + 8.0)
     }
 }
 
@@ -422,6 +438,10 @@ impl LookaheadPredictor for StatisticalPredictor {
         self.accuracy = nominal;
         self.last_seen[target_layer] = Some(base);
         Some(counts)
+    }
+
+    fn confidence(&self) -> f64 {
+        self.accuracy
     }
 }
 

@@ -30,6 +30,7 @@ use crate::fabric::{Fabric, Flow};
 use crate::metrics::{LayerTimeline, Phase, PhaseSpan};
 use crate::model::MoeModel;
 use crate::perfmodel::{self, CommVolumes, TrafficMatrix};
+use crate::telemetry::{Event, Recorder};
 use crate::topology::HardwareProfile;
 
 /// Per-layer scheduling inputs produced by a balancer + the perf model.
@@ -72,6 +73,10 @@ pub struct LayerSchedule {
 /// over a set of fabric links.
 #[derive(Debug, Clone)]
 pub struct PrefetchItem {
+    /// Flow id, monotone per [`PrefetchQueue`] — the key the flight
+    /// recorder's enqueue → landed / deadline-miss lifecycle events
+    /// share.
+    pub id: u32,
     /// Transfer seconds still to transmit *at the flow's own line rate*
     /// (`rate`); exposure and queue pending are reported in these
     /// seconds, matching the pre-fabric scalar accounting.
@@ -131,6 +136,8 @@ pub struct PrefetchQueue {
     pairs: Vec<(usize, usize, f64)>,
     /// Items enqueued this layer, before they join `items`.
     staged: Vec<PrefetchItem>,
+    /// Next flow id to hand out (telemetry lifecycle key).
+    next_id: u32,
 }
 
 impl PrefetchQueue {
@@ -181,8 +188,14 @@ fn stage_prefetch_items(
     fabric: &Fabric,
     pairs: &mut Vec<(usize, usize, f64)>,
     out: &mut Vec<PrefetchItem>,
+    next_id: &mut u32,
 ) {
     out.clear();
+    let mut fresh_id = || {
+        let id = *next_id;
+        *next_id = next_id.wrapping_add(1);
+        id
+    };
     let due = s.prefetch_lookahead.max(1);
     let max_slots = s.prefetch_slots.iter().copied().max().unwrap_or(0);
     if fabric.is_flat() {
@@ -191,6 +204,7 @@ fn stage_prefetch_items(
             return;
         }
         out.push(PrefetchItem {
+            id: fresh_id(),
             remaining: t_new,
             rate: fabric.intra.bw,
             links: vec![0],
@@ -226,6 +240,7 @@ fn stage_prefetch_items(
                 fabric.inter.base_latency
             };
             out.push(PrefetchItem {
+                id: fresh_id(),
                 remaining: bytes / rate + base,
                 rate,
                 links,
@@ -241,6 +256,7 @@ fn stage_prefetch_items(
             .enumerate()
             .filter(|&(_, &slots)| slots > 0)
             .map(|(r, &slots)| PrefetchItem {
+                id: fresh_id(),
                 remaining: perfmodel::transfer_time(slots, model, hw),
                 rate: fabric.intra.bw,
                 links: vec![fabric.link_rank_in(r) as u32],
@@ -253,12 +269,36 @@ fn stage_prefetch_items(
 /// through this layer's hiding window. Prefetch and All-to-All are
 /// charged against the fabric's shared per-link budgets; a flat fabric
 /// reproduces the pre-fabric single-track accounting exactly.
+///
+/// Thin wrapper over [`schedule_layer_fabric_rec`] with a disabled
+/// flight recorder (zero allocation, zero behavior change).
 pub fn schedule_layer_fabric(
     s: &LayerSchedule,
     queue: &mut PrefetchQueue,
     model: &MoeModel,
     hw: &HardwareProfile,
     fabric: &Fabric,
+) -> LayerTimeline {
+    let mut rec = Recorder::disabled();
+    schedule_layer_fabric_rec(s, queue, model, hw, fabric, &mut rec, 0, 0)
+}
+
+/// [`schedule_layer_fabric`] plus flight-recorder lifecycle events:
+/// every staged transfer emits `PrefetchEnqueue`, every fully drained
+/// item `PrefetchLanded`, and every transfer still pending when its
+/// target layer runs `PrefetchDeadlineMiss` carrying the exposed
+/// seconds. The recorder is pure observation — timeline arithmetic,
+/// drain order, and queue state are bit-identical to the wrapper.
+#[allow(clippy::too_many_arguments)]
+pub fn schedule_layer_fabric_rec(
+    s: &LayerSchedule,
+    queue: &mut PrefetchQueue,
+    model: &MoeModel,
+    hw: &HardwareProfile,
+    fabric: &Fabric,
+    rec: &mut Recorder,
+    step: u32,
+    layer: u16,
 ) -> LayerTimeline {
     let ep = s.compute.len();
     let bw = hw.effective_alltoall_bw();
@@ -319,7 +359,21 @@ pub fn schedule_layer_fabric(
         attn_sent += item.drain(&mut queue.avail, attn_window, fabric);
         if item.due_in == 0 && item.remaining > 0.0 {
             exposed += item.remaining;
+            if rec.is_on() {
+                rec.record(Event::PrefetchDeadlineMiss {
+                    step,
+                    layer,
+                    flow: item.id,
+                    exposed: item.remaining,
+                });
+            }
             item.remaining = 0.0;
+        } else if rec.is_on() && item.remaining <= 1e-15 {
+            rec.record(Event::PrefetchLanded {
+                step,
+                layer,
+                flow: item.id,
+            });
         }
     }
     queue.items.retain(|i| i.remaining > 1e-15);
@@ -333,8 +387,36 @@ pub fn schedule_layer_fabric(
     let mut phase_b_sent = 0.0;
     for item in queue.items.iter_mut() {
         phase_b_sent += item.drain(&mut queue.avail, cap, fabric);
+        if rec.is_on() && item.remaining <= 1e-15 {
+            rec.record(Event::PrefetchLanded {
+                step,
+                layer,
+                flow: item.id,
+            });
+        }
     }
-    stage_prefetch_items(s, model, hw, fabric, &mut queue.pairs, &mut queue.staged);
+    let mut next_id = queue.next_id;
+    stage_prefetch_items(
+        s,
+        model,
+        hw,
+        fabric,
+        &mut queue.pairs,
+        &mut queue.staged,
+        &mut next_id,
+    );
+    queue.next_id = next_id;
+    if rec.is_on() {
+        for it in queue.staged.iter() {
+            rec.record(Event::PrefetchEnqueue {
+                step,
+                layer,
+                flow: it.id,
+                bytes: it.remaining * it.rate,
+                due_in: it.due_in.min(u8::MAX as usize) as u8,
+            });
+        }
+    }
     let t_new: f64 = queue.staged.iter().map(|i| i.remaining).sum();
     // plan-completion floor: what the backlog left, capped by the time
     // remaining after predict+plan
@@ -344,6 +426,13 @@ pub fn schedule_layer_fabric(
         .extend(queue.avail.iter().map(|&a| a.min(cap - plan_done)));
     for item in queue.staged.iter_mut() {
         phase_b_sent += item.drain(&mut queue.new_avail, cap - plan_done, fabric);
+        if rec.is_on() && item.remaining <= 1e-15 {
+            rec.record(Event::PrefetchLanded {
+                step,
+                layer,
+                flow: item.id,
+            });
+        }
     }
 
     // Phase C — Combine: split-phase suspends transmission. Without it
@@ -357,6 +446,15 @@ pub fn schedule_layer_fabric(
         for item in queue.items.iter_mut().chain(queue.staged.iter_mut()) {
             if item.due_in <= 1 {
                 leftover += item.remaining;
+                if rec.is_on() && item.remaining > 1e-15 {
+                    // force-cleared into Combine: landed, but the cost
+                    // shows up as combine inflation, not exposure
+                    rec.record(Event::PrefetchLanded {
+                        step,
+                        layer,
+                        flow: item.id,
+                    });
+                }
                 item.remaining = 0.0;
             }
         }
@@ -661,6 +759,85 @@ mod tests {
         let second = schedule_layer(&s2, &mut q, &model(), &hw());
         assert!(second.exposed_overhead > 0.0, "missed deadline not exposed");
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn recorder_sees_full_prefetch_lifecycle() {
+        use crate::config::TelemetryConfig;
+        let on = TelemetryConfig {
+            enabled: true,
+            ring_capacity: 64,
+            sample_every: 1,
+        };
+        let fabric = Fabric::flat(8, &hw());
+
+        // hidden transfer: enqueue then landed, no miss
+        let mut rec = Recorder::new(&on);
+        let mut q = PrefetchQueue::new();
+        let s = mk_sched(vec![1e-3; 8], vec![1; 8], true);
+        schedule_layer_fabric_rec(&s, &mut q, &model(), &hw(), &fabric, &mut rec, 7, 3);
+        let kinds: Vec<&str> = rec.events().map(|(_, e)| e.kind()).collect();
+        assert!(kinds.contains(&"prefetch_enqueue"), "{kinds:?}");
+        assert!(kinds.contains(&"prefetch_landed"), "{kinds:?}");
+        assert!(!kinds.contains(&"prefetch_deadline_miss"), "{kinds:?}");
+        // enqueue and landed share the flow id
+        let enq_flow = rec
+            .events()
+            .find_map(|(_, e)| match *e {
+                Event::PrefetchEnqueue { flow, step, layer, .. } => {
+                    assert_eq!((step, layer), (7, 3));
+                    Some(flow)
+                }
+                _ => None,
+            })
+            .unwrap();
+        assert!(rec.events().any(|(_, e)| matches!(
+            *e,
+            Event::PrefetchLanded { flow, .. } if flow == enq_flow
+        )));
+
+        // oversized transfer: the miss at the target layer carries the
+        // exposed seconds the timeline charges
+        let mut rec = Recorder::new(&on);
+        let mut q = PrefetchQueue::new();
+        let mut s = mk_sched(vec![10e-6; 8], vec![3; 8], true);
+        s.attn_time = 10e-6;
+        schedule_layer_fabric_rec(&s, &mut q, &model(), &hw(), &fabric, &mut rec, 0, 0);
+        let mut s2 = mk_sched(vec![10e-6; 8], vec![0; 8], true);
+        s2.attn_time = 10e-6;
+        let second =
+            schedule_layer_fabric_rec(&s2, &mut q, &model(), &hw(), &fabric, &mut rec, 0, 1);
+        assert!(second.exposed_overhead > 0.0);
+        let missed: Vec<f64> = rec
+            .events()
+            .filter_map(|(_, e)| match *e {
+                Event::PrefetchDeadlineMiss { exposed, .. } => Some(exposed),
+                _ => None,
+            })
+            .collect();
+        assert!(!missed.is_empty(), "miss not recorded");
+        let total: f64 = missed.iter().sum();
+        assert!(
+            (total - second.exposed_overhead).abs() < 1e-12,
+            "event exposure {total} != timeline exposure {}",
+            second.exposed_overhead
+        );
+        assert_eq!(rec.registry.prefetch_deadline_missed_total, missed.len() as u64);
+        assert!(rec.registry.exposed_seconds_total > 0.0);
+
+        // recording changed nothing: a disabled-recorder replay of the
+        // same schedule is bit-identical
+        let mut q2 = PrefetchQueue::new();
+        let a = schedule_layer_fabric(&s, &mut q2, &model(), &hw(), &fabric);
+        let b = schedule_layer_fabric(&s2, &mut q2, &model(), &hw(), &fabric);
+        let mut q3 = PrefetchQueue::new();
+        let mut rec3 = Recorder::new(&on);
+        let a2 = schedule_layer_fabric_rec(&s, &mut q3, &model(), &hw(), &fabric, &mut rec3, 0, 0);
+        let b2 = schedule_layer_fabric_rec(&s2, &mut q3, &model(), &hw(), &fabric, &mut rec3, 0, 1);
+        assert_eq!(a.exposed_overhead.to_bits(), a2.exposed_overhead.to_bits());
+        assert_eq!(b.exposed_overhead.to_bits(), b2.exposed_overhead.to_bits());
+        assert_eq!(a.makespan().to_bits(), a2.makespan().to_bits());
+        assert_eq!(b.makespan().to_bits(), b2.makespan().to_bits());
     }
 
     #[test]

@@ -56,6 +56,7 @@ use crate::engine::{PrefillHandoff, ServingEngine, StepExecutor};
 use crate::fabric::{Fabric, Flow, LinkSpec, DEFAULT_INTER_BASE_LATENCY, DEFAULT_RAILS};
 use crate::metrics::ServingMetrics;
 use crate::placement::memory::kv_bytes_per_token;
+use crate::telemetry::{Event, Recorder};
 use crate::topology::HardwareProfile;
 use crate::util::parallel::ordered_map;
 use crate::util::stats::Summary;
@@ -294,6 +295,27 @@ where
     E: StepExecutor + 'static,
     F: Fn(usize) -> Result<ServingEngine<E>> + Send + Sync + 'static,
 {
+    let mut rec = Recorder::disabled();
+    run_disagg_rec(cfg, requests, factory, &mut rec)
+}
+
+/// [`run_disagg`] with a driver-owned flight recorder: role flips land
+/// as [`Event::RoleFlip`] (window, resulting pool split), every fabric
+/// KV handoff as [`Event::KvHandoff`] (sequence, src/dst replica,
+/// bytes), and the run's SLO attainment is published on the recorder's
+/// registry gauge. All recording happens on the orchestration thread
+/// after the corresponding decision is made, so a disabled recorder
+/// yields a bit-identical report.
+pub fn run_disagg_rec<E, F>(
+    cfg: &DisaggRunConfig,
+    requests: &[Request],
+    factory: F,
+    rec: &mut Recorder,
+) -> DisaggReport
+where
+    E: StepExecutor + 'static,
+    F: Fn(usize) -> Result<ServingEngine<E>> + Send + Sync + 'static,
+{
     let n = cfg.replicas;
     assert!(n >= 2, "disaggregation needs at least 2 replicas");
     let d = &cfg.disagg;
@@ -363,6 +385,13 @@ where
                     rebalances += 1;
                 }
                 pools.set_roles(roles_for(n, n_prefill));
+                if rec.is_on() {
+                    rec.record(Event::RoleFlip {
+                        window: w as u32,
+                        prefill_ranks: n_prefill.min(u16::MAX as usize) as u16,
+                        decode_ranks: (n - n_prefill).min(u16::MAX as usize) as u16,
+                    });
+                }
             }
         }
         timeline.push((w, n_prefill, n - n_prefill));
@@ -530,6 +559,14 @@ where
                 Some(fi) => {
                     kv_bytes += flows[fi].bytes;
                     kv_transfers += 1;
+                    if rec.is_on() {
+                        rec.record(Event::KvHandoff {
+                            step: (kv_transfers - 1) as u32,
+                            from: item.prefill_replica.min(u16::MAX as usize) as u16,
+                            to: dst.min(u16::MAX as usize) as u16,
+                            bytes: flows[fi].bytes,
+                        });
+                    }
                     let t = cfg.fabric.inter.base_latency + sched[fi];
                     (item.ready_at + t, t)
                 }
@@ -625,6 +662,14 @@ where
             }
         }
     }
+    let slo_attainment = if finished > 0 {
+        met as f64 / finished as f64
+    } else {
+        0.0
+    };
+    if rec.is_on() {
+        rec.registry.slo_attainment = slo_attainment;
+    }
     DisaggReport {
         per_replica,
         metrics,
@@ -637,11 +682,7 @@ where
         rebalances,
         deferred,
         role_timeline: timeline,
-        slo_attainment: if finished > 0 {
-            met as f64 / finished as f64
-        } else {
-            0.0
-        },
+        slo_attainment,
     }
 }
 

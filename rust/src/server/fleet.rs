@@ -16,6 +16,7 @@ use anyhow::Result;
 
 use crate::engine::{ServingEngine, StepExecutor};
 use crate::metrics::ServingMetrics;
+use crate::telemetry::{Event, Recorder};
 use crate::util::parallel::ordered_map;
 use crate::util::stats::Summary;
 use crate::workload::Request;
@@ -219,12 +220,39 @@ where
     E: StepExecutor + 'static,
     F: Fn(usize) -> Result<ServingEngine<E>> + Send + Sync + 'static,
 {
+    let mut rec = Recorder::disabled();
+    run_fleet_rec(cfg, requests, factory, &mut rec)
+}
+
+/// [`run_fleet`] with a driver-owned flight recorder: every dispatch
+/// decision lands as an [`Event::Dispatch`] (sequence number, chosen
+/// replica, that replica's queue depth at assignment). Replica engines
+/// run on worker threads with their own recorders; the driver recorder
+/// only sees control-plane decisions made on this thread, so recording
+/// never perturbs replica execution or merge order.
+pub fn run_fleet_rec<E, F>(
+    cfg: &FleetConfig,
+    requests: &[Request],
+    factory: F,
+    rec: &mut Recorder,
+) -> FleetReport
+where
+    E: StepExecutor + 'static,
+    F: Fn(usize) -> Result<ServingEngine<E>> + Send + Sync + 'static,
+{
     let n = cfg.replicas.max(1);
     let mut dispatcher = Dispatcher::new(cfg.policy, n);
     let mut shards: Vec<Vec<Request>> = vec![Vec::new(); n];
-    for req in requests {
+    for (seq, req) in requests.iter().enumerate() {
         let r = dispatcher.dispatch(req);
         shards[r].push(req.clone());
+        if rec.is_on() {
+            rec.record(Event::Dispatch {
+                step: seq as u32,
+                replica: r.min(u16::MAX as usize) as u16,
+                queued: shards[r].len() as u32,
+            });
+        }
     }
     let threads = if !cfg.parallel {
         1

@@ -187,6 +187,24 @@ impl ClusterSim {
         decisions: &[LayerDecision],
         ctx: Option<&scheduler::ContextProfile>,
     ) -> StepOutcome {
+        let mut rec = crate::telemetry::Recorder::disabled();
+        self.run_step_telemetry(routing, decisions, ctx, &mut rec, 0)
+    }
+
+    /// [`ClusterSim::run_step_ctx`] with a flight recorder: per-layer
+    /// scheduling goes through
+    /// [`scheduler::schedule_layer_fabric_rec`], emitting prefetch-flow
+    /// lifecycle events tagged with `step`. A disabled recorder makes
+    /// this bit-identical (and allocation-identical) to
+    /// [`ClusterSim::run_step_ctx`].
+    pub fn run_step_telemetry(
+        &mut self,
+        routing: &StepRouting,
+        decisions: &[LayerDecision],
+        ctx: Option<&scheduler::ContextProfile>,
+        rec: &mut crate::telemetry::Recorder,
+        step: u32,
+    ) -> StepOutcome {
         let n_layers = routing.layers.len();
         assert_eq!(decisions.len(), n_layers);
         let ep = self.cluster.ep;
@@ -255,12 +273,15 @@ impl ClusterSim {
                 split_phase: self.split_phase,
                 pre_dispatch_fraction: d.pre_dispatch_fraction,
             };
-            let tl = scheduler::schedule_layer_fabric(
+            let tl = scheduler::schedule_layer_fabric_rec(
                 &sched,
                 &mut self.prefetch_queue,
                 &self.model,
                 hw,
                 fabric,
+                rec,
+                step,
+                l as u16,
             );
             prefetch_slots_total += d.total_prefetch_slots();
             latency += tl.makespan();

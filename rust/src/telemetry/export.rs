@@ -1,0 +1,518 @@
+//! Telemetry exporters: Chrome-trace/Perfetto JSON, Prometheus text
+//! exposition, and a JSONL event dump (ISSUE 8).
+//!
+//! The Perfetto trace renders the paper's dual-track timeline (Fig. 6 /
+//! Fig. 11) directly: one thread per rank carrying the main-track
+//! phases (attention → dispatch → moe_compute → combine → sync_wait)
+//! and one `control-plane` thread carrying the aux phases
+//! (predict → plan → prefetch → update) plus every flight-recorder
+//! event as an instant. Load `out.json` at <https://ui.perfetto.dev>
+//! (or `chrome://tracing`).
+
+use crate::metrics::LayerTimeline;
+use crate::util::json::Json;
+
+use super::{Recorder, Registry};
+
+/// Timelines accumulated across steps for trace export, each tagged
+/// with its decode step. Only populated when telemetry is enabled —
+/// the capture cost (one clone per layer) is never paid otherwise.
+#[derive(Debug, Clone, Default)]
+pub struct TimelineLog {
+    /// `(step, layer timeline)` in execution order.
+    pub entries: Vec<(u32, LayerTimeline)>,
+}
+
+impl TimelineLog {
+    /// Empty log.
+    pub fn new() -> TimelineLog {
+        TimelineLog::default()
+    }
+
+    /// Append one executed layer's timeline.
+    pub fn push(&mut self, step: u32, tl: LayerTimeline) {
+        self.entries.push((step, tl));
+    }
+
+    /// True when nothing was captured.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Seconds → Chrome-trace microseconds.
+fn us(t: f64) -> f64 {
+    t * 1e6
+}
+
+fn trace_event(
+    name: &str,
+    cat: &str,
+    ph: &str,
+    ts: f64,
+    dur: f64,
+    tid: usize,
+    args: Json,
+) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(name.into())),
+        ("cat", Json::Str(cat.into())),
+        ("ph", Json::Str(ph.into())),
+        ("ts", Json::Num(ts)),
+        ("dur", Json::Num(dur)),
+        ("pid", Json::Num(0.0)),
+        ("tid", Json::Num(tid as f64)),
+        ("args", args),
+    ])
+}
+
+fn thread_meta(tid: usize, name: &str) -> Json {
+    trace_event(
+        "thread_name",
+        "__metadata",
+        "M",
+        0.0,
+        0.0,
+        tid,
+        Json::obj(vec![("name", Json::Str(name.into()))]),
+    )
+}
+
+/// Build a Chrome-trace/Perfetto JSON document from the captured layer
+/// timelines plus the flight-recorder ring.
+///
+/// Track layout: `tid 1..=R` are the per-rank main tracks, `tid R+1`
+/// is the aux `control-plane` track holding the control-phase spans
+/// and one instant per recorded event (args = the structured event).
+/// Every emitted record carries `ph/ts/dur/pid/tid` (instants and
+/// metadata use `dur = 0`), spans are non-negative, and timestamps
+/// accumulate layer-by-layer on the simulated clock.
+pub fn perfetto_trace(log: &TimelineLog, rec: &Recorder) -> Json {
+    let mut events: Vec<Json> = Vec::new();
+    let ranks = log
+        .entries
+        .iter()
+        .map(|(_, tl)| tl.ranks.len())
+        .max()
+        .unwrap_or(0);
+    let aux_tid = ranks + 1;
+
+    events.push(Json::obj(vec![
+        ("name", Json::Str("process_name".into())),
+        ("cat", Json::Str("__metadata".into())),
+        ("ph", Json::Str("M".into())),
+        ("ts", Json::Num(0.0)),
+        ("dur", Json::Num(0.0)),
+        ("pid", Json::Num(0.0)),
+        ("tid", Json::Num(0.0)),
+        (
+            "args",
+            Json::obj(vec![("name", Json::Str("probe-sim".into()))]),
+        ),
+    ]));
+    for r in 0..ranks {
+        events.push(thread_meta(r + 1, &format!("rank {r}")));
+    }
+    events.push(thread_meta(aux_tid, "control-plane"));
+
+    // span tracks: offset accumulates each layer's makespan
+    let mut offset = 0.0;
+    let mut step_start: Vec<(u32, f64)> = Vec::new();
+    for (step, tl) in &log.entries {
+        if step_start.last().map(|&(s, _)| s) != Some(*step) {
+            step_start.push((*step, offset));
+        }
+        let layer_args = Json::obj(vec![("step", Json::Num(*step as f64))]);
+        for (r, spans) in tl.ranks.iter().enumerate() {
+            for s in spans {
+                events.push(trace_event(
+                    s.phase.name(),
+                    "main",
+                    "X",
+                    us(offset + s.start),
+                    us(s.dur()),
+                    r + 1,
+                    layer_args.clone(),
+                ));
+            }
+        }
+        for s in &tl.aux {
+            events.push(trace_event(
+                s.phase.name(),
+                "control",
+                "X",
+                us(offset + s.start),
+                us(s.dur()),
+                aux_tid,
+                layer_args.clone(),
+            ));
+        }
+        offset += tl.makespan();
+    }
+
+    // flight-recorder instants on the control-plane track, anchored at
+    // the start of their step (events from steps that predate the
+    // captured window anchor at 0)
+    for (_, ev) in rec.events() {
+        let ts = step_start
+            .iter()
+            .find(|&&(s, _)| s == ev.step())
+            .map(|&(_, t)| t)
+            .unwrap_or(0.0);
+        events.push(trace_event(
+            ev.kind(),
+            "recorder",
+            "i",
+            us(ts),
+            0.0,
+            aux_tid,
+            ev.to_json(),
+        ));
+    }
+
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::Str("ms".into())),
+    ])
+}
+
+/// Render the registry (plus optional per-link utilization gauges) in
+/// Prometheus text exposition format.
+pub fn prometheus_text(reg: &Registry, link_util: &[(String, f64)]) -> String {
+    let mut out = String::new();
+    let mut counter = |name: &str, help: &str, v: f64| {
+        out.push_str(&format!(
+            "# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}\n"
+        ));
+    };
+    counter("probe_steps_total", "Serving steps executed.", reg.steps_total as f64);
+    counter("probe_tokens_total", "Tokens decoded.", reg.tokens_total as f64);
+    counter(
+        "probe_preemptions_total",
+        "Memory-governor preemptions.",
+        reg.preemptions_total as f64,
+    );
+    counter(
+        "probe_prefetch_flows_total",
+        "Prefetch flows enqueued.",
+        reg.prefetch_flows_total as f64,
+    );
+    counter(
+        "probe_prefetch_landed_total",
+        "Prefetch flows landed inside their window.",
+        reg.prefetch_landed_total as f64,
+    );
+    counter(
+        "probe_prefetch_deadline_missed_total",
+        "Prefetch flows that blew their hiding window.",
+        reg.prefetch_deadline_missed_total as f64,
+    );
+    counter(
+        "probe_dispatches_total",
+        "Fleet front-end dispatches.",
+        reg.dispatches_total as f64,
+    );
+    counter(
+        "probe_role_flips_total",
+        "Disagg prefill/decode role flips.",
+        reg.role_flips_total as f64,
+    );
+    counter(
+        "probe_kv_handoffs_total",
+        "Prefill-to-decode KV handoffs.",
+        reg.kv_handoffs_total as f64,
+    );
+    counter(
+        "probe_exposed_seconds_total",
+        "Transfer seconds exposed on the critical path.",
+        reg.exposed_seconds_total,
+    );
+    let mut gauge = |name: &str, help: &str, v: f64| {
+        out.push_str(&format!(
+            "# HELP {name} {help}\n# TYPE {name} gauge\n{name} {v}\n"
+        ));
+    };
+    gauge("probe_queue_depth", "Requests waiting for admission.", reg.queue_depth);
+    gauge(
+        "probe_active_requests",
+        "Requests in the active batch.",
+        reg.active_requests,
+    );
+    gauge("probe_kv_pages", "KV rows resident across ranks.", reg.kv_pages);
+    gauge(
+        "probe_hbm_watermark",
+        "Activation watermark tokens of the last step.",
+        reg.hbm_watermark,
+    );
+    gauge(
+        "probe_slo_attainment",
+        "Fraction of finished requests meeting their SLO class.",
+        reg.slo_attainment,
+    );
+    if !link_util.is_empty() {
+        out.push_str(
+            "# HELP probe_fabric_link_utilization Busy fraction per fabric link class.\n\
+             # TYPE probe_fabric_link_utilization gauge\n",
+        );
+        for (link, v) in link_util {
+            out.push_str(&format!(
+                "probe_fabric_link_utilization{{link=\"{link}\"}} {v}\n"
+            ));
+        }
+    }
+    out
+}
+
+/// Derive busy-fraction gauges per fabric link class from the captured
+/// timelines, for the `probe_fabric_link_utilization` exporter rows.
+///
+/// The wall is the sum of layer makespans; `nvswitch` busy time is the
+/// All-to-All span (mean Dispatch + Combine duration across ranks) plus
+/// the aux Prefetch span (expert weights ride the same switch ports on
+/// a flat fabric), while `rdma_rail` (multi-node fabrics only) carries
+/// the prefetch traffic that crosses nodes. These are timeline-derived
+/// approximations — busy fractions, not byte-accurate link counters —
+/// and are clamped to `[0, 1]`.
+pub fn link_utilization(log: &TimelineLog, fabric: &crate::fabric::Fabric) -> Vec<(String, f64)> {
+    use crate::metrics::Phase;
+    let mut wall = 0.0f64;
+    let mut alltoall = 0.0f64;
+    let mut prefetch = 0.0f64;
+    for (_, tl) in &log.entries {
+        wall += tl.makespan();
+        let mut span = 0.0;
+        let mut n = 0usize;
+        for spans in &tl.ranks {
+            for s in spans {
+                if matches!(s.phase, Phase::Dispatch | Phase::Combine) {
+                    span += s.dur();
+                    n += 1;
+                }
+            }
+        }
+        if n > 0 {
+            // mean over ranks: the switch serves all ranks concurrently
+            alltoall += span / tl.ranks.len().max(1) as f64;
+        }
+        for s in &tl.aux {
+            if s.phase == Phase::Prefetch {
+                prefetch += s.dur();
+            }
+        }
+    }
+    if wall <= 0.0 {
+        return Vec::new();
+    }
+    let clamp = |v: f64| (v / wall).clamp(0.0, 1.0);
+    let mut out = vec![("nvswitch".to_string(), clamp(alltoall + prefetch))];
+    if !fabric.is_flat() {
+        out.push(("rdma_rail".to_string(), clamp(prefetch)));
+    }
+    out
+}
+
+/// Dump the recorder ring as JSONL (one structured event per line,
+/// prefixed with its admission sequence).
+pub fn events_jsonl(rec: &Recorder) -> String {
+    let mut out = String::new();
+    for (seq, ev) in rec.events() {
+        let mut j = ev.to_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert("seq".into(), Json::Num(*seq as f64));
+        }
+        out.push_str(&j.to_string());
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TelemetryConfig;
+    use crate::metrics::{Phase, PhaseSpan};
+    use crate::telemetry::Event;
+
+    fn tl(ranks: usize, dur: f64) -> LayerTimeline {
+        LayerTimeline {
+            ranks: (0..ranks)
+                .map(|_| {
+                    vec![
+                        PhaseSpan {
+                            phase: Phase::Attention,
+                            start: 0.0,
+                            end: dur / 2.0,
+                        },
+                        PhaseSpan {
+                            phase: Phase::MoeCompute,
+                            start: dur / 2.0,
+                            end: dur,
+                        },
+                    ]
+                })
+                .collect(),
+            aux: vec![PhaseSpan {
+                phase: Phase::Prefetch,
+                start: 0.0,
+                end: dur / 4.0,
+            }],
+            exposed_overhead: 0.0,
+        }
+    }
+
+    fn recorder_with_events() -> Recorder {
+        let mut r = Recorder::new(&TelemetryConfig {
+            enabled: true,
+            ring_capacity: 64,
+            sample_every: 1,
+        });
+        r.record(Event::PrefetchEnqueue {
+            step: 0,
+            layer: 0,
+            flow: 1,
+            bytes: 2e6,
+            due_in: 1,
+        });
+        r.record(Event::PrefetchDeadlineMiss {
+            step: 1,
+            layer: 1,
+            flow: 1,
+            exposed: 0.003,
+        });
+        r
+    }
+
+    #[test]
+    fn perfetto_trace_validates() {
+        let mut log = TimelineLog::new();
+        log.push(0, tl(2, 1.0));
+        log.push(0, tl(2, 2.0));
+        log.push(1, tl(2, 1.5));
+        let rec = recorder_with_events();
+        let doc = perfetto_trace(&log, &rec);
+        // round-trip through the parser: the document is valid JSON
+        let parsed = Json::parse(&doc.to_string()).expect("valid JSON");
+        let events = parsed.get("traceEvents").as_arr().expect("traceEvents");
+        assert!(!events.is_empty());
+        let mut aux_span = 0;
+        let mut instants = 0;
+        for e in events {
+            // every event carries the required Chrome-trace fields
+            for k in ["ph", "ts", "dur", "pid", "tid"] {
+                assert!(
+                    !matches!(e.get(k), Json::Null),
+                    "event missing {k}: {e:?}"
+                );
+            }
+            assert!(e.get("ts").as_f64().unwrap() >= 0.0);
+            assert!(e.get("dur").as_f64().unwrap() >= 0.0, "negative span");
+            let tid = e.get("tid").as_usize().unwrap();
+            match e.get("ph").as_str().unwrap() {
+                "X" if tid == 3 => aux_span += 1,
+                "i" => instants += 1,
+                _ => {}
+            }
+        }
+        assert!(aux_span >= 3, "control-plane track missing aux spans");
+        assert_eq!(instants, 2, "recorder instants missing");
+        // the aux thread is named
+        assert!(events.iter().any(|e| {
+            e.get("ph").as_str() == Some("M")
+                && e.get("args").get("name").as_str() == Some("control-plane")
+        }));
+        // timestamps accumulate: layer 2 of step 0 starts after layer 1
+        let spans: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get("ph").as_str() == Some("X"))
+            .collect();
+        let max_ts = spans
+            .iter()
+            .map(|e| e.get("ts").as_f64().unwrap())
+            .fold(0.0, f64::max);
+        assert!(max_ts >= us(3.0), "offsets did not accumulate: {max_ts}");
+        // the deadline miss is findable with its exposed time
+        let miss = events
+            .iter()
+            .find(|e| e.get("args").get("kind").as_str() == Some("prefetch_deadline_miss"))
+            .expect("deadline-miss instant");
+        assert_eq!(miss.get("args").get("exposed").as_f64(), Some(0.003));
+    }
+
+    #[test]
+    fn prometheus_text_parses_with_monotone_counters() {
+        let rec = recorder_with_events();
+        let links = vec![("nvswitch".to_string(), 0.42)];
+        let text = prometheus_text(&rec.registry, &links);
+        let mut seen = 0;
+        for line in text.lines() {
+            if line.starts_with('#') {
+                assert!(
+                    line.starts_with("# HELP ") || line.starts_with("# TYPE "),
+                    "bad comment line: {line}"
+                );
+                continue;
+            }
+            // every sample line is `name[{labels}] value`
+            let (name, value) = line.rsplit_once(' ').expect("name value");
+            assert!(!name.is_empty());
+            let v: f64 = value.parse().expect("numeric value");
+            if name.ends_with("_total") {
+                assert!(v >= 0.0, "counter {name} negative");
+            }
+            seen += 1;
+        }
+        assert!(seen >= 15, "expected all registry samples, got {seen}");
+        assert!(text.contains("probe_prefetch_deadline_missed_total 1"));
+        assert!(text.contains("probe_fabric_link_utilization{link=\"nvswitch\"} 0.42"));
+        // counters are monotone under more traffic
+        let mut rec2 = recorder_with_events();
+        rec2.record(Event::PrefetchDeadlineMiss {
+            step: 2,
+            layer: 0,
+            flow: 9,
+            exposed: 0.001,
+        });
+        assert!(rec2.registry.prefetch_deadline_missed_total
+            > rec.registry.prefetch_deadline_missed_total);
+    }
+
+    #[test]
+    fn link_utilization_bounds_and_topology_awareness() {
+        use crate::topology::HardwareProfile;
+        let hw = HardwareProfile::hopper_141();
+        let mut log = TimelineLog::new();
+        log.push(0, tl(2, 1.0));
+        log.push(0, tl(2, 2.0));
+        // flat fabric: one nvswitch gauge, in [0, 1]
+        let flat = crate::fabric::Fabric::flat(4, &hw);
+        let links = link_utilization(&log, &flat);
+        assert_eq!(links.len(), 1);
+        assert_eq!(links[0].0, "nvswitch");
+        assert!((0.0..=1.0).contains(&links[0].1), "{links:?}");
+        assert!(links[0].1 > 0.0, "prefetch spans must register as busy");
+        // multi-node fabric: the rdma_rail gauge appears too
+        let mn = crate::fabric::Fabric::multi_node_ratio(4, 2, &hw, 0.25, 2);
+        let links = link_utilization(&log, &mn);
+        assert_eq!(links.len(), 2);
+        assert_eq!(links[1].0, "rdma_rail");
+        assert!(links[1].1 <= links[0].1, "rail busy cannot exceed switch");
+        // empty log: no gauges rather than NaN
+        assert!(link_utilization(&TimelineLog::new(), &flat).is_empty());
+    }
+
+    #[test]
+    fn jsonl_dump_is_line_parseable() {
+        let rec = recorder_with_events();
+        let dump = events_jsonl(&rec);
+        let lines: Vec<&str> = dump.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in &lines {
+            let j = Json::parse(line).expect("parseable line");
+            assert!(j.get("kind").as_str().is_some());
+            assert!(j.get("seq").as_f64().is_some());
+        }
+        let miss = Json::parse(lines[1]).unwrap();
+        assert_eq!(miss.get("kind").as_str(), Some("prefetch_deadline_miss"));
+        assert_eq!(miss.get("exposed").as_f64(), Some(0.003));
+    }
+}

@@ -1,0 +1,656 @@
+//! Flight-recorder telemetry: structured control-plane events, a
+//! preallocated ring-buffer [`Recorder`], and a fixed-field metric
+//! [`Registry`] (ISSUE 8).
+//!
+//! PROBE's claim is that prediction, planning, and prefetch stay off
+//! the critical path; this module records the per-step evidence. Every
+//! control-plane decision point emits a typed [`Event`]: predictor
+//! output fidelity once truth arrives, plan deltas (replicas
+//! added/evicted, fetch bytes, window slack), the prefetch-flow
+//! lifecycle (enqueue → landed / deadline-missed with exposed time),
+//! memory-governor pressure, batch composition, and fleet/disagg
+//! dispatch.
+//!
+//! **Overhead contract.** Recording is config-gated
+//! (`[telemetry] enabled / ring_capacity / sample_every`). A disabled
+//! recorder holds no buffer and [`Recorder::record`] returns after one
+//! branch — zero allocations, zero behavioral effect: recording is
+//! pure observation, so every simulation result is bit-exact with
+//! telemetry on or off (enforced by `tests/telemetry_overhead.rs`).
+//! Events are fixed-size `Copy` values (no heap payloads), so even the
+//! enabled path allocates only once, at ring construction.
+//!
+//! **Overwrite semantics.** The ring keeps the *newest*
+//! `ring_capacity` events: when full, the oldest slot is overwritten
+//! and [`Recorder::dropped`] counts the loss. [`Registry`] counters
+//! are updated on every emission *before* ring admission or sampling,
+//! so Prometheus totals stay complete even when the ring wraps or
+//! `sample_every` decimates high-frequency statistical events.
+//!
+//! Exporters live in [`export`]: Chrome-trace/Perfetto JSON from
+//! [`crate::metrics::LayerTimeline`] spans plus an aux control-plane
+//! track, a Prometheus text snapshot, and a JSONL event dump.
+
+pub mod export;
+
+use crate::config::TelemetryConfig;
+use crate::util::json::Json;
+
+/// One structured control-plane event. All payloads are fixed-size
+/// (`Copy`) so recording never allocates.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Event {
+    /// Predictor output for a planned layer, scored once the ground
+    /// truth arrived (count-level fidelity, see
+    /// [`crate::predictor::count_fidelity`]).
+    Predict {
+        /// Decode step the plan executed in.
+        step: u32,
+        /// Absolute layer index.
+        layer: u16,
+        /// Predictor's self-reported confidence in `[0, 1]`.
+        confidence: f64,
+        /// 1 − total-variation distance between predicted and actual
+        /// normalized count vectors (1.0 = perfect).
+        fidelity: f64,
+    },
+    /// Planner delta for one layer: replication changes and the
+    /// transfer budget they imply.
+    PlanDelta {
+        /// Decode step the plan was made for.
+        step: u32,
+        /// Absolute layer index planned.
+        layer: u16,
+        /// Replicas newly fetched by this plan.
+        added: u16,
+        /// Resident replicas dropped (not retained) by this plan.
+        evicted: u16,
+        /// Bytes of expert weights the plan fetches.
+        fetch_bytes: f64,
+        /// Hiding-window slack: window seconds minus estimated
+        /// transfer seconds (negative = the plan oversubscribes).
+        window_slack: f64,
+    },
+    /// A prefetch flow entered the cross-step queue.
+    PrefetchEnqueue {
+        /// Step the flow was staged in.
+        step: u32,
+        /// Layer whose schedule staged the flow.
+        layer: u16,
+        /// Flow id (monotone per queue).
+        flow: u32,
+        /// Bytes to transfer.
+        bytes: f64,
+        /// Layers until the deadline (0 = due immediately).
+        due_in: u8,
+    },
+    /// A prefetch flow finished inside its hiding window.
+    PrefetchLanded {
+        /// Step the last byte drained in.
+        step: u32,
+        /// Layer whose window absorbed the tail of the transfer.
+        layer: u16,
+        /// Flow id.
+        flow: u32,
+    },
+    /// A prefetch flow blew its deadline; the remainder was exposed on
+    /// the critical path.
+    PrefetchDeadlineMiss {
+        /// Step the deadline expired in.
+        step: u32,
+        /// Layer that had to stall for the remainder.
+        layer: u16,
+        /// Flow id.
+        flow: u32,
+        /// Seconds of transfer NOT hidden (added to layer latency).
+        exposed: f64,
+    },
+    /// Memory-governor state at batch composition.
+    MemGovernor {
+        /// Step the batch was composed for.
+        step: u32,
+        /// KV rows resident across all ranks.
+        kv_pages: f64,
+        /// Activation watermark tokens of the composed step.
+        watermark: f64,
+        /// Smallest per-rank replica cap published to the planner.
+        replica_cap_min: u16,
+    },
+    /// The governor preempted a request (KV dropped, recompute).
+    Preempt {
+        /// Step of the preemption.
+        step: u32,
+        /// Preempted request id.
+        request: u64,
+        /// KV rows released.
+        kv_pages: u64,
+    },
+    /// Composition of one mixed continuous-batching step.
+    BatchComposed {
+        /// Step index.
+        step: u32,
+        /// Decode requests in the batch.
+        decode: u16,
+        /// Prefill chunks riding along.
+        prefill: u16,
+        /// Total in-flight tokens (activation watermark).
+        tokens: u32,
+    },
+    /// Fleet front-end dispatched a request to a replica.
+    Dispatch {
+        /// Dispatch sequence number.
+        step: u32,
+        /// Replica the request was routed to.
+        replica: u16,
+        /// Queue depth observed on that replica at dispatch.
+        queued: u32,
+    },
+    /// Disaggregated serving changed the prefill/decode role split.
+    RoleFlip {
+        /// Re-balancing window index.
+        window: u32,
+        /// Replicas serving prefill after the flip.
+        prefill_ranks: u16,
+        /// Replicas serving decode after the flip.
+        decode_ranks: u16,
+    },
+    /// A prefill→decode KV handoff was scheduled over the fabric.
+    KvHandoff {
+        /// Handoff sequence number.
+        step: u32,
+        /// Source (prefill) replica.
+        from: u16,
+        /// Destination (decode) replica.
+        to: u16,
+        /// KV bytes transferred.
+        bytes: f64,
+    },
+}
+
+impl Event {
+    /// Stable kind tag used by the JSONL dump and Perfetto args.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Event::Predict { .. } => "predict",
+            Event::PlanDelta { .. } => "plan_delta",
+            Event::PrefetchEnqueue { .. } => "prefetch_enqueue",
+            Event::PrefetchLanded { .. } => "prefetch_landed",
+            Event::PrefetchDeadlineMiss { .. } => "prefetch_deadline_miss",
+            Event::MemGovernor { .. } => "mem_governor",
+            Event::Preempt { .. } => "preempt",
+            Event::BatchComposed { .. } => "batch_composed",
+            Event::Dispatch { .. } => "dispatch",
+            Event::RoleFlip { .. } => "role_flip",
+            Event::KvHandoff { .. } => "kv_handoff",
+        }
+    }
+
+    /// Step (or window/sequence) the event is anchored to.
+    pub fn step(&self) -> u32 {
+        match *self {
+            Event::Predict { step, .. }
+            | Event::PlanDelta { step, .. }
+            | Event::PrefetchEnqueue { step, .. }
+            | Event::PrefetchLanded { step, .. }
+            | Event::PrefetchDeadlineMiss { step, .. }
+            | Event::MemGovernor { step, .. }
+            | Event::Preempt { step, .. }
+            | Event::BatchComposed { step, .. }
+            | Event::Dispatch { step, .. }
+            | Event::KvHandoff { step, .. } => step,
+            Event::RoleFlip { window, .. } => window,
+        }
+    }
+
+    /// High-frequency statistical event classes subject to
+    /// `sample_every` decimation. Lifecycle events (prefetch flows,
+    /// preemptions, role flips, handoffs, dispatches) are never
+    /// decimated — losing one breaks the story the ring tells.
+    fn sampled(&self) -> bool {
+        matches!(
+            self,
+            Event::Predict { .. } | Event::PlanDelta { .. } | Event::BatchComposed { .. }
+        )
+    }
+
+    /// Structured JSON rendering (field names match the variant).
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![("kind", Json::Str(self.kind().into()))];
+        match *self {
+            Event::Predict {
+                step,
+                layer,
+                confidence,
+                fidelity,
+            } => {
+                pairs.push(("step", Json::Num(step as f64)));
+                pairs.push(("layer", Json::Num(layer as f64)));
+                pairs.push(("confidence", Json::Num(confidence)));
+                pairs.push(("fidelity", Json::Num(fidelity)));
+            }
+            Event::PlanDelta {
+                step,
+                layer,
+                added,
+                evicted,
+                fetch_bytes,
+                window_slack,
+            } => {
+                pairs.push(("step", Json::Num(step as f64)));
+                pairs.push(("layer", Json::Num(layer as f64)));
+                pairs.push(("added", Json::Num(added as f64)));
+                pairs.push(("evicted", Json::Num(evicted as f64)));
+                pairs.push(("fetch_bytes", Json::Num(fetch_bytes)));
+                pairs.push(("window_slack", Json::Num(window_slack)));
+            }
+            Event::PrefetchEnqueue {
+                step,
+                layer,
+                flow,
+                bytes,
+                due_in,
+            } => {
+                pairs.push(("step", Json::Num(step as f64)));
+                pairs.push(("layer", Json::Num(layer as f64)));
+                pairs.push(("flow", Json::Num(flow as f64)));
+                pairs.push(("bytes", Json::Num(bytes)));
+                pairs.push(("due_in", Json::Num(due_in as f64)));
+            }
+            Event::PrefetchLanded { step, layer, flow } => {
+                pairs.push(("step", Json::Num(step as f64)));
+                pairs.push(("layer", Json::Num(layer as f64)));
+                pairs.push(("flow", Json::Num(flow as f64)));
+            }
+            Event::PrefetchDeadlineMiss {
+                step,
+                layer,
+                flow,
+                exposed,
+            } => {
+                pairs.push(("step", Json::Num(step as f64)));
+                pairs.push(("layer", Json::Num(layer as f64)));
+                pairs.push(("flow", Json::Num(flow as f64)));
+                pairs.push(("exposed", Json::Num(exposed)));
+            }
+            Event::MemGovernor {
+                step,
+                kv_pages,
+                watermark,
+                replica_cap_min,
+            } => {
+                pairs.push(("step", Json::Num(step as f64)));
+                pairs.push(("kv_pages", Json::Num(kv_pages)));
+                pairs.push(("watermark", Json::Num(watermark)));
+                pairs.push(("replica_cap_min", Json::Num(replica_cap_min as f64)));
+            }
+            Event::Preempt {
+                step,
+                request,
+                kv_pages,
+            } => {
+                pairs.push(("step", Json::Num(step as f64)));
+                pairs.push(("request", Json::Num(request as f64)));
+                pairs.push(("kv_pages", Json::Num(kv_pages as f64)));
+            }
+            Event::BatchComposed {
+                step,
+                decode,
+                prefill,
+                tokens,
+            } => {
+                pairs.push(("step", Json::Num(step as f64)));
+                pairs.push(("decode", Json::Num(decode as f64)));
+                pairs.push(("prefill", Json::Num(prefill as f64)));
+                pairs.push(("tokens", Json::Num(tokens as f64)));
+            }
+            Event::Dispatch {
+                step,
+                replica,
+                queued,
+            } => {
+                pairs.push(("step", Json::Num(step as f64)));
+                pairs.push(("replica", Json::Num(replica as f64)));
+                pairs.push(("queued", Json::Num(queued as f64)));
+            }
+            Event::RoleFlip {
+                window,
+                prefill_ranks,
+                decode_ranks,
+            } => {
+                pairs.push(("window", Json::Num(window as f64)));
+                pairs.push(("prefill_ranks", Json::Num(prefill_ranks as f64)));
+                pairs.push(("decode_ranks", Json::Num(decode_ranks as f64)));
+            }
+            Event::KvHandoff {
+                step,
+                from,
+                to,
+                bytes,
+            } => {
+                pairs.push(("step", Json::Num(step as f64)));
+                pairs.push(("from", Json::Num(from as f64)));
+                pairs.push(("to", Json::Num(to as f64)));
+                pairs.push(("bytes", Json::Num(bytes)));
+            }
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// Fixed-field counter/gauge snapshot behind the Prometheus exporter.
+///
+/// Counters are monotone over a recorder's lifetime and updated on
+/// every [`Recorder::record`] call (before ring admission/sampling);
+/// gauges are overwritten by the instrumented components each step.
+/// All fields are plain scalars — updating the registry never
+/// allocates.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Registry {
+    /// Serving steps executed.
+    pub steps_total: u64,
+    /// Tokens processed (decode plus prefill-chunk tokens).
+    pub tokens_total: u64,
+    /// Memory-governor preemptions.
+    pub preemptions_total: u64,
+    /// Prefetch flows enqueued.
+    pub prefetch_flows_total: u64,
+    /// Prefetch flows that landed inside their window.
+    pub prefetch_landed_total: u64,
+    /// Prefetch flows that missed their deadline.
+    pub prefetch_deadline_missed_total: u64,
+    /// Fleet dispatches.
+    pub dispatches_total: u64,
+    /// Disagg role flips.
+    pub role_flips_total: u64,
+    /// Prefill→decode KV handoffs.
+    pub kv_handoffs_total: u64,
+    /// Seconds of transfer time exposed on the critical path (sum).
+    pub exposed_seconds_total: f64,
+    /// Requests waiting in the admission queue (gauge).
+    pub queue_depth: f64,
+    /// Requests in the active decode batch (gauge).
+    pub active_requests: f64,
+    /// KV rows resident across ranks (gauge).
+    pub kv_pages: f64,
+    /// Activation watermark tokens of the last step (gauge).
+    pub hbm_watermark: f64,
+    /// Fraction of finished requests meeting their SLO (gauge; disagg
+    /// sets it, 0 otherwise).
+    pub slo_attainment: f64,
+}
+
+impl Registry {
+    fn observe(&mut self, ev: &Event) {
+        match ev {
+            Event::PrefetchEnqueue { .. } => self.prefetch_flows_total += 1,
+            Event::PrefetchLanded { .. } => self.prefetch_landed_total += 1,
+            Event::PrefetchDeadlineMiss { exposed, .. } => {
+                self.prefetch_deadline_missed_total += 1;
+                self.exposed_seconds_total += exposed;
+            }
+            Event::Preempt { .. } => self.preemptions_total += 1,
+            Event::BatchComposed { tokens, .. } => {
+                self.steps_total += 1;
+                self.tokens_total += *tokens as u64;
+            }
+            Event::Dispatch { .. } => self.dispatches_total += 1,
+            Event::RoleFlip { .. } => self.role_flips_total += 1,
+            Event::KvHandoff { .. } => self.kv_handoffs_total += 1,
+            Event::MemGovernor {
+                kv_pages,
+                watermark,
+                ..
+            } => {
+                self.kv_pages = *kv_pages;
+                self.hbm_watermark = *watermark;
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Preallocated ring-buffer flight recorder (see module docs for the
+/// overhead and overwrite contracts).
+#[derive(Debug, Clone)]
+pub struct Recorder {
+    enabled: bool,
+    sample_every: u64,
+    /// Emissions of sampled classes seen (decimation counter).
+    sampled_seen: u64,
+    /// Total events admitted to the ring, ever.
+    seq: u64,
+    /// Events evicted by ring overwrite.
+    dropped: u64,
+    cap: usize,
+    /// Ring storage: `(admission sequence, event)`.
+    buf: Vec<(u64, Event)>,
+    /// Next slot to overwrite once the ring is full.
+    head: usize,
+    /// Monotone counters / live gauges fed by every emission.
+    pub registry: Registry,
+}
+
+impl Recorder {
+    /// Recorder for the given config: preallocates the ring when
+    /// enabled, otherwise an inert zero-allocation shell.
+    pub fn new(cfg: &TelemetryConfig) -> Recorder {
+        Recorder {
+            enabled: cfg.enabled && cfg.ring_capacity > 0,
+            sample_every: cfg.sample_every.max(1) as u64,
+            sampled_seen: 0,
+            seq: 0,
+            dropped: 0,
+            cap: cfg.ring_capacity,
+            buf: if cfg.enabled && cfg.ring_capacity > 0 {
+                Vec::with_capacity(cfg.ring_capacity)
+            } else {
+                Vec::new()
+            },
+            head: 0,
+            registry: Registry::default(),
+        }
+    }
+
+    /// Inert recorder: no buffer, every [`Recorder::record`] is a
+    /// single branch. `Vec::new` does not allocate, so constructing
+    /// one in a hot wrapper costs nothing.
+    pub fn disabled() -> Recorder {
+        Recorder {
+            enabled: false,
+            sample_every: 1,
+            sampled_seen: 0,
+            seq: 0,
+            dropped: 0,
+            cap: 0,
+            buf: Vec::new(),
+            head: 0,
+            registry: Registry::default(),
+        }
+    }
+
+    /// Whether events are being captured. Call sites that must compute
+    /// anything to build an event should guard on this first.
+    #[inline]
+    pub fn is_on(&self) -> bool {
+        self.enabled
+    }
+
+    /// Emit one event: counters always update; sampled classes are
+    /// decimated by `sample_every`; the ring keeps the newest `cap`.
+    #[inline]
+    pub fn record(&mut self, ev: Event) {
+        if !self.enabled {
+            return;
+        }
+        self.registry.observe(&ev);
+        if ev.sampled() {
+            let n = self.sampled_seen;
+            self.sampled_seen += 1;
+            if n % self.sample_every != 0 {
+                return;
+            }
+        }
+        let entry = (self.seq, ev);
+        self.seq += 1;
+        if self.buf.len() < self.cap {
+            self.buf.push(entry);
+        } else {
+            self.buf[self.head] = entry;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// Events currently held, oldest first, with admission sequence.
+    pub fn events(&self) -> impl Iterator<Item = &(u64, Event)> {
+        self.buf[self.head..].iter().chain(self.buf[..self.head].iter())
+    }
+
+    /// Events currently held in the ring.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True when no events are held.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Events evicted by overwrite since construction.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Fold another recorder's registry counters/gauges into this one
+    /// (cross-replica aggregation; gauges take the other's last value
+    /// only where this one never set them).
+    pub fn absorb_registry(&mut self, other: &Registry) {
+        let r = &mut self.registry;
+        r.steps_total += other.steps_total;
+        r.tokens_total += other.tokens_total;
+        r.preemptions_total += other.preemptions_total;
+        r.prefetch_flows_total += other.prefetch_flows_total;
+        r.prefetch_landed_total += other.prefetch_landed_total;
+        r.prefetch_deadline_missed_total += other.prefetch_deadline_missed_total;
+        r.dispatches_total += other.dispatches_total;
+        r.role_flips_total += other.role_flips_total;
+        r.kv_handoffs_total += other.kv_handoffs_total;
+        r.exposed_seconds_total += other.exposed_seconds_total;
+        r.kv_pages += other.kv_pages;
+        r.queue_depth += other.queue_depth;
+        r.active_requests += other.active_requests;
+        r.hbm_watermark = r.hbm_watermark.max(other.hbm_watermark);
+        if other.slo_attainment > 0.0 {
+            r.slo_attainment = other.slo_attainment;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn on(cap: usize, sample_every: usize) -> Recorder {
+        Recorder::new(&TelemetryConfig {
+            enabled: true,
+            ring_capacity: cap,
+            sample_every,
+        })
+    }
+
+    fn flow(step: u32, flow: u32) -> Event {
+        Event::PrefetchEnqueue {
+            step,
+            layer: 0,
+            flow,
+            bytes: 1e6,
+            due_in: 2,
+        }
+    }
+
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        let mut r = Recorder::disabled();
+        r.record(flow(0, 0));
+        assert!(r.is_empty());
+        assert_eq!(r.registry, Registry::default());
+        assert!(!r.is_on());
+    }
+
+    #[test]
+    fn ring_keeps_newest_and_counts_drops() {
+        let mut r = on(4, 1);
+        for i in 0..10 {
+            r.record(flow(i, i));
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.dropped(), 6);
+        let seqs: Vec<u64> = r.events().map(|&(s, _)| s).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9], "oldest-first, newest kept");
+        // counters saw every emission despite eviction
+        assert_eq!(r.registry.prefetch_flows_total, 10);
+    }
+
+    #[test]
+    fn sampling_decimates_statistical_but_not_lifecycle() {
+        let mut r = on(1024, 4);
+        for i in 0..16 {
+            r.record(Event::Predict {
+                step: i,
+                layer: 0,
+                confidence: 0.9,
+                fidelity: 0.8,
+            });
+            r.record(Event::PrefetchDeadlineMiss {
+                step: i,
+                layer: 0,
+                flow: i,
+                exposed: 0.001,
+            });
+        }
+        let predicts = r
+            .events()
+            .filter(|(_, e)| matches!(e, Event::Predict { .. }))
+            .count();
+        let misses = r
+            .events()
+            .filter(|(_, e)| matches!(e, Event::PrefetchDeadlineMiss { .. }))
+            .count();
+        assert_eq!(predicts, 4, "1-in-4 sampling");
+        assert_eq!(misses, 16, "lifecycle events never decimated");
+        assert_eq!(r.registry.prefetch_deadline_missed_total, 16);
+        assert!((r.registry.exposed_seconds_total - 0.016).abs() < 1e-12);
+    }
+
+    #[test]
+    fn event_json_is_structured() {
+        let e = Event::PrefetchDeadlineMiss {
+            step: 3,
+            layer: 7,
+            flow: 42,
+            exposed: 0.25,
+        };
+        let j = e.to_json();
+        assert_eq!(j.get("kind").as_str(), Some("prefetch_deadline_miss"));
+        assert_eq!(j.get("flow").as_f64(), Some(42.0));
+        assert_eq!(j.get("exposed").as_f64(), Some(0.25));
+        assert_eq!(e.step(), 3);
+    }
+
+    #[test]
+    fn registry_absorb_sums_counters() {
+        let mut a = on(8, 1);
+        let mut b = on(8, 1);
+        a.record(flow(0, 0));
+        b.record(flow(0, 1));
+        b.record(Event::Preempt {
+            step: 1,
+            request: 9,
+            kv_pages: 100,
+        });
+        let reg_b = b.registry.clone();
+        a.absorb_registry(&reg_b);
+        assert_eq!(a.registry.prefetch_flows_total, 2);
+        assert_eq!(a.registry.preemptions_total, 1);
+    }
+}

@@ -22,6 +22,26 @@ pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Summary {
     Summary::of(&samples)
 }
 
+/// Run provenance stamped into every `bench_results/*.json` header so a
+/// recorded table can be traced back to the exact configuration that
+/// produced it (ISSUE 8 satellite).
+#[derive(Debug, Clone, Default)]
+pub struct BenchMeta {
+    /// Bench-result JSON schema version (bump on layout changes).
+    pub schema_version: u32,
+    /// FNV-1a content hash of the resolved [`crate::config::Config`],
+    /// hex-encoded.
+    pub config_hash: String,
+    /// Workload/scenario preset the run used (empty when N/A).
+    pub preset: String,
+    /// EP ranks the run simulated.
+    pub ranks: usize,
+    /// Wall date of the run, passed in by the caller (e.g. from the
+    /// `PROBE_BENCH_DATE` env var) — never sampled from ambient time,
+    /// so replays are bit-identical.
+    pub date: String,
+}
+
 /// A named collection of measurement rows printed as an aligned table and
 /// saved as JSON.
 pub struct BenchSet {
@@ -33,6 +53,8 @@ pub struct BenchSet {
     pub rows: Vec<Vec<String>>,
     /// Free-form footnotes printed under the table.
     pub notes: Vec<String>,
+    /// Run provenance serialized as the JSON `meta` header.
+    pub meta: Option<BenchMeta>,
 }
 
 impl BenchSet {
@@ -43,7 +65,13 @@ impl BenchSet {
             columns: columns.iter().map(|s| s.to_string()).collect(),
             rows: Vec::new(),
             notes: Vec::new(),
+            meta: None,
         }
+    }
+
+    /// Attach run provenance (serialized by [`Self::save`]).
+    pub fn set_meta(&mut self, meta: BenchMeta) {
+        self.meta = Some(meta);
     }
 
     /// Append one row (panics on arity mismatch).
@@ -95,15 +123,35 @@ impl BenchSet {
 
     /// Save table as JSON under `bench_results/<name>.json`.
     pub fn save(&self) -> std::io::Result<()> {
-        use super::json::Json;
         std::fs::create_dir_all("bench_results")?;
+        std::fs::write(
+            format!("bench_results/{}.json", self.name),
+            self.to_json().to_string(),
+        )
+    }
+
+    /// The JSON document [`Self::save`] writes.
+    pub fn to_json(&self) -> super::json::Json {
+        use super::json::Json;
         let rows: Vec<Json> = self
             .rows
             .iter()
             .map(|r| Json::Arr(r.iter().map(|c| Json::Str(c.clone())).collect()))
             .collect();
-        let j = Json::obj(vec![
-            ("name", Json::Str(self.name.clone())),
+        let mut fields = vec![("name", Json::Str(self.name.clone()))];
+        if let Some(m) = &self.meta {
+            fields.push((
+                "meta",
+                Json::obj(vec![
+                    ("schema_version", Json::Num(m.schema_version as f64)),
+                    ("config_hash", Json::Str(m.config_hash.clone())),
+                    ("preset", Json::Str(m.preset.clone())),
+                    ("ranks", Json::Num(m.ranks as f64)),
+                    ("date", Json::Str(m.date.clone())),
+                ]),
+            ));
+        }
+        fields.extend([
             (
                 "columns",
                 Json::Arr(self.columns.iter().map(|c| Json::Str(c.clone())).collect()),
@@ -114,7 +162,7 @@ impl BenchSet {
                 Json::Arr(self.notes.iter().map(|n| Json::Str(n.clone())).collect()),
             ),
         ]);
-        std::fs::write(format!("bench_results/{}.json", self.name), j.to_string())
+        Json::obj(fields)
     }
 }
 
@@ -152,6 +200,32 @@ mod tests {
         let s = b.print();
         assert!(s.contains("test_table"));
         assert!(s.contains("hello"));
+    }
+
+    #[test]
+    fn meta_header_serializes() {
+        use crate::util::json::Json;
+        let mut b = BenchSet::new("t", &["a"]);
+        b.row(&["1".into()]);
+        // without meta the header is absent, not null
+        assert!(matches!(b.to_json().get("meta"), Json::Null));
+        b.set_meta(BenchMeta {
+            schema_version: 1,
+            config_hash: "deadbeef".into(),
+            preset: "storm".into(),
+            ranks: 32,
+            date: "2026-08-08".into(),
+        });
+        let parsed = Json::parse(&b.to_json().to_string()).unwrap();
+        let meta = parsed.get("meta");
+        assert_eq!(meta.get("schema_version").as_f64(), Some(1.0));
+        assert_eq!(meta.get("config_hash").as_str(), Some("deadbeef"));
+        assert_eq!(meta.get("preset").as_str(), Some("storm"));
+        assert_eq!(meta.get("ranks").as_f64(), Some(32.0));
+        assert_eq!(meta.get("date").as_str(), Some("2026-08-08"));
+        // rows/columns survive alongside the header
+        assert_eq!(parsed.get("name").as_str(), Some("t"));
+        assert!(!parsed.get("rows").as_arr().unwrap().is_empty());
     }
 
     #[test]

@@ -214,9 +214,162 @@ impl Histogram {
     }
 }
 
+/// Streaming log-bucketed histogram with bounded relative error.
+///
+/// Buckets grow geometrically by [`LogHistogram::GROWTH`] starting at
+/// [`LogHistogram::MIN_VAL`]; a sample is counted in the bucket whose
+/// half-open range `[MIN_VAL·gᵇ, MIN_VAL·gᵇ⁺¹)` contains it, and a
+/// quantile estimate returns the geometric midpoint of the bucket
+/// holding the requested order statistic, clamped to the exact tracked
+/// `[min, max]`. The estimate therefore sits within a factor `√g` of
+/// the true order statistic — a relative error of at most
+/// [`LogHistogram::REL_ERROR`] (≈2% at g = 1.04) — using O(900) u64
+/// counters regardless of sample count. This is the streaming
+/// percentile path `ServingMetrics` uses for TTFT/TPOT at fleet scale;
+/// [`Summary`] remains the exact (sample-retaining) path for tests.
+///
+/// Values below `MIN_VAL` (including zero/negative) land in an
+/// underflow bucket and report as `min`. The bucket array is allocated
+/// lazily on the first push, so an unused histogram costs nothing.
+#[derive(Debug, Clone, Default)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    underflow: u64,
+    n: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl LogHistogram {
+    /// Smallest bucketed value (1 ns on the seconds scale).
+    pub const MIN_VAL: f64 = 1e-9;
+    /// Geometric bucket growth factor.
+    pub const GROWTH: f64 = 1.04;
+    /// Documented relative-error bound of [`LogHistogram::quantile`]
+    /// against the true order statistic: `√GROWTH − 1`.
+    pub const REL_ERROR: f64 = 0.0199;
+    /// Bucket count: covers `MIN_VAL` up to ~10⁶ s at g = 1.04.
+    const BUCKETS: usize = 900;
+
+    /// Empty histogram (no allocation until the first push).
+    pub fn new() -> LogHistogram {
+        LogHistogram::default()
+    }
+
+    #[inline]
+    fn bucket(x: f64) -> usize {
+        // ln(x / MIN_VAL) / ln(GROWTH), clamped into the fixed range
+        let b = (x / Self::MIN_VAL).ln() / Self::GROWTH.ln();
+        (b as usize).min(Self::BUCKETS - 1)
+    }
+
+    /// Count one sample.
+    pub fn push(&mut self, x: f64) {
+        if self.n == 0 {
+            self.min = x;
+            self.max = x;
+        } else {
+            self.min = self.min.min(x);
+            self.max = self.max.max(x);
+        }
+        self.n += 1;
+        self.sum += x;
+        if x < Self::MIN_VAL {
+            self.underflow += 1;
+            return;
+        }
+        if self.counts.is_empty() {
+            self.counts = vec![0; Self::BUCKETS];
+        }
+        self.counts[Self::bucket(x)] += 1;
+    }
+
+    /// Samples counted.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Exact running mean (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    /// Exact smallest sample (0 when empty).
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Exact largest sample (0 when empty).
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Estimate the `q`-quantile (q in `[0, 1]`, nearest-rank on
+    /// `q·(n−1)`): geometric midpoint of the order statistic's bucket,
+    /// clamped to the exact `[min, max]`. Within
+    /// [`LogHistogram::REL_ERROR`] of the true order statistic.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * (self.n - 1) as f64).round() as u64;
+        if rank < self.underflow {
+            return self.min;
+        }
+        let mut cum = self.underflow;
+        for (b, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum > rank {
+                let mid = Self::MIN_VAL * Self::GROWTH.powf(b as f64 + 0.5);
+                return mid.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Fold another histogram's counts into this one.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            self.min = other.min;
+            self.max = other.max;
+        } else {
+            self.min = self.min.min(other.min);
+            self.max = self.max.max(other.max);
+        }
+        self.n += other.n;
+        self.sum += other.sum;
+        self.underflow += other.underflow;
+        if !other.counts.is_empty() {
+            if self.counts.is_empty() {
+                self.counts = vec![0; Self::BUCKETS];
+            }
+            for (a, &b) in self.counts.iter_mut().zip(&other.counts) {
+                *a += b;
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::prop_assert;
 
     #[test]
     fn summary_basics() {
@@ -287,5 +440,120 @@ mod tests {
         assert_eq!(h.underflow, 1);
         assert_eq!(h.overflow, 1);
         assert_eq!(h.total(), 12);
+    }
+
+    #[test]
+    fn log_histogram_empty_and_exact_extrema() {
+        let mut h = LogHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        h.push(0.25);
+        h.push(0.5);
+        h.push(4.0);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.min(), 0.25);
+        assert_eq!(h.max(), 4.0);
+        // quantile(0) / quantile(1) clamp to the exact extrema
+        assert_eq!(h.quantile(0.0), 0.25);
+        assert_eq!(h.quantile(1.0), 4.0);
+        assert!((h.mean() - (0.25 + 0.5 + 4.0) / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn log_histogram_underflow_and_zero() {
+        let mut h = LogHistogram::new();
+        h.push(0.0);
+        h.push(-3.0);
+        h.push(1.0);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.min(), -3.0);
+        // below-range ranks report the exact min
+        assert_eq!(h.quantile(0.0), -3.0);
+        assert_eq!(h.quantile(1.0), 1.0);
+    }
+
+    #[test]
+    fn log_histogram_merge_matches_combined() {
+        let xs: Vec<f64> = (1..200).map(|i| 0.001 * i as f64).collect();
+        let mut all = LogHistogram::new();
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        for (i, &x) in xs.iter().enumerate() {
+            all.push(x);
+            if i % 2 == 0 {
+                a.push(x)
+            } else {
+                b.push(x)
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert_eq!(a.min(), all.min());
+        assert_eq!(a.max(), all.max());
+        for q in [0.1, 0.5, 0.9, 0.99] {
+            assert_eq!(a.quantile(q).to_bits(), all.quantile(q).to_bits());
+        }
+    }
+
+    #[test]
+    fn log_histogram_quantiles_match_summary_random() {
+        // random smooth samples: the streaming estimate must track the
+        // exact Summary percentiles within the documented bound plus a
+        // small interpolation allowance
+        crate::util::proptest::check(60, 0xA11CE, |g| {
+            let n = g.usize_in(256..1024);
+            let lo = g.f64_in(1e-4, 1e-2);
+            let hi = lo * g.f64_in(10.0, 1000.0);
+            let xs = g.vec(n..n + 1, |g| g.f64_in(lo, hi));
+            let mut h = LogHistogram::new();
+            for &x in &xs {
+                h.push(x);
+            }
+            let s = Summary::of(&xs);
+            for (q, exact) in [(0.5, s.p50), (0.9, s.p90), (0.99, s.p99)] {
+                let est = h.quantile(q);
+                let tol = 0.06 * exact + 1e-9;
+                prop_assert!(
+                    (est - exact).abs() <= tol,
+                    "q={q}: est {est} vs exact {exact} (n={n})"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn log_histogram_quantiles_bracket_order_stats_adversarial() {
+        // adversarial inputs (point masses, extreme skew, huge dynamic
+        // range): the estimate must stay within REL_ERROR of the
+        // bracketing order statistics around rank q·(n−1)
+        crate::util::proptest::check(120, 0xBAD5EED, |g| {
+            let n = g.usize_in(2..200);
+            let mut xs: Vec<f64> = if g.bool() {
+                g.skewed_loads(n)
+            } else {
+                // point masses across many decades
+                let m = g.f64_in(1e-8, 1e3);
+                g.vec(n..n + 1, |g| if g.bool() { m } else { m * 1e6 })
+            };
+            let mut h = LogHistogram::new();
+            for &x in &xs {
+                h.push(x);
+            }
+            xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for q in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+                let est = h.quantile(q);
+                let pos = q * (n - 1) as f64;
+                let lo = xs[pos.floor() as usize];
+                let hi = xs[pos.ceil() as usize];
+                let eps = LogHistogram::REL_ERROR + 0.001;
+                prop_assert!(
+                    est >= lo * (1.0 - eps) - 1e-9 && est <= hi * (1.0 + eps) + 1e-9,
+                    "q={q}: est {est} outside [{lo}, {hi}] (n={n})"
+                );
+            }
+            Ok(())
+        });
     }
 }

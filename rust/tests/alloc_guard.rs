@@ -54,3 +54,72 @@ fn steady_state_step_loop_is_allocation_flat() {
          (a hot-path buffer is being reallocated per step)"
     );
 }
+
+#[test]
+fn recorder_paths_are_allocation_flat_in_steady_state() {
+    // ISSUE 8 overhead contract: a disabled recorder adds *zero*
+    // allocations to the step loop (one branch per record call), and an
+    // enabled recorder allocates only at ring construction — events are
+    // fixed-size Copy values, so once warm the telemetry-on loop is as
+    // allocation-flat as the telemetry-off one.
+    use probe::config::TelemetryConfig;
+    use probe::telemetry::Recorder;
+
+    let mut cfg = Config::default();
+    cfg.model.n_layers = 4;
+    let mut bal = Probe::new(&cfg, ProbeConfig::default(), 9);
+    let mut sim = ClusterSim::new(cfg.model.clone(), cfg.cluster.clone());
+    let mut rm = RoutingModel::calibrated(4, cfg.model.n_experts, cfg.model.top_k, 3, 13);
+    let tokens = vec![0u16; 2048];
+
+    let mut run_block = |steps: usize, base: usize, rec: &mut Recorder| {
+        for s in 0..steps {
+            let routing = rm.route_step(&tokens);
+            let ds = decide_step(&mut bal, base + s, &routing);
+            std::hint::black_box(sim.run_step_telemetry(
+                &routing,
+                &ds,
+                None,
+                rec,
+                (base + s) as u32,
+            ));
+        }
+    };
+
+    // telemetry off: warm, then two equal blocks must be flat
+    let mut off = Recorder::disabled();
+    run_block(20, 0, &mut off);
+    let c0 = alloc_count();
+    run_block(100, 20, &mut off);
+    let c1 = alloc_count();
+    run_block(100, 120, &mut off);
+    let c2 = alloc_count();
+    assert!(
+        c2 - c1 <= c1 - c0,
+        "telemetry-off steady state grew: block1 {}, block2 {}",
+        c1 - c0,
+        c2 - c1
+    );
+    assert!(off.is_empty(), "disabled recorder admitted events");
+
+    // telemetry on: the ring preallocates at construction; after warmup
+    // (ring grown to capacity) recording must not allocate per step
+    let mut on = Recorder::new(&TelemetryConfig {
+        enabled: true,
+        ring_capacity: 4096,
+        sample_every: 1,
+    });
+    run_block(20, 220, &mut on);
+    let e0 = alloc_count();
+    run_block(100, 240, &mut on);
+    let e1 = alloc_count();
+    run_block(100, 340, &mut on);
+    let e2 = alloc_count();
+    assert!(
+        e2 - e1 <= e1 - e0,
+        "telemetry-on steady state grew: block1 {}, block2 {}",
+        e1 - e0,
+        e2 - e1
+    );
+    assert!(!on.is_empty(), "enabled recorder recorded nothing");
+}

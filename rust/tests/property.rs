@@ -131,7 +131,11 @@ impl StepExecutor for RecordingExecutor {
     fn begin(&mut self, req: &Request) -> anyhow::Result<usize> {
         Ok(req.max_new_tokens.max(1))
     }
-    fn execute(&mut self, batch: &BatchComposition) -> anyhow::Result<StepReport> {
+    fn execute(
+        &mut self,
+        batch: &BatchComposition,
+        _rec: &mut probe::telemetry::Recorder,
+    ) -> anyhow::Result<StepReport> {
         for c in &batch.prefill {
             self.chunks.push((c.req_id, c.offset, c.tokens, c.is_last));
         }

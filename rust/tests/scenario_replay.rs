@@ -223,6 +223,60 @@ fn disaggregated_run_replays_bit_exactly_from_trace() {
 }
 
 #[test]
+fn telemetry_enabled_replay_records_bit_identically() {
+    // ISSUE 8: the flight recorder is pure observation, and its own
+    // output is deterministic — a replayed trace served with telemetry
+    // on reproduces not just the serving outcome but the recorded
+    // event stream and counters, event for event
+    use probe::telemetry::Event;
+
+    fn serve_recorded(
+        reqs: Vec<Request>,
+    ) -> (
+        f64,
+        usize,
+        Vec<(u64, u16, Option<f64>, Option<f64>, usize)>,
+        Vec<(u64, Event)>,
+        (u64, u64, u64),
+    ) {
+        let mut cfg = small_cfg();
+        cfg.telemetry.enabled = true;
+        let bal = Box::new(StaticEp::new(&cfg));
+        let mut c = Coordinator::new(cfg, bal, 17);
+        c.submit_all(reqs);
+        let steps = c.run_to_completion(100_000).unwrap();
+        let per_req = c
+            .metrics
+            .requests
+            .iter()
+            .map(|m| (m.id, m.tenant, m.first_token, m.finished, m.tokens_out))
+            .collect();
+        let events: Vec<(u64, Event)> = c.recorder.events().copied().collect();
+        let reg = (
+            c.recorder.registry.steps_total,
+            c.recorder.registry.tokens_total,
+            c.recorder.registry.prefetch_flows_total,
+        );
+        (c.clock, steps, per_req, events, reg)
+    }
+
+    let original = scenario_stream(21);
+    let text = trace::to_jsonl(&original);
+    let replayed = trace::from_jsonl(&text).unwrap();
+    assert_eq!(replayed, original);
+
+    let (clock_a, steps_a, metrics_a, events_a, reg_a) = serve_recorded(original);
+    let (clock_b, steps_b, metrics_b, events_b, reg_b) = serve_recorded(replayed);
+    assert_eq!(clock_a.to_bits(), clock_b.to_bits(), "serving clocks diverged");
+    assert_eq!(steps_a, steps_b);
+    assert_eq!(metrics_a, metrics_b, "per-request metrics diverged");
+    // the recorded story itself replays exactly
+    assert!(!events_a.is_empty(), "recorder captured nothing");
+    assert_eq!(events_a, events_b, "recorded event streams diverged");
+    assert_eq!(reg_a, reg_b, "registry counters diverged");
+}
+
+#[test]
 fn replay_preserves_open_loop_arrival_gaps() {
     // a request arriving far into the horizon must not be time-warped
     // to t=0 by the record/replay round trip

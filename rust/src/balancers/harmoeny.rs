@@ -1,0 +1,322 @@
+//! HarMoEny-style token rescheduling (arXiv 2506.12417): equalize
+//! per-GPU load by **re-assigning overflow tokens across ranks** at
+//! dispatch time instead of replicating experts ahead of time.
+//!
+//! Per layer, the balancer starts from the static sharded placement and
+//! its locality-first assignment, then greedily moves tokens of the
+//! hottest expert from the most-loaded rank to the least-loaded one.
+//! Each move is capped at **half the load gap**, so the per-rank load
+//! spread only ever shrinks — on any stream, HarMoEny's spread is
+//! bounded by static EP's (the invariant `tests/capacity_invariants.rs`
+//! pins). Rescheduled tokens ride the existing All-to-All dispatch
+//! paths: there are **no prefetch flows and no lookahead** — when a
+//! destination rank lacks the expert, the fetch happens reactively and
+//! its cost is charged *exposed* on the critical path, like EPLB's
+//! one-shot transfers. A per-layer residency cache models the cyclic
+//! replica buffer: a (expert, rank) pair fetched last step is still in
+//! HBM this step and costs nothing to reuse.
+//!
+//! Information budget (observe-then-emit): rescheduling is a
+//! dispatch-time decision over the executing layer's ground truth —
+//! legal for token assignment, and exactly why every fetch it triggers
+//! is exposed rather than hidden.
+
+use crate::config::Config;
+use crate::model::MoeModel;
+use crate::perfmodel::{transfer_time, Assignment};
+use crate::placement::Placement;
+use crate::routing::LayerRouting;
+use crate::simulator::LayerDecision;
+use crate::topology::HardwareProfile;
+
+use super::Balancer;
+
+/// Load-gap fraction of the mean per-rank load below which the
+/// equalizer stops (matching real schedulers' hysteresis; also keeps
+/// the greedy loop short on already-balanced streams).
+const GAP_TOLERANCE: f64 = 0.05;
+
+/// The HarMoEny token-rescheduling balancer (see module docs).
+#[derive(Debug, Clone)]
+pub struct HarMoEny {
+    model: MoeModel,
+    hw: HardwareProfile,
+    ep: usize,
+    /// Transient replica slots per rank (cyclic buffer budget).
+    max_redundant: usize,
+    /// Replica pairs `(expert, rank)` resident per layer after the last
+    /// step — reuse is free, new pairs are fetched reactively.
+    resident: Vec<Vec<(u16, u16)>>,
+    /// Live per-rank replica-slot caps from the memory governor.
+    replica_caps: Vec<usize>,
+}
+
+impl HarMoEny {
+    /// HarMoEny over the config's model/cluster shape. The transient
+    /// replica budget shares `[probe] max_redundant` — both policies
+    /// price slots as a cyclic double buffer, so the governor grants
+    /// them identical headroom.
+    pub fn new(config: &Config) -> HarMoEny {
+        HarMoEny {
+            model: config.model.clone(),
+            hw: config.cluster.profile.clone(),
+            ep: config.cluster.ep,
+            max_redundant: config.probe.max_redundant,
+            resident: Vec::new(),
+            replica_caps: Vec::new(),
+        }
+    }
+
+    /// Replica slots rank `r` may hold under the governor's live caps.
+    fn slot_cap(&self, r: usize) -> usize {
+        self.replica_caps
+            .get(r)
+            .copied()
+            .unwrap_or(self.max_redundant)
+    }
+
+    fn ensure_layers(&mut self, n: usize) {
+        while self.resident.len() < n {
+            self.resident.push(Vec::new());
+        }
+    }
+}
+
+/// Index of the largest value; ties pick the smallest index.
+fn argmax(v: &[f64]) -> usize {
+    v.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap().then(b.0.cmp(&a.0)))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+/// Index of the smallest value; ties pick the smallest index.
+fn argmin(v: &[f64]) -> usize {
+    v.iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap().then(a.0.cmp(&b.0)))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+impl Balancer for HarMoEny {
+    fn name(&self) -> &'static str {
+        "harmoeny"
+    }
+
+    fn set_replica_caps(&mut self, caps: &[usize]) {
+        self.replica_caps = caps.to_vec();
+    }
+
+    fn replica_policy(&self) -> crate::placement::memory::ReplicaPolicy {
+        crate::placement::memory::ReplicaPolicy::CyclicBuffer {
+            max_redundant: self.max_redundant,
+        }
+    }
+
+    fn begin_step(&mut self, _step_idx: usize, n_layers: usize) {
+        self.ensure_layers(n_layers);
+    }
+
+    fn observe(&mut self, _layer: usize, _actual: &LayerRouting) {
+        // purely reactive: no history, no prediction
+    }
+
+    fn decide(&mut self, layer: usize, actual: &LayerRouting) -> LayerDecision {
+        self.ensure_layers(layer + 1);
+        let n_experts = self.model.n_experts;
+        let counts = actual.expert_counts_by_source_f64(self.ep);
+        let mut placement = Placement::sharded(self.ep, n_experts, self.max_redundant);
+        let mut assignment = Assignment::locality_first_from_counts(&counts, &placement);
+
+        // per-rank load under the locality-first start (== static EP)
+        let mut loads = vec![0.0f64; self.ep];
+        for e in 0..n_experts {
+            loads[placement.home_rank(e)] += assignment.expert_total(e);
+        }
+        let mean = loads.iter().sum::<f64>() / self.ep.max(1) as f64;
+        let tol = (mean * GAP_TOLERANCE).max(1.0);
+
+        // greedy equalization: move ≤ half the hot/cold gap per round,
+        // so the spread is monotonically non-increasing
+        let mut fetched: Vec<(u16, u16)> = Vec::new();
+        for _ in 0..4 * self.ep {
+            let hot = argmax(&loads);
+            let cold = argmin(&loads);
+            let gap = loads[hot] - loads[cold];
+            if gap <= tol {
+                break;
+            }
+            // hottest expert actually executing on the hot rank
+            let Some((e, avail)) = (0..n_experts)
+                .filter(|&e| placement.hosts(e, hot))
+                .map(|e| (e, assignment.tokens_on(e, hot)))
+                .filter(|&(_, x)| x > 0.0)
+                .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(b.0.cmp(&a.0)))
+            else {
+                break;
+            };
+            let want = (gap / 2.0).min(avail);
+            if want <= 0.0 {
+                break;
+            }
+            if !placement.hosts(e, cold) {
+                // the cold rank must host the expert before tokens can
+                // be rescheduled onto it
+                if placement.slots_free(cold) == 0
+                    || placement.slots_used(cold) >= self.slot_cap(cold)
+                    || placement.add_replica(e, cold).is_err()
+                {
+                    break;
+                }
+                fetched.push((e as u16, cold as u16));
+            }
+            // shift flows source-by-source in deterministic order; the
+            // rescheduled tokens ride the regular All-to-All to `cold`
+            let mut left = want;
+            for rs in 0..self.ep {
+                if left <= 0.0 {
+                    break;
+                }
+                left -= assignment.shift(e, rs, hot, cold, left);
+            }
+            let moved = want - left;
+            if moved <= 0.0 {
+                break;
+            }
+            loads[hot] -= moved;
+            loads[cold] += moved;
+        }
+
+        // reactive fetch charge: only pairs not resident from last step
+        // cost a transfer (the cyclic buffer keeps last step's replicas
+        // warm); the worst rank's fetch count is exposed, EPLB-style
+        let mut new_per_rank = vec![0usize; self.ep];
+        for p in &fetched {
+            if !self.resident[layer].contains(p) {
+                new_per_rank[p.1 as usize] += 1;
+            }
+        }
+        let max_new = new_per_rank.iter().max().copied().unwrap_or(0);
+        let exposed = if max_new > 0 {
+            transfer_time(max_new, &self.model, &self.hw)
+        } else {
+            0.0
+        };
+        self.resident[layer] = fetched;
+
+        LayerDecision {
+            placement,
+            assignment,
+            prefetch_slots: vec![0; self.ep],
+            prefetch_flows: Vec::new(),
+            prefetch_lookahead: 0,
+            predict_time: 0.0,
+            plan_time: 0.0,
+            exposed_transfer: exposed,
+            pre_dispatch_fraction: 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::balancers::{decide_step, StaticEp};
+    use crate::routing::RoutingModel;
+
+    fn skewed(seed: u64) -> RoutingModel {
+        let cfg = Config::default();
+        RoutingModel::calibrated(3, cfg.model.n_experts, cfg.model.top_k, 2, seed)
+    }
+
+    fn rank_spread(d: &LayerDecision, ep: usize, n_experts: usize) -> f64 {
+        let mut loads = vec![0.0f64; ep];
+        for e in 0..n_experts {
+            for r in 0..ep {
+                loads[r] += d.assignment.tokens_on(e, r);
+            }
+        }
+        let max = loads.iter().cloned().fold(f64::MIN, f64::max);
+        let min = loads.iter().cloned().fold(f64::MAX, f64::min);
+        max - min
+    }
+
+    #[test]
+    fn spread_never_worse_than_static() {
+        let cfg = Config::default();
+        let mut h = HarMoEny::new(&cfg);
+        let mut s = StaticEp::new(&cfg);
+        let mut rm_h = skewed(31);
+        let mut rm_s = skewed(31);
+        let mut ever_tighter = false;
+        for step in 0..4 {
+            let routing_h = rm_h.route_step(&vec![0u16; 2048]);
+            let routing_s = rm_s.route_step(&vec![0u16; 2048]);
+            let dh = decide_step(&mut h, step, &routing_h);
+            let ds = decide_step(&mut s, step, &routing_s);
+            for (a, b) in dh.iter().zip(&ds) {
+                let sp_h = rank_spread(a, cfg.cluster.ep, cfg.model.n_experts);
+                let sp_s = rank_spread(b, cfg.cluster.ep, cfg.model.n_experts);
+                assert!(
+                    sp_h <= sp_s + 1e-9,
+                    "harmoeny spread {sp_h} worse than static {sp_s}"
+                );
+                if sp_h < sp_s - 1e-9 {
+                    ever_tighter = true;
+                }
+            }
+            rm_h.step_drift();
+            rm_s.step_drift();
+        }
+        assert!(ever_tighter, "rescheduling never moved a token on a skewed stream");
+    }
+
+    #[test]
+    fn no_prefetch_flows_and_no_lookahead() {
+        let cfg = Config::default();
+        let mut h = HarMoEny::new(&cfg);
+        assert_eq!(h.lookahead(), 0);
+        let mut rm = skewed(33);
+        let routing = rm.route_step(&vec![0u16; 1024]);
+        for d in decide_step(&mut h, 0, &routing) {
+            assert!(d.prefetch_flows.is_empty());
+            assert!(d.prefetch_slots.iter().all(|&s| s == 0));
+            assert_eq!(d.prefetch_lookahead, 0);
+            d.placement.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn repeat_step_reuses_resident_replicas() {
+        let cfg = Config::default();
+        let mut h = HarMoEny::new(&cfg);
+        let mut rm = skewed(35);
+        let routing = rm.route_step(&vec![0u16; 2048]);
+        let first = decide_step(&mut h, 0, &routing);
+        let exposed0: f64 = first.iter().map(|d| d.exposed_transfer).sum();
+        assert!(exposed0 > 0.0, "reactive fetches must be charged exposed");
+        // identical routing again: every replica pair is already warm
+        let second = decide_step(&mut h, 1, &routing);
+        let exposed1: f64 = second.iter().map(|d| d.exposed_transfer).sum();
+        assert_eq!(exposed1, 0.0, "warm replicas must not be re-fetched");
+    }
+
+    #[test]
+    fn governor_caps_bound_rescheduling() {
+        let cfg = Config::default();
+        let mut h = HarMoEny::new(&cfg);
+        h.set_replica_caps(&vec![0; cfg.cluster.ep]);
+        let mut rm = skewed(37);
+        let routing = rm.route_step(&vec![0u16; 2048]);
+        for d in decide_step(&mut h, 0, &routing) {
+            assert_eq!(
+                d.placement.total_replicas(),
+                0,
+                "zero caps must forbid transient replicas"
+            );
+            assert_eq!(d.exposed_transfer, 0.0);
+        }
+    }
+}

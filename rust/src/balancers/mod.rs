@@ -3,6 +3,9 @@
 //! * [`StaticEp`] — SGLang-style static sharded EP (no replication).
 //! * [`Eplb`] — DeepSeek-EPLB: historical-statistics one-shot
 //!   rebalancing with reactive (exposed) transfers.
+//! * [`HarMoEny`] — token rescheduling: overflow tokens of hot ranks
+//!   are re-assigned across ranks at dispatch time (reactive fetches
+//!   exposed, no prefetch flows).
 //! * [`Probe`] — continuous lookahead pipelining: predict → delta-plan →
 //!   queued prefetch, emitted `lookahead_depth` layers ahead.
 //!
@@ -16,6 +19,9 @@
 //! earlier. Information budget per policy:
 //!
 //! * **static** — nothing: fixed sharding, dispatch follows the router.
+//! * **harmoeny** — *dispatch-time truth only*: token rescheduling is a
+//!   data-plane re-assignment over the executing layer's router output;
+//!   every expert fetch it triggers is charged exposed.
 //! * **eplb** — *history only*: placements derive from the decayed
 //!   activation statistics of PREVIOUS steps (rebalance at step
 //!   boundaries); the current layer's truth is used solely for
@@ -30,10 +36,12 @@
 //!   the causal [`crate::predictor::TransitionPredictor`] ignores it.
 
 mod eplb;
+mod harmoeny;
 mod probe;
 mod static_ep;
 
 pub use eplb::Eplb;
+pub use harmoeny::HarMoEny;
 pub use probe::Probe;
 pub use static_ep::StaticEp;
 
@@ -168,11 +176,13 @@ mod tests {
         let cfg = Config::default();
         let mut s = StaticEp::new(&cfg);
         let mut e = Eplb::new(&cfg, EplbConfig::default());
+        let mut h = HarMoEny::new(&cfg);
         let mut p = Probe::new(&cfg, ProbeConfig::default(), 42);
         let ts = run_one(&mut s, 3);
         let te = run_one(&mut e, 3);
+        let th = run_one(&mut h, 3);
         let tp = run_one(&mut p, 3);
-        assert!(ts > 0.0 && te > 0.0 && tp > 0.0);
+        assert!(ts > 0.0 && te > 0.0 && th > 0.0 && tp > 0.0);
         // PROBE must beat static EP on skewed single-domain traffic
         assert!(tp < ts, "probe {tp} not faster than static {ts}");
     }
@@ -182,6 +192,7 @@ mod tests {
         let cfg = Config::default();
         assert_eq!(StaticEp::new(&cfg).name(), "static-ep");
         assert_eq!(Eplb::new(&cfg, EplbConfig::default()).name(), "eplb");
+        assert_eq!(HarMoEny::new(&cfg).name(), "harmoeny");
         assert_eq!(Probe::new(&cfg, ProbeConfig::default(), 0).name(), "probe");
     }
 
@@ -190,6 +201,7 @@ mod tests {
         let cfg = Config::default();
         assert_eq!(StaticEp::new(&cfg).lookahead(), 0);
         assert_eq!(Eplb::new(&cfg, EplbConfig::default()).lookahead(), 0);
+        assert_eq!(HarMoEny::new(&cfg).lookahead(), 0);
         let mut pc = ProbeConfig::default();
         pc.lookahead_depth = 3;
         assert_eq!(Probe::new(&cfg, pc, 0).lookahead(), 3);

@@ -20,15 +20,28 @@ pub enum BalancerKind {
     Eplb,
     /// PROBE: continuous lookahead pipelining.
     Probe,
+    /// HarMoEny-style token rescheduling: equalize per-GPU load by
+    /// re-assigning overflow tokens across ranks (on-demand transient
+    /// replicas, no prefetch flows — traffic rides the All-to-All).
+    HarMoEny,
 }
 
 impl BalancerKind {
+    /// Every balancer, in canonical bench order.
+    pub const ALL: [BalancerKind; 4] = [
+        BalancerKind::StaticEp,
+        BalancerKind::Eplb,
+        BalancerKind::Probe,
+        BalancerKind::HarMoEny,
+    ];
+
     /// Resolve a balancer from its CLI/TOML name.
     pub fn by_name(s: &str) -> Option<BalancerKind> {
         match s {
             "static" | "sglang" => Some(BalancerKind::StaticEp),
             "eplb" => Some(BalancerKind::Eplb),
             "probe" => Some(BalancerKind::Probe),
+            "harmoeny" => Some(BalancerKind::HarMoEny),
             _ => None,
         }
     }
@@ -38,6 +51,7 @@ impl BalancerKind {
             BalancerKind::StaticEp => "static",
             BalancerKind::Eplb => "eplb",
             BalancerKind::Probe => "probe",
+            BalancerKind::HarMoEny => "harmoeny",
         }
     }
 }
@@ -293,6 +307,75 @@ impl Default for TelemetryConfig {
     }
 }
 
+/// What happens to a token slot routed past an expert's capacity cap
+/// (`[capacity] policy`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CapacityPolicy {
+    /// Drop the overflow slot (classic capacity-factor training/serving
+    /// semantics: the token loses that expert's contribution).
+    Drop,
+    /// Reroute the slot to the next-ranked expert with headroom (falls
+    /// back to drop when every expert is saturated).
+    Reroute,
+    /// Queue the slot: it is carried over and admitted at the same layer
+    /// of the NEXT step, ahead of that step's fresh traffic.
+    Queue,
+}
+
+impl CapacityPolicy {
+    /// Resolve a policy from its CLI/TOML name.
+    pub fn by_name(s: &str) -> Option<CapacityPolicy> {
+        match s {
+            "drop" => Some(CapacityPolicy::Drop),
+            "reroute" => Some(CapacityPolicy::Reroute),
+            "queue" => Some(CapacityPolicy::Queue),
+            _ => None,
+        }
+    }
+    /// Canonical name used by the CLI, TOML config, and reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            CapacityPolicy::Drop => "drop",
+            CapacityPolicy::Reroute => "reroute",
+            CapacityPolicy::Queue => "queue",
+        }
+    }
+}
+
+/// Per-expert capacity limits (`[capacity]` TOML table): every layer
+/// caps each expert at `ceil(factor * top_k * tokens / n_experts)` token
+/// slots (SNIPPETS §2); slots beyond the cap follow `policy`. The
+/// enforcement runs between the router and the balancer, so every
+/// balancer sees only admitted traffic.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CapacityConfig {
+    /// Capacity factor C. `0` (the default) disables enforcement
+    /// entirely — the step model is bit-identical to the pre-capacity
+    /// path. `inf` enables the enforcement machinery with an unbounded
+    /// cap (useful for equivalence tests). Typical serving values:
+    /// 1.0–2.0.
+    pub factor: f64,
+    /// Overflow policy for slots routed past the cap.
+    pub policy: CapacityPolicy,
+}
+
+impl Default for CapacityConfig {
+    fn default() -> CapacityConfig {
+        CapacityConfig {
+            factor: 0.0,
+            policy: CapacityPolicy::Drop,
+        }
+    }
+}
+
+impl CapacityConfig {
+    /// Whether enforcement runs at all (`factor > 0`; an infinite
+    /// factor still runs the machinery with an unbounded cap).
+    pub fn enabled(&self) -> bool {
+        self.factor > 0.0
+    }
+}
+
 /// Disaggregated prefill/decode serving knobs (`[disagg]` TOML table,
 /// ISSUE 7): role assignment, dynamic re-balancing, and decode-pool
 /// admission control for [`crate::server::disagg::run_disagg`] and
@@ -366,6 +449,8 @@ pub struct Config {
     pub disagg: DisaggConfig,
     /// Flight-recorder telemetry knobs (`[telemetry]` table).
     pub telemetry: TelemetryConfig,
+    /// Per-expert capacity limits (`[capacity]` table).
+    pub capacity: CapacityConfig,
     /// Decode tokens per rank per step.
     pub batch_per_rank: usize,
     /// Chunked-prefill tokens per rank.
@@ -393,6 +478,7 @@ impl Default for Config {
             perf: PerfConfig::default(),
             disagg: DisaggConfig::default(),
             telemetry: TelemetryConfig::default(),
+            capacity: CapacityConfig::default(),
             batch_per_rank: 768,
             prefill_chunk_per_rank: 8192,
             mean_ctx: 64,
@@ -655,6 +741,22 @@ impl Config {
                         return Err("disagg.background_utilization must be in [0, 1)".into());
                     }
                     cfg.disagg.background_utilization = u;
+                }
+                "capacity.factor" => {
+                    let f = value.as_float().ok_or("capacity.factor: float")?;
+                    // 0 = off, inf = enabled-unbounded; NaN and negatives
+                    // would corrupt the per-layer cap arithmetic
+                    if f.is_nan() || f < 0.0 {
+                        return Err("capacity.factor must be >= 0 (0 = off, inf allowed)".into());
+                    }
+                    cfg.capacity.factor = f;
+                }
+                "capacity.policy" => {
+                    cfg.capacity.policy =
+                        CapacityPolicy::by_name(value.as_str().ok_or("capacity.policy: string")?)
+                            .ok_or_else(|| {
+                                format!("unknown capacity policy {value:?} (drop|reroute|queue)")
+                            })?;
                 }
                 "telemetry.enabled" => {
                     cfg.telemetry.enabled = value.as_bool().ok_or("telemetry.enabled: bool")?
@@ -1002,8 +1104,42 @@ sample_every = 8
     #[test]
     fn balancer_names() {
         assert_eq!(BalancerKind::by_name("sglang"), Some(BalancerKind::StaticEp));
-        for k in [BalancerKind::StaticEp, BalancerKind::Eplb, BalancerKind::Probe] {
+        assert_eq!(BalancerKind::ALL.len(), 4);
+        for k in BalancerKind::ALL {
             assert_eq!(BalancerKind::by_name(k.name()), Some(k));
+        }
+        assert_eq!(BalancerKind::by_name("harmoeny"), Some(BalancerKind::HarMoEny));
+    }
+
+    #[test]
+    fn parse_capacity_table() {
+        let text = r#"
+[capacity]
+factor = 1.25
+policy = "reroute"
+"#;
+        let c = Config::from_toml_str(text).unwrap();
+        assert!((c.capacity.factor - 1.25).abs() < 1e-12);
+        assert_eq!(c.capacity.policy, CapacityPolicy::Reroute);
+        assert!(c.capacity.enabled());
+        // defaults: enforcement off, drop policy
+        let d = Config::from_toml_str("").unwrap();
+        assert_eq!(d.capacity, CapacityConfig::default());
+        assert!(!d.capacity.enabled());
+        assert_eq!(d.capacity.policy, CapacityPolicy::Drop);
+        // inf = enabled with an unbounded cap (equivalence runs)
+        let inf = Config::from_toml_str("[capacity]\nfactor = inf\n").unwrap();
+        assert!(inf.capacity.factor.is_infinite());
+        assert!(inf.capacity.enabled());
+        // integer factors coerce like other float keys
+        let two = Config::from_toml_str("[capacity]\nfactor = 2\n").unwrap();
+        assert!((two.capacity.factor - 2.0).abs() < 1e-12);
+        // validation: negative/NaN factors and unknown policies fail
+        assert!(Config::from_toml_str("[capacity]\nfactor = -1.0\n").is_err());
+        assert!(Config::from_toml_str("[capacity]\nfactor = nan\n").is_err());
+        assert!(Config::from_toml_str("[capacity]\npolicy = \"explode\"\n").is_err());
+        for p in [CapacityPolicy::Drop, CapacityPolicy::Reroute, CapacityPolicy::Queue] {
+            assert_eq!(CapacityPolicy::by_name(p.name()), Some(p));
         }
     }
 }

@@ -67,6 +67,23 @@ pub struct StepReport {
     /// (the simulator reports one per step, the real runtime one per
     /// layer).
     pub ir_samples: Vec<f64>,
+    /// Routing slots offered to the capacity enforcer this step
+    /// (fresh tokens × top-k × layers). 0 whenever `[capacity]` is off —
+    /// the engine uses that as the signal that no enforcement ran.
+    pub cap_offered: u64,
+    /// Slots discarded under the `drop` policy (including reroute
+    /// fallbacks with no under-cap alternative).
+    pub cap_dropped: u64,
+    /// Slots re-assigned to their next-ranked under-cap expert.
+    pub cap_rerouted: u64,
+    /// Slots deferred to the same layer of the next step (fresh queues
+    /// plus re-queued backlog).
+    pub cap_queued: u64,
+    /// Dropped routing slots per batch token, summed over layers, in
+    /// the batch's token order (decode slots then prefill chunks —
+    /// [`BatchComposition::domains`] order). Empty when `[capacity]` is
+    /// off.
+    pub dropped_per_token: Vec<u32>,
 }
 
 /// A finished prefill ready for KV-cache handoff to a decode replica
@@ -775,6 +792,44 @@ impl<E: StepExecutor> ServingEngine<E> {
             self.recorder.registry.active_requests = self.active.len() as f64;
         }
         let rep = self.executor.execute(&batch, &mut self.recorder)?;
+        if rep.cap_offered > 0 && batch.total_tokens() > 0 {
+            // Attribute capacity losses to tenants. The enforcer's
+            // per-token drop counts follow the batch's token order
+            // (decode slots then prefill chunks); every fresh token
+            // offers the same slot count (top-k × layers), so the
+            // per-token offered share divides exactly.
+            let tenant_of: HashMap<u64, u16> = self
+                .active
+                .iter()
+                .map(|e| (e.req.id, e.req.tenant))
+                .collect();
+            let per_tok = rep.cap_offered / batch.total_tokens() as u64;
+            let dropped_in = |range: std::ops::Range<usize>| -> u64 {
+                rep.dropped_per_token
+                    .get(range)
+                    .map(|s| s.iter().map(|&d| d as u64).sum())
+                    .unwrap_or(0)
+            };
+            let mut cursor = 0usize;
+            let mut acc: HashMap<u16, (u64, u64)> = HashMap::new();
+            for d in &batch.decode {
+                let t = tenant_of.get(&d.req_id).copied().unwrap_or(0);
+                let a = acc.entry(t).or_insert((0, 0));
+                a.0 += per_tok;
+                a.1 += dropped_in(cursor..cursor + 1);
+                cursor += 1;
+            }
+            for c in &batch.prefill {
+                let t = tenant_of.get(&c.req_id).copied().unwrap_or(0);
+                let a = acc.entry(t).or_insert((0, 0));
+                a.0 += per_tok * c.tokens as u64;
+                a.1 += dropped_in(cursor..cursor + c.tokens);
+                cursor += c.tokens;
+            }
+            for (t, (offered, dropped)) in acc {
+                self.metrics.record_capacity(t, offered, dropped);
+            }
+        }
         self.clock += rep.latency;
         for &ir in &rep.ir_samples {
             self.ir.push_ir(ir);
@@ -888,6 +943,7 @@ mod tests {
                 latency,
                 tokens: batch.total_tokens(),
                 ir_samples: vec![if batch.decode.is_empty() { 1.0 } else { 1.5 }],
+                ..Default::default()
             })
         }
         fn retire(&mut self, req: &Request) {

@@ -15,10 +15,10 @@ use anyhow::{anyhow, Result};
 use crate::balancers::{decide_step, Balancer};
 use crate::config::Config;
 use crate::placement::memory::MemoryManager;
-use crate::routing::RoutingModel;
+use crate::routing::{CapacityEnforcer, RoutingModel};
 use crate::simulator::{ClusterSim, StepOutcome};
 use crate::telemetry::export::TimelineLog;
-use crate::telemetry::Recorder;
+use crate::telemetry::{Event, Recorder};
 use crate::workload::{Dataset, Request};
 
 use super::{BatchComposition, ServingEngine, StepExecutor, StepReport};
@@ -39,6 +39,10 @@ pub struct SimExecutor {
     /// (test/bench observability of the plan-time bound).
     pub last_replica_caps: Vec<usize>,
     balancer: Box<dyn Balancer>,
+    /// Per-expert capacity enforcer (`[capacity]`, ISSUE 9): rewrites
+    /// each step's ground-truth routing into the admitted routing the
+    /// balancer and simulator consume. Inert when `factor = 0`.
+    enforcer: CapacityEnforcer,
     step_idx: usize,
     /// Full simulator outcome of the most recent step (the generic
     /// [`StepReport`] keeps only the latency/IR aggregates).
@@ -109,6 +113,7 @@ impl SimExecutor {
         );
         let ep = cfg.cluster.ep;
         let capture = cfg.telemetry.enabled;
+        let enforcer = CapacityEnforcer::new(&cfg.capacity, cfg.model.n_layers, ep);
         SimExecutor {
             cfg,
             sim,
@@ -116,6 +121,7 @@ impl SimExecutor {
             memory,
             last_replica_caps: vec![max_slots; ep],
             balancer,
+            enforcer,
             step_idx: 0,
             last_outcome: None,
             capture,
@@ -169,19 +175,65 @@ impl StepExecutor for SimExecutor {
             return Err(anyhow!("executed an empty batch"));
         }
         let routing = self.routing_model.route_step(&domains);
+        // capacity enforcement sits between the router and the control
+        // plane: balancer and simulator both consume the ADMITTED
+        // routing, so drops/reroutes/queues shape every downstream
+        // decision identically (ISSUE 9). With `factor = 0` the
+        // enforcer never runs and this step is bit-identical to the
+        // pre-capacity model.
+        let step = self.step_idx as u32;
+        let cap_view = if self.enforcer.enabled() {
+            Some(self.enforcer.enforce_step(&routing))
+        } else {
+            None
+        };
+        let routing = match &cap_view {
+            Some(v) => &v.routing,
+            None => &routing,
+        };
+        if let Some(v) = &cap_view {
+            if rec.is_on() {
+                for (l, s) in v.layer_stats.iter().enumerate() {
+                    let layer = l as u16;
+                    if s.dropped > 0 {
+                        rec.record(Event::TokenDrop { step, layer, count: s.dropped });
+                    }
+                    if s.rerouted > 0 {
+                        rec.record(Event::TokenReroute { step, layer, count: s.rerouted });
+                    }
+                    let queued = s.queued + s.requeued;
+                    if queued > 0 {
+                        rec.record(Event::TokenQueue { step, layer, count: queued });
+                    }
+                }
+            }
+        }
         // publish the live replica headroom and the next step's scale
         // before the control plane plans this step's fetches
         let caps = self.memory.replica_caps();
         self.balancer.set_replica_caps(&caps);
         self.last_replica_caps = caps;
         self.balancer.set_next_step_tokens(batch.next_tokens_hint.max(1));
-        let step = self.step_idx as u32;
-        let decisions = decide_step(self.balancer.as_mut(), self.step_idx, &routing);
+        let mut decisions = decide_step(self.balancer.as_mut(), self.step_idx, routing);
         self.balancer.drain_events(rec);
+        if let Some(v) = &cap_view {
+            // backlog slots admitted this step were vacated from a
+            // PREVIOUS step's routing, so the balancer never saw them:
+            // charge their expert compute on the hosting rank directly.
+            // Their dispatch bytes are omitted — queued slots ride the
+            // next step's All-to-All for free (documented simplification;
+            // see DESIGN.md).
+            for (l, carried) in v.carried.iter().enumerate() {
+                for &(e, rs) in carried {
+                    let home = decisions[l].placement.home_rank(e as usize);
+                    decisions[l].assignment.add(e as usize, rs as usize, home, 1.0);
+                }
+            }
+        }
         let profile = batch.context_profile();
         let outcome =
             self.sim
-                .run_step_telemetry(&routing, &decisions, Some(&profile), rec, step);
+                .run_step_telemetry(routing, &decisions, Some(&profile), rec, step);
         if self.capture {
             for tl in &outcome.timelines {
                 self.timeline_log.push(step, tl.clone());
@@ -193,12 +245,21 @@ impl StepExecutor for SimExecutor {
             // the mixed-step refactor (pure-prefill steps do not drift)
             self.routing_model.step_drift();
         }
-        let rep = StepReport {
+        let mut rep = StepReport {
             latency: outcome.latency,
             tokens: outcome.tokens,
             // rank token-load IR of the first layer (one sample per step)
             ir_samples: outcome.ir_per_layer.first().copied().into_iter().collect(),
+            ..Default::default()
         };
+        if let Some(v) = cap_view {
+            let t = v.totals();
+            rep.cap_offered = t.offered;
+            rep.cap_dropped = t.dropped;
+            rep.cap_rerouted = t.rerouted;
+            rep.cap_queued = t.queued;
+            rep.dropped_per_token = v.dropped_per_token;
+        }
         self.last_outcome = Some(outcome);
         Ok(rep)
     }
@@ -268,7 +329,7 @@ impl ServingEngine<SimExecutor> {
 mod tests {
     use super::*;
     use crate::balancers::{Probe, StaticEp};
-    use crate::config::ProbeConfig;
+    use crate::config::{CapacityPolicy, ProbeConfig};
     use crate::engine::ServingEngine;
     use crate::workload::{Dataset, RequestGenerator, WorkloadSpec};
 
@@ -404,6 +465,50 @@ mod tests {
         // the long prompt's TTFT covers its chunked prefill; the short
         // request's first token lands earlier in the shared stream
         assert!(m_long.ttft().unwrap() > m_short.ttft().unwrap());
+    }
+
+    #[test]
+    fn capacity_drop_surfaces_tenant_drop_rate() {
+        let mut cfg = small_cfg();
+        cfg.capacity.factor = 1.0;
+        cfg.capacity.policy = CapacityPolicy::Drop;
+        let bal = Box::new(StaticEp::new(&cfg));
+        let mut c = Coordinator::new(cfg, bal, 21);
+        let mut g = gen(Dataset::Repeat, 22); // skewed: the cap must bind
+        for r in g.take(64) {
+            c.submit(r);
+        }
+        let rep = c.step().unwrap().expect("one step");
+        assert!(rep.cap_offered > 0, "enforcement never ran");
+        assert_eq!(
+            rep.dropped_per_token.iter().map(|&d| u64::from(d)).sum::<u64>(),
+            rep.cap_dropped
+        );
+        c.run_decode_steps(16);
+        let rate = c.metrics.drop_rate();
+        assert!(rate > 0.0, "factor 1.0 never dropped on a skewed stream");
+        // single-tenant workload: the tenant rate IS the global rate
+        assert!((c.metrics.drop_rate_for_tenant(0) - rate).abs() < 1e-12);
+    }
+
+    #[test]
+    fn capacity_off_and_infinite_agree_bit_exactly() {
+        let run = |factor: f64| -> (u64, f64) {
+            let mut cfg = small_cfg();
+            cfg.capacity.factor = factor;
+            let bal = Box::new(StaticEp::new(&cfg));
+            let mut c = Coordinator::new(cfg, bal, 23);
+            let mut g = gen(Dataset::Mixed, 24);
+            for r in g.take(32) {
+                c.submit(r);
+            }
+            c.run_decode_steps(12);
+            (c.clock.to_bits(), c.metrics.throughput())
+        };
+        let (off_bits, off_thr) = run(0.0);
+        let (inf_bits, inf_thr) = run(f64::INFINITY);
+        assert_eq!(off_bits, inf_bits, "factor = inf must not perturb the model");
+        assert_eq!(off_thr.to_bits(), inf_thr.to_bits());
     }
 
     #[test]

@@ -1,0 +1,267 @@
+//! `probe bench capacity` — latency-vs-drop Pareto sweep (ISSUE 9).
+//!
+//! Sweeps the per-expert capacity factor over each workload preset and
+//! all four balancing systems {static, EPLB, HarMoEny, PROBE}, recording
+//! the trade each cell buys: a tighter cap sheds more routing slots
+//! (higher drop/reroute/queue rate) but flattens the hottest expert and
+//! so the step critical path. Emits `bench_results/BENCH_capacity.json`
+//! with one row per (preset × balancer × policy × factor) cell; the
+//! `factor = inf` rows anchor the no-enforcement end of every Pareto
+//! frontier (identical routing, zero shed traffic).
+
+use crate::config::{BalancerKind, CapacityPolicy, Config};
+use crate::coordinator::Coordinator;
+use crate::util::bench::BenchSet;
+use crate::util::stats::mean;
+use crate::workload::{Dataset, RequestGenerator, WorkloadSpec};
+
+use super::{layer_scale, make_balancer, sim_config, SIM_LAYERS};
+
+/// Capacity-sweep parameters.
+pub struct CapacityParams {
+    /// Capacity factors to sweep (use `f64::INFINITY` for the
+    /// enforcement-on/unbounded anchor point).
+    pub factors: Vec<f64>,
+    /// Overflow policies to sweep.
+    pub policies: Vec<CapacityPolicy>,
+    /// Workload presets: `(label, dataset)`; `repeat` is the skewed
+    /// stream where caps actually bind.
+    pub presets: Vec<(String, Dataset)>,
+    /// Balancing systems to run per cell.
+    pub balancers: Vec<BalancerKind>,
+    /// Serving steps per cell.
+    pub steps: usize,
+    /// Decode tokens per rank.
+    pub batch_per_rank: usize,
+    /// Sweep seed.
+    pub seed: u64,
+}
+
+impl Default for CapacityParams {
+    fn default() -> Self {
+        CapacityParams {
+            factors: vec![1.0, 1.25, 1.5, 2.0, f64::INFINITY],
+            policies: vec![
+                CapacityPolicy::Drop,
+                CapacityPolicy::Reroute,
+                CapacityPolicy::Queue,
+            ],
+            presets: vec![
+                ("repeat".into(), Dataset::Repeat),
+                ("mixed".into(), Dataset::Mixed),
+            ],
+            balancers: BalancerKind::ALL.to_vec(),
+            steps: 24,
+            batch_per_rank: 768,
+            seed: 61,
+        }
+    }
+}
+
+/// Aggregates of one sweep cell.
+pub struct CapacityCell {
+    /// Mean step latency (seconds, SIM_LAYERS scale).
+    pub step_latency: f64,
+    /// Decode throughput over the cell (tok/s).
+    pub tok_s: f64,
+    /// Shed fractions of offered routing slots.
+    pub drop_rate: f64,
+    /// Fraction rerouted to the next-ranked under-cap expert.
+    pub reroute_rate: f64,
+    /// Fraction deferred to the next step.
+    pub queue_rate: f64,
+    /// Offered routing slots (0 ⇔ enforcement never ran).
+    pub offered: u64,
+}
+
+/// Run one sweep cell: `steps` serving steps of the preset's stream
+/// under (`kind`, `policy`, `factor`), identical stream across cells.
+pub fn run_cell(
+    p: &CapacityParams,
+    dataset: Dataset,
+    kind: BalancerKind,
+    policy: CapacityPolicy,
+    factor: f64,
+) -> CapacityCell {
+    let mut cfg = sim_config("gpt-oss-120b");
+    cfg.model.n_layers = SIM_LAYERS;
+    cfg.batch_per_rank = p.batch_per_rank;
+    cfg.capacity.factor = factor;
+    cfg.capacity.policy = policy;
+    let bal = make_balancer(kind, &cfg, p.seed);
+    let mut c = Coordinator::new(cfg.clone(), bal, p.seed);
+    let mut spec = WorkloadSpec::new(dataset, 4);
+    spec.mean_prompt_len = 8;
+    spec.mean_new_tokens = p.steps * 2;
+    let mut g = RequestGenerator::new(spec, p.seed ^ 5);
+    for r in g.take(cfg.global_batch() + 16) {
+        c.submit(r);
+    }
+    let mut lats = Vec::with_capacity(p.steps);
+    let mut tokens = 0u64;
+    let (mut offered, mut dropped, mut rerouted, mut queued) = (0u64, 0u64, 0u64, 0u64);
+    for _ in 0..p.steps {
+        match c.step() {
+            Ok(Some(rep)) => {
+                lats.push(rep.latency);
+                tokens += rep.tokens as u64;
+                offered += rep.cap_offered;
+                dropped += rep.cap_dropped;
+                rerouted += rep.cap_rerouted;
+                queued += rep.cap_queued;
+            }
+            _ => break,
+        }
+    }
+    let total: f64 = lats.iter().sum();
+    let rate = |n: u64| if offered > 0 { n as f64 / offered as f64 } else { 0.0 };
+    CapacityCell {
+        step_latency: if lats.is_empty() { 0.0 } else { mean(&lats) },
+        tok_s: if total > 0.0 { tokens as f64 / total } else { 0.0 },
+        drop_rate: rate(dropped),
+        reroute_rate: rate(rerouted),
+        queue_rate: rate(queued),
+        offered,
+    }
+}
+
+fn factor_label(f: f64) -> String {
+    if f.is_infinite() {
+        "inf".into()
+    } else {
+        format!("{f:.2}")
+    }
+}
+
+/// Run the capacity sweep → `bench_results/BENCH_capacity.json`.
+pub fn run(p: &CapacityParams) -> BenchSet {
+    let mut b = BenchSet::new(
+        "BENCH_capacity",
+        &[
+            "preset",
+            "balancer",
+            "policy",
+            "factor",
+            "step_latency_us",
+            "tok_s",
+            "drop_rate",
+            "reroute_rate",
+            "queue_rate",
+        ],
+    );
+    let meta_cfg = sim_config("gpt-oss-120b");
+    b.set_meta(super::bench_meta(&meta_cfg, "capacity"));
+    let scale = layer_scale(&Config::default());
+    for (label, dataset) in &p.presets {
+        for &kind in &p.balancers {
+            for &policy in &p.policies {
+                for &factor in &p.factors {
+                    let cell = run_cell(p, *dataset, kind, policy, factor);
+                    b.row(&[
+                        label.clone(),
+                        kind.name().into(),
+                        policy.name().into(),
+                        factor_label(factor),
+                        format!("{:.1}", cell.step_latency * scale * 1e6),
+                        format!("{:.0}", cell.tok_s),
+                        format!("{:.4}", cell.drop_rate),
+                        format!("{:.4}", cell.reroute_rate),
+                        format!("{:.4}", cell.queue_rate),
+                    ]);
+                }
+            }
+        }
+    }
+    b.note(format!(
+        "GPT-OSS decode, b={}/rank, {} steps/cell, identical stream per preset;",
+        p.batch_per_rank, p.steps
+    ));
+    b.note("step_latency_us scaled to full model depth; drop/reroute/queue");
+    b.note("rates are fractions of offered routing slots (tokens x top_k x");
+    b.note("layers); factor = inf anchors the no-shedding end of the frontier");
+    b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> CapacityParams {
+        CapacityParams {
+            factors: vec![1.0, f64::INFINITY],
+            policies: vec![CapacityPolicy::Drop],
+            presets: vec![("repeat".into(), Dataset::Repeat)],
+            balancers: BalancerKind::ALL.to_vec(),
+            steps: 6,
+            batch_per_rank: 96,
+            seed: 3,
+        }
+    }
+
+    #[test]
+    fn capacity_bench_emits_four_way_pareto_rows() {
+        let p = small();
+        let b = run(&p);
+        assert_eq!(b.rows.len(), 4 * 2); // 4 balancers x 2 factors
+        for kind in BalancerKind::ALL {
+            let rows: Vec<_> =
+                b.rows.iter().filter(|r| r[1] == kind.name()).collect();
+            assert_eq!(rows.len(), 2, "{} rows missing", kind.name());
+            for r in rows {
+                let lat: f64 = r[4].parse().unwrap();
+                assert!(lat > 0.0, "{} cell never ran", kind.name());
+            }
+        }
+    }
+
+    #[test]
+    fn tight_cap_sheds_more_than_unbounded_cap() {
+        let p = small();
+        let tight = run_cell(
+            &p,
+            Dataset::Repeat,
+            BalancerKind::StaticEp,
+            CapacityPolicy::Drop,
+            1.0,
+        );
+        let unbounded = run_cell(
+            &p,
+            Dataset::Repeat,
+            BalancerKind::StaticEp,
+            CapacityPolicy::Drop,
+            f64::INFINITY,
+        );
+        assert!(tight.offered > 0 && unbounded.offered > 0);
+        assert!(
+            tight.drop_rate > 0.0,
+            "factor 1.0 never bound on the skewed stream"
+        );
+        assert_eq!(
+            unbounded.drop_rate, 0.0,
+            "unbounded cap must never shed traffic"
+        );
+        assert!(tight.drop_rate > unbounded.drop_rate);
+    }
+
+    #[test]
+    fn reroute_and_queue_policies_shed_into_their_own_channels() {
+        let p = small();
+        let rr = run_cell(
+            &p,
+            Dataset::Repeat,
+            BalancerKind::StaticEp,
+            CapacityPolicy::Reroute,
+            1.0,
+        );
+        assert!(rr.reroute_rate > 0.0, "reroute policy never rerouted");
+        let q = run_cell(
+            &p,
+            Dataset::Repeat,
+            BalancerKind::StaticEp,
+            CapacityPolicy::Queue,
+            1.0,
+        );
+        assert!(q.queue_rate > 0.0, "queue policy never queued");
+        assert_eq!(q.reroute_rate, 0.0);
+    }
+}

@@ -18,8 +18,7 @@
 //! time, deferral and re-balance counts →
 //! `bench_results/BENCH_disagg.json`.
 
-use crate::balancers::StaticEp;
-use crate::config::Config;
+use crate::config::{BalancerKind, Config};
 use crate::engine::sim::SimExecutor;
 use crate::engine::ServingEngine;
 use crate::server::disagg::{run_disagg, DisaggReport, DisaggRunConfig};
@@ -29,13 +28,17 @@ use crate::util::bench::BenchSet;
 use crate::workload::{Request, Scenario, ScenarioGenerator};
 
 use super::volatility::{build_scenario_for, calibrate_step_latency_for};
-use super::SIM_LAYERS;
+use super::{make_balancer, SIM_LAYERS};
 
 /// Sweep parameters.
 pub struct DisaggParams {
     /// Scenario presets to run (default: the three the paper-style
     /// comparison needs — steady, burst, multi_tenant).
     pub presets: Vec<String>,
+    /// Balancers driving every replica engine (both modes use the same
+    /// balancer per cell, so the colocated/disagg comparison isolates
+    /// the serving topology).
+    pub balancers: Vec<BalancerKind>,
     /// Replicas per serving mode (split across roles under disagg).
     pub replicas: usize,
     /// Offered load as a fraction of calibrated decode capacity.
@@ -59,6 +62,7 @@ impl Default for DisaggParams {
     fn default() -> Self {
         DisaggParams {
             presets: vec!["steady".into(), "burst".into(), "multi_tenant".into()],
+            balancers: BalancerKind::ALL.to_vec(),
             replicas: 4,
             load: 0.7,
             steps: 160,
@@ -120,22 +124,26 @@ pub fn stream_for(p: &DisaggParams, preset: &str, idx: usize) -> Vec<Request> {
 
 fn sim_factory(
     p: &DisaggParams,
+    kind: BalancerKind,
 ) -> impl Fn(usize) -> anyhow::Result<ServingEngine<SimExecutor>> + Send + Sync + 'static {
     let cfg = disagg_cfg(p);
     let seed = p.seed;
     move |idx: usize| {
-        let bal = Box::new(StaticEp::new(&cfg));
-        Ok(ServingEngine::new(
-            cfg.clone(),
-            bal,
-            seed ^ (idx as u64).wrapping_mul(0x9E37_79B9),
-        ))
+        let replica_seed = seed ^ (idx as u64).wrapping_mul(0x9E37_79B9);
+        let bal = make_balancer(kind, &cfg, replica_seed);
+        Ok(ServingEngine::new(cfg.clone(), bal, replica_seed))
     }
 }
 
-/// Serve one preset's stream in both modes. Exposed for integration
-/// tests (the burst TPOT-win gate in `tests/disagg_handoff.rs`).
-pub fn run_pair(p: &DisaggParams, preset: &str, idx: usize) -> (Vec<Request>, FleetReport, DisaggReport) {
+/// Serve one preset's stream in both modes under one balancer. Exposed
+/// for integration tests (the burst TPOT-win gate in
+/// `tests/disagg_handoff.rs`).
+pub fn run_pair(
+    p: &DisaggParams,
+    preset: &str,
+    idx: usize,
+    kind: BalancerKind,
+) -> (Vec<Request>, FleetReport, DisaggReport) {
     let reqs = stream_for(p, preset, idx);
     let cfg = disagg_cfg(p);
     let fleet_cfg = FleetConfig {
@@ -145,7 +153,7 @@ pub fn run_pair(p: &DisaggParams, preset: &str, idx: usize) -> (Vec<Request>, Fl
         threads: 0,
         parallel: true,
     };
-    let colocated = run_fleet(&fleet_cfg, &reqs, sim_factory(p));
+    let colocated = run_fleet(&fleet_cfg, &reqs, sim_factory(p, kind));
     let t_step = calibrate_step_latency_for(&cfg, p.seed);
     let mut rc = DisaggRunConfig::from_config(p.replicas, &cfg);
     rc.max_steps = p.max_steps;
@@ -155,7 +163,7 @@ pub fn run_pair(p: &DisaggParams, preset: &str, idx: usize) -> (Vec<Request>, Fl
     let chunk = (cfg.prefill_chunk_per_rank * cfg.cluster.ep).max(1) as f64;
     rc.service_rate = gb / t_step;
     rc.prefill_rate_ratio = (chunk / gb).max(1.0);
-    let disagg = run_disagg(&rc, &reqs, sim_factory(p));
+    let disagg = run_disagg(&rc, &reqs, sim_factory(p, kind));
     (reqs, colocated, disagg)
 }
 
@@ -166,6 +174,7 @@ pub fn run(p: &DisaggParams) -> BenchSet {
         &[
             "scenario",
             "mode",
+            "balancer",
             "replicas",
             "requests",
             "completed",
@@ -185,42 +194,46 @@ pub fn run(p: &DisaggParams) -> BenchSet {
         &p.presets.join(","),
     ));
     for (idx, preset) in p.presets.iter().enumerate() {
-        let (reqs, colocated, disagg) = run_pair(p, preset, idx);
-        let cm = colocated.merged_metrics();
-        let (cttft, ctpot) = (cm.ttft_summary(), cm.tpot_summary());
-        b.row(&[
-            preset.clone(),
-            "colocated".to_string(),
-            p.replicas.to_string(),
-            reqs.len().to_string(),
-            colocated.completed().to_string(),
-            format!("{:.0}", colocated.aggregate_throughput()),
-            format!("{:.2}", cttft.p50 * 1e3),
-            format!("{:.2}", cttft.p99 * 1e3),
-            format!("{:.3}", ctpot.p50 * 1e3),
-            format!("{:.3}", ctpot.p99 * 1e3),
-            "0.000".to_string(),
-            "0.00".to_string(),
-            "0".to_string(),
-            "0".to_string(),
-        ]);
-        let (dttft, dtpot) = (disagg.ttft_summary(), disagg.tpot_summary());
-        b.row(&[
-            preset.clone(),
-            "disagg".to_string(),
-            p.replicas.to_string(),
-            reqs.len().to_string(),
-            disagg.completed().to_string(),
-            format!("{:.0}", disagg.aggregate_throughput()),
-            format!("{:.2}", dttft.p50 * 1e3),
-            format!("{:.2}", dttft.p99 * 1e3),
-            format!("{:.3}", dtpot.p50 * 1e3),
-            format!("{:.3}", dtpot.p99 * 1e3),
-            format!("{:.3}", disagg.kv_bytes / 1e9),
-            format!("{:.2}", disagg.exposed_transfer.p99 * 1e3),
-            disagg.deferred.to_string(),
-            disagg.rebalances.to_string(),
-        ]);
+        for &kind in &p.balancers {
+            let (reqs, colocated, disagg) = run_pair(p, preset, idx, kind);
+            let cm = colocated.merged_metrics();
+            let (cttft, ctpot) = (cm.ttft_summary(), cm.tpot_summary());
+            b.row(&[
+                preset.clone(),
+                "colocated".to_string(),
+                kind.name().to_string(),
+                p.replicas.to_string(),
+                reqs.len().to_string(),
+                colocated.completed().to_string(),
+                format!("{:.0}", colocated.aggregate_throughput()),
+                format!("{:.2}", cttft.p50 * 1e3),
+                format!("{:.2}", cttft.p99 * 1e3),
+                format!("{:.3}", ctpot.p50 * 1e3),
+                format!("{:.3}", ctpot.p99 * 1e3),
+                "0.000".to_string(),
+                "0.00".to_string(),
+                "0".to_string(),
+                "0".to_string(),
+            ]);
+            let (dttft, dtpot) = (disagg.ttft_summary(), disagg.tpot_summary());
+            b.row(&[
+                preset.clone(),
+                "disagg".to_string(),
+                kind.name().to_string(),
+                p.replicas.to_string(),
+                reqs.len().to_string(),
+                disagg.completed().to_string(),
+                format!("{:.0}", disagg.aggregate_throughput()),
+                format!("{:.2}", dttft.p50 * 1e3),
+                format!("{:.2}", dttft.p99 * 1e3),
+                format!("{:.3}", dtpot.p50 * 1e3),
+                format!("{:.3}", dtpot.p99 * 1e3),
+                format!("{:.3}", disagg.kv_bytes / 1e9),
+                format!("{:.2}", disagg.exposed_transfer.p99 * 1e3),
+                disagg.deferred.to_string(),
+                disagg.rebalances.to_string(),
+            ]);
+        }
     }
     b.note(&format!(
         "matched offered load per preset: identical calibrated stream served \
@@ -245,6 +258,7 @@ mod tests {
     fn small() -> DisaggParams {
         DisaggParams {
             presets: vec!["steady".into()],
+            balancers: vec![BalancerKind::StaticEp],
             replicas: 4,
             load: 0.6,
             steps: 40,
@@ -262,29 +276,30 @@ mod tests {
         let b = run(&p);
         assert_eq!(b.rows.len(), 2, "one colocated + one disagg row");
         for row in &b.rows {
-            let submitted: usize = row[3].parse().unwrap();
-            let completed: usize = row[4].parse().unwrap();
+            assert_eq!(row[2], "static");
+            let submitted: usize = row[4].parse().unwrap();
+            let completed: usize = row[5].parse().unwrap();
             assert!(submitted > 0, "{row:?}: empty stream");
             assert_eq!(completed, submitted, "{row:?}: dropped requests");
-            let tok_s: f64 = row[5].parse().unwrap();
+            let tok_s: f64 = row[6].parse().unwrap();
             assert!(tok_s > 0.0, "{row:?}");
         }
         assert_eq!(b.rows[0][1], "colocated");
         assert_eq!(b.rows[1][1], "disagg");
         // the disagg row must ship real KV bytes over the fabric
-        let kv_gb: f64 = b.rows[1][10].parse().unwrap();
+        let kv_gb: f64 = b.rows[1][11].parse().unwrap();
         assert!(kv_gb > 0.0, "disagg run moved no KV");
     }
 
     #[test]
     fn both_modes_serve_the_identical_stream() {
         let p = small();
-        let (reqs, colocated, disagg) = run_pair(&p, "steady", 0);
+        let (reqs, colocated, disagg) = run_pair(&p, "steady", 0, BalancerKind::StaticEp);
         assert_eq!(colocated.completed(), reqs.len());
         assert_eq!(disagg.completed(), reqs.len());
         assert_eq!(disagg.kv_pages_freed, disagg.kv_pages_admitted);
         // deterministic: same pair again is bit-identical
-        let (_, c2, d2) = run_pair(&p, "steady", 0);
+        let (_, c2, d2) = run_pair(&p, "steady", 0, BalancerKind::StaticEp);
         assert_eq!(
             colocated.ttft_summary().p50.to_bits(),
             c2.ttft_summary().p50.to_bits()

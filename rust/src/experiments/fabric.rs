@@ -11,7 +11,7 @@
 //! pre-fabric scalar model — must be ~0).
 
 use crate::balancers::{decide_step, Probe};
-use crate::config::{Config, ProbeConfig};
+use crate::config::{BalancerKind, Config, ProbeConfig};
 use crate::fabric::Fabric;
 use crate::perfmodel::{self, TrafficMatrix};
 use crate::routing::RoutingModel;
@@ -105,6 +105,60 @@ pub fn run_probe_on_fabric(
     (mean(&lats), exposed, tput)
 }
 
+/// One non-PROBE balancer run on one fabric (same loop as
+/// [`run_probe_on_fabric`], balancer picked by kind): (mean step
+/// latency s, total exposed s, decode throughput tok/s). Used for the
+/// HarMoEny rows — reactive rescheduling has no topology awareness to
+/// toggle, so it gets one arm per fabric point.
+pub fn run_kind_on_fabric(
+    kind: BalancerKind,
+    ep: usize,
+    nodes: usize,
+    ratio: f64,
+    rails: usize,
+    steps: usize,
+    batch_per_rank: usize,
+    seed: u64,
+) -> (f64, f64, f64) {
+    let mut cfg = Config::default();
+    cfg.model.n_layers = SIM_LAYERS;
+    cfg.batch_per_rank = batch_per_rank;
+    cfg.cluster = Cluster::multi_node_ratio(
+        ep,
+        nodes,
+        HardwareProfile::hopper_141(),
+        ratio,
+        rails,
+    );
+    let mut bal = super::make_balancer(kind, &cfg, seed);
+    let mut sim = ClusterSim::new(cfg.model.clone(), cfg.cluster.clone());
+    let mut rm = RoutingModel::calibrated(
+        SIM_LAYERS,
+        cfg.model.n_experts,
+        cfg.model.top_k,
+        4,
+        seed,
+    );
+    let tokens = cfg.global_batch();
+    let mut lats = Vec::with_capacity(steps);
+    let mut exposed = 0.0;
+    for step in 0..steps {
+        let routing = rm.route_step(&vec![0u16; tokens]);
+        let ds = decide_step(bal.as_mut(), step, &routing);
+        let out = sim.run_step(&routing, &ds);
+        lats.push(out.latency);
+        exposed += out.total_exposed();
+        rm.step_drift();
+    }
+    let total: f64 = lats.iter().sum();
+    let tput = if total > 0.0 {
+        tokens as f64 * steps as f64 / total
+    } else {
+        0.0
+    };
+    (mean(&lats), exposed, tput)
+}
+
 /// Max |flat-fabric − scalar-model| All-to-All deviation over random
 /// traffic matrices (the equivalence the default config relies on).
 pub fn flat_equivalence_err(ep: usize, cases: usize, seed: u64) -> f64 {
@@ -172,6 +226,33 @@ pub fn run(p: &FabricParams) -> BenchSet {
                 ]);
                 results.push((exposed, tput));
             }
+            // the token-rescheduling baseline on the identical fabric:
+            // reactive fetches pay the slow rails with no prefetch window
+            let (lat_h, exp_h, tput_h) = run_kind_on_fabric(
+                BalancerKind::HarMoEny,
+                ep,
+                nodes,
+                ratio,
+                p.rails,
+                p.steps,
+                p.batch_per_rank,
+                p.seed,
+            );
+            b.row(&[
+                format!("ep{ep}x{nodes}_r{denom}_harmoeny_exposed"),
+                format!("{:.1}", exp_h * 1e6),
+                "us".into(),
+            ]);
+            b.row(&[
+                format!("ep{ep}x{nodes}_r{denom}_harmoeny_step_latency"),
+                format!("{:.1}", lat_h * 1e6),
+                "us".into(),
+            ]);
+            b.row(&[
+                format!("ep{ep}x{nodes}_r{denom}_harmoeny_throughput"),
+                format!("{:.0}", tput_h),
+                "tok/s".into(),
+            ]);
             let (exp_aware, tput_aware) = results[0];
             let (exp_blind, tput_blind) = results[1];
             b.row(&[
@@ -192,7 +273,9 @@ pub fn run(p: &FabricParams) -> BenchSet {
     ));
     b.note("aware = intra-node sources + per-link window feasibility +");
     b.note("rail congestion in the plan objective; blind = pre-fabric");
-    b.note("scalar checks on the same multi-node fabric");
+    b.note("scalar checks on the same multi-node fabric; harmoeny =");
+    b.note("reactive token rescheduling (no prefetch window) on the");
+    b.note("identical fabric");
     b
 }
 
@@ -241,6 +324,8 @@ mod tests {
             "flat_equiv_max_abs_err",
             "ep16x2_r8_aware_exposed",
             "ep16x2_r8_blind_exposed",
+            "ep16x2_r8_harmoeny_exposed",
+            "ep16x2_r8_harmoeny_throughput",
             "ep16x2_r8_exposed_saved",
             "ep16x2_r8_throughput_gain",
         ] {

@@ -1,7 +1,7 @@
 //! `probe bench memory` — memory-governance sweep (ISSUE 5).
 //!
-//! Runs {static, eplb, probe} × {short-ctx, long-ctx, prefill-burst} on
-//! the memory-governed serving engine and reports TTFT/TPOT percentiles,
+//! Runs {static, eplb, harmoeny, probe} × {short-ctx, long-ctx,
+//! prefill-burst} on the memory-governed serving engine and reports TTFT/TPOT percentiles,
 //! decode throughput, the preemption rate, and the replica-headroom
 //! utilization (fraction of the policy's replica budget the per-rank
 //! [`crate::placement::memory::MemoryManager`] could still grant,
@@ -93,7 +93,7 @@ impl Default for MemoryParams {
     fn default() -> Self {
         MemoryParams {
             scenarios: MemoryScenario::presets(),
-            balancers: vec![BalancerKind::StaticEp, BalancerKind::Eplb, BalancerKind::Probe],
+            balancers: BalancerKind::ALL.to_vec(),
             requests: 48,
             batch_per_rank: 8,
             chunk_per_rank: 512,

@@ -12,6 +12,7 @@
 //! notes).
 
 pub mod ablations;
+pub mod capacity;
 pub mod disagg;
 pub mod fabric;
 pub mod fig10_fidelity;
@@ -31,7 +32,7 @@ pub mod fig9_shift;
 /// Representative MoE layers simulated per step (see module docs).
 pub const SIM_LAYERS: usize = 6;
 
-use crate::balancers::{Balancer, Eplb, Probe, StaticEp};
+use crate::balancers::{Balancer, Eplb, HarMoEny, Probe, StaticEp};
 use crate::config::{BalancerKind, Config, EplbConfig, ProbeConfig};
 use crate::util::bench::BenchMeta;
 
@@ -57,6 +58,7 @@ pub fn make_balancer(kind: BalancerKind, cfg: &Config, seed: u64) -> Box<dyn Bal
     match kind {
         BalancerKind::StaticEp => Box::new(StaticEp::new(cfg)),
         BalancerKind::Eplb => Box::new(Eplb::new(cfg, cfg.eplb.clone())),
+        BalancerKind::HarMoEny => Box::new(HarMoEny::new(cfg)),
         BalancerKind::Probe => Box::new(Probe::new(cfg, cfg.probe.clone(), seed)),
     }
 }

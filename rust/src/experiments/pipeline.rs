@@ -8,7 +8,7 @@
 //!   model at depth 1);
 //! * mean decode-step latency and fetch volume per lookahead depth.
 
-use crate::config::ProbeConfig;
+use crate::config::{BalancerKind, ProbeConfig};
 use crate::coordinator::Coordinator;
 use crate::placement::Placement;
 use crate::planner;
@@ -135,8 +135,31 @@ pub fn run(p: &PipelineParams) -> BenchSet {
             "us".into(),
         ]);
     }
+    // --- four-way balancer step latency on the identical workload ---
+    for kind in BalancerKind::ALL {
+        let mut cfg = sim_config("gpt-oss-120b");
+        cfg.model.n_layers = SIM_LAYERS;
+        cfg.batch_per_rank = 768;
+        let bal = super::make_balancer(kind, &cfg, p.seed);
+        let mut c = Coordinator::new(cfg.clone(), bal, p.seed);
+        let mut spec = WorkloadSpec::new(Dataset::Repeat, 4);
+        spec.mean_prompt_len = 8;
+        spec.mean_new_tokens = p.steps * 2;
+        let mut g = RequestGenerator::new(spec, p.seed ^ 5);
+        for r in g.take(cfg.global_batch() + 16) {
+            c.submit(r);
+        }
+        let outs = c.run_decode_steps(p.steps);
+        let lat: Vec<f64> = outs.iter().map(|o| o.latency).collect();
+        b.row(&[
+            format!("step_latency_mean_{}", kind.name()),
+            format!("{:.1}", crate::util::stats::mean(&lat) * 1e6),
+            "us".into(),
+        ]);
+    }
     b.note("Repeat dataset, GPT-OSS, ep=8, b=768/rank; planner timed on");
     b.note("a fresh (cleared) base so µs/iter covers full greedy work");
+    b.note("step_latency_mean_<balancer>: four-way arm on the identical stream");
     b
 }
 
@@ -158,6 +181,10 @@ mod tests {
             "transition_count_fidelity_d1",
             "step_latency_mean_L1",
             "fetch_slots_L4",
+            "step_latency_mean_static",
+            "step_latency_mean_eplb",
+            "step_latency_mean_harmoeny",
+            "step_latency_mean_probe",
         ] {
             assert!(
                 b.rows.iter().any(|r| r[0] == needle),

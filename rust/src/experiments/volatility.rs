@@ -1,8 +1,9 @@
 //! `probe bench volatility` — cross-balancer workload-volatility sweep.
 //!
 //! Runs every scenario preset (`steady`/`burst`/`storm`/`drift`/
-//! `multi_tenant`, see [`crate::workload::scenario`]) against all three
-//! balancing systems {static, EPLB, PROBE} on the serving engine and
+//! `multi_tenant`, see [`crate::workload::scenario`]) against all four
+//! balancing systems {static, EPLB, HarMoEny, PROBE} on the serving
+//! engine and
 //! reports TTFT/TPOT percentiles, decode throughput, exposed transfer,
 //! and the per-window **hotspot-migration rate**
 //! ([`crate::metrics::HotspotTracker`]) → `bench_results/BENCH_volatility.json`.
@@ -52,7 +53,7 @@ impl Default for VolatilityParams {
     fn default() -> Self {
         VolatilityParams {
             presets: Scenario::PRESETS.iter().map(|s| s.to_string()).collect(),
-            balancers: vec![BalancerKind::StaticEp, BalancerKind::Eplb, BalancerKind::Probe],
+            balancers: BalancerKind::ALL.to_vec(),
             load: 0.7,
             steps: 200,
             batch_per_rank: 2,

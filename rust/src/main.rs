@@ -46,7 +46,8 @@ fn print_help() {
          \n\
          COMMANDS:\n\
            serve     --requests N --max-steps N --artifacts DIR\n\
-           simulate  --balancer static|eplb|probe --dataset D --steps N\n\
+           simulate  --balancer static|eplb|harmoeny|probe --dataset D\n\
+                     --steps N\n\
                      --batch-per-rank N --model M [--config FILE]\n\
                      [--lookahead L] [--predictor statistical|transition]\n\
                      [--scenario steady|burst|storm|drift|multi_tenant]\n\
@@ -58,8 +59,8 @@ fn print_help() {
                      [--seed S]\n\
            prefill   --balancer B --tokens N --model M\n\
            bench     fig2|fig3|fig5|fig7|fig8|fig9|fig10|fig11|fleet|\n\
-                     pipeline|fabric|volatility|memory|speed|disagg|all\n\
-                     [--steps N]\n\
+                     pipeline|fabric|volatility|memory|speed|disagg|\n\
+                     capacity|all [--steps N]\n\
                      (fabric: multi-node sweep, also --rails N;\n\
                       volatility: scenario x balancer sweep, also --load F;\n\
                       memory: governance sweep, also --requests N;\n\
@@ -67,7 +68,9 @@ fn print_help() {
                       also --ranks 16,32,64,128 --load F;\n\
                       disagg: colocated vs prefill/decode-disaggregated\n\
                       pools, also --replicas N --load F\n\
-                      --presets steady,burst,multi_tenant)\n\
+                      --presets steady,burst,multi_tenant;\n\
+                      capacity: latency-vs-drop Pareto sweep, also\n\
+                      --factors 1.0,1.5,inf --batch-per-rank N)\n\
            ablate    [--steps N]\n\
            info\n"
     );
@@ -494,6 +497,42 @@ fn cmd_bench(args: &Args) -> i32 {
                 }
                 exp::disagg::run(&p)
             }
+            "capacity" => {
+                let mut p = exp::capacity::CapacityParams::default();
+                p.steps = args.get_usize("steps", p.steps);
+                p.batch_per_rank = args.get_usize("batch-per-rank", p.batch_per_rank);
+                p.seed = args.get_u64("seed", p.seed);
+                if let Some(list) = args.get("factors") {
+                    let parsed: Result<Vec<f64>, _> = list
+                        .split(',')
+                        .map(|s| {
+                            let s = s.trim();
+                            if s == "inf" {
+                                Ok(f64::INFINITY)
+                            } else {
+                                s.parse::<f64>()
+                            }
+                        })
+                        .collect();
+                    match parsed {
+                        Ok(v) if !v.is_empty() && v.iter().all(|&f| f > 0.0) => {
+                            p.factors = v
+                        }
+                        _ => {
+                            eprintln!(
+                                "bench capacity: --factors wants a comma list like \
+                                 1.0,1.5,inf (every factor > 0)"
+                            );
+                            return false;
+                        }
+                    }
+                }
+                if p.steps == 0 {
+                    eprintln!("bench capacity needs --steps >= 1");
+                    return false;
+                }
+                exp::capacity::run(&p)
+            }
             "speed" => {
                 let mut p = exp::speed::SpeedParams::default();
                 p.steps = args.get_usize("steps", p.steps);
@@ -532,7 +571,7 @@ fn cmd_bench(args: &Args) -> i32 {
     if which == "all" {
         for f in [
             "fig2", "fig3", "fig5", "fig7", "fig8", "fig9", "fig10", "fig11", "fleet", "pipeline",
-            "fabric", "volatility", "memory", "speed", "disagg",
+            "fabric", "volatility", "memory", "speed", "disagg", "capacity",
         ] {
             run_one(f);
         }
@@ -556,7 +595,7 @@ fn cmd_info(args: &Args) -> i32 {
     println!("models:   gpt-oss-120b, qwen3-235b, small-real");
     println!("profiles: hopper-141, hopper-lowbw, compute-heavy, cpu-host");
     println!("datasets: chinese, code, repeat, mixed");
-    println!("balancers: static (sglang), eplb, probe");
+    println!("balancers: static (sglang), eplb, harmoeny, probe");
     println!("scenarios: steady, burst, storm, drift, multi_tenant");
     println!("policies:  rr, jsq, affinity, tenant");
     let dir = args.get_or("artifacts", "artifacts");

@@ -334,6 +334,11 @@ pub struct ServingMetrics {
     pub ttft_hist: LogHistogram,
     /// Streaming TPOT distribution (seconds), filled at retirement.
     pub tpot_hist: LogHistogram,
+    /// Per-tenant capacity accounting (ISSUE 9): tenant →
+    /// `(routing slots offered, routing slots dropped)` accumulated
+    /// over the run. Empty unless `[capacity]` enforcement is on and
+    /// the cap actually bound — so pre-capacity metrics are unchanged.
+    pub tenant_capacity: BTreeMap<u16, (u64, u64)>,
 }
 
 impl ServingMetrics {
@@ -377,6 +382,37 @@ impl ServingMetrics {
                 .filter_map(|r| r.ttft())
                 .collect::<Vec<_>>(),
         )
+    }
+
+    /// Accumulate one step's capacity exposure for a tenant: routing
+    /// slots offered by its tokens and the subset the cap discarded.
+    pub fn record_capacity(&mut self, tenant: u16, offered: u64, dropped: u64) {
+        let e = self.tenant_capacity.entry(tenant).or_insert((0, 0));
+        e.0 += offered;
+        e.1 += dropped;
+    }
+
+    /// Fraction of a tenant's offered routing slots discarded by
+    /// capacity enforcement (0.0 when the tenant offered nothing or
+    /// enforcement never ran).
+    pub fn drop_rate_for_tenant(&self, tenant: u16) -> f64 {
+        match self.tenant_capacity.get(&tenant) {
+            Some(&(offered, dropped)) if offered > 0 => dropped as f64 / offered as f64,
+            _ => 0.0,
+        }
+    }
+
+    /// Run-wide dropped-slot fraction across all tenants.
+    pub fn drop_rate(&self) -> f64 {
+        let (offered, dropped) = self
+            .tenant_capacity
+            .values()
+            .fold((0u64, 0u64), |(o, d), &(to, td)| (o + to, d + td));
+        if offered > 0 {
+            dropped as f64 / offered as f64
+        } else {
+            0.0
+        }
     }
 
     /// Completed-request count restricted to one tenant.
@@ -444,6 +480,9 @@ impl ServingMetrics {
             out.preemptions += m.preemptions;
             out.ttft_hist.merge(&m.ttft_hist);
             out.tpot_hist.merge(&m.tpot_hist);
+            for (&tenant, &(offered, dropped)) in &m.tenant_capacity {
+                out.record_capacity(tenant, offered, dropped);
+            }
             if m.replica_windows.is_empty() {
                 // leaf replica: its own steps form one busy window
                 if let Some(w) = m.busy_window() {
@@ -716,6 +755,22 @@ mod tests {
         assert_eq!(m.completed_for_tenant(1), 1);
         assert!((m.ttft_summary_for_tenant(1).p50 - 3.0).abs() < 1e-12);
         assert!(m.ttft_summary_for_tenant(0).p50 < 1.0 + 1e-12);
+    }
+
+    #[test]
+    fn tenant_capacity_rates_and_merge() {
+        let mut a = ServingMetrics::default();
+        a.record_capacity(0, 100, 10);
+        a.record_capacity(1, 50, 0);
+        let mut b = ServingMetrics::default();
+        b.record_capacity(0, 100, 30);
+        assert!((a.drop_rate_for_tenant(0) - 0.1).abs() < 1e-12);
+        assert_eq!(a.drop_rate_for_tenant(1), 0.0);
+        assert_eq!(a.drop_rate_for_tenant(9), 0.0, "unknown tenant is 0");
+        let m = ServingMetrics::merge([&a, &b]);
+        assert_eq!(m.tenant_capacity.get(&0), Some(&(200, 40)));
+        assert!((m.drop_rate_for_tenant(0) - 0.2).abs() < 1e-12);
+        assert!((m.drop_rate() - 40.0 / 250.0).abs() < 1e-12);
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! into concrete per-slot targets for traffic accounting and execution.
 
 use crate::placement::Placement;
-use crate::routing::{token_rank, LayerRouting};
+use crate::routing::{token_rank, LayerRouting, DROPPED};
 
 /// Rank-granular token flow: `flow[e][rs][rt]` = tokens of expert `e`
 /// originating on rank `rs` assigned to the copy on rank `rt`.
@@ -332,6 +332,9 @@ impl DispatchPlan {
         for t in 0..routing.n_tokens {
             let rs = token_rank(t, routing.n_tokens, ep);
             for &e in routing.token_experts(t) {
+                if e == DROPPED {
+                    continue; // capacity-vacated slot: nothing to dispatch
+                }
                 totals[e as usize * ep + rs] += 1;
             }
         }
@@ -374,6 +377,12 @@ impl DispatchPlan {
         for t in 0..routing.n_tokens {
             let rs = token_rank(t, routing.n_tokens, ep);
             for j in 0..k {
+                if routing.experts[t * k + j] == DROPPED {
+                    // vacated slot: target the source rank so traffic
+                    // accounting (which skips rt == rs) sees no payload
+                    targets[t * k + j] = rs as u16;
+                    continue;
+                }
                 let e = routing.experts[t * k + j] as usize;
                 let gi = e * ep + rs;
                 while cur_left[gi] == 0 && (cur_rt[gi] as usize) < ep - 1 {

@@ -24,7 +24,7 @@
 //!   `python/compile/aot.py`, whose predictions arrive fused in the
 //!   decode-step artifact outputs (see [`crate::runtime`]).
 
-use crate::routing::LayerRouting;
+use crate::routing::{LayerRouting, DROPPED};
 use crate::util::Rng;
 
 /// Per-layer prediction fidelity (paper Fig. 10 metrics).
@@ -190,8 +190,14 @@ impl TransitionPredictor {
         }
         for tok in 0..src.n_tokens {
             for &e in src.token_experts(tok) {
+                if e == DROPPED {
+                    continue; // capacity-vacated slot: no truth to learn from
+                }
                 let row = e as usize * e_n;
                 for &e2 in dst.token_experts(tok) {
+                    if e2 == DROPPED {
+                        continue;
+                    }
                     t[row + e2 as usize] += 1.0;
                 }
             }
@@ -251,6 +257,9 @@ impl LookaheadPredictor for TransitionPredictor {
             *v *= self.decay;
         }
         for &e in &actual.experts {
+            if e == DROPPED {
+                continue; // only admitted (post-capacity) slots feed the prior
+            }
             m[e as usize] += 1.0;
         }
         if let Some((pl, pr)) = self.prev.take() {
@@ -352,6 +361,12 @@ impl StatisticalPredictor {
             let truth = actual.token_experts(t);
             let start = experts.len();
             for j in 0..k {
+                if truth[j] == DROPPED {
+                    // capacity-vacated slot: nothing will execute there,
+                    // so the predictor must not conjure load for it
+                    experts.push(DROPPED);
+                    continue;
+                }
                 if self.rng.next_f64() < self.accuracy {
                     experts.push(truth[j]);
                 } else {
@@ -370,7 +385,7 @@ impl StatisticalPredictor {
             // earlier wrong pick
             let slice = &mut experts[start..];
             for j in 1..k {
-                if slice[..j].contains(&slice[j]) {
+                if slice[j] != DROPPED && slice[..j].contains(&slice[j]) {
                     let mut e = slice[j];
                     loop {
                         e = (e + 1) % actual.n_experts as u16;
@@ -609,6 +624,77 @@ mod tests {
         assert!(
             warm_f > cold_f + 0.1,
             "training did not help: {warm_f} vs prior {cold_f}"
+        );
+    }
+
+    #[test]
+    fn infinite_capacity_leaves_fidelity_unchanged() {
+        // ISSUE 9 regression: routing a step through the capacity
+        // enforcer at factor = ∞ must leave both predictors' view of
+        // the truth channel — and thus fidelity — bit-identical.
+        use crate::config::{CapacityConfig, CapacityPolicy};
+        use crate::routing::CapacityEnforcer;
+        let mut rm = RoutingModel::calibrated(3, 64, 4, 2, 41);
+        let step = rm.route_step(&vec![0u16; 512]);
+        let mut enf = CapacityEnforcer::new(
+            &CapacityConfig {
+                factor: f64::INFINITY,
+                policy: CapacityPolicy::Reroute,
+            },
+            3,
+            8,
+        );
+        let admitted = enf.enforce_step(&step);
+        let mut p_raw = StatisticalPredictor::distilled(19);
+        let mut p_adm = StatisticalPredictor::distilled(19);
+        for l in 0..3 {
+            let f_raw = fidelity(&step.layers[l], &p_raw.predict(&step.layers[l]));
+            let f_adm = fidelity(
+                &admitted.routing.layers[l],
+                &p_adm.predict(&admitted.routing.layers[l]),
+            );
+            assert_eq!(f_raw, f_adm, "layer {l} fidelity moved at factor=inf");
+        }
+        let mut tp_raw = TransitionPredictor::new(3, 64);
+        let mut tp_adm = TransitionPredictor::new(3, 64);
+        for l in 0..3 {
+            tp_raw.observe(l, &step.layers[l]);
+            tp_adm.observe(l, &admitted.routing.layers[l]);
+        }
+        let a = tp_raw.forecast_counts(0, &step.layers[0], 1, 1, 8).unwrap();
+        let b = tp_adm
+            .forecast_counts(0, &admitted.routing.layers[0], 1, 1, 8)
+            .unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn predictors_ignore_capacity_sentinels() {
+        // an admitted layer with vacated slots: the statistical
+        // predictor preserves the vacancy (never conjures load) and the
+        // transition predictor's mass reflects only admitted slots
+        let a = actual(128);
+        let mut experts = a.experts.clone();
+        for slot in experts.iter_mut().step_by(5) {
+            *slot = DROPPED;
+        }
+        let holes = experts.iter().filter(|&&e| e == DROPPED).count();
+        let gap = LayerRouting::new(a.n_tokens, a.top_k, a.n_experts, experts);
+        let mut p = StatisticalPredictor::new(0.5, 29);
+        let pred = p.predict(&gap);
+        for (s, &e) in pred.experts.iter().enumerate() {
+            assert_eq!(e == DROPPED, gap.experts[s] == DROPPED, "slot {s}");
+        }
+        let mass: u32 = pred.expert_counts().iter().sum();
+        assert_eq!(mass as usize, 128 * 4 - holes);
+        let mut tp = TransitionPredictor::new(1, 64);
+        tp.observe(0, &gap);
+        tp.observe(0, &gap); // wrap pair 0→0 feeds update_pair
+        let f = tp.forecast_counts(0, &gap, 0, 1, 8).unwrap();
+        let total: f64 = f.iter().flat_map(|v| v.iter()).sum();
+        assert!(
+            (total - (128 * 4 - holes) as f64).abs() < 1e-6,
+            "transition mass {total} includes dropped slots"
         );
     }
 

@@ -1,0 +1,402 @@
+//! Per-expert capacity enforcement (ISSUE 9).
+//!
+//! Real serving stacks bound every expert by a capacity factor: with
+//! `T` tokens routing `k` experts each over `E` experts, each expert
+//! accepts at most `cap = ⌈C·kT/E⌉` slots per layer (SNIPPETS.md §2).
+//! Slots beyond the cap are handled by the configured overflow policy:
+//!
+//! - `drop`    — the slot is discarded (the token loses one expert).
+//! - `reroute` — the slot is re-assigned to the next-ranked under-cap
+//!               expert (cyclic scan from the chosen id), keeping the
+//!               within-token distinctness invariant; if every expert
+//!               is at cap the slot is dropped.
+//! - `queue`   — the slot is carried to the same layer of the NEXT
+//!               step, where it is admitted ahead of fresh traffic
+//!               (FIFO) and charged to its original source rank.
+//!
+//! The enforcer sits between the router and the balancer: it rewrites
+//! the ground-truth [`StepRouting`] into an *admitted* routing of the
+//! identical `(n_tokens, top_k)` shape, marking vacated slots with the
+//! [`DROPPED`](super::DROPPED) sentinel. With `factor = ∞` the cap
+//! saturates and the admitted routing is bit-identical to the input —
+//! the equivalence `tests/capacity_invariants.rs` pins.
+
+use crate::config::{CapacityConfig, CapacityPolicy};
+
+use super::{token_rank, LayerRouting, StepRouting, DROPPED};
+
+/// Per-layer enforcement accounting. Conservation invariants:
+/// `admitted + dropped + queued == offered` (fresh slots) and
+/// `carried_admitted + requeued == carried_in` (backlog slots).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CapacityLayerStats {
+    /// Fresh routing slots offered this layer (`n_tokens * top_k`).
+    pub offered: u32,
+    /// Fresh slots admitted in place or via reroute.
+    pub admitted: u32,
+    /// Fresh slots admitted at a rewritten expert id (subset of
+    /// `admitted`).
+    pub rerouted: u32,
+    /// Fresh slots discarded (drop policy, or reroute with every
+    /// expert at cap).
+    pub dropped: u32,
+    /// Fresh slots deferred to the next step (queue policy).
+    pub queued: u32,
+    /// Backlog slots carried in from the previous step.
+    pub carried_in: u32,
+    /// Backlog slots admitted this layer.
+    pub carried_admitted: u32,
+    /// Backlog slots still over cap, re-queued for the next step.
+    pub requeued: u32,
+}
+
+/// Whole-step enforcement totals (sum of the per-layer stats).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CapacityStepStats {
+    /// Fresh slots offered across all layers.
+    pub offered: u64,
+    /// Fresh slots admitted across all layers.
+    pub admitted: u64,
+    /// Admitted at a rewritten expert id.
+    pub rerouted: u64,
+    /// Discarded slots.
+    pub dropped: u64,
+    /// Slots deferred to the next step (fresh + re-queued backlog).
+    pub queued: u64,
+    /// Backlog slots admitted this step.
+    pub carried_admitted: u64,
+}
+
+/// Result of enforcing one step: the admitted routing plus everything
+/// the executor needs to charge backlog compute, attribute drops to
+/// tenants, and emit telemetry.
+#[derive(Debug, Clone)]
+pub struct CapacityStepView {
+    /// Admitted routing — same shape as the input, vacated slots hold
+    /// the [`DROPPED`](super::DROPPED) sentinel.
+    pub routing: StepRouting,
+    /// Per layer: backlog slots admitted this step as
+    /// `(expert, source rank)` — extra compute the balancer's
+    /// assignment must be charged with after `decide`.
+    pub carried: Vec<Vec<(u16, u16)>>,
+    /// Per-layer accounting.
+    pub layer_stats: Vec<CapacityLayerStats>,
+    /// Per-layer cap actually applied (`u32::MAX` when unbounded).
+    pub caps: Vec<u32>,
+    /// Slots dropped per token, summed over layers — the hook for
+    /// per-tenant drop-rate attribution.
+    pub dropped_per_token: Vec<u32>,
+}
+
+impl CapacityStepView {
+    /// Sum the per-layer stats into whole-step totals.
+    pub fn totals(&self) -> CapacityStepStats {
+        let mut t = CapacityStepStats::default();
+        for s in &self.layer_stats {
+            t.offered += u64::from(s.offered);
+            t.admitted += u64::from(s.admitted);
+            t.rerouted += u64::from(s.rerouted);
+            t.dropped += u64::from(s.dropped);
+            t.queued += u64::from(s.queued) + u64::from(s.requeued);
+            t.carried_admitted += u64::from(s.carried_admitted);
+        }
+        t
+    }
+}
+
+/// Stateful per-expert capacity enforcer. State is the per-layer
+/// backlog of queued slots; everything else is recomputed per step, so
+/// replaying an identical stream through a fresh enforcer reproduces
+/// identical admitted routings and event streams bit-for-bit.
+#[derive(Debug, Clone)]
+pub struct CapacityEnforcer {
+    factor: f64,
+    policy: CapacityPolicy,
+    ep: usize,
+    /// Per layer, FIFO backlog of queued slots `(expert, source rank)`.
+    pending: Vec<Vec<(u16, u16)>>,
+    /// Scratch: admitted count per expert for the layer in flight.
+    counts: Vec<u32>,
+}
+
+impl CapacityEnforcer {
+    /// Enforcer for `n_layers` MoE layers on an `ep`-rank cluster.
+    pub fn new(cfg: &CapacityConfig, n_layers: usize, ep: usize) -> CapacityEnforcer {
+        CapacityEnforcer {
+            factor: cfg.factor,
+            policy: cfg.policy,
+            ep,
+            pending: vec![Vec::new(); n_layers],
+            counts: Vec::new(),
+        }
+    }
+
+    /// Whether enforcement is active (`factor > 0`; `∞` counts as
+    /// active with an unbounded cap).
+    pub fn enabled(&self) -> bool {
+        self.factor > 0.0
+    }
+
+    /// Queued slots currently awaiting admission across all layers.
+    pub fn backlog(&self) -> usize {
+        self.pending.iter().map(Vec::len).sum()
+    }
+
+    /// Per-layer cap for a layer routing `k` slots per token over `t`
+    /// tokens and `e` experts: `⌈C·kt/e⌉`, saturating for `C = ∞`.
+    pub fn cap_for(&self, n_tokens: usize, top_k: usize, n_experts: usize) -> u32 {
+        if self.factor.is_infinite() {
+            return u32::MAX;
+        }
+        let slots = (n_tokens * top_k) as f64;
+        // `as` saturates, so absurd factors degrade to "unbounded"
+        (self.factor * slots / n_experts as f64).ceil() as u32
+    }
+
+    /// Enforce the caps on one step's ground-truth routing.
+    pub fn enforce_step(&mut self, routing: &StepRouting) -> CapacityStepView {
+        let n_layers = routing.layers.len();
+        debug_assert_eq!(n_layers, self.pending.len());
+        let n_tokens = routing.layers.first().map_or(0, |l| l.n_tokens);
+        let mut view = CapacityStepView {
+            routing: StepRouting {
+                layers: Vec::with_capacity(n_layers),
+            },
+            carried: Vec::with_capacity(n_layers),
+            layer_stats: Vec::with_capacity(n_layers),
+            caps: Vec::with_capacity(n_layers),
+            dropped_per_token: vec![0; n_tokens],
+        };
+        for (l, lr) in routing.layers.iter().enumerate() {
+            let (admitted, carried, stats, cap) = self.enforce_layer(l, lr, &mut view.dropped_per_token);
+            view.routing.layers.push(admitted);
+            view.carried.push(carried);
+            view.layer_stats.push(stats);
+            view.caps.push(cap);
+        }
+        view
+    }
+
+    /// Enforce one layer: admit the backlog FIFO, then fresh slots in
+    /// token/slot order. Returns the admitted routing, the admitted
+    /// backlog slots, the accounting, and the cap applied.
+    fn enforce_layer(
+        &mut self,
+        layer: usize,
+        lr: &LayerRouting,
+        dropped_per_token: &mut [u32],
+    ) -> (LayerRouting, Vec<(u16, u16)>, CapacityLayerStats, u32) {
+        let cap = self.cap_for(lr.n_tokens, lr.top_k, lr.n_experts);
+        let mut stats = CapacityLayerStats {
+            offered: (lr.n_tokens * lr.top_k) as u32,
+            ..CapacityLayerStats::default()
+        };
+        self.counts.clear();
+        self.counts.resize(lr.n_experts, 0);
+
+        // backlog first: FIFO, ahead of fresh traffic
+        let backlog = std::mem::take(&mut self.pending[layer]);
+        stats.carried_in = backlog.len() as u32;
+        let mut carried = Vec::new();
+        let mut requeue = Vec::new();
+        for (e, rs) in backlog {
+            if self.counts[e as usize] < cap {
+                self.counts[e as usize] += 1;
+                stats.carried_admitted += 1;
+                carried.push((e, rs));
+            } else {
+                stats.requeued += 1;
+                requeue.push((e, rs));
+            }
+        }
+
+        // fresh slots in token/slot order
+        let mut experts = lr.experts.clone();
+        for t in 0..lr.n_tokens {
+            for j in 0..lr.top_k {
+                let idx = t * lr.top_k + j;
+                let e = experts[idx];
+                if self.counts[e as usize] < cap {
+                    self.counts[e as usize] += 1;
+                    stats.admitted += 1;
+                    continue;
+                }
+                match self.policy {
+                    CapacityPolicy::Drop => {
+                        experts[idx] = DROPPED;
+                        stats.dropped += 1;
+                        dropped_per_token[t] += 1;
+                    }
+                    CapacityPolicy::Reroute => {
+                        let slot = &experts[t * lr.top_k..(t + 1) * lr.top_k];
+                        match next_ranked(e, cap, &self.counts, slot) {
+                            Some(alt) => {
+                                experts[idx] = alt;
+                                self.counts[alt as usize] += 1;
+                                stats.admitted += 1;
+                                stats.rerouted += 1;
+                            }
+                            None => {
+                                experts[idx] = DROPPED;
+                                stats.dropped += 1;
+                                dropped_per_token[t] += 1;
+                            }
+                        }
+                    }
+                    CapacityPolicy::Queue => {
+                        experts[idx] = DROPPED;
+                        stats.queued += 1;
+                        let rs = token_rank(t, lr.n_tokens, self.ep) as u16;
+                        requeue.push((e, rs));
+                    }
+                }
+            }
+        }
+        self.pending[layer] = requeue;
+        let admitted = LayerRouting::new(lr.n_tokens, lr.top_k, lr.n_experts, experts);
+        (admitted, carried, stats, cap)
+    }
+}
+
+/// Next-ranked under-cap expert for a reroute: cyclic scan from
+/// `e + 1`, skipping experts already chosen by the token (the slice
+/// holds the token's current slot values; [`DROPPED`] entries never
+/// match a real candidate). `None` when every distinct expert is at
+/// cap.
+fn next_ranked(e: u16, cap: u32, counts: &[u32], token_slots: &[u16]) -> Option<u16> {
+    let n = counts.len();
+    for off in 1..n {
+        let cand = (e as usize + off) % n;
+        if counts[cand] < cap && !token_slots.contains(&(cand as u16)) {
+            return Some(cand as u16);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::routing::RoutingModel;
+
+    fn cfg(factor: f64, policy: CapacityPolicy) -> CapacityConfig {
+        CapacityConfig { factor, policy }
+    }
+
+    fn skewed_step(seed: u64, n_tokens: usize) -> StepRouting {
+        let mut m = RoutingModel::calibrated(3, 16, 4, 2, seed);
+        m.route_step(&vec![0u16; n_tokens])
+    }
+
+    #[test]
+    fn infinite_factor_is_bit_identical() {
+        let step = skewed_step(5, 64);
+        let mut enf = CapacityEnforcer::new(&cfg(f64::INFINITY, CapacityPolicy::Drop), 3, 8);
+        let view = enf.enforce_step(&step);
+        for (a, b) in view.routing.layers.iter().zip(&step.layers) {
+            assert_eq!(a, b);
+        }
+        let t = view.totals();
+        assert_eq!(t.offered, t.admitted);
+        assert_eq!(t.dropped + t.queued + t.rerouted, 0);
+        assert_eq!(enf.backlog(), 0);
+    }
+
+    #[test]
+    fn drop_conserves_and_respects_cap() {
+        let step = skewed_step(7, 64);
+        let mut enf = CapacityEnforcer::new(&cfg(1.0, CapacityPolicy::Drop), 3, 8);
+        let view = enf.enforce_step(&step);
+        for (l, s) in view.layer_stats.iter().enumerate() {
+            assert_eq!(s.admitted + s.dropped + s.queued, s.offered, "layer {l}");
+            assert_eq!(s.queued, 0);
+            let counts = view.routing.layers[l].expert_counts();
+            for (e, &c) in counts.iter().enumerate() {
+                assert!(c <= view.caps[l], "expert {e} over cap: {c} > {}", view.caps[l]);
+            }
+        }
+        // skewed stream at factor 1.0 must actually bind
+        assert!(view.totals().dropped > 0, "cap never bound on a skewed stream");
+        let per_token: u32 = view.dropped_per_token.iter().sum();
+        assert_eq!(u64::from(per_token), view.totals().dropped);
+    }
+
+    #[test]
+    fn reroute_keeps_tokens_distinct_and_under_cap() {
+        let step = skewed_step(9, 64);
+        let mut enf = CapacityEnforcer::new(&cfg(1.0, CapacityPolicy::Reroute), 3, 8);
+        let view = enf.enforce_step(&step);
+        assert!(view.totals().rerouted > 0, "nothing rerouted on a skewed stream");
+        for lr in &view.routing.layers {
+            let counts = lr.expert_counts();
+            let cap = enf.cap_for(lr.n_tokens, lr.top_k, lr.n_experts);
+            assert!(counts.iter().all(|&c| c <= cap));
+            for t in 0..lr.n_tokens {
+                let mut s: Vec<u16> = lr
+                    .token_experts(t)
+                    .iter()
+                    .copied()
+                    .filter(|&e| e != DROPPED)
+                    .collect();
+                s.sort_unstable();
+                s.dedup();
+                assert_eq!(
+                    s.len(),
+                    lr.token_experts(t).iter().filter(|&&e| e != DROPPED).count(),
+                    "reroute duplicated an expert within token {t}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn queue_carries_to_next_step_fifo() {
+        let step = skewed_step(11, 64);
+        let mut enf = CapacityEnforcer::new(&cfg(1.0, CapacityPolicy::Queue), 3, 8);
+        let v1 = enf.enforce_step(&step);
+        let queued: u64 = v1.totals().queued;
+        assert!(queued > 0, "nothing queued on a skewed stream");
+        assert_eq!(enf.backlog() as u64, queued);
+        assert_eq!(v1.totals().dropped, 0, "queue policy must not drop");
+        // a uniform (unskewed) next step admits the backlog ahead of
+        // fresh traffic without breaching the cap
+        let mut m = RoutingModel::new(3, 16, 4, 2, 8.0, 0.0, 1.0, 3);
+        let next = m.route_step(&vec![0u16; 64]);
+        let v2 = enf.enforce_step(&next);
+        let carried: u64 = v2.totals().carried_admitted;
+        assert!(carried > 0, "backlog never admitted");
+        for (l, s) in v2.layer_stats.iter().enumerate() {
+            assert_eq!(s.carried_admitted + s.requeued, s.carried_in, "layer {l}");
+            // caps hold with the backlog included
+            let mut counts = v2.routing.layers[l].expert_counts();
+            for &(e, _) in &v2.carried[l] {
+                counts[e as usize] += 1;
+            }
+            assert!(counts.iter().all(|&c| c <= v2.caps[l]));
+        }
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let step = skewed_step(13, 48);
+        for policy in [CapacityPolicy::Drop, CapacityPolicy::Reroute, CapacityPolicy::Queue] {
+            let mut a = CapacityEnforcer::new(&cfg(1.25, policy), 3, 8);
+            let mut b = CapacityEnforcer::new(&cfg(1.25, policy), 3, 8);
+            let va = a.enforce_step(&step);
+            let vb = b.enforce_step(&step);
+            assert_eq!(va.routing.layers, vb.routing.layers);
+            assert_eq!(va.layer_stats, vb.layer_stats);
+            assert_eq!(va.carried, vb.carried);
+        }
+    }
+
+    #[test]
+    fn cap_formula_matches_snippet() {
+        let enf = CapacityEnforcer::new(&cfg(1.25, CapacityPolicy::Drop), 1, 8);
+        // ⌈1.25 · 4·64 / 16⌉ = ⌈20⌉ = 20
+        assert_eq!(enf.cap_for(64, 4, 16), 20);
+        // ⌈1.1 · 4·63 / 16⌉ = ⌈17.325⌉ = 18
+        let enf = CapacityEnforcer::new(&cfg(1.1, CapacityPolicy::Drop), 1, 8);
+        assert_eq!(enf.cap_for(63, 4, 16), 18);
+    }
+}

@@ -8,6 +8,16 @@
 
 use crate::util::Rng;
 
+pub mod capacity;
+pub use capacity::{CapacityEnforcer, CapacityLayerStats, CapacityStepStats, CapacityStepView};
+
+/// Sentinel expert id marking a routing slot vacated by capacity
+/// enforcement (dropped or queued to the next step). Never a valid
+/// expert id: layers are capped far below `u16::MAX` experts. Every
+/// consumer of `experts` skips it; with capacity off the sentinel never
+/// appears, so the skip guards cannot perturb the pre-capacity model.
+pub const DROPPED: u16 = u16::MAX;
+
 /// Ground-truth routing of one MoE layer for one step.
 #[derive(Debug, Clone, PartialEq)]
 pub struct LayerRouting {
@@ -25,7 +35,9 @@ impl LayerRouting {
     /// Wrap a flat expert-id buffer (asserts the shape).
     pub fn new(n_tokens: usize, top_k: usize, n_experts: usize, experts: Vec<u16>) -> LayerRouting {
         assert_eq!(experts.len(), n_tokens * top_k);
-        debug_assert!(experts.iter().all(|&e| (e as usize) < n_experts));
+        debug_assert!(experts
+            .iter()
+            .all(|&e| (e as usize) < n_experts || e == DROPPED));
         LayerRouting {
             n_tokens,
             top_k,
@@ -40,10 +52,14 @@ impl LayerRouting {
         &self.experts[t * self.top_k..(t + 1) * self.top_k]
     }
 
-    /// Global tokens per expert (n_e in the paper).
+    /// Global tokens per expert (n_e in the paper). [`DROPPED`]
+    /// sentinel slots are not counted anywhere.
     pub fn expert_counts(&self) -> Vec<u32> {
         let mut counts = vec![0u32; self.n_experts];
         for &e in &self.experts {
+            if e == DROPPED {
+                continue;
+            }
             counts[e as usize] += 1;
         }
         counts
@@ -55,6 +71,9 @@ impl LayerRouting {
         for t in 0..self.n_tokens {
             let rs = token_rank(t, self.n_tokens, ep);
             for &e in self.token_experts(t) {
+                if e == DROPPED {
+                    continue;
+                }
                 counts[e as usize][rs] += 1;
             }
         }
@@ -82,6 +101,9 @@ impl LayerRouting {
         for t in 0..self.n_tokens {
             let rs = token_rank(t, self.n_tokens, ep);
             for &e in self.token_experts(t) {
+                if e == DROPPED {
+                    continue;
+                }
                 out[e as usize * ep + rs] += 1.0;
             }
         }

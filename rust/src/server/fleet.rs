@@ -177,6 +177,20 @@ impl FleetReport {
             .collect()
     }
 
+    /// Per-tenant capacity-drop rates across the fleet: `(tenant,
+    /// offered routing slots, dropped fraction)` for every tenant the
+    /// merged metrics saw capacity traffic for. Empty whenever
+    /// `[capacity]` enforcement is off fleet-wide (pre-capacity runs
+    /// report nothing rather than a sea of zeros).
+    pub fn per_tenant_drop_rates(&self) -> Vec<(u16, u64, f64)> {
+        let merged = self.merged_metrics();
+        merged
+            .tenant_capacity
+            .iter()
+            .map(|(&t, &(offered, _))| (t, offered, merged.drop_rate_for_tenant(t)))
+            .collect()
+    }
+
     /// Per-replica attribution rows `(replica, role name, utilization,
     /// assigned, completed, tokens)` — the pool-saturation view printed
     /// under `probe fleet` tables.
@@ -469,6 +483,39 @@ mod tests {
             }
         }
         assert!(saw_full, "the slowest replica must sit at utilization 1.0");
+    }
+
+    #[test]
+    fn fleet_surfaces_per_tenant_drop_rates_under_capacity() {
+        let factory = move |idx: usize| {
+            let mut cfg = small_cfg();
+            cfg.capacity.factor = 1.0; // binds on the skewed Repeat stream
+            let bal = Box::new(StaticEp::new(&cfg));
+            Ok(SimEngine::new(cfg, bal, 31 ^ (idx as u64).wrapping_mul(0x9E37_79B9)))
+        };
+        let cfg = FleetConfig {
+            replicas: 2,
+            policy: DispatchKind::RoundRobin,
+            max_steps: 20_000,
+            threads: 0,
+            parallel: true,
+        };
+        let reqs = skewed_trace(24, 31);
+        let report = run_fleet(&cfg, &reqs, factory);
+        assert!(report.errors().is_empty(), "{:?}", report.errors());
+        let rates = report.per_tenant_drop_rates();
+        assert!(!rates.is_empty(), "capacity ran but no tenant was charged");
+        for (t, offered, rate) in &rates {
+            assert!(*offered > 0, "tenant {t} charged with zero offered slots");
+            assert!((0.0..=1.0).contains(rate));
+        }
+        assert!(
+            rates.iter().any(|&(_, _, r)| r > 0.0),
+            "factor 1.0 never dropped on the skewed stream: {rates:?}"
+        );
+        // and the pre-capacity fleet reports nothing at all
+        let clean = run_fleet(&cfg, &reqs, sim_factory(31));
+        assert!(clean.per_tenant_drop_rates().is_empty());
     }
 
     #[test]

@@ -223,6 +223,21 @@ pub fn prometheus_text(reg: &Registry, link_util: &[(String, f64)]) -> String {
         reg.kv_handoffs_total as f64,
     );
     counter(
+        "probe_tokens_dropped_total",
+        "Routing slots discarded by capacity enforcement.",
+        reg.tokens_dropped_total as f64,
+    );
+    counter(
+        "probe_tokens_rerouted_total",
+        "Routing slots rerouted to an under-cap expert.",
+        reg.tokens_rerouted_total as f64,
+    );
+    counter(
+        "probe_tokens_queued_total",
+        "Routing slots queued to the next step by capacity enforcement.",
+        reg.tokens_queued_total as f64,
+    );
+    counter(
         "probe_exposed_seconds_total",
         "Transfer seconds exposed on the critical path.",
         reg.exposed_seconds_total,

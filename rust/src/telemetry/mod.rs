@@ -165,6 +165,35 @@ pub enum Event {
         /// KV bytes transferred.
         bytes: f64,
     },
+    /// Capacity enforcement discarded routing slots (ISSUE 9).
+    TokenDrop {
+        /// Step the slots were offered in.
+        step: u32,
+        /// Layer whose cap bound.
+        layer: u16,
+        /// Slots discarded this layer.
+        count: u32,
+    },
+    /// Capacity enforcement re-assigned over-cap slots to the
+    /// next-ranked under-cap expert.
+    TokenReroute {
+        /// Step the slots were offered in.
+        step: u32,
+        /// Layer whose cap bound.
+        layer: u16,
+        /// Slots rerouted this layer.
+        count: u32,
+    },
+    /// Capacity enforcement deferred over-cap slots to the same layer
+    /// of the next step.
+    TokenQueue {
+        /// Step the slots were offered in.
+        step: u32,
+        /// Layer whose cap bound.
+        layer: u16,
+        /// Slots queued (fresh + re-queued backlog) this layer.
+        count: u32,
+    },
 }
 
 impl Event {
@@ -182,6 +211,9 @@ impl Event {
             Event::Dispatch { .. } => "dispatch",
             Event::RoleFlip { .. } => "role_flip",
             Event::KvHandoff { .. } => "kv_handoff",
+            Event::TokenDrop { .. } => "token_drop",
+            Event::TokenReroute { .. } => "token_reroute",
+            Event::TokenQueue { .. } => "token_queue",
         }
     }
 
@@ -197,7 +229,10 @@ impl Event {
             | Event::Preempt { step, .. }
             | Event::BatchComposed { step, .. }
             | Event::Dispatch { step, .. }
-            | Event::KvHandoff { step, .. } => step,
+            | Event::KvHandoff { step, .. }
+            | Event::TokenDrop { step, .. }
+            | Event::TokenReroute { step, .. }
+            | Event::TokenQueue { step, .. } => step,
             Event::RoleFlip { window, .. } => window,
         }
     }
@@ -332,6 +367,13 @@ impl Event {
                 pairs.push(("to", Json::Num(to as f64)));
                 pairs.push(("bytes", Json::Num(bytes)));
             }
+            Event::TokenDrop { step, layer, count }
+            | Event::TokenReroute { step, layer, count }
+            | Event::TokenQueue { step, layer, count } => {
+                pairs.push(("step", Json::Num(step as f64)));
+                pairs.push(("layer", Json::Num(layer as f64)));
+                pairs.push(("count", Json::Num(count as f64)));
+            }
         }
         Json::obj(pairs)
     }
@@ -364,6 +406,12 @@ pub struct Registry {
     pub role_flips_total: u64,
     /// Prefill→decode KV handoffs.
     pub kv_handoffs_total: u64,
+    /// Routing slots discarded by capacity enforcement.
+    pub tokens_dropped_total: u64,
+    /// Routing slots rerouted to an under-cap expert.
+    pub tokens_rerouted_total: u64,
+    /// Routing slots queued to the next step.
+    pub tokens_queued_total: u64,
     /// Seconds of transfer time exposed on the critical path (sum).
     pub exposed_seconds_total: f64,
     /// Requests waiting in the admission queue (gauge).
@@ -396,6 +444,9 @@ impl Registry {
             Event::Dispatch { .. } => self.dispatches_total += 1,
             Event::RoleFlip { .. } => self.role_flips_total += 1,
             Event::KvHandoff { .. } => self.kv_handoffs_total += 1,
+            Event::TokenDrop { count, .. } => self.tokens_dropped_total += *count as u64,
+            Event::TokenReroute { count, .. } => self.tokens_rerouted_total += *count as u64,
+            Event::TokenQueue { count, .. } => self.tokens_queued_total += *count as u64,
             Event::MemGovernor {
                 kv_pages,
                 watermark,
@@ -535,6 +586,9 @@ impl Recorder {
         r.dispatches_total += other.dispatches_total;
         r.role_flips_total += other.role_flips_total;
         r.kv_handoffs_total += other.kv_handoffs_total;
+        r.tokens_dropped_total += other.tokens_dropped_total;
+        r.tokens_rerouted_total += other.tokens_rerouted_total;
+        r.tokens_queued_total += other.tokens_queued_total;
         r.exposed_seconds_total += other.exposed_seconds_total;
         r.kv_pages += other.kv_pages;
         r.queue_depth += other.queue_depth;

@@ -1,0 +1,250 @@
+//! Cross-balancer capacity invariants (ISSUE 9 acceptance gates):
+//!
+//! 1. token conservation — every routing slot the router offers is
+//!    admitted, dropped, or queued, per layer and per step, for every
+//!    overflow policy on random streams;
+//! 2. the cap holds — no expert ever exceeds ⌈C·kT/E⌉ admitted slots,
+//!    backlog included;
+//! 3. `factor = ∞` is bit-identical to the pre-capacity model for all
+//!    four balancing systems;
+//! 4. HarMoEny's per-rank compute spread is never worse than static
+//!    sharding's on skewed streams (the rescheduling guarantee).
+
+use probe::balancers::{decide_step, HarMoEny, StaticEp};
+use probe::config::{BalancerKind, CapacityPolicy, Config};
+use probe::coordinator::Coordinator;
+use probe::engine::StepReport;
+use probe::experiments::make_balancer;
+use probe::routing::{CapacityEnforcer, RoutingModel, StepRouting, DROPPED};
+use probe::workload::{Dataset, RequestGenerator, WorkloadSpec};
+
+const POLICIES: [CapacityPolicy; 3] = [
+    CapacityPolicy::Drop,
+    CapacityPolicy::Reroute,
+    CapacityPolicy::Queue,
+];
+
+const LAYERS: usize = 3;
+const EP: usize = 8;
+
+/// A skewed (calibrated) routing stream — the regime where caps bind.
+fn skewed_stream(seed: u64, steps: usize, tokens: usize) -> Vec<StepRouting> {
+    let mut m = RoutingModel::calibrated(LAYERS, 16, 4, 2, seed);
+    (0..steps)
+        .map(|_| {
+            let s = m.route_step(&vec![0u16; tokens]);
+            m.step_drift();
+            s
+        })
+        .collect()
+}
+
+fn small_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.batch_per_rank = 32;
+    cfg.prefill_chunk_per_rank = 256;
+    cfg.model.n_layers = LAYERS;
+    cfg
+}
+
+fn gen(seed: u64) -> RequestGenerator {
+    let mut spec = WorkloadSpec::new(Dataset::Repeat, 4);
+    spec.mean_prompt_len = 8;
+    spec.mean_new_tokens = 24;
+    RequestGenerator::new(spec, seed)
+}
+
+#[test]
+fn conservation_holds_per_layer_and_per_step() {
+    for policy in POLICIES {
+        for seed in [3u64, 17, 91] {
+            let cfg = probe::config::CapacityConfig {
+                factor: 1.0,
+                policy,
+            };
+            let mut enf = CapacityEnforcer::new(&cfg, LAYERS, EP);
+            let mut shed_any = false;
+            for step in skewed_stream(seed, 5, 64) {
+                let view = enf.enforce_step(&step);
+                for (l, s) in view.layer_stats.iter().enumerate() {
+                    // fresh slots: admitted + dropped + queued == offered
+                    assert_eq!(
+                        s.admitted + s.dropped + s.queued,
+                        s.offered,
+                        "policy {:?} seed {seed} layer {l} leaks fresh slots",
+                        policy
+                    );
+                    // backlog slots: admitted + requeued == carried in
+                    assert_eq!(
+                        s.carried_admitted + s.requeued,
+                        s.carried_in,
+                        "policy {:?} seed {seed} layer {l} leaks backlog",
+                        policy
+                    );
+                    // the admitted routing's surviving slots ARE the
+                    // admitted count — the sentinel marks exactly the rest
+                    let survivors = view.routing.layers[l]
+                        .experts
+                        .iter()
+                        .filter(|&&e| e != DROPPED)
+                        .count() as u32;
+                    assert_eq!(survivors, s.admitted, "layer {l} sentinel mismatch");
+                }
+                // step totals are the sum of the layers
+                let t = view.totals();
+                assert_eq!(
+                    t.admitted + t.dropped + t.queued,
+                    t.offered + view.layer_stats.iter().map(|s| u64::from(s.requeued)).sum::<u64>(),
+                    "step totals drift from layer stats"
+                );
+                shed_any |= t.dropped + t.queued > 0;
+            }
+            assert!(
+                shed_any,
+                "factor 1.0 never bound under {policy:?} — streams not skewed enough"
+            );
+        }
+    }
+}
+
+#[test]
+fn no_expert_ever_exceeds_the_cap() {
+    for policy in POLICIES {
+        for seed in [5u64, 23] {
+            let cfg = probe::config::CapacityConfig {
+                factor: 1.25,
+                policy,
+            };
+            let mut enf = CapacityEnforcer::new(&cfg, LAYERS, EP);
+            for step in skewed_stream(seed, 4, 64) {
+                let view = enf.enforce_step(&step);
+                for (l, lr) in view.routing.layers.iter().enumerate() {
+                    // admitted fresh slots plus this layer's admitted
+                    // backlog must respect the cap jointly
+                    let mut counts = lr.expert_counts();
+                    for &(e, _) in &view.carried[l] {
+                        counts[e as usize] += 1;
+                    }
+                    for (e, &c) in counts.iter().enumerate() {
+                        assert!(
+                            c <= view.caps[l],
+                            "policy {:?} layer {l} expert {e}: {c} > cap {}",
+                            policy,
+                            view.caps[l]
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Drive `steps` serving steps and return (per-step reports, final
+/// clock bits, throughput bits).
+fn serve(kind: BalancerKind, factor: f64, policy: CapacityPolicy, seed: u64) -> (Vec<StepReport>, u64, u64) {
+    let mut cfg = small_cfg();
+    cfg.capacity.factor = factor;
+    cfg.capacity.policy = policy;
+    let bal = make_balancer(kind, &cfg, seed);
+    let mut c = Coordinator::new(cfg, bal, seed);
+    for r in gen(seed ^ 0xA5).take(96) {
+        c.submit(r);
+    }
+    let mut reps = Vec::new();
+    for _ in 0..12 {
+        match c.step() {
+            Ok(Some(rep)) => reps.push(rep),
+            _ => break,
+        }
+    }
+    (reps, c.clock.to_bits(), c.metrics.throughput().to_bits())
+}
+
+#[test]
+fn every_balancer_serves_under_every_policy() {
+    for kind in BalancerKind::ALL {
+        for policy in POLICIES {
+            let (reps, _, _) = serve(kind, 1.0, policy, 7);
+            assert!(!reps.is_empty(), "{} x {:?} never stepped", kind.name(), policy);
+            let mut bound = false;
+            for rep in &reps {
+                assert!(rep.cap_offered > 0, "enforcement never ran");
+                // each policy sheds into its own channel only
+                match policy {
+                    CapacityPolicy::Drop => {
+                        assert_eq!(rep.cap_rerouted + rep.cap_queued, 0);
+                    }
+                    CapacityPolicy::Reroute => assert_eq!(rep.cap_queued, 0),
+                    CapacityPolicy::Queue => assert_eq!(rep.cap_dropped, 0),
+                }
+                assert!(rep.cap_dropped <= rep.cap_offered);
+                bound |= rep.cap_dropped + rep.cap_rerouted + rep.cap_queued > 0;
+            }
+            assert!(
+                bound,
+                "{} x {:?}: factor 1.0 never bound on the Repeat stream",
+                kind.name(),
+                policy
+            );
+        }
+    }
+}
+
+#[test]
+fn infinite_factor_is_bit_identical_to_pre_capacity_for_all_balancers() {
+    for kind in BalancerKind::ALL {
+        let (off_reps, off_clock, off_thr) = serve(kind, 0.0, CapacityPolicy::Drop, 11);
+        let (inf_reps, inf_clock, inf_thr) = serve(kind, f64::INFINITY, CapacityPolicy::Drop, 11);
+        assert_eq!(off_clock, inf_clock, "{}: clock diverged", kind.name());
+        assert_eq!(off_thr, inf_thr, "{}: throughput diverged", kind.name());
+        assert_eq!(off_reps.len(), inf_reps.len());
+        for (a, b) in off_reps.iter().zip(&inf_reps) {
+            assert_eq!(a.latency.to_bits(), b.latency.to_bits());
+            assert_eq!(a.tokens, b.tokens);
+            // unbounded enforcement runs but never sheds
+            assert_eq!(b.cap_dropped + b.cap_rerouted + b.cap_queued, 0);
+        }
+    }
+}
+
+/// Per-rank expert-compute loads of one layer decision.
+fn rank_loads(d: &probe::simulator::LayerDecision, n_experts: usize, ep: usize) -> Vec<f64> {
+    (0..ep)
+        .map(|r| (0..n_experts).map(|e| d.assignment.tokens_on(e, r)).sum())
+        .collect()
+}
+
+fn spread(loads: &[f64]) -> f64 {
+    loads.iter().cloned().fold(f64::MIN, f64::max)
+        - loads.iter().cloned().fold(f64::MAX, f64::min)
+}
+
+#[test]
+fn harmoeny_rank_spread_never_worse_than_static_on_skewed_streams() {
+    let cfg = Config::default();
+    let n_experts = cfg.model.n_experts;
+    let ep = cfg.cluster.ep;
+    let mut stat = StaticEp::new(&cfg);
+    let mut har = HarMoEny::new(&cfg);
+    let mut m = RoutingModel::calibrated(LAYERS, n_experts, cfg.model.top_k, 2, 43);
+    let mut ever_tighter = false;
+    for step in 0..6 {
+        let routing = m.route_step(&vec![0u16; 512]);
+        let ds_s = decide_step(&mut stat, step, &routing);
+        let ds_h = decide_step(&mut har, step, &routing);
+        for (l, (s, h)) in ds_s.iter().zip(&ds_h).enumerate() {
+            let sp_s = spread(&rank_loads(s, n_experts, ep));
+            let sp_h = spread(&rank_loads(h, n_experts, ep));
+            assert!(
+                sp_h <= sp_s + 1e-9,
+                "step {step} layer {l}: harmoeny spread {sp_h} > static {sp_s}"
+            );
+            ever_tighter |= sp_h < sp_s - 1e-9;
+        }
+        m.step_drift();
+    }
+    assert!(
+        ever_tighter,
+        "harmoeny never tightened the spread on a skewed stream"
+    );
+}

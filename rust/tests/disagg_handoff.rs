@@ -12,7 +12,7 @@
 use anyhow::Result;
 
 use probe::balancers::StaticEp;
-use probe::config::Config;
+use probe::config::{BalancerKind, Config};
 use probe::engine::sim::SimExecutor;
 use probe::engine::ServingEngine;
 use probe::experiments::disagg::{run_pair, DisaggParams};
@@ -40,6 +40,7 @@ fn sim_factory(seed: u64) -> impl Fn(usize) -> Result<SimEngine> + Send + Sync {
 fn bench_params() -> DisaggParams {
     DisaggParams {
         presets: vec!["burst".into()],
+        balancers: vec![BalancerKind::StaticEp],
         replicas: 4,
         load: 0.7,
         steps: 80,
@@ -54,7 +55,7 @@ fn bench_params() -> DisaggParams {
 #[test]
 fn kv_pages_are_conserved_across_the_handoff() {
     let p = bench_params();
-    let (reqs, _, disagg) = run_pair(&p, "burst", 0);
+    let (reqs, _, disagg) = run_pair(&p, "burst", 0, BalancerKind::StaticEp);
     assert!(disagg.errors().is_empty(), "{:?}", disagg.errors());
     assert_eq!(disagg.completed(), reqs.len(), "disagg dropped requests");
     // conservation: pages freed at prefill handoff == pages admitted
@@ -71,7 +72,7 @@ fn kv_pages_are_conserved_across_the_handoff() {
 #[test]
 fn disagg_beats_colocated_decode_tpot_under_prefill_burst() {
     let p = bench_params();
-    let (reqs, colocated, disagg) = run_pair(&p, "burst", 0);
+    let (reqs, colocated, disagg) = run_pair(&p, "burst", 0, BalancerKind::StaticEp);
     assert!(!reqs.is_empty());
     // matched load: both modes served the identical stream completely
     assert_eq!(colocated.completed(), reqs.len());

@@ -277,6 +277,91 @@ fn telemetry_enabled_replay_records_bit_identically() {
 }
 
 #[test]
+fn capacity_event_streams_replay_event_for_event() {
+    // ISSUE 9: capacity enforcement (drop/reroute/queue) is part of
+    // the deterministic step model — a replayed trace must reproduce
+    // the shed-traffic event stream event for event, per policy,
+    // including the cross-step queued backlog
+    use probe::config::CapacityPolicy;
+    use probe::telemetry::Event;
+
+    fn serve_capacity(
+        policy: CapacityPolicy,
+        reqs: Vec<Request>,
+    ) -> (u64, Vec<(u64, Event)>, (u64, u64, u64)) {
+        let mut cfg = small_cfg();
+        cfg.telemetry.enabled = true;
+        cfg.telemetry.ring_capacity = 1 << 20;
+        cfg.capacity.factor = 1.0; // binds on the calibrated skew
+        cfg.capacity.policy = policy;
+        let bal = Box::new(StaticEp::new(&cfg));
+        let mut c = Coordinator::new(cfg, bal, 17);
+        c.submit_all(reqs);
+        c.run_to_completion(100_000).unwrap();
+        assert_eq!(c.recorder.dropped(), 0, "ring wrapped; grow ring_capacity");
+        let cap_events: Vec<(u64, Event)> = c
+            .recorder
+            .events()
+            .filter(|(_, e)| {
+                matches!(
+                    e,
+                    Event::TokenDrop { .. }
+                        | Event::TokenReroute { .. }
+                        | Event::TokenQueue { .. }
+                )
+            })
+            .copied()
+            .collect();
+        let reg = (
+            c.recorder.registry.tokens_dropped_total,
+            c.recorder.registry.tokens_rerouted_total,
+            c.recorder.registry.tokens_queued_total,
+        );
+        (c.clock.to_bits(), cap_events, reg)
+    }
+
+    let original = scenario_stream(27);
+    let text = trace::to_jsonl(&original);
+    let replayed = trace::from_jsonl(&text).unwrap();
+    assert_eq!(replayed, original);
+
+    for policy in [
+        CapacityPolicy::Drop,
+        CapacityPolicy::Reroute,
+        CapacityPolicy::Queue,
+    ] {
+        let (clock_a, events_a, reg_a) = serve_capacity(policy, original.clone());
+        let (clock_b, events_b, reg_b) = serve_capacity(policy, replayed.clone());
+        assert_eq!(clock_a, clock_b, "{policy:?}: serving clocks diverged");
+        assert!(
+            !events_a.is_empty(),
+            "{policy:?}: factor 1.0 never shed on the scenario stream"
+        );
+        assert_eq!(
+            events_a, events_b,
+            "{policy:?}: capacity event streams diverged"
+        );
+        assert_eq!(reg_a, reg_b, "{policy:?}: capacity counters diverged");
+        // each policy sheds into its own channel
+        let (dropped, rerouted, queued) = reg_a;
+        match policy {
+            CapacityPolicy::Drop => {
+                assert!(dropped > 0);
+                assert_eq!(rerouted + queued, 0);
+            }
+            CapacityPolicy::Reroute => {
+                assert!(rerouted > 0);
+                assert_eq!(queued, 0);
+            }
+            CapacityPolicy::Queue => {
+                assert!(queued > 0);
+                assert_eq!(dropped, 0);
+            }
+        }
+    }
+}
+
+#[test]
 fn replay_preserves_open_loop_arrival_gaps() {
     // a request arriving far into the horizon must not be time-warped
     // to t=0 by the record/replay round trip

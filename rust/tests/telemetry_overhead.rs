@@ -81,6 +81,60 @@ fn telemetry_off_is_bit_identical_to_telemetry_on() {
 }
 
 #[test]
+fn telemetry_off_is_bit_identical_with_capacity_active() {
+    // ISSUE 9: capacity enforcement emits TokenDrop/TokenReroute/
+    // TokenQueue events, and those emissions must stay pure
+    // observation — a capacity-enabled run is bit-identical with the
+    // recorder off and on
+    let reqs = storm_stream(25);
+    let mut cfg_off = storm_cfg();
+    cfg_off.capacity.factor = 1.0; // binds on the storm stream
+    cfg_off.telemetry.enabled = false;
+    let mut cfg_on = cfg_off.clone();
+    cfg_on.telemetry.enabled = true;
+    cfg_on.telemetry.ring_capacity = 1 << 20;
+
+    let (obs_off, c_off) = serve(cfg_off, reqs.clone());
+    let (obs_on, c_on) = serve(cfg_on, reqs);
+
+    assert_eq!(
+        obs_off, obs_on,
+        "recording capacity events perturbed the serving computation"
+    );
+    assert!(c_off.recorder.is_empty());
+    // the enabled run recorded the shed traffic, and the registry
+    // counters agree with the engine's own accounting
+    let reg = &c_on.recorder.registry;
+    assert!(
+        reg.tokens_dropped_total > 0,
+        "factor 1.0 never dropped on the storm stream"
+    );
+    let dropped_events: u64 = c_on
+        .recorder
+        .events()
+        .filter_map(|(_, e)| match *e {
+            Event::TokenDrop { count, .. } => Some(u64::from(count)),
+            _ => None,
+        })
+        .sum();
+    assert_eq!(c_on.recorder.dropped(), 0, "ring wrapped; grow ring_capacity");
+    assert_eq!(
+        dropped_events, reg.tokens_dropped_total,
+        "drop events and counter disagree"
+    );
+    let engine_dropped: u64 = c_on
+        .metrics
+        .tenant_capacity
+        .values()
+        .map(|&(_, d)| d)
+        .sum();
+    assert_eq!(
+        engine_dropped, reg.tokens_dropped_total,
+        "tenant attribution and telemetry counter disagree"
+    );
+}
+
+#[test]
 fn storm_run_records_the_control_plane_story() {
     // force the miss path deterministically: window enforcement off so
     // the planner still fetches on load-balancing grounds alone (the

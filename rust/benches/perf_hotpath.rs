@@ -167,6 +167,54 @@ fn main() {
         ]);
     }
 
+    // capacity enforcement per step (ISSUE 10 satellite: ring-backed
+    // reroute — the overflow-heavy regime where the old O(E) rescan hurt)
+    {
+        use probe::config::{CapacityConfig, CapacityPolicy};
+        use probe::routing::CapacityEnforcer;
+        let layers = 6;
+        let mut rm4 = RoutingModel::calibrated(layers, model.n_experts, model.top_k, 4, 13);
+        let step = rm4.route_step(&vec![0u16; tokens]);
+        let ccfg = CapacityConfig {
+            factor: 1.0,
+            policy: CapacityPolicy::Reroute,
+        };
+        let mut enf = CapacityEnforcer::new(&ccfg, layers, ep);
+        let s = time_it(3, 20, || {
+            std::hint::black_box(enf.enforce_step(&step));
+        });
+        b.row(&[
+            format!("capacity enforce_step({layers} layers, reroute, C=1.0)"),
+            fmt_time(s.mean),
+            fmt_time(s.p50),
+            fmt_time(s.p99),
+            "sim-only".into(),
+        ]);
+    }
+
+    // harmoeny rescheduling per layer (ISSUE 10 satellite: two-heap
+    // hot→cold selection replacing the per-round O(ranks) scans)
+    {
+        use probe::balancers::{decide_step, HarMoEny};
+        let mut cfg_h = probe::config::Config::default();
+        cfg_h.model.n_layers = 1;
+        let mut har = HarMoEny::new(&cfg_h);
+        let mut rm5 = RoutingModel::calibrated(1, 128, 4, 4, 17);
+        let mut step_no = 0usize;
+        let s = time_it(3, 30, || {
+            let routing = rm5.route_step(&vec![0u16; tokens]);
+            std::hint::black_box(decide_step(&mut har, step_no, &routing));
+            step_no += 1;
+        });
+        b.row(&[
+            "harmoeny decide(1 layer)".into(),
+            fmt_time(s.mean),
+            fmt_time(s.p50),
+            fmt_time(s.p99),
+            "sim-only".into(),
+        ]);
+    }
+
     b.note("planner budget: must fit the simulated dispatch window so the");
     b.note("aux track hides it (paper: single-SM solver inside All-to-All)");
     b.print();

@@ -49,6 +49,8 @@ pub struct HarMoEny {
     resident: Vec<Vec<(u16, u16)>>,
     /// Live per-rank replica-slot caps from the memory governor.
     replica_caps: Vec<usize>,
+    /// Reusable hot/cold selection heaps for the equalizer loop.
+    heaps: selection::LoadHeaps,
 }
 
 impl HarMoEny {
@@ -64,6 +66,7 @@ impl HarMoEny {
             max_redundant: config.probe.max_redundant,
             resident: Vec::new(),
             replica_caps: Vec::new(),
+            heaps: selection::LoadHeaps::default(),
         }
     }
 
@@ -82,22 +85,107 @@ impl HarMoEny {
     }
 }
 
-/// Index of the largest value; ties pick the smallest index.
-fn argmax(v: &[f64]) -> usize {
-    v.iter()
-        .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap().then(b.0.cmp(&a.0)))
-        .map(|(i, _)| i)
-        .unwrap_or(0)
-}
+/// Hot/cold rank selection for the equalizer loop (ISSUE 10): the old
+/// O(ranks) scans per round are replaced by a pair of lazy-deletion
+/// binary heaps; the scans stay exported as the bit-parity reference
+/// (`tests/balancer_parity.rs` replays random mutation traces against
+/// both).
+#[doc(hidden)]
+pub mod selection {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
 
-/// Index of the smallest value; ties pick the smallest index.
-fn argmin(v: &[f64]) -> usize {
-    v.iter()
-        .enumerate()
-        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap().then(a.0.cmp(&b.0)))
-        .map(|(i, _)| i)
-        .unwrap_or(0)
+    /// Total-order key over finite loads; `partial_cmp` semantics
+    /// (panics on NaN), so ±0.0 tie and the index breaks it — exactly
+    /// the scan's comparator.
+    #[derive(Debug, Clone, Copy, PartialEq)]
+    struct Key(f64);
+
+    impl Eq for Key {}
+
+    impl PartialOrd for Key {
+        fn partial_cmp(&self, other: &Key) -> Option<std::cmp::Ordering> {
+            Some(self.cmp(other))
+        }
+    }
+
+    impl Ord for Key {
+        fn cmp(&self, other: &Key) -> std::cmp::Ordering {
+            self.0.partial_cmp(&other.0).expect("NaN load")
+        }
+    }
+
+    /// Index of the largest value; ties pick the smallest index.
+    pub fn scan_argmax(v: &[f64]) -> usize {
+        v.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap().then(b.0.cmp(&a.0)))
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+
+    /// Index of the smallest value; ties pick the smallest index.
+    pub fn scan_argmin(v: &[f64]) -> usize {
+        v.iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap().then(a.0.cmp(&b.0)))
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+
+    /// Max- and min-heaps over per-rank loads with lazy deletion: an
+    /// entry is live iff its key bit-matches the current load of its
+    /// rank, so a point update is two pushes and stale entries discard
+    /// themselves on the next peek. Buffers persist across
+    /// [`LoadHeaps::rebuild`] calls (reset, never freed).
+    #[derive(Debug, Clone, Default)]
+    pub struct LoadHeaps {
+        max: BinaryHeap<(Key, Reverse<usize>)>,
+        min: BinaryHeap<Reverse<(Key, usize)>>,
+    }
+
+    impl LoadHeaps {
+        /// Reset both heaps to the given load vector.
+        pub fn rebuild(&mut self, loads: &[f64]) {
+            self.max.clear();
+            self.max
+                .extend(loads.iter().enumerate().map(|(i, &l)| (Key(l), Reverse(i))));
+            self.min.clear();
+            self.min
+                .extend(loads.iter().enumerate().map(|(i, &l)| Reverse((Key(l), i))));
+        }
+
+        /// Record that `loads[idx]` changed to `load` (the old entries
+        /// invalidate lazily).
+        pub fn update(&mut self, idx: usize, load: f64) {
+            self.max.push((Key(load), Reverse(idx)));
+            self.min.push(Reverse((Key(load), idx)));
+        }
+
+        /// Index of the largest current load; ties pick the smallest
+        /// index. `loads` must be the vector the heap entries refer to.
+        pub fn argmax(&mut self, loads: &[f64]) -> usize {
+            while let Some(&(Key(k), Reverse(i))) = self.max.peek() {
+                if loads[i].to_bits() == k.to_bits() {
+                    return i;
+                }
+                self.max.pop();
+            }
+            0
+        }
+
+        /// Index of the smallest current load; ties pick the smallest
+        /// index.
+        pub fn argmin(&mut self, loads: &[f64]) -> usize {
+            while let Some(&Reverse((Key(k), i))) = self.min.peek() {
+                if loads[i].to_bits() == k.to_bits() {
+                    return i;
+                }
+                self.min.pop();
+            }
+            0
+        }
+    }
 }
 
 impl Balancer for HarMoEny {
@@ -139,11 +227,16 @@ impl Balancer for HarMoEny {
         let tol = (mean * GAP_TOLERANCE).max(1.0);
 
         // greedy equalization: move ≤ half the hot/cold gap per round,
-        // so the spread is monotonically non-increasing
+        // so the spread is monotonically non-increasing. Hot/cold picks
+        // come from the lazy-deletion heaps (bit-identical to the old
+        // full scans — see `selection`); each round changes exactly two
+        // loads, so the per-round cost is two pushes instead of 2·ranks
+        // comparisons.
         let mut fetched: Vec<(u16, u16)> = Vec::new();
+        self.heaps.rebuild(&loads);
         for _ in 0..4 * self.ep {
-            let hot = argmax(&loads);
-            let cold = argmin(&loads);
+            let hot = self.heaps.argmax(&loads);
+            let cold = self.heaps.argmin(&loads);
             let gap = loads[hot] - loads[cold];
             if gap <= tol {
                 break;
@@ -187,6 +280,8 @@ impl Balancer for HarMoEny {
             }
             loads[hot] -= moved;
             loads[cold] += moved;
+            self.heaps.update(hot, loads[hot]);
+            self.heaps.update(cold, loads[cold]);
         }
 
         // reactive fetch charge: only pairs not resident from last step

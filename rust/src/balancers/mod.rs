@@ -42,6 +42,8 @@ mod static_ep;
 
 pub use eplb::Eplb;
 pub use harmoeny::HarMoEny;
+#[doc(hidden)]
+pub use harmoeny::selection as harmoeny_selection;
 pub use probe::Probe;
 pub use static_ep::StaticEp;
 
@@ -117,6 +119,16 @@ pub trait Balancer {
     /// `PlanDelta` events here so the hot decide path never touches the
     /// ring buffer.
     fn drain_events(&mut self, _rec: &mut crate::telemetry::Recorder) {}
+
+    /// Harvest and reset this step's control-plane wall clock as
+    /// `(hidden_secs, exposed_secs)`: planner time that overlapped the
+    /// caller's own work vs. time the hot loop actually blocked on
+    /// control (synchronous planning is all exposed). Baselines with no
+    /// planner keep the default zeros; [`Probe`] accounts both the
+    /// synchronous path and the `[perf] pipeline_control` worker pool.
+    fn take_control_wall(&mut self) -> (f64, f64) {
+        (0.0, 0.0)
+    }
 }
 
 /// Drive a balancer over a whole step's routing in pipeline order:

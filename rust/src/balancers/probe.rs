@@ -57,6 +57,24 @@ struct PlannedLayer {
     pred_counts: Vec<Vec<f64>>,
 }
 
+/// A plan submitted to the background [`planner::ControlPipeline`] and
+/// not yet sealed: everything `seal_pending` needs to finish what the
+/// synchronous observe path would have done inline. At most one plan is
+/// in flight — observe(l) submits, decide(l) seals before its aux-track
+/// read, so the worker overlaps exactly the decide-side dispatch work
+/// (rescale + polish + EMA) of the same layer.
+#[derive(Debug)]
+struct PendingPlan {
+    ticket: u64,
+    abs_layer: u64,
+    target_layer: usize,
+    windows: Vec<f64>,
+    pred_counts: Vec<Vec<f64>>,
+    /// Replica count of the target layer's resident placement at
+    /// submit, for the `PlanDelta` eviction delta.
+    prev_replicas: usize,
+}
+
 /// The PROBE balancer: a depth-L continuous lookahead pipeline (see
 /// module docs).
 #[derive(Debug)]
@@ -117,6 +135,18 @@ pub struct Probe {
     cur_step: u32,
     /// Buffered control-plane events awaiting `drain_events`.
     events: Vec<Event>,
+    /// Background plan workers when `[perf] pipeline_control` is on;
+    /// `None` keeps the synchronous inline-planning path verbatim.
+    pipeline: Option<planner::ControlPipeline>,
+    /// The single in-flight background plan (observe submits, decide
+    /// seals — see [`PendingPlan`]).
+    pending: Option<PendingPlan>,
+    /// Wall seconds of planner work that overlapped decide-side compute
+    /// since the last [`super::Balancer::take_control_wall`].
+    ctrl_hidden_wall: f64,
+    /// Wall seconds the hot loop blocked on control (inline planning,
+    /// or seal stalls when pipelined) since the last harvest.
+    ctrl_exposed_wall: f64,
 }
 
 impl Probe {
@@ -130,6 +160,16 @@ impl Probe {
             PredictorKind::Transition => Box::new(TransitionPredictor::new(
                 config.model.n_layers,
                 config.model.n_experts,
+            )),
+        };
+        let pipeline = match config.perf.effective_control_threads() {
+            0 => None,
+            t => Some(planner::ControlPipeline::new(
+                t,
+                config.model.clone(),
+                config.cluster.profile.clone(),
+                config.cluster.fabric.clone(),
+                cfg.clone(),
             )),
         };
         Probe {
@@ -157,6 +197,10 @@ impl Probe {
             telemetry: config.telemetry.enabled,
             cur_step: 0,
             events: Vec::new(),
+            pipeline,
+            pending: None,
+            ctrl_hidden_wall: 0.0,
+            ctrl_exposed_wall: 0.0,
         }
     }
 
@@ -243,6 +287,73 @@ impl Probe {
             self.caps_buf.resize(self.ep, self.cfg.max_redundant);
         }
     }
+
+    /// Flight-recorder summary of one emitted plan (shared by the
+    /// synchronous observe path and the pipelined seal).
+    fn plan_delta_event(
+        &self,
+        target_layer: usize,
+        prev_replicas: usize,
+        windows: &[f64],
+        out: &planner::PlanOutcome,
+    ) -> Event {
+        let added: usize = out.fetches.iter().map(|f| f.len()).sum();
+        let max_slots = out.fetches.iter().map(|f| f.len()).max().unwrap_or(0);
+        let evicted = prev_replicas.saturating_sub(out.retained_replicas);
+        let fetch_bytes = if out.fetch_flows.is_empty() {
+            added as f64 * self.model.expert_param_bytes()
+        } else {
+            out.fetch_flows.iter().map(|f| f.bytes).sum()
+        };
+        let min_window = windows.iter().cloned().fold(f64::INFINITY, f64::min);
+        let window_slack = if min_window.is_finite() {
+            min_window - crate::perfmodel::transfer_time(max_slots, &self.model, &self.hw)
+        } else {
+            0.0
+        };
+        Event::PlanDelta {
+            step: self.cur_step,
+            layer: target_layer as u16,
+            added: added.min(u16::MAX as usize) as u16,
+            evicted: evicted.min(u16::MAX as usize) as u16,
+            fetch_bytes,
+            window_slack,
+        }
+    }
+
+    /// Seal the in-flight background plan, completing everything the
+    /// synchronous observe path does after `plan_fabric_with` returns:
+    /// resident update, `PlanDelta` event, and the `planned` push. The
+    /// seal splits the plan's wall clock into hidden (overlapped the
+    /// caller's own work) and exposed (the caller blocked) halves.
+    ///
+    /// Pipelined-mode event-order caveat: the `PlanDelta` lands after
+    /// the same layer's `Predict` (decide pushes `Predict` before
+    /// sealing to maximize overlap); the per-step event multiset and
+    /// every registry counter are unchanged.
+    fn seal_pending(&mut self) {
+        let Some(p) = self.pending.take() else { return };
+        let pipe = self.pipeline.as_mut().expect("pending implies pipeline");
+        let (out, plan_wall, block_wall) = pipe.seal(p.ticket);
+        self.ctrl_exposed_wall += block_wall;
+        self.ctrl_hidden_wall += (plan_wall - block_wall).max(0.0);
+        self.last_iterations = out.iterations;
+        self.resident[p.target_layer] = out.placement.clone();
+        if self.telemetry {
+            let ev = self.plan_delta_event(p.target_layer, p.prev_replicas, &p.windows, &out);
+            self.events.push(ev);
+        }
+        self.planned.push_back(PlannedLayer {
+            abs_layer: p.abs_layer,
+            placement: out.placement,
+            assignment: out.assignment,
+            fetches: out.fetches,
+            fetch_flows: out.fetch_flows,
+            iterations: out.iterations,
+            windows: p.windows,
+            pred_counts: p.pred_counts,
+        });
+    }
 }
 
 impl super::Balancer for Probe {
@@ -257,6 +368,10 @@ impl super::Balancer for Probe {
     fn begin_step(&mut self, step_idx: usize, n_layers: usize) {
         self.cur_step = step_idx as u32;
         if self.n_layers != n_layers {
+            // drain the in-flight background plan first: its target was
+            // computed against the old layer count and is discarded with
+            // the rest of the queue below
+            self.seal_pending();
             // layer-count change: flush the pipeline and resident state,
             // and re-anchor the absolute-layer counter so target layers
             // stay congruent to abs_next modulo the new layer count
@@ -316,7 +431,34 @@ impl super::Balancer for Probe {
         // hide inside the NEXT step's (possibly decode-scale) windows
         let windows = self.windows_for(layer + depth >= self.n_layers);
         self.fill_slot_caps();
+        // a driver that skips decide between observes must not leak an
+        // unsealed ticket (no-op on the normal observe→decide cadence)
+        self.seal_pending();
         let prev_replicas = self.resident[target_layer].total_replicas();
+        if let Some(pipe) = self.pipeline.as_mut() {
+            // Off-critical-path branch: snapshot the plan inputs and
+            // hand them to a worker; decide(layer) seals the result
+            // right before its aux-track read, so the planner runs
+            // concurrently with this layer's dispatch work. The snapshot
+            // pins bit-identity: the worker sees exactly what the
+            // inline call below would have seen.
+            let ticket = pipe.submit(planner::PlanRequest {
+                counts: pred_counts.clone(),
+                resident: self.resident[target_layer].clone(),
+                windows: windows.clone(),
+                slot_caps: self.caps_buf.clone(),
+            });
+            self.pending = Some(PendingPlan {
+                ticket,
+                abs_layer: target_abs,
+                target_layer,
+                windows,
+                pred_counts,
+                prev_replicas,
+            });
+            return;
+        }
+        let t0 = std::time::Instant::now();
         let out = planner::plan_fabric_with(
             &mut self.scratch,
             &pred_counts,
@@ -328,32 +470,12 @@ impl super::Balancer for Probe {
             &self.caps_buf,
             &self.cfg,
         );
+        self.ctrl_exposed_wall += t0.elapsed().as_secs_f64();
         self.last_iterations = out.iterations;
         self.resident[target_layer] = out.placement.clone();
         if self.telemetry {
-            let added: usize = out.fetches.iter().map(|f| f.len()).sum();
-            let max_slots = out.fetches.iter().map(|f| f.len()).max().unwrap_or(0);
-            let evicted = prev_replicas.saturating_sub(out.retained_replicas);
-            let fetch_bytes = if out.fetch_flows.is_empty() {
-                added as f64 * self.model.expert_param_bytes()
-            } else {
-                out.fetch_flows.iter().map(|f| f.bytes).sum()
-            };
-            let min_window = windows.iter().cloned().fold(f64::INFINITY, f64::min);
-            let window_slack = if min_window.is_finite() {
-                min_window
-                    - crate::perfmodel::transfer_time(max_slots, &self.model, &self.hw)
-            } else {
-                0.0
-            };
-            self.events.push(Event::PlanDelta {
-                step: self.cur_step,
-                layer: target_layer as u16,
-                added: added.min(u16::MAX as usize) as u16,
-                evicted: evicted.min(u16::MAX as usize) as u16,
-                fetch_bytes,
-                window_slack,
-            });
+            let ev = self.plan_delta_event(target_layer, prev_replicas, &windows, &out);
+            self.events.push(ev);
         }
         self.planned.push_back(PlannedLayer {
             abs_layer: target_abs,
@@ -452,6 +574,13 @@ impl super::Balancer for Probe {
         // decode hiding-window budget.
         let tokens_per_rank = actual.n_tokens.div_ceil(self.ep);
 
+        // Pipelined mode: the plan submitted by the observe() that
+        // preceded this decide has been running concurrently with all
+        // the dispatch work above (rescale + polish + EMA). Seal it now
+        // — as late as possible — so the aux-track read below sees it at
+        // the back of the queue exactly as in synchronous mode.
+        self.seal_pending();
+
         // Aux-track work happening DURING this layer: the plan the
         // control plane just created for layer `abs + depth` (the back
         // of the queue, pushed by the observe() that preceded us).
@@ -499,6 +628,13 @@ impl super::Balancer for Probe {
         for e in self.events.drain(..) {
             rec.record(e);
         }
+    }
+
+    fn take_control_wall(&mut self) -> (f64, f64) {
+        let harvest = (self.ctrl_hidden_wall, self.ctrl_exposed_wall);
+        self.ctrl_hidden_wall = 0.0;
+        self.ctrl_exposed_wall = 0.0;
+        harvest
     }
 }
 

@@ -253,6 +253,16 @@ pub struct PerfConfig {
     /// Worker threads for parallel sections. `0` = auto (available
     /// parallelism, capped at 8).
     pub threads: usize,
+    /// Run the PROBE control plane (Algorithm 1 planning) on a
+    /// background pipeline overlapped with the executing step
+    /// (ISSUE 10). Handoff is sealed per layer in submission order, so
+    /// results stay bit-identical to the synchronous path; `false`
+    /// (default) keeps planning inline on the calling thread.
+    pub pipeline_control: bool,
+    /// Worker threads for the control pipeline. `0` = auto (one worker
+    /// — at most one plan is ever in flight per balancer). Ignored
+    /// unless `pipeline_control` is on.
+    pub control_threads: usize,
 }
 
 impl Default for PerfConfig {
@@ -260,6 +270,8 @@ impl Default for PerfConfig {
         PerfConfig {
             parallel: true,
             threads: 0,
+            pipeline_control: false,
+            control_threads: 0,
         }
     }
 }
@@ -276,6 +288,17 @@ impl PerfConfig {
         } else {
             crate::util::parallel::auto_threads()
         }
+    }
+
+    /// Control-pipeline worker count: 0 when the pipeline is off
+    /// (planning stays inline), else `control_threads` (or 1 for auto —
+    /// the balancer seals every plan within its layer, so a single
+    /// worker already realizes the full overlap).
+    pub fn effective_control_threads(&self) -> usize {
+        if !self.pipeline_control {
+            return 0;
+        }
+        self.control_threads.max(1)
     }
 }
 
@@ -696,6 +719,14 @@ impl Config {
                 "perf.threads" => {
                     cfg.perf.threads = value.as_int().ok_or("perf.threads: int")? as usize
                 }
+                "perf.pipeline_control" => {
+                    cfg.perf.pipeline_control =
+                        value.as_bool().ok_or("perf.pipeline_control: bool")?
+                }
+                "perf.control_threads" => {
+                    cfg.perf.control_threads =
+                        value.as_int().ok_or("perf.control_threads: int")? as usize
+                }
                 "disagg.prefill_replicas" => {
                     cfg.disagg.prefill_replicas =
                         value.as_int().ok_or("disagg.prefill_replicas: int")? as usize
@@ -1028,6 +1059,22 @@ threads = 3
         let fixed = Config::from_toml_str("[perf]\nthreads = 5\n").unwrap();
         assert_eq!(fixed.perf.effective_threads(), 5);
         assert!(Config::from_toml_str("[perf]\nparallel = 3\n").is_err());
+        // control pipeline: default off -> zero workers (inline planning)
+        assert!(!d.perf.pipeline_control);
+        assert_eq!(d.perf.effective_control_threads(), 0);
+        let piped =
+            Config::from_toml_str("[perf]\npipeline_control = true\n").unwrap();
+        assert!(piped.perf.pipeline_control);
+        assert_eq!(piped.perf.effective_control_threads(), 1, "auto = 1 worker");
+        let piped2 = Config::from_toml_str(
+            "[perf]\npipeline_control = true\ncontrol_threads = 3\n",
+        )
+        .unwrap();
+        assert_eq!(piped2.perf.effective_control_threads(), 3);
+        // control_threads without the pipeline stays inert
+        let inert = Config::from_toml_str("[perf]\ncontrol_threads = 3\n").unwrap();
+        assert_eq!(inert.perf.effective_control_threads(), 0);
+        assert!(Config::from_toml_str("[perf]\npipeline_control = 2\n").is_err());
     }
 
     #[test]

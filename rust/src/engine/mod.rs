@@ -84,6 +84,13 @@ pub struct StepReport {
     /// [`BatchComposition::domains`] order). Empty when `[capacity]` is
     /// off.
     pub dropped_per_token: Vec<u32>,
+    /// Control-plane wall-µs overlapped with the step's own work by the
+    /// async plan pipeline ([`perf] pipeline_control`); 0 when planning
+    /// runs inline.
+    pub control_us_hidden: f64,
+    /// Control-plane wall-µs that blocked the step's hot loop: the full
+    /// planner time when synchronous, only seal stalls when pipelined.
+    pub control_us_exposed: f64,
 }
 
 /// A finished prefill ready for KV-cache handoff to a decode replica

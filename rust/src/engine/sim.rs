@@ -245,11 +245,26 @@ impl StepExecutor for SimExecutor {
             // the mixed-step refactor (pure-prefill steps do not drift)
             self.routing_model.step_drift();
         }
+        // harvest the step's control-plane wall clock: hidden = planner
+        // seconds overlapped with this step's own work by the async
+        // pipeline, exposed = seconds the hot loop blocked on control
+        // (inline planning, or seal stalls when pipelined)
+        let (ctrl_hidden, ctrl_exposed) = self.balancer.take_control_wall();
+        let (hidden_us, exposed_us) = (ctrl_hidden * 1e6, ctrl_exposed * 1e6);
+        if rec.is_on() && (hidden_us > 0.0 || exposed_us > 0.0) {
+            rec.record(Event::ControlOverlap {
+                step,
+                hidden_us,
+                exposed_us,
+            });
+        }
         let mut rep = StepReport {
             latency: outcome.latency,
             tokens: outcome.tokens,
             // rank token-load IR of the first layer (one sample per step)
             ir_samples: outcome.ir_per_layer.first().copied().into_iter().collect(),
+            control_us_hidden: hidden_us,
+            control_us_exposed: exposed_us,
             ..Default::default()
         };
         if let Some(v) = cap_view {

@@ -1,22 +1,33 @@
-//! `probe bench speed` — raw-speed suite for the §Perf pass (ISSUE 6).
+//! `probe bench speed` — raw-speed suite for the §Perf pass (ISSUE 6,
+//! extended by ISSUE 10 with the asynchronous control plane).
 //!
-//! Two measurements per rank count (default {16, 32, 64, 128}), both on
-//! the `storm` scenario preset:
+//! Per rank count (default {16, 32, 64, 128}), all on the `storm`
+//! scenario preset:
 //!
 //! 1. **steps/sec** — wall-clock throughput of the full serving loop
 //!    (coordinator + PROBE balancer + simulator) over a calibrated
-//!    storm request stream: the end-to-end number the arena-backed
-//!    step state, incremental accounting, and parallel sections buy.
+//!    storm request stream, measured twice: with the synchronous
+//!    control plane (`mode = sync`) and with the double-buffered
+//!    background pipeline (`mode = pipelined`,
+//!    `perf.pipeline_control = true`).
 //! 2. **planner-μs/step** — mean wall-clock of Algorithm 1
 //!    ([`planner::plan_fabric_with`] with a reused
 //!    [`planner::PlanScratch`]) on routed counts at that rank count,
 //!    multiplied by the simulated layer depth: the control-plane cost
 //!    a real deployment must hide inside the dispatch window.
+//! 3. **control-μs exposed/step** — wall-clock control-plane time the
+//!    serving loop actually blocked on ([`StepReport`]'s
+//!    `control_us_exposed`), plus the overlap efficiency
+//!    `hidden / (hidden + exposed)`. Sync mode exposes everything
+//!    (efficiency 0); the pipeline should push efficiency toward 1.
 //!
 //! Results go to `bench_results/BENCH_speed.json`; CI diffs steps/sec
 //! against a CI-produced rolling baseline (`BENCH_speed_baseline.json`
 //! in the actions cache, bootstrapped from the first run on a fresh
-//! cache key — advisory ±15%, no placeholder rows tolerated).
+//! cache key — advisory ±15%, no placeholder rows tolerated) and
+//! additionally diffs sync vs pipelined steps/sec within the same run.
+//!
+//! [`StepReport`]: crate::engine::StepReport
 
 use std::time::Instant;
 
@@ -144,6 +155,10 @@ pub struct SpeedCell {
     pub steps: usize,
     /// Wall-clock seconds of the timed serving loop.
     pub wall: f64,
+    /// Total control-plane wall-clock hidden behind compute (µs).
+    pub control_us_hidden: f64,
+    /// Total control-plane wall-clock the step loop blocked on (µs).
+    pub control_us_exposed: f64,
 }
 
 impl SpeedCell {
@@ -151,6 +166,26 @@ impl SpeedCell {
     pub fn steps_per_sec(&self) -> f64 {
         if self.wall > 0.0 {
             self.steps as f64 / self.wall
+        } else {
+            0.0
+        }
+    }
+
+    /// Mean exposed control-plane µs per decode step.
+    pub fn control_us_exposed_per_step(&self) -> f64 {
+        if self.steps > 0 {
+            self.control_us_exposed / self.steps as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Fraction of control-plane wall-clock hidden behind compute
+    /// (`hidden / (hidden + exposed)`; 0 when no control time ran).
+    pub fn overlap_efficiency(&self) -> f64 {
+        let total = self.control_us_hidden + self.control_us_exposed;
+        if total > 0.0 {
+            self.control_us_hidden / total
         } else {
             0.0
         }
@@ -167,9 +202,15 @@ pub fn run_serving_cell(p: &SpeedParams, cfg: &Config) -> Result<SpeedCell, Stri
     c.submit_all(reqs.iter().cloned());
     let t0 = Instant::now();
     let mut steps = 0usize;
+    let mut control_us_hidden = 0.0f64;
+    let mut control_us_exposed = 0.0f64;
     while steps < p.max_steps {
-        match c.decode_step() {
-            Some(_) => steps += 1,
+        match c.step().map_err(|e| e.to_string())? {
+            Some(rep) => {
+                steps += 1;
+                control_us_hidden += rep.control_us_hidden;
+                control_us_exposed += rep.control_us_exposed;
+            }
             None => break,
         }
     }
@@ -184,6 +225,8 @@ pub fn run_serving_cell(p: &SpeedParams, cfg: &Config) -> Result<SpeedCell, Stri
             .count(),
         steps,
         wall,
+        control_us_hidden,
+        control_us_exposed,
     })
 }
 
@@ -193,11 +236,14 @@ pub fn run(p: &SpeedParams) -> BenchSet {
         "BENCH_speed",
         &[
             "ranks",
+            "mode",
             "requests",
             "completed",
             "steps",
             "steps_per_s",
             "planner_us_per_step",
+            "control_us_exposed",
+            "overlap_eff",
             "wall_ms",
         ],
     );
@@ -207,22 +253,30 @@ pub fn run(p: &SpeedParams) -> BenchSet {
     for &ranks in &p.ranks {
         let cfg = speed_cfg(p, ranks);
         let plan_s = planner_secs_per_plan(&cfg, p.plans, p.seed ^ ranks as u64);
-        let cell = match run_serving_cell(p, &cfg) {
-            Ok(c) => c,
-            Err(e) => {
-                eprintln!("speed cell at {ranks} ranks failed: {e}");
-                continue;
-            }
-        };
-        b.row(&[
-            ranks.to_string(),
-            cell.submitted.to_string(),
-            cell.completed.to_string(),
-            cell.steps.to_string(),
-            format!("{:.1}", cell.steps_per_sec()),
-            format!("{:.1}", plan_s * 1e6 * SIM_LAYERS as f64),
-            format!("{:.1}", cell.wall * 1e3),
-        ]);
+        for pipelined in [false, true] {
+            let mut cfg = cfg.clone();
+            cfg.perf.pipeline_control = pipelined;
+            let mode = if pipelined { "pipelined" } else { "sync" };
+            let cell = match run_serving_cell(p, &cfg) {
+                Ok(c) => c,
+                Err(e) => {
+                    eprintln!("speed cell at {ranks} ranks ({mode}) failed: {e}");
+                    continue;
+                }
+            };
+            b.row(&[
+                ranks.to_string(),
+                mode.to_string(),
+                cell.submitted.to_string(),
+                cell.completed.to_string(),
+                cell.steps.to_string(),
+                format!("{:.1}", cell.steps_per_sec()),
+                format!("{:.1}", plan_s * 1e6 * SIM_LAYERS as f64),
+                format!("{:.1}", cell.control_us_exposed_per_step()),
+                format!("{:.3}", cell.overlap_efficiency()),
+                format!("{:.1}", cell.wall * 1e3),
+            ]);
+        }
     }
     b.note(&format!(
         "storm preset, load {:.0}% of decode capacity, horizon {} steps, \
@@ -238,6 +292,9 @@ pub fn run(p: &SpeedParams) -> BenchSet {
         "planner_us_per_step = {} layers x mean plan_fabric_with wall-clock",
         SIM_LAYERS
     ));
+    b.note("mode = control plane: sync (inline, default) vs pipelined (perf.pipeline_control)");
+    b.note("control_us_exposed = mean control wall-clock the step loop blocked on, per step");
+    b.note("overlap_eff = hidden / (hidden + exposed) control wall-clock (sync mode: 0)");
     b
 }
 
@@ -261,15 +318,43 @@ mod tests {
     fn speed_bench_emits_all_rank_points() {
         let p = small();
         let b = run(&p);
-        assert_eq!(b.rows.len(), 2, "one row per rank count");
-        for row in &b.rows {
-            let steps: usize = row[3].parse().unwrap();
-            let sps: f64 = row[4].parse().unwrap();
-            let plan_us: f64 = row[5].parse().unwrap();
+        assert_eq!(b.rows.len(), 4, "sync + pipelined row per rank count");
+        for (i, row) in b.rows.iter().enumerate() {
+            let mode = &row[1];
+            assert_eq!(
+                mode,
+                if i % 2 == 0 { "sync" } else { "pipelined" },
+                "{row:?}: unexpected mode ordering"
+            );
+            let steps: usize = row[4].parse().unwrap();
+            let sps: f64 = row[5].parse().unwrap();
+            let plan_us: f64 = row[6].parse().unwrap();
+            let ctrl_us: f64 = row[7].parse().unwrap();
+            let eff: f64 = row[8].parse().unwrap();
             assert!(steps > 0, "{row:?}: no steps ran");
             assert!(sps > 0.0, "{row:?}: zero throughput");
             assert!(plan_us > 0.0 && plan_us.is_finite(), "{row:?}");
+            assert!(ctrl_us >= 0.0 && ctrl_us.is_finite(), "{row:?}");
+            assert!((0.0..=1.0).contains(&eff), "{row:?}: bad overlap_eff");
+            if mode == "sync" {
+                assert_eq!(eff, 0.0, "{row:?}: sync mode must expose all control time");
+                assert!(ctrl_us > 0.0, "{row:?}: sync mode ran no planner?");
+            }
         }
+    }
+
+    #[test]
+    fn pipelined_cell_hides_control_time() {
+        let p = small();
+        let mut cfg = speed_cfg(&p, 8);
+        cfg.perf.pipeline_control = true;
+        let cell = run_serving_cell(&p, &cfg).expect("pipelined cell");
+        assert!(cell.steps > 0);
+        assert!(
+            cell.control_us_hidden > 0.0,
+            "pipeline hid no control time: {cell:?}"
+        );
+        assert!(cell.overlap_efficiency() > 0.0);
     }
 
     #[test]

@@ -20,6 +20,12 @@
 //!   updates per-rank compute/traffic terms as flows shift instead of
 //!   recomputing the full O(E·ep²) [`rank_latencies`] per iteration.
 
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::mpsc;
+use std::thread;
+use std::time::Instant;
+
 use crate::config::ProbeConfig;
 use crate::fabric::{Fabric, Flow};
 use crate::model::MoeModel;
@@ -368,8 +374,9 @@ pub struct PlanScratch {
     lat: Vec<f64>,
     lat2: Vec<f64>,
     wf_lat: Vec<f64>,
-    src_order: Vec<usize>,
-    dst_order: Vec<usize>,
+    src_heap: BinaryHeap<(LatKey, Reverse<usize>)>,
+    dst_heap: BinaryHeap<Reverse<(LatKey, usize)>>,
+    dst_sorted: Vec<usize>,
     invalid: Vec<(usize, usize)>,
     totals: Vec<f64>,
     hosts: Vec<usize>,
@@ -623,8 +630,9 @@ pub fn plan_fabric_with(
             &placement,
             slot_caps,
             &scratch.invalid,
-            &mut scratch.src_order,
-            &mut scratch.dst_order,
+            &mut scratch.src_heap,
+            &mut scratch.dst_heap,
+            &mut scratch.dst_sorted,
         ) else {
             break;
         };
@@ -734,28 +742,72 @@ pub fn plan_fabric_with(
     }
 }
 
+/// Total-order key over finite rank latencies for the candidate heaps.
+/// Ordering is `partial_cmp` exactly as the stable sorts it replaces
+/// used (panics on NaN — latencies are finite), so ±0.0 compare equal
+/// and the index tiebreaker decides, preserving selection order
+/// bit-for-bit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct LatKey(f64);
+
+impl Eq for LatKey {}
+
+impl PartialOrd for LatKey {
+    fn partial_cmp(&self, other: &LatKey) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for LatKey {
+    fn cmp(&self, other: &LatKey) -> std::cmp::Ordering {
+        self.0.partial_cmp(&other.0).expect("NaN rank latency")
+    }
+}
+
 /// Pick (argmax, argmin) latency ranks avoiding invalidated pairs; the
 /// destination must have a free replica slot within its live memory
 /// cap.
+///
+/// Binary-heap candidate selection: instead of fully sorting both rank
+/// orders every greedy iteration, sources pop from a max-heap and
+/// destinations materialize lazily from a min-heap into `dst_sorted`,
+/// so the common case touches one source and a short ascending prefix
+/// of destinations. Ties break toward the smaller index on both sides,
+/// matching the stable sorts this replaces — selection is bit-identical
+/// (`select_pair_sorted` in the test module pins parity).
 fn select_pair(
     lat: &[f64],
     placement: &Placement,
     slot_caps: &[usize],
     invalid: &[(usize, usize)],
-    src_order: &mut Vec<usize>,
-    dst_order: &mut Vec<usize>,
+    src_heap: &mut BinaryHeap<(LatKey, Reverse<usize>)>,
+    dst_heap: &mut BinaryHeap<Reverse<(LatKey, usize)>>,
+    dst_sorted: &mut Vec<usize>,
 ) -> Option<(usize, usize)> {
-    let ep = lat.len();
-    src_order.clear();
-    src_order.extend(0..ep);
-    src_order.sort_by(|&x, &y| lat[y].partial_cmp(&lat[x]).unwrap());
-    dst_order.clear();
-    dst_order.extend(0..ep);
-    dst_order.sort_by(|&x, &y| lat[x].partial_cmp(&lat[y]).unwrap());
-    for &s in src_order.iter() {
-        for &d in dst_order.iter() {
-            if d == s || lat[d] >= lat[s] {
-                continue;
+    src_heap.clear();
+    src_heap.extend(lat.iter().enumerate().map(|(i, &l)| (LatKey(l), Reverse(i))));
+    dst_heap.clear();
+    dst_heap.extend(lat.iter().enumerate().map(|(i, &l)| Reverse((LatKey(l), i))));
+    dst_sorted.clear();
+    while let Some((LatKey(ls), Reverse(s))) = src_heap.pop() {
+        let mut di = 0usize;
+        loop {
+            let d = match dst_sorted.get(di) {
+                Some(&d) => d,
+                None => match dst_heap.pop() {
+                    Some(Reverse((_, d))) => {
+                        dst_sorted.push(d);
+                        d
+                    }
+                    None => break,
+                },
+            };
+            di += 1;
+            // destinations arrive in ascending latency: once the gap
+            // filter fails it fails for every remaining one (d == s is
+            // subsumed — lat[s] >= lat[s])
+            if lat[d] >= ls {
+                break;
             }
             if placement.slots_free(d) == 0
                 || placement.slots_used(d) >= slot_caps.get(d).copied().unwrap_or(usize::MAX)
@@ -1052,6 +1104,149 @@ fn argmax(xs: &[f64]) -> usize {
         }
     }
     best
+}
+
+/// One plan request snapshotted for the background control pipeline:
+/// everything [`plan_fabric_with`] reads, captured at observe time.
+/// Because the planner is a pure function of these inputs (scratch
+/// contents never change its output — pinned by
+/// `scratch_planner_matches_allocating_planner_on_drift`), a worker
+/// replaying the snapshot produces bits identical to an inline call at
+/// the same point in the step.
+#[derive(Debug, Clone)]
+pub struct PlanRequest {
+    /// Predicted `counts_by_source[e][rs]` for the target layer.
+    pub counts: Vec<Vec<f64>>,
+    /// Resident placement of the target layer — the delta-plan base.
+    pub resident: Placement,
+    /// Per-rank hiding windows budgeting NEW fetches.
+    pub windows: Vec<f64>,
+    /// Live per-rank replica-slot caps from the memory governor.
+    pub slot_caps: Vec<usize>,
+}
+
+/// Deterministic background control plane (ISSUE 10): a small worker
+/// pool computing [`plan_fabric_with`] off the critical path.
+///
+/// The handoff discipline mirrors `util::parallel::ordered_map`: every
+/// submission gets a monotone ticket, tasks round-robin across workers
+/// by `ticket % threads` (no shared work queue, so the task→worker
+/// assignment is deterministic), and the caller seals results by ticket
+/// — out-of-order arrivals park in a small stash until their seal.
+/// Since the planner is pure in its request, a pipelined run is
+/// bit-identical to the synchronous one; only wall-clock changes.
+///
+/// [`ControlPipeline::seal`] returns `(plan, plan_wall, block_wall)`:
+/// the worker-side seconds the plan took and the caller-side seconds
+/// spent blocked waiting for it. `plan_wall − block_wall` is the
+/// control time the pipeline actually hid behind the caller's own
+/// work.
+pub struct ControlPipeline {
+    task_tx: Vec<mpsc::Sender<(u64, PlanRequest)>>,
+    result_rx: mpsc::Receiver<(u64, PlanOutcome, f64)>,
+    workers: Vec<thread::JoinHandle<()>>,
+    next_ticket: u64,
+    /// Results that arrived ahead of their seal; bounded by the
+    /// in-flight plan count (≤ 1 per balancer layer slot).
+    stash: Vec<(u64, PlanOutcome, f64)>,
+}
+
+impl std::fmt::Debug for ControlPipeline {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ControlPipeline")
+            .field("workers", &self.workers.len())
+            .field("next_ticket", &self.next_ticket)
+            .field("stashed", &self.stash.len())
+            .finish()
+    }
+}
+
+impl ControlPipeline {
+    /// Spawn `threads.max(1)` plan workers, each owning a clone of the
+    /// immutable planning context and a private [`PlanScratch`].
+    pub fn new(
+        threads: usize,
+        model: MoeModel,
+        hw: HardwareProfile,
+        fabric: Fabric,
+        cfg: ProbeConfig,
+    ) -> ControlPipeline {
+        let threads = threads.max(1);
+        let (result_tx, result_rx) = mpsc::channel();
+        let mut task_tx = Vec::with_capacity(threads);
+        let mut workers = Vec::with_capacity(threads);
+        for _ in 0..threads {
+            let (tx, rx) = mpsc::channel::<(u64, PlanRequest)>();
+            task_tx.push(tx);
+            let results = result_tx.clone();
+            let (model, hw, fabric, cfg) = (model.clone(), hw.clone(), fabric.clone(), cfg.clone());
+            workers.push(thread::spawn(move || {
+                let mut scratch = PlanScratch::default();
+                while let Ok((ticket, req)) = rx.recv() {
+                    let t0 = Instant::now();
+                    let out = plan_fabric_with(
+                        &mut scratch,
+                        &req.counts,
+                        &req.resident,
+                        &model,
+                        &hw,
+                        &fabric,
+                        &req.windows,
+                        &req.slot_caps,
+                        &cfg,
+                    );
+                    let plan_wall = t0.elapsed().as_secs_f64();
+                    if results.send((ticket, out, plan_wall)).is_err() {
+                        break; // pipeline dropped mid-flight
+                    }
+                }
+            }));
+        }
+        ControlPipeline {
+            task_tx,
+            result_rx,
+            workers,
+            next_ticket: 0,
+            stash: Vec::new(),
+        }
+    }
+
+    /// Enqueue a plan; returns the ticket that seals it.
+    pub fn submit(&mut self, req: PlanRequest) -> u64 {
+        let ticket = self.next_ticket;
+        self.next_ticket += 1;
+        let w = (ticket % self.task_tx.len() as u64) as usize;
+        self.task_tx[w]
+            .send((ticket, req))
+            .expect("control worker died");
+        ticket
+    }
+
+    /// Block until `ticket`'s plan is ready and return
+    /// `(plan, plan_wall_secs, block_wall_secs)`.
+    pub fn seal(&mut self, ticket: u64) -> (PlanOutcome, f64, f64) {
+        if let Some(i) = self.stash.iter().position(|(t, _, _)| *t == ticket) {
+            let (_, out, plan_wall) = self.stash.swap_remove(i);
+            return (out, plan_wall, 0.0);
+        }
+        let t0 = Instant::now();
+        loop {
+            let (t, out, plan_wall) = self.result_rx.recv().expect("control worker died");
+            if t == ticket {
+                return (out, plan_wall, t0.elapsed().as_secs_f64());
+            }
+            self.stash.push((t, out, plan_wall));
+        }
+    }
+}
+
+impl Drop for ControlPipeline {
+    fn drop(&mut self) {
+        self.task_tx.clear(); // close task channels: workers drain and exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
 }
 
 #[cfg(test)]
@@ -1520,5 +1715,135 @@ mod tests {
         assert_eq!(second.retained_replicas, 0);
         // clear-every-layer refetches its full replica set
         assert_eq!(second.total_fetches(), second.placement.total_replicas());
+    }
+
+    /// The full-sort `select_pair` this PR's heap version replaced,
+    /// kept verbatim as the parity reference.
+    fn select_pair_sorted(
+        lat: &[f64],
+        placement: &Placement,
+        slot_caps: &[usize],
+        invalid: &[(usize, usize)],
+    ) -> Option<(usize, usize)> {
+        let ep = lat.len();
+        let mut src_order: Vec<usize> = (0..ep).collect();
+        src_order.sort_by(|&x, &y| lat[y].partial_cmp(&lat[x]).unwrap());
+        let mut dst_order: Vec<usize> = (0..ep).collect();
+        dst_order.sort_by(|&x, &y| lat[x].partial_cmp(&lat[y]).unwrap());
+        for &s in &src_order {
+            for &d in &dst_order {
+                if d == s || lat[d] >= lat[s] {
+                    continue;
+                }
+                if placement.slots_free(d) == 0
+                    || placement.slots_used(d) >= slot_caps.get(d).copied().unwrap_or(usize::MAX)
+                {
+                    continue;
+                }
+                if !invalid.contains(&(s, d)) {
+                    return Some((s, d));
+                }
+            }
+        }
+        None
+    }
+
+    #[test]
+    fn heap_select_pair_matches_sorted_reference() {
+        let mut rng = 0x243f_6a88_85a3_08d3u64;
+        let mut next = move || {
+            rng ^= rng << 13;
+            rng ^= rng >> 7;
+            rng ^= rng << 17;
+            rng
+        };
+        let mut src_heap = BinaryHeap::new();
+        let mut dst_heap = BinaryHeap::new();
+        let mut dst_sorted = Vec::new();
+        for trial in 0..400 {
+            let ep = [2usize, 4, 8, 13][(next() % 4) as usize];
+            // quantized latencies force frequent ties to exercise the
+            // index tiebreaker against the stable sorts
+            let lat: Vec<f64> = (0..ep).map(|_| (next() % 7) as f64 * 0.125).collect();
+            let mut placement = Placement::sharded(ep, ep * 2, 3);
+            for _ in 0..(next() % 12) {
+                let e = (next() as usize) % (ep * 2);
+                let r = (next() as usize) % ep;
+                let _ = placement.add_replica(e, r);
+            }
+            let slot_caps: Vec<usize> = (0..ep)
+                .map(|_| {
+                    if next() % 3 == 0 {
+                        usize::MAX
+                    } else {
+                        (next() % 5) as usize
+                    }
+                })
+                .collect();
+            let invalid: Vec<(usize, usize)> = (0..(next() % 6))
+                .map(|_| ((next() as usize) % ep, (next() as usize) % ep))
+                .collect();
+            let want = select_pair_sorted(&lat, &placement, &slot_caps, &invalid);
+            let got = select_pair(
+                &lat,
+                &placement,
+                &slot_caps,
+                &invalid,
+                &mut src_heap,
+                &mut dst_heap,
+                &mut dst_sorted,
+            );
+            assert_eq!(got, want, "trial {trial}: lat={lat:?} caps={slot_caps:?}");
+        }
+    }
+
+    #[test]
+    fn control_pipeline_matches_inline_planner_bit_for_bit() {
+        let model = MoeModel::gpt_oss_120b();
+        let hw = HardwareProfile::hopper_141();
+        let fabric = Fabric::flat(8, &hw);
+        let cfg = ProbeConfig::default();
+        let mut pipe =
+            ControlPipeline::new(2, model.clone(), hw.clone(), fabric.clone(), cfg.clone());
+        let mut scratch = PlanScratch::default();
+        let slot_caps = vec![usize::MAX; 8];
+        let mut resident = Placement::sharded(8, model.n_experts, 3);
+        let mut tickets = Vec::new();
+        let mut inline = Vec::new();
+        for step in 0..4u64 {
+            let (counts, _, _, _) = setup(4096, 40 + step);
+            let req = PlanRequest {
+                counts,
+                resident: resident.clone(),
+                windows: wide_windows(),
+                slot_caps: slot_caps.clone(),
+            };
+            tickets.push(pipe.submit(req.clone()));
+            let out = plan_fabric_with(
+                &mut scratch,
+                &req.counts,
+                &req.resident,
+                &model,
+                &hw,
+                &fabric,
+                &req.windows,
+                &req.slot_caps,
+                &cfg,
+            );
+            // drift the resident base between plans like the balancer does
+            resident = out.placement.clone();
+            inline.push(out);
+        }
+        // seal deliberately out of ticket order: later seals must come
+        // from the stash, earlier ones from the live channel
+        for &i in &[2usize, 0, 3, 1] {
+            let (out, plan_wall, block_wall) = pipe.seal(tickets[i]);
+            assert_eq!(
+                format!("{out:?}"),
+                format!("{:?}", inline[i]),
+                "pipelined plan {i} diverged from inline"
+            );
+            assert!(plan_wall > 0.0 && block_wall >= 0.0);
+        }
     }
 }

@@ -117,6 +117,19 @@ pub struct CapacityEnforcer {
     pending: Vec<Vec<(u16, u16)>>,
     /// Scratch: admitted count per expert for the layer in flight.
     counts: Vec<u32>,
+    /// Under-cap candidate ring for reroute (ISSUE 10): `ring_next[i]`
+    /// is the next candidate to try after `i` in cyclic id order,
+    /// path-compressed past at-cap experts as caps fill, so a reroute
+    /// walks only live candidates instead of rescanning all E experts.
+    /// Rebuilt per layer (experts never come back under cap within a
+    /// layer — counts only grow).
+    ring_next: Vec<u16>,
+    /// Experts still under cap in the layer in flight (0 ⇒ every
+    /// reroute fails fast).
+    under_cap: usize,
+    /// Test hook: use the original full-scan reroute lookup instead of
+    /// the ring (bit-parity gates in `tests/capacity_invariants.rs`).
+    scan_reroute: bool,
 }
 
 impl CapacityEnforcer {
@@ -128,6 +141,71 @@ impl CapacityEnforcer {
             ep,
             pending: vec![Vec::new(); n_layers],
             counts: Vec::new(),
+            ring_next: Vec::new(),
+            under_cap: 0,
+            scan_reroute: false,
+        }
+    }
+
+    /// Force the O(E)-scan reroute lookup the candidate ring replaced.
+    /// Test-only escape hatch: the parity gates replay identical
+    /// streams through ring and scan enforcers and require bit-equal
+    /// admitted routings.
+    #[doc(hidden)]
+    pub fn force_scan_reroute(&mut self) {
+        self.scan_reroute = true;
+    }
+
+    /// Admit one slot on expert `e`, maintaining the under-cap count
+    /// the reroute ring fails fast on. Callers guarantee
+    /// `counts[e] < cap` beforehand.
+    #[inline]
+    fn admit(&mut self, e: usize, cap: u32) {
+        self.counts[e] += 1;
+        if self.counts[e] == cap {
+            self.under_cap -= 1;
+        }
+    }
+
+    /// First under-cap expert reachable from `start` in cyclic id
+    /// order, compressing the ring past at-cap experts on the way. Must
+    /// only be called with `under_cap > 0` (guaranteed to terminate:
+    /// the initial ring is the full id cycle and compression only skips
+    /// dead experts, so every live expert stays reachable).
+    fn ring_find(&mut self, start: usize, cap: u32) -> usize {
+        let mut p = start;
+        while self.counts[p] >= cap {
+            p = self.ring_next[p] as usize;
+        }
+        let mut q = start;
+        while self.counts[q] >= cap {
+            let nxt = self.ring_next[q] as usize;
+            self.ring_next[q] = p as u16;
+            q = nxt;
+        }
+        p
+    }
+
+    /// Ring-backed replacement for [`next_ranked_scan`]: identical
+    /// result (the scan's candidate order restricted to under-cap
+    /// experts IS the ring order), but each lookup touches only live
+    /// candidates plus the compressed path. `e` itself is at cap —
+    /// that's why the lookup ran — so the ring can never return it.
+    fn next_ranked_ring(&mut self, e: u16, cap: u32, token_slots: &[u16]) -> Option<u16> {
+        if self.under_cap == 0 {
+            return None;
+        }
+        let n = self.counts.len();
+        let first = self.ring_find((e as usize + 1) % n, cap);
+        let mut cand = first;
+        loop {
+            if !token_slots.contains(&(cand as u16)) {
+                return Some(cand as u16);
+            }
+            cand = self.ring_find(self.ring_next[cand] as usize, cap);
+            if cand == first {
+                return None; // every live candidate is already in the token
+            }
         }
     }
 
@@ -193,6 +271,13 @@ impl CapacityEnforcer {
         };
         self.counts.clear();
         self.counts.resize(lr.n_experts, 0);
+        self.under_cap = if cap == 0 { 0 } else { lr.n_experts };
+        if matches!(self.policy, CapacityPolicy::Reroute) && !self.scan_reroute {
+            // fresh full id cycle; compression shortens it as caps fill
+            self.ring_next.clear();
+            self.ring_next
+                .extend((0..lr.n_experts).map(|i| ((i + 1) % lr.n_experts) as u16));
+        }
 
         // backlog first: FIFO, ahead of fresh traffic
         let backlog = std::mem::take(&mut self.pending[layer]);
@@ -201,7 +286,7 @@ impl CapacityEnforcer {
         let mut requeue = Vec::new();
         for (e, rs) in backlog {
             if self.counts[e as usize] < cap {
-                self.counts[e as usize] += 1;
+                self.admit(e as usize, cap);
                 stats.carried_admitted += 1;
                 carried.push((e, rs));
             } else {
@@ -217,7 +302,7 @@ impl CapacityEnforcer {
                 let idx = t * lr.top_k + j;
                 let e = experts[idx];
                 if self.counts[e as usize] < cap {
-                    self.counts[e as usize] += 1;
+                    self.admit(e as usize, cap);
                     stats.admitted += 1;
                     continue;
                 }
@@ -229,10 +314,15 @@ impl CapacityEnforcer {
                     }
                     CapacityPolicy::Reroute => {
                         let slot = &experts[t * lr.top_k..(t + 1) * lr.top_k];
-                        match next_ranked(e, cap, &self.counts, slot) {
+                        let alt = if self.scan_reroute {
+                            next_ranked_scan(e, cap, &self.counts, slot)
+                        } else {
+                            self.next_ranked_ring(e, cap, slot)
+                        };
+                        match alt {
                             Some(alt) => {
                                 experts[idx] = alt;
-                                self.counts[alt as usize] += 1;
+                                self.admit(alt as usize, cap);
                                 stats.admitted += 1;
                                 stats.rerouted += 1;
                             }
@@ -262,8 +352,9 @@ impl CapacityEnforcer {
 /// `e + 1`, skipping experts already chosen by the token (the slice
 /// holds the token's current slot values; [`DROPPED`] entries never
 /// match a real candidate). `None` when every distinct expert is at
-/// cap.
-fn next_ranked(e: u16, cap: u32, counts: &[u32], token_slots: &[u16]) -> Option<u16> {
+/// cap. This is the O(E) reference the candidate ring replaced, kept
+/// behind [`CapacityEnforcer::force_scan_reroute`] for parity gates.
+fn next_ranked_scan(e: u16, cap: u32, counts: &[u32], token_slots: &[u16]) -> Option<u16> {
     let n = counts.len();
     for off in 1..n {
         let cand = (e as usize + off) % n;
@@ -387,6 +478,32 @@ mod tests {
             assert_eq!(va.routing.layers, vb.routing.layers);
             assert_eq!(va.layer_stats, vb.layer_stats);
             assert_eq!(va.carried, vb.carried);
+        }
+    }
+
+    #[test]
+    fn ring_reroute_matches_scan_reference() {
+        // randomized streams at several tightness levels: the ring and
+        // the O(E) scan must produce bit-identical admitted routings,
+        // stats, and backlogs
+        for seed in [3u64, 9, 17, 29] {
+            for factor in [0.5, 1.0, 1.25, 2.0] {
+                let step = skewed_step(seed, 96);
+                let mut ring = CapacityEnforcer::new(&cfg(factor, CapacityPolicy::Reroute), 3, 8);
+                let mut scan = CapacityEnforcer::new(&cfg(factor, CapacityPolicy::Reroute), 3, 8);
+                scan.force_scan_reroute();
+                for round in 0..3 {
+                    let vr = ring.enforce_step(&step);
+                    let vs = scan.enforce_step(&step);
+                    assert_eq!(
+                        vr.routing.layers, vs.routing.layers,
+                        "seed {seed} factor {factor} round {round}: admitted routing diverged"
+                    );
+                    assert_eq!(vr.layer_stats, vs.layer_stats);
+                    assert_eq!(vr.carried, vs.carried);
+                    assert_eq!(vr.dropped_per_token, vs.dropped_per_token);
+                }
+            }
         }
     }
 

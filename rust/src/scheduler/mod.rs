@@ -125,6 +125,14 @@ impl PrefetchItem {
 /// staged items): they are reset — never freed — each
 /// [`schedule_layer_fabric`] call, so the steady-state scheduling loop
 /// allocates nothing (ISSUE 6).
+///
+/// The queue is agnostic to HOW its flows were planned: the
+/// asynchronous control pipeline (`[perf] pipeline_control`, ISSUE 10)
+/// feeds the exact same [`LayerSchedule`] contract — per-layer
+/// `prefetch_flows`/`prefetch_slots` plus aux-track
+/// `predict_time`/`plan_time` — as synchronous planning, with every
+/// plan sealed before its decision is emitted, so queue state and all
+/// virtual-time timelines are bit-identical in both modes.
 #[derive(Debug, Clone, Default)]
 pub struct PrefetchQueue {
     items: Vec<PrefetchItem>,

@@ -105,6 +105,14 @@ pub struct StepOutcome {
     /// layers' placements) — the realized replication the memory
     /// governor's caps bound.
     pub replica_slots_used: Vec<usize>,
+    /// Virtual control seconds ridden on the aux track this step
+    /// (Σ predict + plan time across layers) — the cost PROBE's
+    /// pipeline hides off the critical path.
+    pub control_hidden: f64,
+    /// Virtual control seconds charged on the critical path this step
+    /// (Σ per-layer exposed control transfer) — reactive baselines pay
+    /// their control here.
+    pub control_exposed: f64,
 }
 
 impl StepOutcome {
@@ -223,6 +231,8 @@ impl ClusterSim {
         let mut prefetch_slots_total = 0usize;
         let mut rank_tokens_acc = vec![0.0f64; ep];
         let mut replica_slots_used = vec![0usize; ep];
+        let mut control_hidden = 0.0;
+        let mut control_exposed = 0.0;
 
         for l in 0..n_layers {
             let lr = &routing.layers[l];
@@ -284,6 +294,8 @@ impl ClusterSim {
                 l as u16,
             );
             prefetch_slots_total += d.total_prefetch_slots();
+            control_hidden += d.predict_time + d.plan_time;
+            control_exposed += d.exposed_transfer;
             latency += tl.makespan();
             timelines.push(tl);
         }
@@ -297,6 +309,8 @@ impl ClusterSim {
             prefetch_slots_total,
             rank_token_loads: rank_tokens_acc,
             replica_slots_used,
+            control_hidden,
+            control_exposed,
         }
     }
 

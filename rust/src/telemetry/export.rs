@@ -242,6 +242,16 @@ pub fn prometheus_text(reg: &Registry, link_util: &[(String, f64)]) -> String {
         "Transfer seconds exposed on the critical path.",
         reg.exposed_seconds_total,
     );
+    counter(
+        "probe_control_hidden_us_total",
+        "Control-plane wall-us hidden behind compute by the async pipeline.",
+        reg.control_hidden_us_total,
+    );
+    counter(
+        "probe_control_exposed_us_total",
+        "Control-plane wall-us that blocked the hot loop.",
+        reg.control_exposed_us_total,
+    );
     let mut gauge = |name: &str, help: &str, v: f64| {
         out.push_str(&format!(
             "# HELP {name} {help}\n# TYPE {name} gauge\n{name} {v}\n"

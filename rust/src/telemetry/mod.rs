@@ -194,6 +194,19 @@ pub enum Event {
         /// Slots queued (fresh + re-queued backlog) this layer.
         count: u32,
     },
+    /// Control-plane wall clock of one step, split into the planner
+    /// time the async pipeline hid behind compute and the time the hot
+    /// loop actually blocked on control (ISSUE 10). Synchronous
+    /// planning reports everything exposed.
+    ControlOverlap {
+        /// Step the control work ran in.
+        step: u32,
+        /// Planner wall-µs overlapped with the step's own work.
+        hidden_us: f64,
+        /// Wall-µs the step blocked on control (inline plan or seal
+        /// stall).
+        exposed_us: f64,
+    },
 }
 
 impl Event {
@@ -214,6 +227,7 @@ impl Event {
             Event::TokenDrop { .. } => "token_drop",
             Event::TokenReroute { .. } => "token_reroute",
             Event::TokenQueue { .. } => "token_queue",
+            Event::ControlOverlap { .. } => "control_overlap",
         }
     }
 
@@ -232,7 +246,8 @@ impl Event {
             | Event::KvHandoff { step, .. }
             | Event::TokenDrop { step, .. }
             | Event::TokenReroute { step, .. }
-            | Event::TokenQueue { step, .. } => step,
+            | Event::TokenQueue { step, .. }
+            | Event::ControlOverlap { step, .. } => step,
             Event::RoleFlip { window, .. } => window,
         }
     }
@@ -374,6 +389,15 @@ impl Event {
                 pairs.push(("layer", Json::Num(layer as f64)));
                 pairs.push(("count", Json::Num(count as f64)));
             }
+            Event::ControlOverlap {
+                step,
+                hidden_us,
+                exposed_us,
+            } => {
+                pairs.push(("step", Json::Num(step as f64)));
+                pairs.push(("hidden_us", Json::Num(hidden_us)));
+                pairs.push(("exposed_us", Json::Num(exposed_us)));
+            }
         }
         Json::obj(pairs)
     }
@@ -414,6 +438,11 @@ pub struct Registry {
     pub tokens_queued_total: u64,
     /// Seconds of transfer time exposed on the critical path (sum).
     pub exposed_seconds_total: f64,
+    /// Control-plane wall-µs hidden behind compute by the async
+    /// pipeline (sum over steps).
+    pub control_hidden_us_total: f64,
+    /// Control-plane wall-µs that blocked the hot loop (sum).
+    pub control_exposed_us_total: f64,
     /// Requests waiting in the admission queue (gauge).
     pub queue_depth: f64,
     /// Requests in the active decode batch (gauge).
@@ -447,6 +476,14 @@ impl Registry {
             Event::TokenDrop { count, .. } => self.tokens_dropped_total += *count as u64,
             Event::TokenReroute { count, .. } => self.tokens_rerouted_total += *count as u64,
             Event::TokenQueue { count, .. } => self.tokens_queued_total += *count as u64,
+            Event::ControlOverlap {
+                hidden_us,
+                exposed_us,
+                ..
+            } => {
+                self.control_hidden_us_total += hidden_us;
+                self.control_exposed_us_total += exposed_us;
+            }
             Event::MemGovernor {
                 kv_pages,
                 watermark,
@@ -590,6 +627,8 @@ impl Recorder {
         r.tokens_rerouted_total += other.tokens_rerouted_total;
         r.tokens_queued_total += other.tokens_queued_total;
         r.exposed_seconds_total += other.exposed_seconds_total;
+        r.control_hidden_us_total += other.control_hidden_us_total;
+        r.control_exposed_us_total += other.control_exposed_us_total;
         r.kv_pages += other.kv_pages;
         r.queue_depth += other.queue_depth;
         r.active_requests += other.active_requests;

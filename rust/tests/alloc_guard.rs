@@ -56,6 +56,47 @@ fn steady_state_step_loop_is_allocation_flat() {
 }
 
 #[test]
+fn pipelined_control_step_loop_is_allocation_flat() {
+    // ISSUE 10: the asynchronous control plane hands plans over via a
+    // per-worker channel. The handoff clones snapshots (counts,
+    // resident placement, windows) every observe, so per-step
+    // allocation is nonzero but CONSTANT — the counting allocator sees
+    // all threads, and steady state must not grow block over block.
+    let mut cfg = Config::default();
+    cfg.model.n_layers = 4;
+    cfg.perf.pipeline_control = true;
+    cfg.perf.control_threads = 1;
+    let mut bal = Probe::new(&cfg, ProbeConfig::default(), 7);
+    let mut sim = ClusterSim::new(cfg.model.clone(), cfg.cluster.clone());
+    let mut rm = RoutingModel::calibrated(4, cfg.model.n_experts, cfg.model.top_k, 3, 11);
+    let tokens = vec![0u16; 2048];
+
+    let mut run_block = |steps: usize, base: usize| {
+        for s in 0..steps {
+            let routing = rm.route_step(&tokens);
+            let ds = decide_step(&mut bal, base + s, &routing);
+            std::hint::black_box(sim.run_step(&routing, &ds));
+        }
+    };
+
+    run_block(20, 0);
+
+    let c0 = alloc_count();
+    run_block(100, 20);
+    let c1 = alloc_count();
+    run_block(100, 120);
+    let c2 = alloc_count();
+
+    let delta1 = c1 - c0;
+    let delta2 = c2 - c1;
+    assert!(
+        delta2 <= delta1,
+        "pipelined-control steady-state allocations grew: block1 {delta1}, \
+         block2 {delta2} (the control handoff is reallocating per step)"
+    );
+}
+
+#[test]
 fn recorder_paths_are_allocation_flat_in_steady_state() {
     // ISSUE 8 overhead contract: a disabled recorder adds *zero*
     // allocations to the step loop (one branch per record call), and an

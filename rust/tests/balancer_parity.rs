@@ -155,6 +155,56 @@ fn fleet_with(kind: BalancerKind, parallel: bool, reqs: &[Request]) -> FleetRepo
 }
 
 #[test]
+fn harmoeny_heap_selection_matches_scan_reference() {
+    // ISSUE 10 satellite: HarMoEny's hot→cold pair selection moved from
+    // an O(ranks) scan per round to lazy-deletion two-heap selection.
+    // Replay random load-mutation traces and assert the heaps pick the
+    // exact argmax/argmin (value desc/asc, ties lowest index) the scan
+    // reference picks at every round — including after repeated
+    // incremental updates, duplicate loads, and zeros.
+    use probe::balancers::harmoeny_selection::{scan_argmax, scan_argmin, LoadHeaps};
+    use probe::util::Rng;
+
+    let mut rng = Rng::new(0xA5A5_1234);
+    for case in 0..50 {
+        let n = 2 + rng.next_usize(15);
+        // quantized loads so duplicates (tie-breaking) are common
+        let mut loads: Vec<f64> = (0..n)
+            .map(|_| rng.next_usize(9) as f64 * 0.25)
+            .collect();
+        let mut heaps = LoadHeaps::default();
+        heaps.rebuild(&loads);
+        for round in 0..120 {
+            let hot = heaps.argmax(&loads);
+            let cold = heaps.argmin(&loads);
+            assert_eq!(
+                hot,
+                scan_argmax(&loads),
+                "case {case} round {round}: argmax diverged on {loads:?}"
+            );
+            assert_eq!(
+                cold,
+                scan_argmin(&loads),
+                "case {case} round {round}: argmin diverged on {loads:?}"
+            );
+            // mutate like a rescheduling round: shift load hot→cold,
+            // occasionally rebuild mid-trace (fresh layer)
+            let moved = (loads[hot] * 0.5).min(0.75);
+            loads[hot] -= moved;
+            loads[cold] += moved;
+            heaps.update(hot, loads[hot]);
+            heaps.update(cold, loads[cold]);
+            if round % 37 == 36 {
+                for l in loads.iter_mut() {
+                    *l = rng.next_usize(9) as f64 * 0.25;
+                }
+                heaps.rebuild(&loads);
+            }
+        }
+    }
+}
+
+#[test]
 fn parallel_fleet_matches_sequential_for_every_balancer() {
     let reqs = storm_stream(43);
     for kind in BalancerKind::ALL {

@@ -139,6 +139,45 @@ fn no_expert_ever_exceeds_the_cap() {
     }
 }
 
+#[test]
+fn ring_reroute_is_bit_identical_to_scan_on_drifting_streams() {
+    // ISSUE 10 satellite: the reroute policy's under-cap lookup moved
+    // from an O(E) rescan per overflow to an incrementally-compressed
+    // candidate ring. Replay drifting multi-step streams (stateful:
+    // Queue-free but counts-stateful within layers, reroutes cascade)
+    // through both lookups and require bit-equal admitted routings,
+    // stats, caps, and drop attribution at every step.
+    for seed in [7u64, 31, 101] {
+        for factor in [0.75, 1.0, 1.5] {
+            let cfg = probe::config::CapacityConfig {
+                factor,
+                policy: CapacityPolicy::Reroute,
+            };
+            let mut ring = CapacityEnforcer::new(&cfg, LAYERS, EP);
+            let mut scan = CapacityEnforcer::new(&cfg, LAYERS, EP);
+            scan.force_scan_reroute();
+            let mut ever_rerouted = false;
+            for (i, step) in skewed_stream(seed, 6, 96).iter().enumerate() {
+                let vr = ring.enforce_step(step);
+                let vs = scan.enforce_step(step);
+                assert_eq!(
+                    vr.routing.layers, vs.routing.layers,
+                    "seed {seed} factor {factor} step {i}: admitted routing diverged"
+                );
+                assert_eq!(vr.layer_stats, vs.layer_stats, "seed {seed} step {i}");
+                assert_eq!(vr.carried, vs.carried, "seed {seed} step {i}");
+                assert_eq!(vr.caps, vs.caps, "seed {seed} step {i}");
+                assert_eq!(vr.dropped_per_token, vs.dropped_per_token, "seed {seed} step {i}");
+                ever_rerouted |= vr.totals().rerouted > 0;
+            }
+            assert!(
+                ever_rerouted || factor > 1.0,
+                "seed {seed} factor {factor}: reroute never exercised"
+            );
+        }
+    }
+}
+
 /// Drive `steps` serving steps and return (per-step reports, final
 /// clock bits, throughput bits).
 fn serve(kind: BalancerKind, factor: f64, policy: CapacityPolicy, seed: u64) -> (Vec<StepReport>, u64, u64) {

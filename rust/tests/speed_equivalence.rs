@@ -7,14 +7,19 @@
 //! 3. scratch-reused `plan_fabric_with` == allocating `plan_fabric`
 //!    bit-for-bit on a drifting workload;
 //! 4. parallel disagg (role-partitioned pools) == sequential disagg,
-//!    bit for bit, per role stint (ISSUE 7 satellite).
+//!    bit for bit, per role stint (ISSUE 7 satellite);
+//! 5. pipelined control plane (`[perf] pipeline_control`) == inline
+//!    synchronous control plane, bit for bit, for every balancer on
+//!    every volatility preset (ISSUE 10 tentpole gate).
 
 use anyhow::Result;
 
 use probe::balancers::StaticEp;
-use probe::config::Config;
+use probe::config::{BalancerKind, Config};
+use probe::coordinator::Coordinator;
 use probe::engine::sim::SimExecutor;
 use probe::engine::ServingEngine;
+use probe::experiments::make_balancer;
 use probe::fabric::{Fabric, Flow};
 use probe::perfmodel::TrafficMatrix;
 use probe::placement::Placement;
@@ -23,7 +28,9 @@ use probe::routing::RoutingModel;
 use probe::server::dispatch::DispatchKind;
 use probe::server::fleet::{run_fleet, FleetConfig, FleetReport};
 use probe::util::Rng;
-use probe::workload::{Dataset, Request, RequestGenerator, WorkloadSpec};
+use probe::workload::{
+    Dataset, Request, RequestGenerator, Scenario, ScenarioGenerator, WorkloadSpec,
+};
 
 type SimEngine = ServingEngine<SimExecutor>;
 
@@ -269,4 +276,90 @@ fn scratch_planner_matches_allocating_planner_on_drift() {
         rm.step_drift();
     }
     assert!(planned >= 8, "drift loop barely ran");
+}
+
+// ───────────────── asynchronous control plane (ISSUE 10) ─────────────────
+
+/// A short volatility-preset stream, trimmed like the parity suite's.
+fn preset_stream(preset: &str, seed: u64) -> Vec<Request> {
+    let mut s = Scenario::preset(preset, 25.0, 3.0, 4).unwrap();
+    for t in &mut s.tenants {
+        t.spec.mean_prompt_len = 12;
+        t.spec.mean_new_tokens = 16;
+    }
+    ScenarioGenerator::new(s, seed).generate()
+}
+
+/// Serve a stream with one balancer under a given control-plane mode
+/// and return every observable: final clock bits plus per-request
+/// (id, first-token bits, finish bits, tokens).
+fn serve_mode(
+    kind: BalancerKind,
+    pipelined: bool,
+    threads: usize,
+    reqs: Vec<Request>,
+) -> (u64, Vec<(u64, Option<u64>, Option<u64>, usize)>) {
+    let mut cfg = small_cfg();
+    cfg.batch_per_rank = 2;
+    cfg.perf.pipeline_control = pipelined;
+    cfg.perf.control_threads = threads;
+    let bal = make_balancer(kind, &cfg, 19);
+    let mut c = Coordinator::new(cfg, bal, 19);
+    c.submit_all(reqs);
+    c.run_to_completion(100_000).unwrap();
+    let per_req = c
+        .metrics
+        .requests
+        .iter()
+        .map(|m| {
+            (
+                m.id,
+                m.first_token.map(f64::to_bits),
+                m.finished.map(f64::to_bits),
+                m.tokens_out,
+            )
+        })
+        .collect();
+    (c.clock.to_bits(), per_req)
+}
+
+#[test]
+fn pipelined_control_matches_sync_for_every_balancer_and_preset() {
+    for preset in ["storm", "drift", "multi_tenant"] {
+        let reqs = preset_stream(preset, 53);
+        assert!(reqs.len() > 10, "{preset}: stream too small to be meaningful");
+        for kind in BalancerKind::ALL {
+            let (clock_s, metrics_s) = serve_mode(kind, false, 0, reqs.clone());
+            let (clock_p, metrics_p) = serve_mode(kind, true, 2, reqs.clone());
+            assert_eq!(
+                clock_s,
+                clock_p,
+                "{preset}/{}: clock diverged under [perf] pipeline_control",
+                kind.name()
+            );
+            assert_eq!(
+                metrics_s,
+                metrics_p,
+                "{preset}/{}: per-request metrics diverged under pipelined control",
+                kind.name()
+            );
+            assert!(
+                metrics_s
+                    .iter()
+                    .all(|(_, first, fin, _)| first.is_some() && fin.is_some()),
+                "{preset}/{}: stream not fully served",
+                kind.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn pipelined_control_is_thread_count_invariant() {
+    // sealing is ticket-ordered, so worker count must not be observable
+    let reqs = preset_stream("storm", 59);
+    let (c1, m1) = serve_mode(BalancerKind::Probe, true, 1, reqs.clone());
+    let (c3, m3) = serve_mode(BalancerKind::Probe, true, 3, reqs);
+    assert_eq!(c1, c3, "clock diverged between 1 and 3 control threads");
+    assert_eq!(m1, m3, "metrics diverged between 1 and 3 control threads");
 }
